@@ -1,0 +1,126 @@
+//! END-TO-END DRIVER (DESIGN.md §6, EXPERIMENTS.md): the headline run.
+//!
+//! ```text
+//! make artifacts && cargo run --release --example full_sweep
+//! ```
+//!
+//! Exercises every layer of the system on the paper's full workload:
+//!
+//! 1. **Substrate** — `gpusim` simulates all 12 Table VI kernels at all
+//!    49 frequency pairs (ground truth, multi-threaded sweep).
+//! 2. **Micro-benchmarks** — the §IV probes extract the hardware
+//!    parameters; the Eq. (4) line is fitted through the *AOT PJRT fit
+//!    artifact* (L2-lowered least squares), not native code.
+//! 3. **Profiler** — each kernel is profiled once at 700/700 MHz.
+//! 4. **Prediction** — all 12 x 49 predictions go through the batched
+//!    PJRT service executing the Pallas-lowered model artifact
+//!    (L3 -> PJRT -> L1; Python is never invoked).
+//! 5. **Validation** — Fig. 13 panels, Fig. 14 bars, overall MAPE vs
+//!    the paper's 3.5 % headline.
+
+use std::time::{Duration, Instant};
+
+use gpufreq::coordinator::batcher::BatchServer;
+use gpufreq::coordinator::sweep::run_sweep;
+use gpufreq::coordinator::validate::{KernelValidation, SamplePoint, Validation};
+use gpufreq::kernels;
+use gpufreq::microbench;
+use gpufreq::model::HwParams;
+use gpufreq::profiler;
+use gpufreq::report::tables;
+use gpufreq::sim::{Clocks, GpuSpec};
+
+fn main() -> anyhow::Result<()> {
+    let t0 = Instant::now();
+    let spec = GpuSpec::default();
+    let baseline = Clocks::new(700.0, 700.0);
+    let pairs = microbench::standard_grid();
+    let kernels = kernels::all();
+    let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+
+    // --- 2. micro-benchmark extraction, Eq. (4) fit via PJRT ----------
+    println!("[1/5] micro-benchmarking the simulated GTX 980 ...");
+    let (ratios, lats) = microbench::dm_lat_sweep(&spec, &pairs);
+    let bw = microbench::bandwidth_probe(&spec, baseline);
+    let ratios_f32: Vec<f32> = ratios.iter().map(|&r| r as f32).collect();
+    let lats_f32: Vec<f32> = lats.iter().map(|&l| l as f32).collect();
+    let rt = gpufreq::runtime::Runtime::load_default()?;
+    let (slope, intercept, r2) = rt.fit_dm_lat(&ratios_f32, &lats_f32)?;
+    drop(rt); // the batch server owns its own client below
+    println!(
+        "      dm_lat = {slope:.2}*(cf/mf) + {intercept:.2} core cycles (R² = {r2:.4}; paper 222.78/277.32 @ 0.9959)"
+    );
+    println!(
+        "      dm_del = {:.2} mem cycles, bandwidth efficiency {:.1}% (paper Table III: 76-85%)",
+        bw.dm_del_mem_cycles,
+        bw.efficiency * 100.0
+    );
+    let hw = HwParams {
+        dm_lat_a: slope,
+        dm_lat_b: intercept,
+        dm_del: bw.dm_del_mem_cycles,
+        l2_lat: microbench::l2_latency_probe(&spec, baseline),
+        l2_del: spec.l2_ii_core_cycles,
+        sh_lat: microbench::smem_latency_probe(&spec, baseline),
+        inst_cycle: microbench::inst_cycle_probe(&spec, baseline),
+    };
+
+    // --- 1. ground-truth sweep ----------------------------------------
+    println!("[2/5] simulating {} kernels x {} pairs on {workers} workers ...", kernels.len(), pairs.len());
+    let t_sweep = Instant::now();
+    let sweep = run_sweep(&spec, &kernels, &pairs, workers);
+    println!(
+        "      {} simulations in {:.1}s",
+        sweep.points.len(),
+        t_sweep.elapsed().as_secs_f64()
+    );
+
+    // --- 3. one-shot profiles ------------------------------------------
+    println!("[3/5] profiling each kernel once at 700/700 MHz ...");
+    let profiles: Vec<_> = kernels.iter().map(|k| profiler::profile_at(&spec, k, baseline)).collect();
+
+    // --- 4. batched PJRT predictions ------------------------------------
+    println!("[4/5] predicting through the batched PJRT service ...");
+    let (server, _h) = BatchServer::start_default(hw.to_f32(), Duration::from_millis(1))?;
+    println!("      PJRT platform: {}", server.platform());
+    let t_pred = Instant::now();
+    let mut per_kernel = Vec::new();
+    for (k, p) in kernels.iter().zip(&profiles) {
+        let preds = server.predict_grid(&p.counters, &pairs)?;
+        let points = pairs
+            .iter()
+            .zip(preds)
+            .map(|(&(cf, mf), pred)| SamplePoint {
+                kernel: k.name.clone(),
+                core_mhz: cf,
+                mem_mhz: mf,
+                truth_us: sweep.time_us(&k.name, cf, mf).expect("swept"),
+                pred_us: pred.time_us,
+            })
+            .collect();
+        per_kernel.push(KernelValidation { kernel: k.name.clone(), points });
+    }
+    let n_preds: usize = per_kernel.iter().map(|k| k.points.len()).sum();
+    println!(
+        "      {n_preds} predictions in {:.1} ms ({} batches, {:.0}% occupancy)",
+        t_pred.elapsed().as_secs_f64() * 1e3,
+        server.stats().batches(),
+        server.stats().mean_occupancy() * 100.0
+    );
+    let v = Validation { per_kernel };
+
+    // --- 5. report -------------------------------------------------------
+    println!("[5/5] validation vs paper\n");
+    print!("{}", tables::fig13(&v, Some(400.0), None).ascii());
+    print!("{}", tables::fig13(&v, Some(1000.0), None).ascii());
+    print!("{}", tables::fig13(&v, None, Some(400.0)).ascii());
+    print!("{}", tables::fig13(&v, None, Some(1000.0)).ascii());
+    let (chart, summary) = tables::fig14(&v);
+    println!("{chart}");
+    print!("{}", summary.ascii());
+    println!(
+        "\nend-to-end: {:.1}s total. Paper headline: 3.5% MAPE, 0.7-6.9% per kernel, 90% of samples < 10%.",
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}

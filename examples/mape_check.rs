@@ -1,0 +1,70 @@
+//! Fast calibration probe: native-model MAPE per kernel over the 49-pair
+//! grid (the PJRT-backed full_sweep example is the real deliverable).
+
+use gpufreq::baselines::PaperModel;
+use gpufreq::coordinator::validate::validate_kernel_with;
+use gpufreq::kernels;
+use gpufreq::microbench;
+use gpufreq::profiler;
+use gpufreq::sim::{Clocks, GpuSpec};
+
+fn main() {
+    let spec = GpuSpec::default();
+    let baseline = Clocks::new(700.0, 700.0);
+    let ex = microbench::extract(&spec, baseline);
+    println!(
+        "hw: dm_lat = {:.2}*r + {:.2} (R2 {:.4}), dm_del {:.2}, l2 {:.1}, sh {:.1}, inst {:.2}, eff {:.1}%",
+        ex.hw.dm_lat_a,
+        ex.hw.dm_lat_b,
+        ex.dm_lat_fit.r_squared,
+        ex.hw.dm_del,
+        ex.hw.l2_lat,
+        ex.hw.sh_lat,
+        ex.hw.inst_cycle,
+        ex.bandwidth_at_baseline.efficiency * 100.0
+    );
+    let model = PaperModel { hw: ex.hw };
+    let pairs = microbench::standard_grid();
+    let mut total = 0.0;
+    let mut n = 0;
+    for k in kernels::all() {
+        let prof = profiler::profile(&spec, &k);
+        let v = validate_kernel_with(&spec, &k, &prof, &model, &pairs);
+        let worst = v
+            .points
+            .iter()
+            .max_by(|a, b| a.abs_err().partial_cmp(&b.abs_err()).unwrap())
+            .unwrap();
+        println!(
+            "{:8} mape {:5.1}%  max {:5.1}% @({},{})  l2hr {:.2} gld {:5.1} avr_inst {:6.2} aw {:2} regime@base {:?}",
+            k.name,
+            v.mape() * 100.0,
+            v.max_abs_err() * 100.0,
+            worst.core_mhz,
+            worst.mem_mhz,
+            prof.counters.l2_hr,
+            prof.counters.gld_trans,
+            prof.counters.avr_inst,
+            prof.counters.aw,
+            gpufreq::model::predict(&prof.counters, &ex.hw, 700.0, 700.0).regime,
+        );
+        total += v.points.iter().map(|p| p.abs_err()).sum::<f64>();
+        n += v.points.len();
+        if v.mape() > 0.15 {
+            for p in v.points.iter().filter(|p| {
+                (p.core_mhz == 400.0 || p.core_mhz == 700.0 || p.core_mhz == 1000.0)
+                    && (p.mem_mhz == 400.0 || p.mem_mhz == 700.0 || p.mem_mhz == 1000.0)
+            }) {
+                println!(
+                    "    ({:4},{:4}) truth {:9.1}us pred {:9.1}us err {:+6.1}%",
+                    p.core_mhz,
+                    p.mem_mhz,
+                    p.truth_us,
+                    p.pred_us,
+                    p.signed_err() * 100.0
+                );
+            }
+        }
+    }
+    println!("OVERALL MAPE {:.2}%", total / n as f64 * 100.0);
+}

@@ -1,0 +1,65 @@
+//! Quickstart: predict one kernel's execution time across DVFS states.
+//!
+//! ```text
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Walks the paper's full workflow on a single kernel (vectorAdd):
+//! 1. micro-benchmark the hardware once (§IV) — Eq. (4) fit, dm_del, …
+//! 2. profile the kernel once at the 700/700 MHz baseline (§VI-A)
+//! 3. predict T_exec at other frequency pairs with the analytical model
+//! 4. compare three points against the simulator ground truth.
+
+use gpufreq::microbench;
+use gpufreq::model;
+use gpufreq::profiler;
+use gpufreq::report::Table;
+use gpufreq::sim::engine::simulate;
+use gpufreq::sim::{Clocks, GpuSpec};
+use gpufreq::kernels;
+
+fn main() {
+    let spec = GpuSpec::default(); // Table V: GTX 980
+    let baseline = Clocks::new(700.0, 700.0);
+
+    // 1. One-time hardware extraction (runs the §IV probes).
+    let ex = microbench::extract(&spec, baseline);
+    println!(
+        "hardware: dm_lat = {:.2}*(cf/mf) + {:.2} cycles (R²={:.4}), dm_del = {:.2} mem cycles\n",
+        ex.hw.dm_lat_a, ex.hw.dm_lat_b, ex.dm_lat_fit.r_squared, ex.hw.dm_del
+    );
+
+    // 2. One-time kernel profile at the baseline.
+    let kernel = kernels::vector_add();
+    let profile = profiler::profile_at(&spec, &kernel, baseline);
+    println!(
+        "profiled {} once at 700/700: l2_hr={:.2}, gld_trans={:.1}, #Aw={:.0}\n",
+        profile.kernel, profile.counters.l2_hr, profile.counters.gld_trans, profile.counters.aw
+    );
+
+    // 3. Predict across frequency pairs — no further simulation needed.
+    let mut t = Table::new(
+        "vectorAdd predicted vs simulated",
+        &["core MHz", "mem MHz", "predicted µs", "simulated µs", "error"],
+    );
+    for (cf, mf) in [
+        (400.0, 400.0),
+        (400.0, 1000.0),
+        (700.0, 700.0),
+        (1000.0, 400.0),
+        (1000.0, 1000.0),
+    ] {
+        let pred = model::predict(&profile.counters, &ex.hw, cf, mf);
+        // 4. Ground truth for comparison.
+        let truth = simulate(&spec, Clocks::new(cf, mf), &kernel).stats.elapsed_ns / 1e3;
+        t.row(vec![
+            format!("{cf:.0}"),
+            format!("{mf:.0}"),
+            format!("{:.1}", pred.time_us),
+            format!("{truth:.1}"),
+            format!("{:+.1}%", (pred.time_us - truth) / truth * 100.0),
+        ]);
+    }
+    print!("{}", t.ascii());
+    println!("\nNote how memory frequency dominates: vectorAdd is DRAM-bound (paper Fig. 2).");
+}

@@ -1,0 +1,94 @@
+"""AOT lowering: jax -> HLO text artifacts for the Rust PJRT runtime.
+
+HLO *text* (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1
+(the version the published ``xla`` 0.1.6 crate links) rejects
+(``proto.id() <= INT_MAX``). The text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Artifacts (written to --out-dir, default ../artifacts):
+
+* ``perf_model.hlo.txt``  — predict_batch(features (1024, 12), hw (7,))
+* ``fit_dm_lat.hlo.txt``  — fit_dm_lat(ratios (49,), lats (49,))
+* ``manifest.json``       — shapes + feature/param column map for Rust
+
+Usage: ``cd python && python -m compile.aot [--out-dir DIR]``
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import ref
+
+
+def to_hlo_text(lowered) -> str:
+    """Convert a jax lowering to XLA HLO text with return_tuple=True."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_predict() -> str:
+    feat = jax.ShapeDtypeStruct((model.PREDICT_BATCH, ref.N_FEATURES), jnp.float32)
+    hw = jax.ShapeDtypeStruct((ref.N_HW_PARAMS,), jnp.float32)
+    return to_hlo_text(jax.jit(lambda f, h: (model.predict_batch(f, h),)).lower(feat, hw))
+
+
+def lower_fit() -> str:
+    v = jax.ShapeDtypeStruct((model.FIT_SAMPLES,), jnp.float32)
+    return to_hlo_text(jax.jit(lambda x, y: (model.fit_dm_lat(x, y),)).lower(v, v))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None, help="(compat) path for perf_model artifact")
+    args = ap.parse_args()
+
+    out_dir = os.path.dirname(args.out) if args.out else args.out_dir
+    os.makedirs(out_dir, exist_ok=True)
+
+    predict_path = args.out or os.path.join(out_dir, "perf_model.hlo.txt")
+    fit_path = os.path.join(out_dir, "fit_dm_lat.hlo.txt")
+
+    text = lower_predict()
+    with open(predict_path, "w") as f:
+        f.write(text)
+    print(f"wrote {len(text)} chars to {predict_path}")
+
+    text = lower_fit()
+    with open(fit_path, "w") as f:
+        f.write(text)
+    print(f"wrote {len(text)} chars to {fit_path}")
+
+    manifest = {
+        "predict": {
+            "artifact": os.path.basename(predict_path),
+            "batch": model.PREDICT_BATCH,
+            "n_features": ref.N_FEATURES,
+            "n_hw_params": ref.N_HW_PARAMS,
+            "n_outputs": ref.N_OUTPUTS,
+        },
+        "fit_dm_lat": {
+            "artifact": os.path.basename(fit_path),
+            "samples": model.FIT_SAMPLES,
+        },
+    }
+    mpath = os.path.join(out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

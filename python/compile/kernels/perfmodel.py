@@ -1,0 +1,140 @@
+"""L1 Pallas kernel: batched piecewise performance-model evaluator.
+
+One grid step evaluates ``BLOCK`` samples of the (N, 12) feature matrix
+against the shared (1, 7) hardware-parameter row and writes a (BLOCK, 4)
+output tile. Regime selection (the paper's Eqs. 8/10/12/14/16 conditions)
+is branchless: all six regime times are computed vectorized and folded with
+``jnp.where`` masks, so the kernel is a single fused elementwise region —
+no gather/scatter, no divergence.
+
+TPU notes (DESIGN.md §3 "Hardware adaptation"): a (256, 12) f32 feature
+tile + (256, 4) output tile is ~16 KiB, far under VMEM; the arithmetic is
+purely elementwise over the sample axis (VPU work, no MXU). ``interpret=True``
+is mandatory here — the CPU PJRT client cannot execute Mosaic custom calls;
+the lowered HLO is plain elementwise ops that any backend runs.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+BLOCK = 256  # samples per grid step; (BLOCK, 12) f32 tile = 12 KiB
+
+
+def _perfmodel_kernel(features_ref, hw_ref, out_ref):
+    """Pallas kernel body. Shapes: (BLOCK, 12), (1, 7), (BLOCK, 4)."""
+    f = features_ref[...]
+    hw = hw_ref[...]
+
+    l2_hr = f[:, ref.F_L2_HR]
+    gld_trans = f[:, ref.F_GLD_TRANS]
+    avr_inst = f[:, ref.F_AVR_INST]
+    n_blocks = f[:, ref.F_N_BLOCKS]
+    wpb = f[:, ref.F_WPB]
+    aw = f[:, ref.F_AW]
+    n_sm = f[:, ref.F_N_SM]
+    o_itrs = f[:, ref.F_O_ITRS]
+    i_itrs = f[:, ref.F_I_ITRS]
+    uses_smem = f[:, ref.F_USES_SMEM]
+    core_f = f[:, ref.F_CORE_F]
+    mem_f = f[:, ref.F_MEM_F]
+    smem_conflict = f[:, ref.F_SMEM_CONFLICT]
+    gld_body = f[:, ref.F_GLD_BODY]
+    gld_edge = f[:, ref.F_GLD_EDGE]
+    mem_ops = f[:, ref.F_MEM_OPS]
+
+    dm_lat_a = hw[0, ref.H_DM_LAT_A]
+    dm_lat_b = hw[0, ref.H_DM_LAT_B]
+    dm_del = hw[0, ref.H_DM_DEL]
+    l2_lat = hw[0, ref.H_L2_LAT]
+    l2_del = hw[0, ref.H_L2_DEL]
+    sh_lat = hw[0, ref.H_SH_LAT]
+    inst_cycle = hw[0, ref.H_INST_CYCLE]
+
+    ratio = core_f / mem_f
+    dm_lat = dm_lat_a * ratio + dm_lat_b  # Eq. (4)
+    miss = 1.0 - l2_hr
+    agl_lat = l2_lat * l2_hr + dm_lat * miss  # Eq. (5a)
+    agl_del = l2_del * l2_hr + dm_del * ratio * miss  # Eq. (5b)
+    avr_comp = inst_cycle * avr_inst  # Eq. (7b), per transaction
+    comp_iter = avr_comp * gld_trans  # per body iteration ("C")
+    q = agl_del * gld_trans
+
+    lat_iter = agl_lat * jnp.maximum(mem_ops, 1.0)
+    t9 = comp_iter * aw * o_itrs + agl_lat
+    t15 = comp_iter * (aw - 1.0) + (comp_iter + lat_iter) * o_itrs
+    t11 = agl_lat + comp_iter + q * aw * o_itrs
+    t13 = q * aw + agl_lat + comp_iter + (comp_iter + lat_iter) * (o_itrs - 1.0)
+
+    comp_bound = avr_comp >= agl_del
+    hides_lat = comp_iter * (aw - 1.0) >= lat_iter
+    # Direction per Figs. 7/8 — see ref.py docstring on (10b)/(12b).
+    queue_sat = (comp_iter + agl_lat) <= q * (aw - 1.0)
+
+    t_comp = jnp.where(hides_lat, t9, t15)
+    r_comp = jnp.where(hides_lat, ref.REGIME_COMPUTE, ref.REGIME_FEW_LONG)
+    t_mem = jnp.where(queue_sat, t11, t13)
+    r_mem = jnp.where(queue_sat, ref.REGIME_MEMORY, ref.REGIME_FEW_SHORT)
+    t_nosmem = jnp.where(comp_bound, t_comp, t_mem)
+    r_nosmem = jnp.where(comp_bound, r_comp, r_mem)
+
+    t17 = comp_iter + agl_lat + q * aw * o_itrs
+    # Refined Eqs. (18)-(21) — see ref.py docstring.
+    q_body = agl_del * gld_body
+    alu = comp_iter * aw
+    port = i_itrs * smem_conflict * aw
+    mem_iter = q_body * aw
+    chain = sh_lat * i_itrs
+    body = (jnp.maximum(jnp.maximum(alu, port), mem_iter) + chain) * o_itrs
+    edge = agl_del * gld_edge * aw
+    t21 = jnp.maximum(body, edge) + agl_lat + sh_lat
+
+    smem_light = jnp.logical_and(
+        avr_comp <= agl_del,
+        (avr_comp + sh_lat) < q_body * (aw - wpb),
+    )
+    t_smem = jnp.where(smem_light, t17, t21)
+    r_smem = jnp.where(smem_light, ref.REGIME_SMEM_LIGHT, ref.REGIME_SMEM_INTENSE)
+
+    has_smem = uses_smem > 0.5
+    t_active = jnp.where(has_smem, t_smem, t_nosmem)
+    regime = jnp.where(has_smem, r_smem, r_nosmem)
+
+    rounds = jnp.maximum(wpb * n_blocks / (aw * n_sm), 1.0)
+    t_exec = t_active * rounds
+    time_us = t_exec / core_f
+
+    out_ref[...] = jnp.stack([t_active, t_exec, time_us, regime], axis=1)
+
+
+def predict(features: jnp.ndarray, hw: jnp.ndarray) -> jnp.ndarray:
+    """Batched model evaluation through the Pallas kernel.
+
+    Args:
+      features: (N, 12) f32 with N a multiple of ``BLOCK`` (the L2 wrapper
+        in ``model.py`` pads arbitrary N).
+      hw: (7,) f32 hardware parameters.
+
+    Returns:
+      (N, 4) f32 per ``ref.O_*``.
+    """
+    n = features.shape[0]
+    if n % BLOCK != 0:
+        raise ValueError(f"N={n} must be a multiple of BLOCK={BLOCK}")
+    grid = (n // BLOCK,)
+    hw2 = hw.reshape(1, ref.N_HW_PARAMS).astype(jnp.float32)
+    return pl.pallas_call(
+        _perfmodel_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK, ref.N_FEATURES), lambda i: (i, 0)),
+            pl.BlockSpec((1, ref.N_HW_PARAMS), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK, ref.N_OUTPUTS), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, ref.N_OUTPUTS), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(features.astype(jnp.float32), hw2)

@@ -1,0 +1,221 @@
+"""Pure-jnp oracle for the batched frequency-scaling performance model.
+
+This file is the single source of truth for the model math on the Python
+side; the Pallas kernel in ``perfmodel.py`` must match it bit-for-bit (both
+are f32), and the scalar Rust implementation in ``rust/src/model`` mirrors
+the same equations (cross-checked by an integration test through the AOT
+artifact).
+
+Equations implemented (numbers follow the paper):
+
+* Eq. (4)   dm_lat(cf, mf) = dm_lat_a * cf/mf + dm_lat_b
+* Eq. (5a)  agl_lat = l2_lat * l2_hr + dm_lat * (1 - l2_hr)
+* Eq. (5b)  agl_del = l2_del * l2_hr + dm_del * cf/mf * (1 - l2_hr)
+* Eq. (7)   avr_comp = inst_cycle * avr_inst
+* Eqs. (8)-(15)  the four no-shared-memory regimes
+* Eqs. (16)-(21) the two shared-memory regimes
+* Eq. (6)   T_exec = T_active * round count
+
+Deviations from the paper as printed (documented in DESIGN.md §2):
+
+* Eq. (5a) composes Eq. (4) directly instead of multiplying a baseline
+  dm_lat by cf/mf a second time (the paper's notation double-counts the
+  ratio if read literally).
+* The queue-drain terms use ``agl_del * gld_trans`` (per-warp transactions
+  fold into the queue time); the paper's pipeline figures draw
+  gld_trans = 1 per iteration, where the two readings coincide.
+* Eq. (11) as printed multiplies by #Wpb where every analogous equation
+  (3), (17), (18) uses the number of queued warps; we use #Aw.
+* Conditions (10b)/(12b) as printed select the *opposite* regimes from
+  the pipeline figures they describe: the queue stays saturated (Fig. 7,
+  Eq. 11) when a warp's turnaround time `avr_comp + agl_lat` is SHORTER
+  than the queue-drain time of the other warps `agl_del*gld*(#Aw-1)` —
+  with many active warps the drain time is huge and Eq. 11 must apply,
+  yet the printed `>=` sends that case to Eq. 13. We use the direction
+  consistent with Figs. 7/8 (validated against the simulator).
+* The paper's `o_itrs` counts (compute, one-transaction) periods, ours
+  counts source-level loop iterations; the per-iteration compute period
+  is therefore `C = avr_comp * gld_trans` in the time formulas (they
+  coincide at gld_trans = 1, the case the figures draw).
+* Eq. (19) (smem-intensive phase 2) models a single block pipelining
+  through the SM; with several resident blocks the ALU, the smem ports
+  and the MC serialize across blocks, so phase 2 takes the binding
+  resource: max(ALU serialization, smem-port serialization, body queue
+  drain) plus the barrier-exposed latency chain. Boundary
+  (prologue/epilogue) traffic drains while other blocks compute, so the
+  total is max(body, edge) rather than a sum. Reduces to the paper's
+  form when one block dominates.
+* In the latency-exposed regimes (Eqs. 13/15) each of the `mem_ops`
+  dependent memory instructions in an iteration pays a full `agl_lat`;
+  transactions inside one instruction pipeline through the LSU.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Feature column indices for the (N, 12) feature matrix.
+F_L2_HR = 0  # L2 hit rate in [0, 1]
+F_GLD_TRANS = 1  # global transactions per warp per outer iteration
+F_AVR_INST = 2  # compute instructions per global transaction
+F_N_BLOCKS = 3  # #B
+F_WPB = 4  # #Wpb, warps per block
+F_AW = 5  # #Aw, active warps per SM
+F_N_SM = 6  # #SM (active)
+F_O_ITRS = 7  # outer iterations
+F_I_ITRS = 8  # inner (shared-memory) iterations
+F_USES_SMEM = 9  # 0.0 / 1.0 flag
+F_CORE_F = 10  # MHz
+F_MEM_F = 11  # MHz
+F_SMEM_CONFLICT = 12  # average bank-conflict degree (1 = conflict-free)
+F_GLD_BODY = 13  # global txns per warp per iter inside the body loop
+F_GLD_EDGE = 14  # global txns per warp in prologue + epilogue
+F_MEM_OPS = 15  # dependent global-memory instructions per body iter
+N_FEATURES = 16
+
+# Hardware-parameter indices for the (7,) vector.
+H_DM_LAT_A = 0  # Eq. (4) slope, core cycles per unit cf/mf
+H_DM_LAT_B = 1  # Eq. (4) intercept, core cycles
+H_DM_DEL = 2  # DRAM service per transaction, memory cycles
+H_L2_LAT = 3  # L2 hit latency, core cycles
+H_L2_DEL = 4  # L2 service per transaction, core cycles
+H_SH_LAT = 5  # shared-memory latency, core cycles
+H_INST_CYCLE = 6  # cycles per compute instruction
+N_HW_PARAMS = 7
+
+# Output column indices for the (N, 4) result.
+O_T_ACTIVE = 0  # cycles for one round of active warps
+O_T_EXEC = 1  # total kernel cycles (core domain)
+O_TIME_US = 2  # wall-clock microseconds
+O_REGIME = 3  # regime id, see REGIME_*
+N_OUTPUTS = 4
+
+REGIME_COMPUTE = 0.0  # Eq. (9)
+REGIME_FEW_LONG = 1.0  # Eq. (15)
+REGIME_MEMORY = 2.0  # Eq. (11)
+REGIME_FEW_SHORT = 3.0  # Eq. (13)
+REGIME_SMEM_LIGHT = 4.0  # Eq. (17)
+REGIME_SMEM_INTENSE = 5.0  # Eq. (21)
+
+
+def predict_ref(features: jnp.ndarray, hw: jnp.ndarray) -> jnp.ndarray:
+    """Evaluate the model for a batch of samples.
+
+    Args:
+      features: (N, 12) f32, columns per ``F_*``.
+      hw: (7,) f32, entries per ``H_*``.
+
+    Returns:
+      (N, 4) f32, columns per ``O_*``.
+    """
+    f = features.astype(jnp.float32)
+    l2_hr = f[:, F_L2_HR]
+    gld_trans = f[:, F_GLD_TRANS]
+    avr_inst = f[:, F_AVR_INST]
+    n_blocks = f[:, F_N_BLOCKS]
+    wpb = f[:, F_WPB]
+    aw = f[:, F_AW]
+    n_sm = f[:, F_N_SM]
+    o_itrs = f[:, F_O_ITRS]
+    i_itrs = f[:, F_I_ITRS]
+    uses_smem = f[:, F_USES_SMEM]
+    core_f = f[:, F_CORE_F]
+    mem_f = f[:, F_MEM_F]
+    smem_conflict = f[:, F_SMEM_CONFLICT]
+    gld_body = f[:, F_GLD_BODY]
+    gld_edge = f[:, F_GLD_EDGE]
+    mem_ops = f[:, F_MEM_OPS]
+
+    hw = hw.astype(jnp.float32)
+    dm_lat_a = hw[H_DM_LAT_A]
+    dm_lat_b = hw[H_DM_LAT_B]
+    dm_del = hw[H_DM_DEL]
+    l2_lat = hw[H_L2_LAT]
+    l2_del = hw[H_L2_DEL]
+    sh_lat = hw[H_SH_LAT]
+    inst_cycle = hw[H_INST_CYCLE]
+
+    ratio = core_f / mem_f
+    dm_lat = dm_lat_a * ratio + dm_lat_b  # Eq. (4)
+    miss = 1.0 - l2_hr
+    agl_lat = l2_lat * l2_hr + dm_lat * miss  # Eq. (5a)
+    agl_del = l2_del * l2_hr + dm_del * ratio * miss  # Eq. (5b)
+    avr_comp = inst_cycle * avr_inst  # Eq. (7b), per transaction
+    comp_iter = avr_comp * gld_trans  # per body iteration ("C")
+
+    # Queue time contributed by one warp in one outer iteration.
+    q = agl_del * gld_trans
+
+    # --- no-shared-memory regimes ------------------------------------
+    # Per-iteration exposed latency: each dependent memory instruction
+    # pays a full agl_lat when nothing hides it (see module docstring).
+    lat_iter = agl_lat * jnp.maximum(mem_ops, 1.0)
+    t9 = comp_iter * aw * o_itrs + agl_lat
+    t15 = comp_iter * (aw - 1.0) + (comp_iter + lat_iter) * o_itrs
+    t11 = agl_lat + comp_iter + q * aw * o_itrs
+    t13 = q * aw + agl_lat + comp_iter + (comp_iter + lat_iter) * (o_itrs - 1.0)
+
+    comp_bound = avr_comp >= agl_del  # Eq. (8a) / (14a)
+    hides_lat = comp_iter * (aw - 1.0) >= lat_iter  # Eq. (8b) vs (14b)
+    # Queue stays saturated when warp turnaround < other-warp drain time
+    # (direction per Figs. 7/8; the printed (10b)/(12b) are swapped —
+    # see module docstring).
+    queue_sat = (comp_iter + agl_lat) <= q * (aw - 1.0)
+
+    t_comp = jnp.where(hides_lat, t9, t15)
+    r_comp = jnp.where(hides_lat, REGIME_COMPUTE, REGIME_FEW_LONG)
+    t_mem = jnp.where(queue_sat, t11, t13)
+    r_mem = jnp.where(queue_sat, REGIME_MEMORY, REGIME_FEW_SHORT)
+    t_nosmem = jnp.where(comp_bound, t_comp, t_mem)
+    r_nosmem = jnp.where(comp_bound, r_comp, r_mem)
+
+    # --- shared-memory regimes ---------------------------------------
+    t17 = comp_iter + agl_lat + q * aw * o_itrs  # Eq. (17)
+    # Refined Eqs. (18)-(21): phase 2 takes the binding resource and the
+    # body overlaps the boundary drain (see module docstring).
+    q_body = agl_del * gld_body
+    alu = comp_iter * aw
+    port = i_itrs * smem_conflict * aw
+    mem_iter = q_body * aw  # Eq. (20): body queue drain
+    chain = sh_lat * i_itrs  # barrier-exposed latency
+    body = (jnp.maximum(jnp.maximum(alu, port), mem_iter) + chain) * o_itrs
+    edge = agl_del * gld_edge * aw  # Eq. (18): boundary drain
+    t21 = jnp.maximum(body, edge) + agl_lat + sh_lat  # Eq. (21)
+
+    smem_light = jnp.logical_and(
+        avr_comp <= agl_del,  # Eq. (16a)
+        (avr_comp + sh_lat) < q_body * (aw - wpb),  # Eq. (16b)
+    )
+    t_smem = jnp.where(smem_light, t17, t21)
+    r_smem = jnp.where(smem_light, REGIME_SMEM_LIGHT, REGIME_SMEM_INTENSE)
+
+    has_smem = uses_smem > 0.5
+    t_active = jnp.where(has_smem, t_smem, t_nosmem)
+    regime = jnp.where(has_smem, r_smem, r_nosmem)
+
+    # --- Eq. (6) -------------------------------------------------------
+    rounds = jnp.maximum(wpb * n_blocks / (aw * n_sm), 1.0)
+    t_exec = t_active * rounds
+    time_us = t_exec / core_f  # cycles at core_f MHz -> microseconds
+
+    return jnp.stack([t_active, t_exec, time_us, regime], axis=1)
+
+
+def fit_dm_lat_ref(ratios: jnp.ndarray, lats: jnp.ndarray) -> jnp.ndarray:
+    """Least-squares fit of Eq. (4): lat = a * ratio + b.
+
+    Returns (3,) f32: [a, b, r_squared].
+    """
+    x = ratios.astype(jnp.float32)
+    y = lats.astype(jnp.float32)
+    xm = jnp.mean(x)
+    ym = jnp.mean(y)
+    sxx = jnp.sum((x - xm) ** 2)
+    sxy = jnp.sum((x - xm) * (y - ym))
+    a = sxy / sxx
+    b = ym - a * xm
+    resid = y - (a * x + b)
+    ss_res = jnp.sum(resid**2)
+    ss_tot = jnp.sum((y - ym) ** 2)
+    r2 = 1.0 - ss_res / ss_tot
+    return jnp.stack([a, b, r2])

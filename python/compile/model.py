@@ -1,0 +1,42 @@
+"""L2: the JAX prediction pipeline around the L1 Pallas kernel.
+
+Two exported entry points (both AOT-lowered by ``aot.py``):
+
+* ``predict_batch(features, hw)`` — pad-to-block, run the Pallas evaluator,
+  slice back. This is the artifact the Rust coordinator executes on its
+  hot path (``artifacts/perf_model.hlo.txt``).
+* ``fit_dm_lat(ratios, lats)`` — least-squares fit of Eq. (4) from
+  micro-benchmark samples (``artifacts/fit_dm_lat.hlo.txt``), used by the
+  Rust microbench pipeline to derive (dm_lat_a, dm_lat_b, R²).
+
+Python never runs at request time; these functions exist to be lowered.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels import perfmodel, ref
+
+# The AOT artifact is specialized to a fixed batch shape; the Rust batcher
+# packs requests into batches of exactly PREDICT_BATCH rows (padding with
+# benign rows — mem_f and core_f of padding rows are 1.0 to avoid div-by-0).
+PREDICT_BATCH = 1024
+FIT_SAMPLES = 49  # one sample per frequency pair in the standard sweep
+
+
+def predict_batch(features: jnp.ndarray, hw: jnp.ndarray) -> jnp.ndarray:
+    """(PREDICT_BATCH, 12) f32, (7,) f32 -> (PREDICT_BATCH, 4) f32."""
+    n = features.shape[0]
+    pad = (-n) % perfmodel.BLOCK
+    if pad:
+        # Benign padding: ratio 1, no div-by-zero, regime irrelevant.
+        filler = jnp.ones((pad, ref.N_FEATURES), dtype=jnp.float32)
+        features = jnp.concatenate([features.astype(jnp.float32), filler])
+    out = perfmodel.predict(features, hw)
+    return out[:n]
+
+
+def fit_dm_lat(ratios: jnp.ndarray, lats: jnp.ndarray) -> jnp.ndarray:
+    """(M,) f32, (M,) f32 -> (3,) f32 = [slope, intercept, R^2]."""
+    return ref.fit_dm_lat_ref(ratios, lats)

@@ -1,0 +1,243 @@
+"""Pallas kernel vs pure-jnp oracle — the core correctness signal (L1).
+
+Hypothesis sweeps the feature space (hit rates, occupancy, iteration
+counts, frequency pairs, smem flags) and asserts the Pallas evaluator
+matches ``ref.predict_ref`` to f32 tolerance, plus directed tests that pin
+each of the six regimes and the paper's worked numbers (Eq. 4 endpoints).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import perfmodel, ref
+
+HW = np.array([222.78, 277.32, 9.0, 222.0, 1.0, 28.0, 2.0], dtype=np.float32)
+
+
+def make_features(
+    l2_hr=0.2,
+    gld_trans=4.0,
+    avr_inst=20.0,
+    n_blocks=128.0,
+    wpb=8.0,
+    aw=32.0,
+    n_sm=16.0,
+    o_itrs=16.0,
+    i_itrs=0.0,
+    uses_smem=0.0,
+    core_f=700.0,
+    mem_f=700.0,
+    smem_conflict=1.0,
+    gld_body=None,
+    gld_edge=0.0,
+    mem_ops=1.0,
+):
+    row = np.zeros(ref.N_FEATURES, dtype=np.float32)
+    row[ref.F_L2_HR] = l2_hr
+    row[ref.F_GLD_TRANS] = gld_trans
+    row[ref.F_AVR_INST] = avr_inst
+    row[ref.F_N_BLOCKS] = n_blocks
+    row[ref.F_WPB] = wpb
+    row[ref.F_AW] = aw
+    row[ref.F_N_SM] = n_sm
+    row[ref.F_O_ITRS] = o_itrs
+    row[ref.F_I_ITRS] = i_itrs
+    row[ref.F_USES_SMEM] = uses_smem
+    row[ref.F_CORE_F] = core_f
+    row[ref.F_MEM_F] = mem_f
+    row[ref.F_SMEM_CONFLICT] = smem_conflict
+    row[ref.F_GLD_BODY] = gld_trans if gld_body is None else gld_body
+    row[ref.F_GLD_EDGE] = gld_edge
+    row[ref.F_MEM_OPS] = mem_ops
+    return row
+
+
+def run_both(rows):
+    feats = np.asarray(rows, dtype=np.float32)
+    n = feats.shape[0]
+    pad = (-n) % perfmodel.BLOCK
+    if pad:
+        feats = np.concatenate([feats, np.tile(make_features(), (pad, 1))])
+    got = np.asarray(perfmodel.predict(jnp.asarray(feats), jnp.asarray(HW)))
+    want = np.asarray(ref.predict_ref(jnp.asarray(feats), jnp.asarray(HW)))
+    return got[:n], want[:n]
+
+
+# ---------------------------------------------------------------- directed
+
+
+def test_single_block_matches_ref():
+    rng = np.random.default_rng(0)
+    rows = [
+        make_features(
+            l2_hr=rng.uniform(0, 1),
+            gld_trans=rng.uniform(1, 32),
+            avr_inst=rng.uniform(1, 200),
+            aw=rng.uniform(2, 64),
+            o_itrs=rng.uniform(1, 64),
+            core_f=rng.uniform(400, 1000),
+            mem_f=rng.uniform(400, 1000),
+        )
+        for _ in range(perfmodel.BLOCK)
+    ]
+    got, want = run_both(rows)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-4)
+
+
+def test_multi_block_grid():
+    rows = [make_features(core_f=400 + 100 * (i % 7), mem_f=400 + 100 * (i // 7 % 7)) for i in range(3 * perfmodel.BLOCK)]
+    got, want = run_both(rows)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-4)
+
+
+def test_non_multiple_batch_rejected():
+    feats = jnp.zeros((100, ref.N_FEATURES), dtype=jnp.float32)
+    with pytest.raises(ValueError):
+        perfmodel.predict(feats, jnp.asarray(HW))
+
+
+@pytest.mark.parametrize(
+    "kw,regime",
+    [
+        # many warps, long compute, low occupancy of memory system
+        (dict(avr_inst=500.0, aw=32.0, l2_hr=0.9), ref.REGIME_COMPUTE),
+        # long compute but so few warps that latency is exposed
+        (
+            dict(avr_inst=100.0, gld_trans=1.0, aw=2.0, l2_hr=0.0, mem_ops=2.0),
+            ref.REGIME_FEW_LONG,
+        ),
+        # short compute, many warps -> queue stays saturated (Fig. 7)
+        (dict(avr_inst=1.0, gld_trans=16.0, aw=64.0, l2_hr=0.0), ref.REGIME_MEMORY),
+        # short compute, few warps -> queue drains between rounds (Fig. 8)
+        (dict(avr_inst=1.0, gld_trans=16.0, aw=4.0, l2_hr=0.0), ref.REGIME_FEW_SHORT),
+        # smem kernel with tiny smem traffic hidden behind queue
+        (
+            dict(uses_smem=1.0, avr_inst=1.0, gld_trans=8.0, aw=64.0, wpb=8.0, l2_hr=0.0),
+            ref.REGIME_SMEM_LIGHT,
+        ),
+        # smem-intensive (matrixMul-shared shape)
+        (
+            dict(uses_smem=1.0, avr_inst=40.0, i_itrs=32.0, aw=16.0, wpb=8.0),
+            ref.REGIME_SMEM_INTENSE,
+        ),
+    ],
+)
+def test_regime_selection(kw, regime):
+    got, want = run_both([make_features(**kw)])
+    assert got[0, ref.O_REGIME] == regime, f"kernel regime {got[0, ref.O_REGIME]} != {regime}"
+    assert want[0, ref.O_REGIME] == regime, f"ref regime {want[0, ref.O_REGIME]} != {regime}"
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+def test_eq4_endpoints_match_paper():
+    """At cf/mf = 1 the modeled dm_lat is ~500.1 cycles (paper Table II row 1);
+    at cf/mf = 2.5 it is ~834.3 cycles."""
+    # Pure-memory row: l2_hr=0, so agl_lat == dm_lat; few-warps-long-compute
+    # regime exposes agl_lat directly is messy — check through ref math.
+    for cf, mf, expect in [(400.0, 400.0, 500.10), (1000.0, 400.0, 834.27)]:
+        feats = jnp.asarray([make_features(core_f=cf, mem_f=mf)])
+        # dm_lat = a*ratio + b
+        a, b = HW[ref.H_DM_LAT_A], HW[ref.H_DM_LAT_B]
+        assert abs((a * cf / mf + b) - expect) < 0.1
+        del feats
+
+
+def test_time_us_consistency():
+    """time_us must equal t_exec / core_f for every sample."""
+    rows = [make_features(core_f=cf, mem_f=mf) for cf in (400.0, 700.0, 1000.0) for mf in (400.0, 700.0, 1000.0)]
+    got, _ = run_both(rows)
+    np.testing.assert_allclose(
+        got[:, ref.O_TIME_US],
+        got[:, ref.O_T_EXEC] / np.array([r[ref.F_CORE_F] for r in rows]),
+        rtol=1e-6,
+    )
+
+
+def test_rounds_floor_at_one():
+    """A kernel with fewer blocks than SMs still runs one full round."""
+    got, want = run_both([make_features(n_blocks=1.0, wpb=2.0, aw=32.0, n_sm=16.0)])
+    np.testing.assert_allclose(got[0, ref.O_T_ACTIVE], got[0, ref.O_T_EXEC], rtol=1e-6)
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+def test_memory_bound_speedup_with_mem_freq():
+    """A DRAM-bound kernel (l2_hr=0, tiny compute) must speed up ~linearly
+    with memory frequency at fixed core frequency (paper Fig. 2a/b)."""
+    rows = [
+        make_features(l2_hr=0.0, avr_inst=1.0, gld_trans=16.0, aw=64.0, o_itrs=64.0, core_f=1000.0, mem_f=mf)
+        for mf in (400.0, 1000.0)
+    ]
+    got, _ = run_both(rows)
+    assert got[0, ref.O_REGIME] == ref.REGIME_MEMORY
+    speedup = got[0, ref.O_TIME_US] / got[1, ref.O_TIME_US]
+    assert 2.0 < speedup < 2.6, f"memory-bound speedup {speedup}"
+
+
+def test_compute_bound_insensitive_to_mem_freq():
+    """A compute-bound kernel's time must not change with memory frequency
+    (paper Fig. 2: MMG/MMS flat vs mem_f at low core_f)."""
+    rows = [
+        make_features(l2_hr=0.9, avr_inst=500.0, aw=32.0, o_itrs=32.0, core_f=400.0, mem_f=mf)
+        for mf in (400.0, 1000.0)
+    ]
+    got, _ = run_both(rows)
+    rel = abs(got[0, ref.O_TIME_US] - got[1, ref.O_TIME_US]) / got[0, ref.O_TIME_US]
+    assert rel < 0.02, f"compute-bound drift {rel}"
+
+
+# ------------------------------------------------------------- hypothesis
+
+feature_strategy = st.fixed_dictionaries(
+    dict(
+        l2_hr=st.floats(0.0, 1.0, width=32, allow_nan=False),
+        gld_trans=st.floats(1.0, 64.0, width=32),
+        avr_inst=st.floats(0.5, 1000.0, width=32),
+        n_blocks=st.floats(1.0, 4096.0, width=32),
+        wpb=st.floats(1.0, 32.0, width=32),
+        aw=st.floats(2.0, 64.0, width=32),
+        n_sm=st.floats(1.0, 16.0, width=32),
+        o_itrs=st.floats(1.0, 512.0, width=32),
+        i_itrs=st.floats(0.0, 64.0, width=32),
+        uses_smem=st.sampled_from([0.0, 1.0]),
+        core_f=st.floats(400.0, 1000.0, width=32),
+        mem_f=st.floats(400.0, 1000.0, width=32),
+        smem_conflict=st.floats(1.0, 8.0, width=32),
+        gld_body=st.floats(0.0, 64.0, width=32),
+        gld_edge=st.floats(0.0, 32.0, width=32),
+        mem_ops=st.floats(0.0, 8.0, width=32),
+    )
+)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(feature_strategy, min_size=1, max_size=16))
+def test_hypothesis_kernel_matches_ref(rows):
+    got, want = run_both([make_features(**r) for r in rows])
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(feature_strategy)
+def test_hypothesis_outputs_positive_finite(row):
+    got, _ = run_both([make_features(**row)])
+    assert np.all(np.isfinite(got))
+    assert got[0, ref.O_T_ACTIVE] > 0
+    assert got[0, ref.O_T_EXEC] >= got[0, ref.O_T_ACTIVE] * 0.999
+    assert got[0, ref.O_TIME_US] > 0
+
+
+@settings(max_examples=20, deadline=None)
+@given(feature_strategy)
+def test_hypothesis_mem_freq_monotone_within_regime(row):
+    """Raising memory frequency (all else fixed) never slows a kernel, as
+    long as it does not cross a regime boundary (the piecewise model is
+    only monotone within a regime; boundary jumps are analysed in
+    DESIGN.md)."""
+    row = dict(row)
+    lo = dict(row, mem_f=400.0)
+    hi = dict(row, mem_f=1000.0)
+    got, _ = run_both([make_features(**lo), make_features(**hi)])
+    if got[0, ref.O_REGIME] == got[1, ref.O_REGIME]:
+        assert got[1, ref.O_TIME_US] <= got[0, ref.O_TIME_US] * 1.0001

@@ -1,0 +1,57 @@
+"""L2 pipeline tests: padding wrapper, dm_lat fitting, AOT lowering."""
+
+import numpy as np
+import jax.numpy as jnp
+
+from compile import aot, model
+from compile.kernels import ref
+from .test_kernel import HW, make_features
+
+
+def test_predict_batch_pads_and_slices():
+    rows = np.stack([make_features(core_f=500.0 + i, mem_f=700.0) for i in range(10)])
+    out = np.asarray(model.predict_batch(jnp.asarray(rows), jnp.asarray(HW)))
+    want = np.asarray(ref.predict_ref(jnp.asarray(rows), jnp.asarray(HW)))
+    assert out.shape == (10, ref.N_OUTPUTS)
+    np.testing.assert_allclose(out, want, rtol=1e-6)
+
+
+def test_predict_batch_full_batch():
+    rows = np.tile(make_features(), (model.PREDICT_BATCH, 1))
+    out = np.asarray(model.predict_batch(jnp.asarray(rows), jnp.asarray(HW)))
+    assert out.shape == (model.PREDICT_BATCH, ref.N_OUTPUTS)
+    # identical rows -> identical predictions
+    assert np.allclose(out, out[0])
+
+
+def test_fit_dm_lat_recovers_paper_line():
+    """Feed exact Eq. (4) samples; the fit must recover (222.78, 277.32, 1)."""
+    rng = np.random.default_rng(1)
+    cf = rng.uniform(400, 1000, size=49).astype(np.float32)
+    mf = rng.uniform(400, 1000, size=49).astype(np.float32)
+    ratios = cf / mf
+    lats = 222.78 * ratios + 277.32
+    a, b, r2 = np.asarray(model.fit_dm_lat(jnp.asarray(ratios), jnp.asarray(lats)))
+    assert abs(a - 222.78) < 0.05
+    assert abs(b - 277.32) < 0.05
+    assert r2 > 0.9999
+
+
+def test_fit_dm_lat_noisy_r2():
+    """With ~1% noise R^2 should be high but < 1 (paper reports 0.9959)."""
+    rng = np.random.default_rng(2)
+    ratios = (rng.uniform(400, 1000, 49) / rng.uniform(400, 1000, 49)).astype(np.float32)
+    lats = 222.78 * ratios + 277.32 + rng.normal(0, 5.0, 49).astype(np.float32)
+    a, b, r2 = np.asarray(model.fit_dm_lat(jnp.asarray(ratios), jnp.asarray(lats)))
+    assert 200 < a < 245
+    assert 255 < b < 300
+    assert 0.95 < r2 < 1.0
+
+
+def test_aot_lowering_produces_hlo_text():
+    text = aot.lower_predict()
+    assert "HloModule" in text
+    assert f"f32[{model.PREDICT_BATCH},{ref.N_FEATURES}]" in text
+    text = aot.lower_fit()
+    assert "HloModule" in text
+    assert f"f32[{model.FIT_SAMPLES}]" in text

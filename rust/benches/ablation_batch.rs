@@ -1,0 +1,77 @@
+//! Ablation A2 (DESIGN.md §5): throughput of the hot prediction path —
+//! batched PJRT artifact vs the scalar native model, plus batch-size
+//! scaling of the PJRT path.
+
+use std::time::Duration;
+
+use gpufreq::coordinator::batcher::BatchServer;
+use gpufreq::model::{self, HwParams, KernelCounters};
+use gpufreq::runtime::Runtime;
+use gpufreq::util::bench;
+
+fn counters(i: usize) -> KernelCounters {
+    KernelCounters {
+        l2_hr: (i % 10) as f64 / 10.0,
+        gld_trans: 4.0 + (i % 12) as f64,
+        avr_inst: 0.5 + (i % 50) as f64,
+        n_blocks: 256.0,
+        wpb: 8.0,
+        aw: 64.0,
+        n_sm: 16.0,
+        o_itrs: 8.0,
+        i_itrs: (i % 16) as f64,
+        uses_smem: i % 3 == 0,
+        smem_conflict: 1.0 + (i % 4) as f64,
+        gld_body: 4.0 + (i % 12) as f64,
+        gld_edge: (i % 8) as f64,
+        mem_ops: 1.0 + (i % 4) as f64,
+            l1_hr: 0.0,
+    }
+}
+
+fn main() {
+    let hw = HwParams::paper_defaults();
+    let n = 4096usize;
+    let cases: Vec<(KernelCounters, f64, f64)> = (0..n)
+        .map(|i| (counters(i), 400.0 + (i % 7) as f64 * 100.0, 400.0 + (i / 7 % 7) as f64 * 100.0))
+        .collect();
+
+    bench::section("Ablation: prediction-path throughput (4096 rows)");
+
+    let native = bench::bench("native scalar model (4096 rows)", 2, 10, || {
+        for (c, cf, mf) in &cases {
+            std::hint::black_box(model::predict(c, &hw, *cf, *mf));
+        }
+    });
+
+    let rt = Runtime::load_default().expect("artifacts present (make artifacts)");
+    let rows: Vec<_> = cases.iter().map(|(c, cf, mf)| c.to_features(*cf, *mf)).collect();
+    let hw32 = hw.to_f32();
+    let pjrt = bench::bench("PJRT batched artifact (4096 rows, batch 1024)", 2, 10, || {
+        std::hint::black_box(rt.predict(&rows, &hw32).unwrap());
+    });
+
+    for chunk in [1usize, 64, 256, 1024] {
+        let sub = &rows[..chunk];
+        bench::bench(&format!("PJRT one batch, {chunk} live rows"), 2, 10, || {
+            std::hint::black_box(rt.predict(sub, &hw32).unwrap());
+        });
+    }
+
+    // The batching *service* (channel + worker) on the same workload.
+    let (server, _h) = BatchServer::start_default(hw32, Duration::from_millis(1)).unwrap();
+    let c0 = counters(1);
+    let grid: Vec<(f64, f64)> = (0..49)
+        .map(|i| (400.0 + (i % 7) as f64 * 100.0, 400.0 + (i / 7) as f64 * 100.0))
+        .collect();
+    bench::bench("BatchServer.predict_grid (49 rows incl. queueing)", 2, 10, || {
+        std::hint::black_box(server.predict_grid(&c0, &grid).unwrap());
+    });
+
+    println!(
+        "\nnative {:.1}M rows/s vs PJRT {:.1}M rows/s (rows include padding efficiency; the\n\
+         PJRT path exists for parity with the AOT stack — see EXPERIMENTS.md §Perf).",
+        n as f64 / native.mean_ns * 1e3,
+        n as f64 / pjrt.mean_ns * 1e3
+    );
+}

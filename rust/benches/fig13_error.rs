@@ -1,0 +1,35 @@
+//! Bench E6 (paper Fig. 13): signed prediction error while sweeping one
+//! frequency domain with the other fixed — all four panels, all twelve
+//! kernels, full ground-truth simulation behind each cell.
+
+use gpufreq::baselines::PaperModel;
+use gpufreq::coordinator::validate::validate_with;
+use gpufreq::kernels;
+use gpufreq::microbench;
+use gpufreq::report::tables;
+use gpufreq::sim::{Clocks, GpuSpec};
+use gpufreq::util::bench;
+
+fn main() {
+    let spec = GpuSpec::default();
+    let ex = microbench::extract(&spec, Clocks::new(700.0, 700.0));
+    let model = PaperModel { hw: ex.hw };
+    let pairs = microbench::standard_grid();
+    let ks = kernels::all();
+
+    bench::section("Fig. 13: time prediction error under different frequency settings");
+    let v = validate_with(&spec, &ks, &model, &pairs);
+    print!("{}", tables::fig13(&v, Some(400.0), None).ascii());
+    print!("{}", tables::fig13(&v, Some(1000.0), None).ascii());
+    print!("{}", tables::fig13(&v, None, Some(400.0)).ascii());
+    print!("{}", tables::fig13(&v, None, Some(1000.0)).ascii());
+    println!(
+        "paper shape: every error < 16%, 90% under 10%; ours: max {:.1}%, {:.0}% under 10%.\n",
+        v.max_abs_err() * 100.0,
+        v.fraction_below(0.10) * 100.0
+    );
+
+    bench::bench("full validation (12 kernels x 49 pairs, sim+predict)", 0, 1, || {
+        std::hint::black_box(validate_with(&spec, &ks, &model, &pairs));
+    });
+}

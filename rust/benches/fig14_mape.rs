@@ -1,0 +1,31 @@
+//! Bench E7 (paper Fig. 14): per-kernel MAPE over the 49-pair grid and
+//! the overall headline (paper: 3.5% overall, 0.7–6.9% per kernel).
+
+use gpufreq::baselines::PaperModel;
+use gpufreq::coordinator::validate::validate_with;
+use gpufreq::kernels;
+use gpufreq::microbench;
+use gpufreq::report::tables;
+use gpufreq::sim::{Clocks, GpuSpec};
+use gpufreq::util::bench;
+
+fn main() {
+    let spec = GpuSpec::default();
+    let ex = microbench::extract(&spec, Clocks::new(700.0, 700.0));
+    let model = PaperModel { hw: ex.hw };
+    let pairs = microbench::standard_grid();
+
+    bench::section("Fig. 14: MAPE across all frequency pairs (the headline)");
+    let v = validate_with(&spec, &kernels::all(), &model, &pairs);
+    let (chart, summary) = tables::fig14(&v);
+    println!("{chart}");
+    print!("{}", summary.ascii());
+
+    assert!(v.overall_mape() < 0.05, "headline regression: {:.2}%", v.overall_mape() * 100.0);
+
+    bench::bench("per-kernel validation (49 pairs each)", 0, 1, || {
+        for k in kernels::all() {
+            std::hint::black_box(validate_with(&spec, &[k], &model, &pairs));
+        }
+    });
+}

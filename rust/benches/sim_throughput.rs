@@ -1,0 +1,38 @@
+//! Simulator performance bench (EXPERIMENTS.md §Perf): simulated-ops/s
+//! per kernel and the full 12x49 sweep wall-clock — the L3 hot loop.
+
+use gpufreq::coordinator::sweep::run_sweep;
+use gpufreq::kernels;
+use gpufreq::microbench;
+use gpufreq::sim::engine::simulate;
+use gpufreq::sim::{Clocks, GpuSpec};
+use gpufreq::util::bench;
+
+fn main() {
+    let spec = GpuSpec::default();
+    let clocks = Clocks::new(700.0, 700.0);
+
+    bench::section("simulator throughput per kernel (700/700)");
+    for k in kernels::all() {
+        let ops = k.program.dynamic_len() * k.launch.total_warps();
+        let s = bench::bench(&format!("simulate {}", k.name), 1, 5, || {
+            std::hint::black_box(simulate(&spec, clocks, &k));
+        });
+        println!(
+            "         {} warp-ops -> {:.1} M warp-ops/s",
+            ops,
+            ops as f64 / s.mean_ns * 1e3
+        );
+    }
+
+    bench::section("full ground-truth sweep (12 kernels x 49 pairs)");
+    let ks = kernels::all();
+    let pairs = microbench::standard_grid();
+    let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    bench::bench(&format!("run_sweep on {workers} workers"), 0, 2, || {
+        std::hint::black_box(run_sweep(&spec, &ks, &pairs, workers));
+    });
+    bench::bench("run_sweep single-threaded", 0, 1, || {
+        std::hint::black_box(run_sweep(&spec, &ks, &pairs, 1));
+    });
+}

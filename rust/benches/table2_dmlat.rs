@@ -1,0 +1,46 @@
+//! Bench E3 (paper Table II): minimum DRAM latency vs frequency and the
+//! Eq. (4) fit — measured on the simulator, fitted both natively and
+//! through the AOT PJRT artifact.
+
+use gpufreq::microbench;
+use gpufreq::model::fit::fit_line;
+use gpufreq::report::tables;
+use gpufreq::runtime::Runtime;
+use gpufreq::sim::GpuSpec;
+use gpufreq::util::bench;
+
+fn main() {
+    let spec = GpuSpec::default();
+    bench::section("Table II: minimum DRAM latency under frequency scaling");
+
+    let (t, note) = tables::table2(&spec);
+    print!("{}", t.ascii());
+    println!("{note}\n");
+
+    // Timed: the full 49-pair probe sweep + fit (the §IV extraction).
+    let pairs = microbench::standard_grid();
+    bench::bench("dm_lat probe sweep (49 pairs) + native fit", 1, 5, || {
+        let (r, l) = microbench::dm_lat_sweep(&spec, &pairs);
+        std::hint::black_box(fit_line(&r, &l));
+    });
+
+    // Cross-check: the PJRT fit artifact returns the same line.
+    let (ratios, lats) = microbench::dm_lat_sweep(&spec, &pairs);
+    let native = fit_line(&ratios, &lats);
+    match Runtime::load_default() {
+        Ok(rt) => {
+            let r32: Vec<f32> = ratios.iter().map(|&x| x as f32).collect();
+            let l32: Vec<f32> = lats.iter().map(|&x| x as f32).collect();
+            let (a, b, r2) = rt.fit_dm_lat(&r32, &l32).unwrap();
+            println!(
+                "fit agreement: native ({:.2}, {:.2}, {:.4}) vs PJRT ({a:.2}, {b:.2}, {r2:.4})",
+                native.slope, native.intercept, native.r_squared
+            );
+            assert!((a - native.slope).abs() < 0.5);
+            bench::bench("Eq. (4) fit via PJRT artifact", 2, 20, || {
+                std::hint::black_box(rt.fit_dm_lat(&r32, &l32).unwrap());
+            });
+        }
+        Err(e) => println!("(skipping PJRT fit: {e})"),
+    }
+}

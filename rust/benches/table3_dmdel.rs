@@ -1,0 +1,21 @@
+//! Bench E4 (paper Table III): DRAM read delay + bandwidth efficiency
+//! under frequency scaling, via the saturating bandwidth probe.
+
+use gpufreq::microbench;
+use gpufreq::report::tables;
+use gpufreq::sim::{Clocks, GpuSpec};
+use gpufreq::util::bench;
+
+fn main() {
+    let spec = GpuSpec::default();
+    bench::section("Table III: DRAM read delay and bandwidth efficiency");
+    print!("{}", tables::table3(&spec).ascii());
+    println!(
+        "paper: dm_del 10.06 -> 9.0 cycles, efficiency 76% -> 85%. Our MC model yields a\n\
+         near-constant dm_del/efficiency under joint scaling (second-order GDDR5 effects\n\
+         are out of scope — DESIGN.md §2), with the efficiency level inside the paper's band.\n"
+    );
+    bench::bench("bandwidth probe @700/700", 1, 5, || {
+        std::hint::black_box(microbench::bandwidth_probe(&spec, Clocks::new(700.0, 700.0)));
+    });
+}

@@ -1,0 +1,462 @@
+//! Hand-rolled CLI (clap is not in the offline vendor set — DESIGN.md
+//! "Offline substitutions"): subcommand + `--flag value` parsing and
+//! the command implementations behind the `gpufreq` launcher.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::baselines::{standard_baselines, PaperModel};
+use crate::config::{self, Config};
+use crate::coordinator::batcher::BatchServer;
+use crate::coordinator::sweep::run_sweep;
+use crate::coordinator::validate::{validate_with, SamplePoint, Validation};
+use crate::dvfs::{advise, Objective, PowerModel};
+use crate::kernels;
+use crate::microbench;
+use crate::model::HwParams;
+use crate::profiler;
+use crate::report::tables;
+use crate::sim::isa::Kernel;
+use crate::sim::Clocks;
+
+pub const USAGE: &str = "\
+gpufreq — GPGPU performance estimation with core & memory frequency scaling
+          (reproduction of Wang & Chu, 2017; see DESIGN.md)
+
+USAGE: gpufreq <COMMAND> [OPTIONS]
+
+COMMANDS:
+  list-kernels            List the Table VI workloads
+  microbench              Run the §IV probes: Eq. (4) fit, dm_del, latencies
+  profile <KERNEL>        One-shot baseline profile of a kernel (or 'all')
+  sweep                   Simulate kernels over the frequency grid (ground truth)
+  validate                Full Fig. 13/14 validation: simulate + predict + MAPE
+  report <ARTIFACT>       Regenerate a paper artifact: table1 table2 table3
+                          table6 fig2 fig5 fig12 fig13 fig14 ablation
+  advise <KERNEL>         DVFS energy advisor (paper §VII application)
+  serve                   Demo the batched PJRT prediction service
+  help                    Show this message
+
+OPTIONS:
+  --config <PATH>         TOML config (default: configs/gtx980.toml if present)
+  --kernels <A,B,...>     Restrict to these kernels
+  --pjrt                  Predict through the AOT PJRT artifact (default: native)
+  --csv                   Emit CSV instead of ASCII tables
+  --objective <NAME>      advise: energy | edp | slack:<frac> (default energy)
+  --workers <N>           sweep/validate parallelism (default: # cpus)
+";
+
+/// Parsed command line.
+#[derive(Debug, Clone)]
+pub struct Args {
+    pub command: String,
+    pub positional: Vec<String>,
+    pub config: Option<PathBuf>,
+    pub kernels: Option<Vec<String>>,
+    pub pjrt: bool,
+    pub csv: bool,
+    pub objective: String,
+    pub workers: usize,
+}
+
+impl Default for Args {
+    fn default() -> Self {
+        Args {
+            command: "help".into(),
+            positional: Vec::new(),
+            config: None,
+            kernels: None,
+            pjrt: false,
+            csv: false,
+            objective: "energy".into(),
+            workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+        }
+    }
+}
+
+/// Parse argv (excluding the binary name).
+pub fn parse_args(argv: &[String]) -> Result<Args> {
+    let mut args = Args::default();
+    let mut it = argv.iter().peekable();
+    let Some(cmd) = it.next() else {
+        return Ok(args);
+    };
+    args.command = cmd.clone();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--config" => {
+                args.config =
+                    Some(PathBuf::from(it.next().context("--config needs a path")?))
+            }
+            "--kernels" => {
+                args.kernels = Some(
+                    it.next()
+                        .context("--kernels needs a list")?
+                        .split(',')
+                        .map(|s| s.trim().to_string())
+                        .collect(),
+                )
+            }
+            "--pjrt" => args.pjrt = true,
+            "--csv" => args.csv = true,
+            "--objective" => {
+                args.objective = it.next().context("--objective needs a value")?.clone()
+            }
+            "--workers" => {
+                args.workers = it
+                    .next()
+                    .context("--workers needs a number")?
+                    .parse()
+                    .context("--workers must be an integer")?
+            }
+            flag if flag.starts_with("--") => bail!("unknown flag {flag}"),
+            pos => args.positional.push(pos.to_string()),
+        }
+    }
+    Ok(args)
+}
+
+fn load_config(args: &Args) -> Result<Config> {
+    if let Some(p) = &args.config {
+        return config::load(p);
+    }
+    let default = PathBuf::from("configs/gtx980.toml");
+    if default.exists() {
+        config::load(&default)
+    } else {
+        Ok(Config::default())
+    }
+}
+
+fn selected_kernels(args: &Args, cfg: &Config) -> Result<Vec<Kernel>> {
+    let names: Option<&[String]> = args
+        .kernels
+        .as_deref()
+        .or(if cfg.kernels.is_empty() { None } else { Some(&cfg.kernels) });
+    match names {
+        None => Ok(kernels::all()),
+        Some(ns) => ns
+            .iter()
+            .map(|n| kernels::by_name(n).with_context(|| format!("unknown kernel {n}")))
+            .collect(),
+    }
+}
+
+fn print_table(t: &crate::report::Table, csv: bool) {
+    if csv {
+        print!("{}", t.csv());
+    } else {
+        print!("{}", t.ascii());
+    }
+}
+
+/// PJRT-backed predictor for `validate --pjrt` (the production path).
+struct PjrtPredictor {
+    server: BatchServer,
+}
+
+impl crate::baselines::Predictor for PjrtPredictor {
+    fn name(&self) -> &'static str {
+        "paper-pjrt"
+    }
+    fn predict_us(&self, c: &crate::model::KernelCounters, cf: f64, mf: f64) -> f64 {
+        self.server.predict(c, cf, mf).expect("batch server alive").time_us
+    }
+}
+
+fn build_predictor(args: &Args, hw: HwParams) -> Result<Box<dyn crate::baselines::Predictor>> {
+    if args.pjrt {
+        let (server, _handle) = BatchServer::start_default(hw.to_f32(), Duration::from_millis(1))
+            .context("loading AOT artifacts (run `make artifacts` first)")?;
+        Ok(Box::new(PjrtPredictor { server }))
+    } else {
+        Ok(Box::new(PaperModel { hw }))
+    }
+}
+
+/// Run a parsed command. Returns the process exit code.
+pub fn run(args: Args) -> Result<i32> {
+    let cfg = load_config(&args)?;
+    let spec = cfg.gpu.clone();
+    let baseline = cfg.sweep.baseline();
+    let pairs = cfg.sweep.pairs();
+
+    match args.command.as_str() {
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+        }
+        "list-kernels" => {
+            print_table(&tables::table6(&selected_kernels(&args, &cfg)?), args.csv);
+        }
+        "microbench" => {
+            let ex = microbench::extract(&spec, baseline);
+            println!(
+                "dm_lat  = {:.2} * (cf/mf) + {:.2} core cycles   (R^2 = {:.4}; paper: 222.78/277.32)",
+                ex.hw.dm_lat_a, ex.hw.dm_lat_b, ex.dm_lat_fit.r_squared
+            );
+            println!(
+                "dm_del  = {:.2} mem cycles/txn   bandwidth efficiency {:.1}%  ({:.1} GB/s)",
+                ex.hw.dm_del,
+                ex.bandwidth_at_baseline.efficiency * 100.0,
+                ex.bandwidth_at_baseline.achieved_gbps
+            );
+            println!("l2_lat  = {:.1} core cycles   l2_del = {:.1}", ex.hw.l2_lat, ex.hw.l2_del);
+            println!("sh_lat  = {:.1} core cycles", ex.hw.sh_lat);
+            println!("inst    = {:.2} cycles/instruction", ex.hw.inst_cycle);
+        }
+        "profile" => {
+            let what = args.positional.first().map(String::as_str).unwrap_or("all");
+            let ks = if what == "all" {
+                selected_kernels(&args, &cfg)?
+            } else {
+                vec![kernels::by_name(what).with_context(|| format!("unknown kernel {what}"))?]
+            };
+            let mut t = crate::report::Table::new(
+                &format!(
+                    "Baseline profile @ {:.0}/{:.0} MHz",
+                    baseline.core_mhz, baseline.mem_mhz
+                ),
+                &["kernel", "time_us", "l2_hr", "gld", "avr_inst", "#Aw", "#SM", "smem", "regime"],
+            );
+            let ex = microbench::extract(&spec, baseline);
+            for k in &ks {
+                let p = profiler::profile_at(&spec, k, baseline);
+                let pred =
+                    crate::model::predict(&p.counters, &ex.hw, baseline.core_mhz, baseline.mem_mhz);
+                t.row(vec![
+                    p.kernel.clone(),
+                    format!("{:.1}", p.baseline_time_us),
+                    format!("{:.3}", p.counters.l2_hr),
+                    format!("{:.1}", p.counters.gld_trans),
+                    format!("{:.2}", p.counters.avr_inst),
+                    format!("{:.0}", p.counters.aw),
+                    format!("{:.0}", p.counters.n_sm),
+                    format!("{}", p.counters.uses_smem),
+                    format!("{:?}", pred.regime),
+                ]);
+            }
+            print_table(&t, args.csv);
+        }
+        "sweep" => {
+            let ks = selected_kernels(&args, &cfg)?;
+            let sweep = run_sweep(&spec, &ks, &pairs, args.workers);
+            let mut t = crate::report::Table::new(
+                "Ground-truth sweep (simulator)",
+                &["kernel", "core MHz", "mem MHz", "time_us", "l2_hr"],
+            );
+            for p in &sweep.points {
+                t.row(vec![
+                    p.kernel.clone(),
+                    format!("{:.0}", p.core_mhz),
+                    format!("{:.0}", p.mem_mhz),
+                    format!("{:.2}", p.time_us),
+                    format!("{:.3}", p.l2_hr),
+                ]);
+            }
+            print_table(&t, args.csv);
+        }
+        "validate" => {
+            let ks = selected_kernels(&args, &cfg)?;
+            let ex = microbench::extract(&spec, baseline);
+            let predictor = build_predictor(&args, ex.hw)?;
+            let v = validate_with(&spec, &ks, predictor.as_ref(), &pairs);
+            let (chart, summary) = tables::fig14(&v);
+            println!("{chart}");
+            print_table(&summary, args.csv);
+        }
+        "report" => {
+            let what = args.positional.first().map(String::as_str).unwrap_or("");
+            run_report(what, &args, &cfg)?;
+        }
+        "advise" => {
+            let name = args.positional.first().context("advise needs a kernel name")?;
+            let k = kernels::by_name(name).with_context(|| format!("unknown kernel {name}"))?;
+            let ex = microbench::extract(&spec, baseline);
+            let p = profiler::profile_at(&spec, &k, baseline);
+            let objective = match args.objective.as_str() {
+                "energy" => Objective::Energy,
+                "edp" => Objective::Edp,
+                s if s.starts_with("slack:") => Objective::EnergyWithSlack(
+                    s.trim_start_matches("slack:").parse().context("bad slack value")?,
+                ),
+                other => bail!("unknown objective {other}"),
+            };
+            let predictor = build_predictor(&args, ex.hw)?;
+            let power = PowerModel::gtx980();
+            let (best, points) =
+                advise(&p.counters, predictor.as_ref(), &power, &pairs, objective);
+            let mut t = crate::report::Table::new(
+                &format!("DVFS advisor for {name} ({:?})", objective),
+                &["core MHz", "mem MHz", "time_us", "power W", "energy mJ", "EDP"],
+            );
+            for cp in &points {
+                t.row(vec![
+                    format!("{:.0}", cp.core_mhz),
+                    format!("{:.0}", cp.mem_mhz),
+                    format!("{:.1}", cp.time_us),
+                    format!("{:.1}", cp.power_w),
+                    format!("{:.2}", cp.energy_mj),
+                    format!("{:.1}", cp.edp),
+                ]);
+            }
+            print_table(&t, args.csv);
+            println!(
+                "BEST: {:.0}/{:.0} MHz  time {:.1} us  power {:.1} W  energy {:.2} mJ",
+                best.core_mhz, best.mem_mhz, best.time_us, best.power_w, best.energy_mj
+            );
+        }
+        "serve" => {
+            let ex = microbench::extract(&spec, baseline);
+            let (server, _h) =
+                BatchServer::start_default(ex.hw.to_f32(), Duration::from_millis(2))
+                    .context("loading AOT artifacts (run `make artifacts` first)")?;
+            println!("PJRT platform: {}", server.platform());
+            let ks = selected_kernels(&args, &cfg)?;
+            let mut joins = Vec::new();
+            for k in ks {
+                let server = server.clone();
+                let spec = spec.clone();
+                let pairs = pairs.clone();
+                joins.push(std::thread::spawn(move || {
+                    let p = profiler::profile_at(&spec, &k, Clocks::new(700.0, 700.0));
+                    let out = server.predict_grid(&p.counters, &pairs).unwrap();
+                    let best = out
+                        .iter()
+                        .zip(&pairs)
+                        .min_by(|a, b| a.0.time_us.total_cmp(&b.0.time_us))
+                        .unwrap();
+                    (k.name.clone(), out.len(), best.1 .0, best.1 .1, best.0.time_us)
+                }));
+            }
+            for j in joins {
+                let (name, n, cf, mf, t) = j.join().unwrap();
+                println!("{name:8} {n} predictions; fastest {cf:.0}/{mf:.0} MHz -> {t:.1} us");
+            }
+            let st = server.stats();
+            println!(
+                "served {} rows in {} batches (mean occupancy {:.1}%)",
+                st.requests(),
+                st.batches(),
+                st.mean_occupancy() * 100.0
+            );
+        }
+        other => {
+            eprintln!("unknown command `{other}`\n");
+            print!("{USAGE}");
+            return Ok(2);
+        }
+    }
+    Ok(0)
+}
+
+fn run_report(what: &str, args: &Args, cfg: &Config) -> Result<()> {
+    let spec = cfg.gpu.clone();
+    let baseline = cfg.sweep.baseline();
+    let pairs = cfg.sweep.pairs();
+    match what {
+        "table1" => print_table(&tables::table1(), args.csv),
+        "table2" => {
+            let (t, note) = tables::table2(&spec);
+            print_table(&t, args.csv);
+            println!("{note}");
+        }
+        "table3" => print_table(&tables::table3(&spec), args.csv),
+        "table6" => print_table(&tables::table6(&kernels::all()), args.csv),
+        "fig2" => {
+            let ks = kernels::fig2_set();
+            let sweep = run_sweep(&spec, &ks, &pairs, args.workers);
+            for (fixed, mem) in [(400.0, true), (1000.0, true), (400.0, false), (1000.0, false)] {
+                print_table(&tables::fig2(&sweep, &ks, fixed, mem), args.csv);
+            }
+        }
+        "fig5" => {
+            let (a, b) = tables::fig5(&spec, baseline, 2048);
+            print_table(&a, args.csv);
+            print_table(&b, args.csv);
+        }
+        "fig12" => {
+            let profiles: Vec<_> =
+                kernels::all().iter().map(|k| profiler::profile_at(&spec, k, baseline)).collect();
+            print_table(&tables::fig12(&profiles), args.csv);
+        }
+        "fig13" => {
+            let ks = selected_kernels(args, cfg)?;
+            let ex = microbench::extract(&spec, baseline);
+            let predictor = build_predictor(args, ex.hw)?;
+            let v = validate_with(&spec, &ks, predictor.as_ref(), &pairs);
+            for (fc, fm) in [(Some(400.0), None), (Some(1000.0), None)] {
+                print_table(&tables::fig13(&v, fc, fm), args.csv);
+            }
+            for (fc, fm) in [(None, Some(400.0)), (None, Some(1000.0))] {
+                print_table(&tables::fig13(&v, fc, fm), args.csv);
+            }
+        }
+        "fig14" => {
+            let ks = selected_kernels(args, cfg)?;
+            let ex = microbench::extract(&spec, baseline);
+            let predictor = build_predictor(args, ex.hw)?;
+            let v = validate_with(&spec, &ks, predictor.as_ref(), &pairs);
+            let (chart, t) = tables::fig14(&v);
+            println!("{chart}");
+            print_table(&t, args.csv);
+        }
+        "ablation" => {
+            let ks = selected_kernels(args, cfg)?;
+            let ex = microbench::extract(&spec, baseline);
+            let rows =
+                tables::run_ablation(&spec, &ks, &standard_baselines(ex.hw), &pairs);
+            print_table(&tables::ablation(&rows), args.csv);
+        }
+        other => bail!("unknown report `{other}` (see `gpufreq help`)"),
+    }
+    Ok(())
+}
+
+/// Expose sample-point construction for integration tests.
+pub fn sample_point(kernel: &str, cf: f64, mf: f64, truth: f64, pred: f64) -> SamplePoint {
+    SamplePoint { kernel: kernel.into(), core_mhz: cf, mem_mhz: mf, truth_us: truth, pred_us: pred }
+}
+
+/// Re-export for tests.
+pub fn empty_validation() -> Validation {
+    Validation { per_kernel: Vec::new() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_command_and_flags() {
+        let a = parse_args(&argv("validate --pjrt --workers 3 --kernels VA,MMS --csv")).unwrap();
+        assert_eq!(a.command, "validate");
+        assert!(a.pjrt && a.csv);
+        assert_eq!(a.workers, 3);
+        assert_eq!(a.kernels.as_deref().unwrap(), ["VA".to_string(), "MMS".to_string()]);
+    }
+
+    #[test]
+    fn positionals_collected() {
+        let a = parse_args(&argv("report fig14")).unwrap();
+        assert_eq!(a.command, "report");
+        assert_eq!(a.positional, vec!["fig14".to_string()]);
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        assert!(parse_args(&argv("sweep --frobnicate")).is_err());
+        assert!(parse_args(&argv("sweep --workers two")).is_err());
+    }
+
+    #[test]
+    fn empty_argv_is_help() {
+        let a = parse_args(&[]).unwrap();
+        assert_eq!(a.command, "help");
+    }
+}

@@ -1,0 +1,202 @@
+//! Config system: typed loading of GPU specs (the paper's Table V) and
+//! sweep/baseline settings from TOML-subset files in `configs/`.
+
+pub mod toml;
+
+use std::path::Path;
+
+use crate::sim::{Clocks, GpuSpec};
+use toml::Document;
+
+/// Frequency-sweep settings (§VI-A: 400–1000 MHz, 100 MHz stride, 49
+/// pairs, baseline 700/700).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepConfig {
+    pub core_min_mhz: f64,
+    pub core_max_mhz: f64,
+    pub mem_min_mhz: f64,
+    pub mem_max_mhz: f64,
+    pub stride_mhz: f64,
+    pub baseline_core_mhz: f64,
+    pub baseline_mem_mhz: f64,
+}
+
+impl Default for SweepConfig {
+    fn default() -> Self {
+        SweepConfig {
+            core_min_mhz: 400.0,
+            core_max_mhz: 1000.0,
+            mem_min_mhz: 400.0,
+            mem_max_mhz: 1000.0,
+            stride_mhz: 100.0,
+            baseline_core_mhz: 700.0,
+            baseline_mem_mhz: 700.0,
+        }
+    }
+}
+
+impl SweepConfig {
+    /// All (core, mem) pairs in the grid.
+    pub fn pairs(&self) -> Vec<(f64, f64)> {
+        let steps = |lo: f64, hi: f64, stride: f64| {
+            let mut v = Vec::new();
+            let mut f = lo;
+            while f <= hi + 1e-9 {
+                v.push(f);
+                f += stride;
+            }
+            v
+        };
+        let cores = steps(self.core_min_mhz, self.core_max_mhz, self.stride_mhz);
+        let mems = steps(self.mem_min_mhz, self.mem_max_mhz, self.stride_mhz);
+        let mut out = Vec::with_capacity(cores.len() * mems.len());
+        for &cf in &cores {
+            for &mf in &mems {
+                out.push((cf, mf));
+            }
+        }
+        out
+    }
+
+    pub fn baseline(&self) -> Clocks {
+        Clocks::new(self.baseline_core_mhz, self.baseline_mem_mhz)
+    }
+}
+
+/// Complete runtime configuration.
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    pub gpu: GpuSpec,
+    pub sweep: SweepConfig,
+    /// Kernel names to run (empty = all).
+    pub kernels: Vec<String>,
+}
+
+/// Build a `GpuSpec` from a parsed document's `[gpu]` section, using
+/// the GTX 980 defaults for anything unspecified.
+pub fn gpu_from_doc(doc: &Document) -> GpuSpec {
+    let d = GpuSpec::default();
+    GpuSpec {
+        n_sm: doc.u32_or("gpu.n_sm", d.n_sm),
+        max_warps_per_sm: doc.u32_or("gpu.max_warps_per_sm", d.max_warps_per_sm),
+        max_blocks_per_sm: doc.u32_or("gpu.max_blocks_per_sm", d.max_blocks_per_sm),
+        smem_per_sm: doc.u32_or("gpu.smem_per_sm", d.smem_per_sm),
+        regs_per_sm: doc.u32_or("gpu.regs_per_sm", d.regs_per_sm),
+        l2_bytes: doc.u64_or("gpu.l2_bytes", d.l2_bytes),
+        l2_ways: doc.u32_or("gpu.l2_ways", d.l2_ways),
+        line_bytes: doc.u32_or("gpu.line_bytes", d.line_bytes),
+        l2_hit_core_cycles: doc.f64_or("gpu.l2_hit_core_cycles", d.l2_hit_core_cycles),
+        l2_ii_core_cycles: doc.f64_or("gpu.l2_ii_core_cycles", d.l2_ii_core_cycles),
+        dm_path_core_cycles: doc.f64_or("gpu.dm_path_core_cycles", d.dm_path_core_cycles),
+        dm_access_mem_cycles: doc.f64_or("gpu.dm_access_mem_cycles", d.dm_access_mem_cycles),
+        dm_burst_mem_cycles: doc.f64_or("gpu.dm_burst_mem_cycles", d.dm_burst_mem_cycles),
+        mc_overhead_mem_cycles: doc
+            .f64_or("gpu.mc_overhead_mem_cycles", d.mc_overhead_mem_cycles),
+        dram_banks: doc.u32_or("gpu.dram_banks", d.dram_banks),
+        dram_row_lines: doc.u32_or("gpu.dram_row_lines", d.dram_row_lines),
+        dram_row_miss_lat_mem_cycles: doc
+            .f64_or("gpu.dram_row_miss_lat_mem_cycles", d.dram_row_miss_lat_mem_cycles),
+        dram_row_miss_occ_mem_cycles: doc
+            .f64_or("gpu.dram_row_miss_occ_mem_cycles", d.dram_row_miss_occ_mem_cycles),
+        l1_bytes: doc.u64_or("gpu.l1_bytes", d.l1_bytes),
+        l1_ways: doc.u32_or("gpu.l1_ways", d.l1_ways),
+        l1_hit_core_cycles: doc.f64_or("gpu.l1_hit_core_cycles", d.l1_hit_core_cycles),
+        smem_core_cycles: doc.f64_or("gpu.smem_core_cycles", d.smem_core_cycles),
+        inst_core_cycles: doc.f64_or("gpu.inst_core_cycles", d.inst_core_cycles),
+        block_launch_core_cycles: doc
+            .f64_or("gpu.block_launch_core_cycles", d.block_launch_core_cycles),
+    }
+}
+
+/// Build a `SweepConfig` from a document's `[sweep]` section.
+pub fn sweep_from_doc(doc: &Document) -> SweepConfig {
+    let d = SweepConfig::default();
+    SweepConfig {
+        core_min_mhz: doc.f64_or("sweep.core_min_mhz", d.core_min_mhz),
+        core_max_mhz: doc.f64_or("sweep.core_max_mhz", d.core_max_mhz),
+        mem_min_mhz: doc.f64_or("sweep.mem_min_mhz", d.mem_min_mhz),
+        mem_max_mhz: doc.f64_or("sweep.mem_max_mhz", d.mem_max_mhz),
+        stride_mhz: doc.f64_or("sweep.stride_mhz", d.stride_mhz),
+        baseline_core_mhz: doc.f64_or("sweep.baseline_core_mhz", d.baseline_core_mhz),
+        baseline_mem_mhz: doc.f64_or("sweep.baseline_mem_mhz", d.baseline_mem_mhz),
+    }
+}
+
+/// Parse a configuration from TOML text.
+pub fn from_text(text: &str) -> Result<Config, toml::ParseError> {
+    let doc = toml::parse(text)?;
+    let kernels = doc
+        .get("kernels.names")
+        .and_then(|v| v.as_str().map(|s| s.to_string()))
+        .map(|s| s.split(',').map(|k| k.trim().to_string()).filter(|k| !k.is_empty()).collect())
+        .unwrap_or_default();
+    Ok(Config { gpu: gpu_from_doc(&doc), sweep: sweep_from_doc(&doc), kernels })
+}
+
+/// Load a configuration file.
+pub fn load(path: &Path) -> anyhow::Result<Config> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+    from_text(&text).map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_sweep_is_49_pairs_with_paper_baseline() {
+        let s = SweepConfig::default();
+        let pairs = s.pairs();
+        assert_eq!(pairs.len(), 49);
+        assert_eq!(pairs[0], (400.0, 400.0));
+        assert_eq!(pairs[48], (1000.0, 1000.0));
+        assert_eq!(s.baseline().core_mhz, 700.0);
+    }
+
+    #[test]
+    fn empty_text_gives_defaults() {
+        let c = from_text("").unwrap();
+        assert_eq!(c.gpu.n_sm, 16);
+        assert_eq!(c.sweep, SweepConfig::default());
+        assert!(c.kernels.is_empty());
+    }
+
+    #[test]
+    fn overrides_apply() {
+        let c = from_text(
+            r#"
+[gpu]
+n_sm = 8
+l2_bytes = 1048576
+inst_core_cycles = 4.0
+[sweep]
+stride_mhz = 300.0
+core_max_mhz = 700.0
+[kernels]
+names = "VA, MMS"
+"#,
+        )
+        .unwrap();
+        assert_eq!(c.gpu.n_sm, 8);
+        assert_eq!(c.gpu.l2_bytes, 1048576);
+        assert_eq!(c.gpu.inst_core_cycles, 4.0);
+        assert_eq!(c.sweep.pairs().len(), 2 * 3); // cores {400,700}, mems {400,700,1000}
+        assert_eq!(c.kernels, vec!["VA".to_string(), "MMS".to_string()]);
+    }
+
+    #[test]
+    fn bad_config_is_an_error() {
+        assert!(from_text("gpu = [broken").is_err());
+    }
+
+    #[test]
+    fn gtx980_config_file_loads() {
+        // The checked-in Table V config must parse and match defaults.
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("configs/gtx980.toml");
+        let c = load(&path).unwrap();
+        assert_eq!(c.gpu.n_sm, 16);
+        assert_eq!(c.gpu.l2_bytes, 2 * 1024 * 1024);
+        assert_eq!(c.sweep.pairs().len(), 49);
+    }
+}

@@ -1,0 +1,262 @@
+//! Minimal TOML-subset parser (offline substitution for the `toml`
+//! crate, which is not in the vendored set — DESIGN.md "Offline
+//! substitutions").
+//!
+//! Supported: `[section]` / `[a.b]` headers, `key = value` with string,
+//! integer, float and boolean values, `#` comments, blank lines.
+//! Unsupported (rejected with an error): arrays, inline tables,
+//! multi-line strings, datetimes.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A parsed scalar value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl Value {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_u32(&self) -> Option<u32> {
+        match self {
+            Value::Int(i) if *i >= 0 && *i <= u32::MAX as i64 => Some(*i as u32),
+            _ => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Value::Int(i) if *i >= 0 => Some(*i as u64),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Parse error with line context.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParseError {
+    pub line: usize,
+    pub message: String,
+}
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "line {}: {}", self.line, self.message)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+/// Flat document: keys are `section.key` (dotted).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Document {
+    pub entries: BTreeMap<String, Value>,
+}
+
+impl Document {
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.entries.get(key)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(Value::as_f64).unwrap_or(default)
+    }
+
+    pub fn u32_or(&self, key: &str, default: u32) -> u32 {
+        self.get(key).and_then(Value::as_u32).unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(Value::as_u64).unwrap_or(default)
+    }
+
+    /// Keys under a section prefix.
+    pub fn section_keys(&self, section: &str) -> Vec<&str> {
+        let prefix = format!("{section}.");
+        self.entries
+            .keys()
+            .filter(|k| k.starts_with(&prefix))
+            .map(|k| k.as_str())
+            .collect()
+    }
+}
+
+fn parse_value(raw: &str, line: usize) -> Result<Value, ParseError> {
+    let raw = raw.trim();
+    let err = |m: &str| ParseError { line, message: m.to_string() };
+    if raw.is_empty() {
+        return Err(err("empty value"));
+    }
+    if let Some(stripped) = raw.strip_prefix('"') {
+        let inner = stripped
+            .strip_suffix('"')
+            .ok_or_else(|| err("unterminated string"))?;
+        if inner.contains('"') {
+            return Err(err("embedded quotes not supported"));
+        }
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if raw.starts_with('[') || raw.starts_with('{') {
+        return Err(err("arrays/inline tables not supported"));
+    }
+    match raw {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    let clean = raw.replace('_', "");
+    if let Ok(i) = clean.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = clean.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(err(&format!("cannot parse value `{raw}`")))
+}
+
+/// Parse a document.
+pub fn parse(text: &str) -> Result<Document, ParseError> {
+    let mut doc = Document::default();
+    let mut section = String::new();
+    for (i, raw_line) in text.lines().enumerate() {
+        let line_no = i + 1;
+        // Strip comments outside strings (values with '#' must be quoted;
+        // our subset strings never contain '#' + quote combos).
+        let line = match raw_line.find('#') {
+            Some(pos) if !raw_line[..pos].contains('"') => &raw_line[..pos],
+            _ => raw_line,
+        };
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| ParseError { line: line_no, message: "unterminated section".into() })?
+                .trim();
+            if name.is_empty() {
+                return Err(ParseError { line: line_no, message: "empty section name".into() });
+            }
+            section = name.to_string();
+            continue;
+        }
+        let Some((key, value)) = line.split_once('=') else {
+            return Err(ParseError { line: line_no, message: format!("expected key = value, got `{line}`") });
+        };
+        let key = key.trim();
+        if key.is_empty() {
+            return Err(ParseError { line: line_no, message: "empty key".into() });
+        }
+        let full_key = if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
+        let v = parse_value(value, line_no)?;
+        if doc.entries.insert(full_key.clone(), v).is_some() {
+            return Err(ParseError { line: line_no, message: format!("duplicate key `{full_key}`") });
+        }
+    }
+    Ok(doc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_scalars() {
+        let doc = parse(
+            r#"
+# GPU spec
+name = "gtx980"
+[gpu]
+n_sm = 16
+l2_bytes = 2_097_152
+inst_cycle = 2.0
+banks_enabled = true
+[sweep.range]
+lo = 400
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("name"), Some(&Value::Str("gtx980".into())));
+        assert_eq!(doc.u32_or("gpu.n_sm", 0), 16);
+        assert_eq!(doc.u64_or("gpu.l2_bytes", 0), 2_097_152);
+        assert_eq!(doc.f64_or("gpu.inst_cycle", 0.0), 2.0);
+        assert_eq!(doc.get("gpu.banks_enabled").unwrap().as_bool(), Some(true));
+        assert_eq!(doc.f64_or("sweep.range.lo", 0.0), 400.0);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let doc = parse("").unwrap();
+        assert_eq!(doc.f64_or("missing", 7.5), 7.5);
+    }
+
+    #[test]
+    fn int_doubles_as_float() {
+        let doc = parse("x = 3").unwrap();
+        assert_eq!(doc.f64_or("x", 0.0), 3.0);
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(parse("not a kv").is_err());
+        assert!(parse("[unterminated").is_err());
+        assert!(parse("x = ").is_err());
+        assert!(parse("x = [1, 2]").is_err());
+        assert!(parse("x = \"open").is_err());
+    }
+
+    #[test]
+    fn rejects_duplicates() {
+        let e = parse("x = 1\nx = 2").unwrap_err();
+        assert!(e.message.contains("duplicate"));
+        assert_eq!(e.line, 2);
+    }
+
+    #[test]
+    fn comments_stripped() {
+        let doc = parse("x = 5 # five\n# whole line\ny = \"a#b\"").unwrap();
+        assert_eq!(doc.u32_or("x", 0), 5);
+        assert_eq!(doc.get("y").unwrap().as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn section_keys_listed() {
+        let doc = parse("[a]\nx = 1\ny = 2\n[b]\nz = 3").unwrap();
+        let keys = doc.section_keys("a");
+        assert_eq!(keys, vec!["a.x", "a.y"]);
+    }
+
+    #[test]
+    fn negative_and_float_values() {
+        let doc = parse("a = -4\nb = 277.32").unwrap();
+        assert_eq!(doc.get("a"), Some(&Value::Int(-4)));
+        assert_eq!(doc.f64_or("b", 0.0), 277.32);
+        assert_eq!(doc.get("a").unwrap().as_u32(), None);
+    }
+}

@@ -1,0 +1,9 @@
+//! L3 coordination: sweep orchestration, model validation, and the
+//! batched PJRT prediction service.
+pub mod batcher;
+pub mod sweep;
+pub mod validate;
+
+pub use batcher::{BatchPrediction, BatchServer};
+pub use sweep::{run_sweep, Sweep, SweepPoint};
+pub use validate::{validate_with, Validation};

@@ -1,0 +1,147 @@
+//! Frequency-sweep orchestration: run kernels across the DVFS grid on
+//! worker threads (tokio is not in the offline vendor set; the paper's
+//! sweep is embarrassingly parallel, so a scoped thread pool is the
+//! right tool — DESIGN.md "Offline substitutions").
+
+use std::sync::mpsc;
+use std::thread;
+
+use crate::sim::engine::simulate;
+use crate::sim::isa::Kernel;
+use crate::sim::{Clocks, GpuSpec};
+
+/// One measured grid point.
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    pub kernel: String,
+    pub core_mhz: f64,
+    pub mem_mhz: f64,
+    pub time_us: f64,
+    pub l2_hr: f64,
+    pub dram_txns: u64,
+}
+
+/// Result of a full sweep.
+#[derive(Debug, Clone, Default)]
+pub struct Sweep {
+    pub points: Vec<SweepPoint>,
+}
+
+impl Sweep {
+    /// Time at a grid point, if measured.
+    pub fn time_us(&self, kernel: &str, cf: f64, mf: f64) -> Option<f64> {
+        self.points
+            .iter()
+            .find(|p| p.kernel == kernel && p.core_mhz == cf && p.mem_mhz == mf)
+            .map(|p| p.time_us)
+    }
+
+    /// Speedup of (cf, mf) relative to a reference pair — the quantity
+    /// the paper's Fig. 2 plots.
+    pub fn speedup(&self, kernel: &str, from: (f64, f64), to: (f64, f64)) -> Option<f64> {
+        Some(self.time_us(kernel, from.0, from.1)? / self.time_us(kernel, to.0, to.1)?)
+    }
+}
+
+/// Sweep `kernels` over `pairs`, running up to `workers` simulations in
+/// parallel. Results are returned in deterministic (kernel, pair) order
+/// regardless of completion order.
+pub fn run_sweep(
+    spec: &GpuSpec,
+    kernels: &[Kernel],
+    pairs: &[(f64, f64)],
+    workers: usize,
+) -> Sweep {
+    let jobs: Vec<(usize, &Kernel, f64, f64)> = kernels
+        .iter()
+        .flat_map(|k| pairs.iter().map(move |&(cf, mf)| (k, cf, mf)))
+        .enumerate()
+        .map(|(i, (k, cf, mf))| (i, k, cf, mf))
+        .collect();
+    let n_jobs = jobs.len();
+    let workers = workers.max(1).min(n_jobs.max(1));
+
+    let mut results: Vec<Option<SweepPoint>> = vec![None; n_jobs];
+    thread::scope(|scope| {
+        let (tx, rx) = mpsc::channel();
+        let chunks: Vec<Vec<(usize, &Kernel, f64, f64)>> = (0..workers)
+            .map(|w| jobs.iter().skip(w).step_by(workers).cloned().collect())
+            .collect();
+        for chunk in chunks {
+            let tx = tx.clone();
+            let spec = spec.clone();
+            scope.spawn(move || {
+                for (i, k, cf, mf) in chunk {
+                    let r = simulate(&spec, Clocks::new(cf, mf), k);
+                    let point = SweepPoint {
+                        kernel: k.name.clone(),
+                        core_mhz: cf,
+                        mem_mhz: mf,
+                        time_us: r.stats.elapsed_ns / 1e3,
+                        l2_hr: r.stats.l2_hit_rate(),
+                        dram_txns: r.stats.dram_txns,
+                    };
+                    // Receiver outlives senders; ignore send errors on
+                    // shutdown races (cannot happen inside scope).
+                    let _ = tx.send((i, point));
+                }
+            });
+        }
+        drop(tx);
+        while let Ok((i, p)) = rx.recv() {
+            results[i] = Some(p);
+        }
+    });
+
+    Sweep { points: results.into_iter().map(|p| p.expect("job completed")).collect() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels;
+
+    #[test]
+    fn sweep_covers_grid_in_order() {
+        let spec = GpuSpec::default();
+        let ks = vec![kernels::vector_add()];
+        let pairs = vec![(400.0, 400.0), (400.0, 700.0), (700.0, 400.0)];
+        let s = run_sweep(&spec, &ks, &pairs, 2);
+        assert_eq!(s.points.len(), 3);
+        assert_eq!(s.points[0].core_mhz, 400.0);
+        assert_eq!(s.points[0].mem_mhz, 400.0);
+        assert_eq!(s.points[2].mem_mhz, 400.0);
+    }
+
+    #[test]
+    fn sweep_matches_direct_simulation() {
+        let spec = GpuSpec::default();
+        let k = kernels::transpose();
+        let s = run_sweep(&spec, &[k.clone()], &[(500.0, 900.0)], 4);
+        let direct = simulate(&spec, Clocks::new(500.0, 900.0), &k);
+        assert_eq!(s.points[0].time_us, direct.stats.elapsed_ns / 1e3);
+    }
+
+    #[test]
+    fn speedup_lookup() {
+        let spec = GpuSpec::default();
+        let ks = vec![kernels::vector_add()];
+        let pairs = vec![(1000.0, 400.0), (1000.0, 1000.0)];
+        let s = run_sweep(&spec, &ks, &pairs, 2);
+        let sp = s.speedup("VA", (1000.0, 400.0), (1000.0, 1000.0)).unwrap();
+        assert!(sp > 1.5, "{sp}");
+        assert!(s.speedup("nope", (0.0, 0.0), (1.0, 1.0)).is_none());
+    }
+
+    #[test]
+    fn single_worker_equals_many_workers() {
+        let spec = GpuSpec::default();
+        let ks = vec![kernels::scalar_prod()];
+        let pairs = vec![(400.0, 1000.0), (800.0, 600.0)];
+        let a = run_sweep(&spec, &ks, &pairs, 1);
+        let b = run_sweep(&spec, &ks, &pairs, 8);
+        for (x, y) in a.points.iter().zip(&b.points) {
+            assert_eq!(x.time_us, y.time_us);
+        }
+    }
+}

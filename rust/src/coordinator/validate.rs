@@ -1,0 +1,185 @@
+//! Model-vs-ground-truth validation: the machinery behind the paper's
+//! Figs. 13/14 and the 3.5 % MAPE headline.
+//!
+//! Ground truth = the simulator run at each frequency pair. Prediction =
+//! one baseline profile + the analytical model (or any `Predictor`
+//! baseline, for the ablation bench).
+
+use crate::baselines::Predictor;
+use crate::profiler::{self, Profile};
+use crate::sim::engine::simulate;
+use crate::sim::isa::Kernel;
+use crate::sim::{Clocks, GpuSpec};
+
+/// One (kernel, frequency-pair) validation sample.
+#[derive(Debug, Clone)]
+pub struct SamplePoint {
+    pub kernel: String,
+    pub core_mhz: f64,
+    pub mem_mhz: f64,
+    /// Simulator ground truth, µs.
+    pub truth_us: f64,
+    /// Model prediction, µs.
+    pub pred_us: f64,
+}
+
+impl SamplePoint {
+    /// Signed relative error (negative = under-estimation), as plotted
+    /// in the paper's Fig. 13.
+    pub fn signed_err(&self) -> f64 {
+        (self.pred_us - self.truth_us) / self.truth_us
+    }
+
+    pub fn abs_err(&self) -> f64 {
+        self.signed_err().abs()
+    }
+}
+
+/// Validation summary for one kernel (a Fig. 14 bar).
+#[derive(Debug, Clone)]
+pub struct KernelValidation {
+    pub kernel: String,
+    pub points: Vec<SamplePoint>,
+}
+
+impl KernelValidation {
+    /// Mean absolute percentage error over the kernel's pairs.
+    pub fn mape(&self) -> f64 {
+        self.points.iter().map(|p| p.abs_err()).sum::<f64>() / self.points.len().max(1) as f64
+    }
+
+    pub fn max_abs_err(&self) -> f64 {
+        self.points.iter().map(|p| p.abs_err()).fold(0.0, f64::max)
+    }
+}
+
+/// Whole-suite validation (Fig. 14 + the headline number).
+#[derive(Debug, Clone)]
+pub struct Validation {
+    pub per_kernel: Vec<KernelValidation>,
+}
+
+impl Validation {
+    /// MAPE across every (kernel, pair) sample — the paper's 3.5 %.
+    pub fn overall_mape(&self) -> f64 {
+        let (sum, n) = self
+            .per_kernel
+            .iter()
+            .flat_map(|k| &k.points)
+            .fold((0.0, 0usize), |(s, n), p| (s + p.abs_err(), n + 1));
+        sum / n.max(1) as f64
+    }
+
+    /// Fraction of samples with error below `thresh` (paper: 90 % < 10 %).
+    pub fn fraction_below(&self, thresh: f64) -> f64 {
+        let pts: Vec<f64> = self
+            .per_kernel
+            .iter()
+            .flat_map(|k| k.points.iter().map(|p| p.abs_err()))
+            .collect();
+        if pts.is_empty() {
+            return 0.0;
+        }
+        pts.iter().filter(|e| **e < thresh).count() as f64 / pts.len() as f64
+    }
+
+    pub fn max_abs_err(&self) -> f64 {
+        self.per_kernel.iter().map(|k| k.max_abs_err()).fold(0.0, f64::max)
+    }
+}
+
+/// Ground truth for one kernel at one pair, µs.
+pub fn ground_truth_us(spec: &GpuSpec, kernel: &Kernel, clocks: Clocks) -> f64 {
+    simulate(spec, clocks, kernel).stats.elapsed_ns / 1e3
+}
+
+/// Validate one kernel with an arbitrary predictor over `pairs`.
+pub fn validate_kernel_with(
+    spec: &GpuSpec,
+    kernel: &Kernel,
+    profile: &Profile,
+    predictor: &dyn Predictor,
+    pairs: &[(f64, f64)],
+) -> KernelValidation {
+    let points = pairs
+        .iter()
+        .map(|&(cf, mf)| SamplePoint {
+            kernel: kernel.name.clone(),
+            core_mhz: cf,
+            mem_mhz: mf,
+            truth_us: ground_truth_us(spec, kernel, Clocks::new(cf, mf)),
+            pred_us: predictor.predict_us(&profile.counters, cf, mf),
+        })
+        .collect();
+    KernelValidation { kernel: kernel.name.clone(), points }
+}
+
+/// Full-suite validation with an arbitrary predictor.
+pub fn validate_with(
+    spec: &GpuSpec,
+    kernels: &[Kernel],
+    predictor: &dyn Predictor,
+    pairs: &[(f64, f64)],
+) -> Validation {
+    let per_kernel = kernels
+        .iter()
+        .map(|k| {
+            let profile = profiler::profile(spec, k);
+            validate_kernel_with(spec, k, &profile, predictor, pairs)
+        })
+        .collect();
+    Validation { per_kernel }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::PaperModel;
+    use crate::kernels;
+    use crate::model::HwParams;
+
+    #[test]
+    fn sample_point_errors() {
+        let p = SamplePoint {
+            kernel: "x".into(),
+            core_mhz: 700.0,
+            mem_mhz: 700.0,
+            truth_us: 100.0,
+            pred_us: 90.0,
+        };
+        assert!((p.signed_err() + 0.1).abs() < 1e-12);
+        assert!((p.abs_err() - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn validation_aggregates() {
+        let mk = |e: f64| SamplePoint {
+            kernel: "k".into(),
+            core_mhz: 0.0,
+            mem_mhz: 0.0,
+            truth_us: 1.0,
+            pred_us: 1.0 + e,
+        };
+        let v = Validation {
+            per_kernel: vec![
+                KernelValidation { kernel: "a".into(), points: vec![mk(0.02), mk(-0.04)] },
+                KernelValidation { kernel: "b".into(), points: vec![mk(0.2), mk(0.0)] },
+            ],
+        };
+        assert!((v.overall_mape() - 0.065).abs() < 1e-12);
+        assert!((v.fraction_below(0.10) - 0.75).abs() < 1e-12);
+        assert!((v.max_abs_err() - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn baseline_pair_prediction_is_close_for_va() {
+        // At the profiling baseline itself the model should be close
+        // (this is the easiest point: no extrapolation).
+        let spec = GpuSpec::default();
+        let k = kernels::vector_add();
+        let prof = profiler::profile(&spec, &k);
+        let model = PaperModel { hw: HwParams::paper_defaults() };
+        let v = validate_kernel_with(&spec, &k, &prof, &model, &[(700.0, 700.0)]);
+        assert!(v.mape() < 0.25, "VA baseline-point error {}", v.mape());
+    }
+}

@@ -1,0 +1,248 @@
+//! DVFS energy model and advisor — the paper's motivating application
+//! (§I and §VII future work: "a real-time voltage and frequency
+//! controller based on energy conservation strategies").
+//!
+//! Power follows the paper's Eq. (1), `P_dynamic = a·C·V²·f`, applied
+//! per clock domain with a voltage/frequency table, plus static power.
+//! Energy = P(cf, mf) × T(cf, mf), with T from any `Predictor`.
+
+use crate::baselines::Predictor;
+use crate::model::KernelCounters;
+
+/// Voltage-frequency curve: linear interpolation over (MHz, V) points.
+#[derive(Debug, Clone)]
+pub struct VfCurve {
+    /// Sorted (frequency MHz, volts) points.
+    pub points: Vec<(f64, f64)>,
+}
+
+impl VfCurve {
+    /// A Maxwell-like curve: 0.85 V at 400 MHz up to 1.2125 V at
+    /// 1000 MHz (matching published GTX 980 V/f steps in shape).
+    pub fn maxwell_core() -> Self {
+        VfCurve {
+            points: vec![(400.0, 0.85), (600.0, 0.95), (800.0, 1.075), (1000.0, 1.2125)],
+        }
+    }
+
+    /// GDDR5 voltage barely scales: flat-ish curve.
+    pub fn gddr5_mem() -> Self {
+        VfCurve { points: vec![(400.0, 1.35), (1000.0, 1.5)] }
+    }
+
+    /// Voltage at `f_mhz` (clamped linear interpolation).
+    pub fn volts(&self, f_mhz: f64) -> f64 {
+        let pts = &self.points;
+        if f_mhz <= pts[0].0 {
+            return pts[0].1;
+        }
+        for w in pts.windows(2) {
+            let ((f0, v0), (f1, v1)) = (w[0], w[1]);
+            if f_mhz <= f1 {
+                return v0 + (v1 - v0) * (f_mhz - f0) / (f1 - f0);
+            }
+        }
+        pts.last().unwrap().1
+    }
+}
+
+/// Eq. (1)-style power model with two frequency domains.
+#[derive(Debug, Clone)]
+pub struct PowerModel {
+    pub core_curve: VfCurve,
+    pub mem_curve: VfCurve,
+    /// Effective a·C coefficient for the core domain, W / (MHz·V²).
+    pub core_coeff: f64,
+    /// Effective a·C coefficient for the memory domain, W / (MHz·V²).
+    pub mem_coeff: f64,
+    /// Static/leakage power, W.
+    pub static_w: f64,
+}
+
+impl PowerModel {
+    /// Calibrated so the default GTX 980 lands near its 165 W TDP at
+    /// 1000/1000 and ~60 W at 400/400.
+    pub fn gtx980() -> Self {
+        PowerModel {
+            core_curve: VfCurve::maxwell_core(),
+            mem_curve: VfCurve::gddr5_mem(),
+            core_coeff: 0.072,
+            mem_coeff: 0.018,
+            static_w: 22.0,
+        }
+    }
+
+    /// Board power at a frequency pair, watts.
+    pub fn power_w(&self, core_mhz: f64, mem_mhz: f64) -> f64 {
+        let vc = self.core_curve.volts(core_mhz);
+        let vm = self.mem_curve.volts(mem_mhz);
+        self.static_w + self.core_coeff * core_mhz * vc * vc + self.mem_coeff * mem_mhz * vm * vm
+    }
+}
+
+/// One evaluated DVFS configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct ConfigPoint {
+    pub core_mhz: f64,
+    pub mem_mhz: f64,
+    pub time_us: f64,
+    pub power_w: f64,
+    /// Energy in millijoules.
+    pub energy_mj: f64,
+    /// Energy-delay product (mJ·µs).
+    pub edp: f64,
+}
+
+/// What the advisor optimizes.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Objective {
+    /// Minimum energy.
+    Energy,
+    /// Minimum energy subject to `time <= (1 + slack) * t_fastest`.
+    EnergyWithSlack(f64),
+    /// Minimum energy-delay product.
+    Edp,
+}
+
+/// Evaluate every pair and pick the best per `objective`.
+pub fn advise(
+    counters: &KernelCounters,
+    predictor: &dyn Predictor,
+    power: &PowerModel,
+    pairs: &[(f64, f64)],
+    objective: Objective,
+) -> (ConfigPoint, Vec<ConfigPoint>) {
+    assert!(!pairs.is_empty());
+    let points: Vec<ConfigPoint> = pairs
+        .iter()
+        .map(|&(cf, mf)| {
+            let time_us = predictor.predict_us(counters, cf, mf);
+            let power_w = power.power_w(cf, mf);
+            let energy_mj = power_w * time_us * 1e-3; // W·µs = µJ; /1e3 = mJ
+            ConfigPoint { core_mhz: cf, mem_mhz: mf, time_us, power_w, energy_mj, edp: energy_mj * time_us }
+        })
+        .collect();
+    let t_fastest = points.iter().map(|p| p.time_us).fold(f64::INFINITY, f64::min);
+    let feasible = |p: &&ConfigPoint| match objective {
+        Objective::EnergyWithSlack(s) => p.time_us <= (1.0 + s) * t_fastest,
+        _ => true,
+    };
+    let key = |p: &ConfigPoint| match objective {
+        Objective::Edp => p.edp,
+        _ => p.energy_mj,
+    };
+    let best = *points
+        .iter()
+        .filter(feasible)
+        .min_by(|a, b| key(a).total_cmp(&key(b)))
+        .expect("at least the fastest point is feasible");
+    (best, points)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::PaperModel;
+    use crate::model::HwParams;
+
+    fn counters_membound() -> KernelCounters {
+        KernelCounters {
+            l2_hr: 0.0,
+            gld_trans: 12.0,
+            avr_inst: 0.4,
+            n_blocks: 256.0,
+            wpb: 8.0,
+            aw: 64.0,
+            n_sm: 16.0,
+            o_itrs: 8.0,
+            i_itrs: 0.0,
+            uses_smem: false,
+            smem_conflict: 1.0,
+            gld_body: 12.0,
+            gld_edge: 0.0,
+            mem_ops: 3.0,
+            l1_hr: 0.0,
+        }
+    }
+
+    fn counters_compbound() -> KernelCounters {
+        KernelCounters { avr_inst: 100.0, l2_hr: 0.9, gld_trans: 2.0, ..counters_membound() }
+    }
+
+    fn grid() -> Vec<(f64, f64)> {
+        crate::microbench::standard_grid()
+    }
+
+    #[test]
+    fn vf_curve_interpolates_and_clamps() {
+        let c = VfCurve::maxwell_core();
+        assert_eq!(c.volts(300.0), 0.85);
+        assert_eq!(c.volts(1200.0), 1.2125);
+        let v = c.volts(500.0);
+        assert!(v > 0.85 && v < 0.95);
+        assert!((c.volts(600.0) - 0.95).abs() < 1e-12);
+    }
+
+    #[test]
+    fn power_monotone_in_both_domains() {
+        let p = PowerModel::gtx980();
+        assert!(p.power_w(1000.0, 700.0) > p.power_w(400.0, 700.0));
+        assert!(p.power_w(700.0, 1000.0) > p.power_w(700.0, 400.0));
+        // TDP-ish ballpark.
+        let tdp = p.power_w(1000.0, 1000.0);
+        assert!(tdp > 120.0 && tdp < 200.0, "{tdp}");
+        assert!(p.power_w(400.0, 400.0) < 80.0);
+    }
+
+    #[test]
+    fn membound_kernel_prefers_low_core_high_mem() {
+        // The paper's motivation: for a DRAM-bound kernel, raising core
+        // frequency burns power without speedup — the energy optimum
+        // sits at low core, high memory.
+        let (best, _) = advise(
+            &counters_membound(),
+            &PaperModel { hw: HwParams::paper_defaults() },
+            &PowerModel::gtx980(),
+            &grid(),
+            Objective::Energy,
+        );
+        assert!(best.core_mhz <= 500.0, "core {}", best.core_mhz);
+        assert!(best.mem_mhz >= 800.0, "mem {}", best.mem_mhz);
+    }
+
+    #[test]
+    fn compbound_kernel_keeps_memory_low() {
+        let (best, _) = advise(
+            &counters_compbound(),
+            &PaperModel { hw: HwParams::paper_defaults() },
+            &PowerModel::gtx980(),
+            &grid(),
+            Objective::Energy,
+        );
+        assert!(best.mem_mhz <= 500.0, "mem {}", best.mem_mhz);
+    }
+
+    #[test]
+    fn slack_constraint_binds() {
+        let model = PaperModel { hw: HwParams::paper_defaults() };
+        let power = PowerModel::gtx980();
+        let c = counters_membound();
+        let (unconstrained, points) = advise(&c, &model, &power, &grid(), Objective::Energy);
+        let (tight, _) = advise(&c, &model, &power, &grid(), Objective::EnergyWithSlack(0.05));
+        let t_fast = points.iter().map(|p| p.time_us).fold(f64::INFINITY, f64::min);
+        assert!(tight.time_us <= 1.05 * t_fast + 1e-9);
+        assert!(tight.energy_mj >= unconstrained.energy_mj - 1e-12);
+    }
+
+    #[test]
+    fn edp_objective_differs_from_energy() {
+        let model = PaperModel { hw: HwParams::paper_defaults() };
+        let power = PowerModel::gtx980();
+        let c = counters_membound();
+        let (e, points) = advise(&c, &model, &power, &grid(), Objective::Energy);
+        let (d, _) = advise(&c, &model, &power, &grid(), Objective::Edp);
+        // EDP never has larger EDP than the energy optimum's EDP.
+        assert!(d.edp <= e.edp + 1e-12);
+        assert_eq!(points.len(), 49);
+    }
+}

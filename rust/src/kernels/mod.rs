@@ -1,0 +1,495 @@
+//! The paper's Table VI workloads as parametric trace generators.
+//!
+//! Each constructor builds a `sim::Kernel` whose per-warp program mimics
+//! the access pattern and instruction mix of the corresponding CUDA SDK
+//! 6.5 kernel (DESIGN.md §2 substitution table). Table VI lists eleven
+//! applications; the paper's §VI says "12 kernels" — we add `reduction`
+//! (discussed in §V-B of the paper) as the twelfth and note the
+//! discrepancy here.
+//!
+//! The set deliberately spans the four execution patterns the paper
+//! calls out: DRAM-intensive (VA, BS, TR, SP, convSp), L2-intensive
+//! (MMG, FWT, CG), shared-memory-intensive (MMS, SC, SN, RD) and
+//! computation-intensive (MMG, BS).
+
+use crate::sim::isa::{Addressing, Kernel, Launch, MemPat, Op, Program};
+
+/// Address regions, one per logical buffer, so kernels never alias.
+mod region {
+    pub const IN_A: u8 = 1;
+    pub const IN_B: u8 = 2;
+    pub const OUT_C: u8 = 3;
+    pub const OUT_D: u8 = 4;
+    pub const TABLE: u8 = 5;
+}
+
+/// vectorAdd (VA): pure streaming, one add per element.
+/// `c[i] = a[i] + b[i]` over a grid-stride loop.
+pub fn vector_add() -> Kernel {
+    Kernel::new(
+        "VA",
+        Launch::new(256, 256),
+        Program {
+            prologue: vec![],
+            body: vec![
+                Op::Load(MemPat::new(4, Addressing::OwnLinear, region::IN_A)),
+                Op::Load(MemPat::new(4, Addressing::OwnLinear, region::IN_B)),
+                Op::Compute(4),
+                Op::Store(MemPat::new(4, Addressing::OwnLinear, region::OUT_C)),
+            ],
+            o_itrs: 8,
+            epilogue: vec![],
+        },
+    )
+}
+
+/// BlackScholes (BS): streaming with a fat arithmetic tail (CNDF etc.)
+/// — still DRAM-sensitive on real hardware (paper Fig. 2).
+pub fn black_scholes() -> Kernel {
+    Kernel::new(
+        "BS",
+        Launch::new(256, 128),
+        Program {
+            prologue: vec![],
+            body: vec![
+                Op::Load(MemPat::new(4, Addressing::OwnLinear, region::IN_A)),
+                Op::Load(MemPat::new(4, Addressing::OwnLinear, region::IN_B)),
+                Op::Compute(48),
+                Op::Store(MemPat::new(4, Addressing::OwnLinear, region::OUT_C)),
+                Op::Store(MemPat::new(4, Addressing::OwnLinear, region::OUT_D)),
+            ],
+            o_itrs: 8,
+            epilogue: vec![],
+        },
+    )
+}
+
+/// transpose (TR, coalesced shared-memory version): coalesced read,
+/// staging tile in smem, coalesced write of the transposed tile.
+/// Shared traffic is tiny → the paper's "smem-light" case (Eq. 17).
+pub fn transpose() -> Kernel {
+    let mut launch = Launch::new(256, 256);
+    launch.smem_per_block = 33 * 32 * 4; // 32x32 tile + padding column
+    Kernel::new(
+        "TR",
+        launch,
+        Program {
+            prologue: vec![],
+            body: vec![
+                Op::Load(MemPat::new(4, Addressing::OwnLinear, region::IN_A)),
+                Op::SharedStore { conflict: 1 },
+                Op::Sync,
+                Op::SharedLoad { conflict: 1 },
+                Op::Store(MemPat::new(4, Addressing::OwnStrided { stride: 97 }, region::OUT_C)),
+            ],
+            o_itrs: 4,
+            epilogue: vec![],
+        },
+    )
+}
+
+/// matrixMul global-memory version (MMG): per iteration one A element
+/// (block-broadcast) and one B element (walked identically by every
+/// block → very high L2 hit rate, the paper reports 97.5%) plus the FMA
+/// chain. Compute-leaning but sensitive to both clocks.
+pub fn matrix_mul_global() -> Kernel {
+    Kernel::new(
+        "MMG",
+        Launch::new(128, 128),
+        Program {
+            prologue: vec![],
+            body: vec![
+                Op::Load(MemPat::new(1, Addressing::BlockShared, region::IN_A)),
+                Op::Load(MemPat::new(1, Addressing::GridShared, region::IN_B)),
+                Op::Compute(6),
+            ],
+            o_itrs: 128,
+            epilogue: vec![Op::Store(MemPat::new(4, Addressing::OwnLinear, region::OUT_C))],
+        },
+    )
+}
+
+/// matrixMul shared-memory version (MMS): the paper's worked example of
+/// the smem-intensive case (Fig. 11 / Eqs. 18-21): tile loads, barrier,
+/// a dozen-plus smem reads feeding FMAs, barrier, next tile.
+pub fn matrix_mul_shared() -> Kernel {
+    let mut launch = Launch::new(128, 256);
+    launch.smem_per_block = 2 * 16 * 16 * 4; // As + Bs tiles
+    let mut body = vec![
+        // A tile: broadcast within the block (high L2 reuse). B tile:
+        // column-dependent working set larger than L2 (~25% hit), which
+        // is what gives MMS its residual memory-frequency sensitivity at
+        // high core clocks (paper Fig. 2b).
+        Op::Load(MemPat::new(4, Addressing::BlockShared, region::IN_A)),
+        Op::Load(MemPat::new(4, Addressing::Random { lines: 262144 }, region::IN_B)),
+        Op::Sync,
+    ];
+    for _ in 0..16 {
+        body.push(Op::SharedLoad { conflict: 1 });
+        body.push(Op::SharedLoad { conflict: 1 });
+        body.push(Op::Compute(4));
+    }
+    body.push(Op::Sync);
+    Kernel::new(
+        "MMS",
+        launch,
+        Program {
+            prologue: vec![],
+            body,
+            o_itrs: 8,
+            epilogue: vec![Op::Store(MemPat::new(4, Addressing::OwnLinear, region::OUT_C))],
+        },
+    )
+}
+
+/// conjugateGradient (CG): SpMV-dominated — irregular gathers over a
+/// matrix too big for L2 (≈50% hit) plus a hot x-vector.
+pub fn conjugate_gradient() -> Kernel {
+    Kernel::new(
+        "CG",
+        Launch::new(128, 128),
+        Program {
+            prologue: vec![],
+            body: vec![
+                Op::Load(MemPat::new(4, Addressing::Random { lines: 131072 }, region::IN_A)),
+                Op::Load(MemPat::new(1, Addressing::Hot { lines: 4096 }, region::TABLE)),
+                Op::Compute(10),
+            ],
+            o_itrs: 32,
+            epilogue: vec![Op::Store(MemPat::new(4, Addressing::OwnLinear, region::OUT_C))],
+        },
+    )
+}
+
+/// fastWalshTransform (FWT): butterfly passes with strided
+/// read-modify-write — the store hits the line the load just brought in,
+/// so L2 sits near 50%.
+pub fn fast_walsh() -> Kernel {
+    Kernel::new(
+        "FWT",
+        Launch::new(128, 256),
+        Program {
+            prologue: vec![],
+            body: vec![
+                Op::Load(
+                    MemPat::new(4, Addressing::OwnStrided { stride: 65 }, region::IN_A)
+                        .with_alias(0),
+                ),
+                Op::Compute(6),
+                // In-place butterfly: the store writes the lines the load
+                // just brought in (same alias), so it hits L2.
+                Op::Store(
+                    MemPat::new(4, Addressing::OwnStrided { stride: 65 }, region::IN_A)
+                        .with_alias(0),
+                ),
+            ],
+            o_itrs: 8,
+            epilogue: vec![],
+        },
+    )
+}
+
+/// scan (SC): work-efficient smem tree (up-sweep/down-sweep): one global
+/// load in, log2(block) smem passes with 2-way conflicts, one store out.
+pub fn scan() -> Kernel {
+    let mut launch = Launch::new(128, 256);
+    launch.smem_per_block = 2 * 256 * 4;
+    Kernel::new(
+        "SC",
+        launch,
+        Program {
+            prologue: vec![
+                Op::Load(MemPat::new(4, Addressing::OwnLinear, region::IN_A)),
+                Op::SharedStore { conflict: 1 },
+                Op::Sync,
+            ],
+            body: vec![
+                Op::SharedLoad { conflict: 2 },
+                Op::SharedStore { conflict: 2 },
+                Op::Compute(2),
+                Op::Sync,
+            ],
+            o_itrs: 8,
+            epilogue: vec![
+                Op::SharedLoad { conflict: 1 },
+                Op::Store(MemPat::new(4, Addressing::OwnLinear, region::OUT_C)),
+            ],
+        },
+    )
+}
+
+/// sortingNetworks (SN, bitonic sort): many smem compare-exchange
+/// stages; almost no global traffic → strongly core-frequency bound.
+pub fn sorting_networks() -> Kernel {
+    let mut launch = Launch::new(128, 128);
+    launch.smem_per_block = 2 * 128 * 4;
+    Kernel::new(
+        "SN",
+        launch,
+        Program {
+            prologue: vec![
+                Op::Load(MemPat::new(4, Addressing::OwnLinear, region::IN_A)),
+                Op::SharedStore { conflict: 1 },
+                Op::Sync,
+            ],
+            body: vec![
+                Op::SharedLoad { conflict: 2 },
+                Op::Compute(6),
+                Op::SharedStore { conflict: 2 },
+                Op::Sync,
+            ],
+            o_itrs: 28, // sum of bitonic stages for 2^7 elements
+            epilogue: vec![Op::Store(MemPat::new(4, Addressing::OwnLinear, region::OUT_C))],
+        },
+    )
+}
+
+/// scalarProd (SP): dot products over streamed pairs with a short smem
+/// reduction tail — memory-sensitive despite touching smem.
+pub fn scalar_prod() -> Kernel {
+    let mut launch = Launch::new(128, 256);
+    launch.smem_per_block = 256 * 4;
+    Kernel::new(
+        "SP",
+        launch,
+        Program {
+            prologue: vec![],
+            body: vec![
+                Op::Load(MemPat::new(4, Addressing::OwnLinear, region::IN_A)),
+                Op::Load(MemPat::new(4, Addressing::OwnLinear, region::IN_B)),
+                Op::Compute(4),
+            ],
+            o_itrs: 16,
+            epilogue: vec![
+                Op::SharedStore { conflict: 1 },
+                Op::Sync,
+                Op::SharedLoad { conflict: 1 },
+                Op::Compute(2),
+                Op::Store(MemPat::new(1, Addressing::OwnLinear, region::OUT_C)),
+            ],
+        },
+    )
+}
+
+/// convolutionSeparable (convSp): halo load into smem, taps applied from
+/// smem, coalesced store. Global traffic dominates (paper: high DRAM
+/// transaction share, near-linear memory-frequency scaling).
+pub fn convolution_separable() -> Kernel {
+    let mut launch = Launch::new(256, 128);
+    launch.smem_per_block = 8 * 1024;
+    Kernel::new(
+        "convSp",
+        launch,
+        Program {
+            prologue: vec![],
+            body: vec![
+                Op::Load(MemPat::new(8, Addressing::OwnLinear, region::IN_A)),
+                Op::SharedStore { conflict: 1 },
+                Op::Sync,
+                Op::SharedLoad { conflict: 1 },
+                Op::Compute(8),
+                Op::SharedLoad { conflict: 1 },
+                Op::Compute(8),
+                Op::SharedLoad { conflict: 1 },
+                Op::Compute(8),
+                Op::SharedLoad { conflict: 1 },
+                Op::Compute(10),
+                Op::Store(MemPat::new(8, Addressing::OwnLinear, region::OUT_C)),
+            ],
+            o_itrs: 2,
+            epilogue: vec![],
+        },
+    )
+}
+
+/// reduction (RD): the twelfth kernel (paper §VI says 12; Table VI lists
+/// 11 — see module docs). Global gather then an smem tree.
+pub fn reduction() -> Kernel {
+    let mut launch = Launch::new(256, 256);
+    launch.smem_per_block = 256 * 4;
+    Kernel::new(
+        "RD",
+        launch,
+        Program {
+            prologue: vec![
+                Op::Load(MemPat::new(8, Addressing::OwnLinear, region::IN_A)),
+                Op::Compute(4),
+                Op::SharedStore { conflict: 1 },
+                Op::Sync,
+            ],
+            body: vec![
+                Op::SharedLoad { conflict: 2 },
+                Op::Compute(2),
+                Op::SharedStore { conflict: 2 },
+                Op::Sync,
+            ],
+            o_itrs: 8, // log2(256)
+            epilogue: vec![Op::Store(MemPat::new(1, Addressing::OwnLinear, region::OUT_C))],
+        },
+    )
+}
+
+/// texture-filtering kernel (TEX) — an *extension* kernel exercising
+/// the texture/L1 path the paper's §VII lists as future work ("does
+/// not take texture/L1 cache into account, which may introduce larger
+/// error"). Not part of the 12-kernel validation suite; used by the
+/// `ablation_l1` experiment to quantify exactly that error and the
+/// L1-extended model that repairs it.
+pub fn texture_filter() -> Kernel {
+    Kernel::new(
+        "TEX",
+        Launch::new(128, 256),
+        Program {
+            prologue: vec![],
+            body: vec![
+                // Bilinear taps over a hot texture window: strong
+                // temporal locality, absorbed by the per-SM L1.
+                Op::Load(MemPat::new(4, Addressing::Hot { lines: 512 }, region::TABLE).through_l1()),
+                Op::Compute(6),
+                Op::Store(MemPat::new(4, Addressing::OwnLinear, region::OUT_C)),
+            ],
+            o_itrs: 16,
+            epilogue: vec![],
+        },
+    )
+}
+
+/// All twelve benchmark kernels, in the paper's Table VI order plus RD.
+pub fn all() -> Vec<Kernel> {
+    vec![
+        black_scholes(),
+        conjugate_gradient(),
+        fast_walsh(),
+        matrix_mul_global(),
+        matrix_mul_shared(),
+        scan(),
+        sorting_networks(),
+        scalar_prod(),
+        transpose(),
+        vector_add(),
+        convolution_separable(),
+        reduction(),
+    ]
+}
+
+/// Look a kernel up by its Table VI abbreviation (plus the TEX
+/// extension kernel).
+pub fn by_name(name: &str) -> Option<Kernel> {
+    if name == "TEX" {
+        return Some(texture_filter());
+    }
+    all().into_iter().find(|k| k.name == name)
+}
+
+/// The six kernels of the paper's Fig. 2 motivation study.
+pub fn fig2_set() -> Vec<Kernel> {
+    ["TR", "BS", "VA", "convSp", "MMG", "MMS"]
+        .iter()
+        .map(|n| by_name(n).unwrap())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{engine::simulate, Clocks, GpuSpec};
+
+    #[test]
+    fn twelve_kernels_with_unique_names() {
+        let ks = all();
+        assert_eq!(ks.len(), 12);
+        let mut names: Vec<_> = ks.iter().map(|k| k.name.clone()).collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), 12);
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert!(by_name("MMS").is_some());
+        assert!(by_name("nope").is_none());
+        assert_eq!(fig2_set().len(), 6);
+    }
+
+    #[test]
+    fn smem_flags_match_design() {
+        let smem_kernels = ["TR", "MMS", "SC", "SN", "SP", "convSp", "RD"];
+        for k in all() {
+            let want = smem_kernels.contains(&k.name.as_str());
+            assert_eq!(k.program.uses_smem(), want, "{}", k.name);
+        }
+    }
+
+    #[test]
+    fn all_kernels_simulate_to_completion() {
+        let spec = GpuSpec::default();
+        for k in all() {
+            let r = simulate(&spec, Clocks::new(700.0, 700.0), &k);
+            assert_eq!(r.stats.blocks_retired as u32, k.launch.blocks, "{}", k.name);
+            assert!(r.stats.elapsed_ns > 0.0, "{}", k.name);
+            assert!(r.stats.gl_txns > 0, "{}", k.name);
+        }
+    }
+
+    #[test]
+    fn mmg_has_high_l2_hit_rate() {
+        let spec = GpuSpec::default();
+        let r = simulate(&spec, Clocks::new(700.0, 700.0), &matrix_mul_global());
+        assert!(r.stats.l2_hit_rate() > 0.8, "hit rate {}", r.stats.l2_hit_rate());
+    }
+
+    #[test]
+    fn va_has_negligible_l2_hit_rate() {
+        let spec = GpuSpec::default();
+        let r = simulate(&spec, Clocks::new(700.0, 700.0), &vector_add());
+        assert!(r.stats.l2_hit_rate() < 0.05, "hit rate {}", r.stats.l2_hit_rate());
+    }
+
+    #[test]
+    fn fwt_rmw_hits_about_half() {
+        let spec = GpuSpec::default();
+        let r = simulate(&spec, Clocks::new(700.0, 700.0), &fast_walsh());
+        let hr = r.stats.l2_hit_rate();
+        assert!(hr > 0.3 && hr < 0.7, "hit rate {hr}");
+    }
+
+    #[test]
+    fn memory_bound_kernels_scale_with_mem_freq() {
+        let spec = GpuSpec::default();
+        for k in [vector_add(), black_scholes()] {
+            let slow = simulate(&spec, Clocks::new(1000.0, 400.0), &k);
+            let fast = simulate(&spec, Clocks::new(1000.0, 1000.0), &k);
+            let sp = slow.stats.elapsed_ns / fast.stats.elapsed_ns;
+            assert!(sp > 1.8, "{}: speedup {sp}", k.name);
+        }
+    }
+
+    #[test]
+    fn core_bound_kernels_scale_with_core_freq() {
+        let spec = GpuSpec::default();
+        for k in [matrix_mul_shared(), sorting_networks()] {
+            let slow = simulate(&spec, Clocks::new(400.0, 1000.0), &k);
+            let fast = simulate(&spec, Clocks::new(1000.0, 1000.0), &k);
+            let sp = slow.stats.elapsed_ns / fast.stats.elapsed_ns;
+            assert!(sp > 1.8, "{}: speedup {sp}", k.name);
+            let a = simulate(&spec, Clocks::new(1000.0, 400.0), &k);
+            let memsp = a.stats.elapsed_ns / fast.stats.elapsed_ns;
+            assert!(memsp < 1.5, "{}: mem sensitivity {memsp}", k.name);
+        }
+    }
+
+    #[test]
+    fn mms_sensitive_to_both_frequencies() {
+        // Paper Fig. 2: at high core frequency MMS gains from memory
+        // frequency; at low core frequency it barely does.
+        let spec = GpuSpec::default();
+        let k = matrix_mul_shared();
+        let base = simulate(&spec, Clocks::new(1000.0, 1000.0), &k);
+        let low_mem = simulate(&spec, Clocks::new(1000.0, 400.0), &k);
+        let low_core = simulate(&spec, Clocks::new(400.0, 1000.0), &k);
+        let mem_sens = low_mem.stats.elapsed_ns / base.stats.elapsed_ns;
+        let core_sens = low_core.stats.elapsed_ns / base.stats.elapsed_ns;
+        assert!(mem_sens > 1.1, "mem sensitivity {mem_sens}");
+        assert!(core_sens > 1.5, "core sensitivity {core_sens}");
+    }
+}

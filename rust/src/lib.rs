@@ -1,0 +1,28 @@
+//! Reproduction of "GPGPU Performance Estimation with Core and Memory
+//! Frequency Scaling" (Wang & Chu, 2017).
+//!
+//! Architecture (DESIGN.md):
+//! * [`sim`] — `gpusim`, the dual-clock GPU timing simulator (ground truth)
+//! * [`kernels`] — the paper's Table VI workloads as trace generators
+//! * [`microbench`] — §IV hardware-parameter extraction on the simulator
+//! * [`profiler`] — one-shot baseline counter collection (Nsight stand-in)
+//! * [`model`] — the analytical model, Eqs. (2)–(21), scalar reference
+//! * [`baselines`] — const-latency / linear-freq / MWP-CWP-lite ablations
+//! * [`runtime`] — PJRT loader/executor for the AOT JAX/Pallas artifacts
+//! * [`coordinator`] — sweep orchestration, validation, request batching
+//! * [`dvfs`] — power model + energy-conservation advisor (paper §VII)
+//! * [`config`] — TOML-subset config system (Table V)
+//! * [`report`] — table/figure emitters for every paper artifact
+pub mod baselines;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod dvfs;
+pub mod kernels;
+pub mod microbench;
+pub mod model;
+pub mod profiler;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod util;

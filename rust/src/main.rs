@@ -1,0 +1,21 @@
+//! `gpufreq` launcher: the L3 leader entrypoint.
+
+use gpufreq::cli;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = match cli::parse_args(&argv) {
+        Ok(args) => match cli::run(args) {
+            Ok(code) => code,
+            Err(e) => {
+                eprintln!("error: {e:#}");
+                1
+            }
+        },
+        Err(e) => {
+            eprintln!("error: {e:#}\n\n{}", cli::USAGE);
+            2
+        }
+    };
+    std::process::exit(code);
+}

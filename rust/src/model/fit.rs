@@ -1,0 +1,79 @@
+//! Least-squares fit of the paper's Eq. (4) from micro-benchmark
+//! samples, with R² — the Rust twin of `model.fit_dm_lat` in the AOT
+//! path (cross-checked by an integration test).
+
+/// Result of fitting `lat = a * ratio + b`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LineFit {
+    pub slope: f64,
+    pub intercept: f64,
+    pub r_squared: f64,
+}
+
+/// Ordinary least squares over (ratio, latency) samples.
+///
+/// Panics if fewer than two samples or zero variance in x.
+pub fn fit_line(xs: &[f64], ys: &[f64]) -> LineFit {
+    assert_eq!(xs.len(), ys.len());
+    assert!(xs.len() >= 2, "need at least two samples");
+    let n = xs.len() as f64;
+    let xm = xs.iter().sum::<f64>() / n;
+    let ym = ys.iter().sum::<f64>() / n;
+    let sxx: f64 = xs.iter().map(|x| (x - xm) * (x - xm)).sum();
+    assert!(sxx > 0.0, "x has zero variance");
+    let sxy: f64 = xs.iter().zip(ys).map(|(x, y)| (x - xm) * (y - ym)).sum();
+    let slope = sxy / sxx;
+    let intercept = ym - slope * xm;
+    let ss_res: f64 = xs
+        .iter()
+        .zip(ys)
+        .map(|(x, y)| {
+            let e = y - (slope * x + intercept);
+            e * e
+        })
+        .sum();
+    let ss_tot: f64 = ys.iter().map(|y| (y - ym) * (y - ym)).sum();
+    let r_squared = if ss_tot == 0.0 { 1.0 } else { 1.0 - ss_res / ss_tot };
+    LineFit { slope, intercept, r_squared }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_line_recovered() {
+        let xs: Vec<f64> = (1..50).map(|i| 0.4 + i as f64 * 0.05).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 222.78 * x + 277.32).collect();
+        let f = fit_line(&xs, &ys);
+        assert!((f.slope - 222.78).abs() < 1e-9);
+        assert!((f.intercept - 277.32).abs() < 1e-9);
+        assert!((f.r_squared - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn noise_lowers_r2() {
+        let xs: Vec<f64> = (0..49).map(|i| 0.4 + i as f64 * 0.045).collect();
+        // Deterministic pseudo-noise.
+        let ys: Vec<f64> = xs
+            .iter()
+            .enumerate()
+            .map(|(i, x)| 222.78 * x + 277.32 + ((i * 2654435761) % 17) as f64 - 8.0)
+            .collect();
+        let f = fit_line(&xs, &ys);
+        assert!(f.r_squared > 0.98 && f.r_squared < 1.0, "{}", f.r_squared);
+        assert!((f.slope - 222.78).abs() < 15.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_single_sample() {
+        fit_line(&[1.0], &[2.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_zero_variance() {
+        fit_line(&[1.0, 1.0], &[2.0, 3.0]);
+    }
+}

@@ -1,0 +1,175 @@
+//! Model parameters (the paper's Table IV), plus packing into the
+//! feature layout the AOT Pallas artifact expects.
+//!
+//! The feature/parameter column order is the contract with
+//! `python/compile/kernels/ref.py` (`F_*` / `H_*` constants) and is
+//! additionally carried in `artifacts/manifest.json`.
+
+/// Hardware parameters, extracted once by micro-benchmarks (§IV).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HwParams {
+    /// Eq. (4) slope: memory-clocked DRAM segment, core cycles per cf/mf.
+    pub dm_lat_a: f64,
+    /// Eq. (4) intercept: core-clocked path segment, core cycles.
+    pub dm_lat_b: f64,
+    /// DRAM service per transaction (per-SM channel), memory cycles.
+    pub dm_del: f64,
+    /// L2 hit latency, core cycles.
+    pub l2_lat: f64,
+    /// L2 service per transaction, core cycles.
+    pub l2_del: f64,
+    /// Shared-memory latency, core cycles.
+    pub sh_lat: f64,
+    /// Cycles per compute instruction (`inst_cycle`, Table IV).
+    pub inst_cycle: f64,
+}
+
+impl HwParams {
+    /// The constants the paper reports for its GTX 980 (Eq. 4, §IV-B/C),
+    /// which are also the defaults `GpuSpec` is calibrated to.
+    pub fn paper_defaults() -> Self {
+        HwParams {
+            dm_lat_a: 222.78,
+            dm_lat_b: 277.32,
+            dm_del: 9.0,
+            l2_lat: 222.0,
+            l2_del: 1.0,
+            sh_lat: 28.0,
+            inst_cycle: 2.0,
+        }
+    }
+
+    /// Pack into the artifact's (7,) f32 layout (ref.py `H_*` order).
+    pub fn to_f32(&self) -> [f32; 7] {
+        [
+            self.dm_lat_a as f32,
+            self.dm_lat_b as f32,
+            self.dm_del as f32,
+            self.l2_lat as f32,
+            self.l2_del as f32,
+            self.sh_lat as f32,
+            self.inst_cycle as f32,
+        ]
+    }
+}
+
+/// Per-kernel performance counters, collected once at the baseline
+/// frequency by the profiler (the paper's Nsight pass, Table IV).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct KernelCounters {
+    /// L2 hit rate over all global transactions (`l2_hr`).
+    pub l2_hr: f64,
+    /// Global transactions per warp per outer iteration (`gld_trans`).
+    pub gld_trans: f64,
+    /// Compute instructions per global transaction (`avr_inst`, Eq. 7a).
+    pub avr_inst: f64,
+    /// `#B` total blocks.
+    pub n_blocks: f64,
+    /// `#Wpb` warps per block.
+    pub wpb: f64,
+    /// `#Aw` active warps per SM.
+    pub aw: f64,
+    /// `#SM` active SMs.
+    pub n_sm: f64,
+    /// First-level iterations per thread (`o_itrs`, source analysis).
+    pub o_itrs: f64,
+    /// Shared-memory transactions inside one iteration (`i_itrs`).
+    pub i_itrs: f64,
+    /// Whether the kernel touches shared memory (§V-B vs §V-A).
+    pub uses_smem: bool,
+    /// Average shared-memory bank-conflict degree (1 = conflict-free);
+    /// measured as smem bank transactions / smem accesses.
+    pub smem_conflict: f64,
+    /// Global transactions per warp per iteration issued *inside* the
+    /// body loop (source analysis, like `o_itrs`). Zero for tree-style
+    /// smem kernels whose global traffic is all prologue/epilogue.
+    pub gld_body: f64,
+    /// Global transactions per warp in prologue + epilogue combined.
+    pub gld_edge: f64,
+    /// Global-memory *instructions* (dependent ops) per warp per body
+    /// iteration. Each op exposes one full `agl_lat` when latency is not
+    /// hidden; transactions within an op pipeline through the LSU.
+    pub mem_ops: f64,
+    /// Texture/L1 hit rate over all global transactions. The published
+    /// model ignores it (paper §VII future work); only the
+    /// `L1ExtendedModel` consumes it. Not part of the 16-feature AOT
+    /// contract.
+    pub l1_hr: f64,
+}
+
+/// Number of feature columns in the AOT artifact (ref.py `N_FEATURES`).
+pub const N_FEATURES: usize = 16;
+/// Number of output columns (ref.py `N_OUTPUTS`).
+pub const N_OUTPUTS: usize = 4;
+/// Number of hardware-parameter entries (ref.py `N_HW_PARAMS`).
+pub const N_HW_PARAMS: usize = 7;
+
+impl KernelCounters {
+    /// Pack one (counters, frequency-pair) sample into the artifact's
+    /// (12,) f32 feature row (ref.py `F_*` order).
+    pub fn to_features(&self, core_mhz: f64, mem_mhz: f64) -> [f32; N_FEATURES] {
+        [
+            self.l2_hr as f32,
+            self.gld_trans as f32,
+            self.avr_inst as f32,
+            self.n_blocks as f32,
+            self.wpb as f32,
+            self.aw as f32,
+            self.n_sm as f32,
+            self.o_itrs as f32,
+            self.i_itrs as f32,
+            if self.uses_smem { 1.0 } else { 0.0 },
+            core_mhz as f32,
+            mem_mhz as f32,
+            self.smem_conflict as f32,
+            self.gld_body as f32,
+            self.gld_edge as f32,
+            self.mem_ops as f32,
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn packing_order_matches_ref_py() {
+        let c = KernelCounters {
+            l2_hr: 0.5,
+            gld_trans: 4.0,
+            avr_inst: 10.0,
+            n_blocks: 128.0,
+            wpb: 8.0,
+            aw: 32.0,
+            n_sm: 16.0,
+            o_itrs: 7.0,
+            i_itrs: 3.0,
+            uses_smem: true,
+            smem_conflict: 1.5,
+            gld_body: 3.5,
+            gld_edge: 4.5,
+            mem_ops: 2.0,
+            l1_hr: 0.0,
+        };
+        let f = c.to_features(700.0, 500.0);
+        assert_eq!(f.len(), N_FEATURES);
+        assert_eq!(f[0], 0.5); // F_L2_HR
+        assert_eq!(f[9], 1.0); // F_USES_SMEM
+        assert_eq!(f[10], 700.0); // F_CORE_F
+        assert_eq!(f[11], 500.0); // F_MEM_F
+        assert_eq!(f[12], 1.5); // F_SMEM_CONFLICT
+        assert_eq!(f[13], 3.5); // F_GLD_BODY
+        assert_eq!(f[14], 4.5); // F_GLD_EDGE
+        assert_eq!(f[15], 2.0); // F_MEM_OPS
+    }
+
+    #[test]
+    fn hw_packing() {
+        let h = HwParams::paper_defaults();
+        let v = h.to_f32();
+        assert_eq!(v[0], 222.78);
+        assert_eq!(v[1], 277.32);
+        assert_eq!(v[6], 2.0);
+    }
+}

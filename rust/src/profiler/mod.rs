@@ -1,0 +1,173 @@
+//! Profiler: the Nsight stand-in (DESIGN.md §2).
+//!
+//! Runs a kernel **once** at the baseline frequency and extracts the
+//! performance counters the model needs (paper Table IV: `l2_hr`,
+//! `gld_trans`, `comp_inst`→`avr_inst`, `#Aw`, `#Asm`) plus the
+//! launch-derived and source-derived quantities (`#B`, `#Wpb`,
+//! `o_itrs`, `i_itrs`). Exactly like the paper's methodology, this is a
+//! one-time collection: every other frequency point is *predicted*.
+
+use crate::model::KernelCounters;
+use crate::sim::engine::simulate;
+use crate::sim::isa::Kernel;
+use crate::sim::stats::InstMix;
+use crate::sim::{Clocks, GpuSpec};
+
+/// The paper's baseline frequency (§VI-A): 700 MHz for both domains.
+pub fn baseline_clocks() -> Clocks {
+    Clocks::new(700.0, 700.0)
+}
+
+/// Everything the one-time profiling pass produces for one kernel.
+#[derive(Debug, Clone)]
+pub struct Profile {
+    pub kernel: String,
+    pub counters: KernelCounters,
+    /// Dynamic instruction mix (Fig. 12).
+    pub mix: InstMix,
+    /// Ground-truth execution time at the baseline, microseconds.
+    pub baseline_time_us: f64,
+    /// Baseline clocks the counters were collected at.
+    pub baseline: Clocks,
+    /// Raw transaction totals, for reports.
+    pub gl_txns: u64,
+    pub dram_txns: u64,
+    pub smem_txns: u64,
+}
+
+/// Profile `kernel` on `spec` at `baseline`.
+pub fn profile_at(spec: &GpuSpec, kernel: &Kernel, baseline: Clocks) -> Profile {
+    let r = simulate(spec, baseline, kernel);
+    let warps = kernel.launch.total_warps() as f64;
+    let o_itrs = kernel.program.o_itrs.max(1) as f64;
+    let gl = r.stats.gl_txns.max(1) as f64;
+    let counters = KernelCounters {
+        l2_hr: r.stats.l2_hit_rate(),
+        gld_trans: gl / (warps * o_itrs),
+        avr_inst: r.stats.mix.compute as f64 / gl,
+        n_blocks: kernel.launch.blocks as f64,
+        wpb: kernel.launch.warps_per_block() as f64,
+        aw: r.active_warps as f64,
+        n_sm: r.stats.active_sms.max(1) as f64,
+        o_itrs,
+        i_itrs: kernel.program.smem_ops_per_iter() as f64,
+        uses_smem: kernel.program.uses_smem(),
+        smem_conflict: if r.stats.smem_accesses > 0 {
+            r.stats.smem_txns as f64 / r.stats.smem_accesses as f64
+        } else {
+            1.0
+        },
+        gld_body: kernel.program.gld_body_per_iter() as f64,
+        gld_edge: kernel.program.gld_edge() as f64,
+        mem_ops: kernel.program.mem_ops_per_iter() as f64,
+        l1_hr: r.stats.l1_hit_rate(),
+    };
+    Profile {
+        kernel: kernel.name.clone(),
+        counters,
+        mix: r.stats.mix,
+        baseline_time_us: r.stats.elapsed_ns / 1e3,
+        baseline,
+        gl_txns: r.stats.gl_txns,
+        dram_txns: r.stats.dram_txns,
+        smem_txns: r.stats.smem_txns,
+    }
+}
+
+/// Profile at the paper's 700/700 baseline.
+pub fn profile(spec: &GpuSpec, kernel: &Kernel) -> Profile {
+    profile_at(spec, kernel, baseline_clocks())
+}
+
+/// Instruction-mix fractions for the Fig. 12 breakdown.
+#[derive(Debug, Clone, Copy)]
+pub struct MixBreakdown {
+    pub compute: f64,
+    pub global: f64,
+    pub shared: f64,
+    pub sync: f64,
+}
+
+impl Profile {
+    pub fn mix_breakdown(&self) -> MixBreakdown {
+        let t = self.mix.total().max(1) as f64;
+        MixBreakdown {
+            compute: self.mix.compute as f64 / t,
+            global: (self.mix.global_ld + self.mix.global_st) as f64 / t,
+            shared: self.mix.shared as f64 / t,
+            sync: self.mix.sync as f64 / t,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels;
+
+    #[test]
+    fn baseline_is_700_700() {
+        let b = baseline_clocks();
+        assert_eq!(b.core_mhz, 700.0);
+        assert_eq!(b.mem_mhz, 700.0);
+    }
+
+    #[test]
+    fn profile_extracts_launch_shape() {
+        let spec = GpuSpec::default();
+        let k = kernels::vector_add();
+        let p = profile(&spec, &k);
+        assert_eq!(p.counters.n_blocks, 256.0);
+        assert_eq!(p.counters.wpb, 8.0);
+        assert_eq!(p.counters.o_itrs, 8.0);
+        assert!(!p.counters.uses_smem);
+        assert!(p.baseline_time_us > 0.0);
+    }
+
+    #[test]
+    fn va_counters_match_program() {
+        let spec = GpuSpec::default();
+        let p = profile(&spec, &kernels::vector_add());
+        // 12 transactions per warp per iteration (4+4 loads + 4 stores).
+        assert!((p.counters.gld_trans - 12.0).abs() < 1e-9);
+        // 4 compute instructions per 12 transactions.
+        assert!((p.counters.avr_inst - 4.0 / 12.0).abs() < 1e-9);
+        assert!(p.counters.l2_hr < 0.05);
+    }
+
+    #[test]
+    fn smem_kernel_flags() {
+        let spec = GpuSpec::default();
+        let p = profile(&spec, &kernels::matrix_mul_shared());
+        assert!(p.counters.uses_smem);
+        assert_eq!(p.counters.i_itrs, 32.0); // 16 x 2 smem loads per tile
+    }
+
+    #[test]
+    fn occupancy_counters() {
+        let spec = GpuSpec::default();
+        let p = profile(&spec, &kernels::vector_add());
+        assert_eq!(p.counters.aw, 64.0); // 8 wpb * 8 blocks/SM
+        assert_eq!(p.counters.n_sm, 16.0);
+    }
+
+    #[test]
+    fn mix_breakdown_sums_to_one() {
+        let spec = GpuSpec::default();
+        for k in kernels::all() {
+            let p = profile(&spec, &k);
+            let m = p.mix_breakdown();
+            let sum = m.compute + m.global + m.shared + m.sync;
+            assert!((sum - 1.0).abs() < 1e-9, "{}: {}", k.name, sum);
+        }
+    }
+
+    #[test]
+    fn profiling_is_one_shot_and_deterministic() {
+        let spec = GpuSpec::default();
+        let a = profile(&spec, &kernels::scan());
+        let b = profile(&spec, &kernels::scan());
+        assert_eq!(a.counters.l2_hr, b.counters.l2_hr);
+        assert_eq!(a.baseline_time_us, b.baseline_time_us);
+    }
+}

@@ -1,0 +1,142 @@
+//! Report emitters: one function per paper table/figure, producing both
+//! human-readable ASCII and machine-readable CSV (DESIGN.md §5 maps
+//! each experiment id to its emitter).
+
+pub mod tables;
+
+use std::fmt::Write as _;
+
+/// A simple column-aligned ASCII table builder.
+#[derive(Debug, Default, Clone)]
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    fn widths(&self) -> Vec<usize> {
+        let mut w: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        w
+    }
+
+    /// Render as aligned ASCII.
+    pub fn ascii(&self) -> String {
+        let w = self.widths();
+        let mut out = String::new();
+        let _ = writeln!(out, "{}", self.title);
+        let line: String =
+            w.iter().map(|n| "-".repeat(n + 2)).collect::<Vec<_>>().join("+");
+        let _ = writeln!(out, "+{line}+");
+        let fmt_row = |cells: &[String]| -> String {
+            let body = cells
+                .iter()
+                .zip(&w)
+                .map(|(c, n)| format!(" {c:>n$} "))
+                .collect::<Vec<_>>()
+                .join("|");
+            format!("|{body}|")
+        };
+        let _ = writeln!(out, "{}", fmt_row(&self.header));
+        let _ = writeln!(out, "+{line}+");
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", fmt_row(row));
+        }
+        let _ = writeln!(out, "+{line}+");
+        out
+    }
+
+    /// Render as CSV (header + rows).
+    pub fn csv(&self) -> String {
+        let esc = |s: &String| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.clone()
+            }
+        };
+        let mut out = String::new();
+        let _ = writeln!(out, "{}", self.header.iter().map(esc).collect::<Vec<_>>().join(","));
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", row.iter().map(esc).collect::<Vec<_>>().join(","));
+        }
+        out
+    }
+}
+
+/// An ASCII horizontal bar chart (for Fig. 14-style per-kernel bars).
+pub fn bar_chart(title: &str, items: &[(String, f64)], unit: &str, width: usize) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "{title}");
+    let max = items.iter().map(|(_, v)| *v).fold(0.0f64, f64::max).max(1e-12);
+    let name_w = items.iter().map(|(n, _)| n.len()).max().unwrap_or(4);
+    for (name, v) in items {
+        let n = ((v / max) * width as f64).round() as usize;
+        let _ = writeln!(out, "{name:>name_w$} | {:<width$} {v:.2}{unit}", "#".repeat(n));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("T", &["a", "bbbb"]);
+        t.row(vec!["1".into(), "2".into()]);
+        t.row(vec!["10".into(), "20000".into()]);
+        let s = t.ascii();
+        assert!(s.contains("T\n"));
+        assert!(s.lines().count() >= 6);
+        // All body lines same width.
+        let widths: Vec<usize> = s.lines().skip(1).map(|l| l.len()).collect();
+        assert!(widths.windows(2).all(|w| w[0] == w[1]));
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn row_arity_checked() {
+        Table::new("x", &["a", "b"]).row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn csv_escapes() {
+        let mut t = Table::new("T", &["a", "b"]);
+        t.row(vec!["x,y".into(), "q\"z".into()]);
+        let csv = t.csv();
+        assert!(csv.contains("\"x,y\""));
+        assert!(csv.contains("\"q\"\"z\""));
+    }
+
+    #[test]
+    fn bar_chart_scales() {
+        let s = bar_chart(
+            "B",
+            &[("k1".to_string(), 2.0), ("k2".to_string(), 4.0)],
+            "%",
+            10,
+        );
+        assert!(s.contains("##########")); // max bar is full width
+        assert!(s.contains("#####"));
+    }
+}

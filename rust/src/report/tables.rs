@@ -1,0 +1,335 @@
+//! Per-experiment emitters (DESIGN.md §5): each regenerates one table
+//! or figure from the paper, printing the same rows/series the paper
+//! reports.
+
+use crate::baselines::Predictor;
+use crate::coordinator::sweep::Sweep;
+use crate::coordinator::validate::Validation;
+use crate::microbench::{self, BandwidthProbe};
+use crate::profiler::Profile;
+use crate::sim::engine::{Engine, SampleCfg};
+use crate::sim::isa::{Addressing, Kernel, Launch, MemPat, Op, Program};
+use crate::sim::{Clocks, GpuSpec};
+
+use super::{bar_chart, Table};
+
+/// Table I: component → dominating frequency domain (static knowledge
+/// the simulator implements; emitted for completeness).
+pub fn table1() -> Table {
+    let mut t = Table::new(
+        "Table I: dominating frequency for different components",
+        &["Component", "Dominating frequency"],
+    );
+    for (c, f) in [
+        ("DRAM", "memory frequency"),
+        ("L2 Cache", "core frequency"),
+        ("Shared Memory", "core frequency"),
+        ("Texture Cache", "core frequency"),
+        ("Register", "core frequency"),
+    ] {
+        t.row(vec![c.into(), f.into()]);
+    }
+    t
+}
+
+/// Table II: minimum DRAM latency vs frequency, measured by the P-chase
+/// probe, plus the Eq. (4) fit line.
+pub fn table2(spec: &GpuSpec) -> (Table, String) {
+    let pairs: Vec<(f64, f64)> = (4..=10).map(|i| (i as f64 * 100.0, i as f64 * 100.0)).collect();
+    let mut t = Table::new(
+        "Table II: minimum DRAM latency under different frequencies (measured)",
+        &["Memory MHz", "Core MHz", "Cycles"],
+    );
+    for &(cf, mf) in &pairs {
+        let lat = microbench::dram_latency_probe(spec, Clocks::new(cf, mf));
+        t.row(vec![format!("{mf:.0}"), format!("{cf:.0}"), format!("{lat:.1}")]);
+    }
+    // Fit over the full 49-pair grid, like the paper's Eq. (4).
+    let (ratios, lats) = microbench::dm_lat_sweep(spec, &microbench::standard_grid());
+    let fit = crate::model::fit::fit_line(&ratios, &lats);
+    let note = format!(
+        "Eq. (4) fit: dm_lat = {:.2} * (core_f/mem_f) + {:.2}   (R^2 = {:.4}; paper: 222.78/277.32, R^2 0.9959)\n\
+         NOTE (DESIGN.md #2): the paper's printed Table II decreases along the equal-frequency diagonal,\n\
+         which contradicts its own Eq. (4); our substrate implements Eq. (4), so the diagonal is flat and\n\
+         the latency-vs-ratio behaviour (the quantity the model consumes) matches the paper's fit exactly.",
+        fit.slope, fit.intercept, fit.r_squared
+    );
+    (t, note)
+}
+
+/// Table III: DRAM read delay + bandwidth efficiency vs frequency.
+pub fn table3(spec: &GpuSpec) -> Table {
+    let mut t = Table::new(
+        "Table III: DRAM read delay under different frequencies (measured)",
+        &["Memory MHz", "Core MHz", "dm_del (mem cycles)", "Bandwidth efficiency"],
+    );
+    for i in 4..=10 {
+        let f = i as f64 * 100.0;
+        let bw: BandwidthProbe = microbench::bandwidth_probe(spec, Clocks::new(f, f));
+        t.row(vec![
+            format!("{f:.0}"),
+            format!("{f:.0}"),
+            format!("{:.2}", bw.dm_del_mem_cycles),
+            format!("{:.1}%", bw.efficiency * 100.0),
+        ]);
+    }
+    t
+}
+
+/// Fig. 2: speedup series for the six motivation kernels. `fixed_core`
+/// selects panels (a)/(b) (sweep memory) vs (c)/(d) (sweep core).
+pub fn fig2(sweep: &Sweep, kernels: &[Kernel], fixed_mhz: f64, sweep_memory: bool) -> Table {
+    let (title, sweep_label) = if sweep_memory {
+        (format!("Fig. 2: speedup vs memory frequency (core fixed at {fixed_mhz:.0} MHz)"), "Mem MHz")
+    } else {
+        (format!("Fig. 2: speedup vs core frequency (memory fixed at {fixed_mhz:.0} MHz)"), "Core MHz")
+    };
+    let mut header = vec![sweep_label.to_string()];
+    header.extend(kernels.iter().map(|k| k.name.clone()));
+    let mut t = Table { title, header: header.clone(), rows: Vec::new() };
+    for i in 4..=10 {
+        let f = i as f64 * 100.0;
+        let mut row = vec![format!("{f:.0}")];
+        for k in kernels {
+            let (from, to) = if sweep_memory {
+                ((fixed_mhz, 400.0), (fixed_mhz, f))
+            } else {
+                ((400.0, fixed_mhz), (f, fixed_mhz))
+            };
+            let sp = sweep.speedup(&k.name, from, to).unwrap_or(f64::NAN);
+            row.push(format!("{sp:.2}x"));
+        }
+        t.rows.push(row);
+    }
+    t
+}
+
+/// Fig. 5: per-warp memory latency under an intensive workload —
+/// (a) samples ordered by issue time, (b) latencies sorted ascending.
+pub fn fig5(spec: &GpuSpec, clocks: Clocks, max_samples: usize) -> (Table, Table) {
+    let kernel = Kernel::new(
+        "fig5-probe",
+        Launch::new(spec.n_sm * 4, 256),
+        Program {
+            prologue: vec![],
+            body: vec![Op::Load(MemPat::new(4, Addressing::OwnLinear, 9))],
+            o_itrs: 8,
+            epilogue: vec![],
+        },
+    );
+    let r = Engine::new(spec.clone(), clocks, &kernel)
+        .with_samples(SampleCfg { max_samples })
+        .run();
+    let mut samples = r.stats.latency_samples.clone();
+
+    samples.sort_by(|a, b| a.issue_ns.total_cmp(&b.issue_ns));
+    let mut by_issue = Table::new(
+        "Fig. 5a: first-request latency by issue order (cycles @ core clock)",
+        &["#", "warp", "issue (ns)", "latency (core cycles)"],
+    );
+    for (i, s) in samples.iter().enumerate().step_by((samples.len() / 32).max(1)) {
+        by_issue.row(vec![
+            format!("{i}"),
+            format!("{}", s.warp),
+            format!("{:.1}", s.issue_ns),
+            format!("{:.0}", s.latency_ns * clocks.core_mhz / 1e3),
+        ]);
+    }
+
+    samples.sort_by(|a, b| a.latency_ns.total_cmp(&b.latency_ns));
+    let mut sorted = Table::new(
+        "Fig. 5b: per-warp latency, ascending (queueing ramp)",
+        &["rank", "latency (core cycles)"],
+    );
+    for (i, s) in samples.iter().enumerate().step_by((samples.len() / 32).max(1)) {
+        sorted.row(vec![format!("{i}"), format!("{:.0}", s.latency_ns * clocks.core_mhz / 1e3)]);
+    }
+    (by_issue, sorted)
+}
+
+/// Fig. 12: instruction-type breakdown per kernel.
+pub fn fig12(profiles: &[Profile]) -> Table {
+    let mut t = Table::new(
+        "Fig. 12: breakdown of instruction types (dynamic, % of warp instructions)",
+        &["Kernel", "Compute", "Global", "Shared", "Sync"],
+    );
+    for p in profiles {
+        let m = p.mix_breakdown();
+        t.row(vec![
+            p.kernel.clone(),
+            format!("{:.1}%", m.compute * 100.0),
+            format!("{:.1}%", m.global * 100.0),
+            format!("{:.1}%", m.shared * 100.0),
+            format!("{:.1}%", m.sync * 100.0),
+        ]);
+    }
+    t
+}
+
+/// Fig. 13: signed prediction error while sweeping one domain with the
+/// other fixed (panels a-d of the paper).
+pub fn fig13(v: &Validation, fixed_core: Option<f64>, fixed_mem: Option<f64>) -> Table {
+    let (title, label) = match (fixed_core, fixed_mem) {
+        (Some(cf), None) => (format!("Fig. 13: error vs memory frequency (core = {cf:.0} MHz)"), "Mem MHz"),
+        (None, Some(mf)) => (format!("Fig. 13: error vs core frequency (memory = {mf:.0} MHz)"), "Core MHz"),
+        _ => panic!("fix exactly one domain"),
+    };
+    let mut header = vec![label.to_string()];
+    header.extend(v.per_kernel.iter().map(|k| k.kernel.clone()));
+    let mut t = Table { title, header, rows: Vec::new() };
+    for i in 4..=10 {
+        let f = i as f64 * 100.0;
+        let mut row = vec![format!("{f:.0}")];
+        for k in &v.per_kernel {
+            let p = k.points.iter().find(|p| match (fixed_core, fixed_mem) {
+                (Some(cf), None) => p.core_mhz == cf && p.mem_mhz == f,
+                (None, Some(mf)) => p.mem_mhz == mf && p.core_mhz == f,
+                _ => unreachable!(),
+            });
+            row.push(match p {
+                Some(p) => format!("{:+.1}%", p.signed_err() * 100.0),
+                None => "-".to_string(),
+            });
+        }
+        t.rows.push(row);
+    }
+    t
+}
+
+/// Fig. 14: per-kernel MAPE bars + the overall headline.
+pub fn fig14(v: &Validation) -> (String, Table) {
+    let items: Vec<(String, f64)> =
+        v.per_kernel.iter().map(|k| (k.kernel.clone(), k.mape() * 100.0)).collect();
+    let chart = bar_chart(
+        "Fig. 14: mean absolute percentage error across all frequency pairs",
+        &items,
+        "%",
+        48,
+    );
+    let mut t = Table::new("Fig. 14 summary", &["Metric", "Value", "Paper"]);
+    t.row(vec![
+        "overall MAPE".into(),
+        format!("{:.2}%", v.overall_mape() * 100.0),
+        "3.5%".into(),
+    ]);
+    t.row(vec![
+        "per-kernel MAPE range".into(),
+        format!(
+            "{:.1}% - {:.1}%",
+            items.iter().map(|(_, v)| *v).fold(f64::INFINITY, f64::min),
+            items.iter().map(|(_, v)| *v).fold(0.0, f64::max)
+        ),
+        "0.7% - 6.9%".into(),
+    ]);
+    t.row(vec![
+        "samples under 10% error".into(),
+        format!("{:.0}%", v.fraction_below(0.10) * 100.0),
+        "90%".into(),
+    ]);
+    t.row(vec![
+        "max single error".into(),
+        format!("{:.1}%", v.max_abs_err() * 100.0),
+        "<16%".into(),
+    ]);
+    (chart, t)
+}
+
+/// Table VI: the workload list.
+pub fn table6(kernels: &[Kernel]) -> Table {
+    let mut t = Table::new(
+        "Table VI: tested applications",
+        &["abbr.", "blocks", "threads/block", "o_itrs", "uses smem"],
+    );
+    for k in kernels {
+        t.row(vec![
+            k.name.clone(),
+            format!("{}", k.launch.blocks),
+            format!("{}", k.launch.threads_per_block),
+            format!("{}", k.program.o_itrs),
+            format!("{}", k.program.uses_smem()),
+        ]);
+    }
+    t
+}
+
+/// Ablation: MAPE per predictor (paper model vs baselines).
+pub fn ablation(rows: &[(String, f64, f64)]) -> Table {
+    let mut t = Table::new(
+        "Ablation: predictor MAPE over the full grid",
+        &["Predictor", "MAPE", "max error"],
+    );
+    for (name, mape, max) in rows {
+        t.row(vec![name.clone(), format!("{:.2}%", mape * 100.0), format!("{:.1}%", max * 100.0)]);
+    }
+    t
+}
+
+/// Predictor-vs-predictor convenience for the ablation bench/CLI.
+pub fn run_ablation(
+    spec: &GpuSpec,
+    kernels: &[Kernel],
+    predictors: &[Box<dyn Predictor>],
+    pairs: &[(f64, f64)],
+) -> Vec<(String, f64, f64)> {
+    predictors
+        .iter()
+        .map(|p| {
+            let v = crate::coordinator::validate::validate_with(spec, kernels, p.as_ref(), pairs);
+            (p.name().to_string(), v.overall_mape(), v.max_abs_err())
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels;
+    use crate::profiler;
+
+    #[test]
+    fn table1_is_static() {
+        let t = table1();
+        assert_eq!(t.rows.len(), 5);
+        assert!(t.ascii().contains("memory frequency"));
+    }
+
+    #[test]
+    fn table2_tracks_eq4_fit() {
+        let spec = GpuSpec::default();
+        let (t, note) = table2(&spec);
+        assert_eq!(t.rows.len(), 7);
+        assert!(note.contains("R^2"));
+    }
+
+    #[test]
+    fn fig5_produces_monotone_sorted_panel() {
+        let spec = GpuSpec::default();
+        let (a, b) = fig5(&spec, Clocks::new(700.0, 700.0), 512);
+        assert!(!a.rows.is_empty());
+        let lats: Vec<f64> =
+            b.rows.iter().map(|r| r[1].parse::<f64>().unwrap()).collect();
+        assert!(lats.windows(2).all(|w| w[0] <= w[1]));
+        // Queueing diversity: max latency well above the unloaded Eq. (4).
+        assert!(lats.last().unwrap() / lats.first().unwrap() > 1.5);
+    }
+
+    #[test]
+    fn fig12_covers_all_kernels() {
+        let spec = GpuSpec::default();
+        let profiles: Vec<_> =
+            kernels::all().iter().map(|k| profiler::profile(&spec, k)).collect();
+        let t = fig12(&profiles);
+        assert_eq!(t.rows.len(), 12);
+        // SN is smem-heavy; VA is global-heavy.
+        let sn = t.rows.iter().find(|r| r[0] == "SN").unwrap();
+        let va = t.rows.iter().find(|r| r[0] == "VA").unwrap();
+        let pct = |s: &str| s.trim_end_matches('%').parse::<f64>().unwrap();
+        assert!(pct(&sn[3]) > 20.0, "SN shared {}", sn[3]);
+        assert!(pct(&va[2]) > 35.0, "VA global {}", va[2]);
+    }
+
+    #[test]
+    fn table6_lists_twelve() {
+        assert_eq!(table6(&kernels::all()).rows.len(), 12);
+    }
+}

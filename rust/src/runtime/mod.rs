@@ -1,0 +1,228 @@
+//! PJRT runtime: load the AOT artifacts (HLO text lowered from JAX by
+//! `python/compile/aot.py`) and execute them on the CPU PJRT client.
+//!
+//! Python never runs here — the artifacts are self-contained HLO. The
+//! interchange format is HLO *text* (not serialized protos): jax ≥ 0.5
+//! emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the
+//! text parser reassigns ids (see /opt/xla-example/README.md).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::model::params::{N_FEATURES, N_HW_PARAMS, N_OUTPUTS};
+
+/// Batch size the predict artifact is specialized to (must match
+/// `python/compile/model.py::PREDICT_BATCH`; asserted via manifest).
+pub const PREDICT_BATCH: usize = 1024;
+/// Sample count the fit artifact is specialized to (`FIT_SAMPLES`).
+pub const FIT_SAMPLES: usize = 49;
+
+/// Artifact file names produced by `make artifacts`.
+pub const PREDICT_ARTIFACT: &str = "perf_model.hlo.txt";
+pub const FIT_ARTIFACT: &str = "fit_dm_lat.hlo.txt";
+
+/// Default artifacts directory relative to the crate root.
+pub fn default_artifacts_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// A PJRT CPU client with the two compiled model executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    predict_exe: xla::PjRtLoadedExecutable,
+    fit_exe: xla::PjRtLoadedExecutable,
+}
+
+fn compile(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(
+        path.to_str().context("artifact path is not UTF-8")?,
+    )
+    .with_context(|| format!("parsing HLO text {}", path.display()))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client
+        .compile(&comp)
+        .with_context(|| format!("compiling {}", path.display()))
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and compile both artifacts from `dir`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let predict_exe = compile(&client, &dir.join(PREDICT_ARTIFACT))?;
+        let fit_exe = compile(&client, &dir.join(FIT_ARTIFACT))?;
+        Ok(Runtime { client, predict_exe, fit_exe })
+    }
+
+    /// Load from the default `artifacts/` directory.
+    pub fn load_default() -> Result<Self> {
+        Self::load(&default_artifacts_dir())
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Execute one full batch: `features` is row-major
+    /// (PREDICT_BATCH, N_FEATURES); returns (PREDICT_BATCH, N_OUTPUTS)
+    /// row-major.
+    fn execute_batch(&self, features: &[f32], hw: &[f32; N_HW_PARAMS]) -> Result<Vec<f32>> {
+        debug_assert_eq!(features.len(), PREDICT_BATCH * N_FEATURES);
+        let f = xla::Literal::vec1(features)
+            .reshape(&[PREDICT_BATCH as i64, N_FEATURES as i64])
+            .context("reshaping feature literal")?;
+        let h = xla::Literal::vec1(hw.as_slice());
+        let result = self
+            .predict_exe
+            .execute::<xla::Literal>(&[f, h])
+            .context("executing perf_model")?[0][0]
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = result.to_tuple1().context("unwrapping result tuple")?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// Predict arbitrarily many feature rows, padding the tail chunk
+    /// with benign rows. Returns one `[t_active, t_exec, time_us,
+    /// regime]` array per input row.
+    pub fn predict(
+        &self,
+        rows: &[[f32; N_FEATURES]],
+        hw: &[f32; N_HW_PARAMS],
+    ) -> Result<Vec<[f32; N_OUTPUTS]>> {
+        let mut out = Vec::with_capacity(rows.len());
+        for chunk in rows.chunks(PREDICT_BATCH) {
+            let mut flat = vec![1.0f32; PREDICT_BATCH * N_FEATURES];
+            for (i, row) in chunk.iter().enumerate() {
+                flat[i * N_FEATURES..(i + 1) * N_FEATURES].copy_from_slice(row);
+            }
+            let res = self.execute_batch(&flat, hw)?;
+            for i in 0..chunk.len() {
+                let mut r = [0f32; N_OUTPUTS];
+                r.copy_from_slice(&res[i * N_OUTPUTS..(i + 1) * N_OUTPUTS]);
+                out.push(r);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Fit Eq. (4) from exactly `FIT_SAMPLES` (ratio, latency) samples
+    /// through the AOT fit artifact. Returns (slope, intercept, R²).
+    pub fn fit_dm_lat(&self, ratios: &[f32], lats: &[f32]) -> Result<(f64, f64, f64)> {
+        anyhow::ensure!(
+            ratios.len() == FIT_SAMPLES && lats.len() == FIT_SAMPLES,
+            "fit artifact is specialized to {FIT_SAMPLES} samples, got {}",
+            ratios.len()
+        );
+        let x = xla::Literal::vec1(ratios);
+        let y = xla::Literal::vec1(lats);
+        let result = self
+            .fit_exe
+            .execute::<xla::Literal>(&[x, y])
+            .context("executing fit_dm_lat")?[0][0]
+            .to_literal_sync()?;
+        let out = result.to_tuple1()?.to_vec::<f32>()?;
+        anyhow::ensure!(out.len() == 3, "fit output must be (3,)");
+        Ok((out[0] as f64, out[1] as f64, out[2] as f64))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // These tests require `make artifacts` to have run; the Makefile's
+    // `test` target guarantees that ordering.
+
+    #[test]
+    fn artifacts_compile_and_platform_is_cpu() {
+        let rt = Runtime::load_default().expect("artifacts present (run `make artifacts`)");
+        assert!(rt.platform().to_lowercase().contains("cpu"));
+    }
+
+    #[test]
+    fn predict_matches_native_model() {
+        use crate::model::{self, HwParams, KernelCounters};
+        let rt = Runtime::load_default().unwrap();
+        let hw = HwParams::paper_defaults();
+        let c = KernelCounters {
+            l2_hr: 0.3,
+            gld_trans: 8.0,
+            avr_inst: 2.5,
+            n_blocks: 256.0,
+            wpb: 8.0,
+            aw: 64.0,
+            n_sm: 16.0,
+            o_itrs: 8.0,
+            i_itrs: 0.0,
+            uses_smem: false,
+            smem_conflict: 1.0,
+            gld_body: 8.0,
+            gld_edge: 0.0,
+            mem_ops: 2.0,
+            l1_hr: 0.0,
+        };
+        let pairs = [(400.0, 1000.0), (700.0, 700.0), (1000.0, 400.0)];
+        let rows: Vec<_> = pairs.iter().map(|&(cf, mf)| c.to_features(cf, mf)).collect();
+        let got = rt.predict(&rows, &hw.to_f32()).unwrap();
+        for (g, &(cf, mf)) in got.iter().zip(&pairs) {
+            let want = model::predict(&c, &hw, cf, mf);
+            let rel = (g[2] as f64 - want.time_us).abs() / want.time_us;
+            assert!(rel < 1e-4, "pjrt {} vs native {} at ({cf},{mf})", g[2], want.time_us);
+            assert_eq!(g[3] as u32, want.regime as u32);
+        }
+    }
+
+    #[test]
+    fn predict_handles_multi_chunk_batches() {
+        use crate::model::{HwParams, KernelCounters};
+        let rt = Runtime::load_default().unwrap();
+        let hw = HwParams::paper_defaults().to_f32();
+        let c = KernelCounters {
+            l2_hr: 0.0,
+            gld_trans: 4.0,
+            avr_inst: 1.0,
+            n_blocks: 64.0,
+            wpb: 4.0,
+            aw: 32.0,
+            n_sm: 16.0,
+            o_itrs: 4.0,
+            i_itrs: 0.0,
+            uses_smem: false,
+            smem_conflict: 1.0,
+            gld_body: 4.0,
+            gld_edge: 0.0,
+            mem_ops: 1.0,
+            l1_hr: 0.0,
+        };
+        // 1500 rows spans two PJRT batches with a padded tail.
+        let rows: Vec<_> = (0..1500)
+            .map(|i| c.to_features(400.0 + (i % 7) as f64 * 100.0, 700.0))
+            .collect();
+        let got = rt.predict(&rows, &hw).unwrap();
+        assert_eq!(got.len(), 1500);
+        // Identical inputs give identical outputs regardless of chunk.
+        assert_eq!(got[0], got[7]);
+        assert_eq!(got[3], got[1452]); // 1452 % 7 == 3, crosses the chunk boundary
+        for g in &got {
+            assert!(g[2] > 0.0 && g[2].is_finite());
+        }
+    }
+
+    #[test]
+    fn fit_artifact_recovers_line() {
+        let rt = Runtime::load_default().unwrap();
+        let ratios: Vec<f32> = (0..49).map(|i| 0.4 + i as f32 * 0.045).collect();
+        let lats: Vec<f32> = ratios.iter().map(|r| 222.78 * r + 277.32).collect();
+        let (a, b, r2) = rt.fit_dm_lat(&ratios, &lats).unwrap();
+        assert!((a - 222.78).abs() < 0.1, "{a}");
+        assert!((b - 277.32).abs() < 0.1, "{b}");
+        assert!(r2 > 0.9999);
+    }
+
+    #[test]
+    fn fit_rejects_wrong_sample_count() {
+        let rt = Runtime::load_default().unwrap();
+        assert!(rt.fit_dm_lat(&[1.0; 10], &[1.0; 10]).is_err());
+    }
+}

@@ -1,0 +1,177 @@
+//! Memory-controller channel + DRAM bank timing — the paper's FCFS queue
+//! (§IV, Figs. 3/4), clocked entirely in the **memory** domain.
+//!
+//! One channel serves one SM (DESIGN.md §7: the physically-shared GDDR5
+//! is abstracted as #SM interleaved channels, which is what makes the
+//! per-SM `dm_del` the micro-benchmarks extract line up with the paper's
+//! per-SM queue equations). A channel is a deterministic-service FCFS
+//! pipeline:
+//!
+//! * a new transaction may *start* `dm_burst_mem_cycles` after the
+//!   previous one started (the initiation interval that bounds
+//!   bandwidth, i.e. the paper's `dm_del` floor);
+//! * its data returns `dm_access_mem_cycles` after it starts (the
+//!   memory-clocked half of Eq. (4));
+//! * row-buffer misses at the addressed bank add latency and occupancy,
+//!   which is what lifts measured `dm_del` above the burst floor and
+//!   caps bandwidth efficiency below 100 % (Table III).
+
+use super::GpuSpec;
+
+/// One FCFS memory-controller channel with banked DRAM behind it.
+#[derive(Debug, Clone)]
+pub struct Channel {
+    /// Earliest time (ns) the next transaction may start service.
+    next_slot_ns: f64,
+    /// Per-bank open row (row id), None = closed.
+    open_row: Vec<Option<u64>>,
+    n_banks: u64,
+    row_lines: u64,
+    /// Total transactions served.
+    pub txns: u64,
+    /// Row-buffer misses observed.
+    pub row_misses: u64,
+    /// Time the channel finished its last service start (for busy accounting).
+    pub busy_ns: f64,
+}
+
+/// Outcome of enqueueing one transaction.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Service {
+    /// When service started (after FCFS wait), ns.
+    pub start_ns: f64,
+    /// When the data returns to the SM-side path, ns.
+    pub done_ns: f64,
+}
+
+impl Channel {
+    pub fn new(spec: &GpuSpec) -> Self {
+        Channel {
+            next_slot_ns: 0.0,
+            open_row: vec![None; spec.dram_banks as usize],
+            n_banks: spec.dram_banks as u64,
+            row_lines: spec.dram_row_lines as u64,
+            txns: 0,
+            row_misses: 0,
+            busy_ns: 0.0,
+        }
+    }
+
+    /// Enqueue a transaction for `line` (global line index) arriving at
+    /// `arrive_ns`. `mem_ns` is the current memory-clock period.
+    pub fn access(&mut self, arrive_ns: f64, line: u64, spec: &GpuSpec, mem_ns: f64) -> Service {
+        let bank = (line / self.row_lines % self.n_banks) as usize;
+        let row = line / (self.row_lines * self.n_banks);
+
+        let start = arrive_ns.max(self.next_slot_ns);
+        let row_hit = self.open_row[bank] == Some(row);
+
+        let mut occupancy = (spec.dm_burst_mem_cycles + spec.mc_overhead_mem_cycles) * mem_ns;
+        let mut latency = spec.dm_access_mem_cycles * mem_ns;
+        if !row_hit {
+            occupancy += spec.dram_row_miss_occ_mem_cycles * mem_ns;
+            latency += spec.dram_row_miss_lat_mem_cycles * mem_ns;
+            self.row_misses += 1;
+            self.open_row[bank] = Some(row);
+        }
+
+        self.next_slot_ns = start + occupancy;
+        self.busy_ns += occupancy;
+        self.txns += 1;
+
+        Service { start_ns: start, done_ns: start + latency }
+    }
+
+    /// Earliest service-start time currently scheduled.
+    pub fn next_slot(&self) -> f64 {
+        self.next_slot_ns
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> GpuSpec {
+        GpuSpec::default()
+    }
+
+    #[test]
+    fn unloaded_latency_is_access_segment() {
+        let s = spec();
+        let mut ch = Channel::new(&s);
+        let mem_ns = 1.0; // 1000 MHz
+        let svc = ch.access(100.0, 0, &s, mem_ns);
+        assert_eq!(svc.start_ns, 100.0);
+        // First access row-misses: access + row-miss latency.
+        let want = 100.0 + (s.dm_access_mem_cycles + s.dram_row_miss_lat_mem_cycles) * mem_ns;
+        assert!((svc.done_ns - want).abs() < 1e-9);
+    }
+
+    #[test]
+    fn row_hit_has_min_latency() {
+        let s = spec();
+        let mut ch = Channel::new(&s);
+        let mem_ns = 1.0;
+        ch.access(0.0, 0, &s, mem_ns);
+        let svc = ch.access(1000.0, 1, &s, mem_ns); // same row, channel idle
+        assert!((svc.done_ns - svc.start_ns - s.dm_access_mem_cycles).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fcfs_backpressure() {
+        let s = spec();
+        let mut ch = Channel::new(&s);
+        let mem_ns = 2.0; // 500 MHz
+        // Two same-row transactions arriving together: second starts one
+        // burst interval after the first.
+        let a = ch.access(0.0, 0, &s, mem_ns);
+        let b = ch.access(0.0, 1, &s, mem_ns);
+        let ii = (s.dm_burst_mem_cycles
+            + s.mc_overhead_mem_cycles
+            + s.dram_row_miss_occ_mem_cycles)
+            * mem_ns;
+        assert!((b.start_ns - (a.start_ns + ii)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn saturated_throughput_matches_burst_interval() {
+        let s = spec();
+        let mut ch = Channel::new(&s);
+        let mem_ns = 1.0;
+        let n = 10_000u64;
+        let mut last = Service { start_ns: 0.0, done_ns: 0.0 };
+        for i in 0..n {
+            last = ch.access(0.0, i, &s, mem_ns); // streaming same rows mostly
+        }
+        // Row misses every row_lines txns; effective interval = burst +
+        // MC overhead + a sliver of row-miss occupancy.
+        let span = last.start_ns;
+        let per_txn = span / (n - 1) as f64;
+        let floor = (s.dm_burst_mem_cycles + s.mc_overhead_mem_cycles) * mem_ns;
+        assert!(per_txn >= floor);
+        assert!(per_txn < floor + 1.0 * mem_ns);
+    }
+
+    #[test]
+    fn memory_clock_scales_service() {
+        let s = spec();
+        let mut fast = Channel::new(&s);
+        let mut slow = Channel::new(&s);
+        let f = fast.access(0.0, 0, &s, 1.0); // 1000 MHz
+        let sl = slow.access(0.0, 0, &s, 2.5); // 400 MHz
+        assert!((sl.done_ns / f.done_ns - 2.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn row_miss_counting() {
+        let s = spec();
+        let mut ch = Channel::new(&s);
+        for i in 0..s.dram_row_lines as u64 {
+            ch.access(0.0, i, &s, 1.0); // one row -> 1 miss
+        }
+        assert_eq!(ch.row_misses, 1);
+        ch.access(0.0, (s.dram_row_lines * s.dram_banks) as u64, &s, 1.0); // same bank new row
+        assert_eq!(ch.row_misses, 2);
+    }
+}

@@ -1,0 +1,581 @@
+//! The dual-clock discrete-event engine.
+//!
+//! Warps are jobs; SM ALU/LSU/SMEM ports, per-SM L2 slice ports and
+//! per-SM memory-controller channels are FCFS resources with "free-at"
+//! timestamps. A binary heap orders warp wake-ups in global time (ns),
+//! so resource grants happen in arrival order — exactly the FCFS
+//! queueing the paper models in §IV.
+
+use std::collections::{BinaryHeap, VecDeque};
+
+use super::dram::Channel;
+use super::isa::{Kernel, MemPat, Op};
+use super::l2::L2Cache;
+use super::sm::{BlockState, SmState, WarpState};
+use super::stats::{LatencySample, SimStats};
+use super::{Clocks, GpuSpec};
+
+/// A scheduled warp wake-up, packed into one `u128` so the event queue
+/// compares with a single integer instruction:
+/// bits 127..64 = time quantized to femtoseconds (room for ~5 h of
+/// simulated time; the sub-fs rounding is 9 orders of magnitude below
+/// one cycle), bits 63..32 = push sequence (FIFO tie-break), bits
+/// 31..0 = warp id. Stored negated so `BinaryHeap` (a max-heap) pops
+/// the earliest event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+struct Ev(u128);
+
+impl Ev {
+    #[inline]
+    fn new(t_ns: f64, seq: u32, warp: u32) -> Self {
+        let t_fs = (t_ns * 1e6).round() as u64;
+        Ev(!(((t_fs as u128) << 64) | ((seq as u128) << 32) | warp as u128))
+    }
+
+    #[inline]
+    fn t_ns(self) -> f64 {
+        ((!self.0 >> 64) as u64) as f64 / 1e6
+    }
+
+    #[inline]
+    fn warp(self) -> u32 {
+        (!self.0) as u32
+    }
+}
+
+/// Result of one simulated kernel execution.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    pub stats: SimStats,
+    /// `#Aw` from the occupancy calculation (what the profiler reports).
+    pub active_warps: u32,
+    /// Blocks resident per SM.
+    pub blocks_per_sm: u32,
+}
+
+/// Configuration for latency-sample recording (Fig. 5 experiments).
+#[derive(Debug, Clone, Copy)]
+pub struct SampleCfg {
+    /// Record the first DRAM transaction of up to this many warps.
+    pub max_samples: usize,
+}
+
+/// The simulator.
+pub struct Engine<'k> {
+    spec: GpuSpec,
+    clocks: Clocks,
+    kernel: &'k Kernel,
+    sms: Vec<SmState>,
+    channels: Vec<Channel>,
+    l2: L2Cache,
+    /// Per-SM texture/L1 caches (only consulted by `via_l1` loads —
+    /// the paper's §VII future-work case).
+    l1s: Vec<L2Cache>,
+    warps: Vec<WarpState>,
+    blocks: Vec<BlockState>,
+    pending_blocks: VecDeque<u64>,
+    heap: BinaryHeap<Ev>,
+    stats: SimStats,
+    seq: u64,
+    blocks_per_sm: u32,
+    sample_cfg: Option<SampleCfg>,
+    end_ns: f64,
+}
+
+impl<'k> Engine<'k> {
+    pub fn new(spec: GpuSpec, clocks: Clocks, kernel: &'k Kernel) -> Self {
+        let n_sm = spec.n_sm as usize;
+        let l2 = L2Cache::new(spec.l2_bytes, spec.l2_ways, spec.line_bytes);
+        let blocks_per_sm = spec.blocks_per_sm(&kernel.launch);
+        Engine {
+            channels: (0..n_sm).map(|_| Channel::new(&spec)).collect(),
+            sms: vec![SmState::default(); n_sm],
+            l1s: (0..n_sm)
+                .map(|_| L2Cache::new(spec.l1_bytes, spec.l1_ways, spec.line_bytes))
+                .collect(),
+            l2,
+            spec,
+            clocks,
+            kernel,
+            warps: Vec::new(),
+            blocks: Vec::new(),
+            pending_blocks: (0..kernel.launch.blocks as u64).collect(),
+            heap: BinaryHeap::with_capacity(1024),
+            stats: SimStats::default(),
+            seq: 0,
+            blocks_per_sm,
+            sample_cfg: None,
+            end_ns: 0.0,
+        }
+    }
+
+    /// Enable Fig.-5 latency sampling.
+    pub fn with_samples(mut self, cfg: SampleCfg) -> Self {
+        self.sample_cfg = Some(cfg);
+        self
+    }
+
+    fn push(&mut self, t_ns: f64, warp: u32) {
+        self.seq += 1;
+        debug_assert!(self.seq <= u32::MAX as u64, "sequence space exhausted");
+        self.heap.push(Ev::new(t_ns, self.seq as u32, warp));
+    }
+
+    /// Place the next pending block on `sm` at time `t`.
+    fn launch_block(&mut self, sm: u32, t_ns: f64) -> bool {
+        let Some(block_id) = self.pending_blocks.pop_front() else {
+            return false;
+        };
+        let wpb = self.kernel.launch.warps_per_block();
+        let block_uid = self.blocks.len() as u32;
+        self.blocks.push(BlockState::new(block_id, sm, wpb));
+        let smst = &mut self.sms[sm as usize];
+        smst.resident_blocks += 1;
+        smst.resident_warps += wpb;
+        smst.ever_active = true;
+        self.stats.peak_warps_per_sm = self.stats.peak_warps_per_sm.max(smst.resident_warps);
+        let t0 = t_ns + self.spec.block_launch_core_cycles * self.clocks.core_ns();
+        for w in 0..wpb {
+            let gwarp = block_id * wpb as u64 + w as u64;
+            let uid = self.warps.len() as u32;
+            self.warps.push(WarpState::new(block_uid, gwarp, block_id, sm));
+            self.push(t0, uid);
+        }
+        true
+    }
+
+    /// Execute one global-memory instruction; returns completion time.
+    fn mem_access(&mut self, t_ns: f64, warp_uid: u32, pat: MemPat, slot: u64, iter: u64) -> f64 {
+        let core = self.clocks.core_ns();
+        let mem = self.clocks.mem_ns();
+        let (gwarp, block_id, sm_id, sampled) = {
+            let w = &self.warps[warp_uid as usize];
+            (w.gwarp, w.block_id, w.sm as usize, w.sampled)
+        };
+        let o_itrs = self.kernel.program.o_itrs as u64;
+        let line = self.spec.line_bytes as u64;
+        let mut ready = t_ns;
+        let mut first_dram: Option<(f64, f64)> = None;
+        for t in 0..pat.txns as u64 {
+            let sm = &mut self.sms[sm_id];
+            let issue = t_ns.max(sm.lsu_free_ns);
+            sm.lsu_free_ns = issue + core;
+            let addr = pat.address(gwarp, block_id, iter, t, o_itrs, line, slot);
+            // Texture/L1 stage (paper §VII future work): hits are served
+            // inside the SM and never touch the L2 port or the MC.
+            if pat.via_l1 {
+                self.stats.l1_accesses += 1;
+                if self.l1s[sm_id].access(addr) {
+                    self.stats.l1_hits += 1;
+                    ready = ready.max(issue + self.spec.l1_hit_core_cycles * core);
+                    continue;
+                }
+            }
+            let sm = &mut self.sms[sm_id];
+            let l2_at = issue.max(sm.l2_port_free_ns);
+            sm.l2_port_free_ns = l2_at + self.spec.l2_ii_core_cycles * core;
+            self.stats.l2_accesses += 1;
+            let done = if self.l2.access(addr) {
+                self.stats.l2_hits += 1;
+                l2_at + self.spec.l2_hit_core_cycles * core
+            } else {
+                let arrive_mc = l2_at + self.spec.dm_path_core_cycles * core;
+                let svc =
+                    self.channels[sm_id].access(arrive_mc, addr / line, &self.spec, mem);
+                self.stats.dram_txns += 1;
+                if first_dram.is_none() {
+                    first_dram = Some((issue, svc.done_ns - issue));
+                }
+                svc.done_ns
+            };
+            ready = ready.max(done);
+        }
+        self.stats.gl_txns += pat.txns as u64;
+        // Fig. 5: record the first DRAM request latency of each warp.
+        if let (Some(cfg), Some((issue, lat)), false) = (self.sample_cfg, first_dram, sampled) {
+            if self.stats.latency_samples.len() < cfg.max_samples {
+                self.stats.latency_samples.push(LatencySample {
+                    warp: gwarp,
+                    issue_ns: issue,
+                    latency_ns: lat,
+                });
+                self.warps[warp_uid as usize].sampled = true;
+            }
+        }
+        ready
+    }
+
+    /// Run to completion.
+    pub fn run(mut self) -> SimResult {
+        // Initial wave: fill every SM round-robin up to its residency.
+        for _round in 0..self.blocks_per_sm {
+            for sm in 0..self.spec.n_sm {
+                if self.sms[sm as usize].resident_blocks < self.blocks_per_sm {
+                    if !self.launch_block(sm, 0.0) {
+                        break;
+                    }
+                }
+            }
+        }
+
+        let core = self.clocks.core_ns();
+        while let Some(ev) = self.heap.pop() {
+            // Chain ops of the popped warp inline while their completion
+            // precedes every other scheduled event — identical semantics
+            // to push-and-repop, without the heap churn (EXPERIMENTS.md
+            // §Perf iteration 2).
+            let mut t = ev.t_ns();
+            let warp = ev.warp();
+            loop {
+                self.end_ns = self.end_ns.max(t);
+                let fetched = {
+                    let prog = &self.kernel.program;
+                    self.warps[warp as usize]
+                        .fetch(prog)
+                        .map(|(op, slot, iter)| (op.clone(), slot, iter))
+                };
+                let ready = match fetched {
+                    None => {
+                        // Warp retires.
+                        self.stats.warps_retired += 1;
+                        let block_uid = self.warps[warp as usize].block_uid as usize;
+                        let sm_id = self.warps[warp as usize].sm;
+                        self.blocks[block_uid].warps_done += 1;
+                        if self.blocks[block_uid].done() {
+                            self.stats.blocks_retired += 1;
+                            let wpb = self.kernel.launch.warps_per_block();
+                            let smst = &mut self.sms[sm_id as usize];
+                            smst.resident_blocks -= 1;
+                            smst.resident_warps -= wpb;
+                            self.launch_block(sm_id, t);
+                        }
+                        break;
+                    }
+                    Some((Op::Compute(n), _, _)) => {
+                        let sm = &mut self.sms[self.warps[warp as usize].sm as usize];
+                        let start = t.max(sm.alu_free_ns);
+                        let finish = start + n as f64 * self.spec.inst_core_cycles * core;
+                        sm.alu_free_ns = finish;
+                        self.stats.mix.compute += n as u64;
+                        finish
+                    }
+                    Some((Op::Load(pat), slot, iter)) => {
+                        let ready = self.mem_access(t, warp, pat, slot, iter);
+                        self.stats.mix.global_ld += 1;
+                        ready
+                    }
+                    Some((Op::Store(pat), slot, iter)) => {
+                        let ready = self.mem_access(t, warp, pat, slot, iter);
+                        self.stats.mix.global_st += 1;
+                        ready
+                    }
+                    Some((Op::SharedLoad { conflict }, _, _))
+                    | Some((Op::SharedStore { conflict }, _, _)) => {
+                        let conflict = conflict.max(1) as f64;
+                        let sm = &mut self.sms[self.warps[warp as usize].sm as usize];
+                        let start = t.max(sm.smem_free_ns);
+                        sm.smem_free_ns = start + conflict * core;
+                        let finish =
+                            start + (self.spec.smem_core_cycles + (conflict - 1.0)) * core;
+                        self.stats.smem_accesses += 1;
+                        self.stats.smem_txns += conflict as u64;
+                        self.stats.mix.shared += 1;
+                        finish
+                    }
+                    Some((Op::Sync, _, _)) => {
+                        self.stats.mix.sync += 1;
+                        let block_uid = self.warps[warp as usize].block_uid as usize;
+                        let block = &mut self.blocks[block_uid];
+                        block.at_barrier += 1;
+                        if block.at_barrier == block.warps_total {
+                            // Release everyone one cycle later.
+                            block.at_barrier = 0;
+                            let mut waiters = std::mem::take(&mut block.waiting);
+                            waiters.push(warp);
+                            for w in waiters {
+                                self.push(t + core, w);
+                            }
+                            self.stats.barriers += 1;
+                        } else {
+                            block.waiting.push(warp);
+                        }
+                        break;
+                    }
+                };
+                // Continue inline only if strictly earlier than the next
+                // scheduled event (ties must go through the heap to keep
+                // the original FIFO order).
+                match self.heap.peek() {
+                    Some(next) if ready >= next.t_ns() => {
+                        self.push(ready, warp);
+                        break;
+                    }
+                    _ => t = ready,
+                }
+            }
+        }
+
+        // Collect channel-level stats.
+        for ch in &self.channels {
+            self.stats.dram_row_misses += ch.row_misses;
+            self.stats.dram_busy_ns += ch.busy_ns;
+        }
+        self.stats.active_sms = self.sms.iter().filter(|s| s.ever_active).count() as u32;
+        self.stats.elapsed_ns = self.end_ns;
+        debug_assert!(self.pending_blocks.is_empty());
+
+        SimResult {
+            stats: self.stats,
+            active_warps: self.spec.active_warps(&self.kernel.launch),
+            blocks_per_sm: self.blocks_per_sm,
+        }
+    }
+}
+
+/// Convenience wrapper: simulate `kernel` at `clocks` on `spec`.
+pub fn simulate(spec: &GpuSpec, clocks: Clocks, kernel: &Kernel) -> SimResult {
+    Engine::new(spec.clone(), clocks, kernel).run()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::isa::{Addressing, Launch, Program};
+
+    fn spec() -> GpuSpec {
+        GpuSpec::default()
+    }
+
+    fn compute_kernel(n_inst: u32, blocks: u32, tpb: u32, o_itrs: u32) -> Kernel {
+        Kernel::new(
+            "compute",
+            Launch::new(blocks, tpb),
+            Program {
+                prologue: vec![],
+                body: vec![Op::Compute(n_inst)],
+                o_itrs,
+                epilogue: vec![],
+            },
+        )
+    }
+
+    #[test]
+    fn single_warp_compute_time_exact() {
+        let s = spec();
+        let k = compute_kernel(10, 1, 32, 4);
+        let r = simulate(&s, Clocks::new(1000.0, 1000.0), &k);
+        // 40 instructions * 2 cycles * 1 ns + launch overhead 32 cycles.
+        let want = 40.0 * s.inst_core_cycles + s.block_launch_core_cycles;
+        assert!(
+            (r.stats.elapsed_ns - want).abs() < 1e-6,
+            "elapsed {} want {}",
+            r.stats.elapsed_ns,
+            want
+        );
+        assert_eq!(r.stats.mix.compute, 40);
+        assert_eq!(r.stats.warps_retired, 1);
+        assert_eq!(r.stats.blocks_retired, 1);
+        assert_eq!(r.stats.active_sms, 1);
+    }
+
+    #[test]
+    fn compute_scales_inverse_with_core_freq() {
+        let s = spec();
+        let k = compute_kernel(16, 32, 128, 8);
+        let slow = simulate(&s, Clocks::new(400.0, 700.0), &k);
+        let fast = simulate(&s, Clocks::new(1000.0, 700.0), &k);
+        let ratio = slow.stats.elapsed_ns / fast.stats.elapsed_ns;
+        assert!((ratio - 2.5).abs() < 0.01, "ratio {ratio}");
+    }
+
+    #[test]
+    fn compute_insensitive_to_mem_freq() {
+        let s = spec();
+        let k = compute_kernel(16, 32, 128, 8);
+        let a = simulate(&s, Clocks::new(700.0, 400.0), &k);
+        let b = simulate(&s, Clocks::new(700.0, 1000.0), &k);
+        assert!((a.stats.elapsed_ns - b.stats.elapsed_ns).abs() < 1e-9);
+    }
+
+    #[test]
+    fn alu_serializes_warps_on_one_sm() {
+        let s = spec();
+        // One block of 4 warps on one SM, pure compute.
+        let k = compute_kernel(100, 1, 128, 1);
+        let r = simulate(&s, Clocks::new(1000.0, 1000.0), &k);
+        let want = 4.0 * 100.0 * s.inst_core_cycles + s.block_launch_core_cycles;
+        assert!((r.stats.elapsed_ns - want).abs() < 1.0, "elapsed {}", r.stats.elapsed_ns);
+    }
+
+    fn stream_kernel(blocks: u32, tpb: u32, txns: u16, o_itrs: u32) -> Kernel {
+        Kernel::new(
+            "stream",
+            Launch::new(blocks, tpb),
+            Program {
+                prologue: vec![],
+                body: vec![Op::Load(MemPat::new(txns, Addressing::OwnLinear, 1))],
+                o_itrs,
+                epilogue: vec![],
+            },
+        )
+    }
+
+    #[test]
+    fn unloaded_dram_latency_matches_eq4() {
+        let s = spec();
+        // Single warp, single txn per iteration, streaming (always misses).
+        let k = stream_kernel(1, 32, 1, 50);
+        for (cf, mf) in [(400.0, 400.0), (1000.0, 400.0), (400.0, 1000.0), (700.0, 700.0)] {
+            let clocks = Clocks::new(cf, mf);
+            let r = simulate(&s, clocks, &k);
+            assert_eq!(r.stats.dram_txns, 50);
+            // Per-iteration latency in core cycles ~= Eq. (4) + LSU/row terms.
+            let cycles = r.stats.elapsed_core_cycles(cf) - s.block_launch_core_cycles;
+            let per = cycles / 50.0;
+            let eq4 = s.dm_access_mem_cycles * clocks.ratio() + s.dm_path_core_cycles;
+            // Row misses add dram_row_miss_lat on most accesses (streaming
+            // revisits rows every row_lines/txns, here never: stride 1 line
+            // per iter within the same row -> row hits after first).
+            assert!(
+                (per - eq4).abs() / eq4 < 0.06,
+                "cf={cf} mf={mf}: per-iter {per:.1} vs eq4 {eq4:.1}"
+            );
+        }
+    }
+
+    #[test]
+    fn l2_hit_latency_flat_in_mem_freq() {
+        let s = spec();
+        // Hot set that fits in L2: after warm-up everything hits.
+        let k = Kernel::new(
+            "hot",
+            Launch::new(1, 32),
+            Program {
+                prologue: vec![],
+                body: vec![Op::Load(MemPat::new(1, Addressing::Hot { lines: 64 }, 1))],
+                o_itrs: 2000,
+                epilogue: vec![],
+            },
+        );
+        let a = simulate(&s, Clocks::new(700.0, 400.0), &k);
+        let b = simulate(&s, Clocks::new(700.0, 1000.0), &k);
+        assert!(a.stats.l2_hit_rate() > 0.8, "hit rate {}", a.stats.l2_hit_rate());
+        // Only the few cold misses differ; elapsed within 5%.
+        let rel = (a.stats.elapsed_ns - b.stats.elapsed_ns).abs() / b.stats.elapsed_ns;
+        assert!(rel < 0.05, "rel {rel}");
+    }
+
+    #[test]
+    fn bandwidth_bound_scales_with_mem_freq() {
+        let s = spec();
+        // Many warps streaming: MC channels saturate.
+        let k = stream_kernel(64, 256, 4, 16);
+        let slow = simulate(&s, Clocks::new(1000.0, 400.0), &k);
+        let fast = simulate(&s, Clocks::new(1000.0, 1000.0), &k);
+        let ratio = slow.stats.elapsed_ns / fast.stats.elapsed_ns;
+        assert!(ratio > 2.0 && ratio < 2.6, "ratio {ratio}");
+    }
+
+    #[test]
+    fn barrier_joins_warps() {
+        let s = spec();
+        let k = Kernel::new(
+            "sync",
+            Launch::new(1, 128),
+            Program {
+                prologue: vec![],
+                body: vec![Op::Compute(10), Op::Sync],
+                o_itrs: 3,
+                epilogue: vec![],
+            },
+        );
+        let r = simulate(&s, Clocks::new(1000.0, 1000.0), &k);
+        assert_eq!(r.stats.barriers, 3);
+        assert_eq!(r.stats.mix.sync, 12); // 4 warps * 3 iters
+        assert_eq!(r.stats.warps_retired, 4);
+    }
+
+    #[test]
+    fn all_blocks_retire_with_oversubscription() {
+        let s = spec();
+        // 64 warps/SM limit, 8 wpb -> 8 blocks/SM; 16 SM -> 128 resident;
+        // 300 blocks forces multiple waves.
+        let k = compute_kernel(4, 300, 256, 2);
+        let r = simulate(&s, Clocks::new(700.0, 700.0), &k);
+        assert_eq!(r.stats.blocks_retired, 300);
+        assert_eq!(r.stats.warps_retired, 2400);
+        assert_eq!(r.blocks_per_sm, 8);
+        assert_eq!(r.active_warps, 64);
+        assert_eq!(r.stats.peak_warps_per_sm, 64);
+    }
+
+    #[test]
+    fn latency_samples_recorded() {
+        let s = spec();
+        let k = stream_kernel(8, 256, 4, 4);
+        let r = Engine::new(s, Clocks::new(700.0, 700.0), &k)
+            .with_samples(SampleCfg { max_samples: 100 })
+            .run();
+        // One sample per warp; the grid has 64 warps.
+        assert_eq!(r.stats.latency_samples.len(), 64);
+        for smp in &r.stats.latency_samples {
+            assert!(smp.latency_ns > 0.0);
+        }
+    }
+
+    #[test]
+    fn deterministic_repeat() {
+        let s = spec();
+        let k = stream_kernel(32, 128, 4, 8);
+        let a = simulate(&s, Clocks::new(600.0, 800.0), &k);
+        let b = simulate(&s, Clocks::new(600.0, 800.0), &k);
+        assert_eq!(a.stats.elapsed_ns, b.stats.elapsed_ns);
+        assert_eq!(a.stats.l2_hits, b.stats.l2_hits);
+        assert_eq!(a.stats.dram_row_misses, b.stats.dram_row_misses);
+    }
+
+    #[test]
+    fn smem_ops_charged_on_core_clock() {
+        let s = spec();
+        let k = Kernel::new(
+            "smem",
+            Launch::new(1, 32),
+            Program {
+                prologue: vec![],
+                body: vec![Op::SharedLoad { conflict: 1 }],
+                o_itrs: 100,
+                epilogue: vec![],
+            },
+        );
+        let a = simulate(&s, Clocks::new(500.0, 400.0), &k);
+        let b = simulate(&s, Clocks::new(500.0, 1000.0), &k);
+        assert_eq!(a.stats.smem_accesses, 100);
+        assert!((a.stats.elapsed_ns - b.stats.elapsed_ns).abs() < 1e-9);
+        let c = simulate(&s, Clocks::new(1000.0, 700.0), &k);
+        let ratio = a.stats.elapsed_ns / c.stats.elapsed_ns;
+        assert!((ratio - 2.0).abs() < 0.01, "ratio {ratio}");
+    }
+
+    #[test]
+    fn bank_conflicts_serialize_smem() {
+        let s = spec();
+        let mk = |conflict: u8| {
+            Kernel::new(
+                "smemconf",
+                Launch::new(1, 32),
+                Program {
+                    prologue: vec![],
+                    body: vec![Op::SharedLoad { conflict }],
+                    o_itrs: 200,
+                    epilogue: vec![],
+                },
+            )
+        };
+        let k1 = mk(1);
+        let k8 = mk(8);
+        let a = simulate(&s, Clocks::new(700.0, 700.0), &k1);
+        let b = simulate(&s, Clocks::new(700.0, 700.0), &k8);
+        assert!(b.stats.elapsed_ns > a.stats.elapsed_ns);
+        assert_eq!(b.stats.smem_txns, 1600);
+    }
+}

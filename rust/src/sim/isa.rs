@@ -1,0 +1,349 @@
+//! Abstract warp-level ISA and kernel descriptions.
+//!
+//! Kernels are *trace generators*: every warp executes the same small
+//! `Program` (prologue / body×o_itrs / epilogue) and an `Addressing`
+//! pattern turns (warp id, iteration, transaction index) into global
+//! addresses, from which L2 hit rates and DRAM row behaviour emerge in
+//! the cache/DRAM models rather than being asserted.
+
+/// Warp-level operations.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Op {
+    /// `n` dependent arithmetic instructions issued back-to-back on the
+    /// SM ALU pipeline (each costing `inst_core_cycles`).
+    Compute(u32),
+    /// Global-memory load; the warp blocks until all transactions return.
+    Load(MemPat),
+    /// Global-memory store. Modeled blocking, like loads — the paper's
+    /// `gld_trans` counter folds loads and stores together (§V).
+    Store(MemPat),
+    /// Shared-memory load with a bank-conflict degree (1 = conflict-free).
+    SharedLoad { conflict: u8 },
+    /// Shared-memory store with a bank-conflict degree.
+    SharedStore { conflict: u8 },
+    /// Block-wide barrier (`__syncthreads()`).
+    Sync,
+}
+
+/// How a warp's global transactions map to addresses.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Addressing {
+    /// Per-warp streaming: every (warp, iteration, txn) touches a fresh
+    /// line. Coalesced pass over a big array — vectorAdd-style.
+    OwnLinear,
+    /// Per-warp strided walk: consecutive transactions are `stride`
+    /// lines apart (uncoalesced column access, transpose writes).
+    OwnStrided { stride: u32 },
+    /// All warps of a block touch the same lines for a given iteration
+    /// (a broadcast tile: matrixMul's A-row).
+    BlockShared,
+    /// All blocks touch the same lines for a given iteration (a tile
+    /// every block walks: matrixMul's B-column / filter taps).
+    GridShared,
+    /// Bounded working set of `lines` lines reused across iterations
+    /// (hot table; hits once warm if it fits in L2).
+    Hot { lines: u32 },
+    /// Pseudo-random lines within a `lines`-sized window (CG's sparse
+    /// gather).
+    Random { lines: u32 },
+}
+
+/// One global-memory instruction pattern: `txns` transactions of one
+/// line each, addressed per `addressing` within region `region` (regions
+/// are disjoint 1-TiB address windows, so kernels never alias).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MemPat {
+    pub txns: u16,
+    pub addressing: Addressing,
+    pub region: u8,
+    /// Optional explicit sub-region slot. Two instructions with the same
+    /// `(region, alias)` touch the *same* addresses — e.g. FWT's
+    /// read-modify-write, where the store hits the line its load just
+    /// brought into L2. `None` = use the instruction's static position,
+    /// i.e. distinct buffers.
+    pub alias: Option<u8>,
+    /// Route this access through the per-SM texture/L1 cache (the
+    /// paper's §VII future-work case; `tex1Dfetch`-style loads).
+    pub via_l1: bool,
+}
+
+impl MemPat {
+    pub fn new(txns: u16, addressing: Addressing, region: u8) -> Self {
+        assert!(txns > 0, "a memory op needs at least one transaction");
+        MemPat { txns, addressing, region, alias: None, via_l1: false }
+    }
+
+    /// Pin this instruction's address sub-region (see `alias` field).
+    pub fn with_alias(mut self, alias: u8) -> Self {
+        self.alias = Some(alias);
+        self
+    }
+
+    /// Route through the per-SM texture/L1 cache.
+    pub fn through_l1(mut self) -> Self {
+        self.via_l1 = true;
+        self
+    }
+
+    /// Address of transaction `t` for warp `gwarp` (grid-global warp id)
+    /// in block `block` at body iteration `iter`, given `o_itrs` total
+    /// iterations and the line size.
+    pub fn address(
+        &self,
+        gwarp: u64,
+        block: u64,
+        iter: u64,
+        t: u64,
+        o_itrs: u64,
+        line: u64,
+        op_slot: u64,
+    ) -> u64 {
+        let base = (self.region as u64) << 40;
+        // The sub-region slot spreads distinct instructions in the same
+        // region apart; an explicit alias makes instructions share one.
+        let slot = (self.alias.map(u64::from).unwrap_or(op_slot)) << 34;
+        let tx = self.txns as u64;
+        let idx = match self.addressing {
+            Addressing::OwnLinear => (gwarp * o_itrs.max(1) + iter) * tx + t,
+            Addressing::OwnStrided { stride } => {
+                // Per-warp strided walk: the warp's transactions sit
+                // `stride` lines apart (uncoalesced); iterations advance
+                // one line. Distinct warps never alias.
+                (gwarp * tx + t) * stride as u64 + iter
+            }
+            Addressing::BlockShared => (block * o_itrs.max(1) + iter) * tx + t,
+            Addressing::GridShared => iter * tx + t,
+            Addressing::Hot { lines } => {
+                (iter * tx + t + (gwarp % 7)) % lines.max(1) as u64
+            }
+            Addressing::Random { lines } => {
+                let mut x = gwarp
+                    .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                    .wrapping_add(iter.wrapping_mul(0xBF58_476D_1CE4_E5B9))
+                    .wrapping_add(t.wrapping_mul(0x94D0_49BB_1331_11EB));
+                x ^= x >> 31;
+                x = x.wrapping_mul(0xD6E8_FEB8_6659_FD93);
+                x ^= x >> 27;
+                x % lines.max(1) as u64
+            }
+        };
+        base + slot + idx * line
+    }
+}
+
+/// The per-warp program: `body` repeats `o_itrs` times.
+#[derive(Debug, Clone, Default)]
+pub struct Program {
+    pub prologue: Vec<Op>,
+    pub body: Vec<Op>,
+    pub o_itrs: u32,
+    pub epilogue: Vec<Op>,
+}
+
+impl Program {
+    /// Total dynamic op count per warp.
+    pub fn dynamic_len(&self) -> u64 {
+        self.prologue.len() as u64
+            + self.body.len() as u64 * self.o_itrs as u64
+            + self.epilogue.len() as u64
+    }
+
+    /// Number of shared-memory operations in one body iteration —
+    /// feeds the model's `i_itrs` (paper: source-code analysis).
+    pub fn smem_ops_per_iter(&self) -> u32 {
+        self.body
+            .iter()
+            .filter(|op| matches!(op, Op::SharedLoad { .. } | Op::SharedStore { .. }))
+            .count() as u32
+    }
+
+    /// Global transactions per warp in one body iteration (feeds the
+    /// model's `gld_body`; source analysis, like `o_itrs`).
+    pub fn gld_body_per_iter(&self) -> u32 {
+        Self::global_txns(&self.body)
+    }
+
+    /// Global transactions per warp in prologue + epilogue combined.
+    pub fn gld_edge(&self) -> u32 {
+        Self::global_txns(&self.prologue) + Self::global_txns(&self.epilogue)
+    }
+
+    fn global_txns(ops: &[Op]) -> u32 {
+        ops.iter()
+            .map(|op| match op {
+                Op::Load(p) | Op::Store(p) => p.txns as u32,
+                _ => 0,
+            })
+            .sum()
+    }
+
+    /// Global-memory *instructions* per body iteration (the model's
+    /// `mem_ops`: each is a dependent latency exposure point).
+    pub fn mem_ops_per_iter(&self) -> u32 {
+        self.body
+            .iter()
+            .filter(|op| matches!(op, Op::Load(_) | Op::Store(_)))
+            .count() as u32
+    }
+
+    /// Whether the kernel touches shared memory at all.
+    pub fn uses_smem(&self) -> bool {
+        let has = |ops: &[Op]| {
+            ops.iter()
+                .any(|op| matches!(op, Op::SharedLoad { .. } | Op::SharedStore { .. }))
+        };
+        has(&self.prologue) || has(&self.body) || has(&self.epilogue)
+    }
+}
+
+/// Launch configuration (`<<<blocks, threads, smem>>>`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Launch {
+    pub blocks: u32,
+    pub threads_per_block: u32,
+    pub smem_per_block: u32,
+    pub regs_per_thread: u32,
+}
+
+impl Launch {
+    pub fn new(blocks: u32, threads_per_block: u32) -> Self {
+        assert!(blocks > 0 && threads_per_block > 0);
+        assert!(
+            threads_per_block % 32 == 0,
+            "threads per block must be a whole number of warps"
+        );
+        Launch { blocks, threads_per_block, smem_per_block: 0, regs_per_thread: 32 }
+    }
+
+    /// `#Wpb` in the paper.
+    pub fn warps_per_block(&self) -> u32 {
+        self.threads_per_block / 32
+    }
+
+    /// `#W`, total warps in the grid.
+    pub fn total_warps(&self) -> u64 {
+        self.blocks as u64 * self.warps_per_block() as u64
+    }
+}
+
+/// A complete simulated kernel: launch config + per-warp program.
+#[derive(Debug, Clone)]
+pub struct Kernel {
+    pub name: String,
+    pub launch: Launch,
+    pub program: Program,
+}
+
+impl Kernel {
+    pub fn new(name: impl Into<String>, launch: Launch, program: Program) -> Self {
+        Kernel { name: name.into(), launch, program }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn own_linear_addresses_are_unique_lines() {
+        let pat = MemPat::new(4, Addressing::OwnLinear, 1);
+        let mut seen = std::collections::HashSet::new();
+        for gwarp in 0..8u64 {
+            for iter in 0..4u64 {
+                for t in 0..4u64 {
+                    assert!(seen.insert(pat.address(gwarp, 0, iter, t, 4, 32, 0)));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn block_shared_repeats_across_warps() {
+        let pat = MemPat::new(2, Addressing::BlockShared, 2);
+        let a = pat.address(0, 5, 3, 1, 8, 32, 0);
+        let b = pat.address(99, 5, 3, 1, 8, 32, 0);
+        assert_eq!(a, b);
+        let c = pat.address(0, 6, 3, 1, 8, 32, 0);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn grid_shared_repeats_across_blocks() {
+        let pat = MemPat::new(2, Addressing::GridShared, 3);
+        assert_eq!(
+            pat.address(0, 0, 7, 0, 8, 32, 1),
+            pat.address(1234, 77, 7, 0, 8, 32, 1)
+        );
+    }
+
+    #[test]
+    fn hot_set_bounded() {
+        let pat = MemPat::new(8, Addressing::Hot { lines: 16 }, 4);
+        let base = (4u64 << 40) + 0;
+        for gwarp in 0..32u64 {
+            for iter in 0..8u64 {
+                for t in 0..8u64 {
+                    let a = pat.address(gwarp, 0, iter, t, 8, 32, 0);
+                    assert!(a >= base && a < base + 16 * 32);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn random_bounded_and_deterministic() {
+        let pat = MemPat::new(4, Addressing::Random { lines: 1024 }, 5);
+        let a = pat.address(3, 0, 2, 1, 8, 32, 0);
+        let b = pat.address(3, 0, 2, 1, 8, 32, 0);
+        assert_eq!(a, b);
+        assert!(a - (5u64 << 40) < 1024 * 32);
+    }
+
+    #[test]
+    fn regions_disjoint() {
+        let p1 = MemPat::new(1, Addressing::OwnLinear, 1);
+        let p2 = MemPat::new(1, Addressing::OwnLinear, 2);
+        // Even the largest index in region 1 sits below region 2's base.
+        let hi = p1.address(u32::MAX as u64, 0, 0, 0, 1, 32, 15);
+        let lo = p2.address(0, 0, 0, 0, 1, 32, 0);
+        assert!(hi < lo);
+    }
+
+    #[test]
+    fn program_dynamic_len() {
+        let p = Program {
+            prologue: vec![Op::Compute(4)],
+            body: vec![Op::Compute(1), Op::Sync],
+            o_itrs: 10,
+            epilogue: vec![Op::Compute(2)],
+        };
+        assert_eq!(p.dynamic_len(), 1 + 2 * 10 + 1);
+        assert_eq!(p.smem_ops_per_iter(), 0);
+        assert!(!p.uses_smem());
+    }
+
+    #[test]
+    fn smem_detection() {
+        let p = Program {
+            prologue: vec![],
+            body: vec![Op::SharedLoad { conflict: 1 }, Op::Compute(2)],
+            o_itrs: 4,
+            epilogue: vec![],
+        };
+        assert!(p.uses_smem());
+        assert_eq!(p.smem_ops_per_iter(), 1);
+    }
+
+    #[test]
+    fn launch_warp_math() {
+        let l = Launch::new(128, 256);
+        assert_eq!(l.warps_per_block(), 8);
+        assert_eq!(l.total_warps(), 1024);
+    }
+
+    #[test]
+    #[should_panic]
+    fn non_warp_multiple_rejected() {
+        Launch::new(1, 33);
+    }
+}

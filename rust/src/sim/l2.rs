@@ -1,0 +1,167 @@
+//! Set-associative L2 cache model (tags only, true LRU).
+//!
+//! The L2 runs entirely in the **core** clock domain (paper Table I):
+//! its port occupancy and hit latency are charged in core cycles by the
+//! engine; this module only answers hit/miss and maintains replacement
+//! state. Hit *rates* therefore emerge from kernel address streams
+//! rather than being asserted, which is what lets the profiler measure
+//! `l2_hr` the way Nsight does on silicon.
+
+/// Sentinel for an empty way (line ids are < 2^41, far below this).
+const EMPTY: u64 = u64::MAX;
+
+/// Tags-only set-associative cache with true LRU replacement.
+///
+/// Storage is one flat `n_sets * ways` array ordered MRU→LRU per set;
+/// hits rotate the prefix right with `copy_within` (no per-access
+/// allocation or `Vec` shuffling — this is the simulator's hottest
+/// data structure, see EXPERIMENTS.md §Perf).
+pub struct L2Cache {
+    tags: Vec<u64>,
+    ways: usize,
+    set_mask: u64,
+    line_shift: u32,
+}
+
+impl L2Cache {
+    /// Build a cache of `bytes` capacity, `ways` associativity and
+    /// `line_bytes` lines. Capacity must be a power-of-two multiple of
+    /// `ways * line_bytes`.
+    pub fn new(bytes: u64, ways: u32, line_bytes: u32) -> Self {
+        assert!(ways > 0 && line_bytes.is_power_of_two());
+        let n_lines = bytes / line_bytes as u64;
+        let n_sets = (n_lines / ways as u64).max(1);
+        assert!(n_sets.is_power_of_two(), "set count must be a power of two");
+        L2Cache {
+            tags: vec![EMPTY; (n_sets as usize) * ways as usize],
+            ways: ways as usize,
+            set_mask: n_sets - 1,
+            line_shift: line_bytes.trailing_zeros(),
+        }
+    }
+
+    /// Access one address; returns true on hit. Misses allocate
+    /// (write-allocate for both loads and stores, like Maxwell's L2).
+    #[inline]
+    pub fn access(&mut self, addr: u64) -> bool {
+        let line = addr >> self.line_shift;
+        let set = (line & self.set_mask) as usize;
+        let base = set * self.ways;
+        let ways = &mut self.tags[base..base + self.ways];
+        // MRU fast path: no reordering needed.
+        if ways[0] == line {
+            return true;
+        }
+        match ways.iter().position(|&t| t == line) {
+            Some(pos) => {
+                // Rotate [0..=pos] right by one: line becomes MRU.
+                ways.copy_within(0..pos, 1);
+                ways[0] = line;
+                true
+            }
+            None => {
+                // Shift everything right (LRU falls off), insert at MRU.
+                ways.copy_within(0..self.ways - 1, 1);
+                ways[0] = line;
+                false
+            }
+        }
+    }
+
+    /// Drop all cached lines (between kernel launches, optionally).
+    pub fn flush(&mut self) {
+        self.tags.fill(EMPTY);
+    }
+
+    pub fn n_sets(&self) -> usize {
+        self.tags.len() / self.ways
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geometry() {
+        let c = L2Cache::new(2 * 1024 * 1024, 16, 32);
+        assert_eq!(c.n_sets(), 4096);
+    }
+
+    #[test]
+    fn hit_after_miss() {
+        let mut c = L2Cache::new(1024, 2, 32);
+        assert!(!c.access(0));
+        assert!(c.access(0));
+        assert!(c.access(31)); // same line
+        assert!(!c.access(32)); // next line
+    }
+
+    #[test]
+    fn lru_eviction_order() {
+        // 1024 B, 2-way, 32 B lines -> 16 sets. Lines 0, 16, 32 map to set 0.
+        let mut c = L2Cache::new(1024, 2, 32);
+        let line = |i: u64| i * 16 * 32; // same set, different tags
+        assert!(!c.access(line(0)));
+        assert!(!c.access(line(1)));
+        assert!(c.access(line(0))); // 0 is now MRU, 1 is LRU
+        assert!(!c.access(line(2))); // evicts 1
+        assert!(c.access(line(0)));
+        assert!(!c.access(line(1))); // 1 was evicted
+    }
+
+    #[test]
+    fn streaming_never_hits() {
+        let mut c = L2Cache::new(64 * 1024, 16, 32);
+        let mut hits = 0;
+        for i in 0..100_000u64 {
+            if c.access(i * 32) {
+                hits += 1;
+            }
+        }
+        assert_eq!(hits, 0);
+    }
+
+    #[test]
+    fn working_set_fits_all_hits_once_warm() {
+        let mut c = L2Cache::new(2 * 1024 * 1024, 16, 32);
+        let lines = 10_000u64; // 320 KB, fits
+        for i in 0..lines {
+            c.access(i * 32);
+        }
+        let mut hits = 0;
+        for i in 0..lines {
+            if c.access(i * 32) {
+                hits += 1;
+            }
+        }
+        assert_eq!(hits, lines);
+    }
+
+    #[test]
+    fn working_set_exceeds_capacity_thrashes() {
+        let mut c = L2Cache::new(64 * 1024, 16, 32); // 2048 lines
+        let lines = 4096u64;
+        for _ in 0..2 {
+            for i in 0..lines {
+                c.access(i * 32);
+            }
+        }
+        // Sequential walk over 2x capacity with LRU: everything misses.
+        let mut hits = 0;
+        for i in 0..lines {
+            if c.access(i * 32) {
+                hits += 1;
+            }
+        }
+        assert_eq!(hits, 0);
+    }
+
+    #[test]
+    fn flush_clears() {
+        let mut c = L2Cache::new(1024, 2, 32);
+        c.access(0);
+        c.flush();
+        assert!(!c.access(0));
+    }
+}

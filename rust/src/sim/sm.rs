@@ -1,0 +1,209 @@
+//! Per-SM and per-warp execution state.
+
+use super::isa::{Op, Program};
+
+/// Program-counter phase for a warp.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Phase {
+    Prologue,
+    Body,
+    Epilogue,
+    Done,
+}
+
+/// Execution state of one warp.
+#[derive(Debug, Clone)]
+pub struct WarpState {
+    /// Index into the engine's block table.
+    pub block_uid: u32,
+    /// Grid-global warp id (`blockIdx * wpb + warpIdx`).
+    pub gwarp: u64,
+    /// Grid block index this warp belongs to.
+    pub block_id: u64,
+    /// SM the warp is resident on.
+    pub sm: u32,
+    pub phase: Phase,
+    pub idx: usize,
+    pub iter: u32,
+    /// Whether a Fig.-5 latency sample was already taken for this warp.
+    pub sampled: bool,
+}
+
+impl WarpState {
+    pub fn new(block_uid: u32, gwarp: u64, block_id: u64, sm: u32) -> Self {
+        WarpState {
+            block_uid,
+            gwarp,
+            block_id,
+            sm,
+            phase: Phase::Prologue,
+            idx: 0,
+            iter: 0,
+            sampled: false,
+        }
+    }
+
+    /// Fetch the op at the current PC and advance. Returns `None` when
+    /// the program is finished. `op_slot` out-param is the static index
+    /// of the instruction in the flattened program (used to spread
+    /// address sub-regions).
+    pub fn fetch<'p>(&mut self, prog: &'p Program) -> Option<(&'p Op, u64, u64)> {
+        loop {
+            match self.phase {
+                Phase::Prologue => {
+                    if self.idx < prog.prologue.len() {
+                        let op = &prog.prologue[self.idx];
+                        let slot = self.idx as u64;
+                        self.idx += 1;
+                        return Some((op, slot, 0));
+                    }
+                    self.phase = Phase::Body;
+                    self.idx = 0;
+                    self.iter = 0;
+                }
+                Phase::Body => {
+                    if prog.o_itrs == 0 || prog.body.is_empty() {
+                        self.phase = Phase::Epilogue;
+                        self.idx = 0;
+                        continue;
+                    }
+                    if self.idx < prog.body.len() {
+                        let op = &prog.body[self.idx];
+                        let slot = (prog.prologue.len() + self.idx) as u64;
+                        let it = self.iter as u64;
+                        self.idx += 1;
+                        return Some((op, slot, it));
+                    }
+                    self.iter += 1;
+                    self.idx = 0;
+                    if self.iter >= prog.o_itrs {
+                        self.phase = Phase::Epilogue;
+                    }
+                }
+                Phase::Epilogue => {
+                    if self.idx < prog.epilogue.len() {
+                        let op = &prog.epilogue[self.idx];
+                        let slot = (prog.prologue.len() + prog.body.len() + self.idx) as u64;
+                        self.idx += 1;
+                        // Epilogue uses iteration index o_itrs so OwnLinear
+                        // epilogue traffic does not alias body traffic.
+                        return Some((op, slot, prog.o_itrs as u64));
+                    }
+                    self.phase = Phase::Done;
+                }
+                Phase::Done => return None,
+            }
+        }
+    }
+}
+
+/// Execution state of one resident thread block.
+#[derive(Debug, Clone)]
+pub struct BlockState {
+    pub block_id: u64,
+    pub sm: u32,
+    pub warps_total: u32,
+    pub warps_done: u32,
+    /// Warps currently parked at the barrier.
+    pub at_barrier: u32,
+    /// Warp uids parked at the barrier, released together.
+    pub waiting: Vec<u32>,
+}
+
+impl BlockState {
+    pub fn new(block_id: u64, sm: u32, warps_total: u32) -> Self {
+        BlockState {
+            block_id,
+            sm,
+            warps_total,
+            warps_done: 0,
+            at_barrier: 0,
+            waiting: Vec::new(),
+        }
+    }
+
+    pub fn done(&self) -> bool {
+        self.warps_done == self.warps_total
+    }
+}
+
+/// Shared execution resources of one SM. All fields are "free-at"
+/// timestamps in ns; granting is FCFS in event order.
+#[derive(Debug, Clone, Default)]
+pub struct SmState {
+    /// ALU pipeline: compute periods of different warps serialize here
+    /// (this is what makes the paper's Eq. (9) `avr_comp * #Aw` hold).
+    pub alu_free_ns: f64,
+    /// Load/store unit: one global transaction issued per core cycle.
+    pub lsu_free_ns: f64,
+    /// Shared-memory port: one access per core cycle, conflicts serialize.
+    pub smem_free_ns: f64,
+    /// This SM's L2 slice port (one transaction per `l2_ii` core cycles).
+    pub l2_port_free_ns: f64,
+    pub resident_blocks: u32,
+    pub resident_warps: u32,
+    /// Whether this SM ever hosted a block (`#Asm` accounting).
+    pub ever_active: bool,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::isa::{Addressing, MemPat};
+
+    fn prog() -> Program {
+        Program {
+            prologue: vec![Op::Compute(1)],
+            body: vec![Op::Compute(2), Op::Load(MemPat::new(1, Addressing::OwnLinear, 1))],
+            o_itrs: 3,
+            epilogue: vec![Op::Compute(3)],
+        }
+    }
+
+    #[test]
+    fn fetch_walks_full_program() {
+        let p = prog();
+        let mut w = WarpState::new(0, 0, 0, 0);
+        let mut seen = Vec::new();
+        while let Some((op, slot, iter)) = w.fetch(&p) {
+            seen.push((op.clone(), slot, iter));
+        }
+        assert_eq!(seen.len() as u64, p.dynamic_len());
+        // First op is the prologue compute with slot 0, iter 0.
+        assert_eq!(seen[0], (Op::Compute(1), 0, 0));
+        // Body iterations carry their iteration index.
+        assert_eq!(seen[1].2, 0);
+        assert_eq!(seen[3].2, 1);
+        assert_eq!(seen[5].2, 2);
+        // Epilogue uses iter == o_itrs.
+        assert_eq!(seen.last().unwrap().2, 3);
+        // Fetch after Done keeps returning None.
+        assert!(w.fetch(&p).is_none());
+    }
+
+    #[test]
+    fn empty_body_skipped() {
+        let p = Program {
+            prologue: vec![Op::Compute(1)],
+            body: vec![],
+            o_itrs: 5,
+            epilogue: vec![Op::Compute(2)],
+        };
+        let mut w = WarpState::new(0, 0, 0, 0);
+        let mut n = 0;
+        while w.fetch(&p).is_some() {
+            n += 1;
+        }
+        assert_eq!(n, 2);
+    }
+
+    #[test]
+    fn block_done_tracking() {
+        let mut b = BlockState::new(0, 0, 4);
+        for _ in 0..4 {
+            assert!(!b.done());
+            b.warps_done += 1;
+        }
+        assert!(b.done());
+    }
+}

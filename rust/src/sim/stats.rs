@@ -1,0 +1,131 @@
+//! Counter fabric: everything the profiler (Nsight stand-in) and the
+//! figure/table emitters need from a simulation run.
+
+/// Per-class dynamic instruction counts (paper Fig. 12 breakdown).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct InstMix {
+    pub compute: u64,
+    pub global_ld: u64,
+    pub global_st: u64,
+    pub shared: u64,
+    pub sync: u64,
+}
+
+impl InstMix {
+    pub fn total(&self) -> u64 {
+        self.compute + self.global_ld + self.global_st + self.shared + self.sync
+    }
+}
+
+/// One recorded memory-request latency sample (paper Fig. 5).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LatencySample {
+    pub warp: u64,
+    pub issue_ns: f64,
+    pub latency_ns: f64,
+}
+
+/// Aggregated counters for one kernel execution.
+#[derive(Debug, Clone, Default)]
+pub struct SimStats {
+    /// Dynamic warp-level instruction mix.
+    pub mix: InstMix,
+    /// Global-memory transactions issued (loads + stores), all warps.
+    pub gl_txns: u64,
+    /// L2 accesses / hits (transaction granularity).
+    pub l2_accesses: u64,
+    pub l2_hits: u64,
+    /// Texture/L1 accesses / hits (only loads marked `via_l1`).
+    pub l1_accesses: u64,
+    pub l1_hits: u64,
+    /// DRAM transactions (L2 misses reaching the MC).
+    pub dram_txns: u64,
+    /// DRAM row-buffer misses.
+    pub dram_row_misses: u64,
+    /// Total channel busy time (ns) summed over channels.
+    pub dram_busy_ns: f64,
+    /// Shared-memory accesses (op granularity) and bank transactions.
+    pub smem_accesses: u64,
+    pub smem_txns: u64,
+    /// Barriers executed (block-wide releases).
+    pub barriers: u64,
+    /// Blocks retired.
+    pub blocks_retired: u64,
+    /// Warps retired.
+    pub warps_retired: u64,
+    /// Peak resident warps observed on any SM (`#Aw` measured).
+    pub peak_warps_per_sm: u32,
+    /// Number of SMs that received at least one block (`#Asm`).
+    pub active_sms: u32,
+    /// Wall-clock kernel duration, ns.
+    pub elapsed_ns: f64,
+    /// Optional per-request latency samples (Fig. 5).
+    pub latency_samples: Vec<LatencySample>,
+}
+
+impl SimStats {
+    /// Measured L2 hit rate (`l2_hr`); 0 when no traffic.
+    pub fn l2_hit_rate(&self) -> f64 {
+        if self.l2_accesses == 0 {
+            0.0
+        } else {
+            self.l2_hits as f64 / self.l2_accesses as f64
+        }
+    }
+
+    /// Measured texture/L1 hit rate over all global transactions (the
+    /// fraction of traffic the L1 absorbs: L1 misses continue to L2, so
+    /// total traffic = l1_hits + l2_accesses); 0 when no L1 traffic.
+    pub fn l1_hit_rate(&self) -> f64 {
+        let total = self.l1_hits + self.l2_accesses;
+        if total == 0 {
+            0.0
+        } else {
+            self.l1_hits as f64 / total as f64
+        }
+    }
+
+    /// Achieved DRAM bandwidth in bytes/ns (= GB/s).
+    pub fn dram_bandwidth(&self, line_bytes: u32) -> f64 {
+        if self.elapsed_ns <= 0.0 {
+            0.0
+        } else {
+            self.dram_txns as f64 * line_bytes as f64 / self.elapsed_ns
+        }
+    }
+
+    /// Elapsed time expressed in core cycles at `core_mhz`.
+    pub fn elapsed_core_cycles(&self, core_mhz: f64) -> f64 {
+        self.elapsed_ns * core_mhz / 1e3
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hit_rate_handles_zero() {
+        let s = SimStats::default();
+        assert_eq!(s.l2_hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn hit_rate_ratio() {
+        let s = SimStats { l2_accesses: 200, l2_hits: 150, ..Default::default() };
+        assert!((s.l2_hit_rate() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bandwidth_and_cycles() {
+        let s = SimStats { dram_txns: 1000, elapsed_ns: 500.0, ..Default::default() };
+        assert!((s.dram_bandwidth(32) - 64.0).abs() < 1e-12); // 32 KB / 500 ns
+        assert!((s.elapsed_core_cycles(1000.0) - 500.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mix_total() {
+        let m = InstMix { compute: 5, global_ld: 3, global_st: 2, shared: 4, sync: 1 };
+        assert_eq!(m.total(), 15);
+    }
+}

@@ -1,0 +1,80 @@
+//! Mini benchmark harness (criterion substitute): warmup, repeated
+//! timed runs, mean/min/max reporting. Benches under `rust/benches/`
+//! use `harness = false` and drive this directly.
+
+use std::time::Instant;
+
+/// Timing statistics over the measured runs.
+#[derive(Debug, Clone, Copy)]
+pub struct Stats {
+    pub iters: u32,
+    pub mean_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+}
+
+impl Stats {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+}
+
+/// Measure `f` with `warmup` unmeasured runs then `iters` measured runs.
+pub fn measure<F: FnMut()>(warmup: u32, iters: u32, mut f: F) -> Stats {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters as usize);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_nanos() as f64);
+    }
+    let sum: f64 = samples.iter().sum();
+    Stats {
+        iters,
+        mean_ns: sum / iters as f64,
+        min_ns: samples.iter().copied().fold(f64::INFINITY, f64::min),
+        max_ns: samples.iter().copied().fold(0.0, f64::max),
+    }
+}
+
+/// Measure and print one line in a stable, grep-able format.
+pub fn bench<F: FnMut()>(name: &str, warmup: u32, iters: u32, f: F) -> Stats {
+    let s = measure(warmup, iters, f);
+    println!(
+        "bench {name:<40} mean {:>12.3} ms   min {:>12.3} ms   max {:>12.3} ms   ({} iters)",
+        s.mean_ns / 1e6,
+        s.min_ns / 1e6,
+        s.max_ns / 1e6,
+        s.iters
+    );
+    s
+}
+
+/// Print a section header for a bench binary (one per paper artifact).
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_positive_time() {
+        let s = measure(1, 5, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert_eq!(s.iters, 5);
+        assert!(s.mean_ns > 0.0);
+        assert!(s.min_ns <= s.mean_ns && s.mean_ns <= s.max_ns);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_iters_rejected() {
+        measure(0, 0, || {});
+    }
+}

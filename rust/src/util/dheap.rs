@@ -1,0 +1,151 @@
+//! 4-ary min-heap — tried as the simulator's event queue and
+//! **reverted** (EXPERIMENTS.md §Perf iteration 3): on 16-byte packed
+//! events std's hole-based `BinaryHeap` sift beat this swap-based
+//! implementation by ~1.5×. Kept as a tested utility and an honest
+//! record of the experiment.
+
+/// A d=4 min-heap. `T: Ord` with the *smallest* element at the root.
+#[derive(Debug, Clone, Default)]
+pub struct MinHeap4<T> {
+    data: Vec<T>,
+}
+
+impl<T: Ord> MinHeap4<T> {
+    pub fn new() -> Self {
+        MinHeap4 { data: Vec::new() }
+    }
+
+    pub fn with_capacity(n: usize) -> Self {
+        MinHeap4 { data: Vec::with_capacity(n) }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn peek(&self) -> Option<&T> {
+        self.data.first()
+    }
+
+    pub fn push(&mut self, item: T) {
+        self.data.push(item);
+        self.sift_up(self.data.len() - 1);
+    }
+
+    pub fn pop(&mut self) -> Option<T> {
+        let n = self.data.len();
+        if n == 0 {
+            return None;
+        }
+        self.data.swap(0, n - 1);
+        let out = self.data.pop();
+        if !self.data.is_empty() {
+            self.sift_down(0);
+        }
+        out
+    }
+
+    #[inline]
+    fn sift_up(&mut self, mut i: usize) {
+        while i > 0 {
+            let parent = (i - 1) / 4;
+            if self.data[i] < self.data[parent] {
+                self.data.swap(i, parent);
+                i = parent;
+            } else {
+                break;
+            }
+        }
+    }
+
+    #[inline]
+    fn sift_down(&mut self, mut i: usize) {
+        let n = self.data.len();
+        loop {
+            let first_child = 4 * i + 1;
+            if first_child >= n {
+                break;
+            }
+            let last_child = (first_child + 4).min(n);
+            // Smallest of up to four children.
+            let mut best = first_child;
+            for c in first_child + 1..last_child {
+                if self.data[c] < self.data[best] {
+                    best = c;
+                }
+            }
+            if self.data[best] < self.data[i] {
+                self.data.swap(i, best);
+                i = best;
+            } else {
+                break;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::Rng;
+
+    #[test]
+    fn pops_in_sorted_order() {
+        let mut h = MinHeap4::new();
+        let mut rng = Rng::new(5);
+        let mut vals: Vec<u64> = (0..2000).map(|_| rng.next_u64() % 10_000).collect();
+        for &v in &vals {
+            h.push(v);
+        }
+        vals.sort();
+        let mut out = Vec::new();
+        while let Some(v) = h.pop() {
+            out.push(v);
+        }
+        assert_eq!(out, vals);
+    }
+
+    #[test]
+    fn peek_matches_pop() {
+        let mut h = MinHeap4::new();
+        for v in [5u32, 1, 9, 3] {
+            h.push(v);
+        }
+        assert_eq!(h.peek(), Some(&1));
+        assert_eq!(h.pop(), Some(1));
+        assert_eq!(h.peek(), Some(&3));
+        assert_eq!(h.len(), 3);
+    }
+
+    #[test]
+    fn empty_behaviour() {
+        let mut h: MinHeap4<u32> = MinHeap4::with_capacity(8);
+        assert!(h.is_empty());
+        assert_eq!(h.pop(), None);
+        assert_eq!(h.peek(), None);
+    }
+
+    #[test]
+    fn interleaved_push_pop_stays_ordered() {
+        let mut h = MinHeap4::new();
+        let mut rng = Rng::new(6);
+        let mut last = 0u64;
+        for round in 0..50 {
+            for _ in 0..40 {
+                // Monotone-ish inserts like simulator event times.
+                h.push(last + rng.next_u64() % 100 + round);
+            }
+            let mut prev = 0;
+            for _ in 0..30 {
+                let v = h.pop().unwrap();
+                assert!(v >= prev);
+                prev = v;
+            }
+            last = prev;
+        }
+    }
+}

@@ -1,0 +1,7 @@
+//! Small in-tree utilities standing in for crates absent from the
+//! offline vendor set (criterion, proptest, rand) — DESIGN.md "Offline
+//! substitutions".
+
+pub mod bench;
+pub mod dheap;
+pub mod prop;

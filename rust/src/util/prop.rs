@@ -1,0 +1,100 @@
+//! Tiny property-testing helper (proptest substitute): a deterministic
+//! xorshift generator plus a `forall` runner that reports the failing
+//! case and its seed index.
+
+/// Deterministic xorshift64* PRNG.
+#[derive(Debug, Clone)]
+pub struct Rng(u64);
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Rng(seed.max(1))
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.0 = x;
+        x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    }
+
+    /// Uniform f64 in [0, 1).
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Uniform f64 in [lo, hi).
+    pub fn range(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.f64() * (hi - lo)
+    }
+
+    /// Uniform u32 in [lo, hi].
+    pub fn u32(&mut self, lo: u32, hi: u32) -> u32 {
+        lo + (self.next_u64() % (hi - lo + 1) as u64) as u32
+    }
+
+    /// Bernoulli(p).
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+}
+
+/// Run `prop` on `n` generated cases; panic with the case index and the
+/// debug form of the failing value.
+pub fn forall<T: std::fmt::Debug>(
+    seed: u64,
+    n: u32,
+    mut generate: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> bool,
+) {
+    let mut rng = Rng::new(seed);
+    for i in 0..n {
+        let case = generate(&mut rng);
+        assert!(prop(&case), "property failed at case {i} (seed {seed}): {case:?}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_streams() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn ranges_respected() {
+        let mut r = Rng::new(7);
+        for _ in 0..1000 {
+            let x = r.range(3.0, 5.0);
+            assert!((3.0..5.0).contains(&x));
+            let u = r.u32(2, 9);
+            assert!((2..=9).contains(&u));
+        }
+    }
+
+    #[test]
+    fn forall_passes_good_property() {
+        forall(1, 200, |r| r.range(0.0, 10.0), |x| *x >= 0.0 && *x < 10.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn forall_reports_failure() {
+        forall(1, 50, |r| r.f64(), |x| *x < 0.5);
+    }
+
+    #[test]
+    fn chance_is_roughly_calibrated() {
+        let mut r = Rng::new(99);
+        let hits = (0..10_000).filter(|_| r.chance(0.3)).count();
+        assert!((2700..3300).contains(&hits), "{hits}");
+    }
+}

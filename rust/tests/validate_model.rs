@@ -1,0 +1,193 @@
+//! Property-based validation of model invariants (proptest substitute:
+//! `gpufreq::util::prop`, see DESIGN.md "Offline substitutions"), plus a
+//! randomized PJRT-vs-native equivalence sweep.
+
+use gpufreq::model::{self, HwParams, KernelCounters};
+use gpufreq::runtime::Runtime;
+use gpufreq::util::prop::{forall, Rng};
+
+fn random_counters(r: &mut Rng) -> KernelCounters {
+    let gld_body = r.range(1.0, 32.0).round();
+    let wpb = r.u32(1, 16) as f64;
+    let blocks_per_sm = r.u32(1, 8) as f64;
+    KernelCounters {
+        l2_hr: r.range(0.0, 1.0),
+        gld_trans: gld_body + r.range(0.0, 4.0),
+        avr_inst: r.range(0.1, 200.0),
+        n_blocks: r.u32(16, 1024) as f64,
+        wpb,
+        aw: wpb * blocks_per_sm,
+        n_sm: r.u32(1, 16) as f64,
+        o_itrs: r.u32(1, 256) as f64,
+        i_itrs: r.u32(0, 64) as f64,
+        uses_smem: r.chance(0.5),
+        smem_conflict: r.range(1.0, 8.0),
+        gld_body,
+        gld_edge: r.range(0.0, 16.0).round(),
+        mem_ops: r.u32(1, 6) as f64,
+        l1_hr: 0.0,
+    }
+}
+
+fn random_clock(r: &mut Rng) -> f64 {
+    (r.u32(4, 10) * 100) as f64
+}
+
+#[test]
+fn prop_predictions_positive_and_finite() {
+    forall(
+        101,
+        500,
+        |r| (random_counters(r), random_clock(r), random_clock(r)),
+        |(c, cf, mf)| {
+            let hw = HwParams::paper_defaults();
+            let p = model::predict(c, &hw, *cf, *mf);
+            p.t_active > 0.0
+                && p.t_active.is_finite()
+                && p.t_exec_cycles >= p.t_active * 0.999
+                && p.time_us > 0.0
+        },
+    );
+}
+
+#[test]
+fn prop_time_equals_cycles_over_frequency() {
+    forall(
+        102,
+        300,
+        |r| (random_counters(r), random_clock(r), random_clock(r)),
+        |(c, cf, mf)| {
+            let p = model::predict(c, &HwParams::paper_defaults(), *cf, *mf);
+            (p.time_us - p.t_exec_cycles / cf).abs() < 1e-9 * p.time_us.max(1.0)
+        },
+    );
+}
+
+#[test]
+fn prop_mem_frequency_monotone_within_regime() {
+    // Raising the memory clock never slows a kernel as long as the
+    // regime does not flip (boundary jumps analysed in DESIGN.md).
+    forall(
+        103,
+        300,
+        |r| (random_counters(r), random_clock(r)),
+        |(c, cf)| {
+            let hw = HwParams::paper_defaults();
+            let lo = model::predict(c, &hw, *cf, 400.0);
+            let hi = model::predict(c, &hw, *cf, 1000.0);
+            lo.regime != hi.regime || hi.time_us <= lo.time_us * 1.0001
+        },
+    );
+}
+
+#[test]
+fn prop_core_frequency_speeds_up_compute_bound() {
+    forall(
+        104,
+        200,
+        |r| {
+            let mut c = random_counters(r);
+            c.uses_smem = false;
+            c.l2_hr = 0.95;
+            c.avr_inst = r.range(50.0, 500.0);
+            c
+        },
+        |c| {
+            let hw = HwParams::paper_defaults();
+            let slow = model::predict(c, &hw, 400.0, 700.0);
+            let fast = model::predict(c, &hw, 1000.0, 700.0);
+            // Compute-dominated kernels scale ~inverse with core clock.
+            let speedup = slow.time_us / fast.time_us;
+            speedup > 2.0
+        },
+    );
+}
+
+#[test]
+fn prop_rounds_scale_with_grid() {
+    // Doubling the grid (blocks) doubles T_exec once past one full wave.
+    forall(
+        105,
+        200,
+        |r| (random_counters(r), random_clock(r), random_clock(r)),
+        |(c, cf, mf)| {
+            let hw = HwParams::paper_defaults();
+            let full_wave = c.wpb * c.n_blocks >= c.aw * c.n_sm;
+            if !full_wave {
+                return true;
+            }
+            let p1 = model::predict(c, &hw, *cf, *mf);
+            let mut c2 = *c;
+            c2.n_blocks *= 2.0;
+            let p2 = model::predict(&c2, &hw, *cf, *mf);
+            (p2.t_exec_cycles / p1.t_exec_cycles - 2.0).abs() < 1e-6
+        },
+    );
+}
+
+#[test]
+fn prop_l2_hit_rate_reduces_memory_time() {
+    forall(
+        106,
+        200,
+        |r| {
+            let mut c = random_counters(r);
+            c.uses_smem = false;
+            c.avr_inst = 0.2; // memory-bound
+            c.aw = 64.0;
+            c
+        },
+        |c| {
+            let hw = HwParams::paper_defaults();
+            let mut hot = *c;
+            hot.l2_hr = (c.l2_hr + 0.4).min(1.0);
+            let cold = model::predict(c, &hw, 700.0, 700.0);
+            let warm = model::predict(&hot, &hw, 700.0, 700.0);
+            // Monotone within a regime; boundary jumps are a documented
+            // property of the piecewise model (DESIGN.md).
+            cold.regime != warm.regime || warm.time_us <= cold.time_us * 1.0001
+        },
+    );
+}
+
+#[test]
+fn prop_pjrt_matches_native_on_random_inputs() {
+    // 256 random (counters, frequency) rows through the AOT artifact
+    // must agree with the scalar Rust model to f32 tolerance.
+    let rt = Runtime::load_default().expect("artifacts present (make artifacts)");
+    let hw = HwParams::paper_defaults();
+    let mut rng = Rng::new(107);
+    let cases: Vec<(KernelCounters, f64, f64)> =
+        (0..256).map(|_| (random_counters(&mut rng), random_clock(&mut rng), random_clock(&mut rng))).collect();
+    let rows: Vec<_> = cases.iter().map(|(c, cf, mf)| c.to_features(*cf, *mf)).collect();
+    let got = rt.predict(&rows, &hw.to_f32()).unwrap();
+    for ((c, cf, mf), g) in cases.iter().zip(got) {
+        let native = model::predict(c, &hw, *cf, *mf);
+        let rel = (g[2] as f64 - native.time_us).abs() / native.time_us.max(1e-9);
+        assert!(
+            rel < 5e-4,
+            "pjrt {} vs native {} for {c:?} at ({cf},{mf})",
+            g[2],
+            native.time_us
+        );
+        assert_eq!(g[3] as u32, native.regime as u32, "{c:?} ({cf},{mf})");
+    }
+}
+
+#[test]
+fn prop_simulator_deterministic_across_runs() {
+    use gpufreq::sim::engine::simulate;
+    use gpufreq::sim::{Clocks, GpuSpec};
+    let spec = GpuSpec::default();
+    forall(
+        108,
+        8,
+        |r| (r.u32(0, 11), random_clock(r), random_clock(r)),
+        |(idx, cf, mf)| {
+            let k = &gpufreq::kernels::all()[*idx as usize];
+            let a = simulate(&spec, Clocks::new(*cf, *mf), k);
+            let b = simulate(&spec, Clocks::new(*cf, *mf), k);
+            a.stats.elapsed_ns == b.stats.elapsed_ns && a.stats.l2_hits == b.stats.l2_hits
+        },
+    );
+}
