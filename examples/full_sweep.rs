@@ -20,9 +20,9 @@
 
 use std::time::{Duration, Instant};
 
-use gpufreq::coordinator::batcher::BatchServer;
 use gpufreq::coordinator::sweep::run_sweep;
 use gpufreq::coordinator::validate::{KernelValidation, SamplePoint, Validation};
+use gpufreq::engine::{BatchServer, Engine};
 use gpufreq::kernels;
 use gpufreq::microbench;
 use gpufreq::model::HwParams;
@@ -44,9 +44,9 @@ fn main() -> anyhow::Result<()> {
     let bw = microbench::bandwidth_probe(&spec, baseline);
     let ratios_f32: Vec<f32> = ratios.iter().map(|&r| r as f32).collect();
     let lats_f32: Vec<f32> = lats.iter().map(|&l| l as f32).collect();
-    let rt = gpufreq::runtime::Runtime::load_default()?;
+    let rt = gpufreq::runtime::Runtime::load_or_emulated();
     let (slope, intercept, r2) = rt.fit_dm_lat(&ratios_f32, &lats_f32)?;
-    drop(rt); // the batch server owns its own client below
+    drop(rt); // the batch server owns its own executors below
     println!(
         "      dm_lat = {slope:.2}*(cf/mf) + {intercept:.2} core cycles (R² = {r2:.4}; paper 222.78/277.32 @ 0.9959)"
     );
@@ -77,16 +77,22 @@ fn main() -> anyhow::Result<()> {
 
     // --- 3. one-shot profiles ------------------------------------------
     println!("[3/5] profiling each kernel once at 700/700 MHz ...");
-    let profiles: Vec<_> = kernels.iter().map(|k| profiler::profile_at(&spec, k, baseline)).collect();
+    let profiles: Vec<_> =
+        kernels.iter().map(|k| profiler::profile_at(&spec, k, baseline)).collect();
 
-    // --- 4. batched PJRT predictions ------------------------------------
-    println!("[4/5] predicting through the batched PJRT service ...");
-    let (server, _h) = BatchServer::start_default(hw.to_f32(), Duration::from_millis(1))?;
-    println!("      PJRT platform: {}", server.platform());
+    // --- 4. engine-routed batched predictions ---------------------------
+    println!("[4/5] predicting through the engine's sharded PJRT service ...");
+    let (server, _h) = BatchServer::start_auto(hw.to_f32(), Duration::from_millis(1), workers)?;
+    println!(
+        "      PJRT platform: {} ({} request shards)",
+        server.platform(),
+        server.shard_count()
+    );
+    let engine = Engine::builder(hw).pjrt(server.clone()).build();
     let t_pred = Instant::now();
     let mut per_kernel = Vec::new();
     for (k, p) in kernels.iter().zip(&profiles) {
-        let preds = server.predict_grid(&p.counters, &pairs)?;
+        let preds = engine.predict_grid(&p.counters, &pairs)?;
         let points = pairs
             .iter()
             .zip(preds)
@@ -107,6 +113,12 @@ fn main() -> anyhow::Result<()> {
         server.stats().batches(),
         server.stats().mean_occupancy() * 100.0
     );
+    if let Some(cs) = engine.cache_stats() {
+        println!(
+            "      engine cache: {} misses, {} entries warmed for downstream consumers",
+            cs.misses, cs.entries
+        );
+    }
     let v = Validation { per_kernel };
 
     // --- 5. report -------------------------------------------------------

@@ -16,7 +16,7 @@ fn main() {
     let ks = kernels::all();
 
     bench::section("Ablation: predictor MAPE over the full grid");
-    let rows = tables::run_ablation(&spec, &ks, &standard_baselines(ex.hw), &pairs);
+    let rows = tables::run_ablation(&spec, &ks, ex.hw, standard_baselines(ex.hw), &pairs);
     print!("{}", tables::ablation(&rows).ascii());
 
     let paper = rows.iter().find(|(n, _, _)| n == "paper").unwrap().1;
@@ -39,7 +39,8 @@ fn main() {
         std::hint::black_box(tables::run_ablation(
             &spec,
             &ks,
-            &standard_baselines(ex.hw),
+            ex.hw,
+            standard_baselines(ex.hw),
             &pairs,
         ));
     });
@@ -48,13 +49,14 @@ fn main() {
     // The TEX kernel routes its loads through the texture/L1 cache the
     // published model ignores; the L1-extended model repairs it.
     bench::section("Ablation: texture/L1 future work (TEX kernel)");
-    let l1_lat = gpufreq::microbench::l1_latency_probe(&spec, gpufreq::sim::Clocks::new(700.0, 700.0));
+    let l1_lat =
+        gpufreq::microbench::l1_latency_probe(&spec, gpufreq::sim::Clocks::new(700.0, 700.0));
     let tex = vec![gpufreq::kernels::texture_filter()];
     let l1_preds: Vec<Box<dyn gpufreq::baselines::Predictor>> = vec![
         Box::new(gpufreq::baselines::PaperModel { hw: ex.hw }),
         Box::new(gpufreq::baselines::L1Extended::new(ex.hw, l1_lat)),
     ];
-    let rows = tables::run_ablation(&spec, &tex, &l1_preds, &pairs);
+    let rows = tables::run_ablation(&spec, &tex, ex.hw, l1_preds, &pairs);
     print!("{}", tables::ablation(&rows).ascii());
     let paper_tex = rows.iter().find(|(n, _, _)| n == "paper").unwrap().1;
     let ext_tex = rows.iter().find(|(n, _, _)| n == "paper+l1").unwrap().1;

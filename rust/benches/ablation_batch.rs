@@ -25,7 +25,7 @@ fn counters(i: usize) -> KernelCounters {
         gld_body: 4.0 + (i % 12) as f64,
         gld_edge: (i % 8) as f64,
         mem_ops: 1.0 + (i % 4) as f64,
-            l1_hr: 0.0,
+        l1_hr: 0.0,
     }
 }
 
@@ -44,10 +44,10 @@ fn main() {
         }
     });
 
-    let rt = Runtime::load_default().expect("artifacts present (make artifacts)");
+    let rt = Runtime::load_or_emulated();
     let rows: Vec<_> = cases.iter().map(|(c, cf, mf)| c.to_features(*cf, *mf)).collect();
     let hw32 = hw.to_f32();
-    let pjrt = bench::bench("PJRT batched artifact (4096 rows, batch 1024)", 2, 10, || {
+    let pjrt = bench::bench("PJRT batched executor (4096 rows, batch 1024)", 2, 10, || {
         std::hint::black_box(rt.predict(&rows, &hw32).unwrap());
     });
 
@@ -58,8 +58,9 @@ fn main() {
         });
     }
 
-    // The batching *service* (channel + worker) on the same workload.
-    let (server, _h) = BatchServer::start_default(hw32, Duration::from_millis(1)).unwrap();
+    // The batching *service* (sharded channels + drain workers) on the
+    // same workload.
+    let (server, _h) = BatchServer::start_emulated(hw32, Duration::from_millis(1), 2).unwrap();
     let c0 = counters(1);
     let grid: Vec<(f64, f64)> = (0..49)
         .map(|i| (400.0 + (i % 7) as f64 * 100.0, 400.0 + (i / 7) as f64 * 100.0))

@@ -1,0 +1,101 @@
+//! Engine bench (DESIGN.md §5, experiment E2): cold vs warm
+//! `predict_grid` on a 13×13 frequency grid, per backend, plus the
+//! scoped-thread batch backend on a sweep-sized workload. Drives
+//! `util::bench` (criterion substitute, harness = false).
+
+use gpufreq::engine::{Backend, Engine, NativeBatch, Request};
+use gpufreq::model::{HwParams, KernelCounters};
+use gpufreq::util::bench;
+
+fn counters(i: usize) -> KernelCounters {
+    KernelCounters {
+        l2_hr: (i % 10) as f64 / 10.0,
+        gld_trans: 4.0 + (i % 12) as f64,
+        avr_inst: 0.5 + (i % 50) as f64,
+        n_blocks: 256.0,
+        wpb: 8.0,
+        aw: 64.0,
+        n_sm: 16.0,
+        o_itrs: 8.0,
+        i_itrs: (i % 16) as f64,
+        uses_smem: i % 3 == 0,
+        smem_conflict: 1.0 + (i % 4) as f64,
+        gld_body: 4.0 + (i % 12) as f64,
+        gld_edge: (i % 8) as f64,
+        mem_ops: 1.0 + (i % 4) as f64,
+        l1_hr: 0.0,
+    }
+}
+
+/// 13×13 grid: 400–1000 MHz at 50 MHz stride on both axes.
+fn grid_13x13() -> Vec<(f64, f64)> {
+    let steps: Vec<f64> = (0..13).map(|i| 400.0 + i as f64 * 50.0).collect();
+    let mut out = Vec::with_capacity(169);
+    for &cf in &steps {
+        for &mf in &steps {
+            out.push((cf, mf));
+        }
+    }
+    out
+}
+
+fn main() {
+    let hw = HwParams::paper_defaults();
+    let grid = grid_13x13();
+    let c0 = counters(1);
+
+    bench::section("Engine cache: cold vs warm predict_grid (13x13 = 169 pairs)");
+
+    // Cold: a fresh engine per iteration, every pair is a miss.
+    bench::bench("cold grid (native-scalar, fresh cache)", 2, 20, || {
+        let engine = Engine::native(hw);
+        std::hint::black_box(engine.predict_grid(&c0, &grid).unwrap());
+    });
+
+    // Warm: one engine, the first pass primed outside the timer.
+    let warm_engine = Engine::native(hw);
+    warm_engine.predict_grid(&c0, &grid).unwrap();
+    let warm = bench::bench("warm grid (native-scalar, all hits)", 2, 20, || {
+        std::hint::black_box(warm_engine.predict_grid(&c0, &grid).unwrap());
+    });
+    let s = warm_engine.cache_stats().unwrap();
+    println!(
+        "cache after warm runs: {} hits / {} misses ({:.1}% hit rate, {} entries)",
+        s.hits,
+        s.misses,
+        s.hit_rate() * 100.0,
+        s.entries
+    );
+    assert!(s.hit_rate() > 0.9, "warm loop must be cache-served");
+
+    // Uncached reference: the same grid with memoization disabled.
+    let uncached = Engine::builder(hw).scalar().without_cache().build();
+    bench::bench("uncached grid (native-scalar)", 2, 20, || {
+        std::hint::black_box(uncached.predict_grid(&c0, &grid).unwrap());
+    });
+
+    bench::section("Engine backends: sweep-sized batch (4096 distinct rows)");
+    let reqs: Vec<Request> = (0..4096)
+        .map(|i| Request {
+            counters: counters(i),
+            core_mhz: 400.0 + (i % 13) as f64 * 50.0,
+            mem_mhz: 400.0 + (i / 13 % 13) as f64 * 50.0,
+        })
+        .collect();
+    // Straight through Backend::predict_batch: every row keeps its own
+    // counters, so this measures backend throughput on genuinely
+    // distinct inputs (no cache in this path).
+    for workers in [1usize, 2, 4, 8] {
+        let backend = NativeBatch::new(hw, workers);
+        bench::bench(&format!("native-batch predict ({workers} workers)"), 1, 10, || {
+            std::hint::black_box(backend.predict_batch(&reqs).unwrap());
+        });
+    }
+
+    bench::section("Engine backends: PJRT service grid (169 pairs, 2 workers)");
+    let pjrt = Engine::pjrt_emulated(hw, 2).unwrap();
+    pjrt.predict_grid(&c0, &grid).unwrap(); // spin-up outside the timer
+    bench::bench("pjrt-emulated warm grid", 1, 10, || {
+        std::hint::black_box(pjrt.predict_grid(&c0, &grid).unwrap());
+    });
+}

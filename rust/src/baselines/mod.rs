@@ -6,7 +6,14 @@
 use crate::model::{self, HwParams, KernelCounters};
 
 /// A time predictor under frequency scaling.
-pub trait Predictor {
+///
+/// `Send + Sync` so any predictor can run behind the engine facade
+/// (`engine::PredictorBackend` adapts a boxed `Predictor` into an
+/// `engine::Backend`, giving every baseline the shared grid cache and
+/// the streaming/batching paths for free); the reverse adapter
+/// `engine::EnginePredictor` exposes an engine wherever a
+/// `&dyn Predictor` is still accepted.
+pub trait Predictor: Send + Sync {
     fn name(&self) -> &'static str;
     /// Predicted execution time in microseconds at (core_mhz, mem_mhz).
     fn predict_us(&self, c: &KernelCounters, core_mhz: f64, mem_mhz: f64) -> f64;

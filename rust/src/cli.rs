@@ -1,25 +1,29 @@
 //! Hand-rolled CLI (clap is not in the offline vendor set — DESIGN.md
 //! "Offline substitutions"): subcommand + `--flag value` parsing and
 //! the command implementations behind the `gpufreq` launcher.
+//!
+//! Every prediction a command makes — validate, advise, serve, the
+//! fig13/fig14/ablation reports — routes through one `engine::Engine`
+//! built by [`build_engine`]; `--backend` picks the execution strategy
+//! and the shared grid cache comes for free.
 
 use std::path::PathBuf;
 use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
-use crate::baselines::{standard_baselines, PaperModel};
+use crate::baselines::standard_baselines;
 use crate::config::{self, Config};
-use crate::coordinator::batcher::BatchServer;
 use crate::coordinator::sweep::run_sweep;
-use crate::coordinator::validate::{validate_with, SamplePoint, Validation};
-use crate::dvfs::{advise, Objective, PowerModel};
+use crate::coordinator::validate::{validate_with_engine, SamplePoint, Validation};
+use crate::dvfs::{advise_with_engine, Objective, PowerModel};
+use crate::engine::{BatchServer, Engine, StreamJob};
 use crate::kernels;
 use crate::microbench;
-use crate::model::HwParams;
+use crate::model::{HwParams, KernelCounters};
 use crate::profiler;
 use crate::report::tables;
 use crate::sim::isa::Kernel;
-use crate::sim::Clocks;
 
 pub const USAGE: &str = "\
 gpufreq — GPGPU performance estimation with core & memory frequency scaling
@@ -36,16 +40,18 @@ COMMANDS:
   report <ARTIFACT>       Regenerate a paper artifact: table1 table2 table3
                           table6 fig2 fig5 fig12 fig13 fig14 ablation
   advise <KERNEL>         DVFS energy advisor (paper §VII application)
-  serve                   Demo the batched PJRT prediction service
+  serve                   Demo the streaming prediction service (PJRT backend)
   help                    Show this message
 
 OPTIONS:
   --config <PATH>         TOML config (default: configs/gtx980.toml if present)
   --kernels <A,B,...>     Restrict to these kernels
-  --pjrt                  Predict through the AOT PJRT artifact (default: native)
+  --backend <NAME>        Prediction backend: native | batch | pjrt (default native)
+  --pjrt                  Alias for --backend pjrt
+  --no-cache              Disable the engine's frequency-grid cache
   --csv                   Emit CSV instead of ASCII tables
   --objective <NAME>      advise: energy | edp | slack:<frac> (default energy)
-  --workers <N>           sweep/validate parallelism (default: # cpus)
+  --workers <N>           sweep/predict parallelism (default: # cpus)
 ";
 
 /// Parsed command line.
@@ -55,7 +61,8 @@ pub struct Args {
     pub positional: Vec<String>,
     pub config: Option<PathBuf>,
     pub kernels: Option<Vec<String>>,
-    pub pjrt: bool,
+    pub backend: String,
+    pub cache: bool,
     pub csv: bool,
     pub objective: String,
     pub workers: usize,
@@ -68,7 +75,8 @@ impl Default for Args {
             positional: Vec::new(),
             config: None,
             kernels: None,
-            pjrt: false,
+            backend: "native".into(),
+            cache: true,
             csv: false,
             objective: "energy".into(),
             workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
@@ -99,7 +107,15 @@ pub fn parse_args(argv: &[String]) -> Result<Args> {
                         .collect(),
                 )
             }
-            "--pjrt" => args.pjrt = true,
+            "--backend" => {
+                let b = it.next().context("--backend needs a name")?.clone();
+                match b.as_str() {
+                    "native" | "batch" | "pjrt" => args.backend = b,
+                    other => bail!("unknown backend {other} (native | batch | pjrt)"),
+                }
+            }
+            "--pjrt" => args.backend = "pjrt".into(),
+            "--no-cache" => args.cache = false,
             "--csv" => args.csv = true,
             "--objective" => {
                 args.objective = it.next().context("--objective needs a value")?.clone()
@@ -152,27 +168,45 @@ fn print_table(t: &crate::report::Table, csv: bool) {
     }
 }
 
-/// PJRT-backed predictor for `validate --pjrt` (the production path).
-struct PjrtPredictor {
-    server: BatchServer,
+/// Drain-worker cap for the PJRT service. The artifact executes a
+/// fixed 1024-row padded batch per drain, so spreading a 49-pair grid
+/// over ncpus queues would run many nearly-empty padded batches;
+/// a few workers keep queues busy without collapsing occupancy.
+const PJRT_MAX_WORKERS: usize = 4;
+
+/// One construction path for the PJRT service (worker policy,
+/// batching window, error context) — used by `build_engine` and
+/// `serve` so the two cannot diverge.
+fn start_pjrt_server(args: &Args, hw: HwParams) -> Result<BatchServer> {
+    let workers = args.workers.clamp(1, PJRT_MAX_WORKERS);
+    let (server, _handles) =
+        BatchServer::start_auto(hw.to_f32(), Duration::from_millis(2), workers)
+            .context("starting the PJRT batch service")?;
+    Ok(server)
 }
 
-impl crate::baselines::Predictor for PjrtPredictor {
-    fn name(&self) -> &'static str {
-        "paper-pjrt"
-    }
-    fn predict_us(&self, c: &crate::model::KernelCounters, cf: f64, mf: f64) -> f64 {
-        self.server.predict(c, cf, mf).expect("batch server alive").time_us
-    }
+/// Build the prediction engine every command shares, per `--backend`.
+pub fn build_engine(args: &Args, hw: HwParams) -> Result<Engine> {
+    let builder = match args.backend.as_str() {
+        "native" => Engine::builder(hw).scalar(),
+        "batch" => Engine::builder(hw).batch(args.workers),
+        "pjrt" => Engine::builder(hw).pjrt(start_pjrt_server(args, hw)?),
+        other => bail!("unknown backend {other}"),
+    };
+    let builder = if args.cache { builder } else { builder.without_cache() };
+    Ok(builder.build())
 }
 
-fn build_predictor(args: &Args, hw: HwParams) -> Result<Box<dyn crate::baselines::Predictor>> {
-    if args.pjrt {
-        let (server, _handle) = BatchServer::start_default(hw.to_f32(), Duration::from_millis(1))
-            .context("loading AOT artifacts (run `make artifacts` first)")?;
-        Ok(Box::new(PjrtPredictor { server }))
-    } else {
-        Ok(Box::new(PaperModel { hw }))
+fn print_cache_line(engine: &Engine) {
+    if let Some(s) = engine.cache_stats() {
+        println!(
+            "engine[{}] cache: {} hits / {} misses ({:.0}% hit rate, {} entries)",
+            engine.backend_name(),
+            s.hits,
+            s.misses,
+            s.hit_rate() * 100.0,
+            s.entries
+        );
     }
 }
 
@@ -221,10 +255,11 @@ pub fn run(args: Args) -> Result<i32> {
                 &["kernel", "time_us", "l2_hr", "gld", "avr_inst", "#Aw", "#SM", "smem", "regime"],
             );
             let ex = microbench::extract(&spec, baseline);
+            let engine = build_engine(&args, ex.hw)?;
             for k in &ks {
                 let p = profiler::profile_at(&spec, k, baseline);
-                let pred =
-                    crate::model::predict(&p.counters, &ex.hw, baseline.core_mhz, baseline.mem_mhz);
+                let pred = engine
+                    .predict_one(&p.counters, baseline.core_mhz, baseline.mem_mhz)?;
                 t.row(vec![
                     p.kernel.clone(),
                     format!("{:.1}", p.baseline_time_us),
@@ -234,7 +269,10 @@ pub fn run(args: Args) -> Result<i32> {
                     format!("{:.0}", p.counters.aw),
                     format!("{:.0}", p.counters.n_sm),
                     format!("{}", p.counters.uses_smem),
-                    format!("{:?}", pred.regime),
+                    match pred.regime {
+                        Some(r) => format!("{r:?}"),
+                        None => "-".to_string(),
+                    },
                 ]);
             }
             print_table(&t, args.csv);
@@ -260,11 +298,12 @@ pub fn run(args: Args) -> Result<i32> {
         "validate" => {
             let ks = selected_kernels(&args, &cfg)?;
             let ex = microbench::extract(&spec, baseline);
-            let predictor = build_predictor(&args, ex.hw)?;
-            let v = validate_with(&spec, &ks, predictor.as_ref(), &pairs);
+            let engine = build_engine(&args, ex.hw)?;
+            let v = validate_with_engine(&spec, &ks, &engine, &pairs)?;
             let (chart, summary) = tables::fig14(&v);
             println!("{chart}");
             print_table(&summary, args.csv);
+            print_cache_line(&engine);
         }
         "report" => {
             let what = args.positional.first().map(String::as_str).unwrap_or("");
@@ -283,10 +322,10 @@ pub fn run(args: Args) -> Result<i32> {
                 ),
                 other => bail!("unknown objective {other}"),
             };
-            let predictor = build_predictor(&args, ex.hw)?;
+            let engine = build_engine(&args, ex.hw)?;
             let power = PowerModel::gtx980();
             let (best, points) =
-                advise(&p.counters, predictor.as_ref(), &power, &pairs, objective);
+                advise_with_engine(&p.counters, &engine, &power, &pairs, objective)?;
             let mut t = crate::report::Table::new(
                 &format!("DVFS advisor for {name} ({:?})", objective),
                 &["core MHz", "mem MHz", "time_us", "power W", "energy mJ", "EDP"],
@@ -308,31 +347,60 @@ pub fn run(args: Args) -> Result<i32> {
             );
         }
         "serve" => {
+            // serve IS the PJRT-service demo: --backend is ignored here
+            // (USAGE documents the command as PJRT-backed).
             let ex = microbench::extract(&spec, baseline);
-            let (server, _h) =
-                BatchServer::start_default(ex.hw.to_f32(), Duration::from_millis(2))
-                    .context("loading AOT artifacts (run `make artifacts` first)")?;
-            println!("PJRT platform: {}", server.platform());
-            let ks = selected_kernels(&args, &cfg)?;
-            let mut joins = Vec::new();
-            for k in ks {
-                let server = server.clone();
-                let spec = spec.clone();
-                let pairs = pairs.clone();
-                joins.push(std::thread::spawn(move || {
-                    let p = profiler::profile_at(&spec, &k, Clocks::new(700.0, 700.0));
-                    let out = server.predict_grid(&p.counters, &pairs).unwrap();
-                    let best = out
-                        .iter()
-                        .zip(&pairs)
-                        .min_by(|a, b| a.0.time_us.total_cmp(&b.0.time_us))
-                        .unwrap();
-                    (k.name.clone(), out.len(), best.1 .0, best.1 .1, best.0.time_us)
-                }));
+            let server = start_pjrt_server(&args, ex.hw)?;
+            println!(
+                "PJRT platform: {} ({} request shards)",
+                server.platform(),
+                server.shard_count()
+            );
+            let mut builder = Engine::builder(ex.hw).pjrt(server.clone());
+            if !args.cache {
+                builder = builder.without_cache();
             }
-            for j in joins {
-                let (name, n, cf, mf, t) = j.join().unwrap();
-                println!("{name:8} {n} predictions; fastest {cf:.0}/{mf:.0} MHz -> {t:.1} us");
+            let engine = builder.build();
+            let ks = selected_kernels(&args, &cfg)?;
+            let names: Vec<String> = ks.iter().map(|k| k.name.clone()).collect();
+            // Profile kernels on scoped threads (one simulator run each
+            // dominates serve's wall clock); predictions then stream
+            // through the engine's sharded workers.
+            let mut counters: Vec<Option<KernelCounters>> = vec![None; ks.len()];
+            std::thread::scope(|scope| {
+                for (slot, k) in counters.iter_mut().zip(&ks) {
+                    let spec = &spec;
+                    scope.spawn(move || {
+                        *slot = Some(profiler::profile_at(spec, k, baseline).counters);
+                    });
+                }
+            });
+            let jobs: Vec<StreamJob> = counters
+                .into_iter()
+                .enumerate()
+                .map(|(i, c)| StreamJob {
+                    id: i as u64,
+                    counters: c.expect("profiled"),
+                    pairs: pairs.clone(),
+                })
+                .collect();
+            for reply in engine.predict_stream(jobs) {
+                let ests = reply
+                    .result
+                    .map_err(|e| anyhow::anyhow!("stream job failed: {e}"))?;
+                let best = ests
+                    .iter()
+                    .zip(&pairs)
+                    .min_by(|a, b| a.0.time_us.total_cmp(&b.0.time_us))
+                    .expect("non-empty grid");
+                println!(
+                    "{:8} {} predictions; fastest {:.0}/{:.0} MHz -> {:.1} us",
+                    names[reply.id as usize],
+                    ests.len(),
+                    best.1 .0,
+                    best.1 .1,
+                    best.0.time_us
+                );
             }
             let st = server.stats();
             println!(
@@ -341,6 +409,7 @@ pub fn run(args: Args) -> Result<i32> {
                 st.batches(),
                 st.mean_occupancy() * 100.0
             );
+            print_cache_line(&engine);
         }
         other => {
             eprintln!("unknown command `{other}`\n");
@@ -384,8 +453,8 @@ fn run_report(what: &str, args: &Args, cfg: &Config) -> Result<()> {
         "fig13" => {
             let ks = selected_kernels(args, cfg)?;
             let ex = microbench::extract(&spec, baseline);
-            let predictor = build_predictor(args, ex.hw)?;
-            let v = validate_with(&spec, &ks, predictor.as_ref(), &pairs);
+            let engine = build_engine(args, ex.hw)?;
+            let v = validate_with_engine(&spec, &ks, &engine, &pairs)?;
             for (fc, fm) in [(Some(400.0), None), (Some(1000.0), None)] {
                 print_table(&tables::fig13(&v, fc, fm), args.csv);
             }
@@ -396,8 +465,8 @@ fn run_report(what: &str, args: &Args, cfg: &Config) -> Result<()> {
         "fig14" => {
             let ks = selected_kernels(args, cfg)?;
             let ex = microbench::extract(&spec, baseline);
-            let predictor = build_predictor(args, ex.hw)?;
-            let v = validate_with(&spec, &ks, predictor.as_ref(), &pairs);
+            let engine = build_engine(args, ex.hw)?;
+            let v = validate_with_engine(&spec, &ks, &engine, &pairs)?;
             let (chart, t) = tables::fig14(&v);
             println!("{chart}");
             print_table(&t, args.csv);
@@ -405,8 +474,7 @@ fn run_report(what: &str, args: &Args, cfg: &Config) -> Result<()> {
         "ablation" => {
             let ks = selected_kernels(args, cfg)?;
             let ex = microbench::extract(&spec, baseline);
-            let rows =
-                tables::run_ablation(&spec, &ks, &standard_baselines(ex.hw), &pairs);
+            let rows = tables::run_ablation(&spec, &ks, ex.hw, standard_baselines(ex.hw), &pairs);
             print_table(&tables::ablation(&rows), args.csv);
         }
         other => bail!("unknown report `{other}` (see `gpufreq help`)"),
@@ -436,9 +504,18 @@ mod tests {
     fn parses_command_and_flags() {
         let a = parse_args(&argv("validate --pjrt --workers 3 --kernels VA,MMS --csv")).unwrap();
         assert_eq!(a.command, "validate");
-        assert!(a.pjrt && a.csv);
+        assert_eq!(a.backend, "pjrt");
+        assert!(a.csv && a.cache);
         assert_eq!(a.workers, 3);
         assert_eq!(a.kernels.as_deref().unwrap(), ["VA".to_string(), "MMS".to_string()]);
+    }
+
+    #[test]
+    fn parses_backend_and_cache_flags() {
+        let a = parse_args(&argv("validate --backend batch --no-cache")).unwrap();
+        assert_eq!(a.backend, "batch");
+        assert!(!a.cache);
+        assert!(parse_args(&argv("validate --backend warp-drive")).is_err());
     }
 
     #[test]
@@ -458,5 +535,22 @@ mod tests {
     fn empty_argv_is_help() {
         let a = parse_args(&[]).unwrap();
         assert_eq!(a.command, "help");
+    }
+
+    #[test]
+    fn build_engine_honors_backend_choice() {
+        let hw = HwParams::paper_defaults();
+        let mut args = Args::default();
+        for (backend, name) in
+            [("native", "native-scalar"), ("batch", "native-batch"), ("pjrt", "pjrt")]
+        {
+            args.backend = backend.into();
+            let e = build_engine(&args, hw).unwrap();
+            assert_eq!(e.backend_name(), name);
+            assert!(e.cache_stats().is_some());
+        }
+        args.backend = "native".into();
+        args.cache = false;
+        assert!(build_engine(&args, hw).unwrap().cache_stats().is_none());
     }
 }

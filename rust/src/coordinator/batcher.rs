@@ -1,293 +1,8 @@
-//! Batched prediction service: the hot path of the system.
-//!
-//! The AOT artifact is specialized to a fixed (1024, 16) batch, so the
-//! coordinator's job is classic dynamic batching (vLLM-router style):
-//! requests from many clients queue on a channel; a worker drains up to
-//! a full batch (or until `max_wait` passes with a partial one),
-//! executes a single PJRT call, and fans the rows back out to the
-//! waiting clients. Python never runs here.
+//! Compatibility re-export: the batched prediction service moved into
+//! the unified engine layer (`engine::pjrt`), where it gained N drain
+//! workers over sharded request queues. Existing imports of
+//! `coordinator::batcher::{BatchServer, BatchPrediction, ServerStats}`
+//! keep working; new code should use `engine::Engine` with the PJRT
+//! backend instead of talking to the server directly.
 
-use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
-use std::sync::Arc;
-use std::thread::JoinHandle;
-use std::time::{Duration, Instant};
-
-use anyhow::Result;
-
-use crate::model::params::{N_FEATURES, N_HW_PARAMS, N_OUTPUTS};
-use crate::model::{KernelCounters, Regime};
-use crate::runtime::{Runtime, PREDICT_BATCH};
-
-/// A decoded prediction row.
-#[derive(Debug, Clone, Copy)]
-pub struct BatchPrediction {
-    pub t_active: f64,
-    pub t_exec_cycles: f64,
-    pub time_us: f64,
-    pub regime: Option<Regime>,
-}
-
-impl BatchPrediction {
-    fn from_row(row: [f32; N_OUTPUTS]) -> Self {
-        BatchPrediction {
-            t_active: row[0] as f64,
-            t_exec_cycles: row[1] as f64,
-            time_us: row[2] as f64,
-            regime: Regime::from_id(row[3] as u32),
-        }
-    }
-}
-
-struct Request {
-    features: [f32; N_FEATURES],
-    resp: Sender<BatchPrediction>,
-}
-
-/// Handle to the batching service. Cloneable; dropping every handle
-/// shuts the worker down.
-#[derive(Clone)]
-pub struct BatchServer {
-    tx: Sender<Request>,
-    stats: Arc<ServerStats>,
-    platform: String,
-}
-
-/// Counters the service exposes (all monotonically increasing).
-#[derive(Debug, Default)]
-pub struct ServerStats {
-    pub requests: std::sync::atomic::AtomicU64,
-    pub batches: std::sync::atomic::AtomicU64,
-    pub rows_padded: std::sync::atomic::AtomicU64,
-}
-
-impl ServerStats {
-    pub fn requests(&self) -> u64 {
-        self.requests.load(std::sync::atomic::Ordering::Relaxed)
-    }
-    pub fn batches(&self) -> u64 {
-        self.batches.load(std::sync::atomic::Ordering::Relaxed)
-    }
-    pub fn rows_padded(&self) -> u64 {
-        self.rows_padded.load(std::sync::atomic::Ordering::Relaxed)
-    }
-    /// Mean occupancy of executed batches in [0, 1].
-    pub fn mean_occupancy(&self) -> f64 {
-        let b = self.batches();
-        if b == 0 {
-            return 0.0;
-        }
-        let total_rows = b * PREDICT_BATCH as u64;
-        (total_rows - self.rows_padded()) as f64 / total_rows as f64
-    }
-}
-
-fn worker_loop(
-    runtime: Runtime,
-    hw: [f32; N_HW_PARAMS],
-    rx: Receiver<Request>,
-    max_wait: Duration,
-    stats: Arc<ServerStats>,
-) {
-    use std::sync::atomic::Ordering::Relaxed;
-    loop {
-        // Block for the first request of a batch.
-        let first = match rx.recv() {
-            Ok(r) => r,
-            Err(_) => return, // all senders dropped
-        };
-        let mut pending = vec![first];
-        let deadline = Instant::now() + max_wait;
-        while pending.len() < PREDICT_BATCH {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            match rx.recv_timeout(deadline - now) {
-                Ok(r) => pending.push(r),
-                Err(RecvTimeoutError::Timeout) => break,
-                Err(RecvTimeoutError::Disconnected) => break,
-            }
-        }
-
-        let rows: Vec<[f32; N_FEATURES]> = pending.iter().map(|r| r.features).collect();
-        stats.requests.fetch_add(rows.len() as u64, Relaxed);
-        stats.batches.fetch_add(1, Relaxed);
-        stats.rows_padded.fetch_add((PREDICT_BATCH - rows.len() % PREDICT_BATCH) as u64 % PREDICT_BATCH as u64, Relaxed);
-
-        match runtime.predict(&rows, &hw) {
-            Ok(out) => {
-                for (req, row) in pending.into_iter().zip(out) {
-                    let _ = req.resp.send(BatchPrediction::from_row(row));
-                }
-            }
-            Err(e) => {
-                // Drop the response senders: clients see RecvError.
-                eprintln!("batch execution failed: {e:#}");
-            }
-        }
-    }
-}
-
-impl BatchServer {
-    /// Start the service worker with the default artifacts directory.
-    pub fn start_default(
-        hw: [f32; N_HW_PARAMS],
-        max_wait: Duration,
-    ) -> Result<(Self, JoinHandle<()>)> {
-        Self::start(Runtime::load_default, hw, max_wait)
-    }
-
-    /// Start the service worker. The PJRT client is not `Send` (it holds
-    /// an `Rc` internally), so the worker thread constructs the Runtime
-    /// itself via `factory`; init errors are surfaced here synchronously.
-    /// `hw` is the micro-benchmarked hardware parameter vector the
-    /// artifact consumes.
-    pub fn start<F>(
-        factory: F,
-        hw: [f32; N_HW_PARAMS],
-        max_wait: Duration,
-    ) -> Result<(Self, JoinHandle<()>)>
-    where
-        F: FnOnce() -> Result<Runtime> + Send + 'static,
-    {
-        let (tx, rx) = mpsc::channel::<Request>();
-        let stats = Arc::new(ServerStats::default());
-        let worker_stats = stats.clone();
-        let (init_tx, init_rx) = mpsc::channel::<Result<String>>();
-        let handle = std::thread::spawn(move || {
-            let runtime = match factory() {
-                Ok(rt) => {
-                    let _ = init_tx.send(Ok(rt.platform()));
-                    rt
-                }
-                Err(e) => {
-                    let _ = init_tx.send(Err(e));
-                    return;
-                }
-            };
-            worker_loop(runtime, hw, rx, max_wait, worker_stats);
-        });
-        let platform = init_rx
-            .recv()
-            .map_err(|_| anyhow::anyhow!("batch worker died during init"))??;
-        Ok((BatchServer { tx, stats, platform }, handle))
-    }
-
-    /// PJRT platform name the worker runs on.
-    pub fn platform(&self) -> &str {
-        &self.platform
-    }
-
-    /// Blocking single prediction (latency path).
-    pub fn predict(&self, counters: &KernelCounters, core_mhz: f64, mem_mhz: f64) -> Result<BatchPrediction> {
-        let (resp, rx) = mpsc::channel();
-        self.tx
-            .send(Request { features: counters.to_features(core_mhz, mem_mhz), resp })
-            .map_err(|_| anyhow::anyhow!("batch server stopped"))?;
-        rx.recv().map_err(|_| anyhow::anyhow!("batch execution failed"))
-    }
-
-    /// Blocking many-point prediction (throughput path): enqueues all
-    /// rows before draining responses, so they share batches.
-    pub fn predict_grid(
-        &self,
-        counters: &KernelCounters,
-        pairs: &[(f64, f64)],
-    ) -> Result<Vec<BatchPrediction>> {
-        let mut rxs = Vec::with_capacity(pairs.len());
-        for &(cf, mf) in pairs {
-            let (resp, rx) = mpsc::channel();
-            self.tx
-                .send(Request { features: counters.to_features(cf, mf), resp })
-                .map_err(|_| anyhow::anyhow!("batch server stopped"))?;
-            rxs.push(rx);
-        }
-        rxs.into_iter()
-            .map(|rx| rx.recv().map_err(|_| anyhow::anyhow!("batch execution failed")))
-            .collect()
-    }
-
-    pub fn stats(&self) -> &ServerStats {
-        &self.stats
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::model::{self, HwParams};
-
-    fn counters() -> KernelCounters {
-        KernelCounters {
-            l2_hr: 0.1,
-            gld_trans: 6.0,
-            avr_inst: 1.5,
-            n_blocks: 128.0,
-            wpb: 8.0,
-            aw: 64.0,
-            n_sm: 16.0,
-            o_itrs: 8.0,
-            i_itrs: 0.0,
-            uses_smem: false,
-            smem_conflict: 1.0,
-            gld_body: 6.0,
-            gld_edge: 0.0,
-            mem_ops: 2.0,
-            l1_hr: 0.0,
-        }
-    }
-
-    #[test]
-    fn single_and_grid_predictions_match_native() {
-        let hw = HwParams::paper_defaults();
-        let (server, _h) =
-            BatchServer::start_default(hw.to_f32(), Duration::from_millis(2)).unwrap();
-        assert!(server.platform().to_lowercase().contains("cpu"));
-        let c = counters();
-
-        let one = server.predict(&c, 700.0, 700.0).unwrap();
-        let native = model::predict(&c, &hw, 700.0, 700.0);
-        assert!((one.time_us - native.time_us).abs() / native.time_us < 1e-4);
-        assert_eq!(one.regime, Some(native.regime));
-
-        let grid = crate::microbench::standard_grid();
-        let out = server.predict_grid(&c, &grid).unwrap();
-        assert_eq!(out.len(), 49);
-        for (p, &(cf, mf)) in out.iter().zip(&grid) {
-            let n = model::predict(&c, &hw, cf, mf);
-            assert!(
-                (p.time_us - n.time_us).abs() / n.time_us < 1e-4,
-                "({cf},{mf}): {} vs {}",
-                p.time_us,
-                n.time_us
-            );
-        }
-        assert!(server.stats().requests() >= 50);
-        assert!(server.stats().batches() >= 1);
-        assert!(server.stats().mean_occupancy() > 0.0);
-    }
-
-    #[test]
-    fn concurrent_clients_share_batches() {
-        let hw = HwParams::paper_defaults();
-        let (server, _h) =
-            BatchServer::start_default(hw.to_f32(), Duration::from_millis(5)).unwrap();
-        let mut joins = Vec::new();
-        for t in 0..8 {
-            let s = server.clone();
-            let c = counters();
-            joins.push(std::thread::spawn(move || {
-                let cf = 400.0 + (t as f64) * 50.0;
-                let p = s.predict(&c, cf, 700.0).unwrap();
-                assert!(p.time_us > 0.0);
-            }));
-        }
-        for j in joins {
-            j.join().unwrap();
-        }
-        let st = server.stats();
-        assert_eq!(st.requests(), 8);
-        // With a 5 ms window the 8 requests should not need 8 batches.
-        assert!(st.batches() <= 8);
-    }
-}
+pub use crate::engine::pjrt::{BatchPrediction, BatchServer, ServerStats};

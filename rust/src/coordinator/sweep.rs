@@ -2,10 +2,21 @@
 //! worker threads (tokio is not in the offline vendor set; the paper's
 //! sweep is embarrassingly parallel, so a scoped thread pool is the
 //! right tool — DESIGN.md "Offline substitutions").
+//!
+//! Output ordering is part of the contract: worker threads complete in
+//! arbitrary interleavings, so results are canonicalized to
+//! `(kernel, core_mhz, mem_mhz)` order before returning — two sweeps of
+//! the same inputs are byte-for-byte identical regardless of worker
+//! count or scheduling.
 
+use std::cmp::Ordering;
 use std::sync::mpsc;
 use std::thread;
 
+use anyhow::Result;
+
+use crate::engine::Engine;
+use crate::profiler::Profile;
 use crate::sim::engine::simulate;
 use crate::sim::isa::Kernel;
 use crate::sim::{Clocks, GpuSpec};
@@ -21,7 +32,15 @@ pub struct SweepPoint {
     pub dram_txns: u64,
 }
 
-/// Result of a full sweep.
+fn canonical_order(a: &SweepPoint, b: &SweepPoint) -> Ordering {
+    a.kernel
+        .cmp(&b.kernel)
+        .then(a.core_mhz.total_cmp(&b.core_mhz))
+        .then(a.mem_mhz.total_cmp(&b.mem_mhz))
+}
+
+/// Result of a full sweep. Points are sorted by
+/// `(kernel, core_mhz, mem_mhz)`.
 #[derive(Debug, Clone, Default)]
 pub struct Sweep {
     pub points: Vec<SweepPoint>,
@@ -44,34 +63,32 @@ impl Sweep {
 }
 
 /// Sweep `kernels` over `pairs`, running up to `workers` simulations in
-/// parallel. Results are returned in deterministic (kernel, pair) order
-/// regardless of completion order.
+/// parallel. Results are returned in canonical (kernel, core, mem)
+/// order regardless of completion order.
 pub fn run_sweep(
     spec: &GpuSpec,
     kernels: &[Kernel],
     pairs: &[(f64, f64)],
     workers: usize,
 ) -> Sweep {
-    let jobs: Vec<(usize, &Kernel, f64, f64)> = kernels
+    let jobs: Vec<(&Kernel, f64, f64)> = kernels
         .iter()
         .flat_map(|k| pairs.iter().map(move |&(cf, mf)| (k, cf, mf)))
-        .enumerate()
-        .map(|(i, (k, cf, mf))| (i, k, cf, mf))
         .collect();
     let n_jobs = jobs.len();
     let workers = workers.max(1).min(n_jobs.max(1));
 
-    let mut results: Vec<Option<SweepPoint>> = vec![None; n_jobs];
+    let mut points: Vec<SweepPoint> = Vec::with_capacity(n_jobs);
     thread::scope(|scope| {
         let (tx, rx) = mpsc::channel();
-        let chunks: Vec<Vec<(usize, &Kernel, f64, f64)>> = (0..workers)
+        let chunks: Vec<Vec<(&Kernel, f64, f64)>> = (0..workers)
             .map(|w| jobs.iter().skip(w).step_by(workers).cloned().collect())
             .collect();
         for chunk in chunks {
             let tx = tx.clone();
             let spec = spec.clone();
             scope.spawn(move || {
-                for (i, k, cf, mf) in chunk {
+                for (k, cf, mf) in chunk {
                     let r = simulate(&spec, Clocks::new(cf, mf), k);
                     let point = SweepPoint {
                         kernel: k.name.clone(),
@@ -83,23 +100,55 @@ pub fn run_sweep(
                     };
                     // Receiver outlives senders; ignore send errors on
                     // shutdown races (cannot happen inside scope).
-                    let _ = tx.send((i, point));
+                    let _ = tx.send(point);
                 }
             });
         }
         drop(tx);
-        while let Ok((i, p)) = rx.recv() {
-            results[i] = Some(p);
+        while let Ok(p) = rx.recv() {
+            points.push(p);
         }
     });
+    assert_eq!(points.len(), n_jobs, "every sweep job completed");
 
-    Sweep { points: results.into_iter().map(|p| p.expect("job completed")).collect() }
+    points.sort_by(canonical_order);
+    Sweep { points }
+}
+
+/// A *predicted* sweep: the same grid, but every point comes from the
+/// prediction [`Engine`] instead of the simulator — the paper's value
+/// proposition (profile once, predict everywhere) expressed in the
+/// sweep's own shape, so Fig. 2-style speedup tables can be emitted
+/// from predictions alone. `dram_txns` is 0 (predictions carry no
+/// transaction counts); `l2_hr` echoes the profiled baseline counter.
+pub fn predicted_sweep(
+    engine: &Engine,
+    profiles: &[Profile],
+    pairs: &[(f64, f64)],
+) -> Result<Sweep> {
+    let mut points = Vec::with_capacity(profiles.len() * pairs.len());
+    for p in profiles {
+        let ests = engine.predict_grid(&p.counters, pairs)?;
+        for (est, &(cf, mf)) in ests.iter().zip(pairs) {
+            points.push(SweepPoint {
+                kernel: p.kernel.clone(),
+                core_mhz: cf,
+                mem_mhz: mf,
+                time_us: est.time_us,
+                l2_hr: p.counters.l2_hr,
+                dram_txns: 0,
+            });
+        }
+    }
+    points.sort_by(canonical_order);
+    Ok(Sweep { points })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::kernels;
+    use crate::model::HwParams;
 
     #[test]
     fn sweep_covers_grid_in_order() {
@@ -143,5 +192,51 @@ mod tests {
         for (x, y) in a.points.iter().zip(&b.points) {
             assert_eq!(x.time_us, y.time_us);
         }
+    }
+
+    #[test]
+    fn order_is_deterministic_across_worker_counts() {
+        // The mpsc completion order varies with thread interleaving;
+        // the canonical sort must erase that entirely.
+        let spec = GpuSpec::default();
+        let ks = vec![kernels::transpose(), kernels::vector_add()];
+        let pairs = vec![(400.0, 700.0), (1000.0, 400.0), (700.0, 700.0), (400.0, 400.0)];
+        let a = run_sweep(&spec, &ks, &pairs, 1);
+        let b = run_sweep(&spec, &ks, &pairs, 7);
+        assert_eq!(a.points.len(), b.points.len());
+        for (x, y) in a.points.iter().zip(&b.points) {
+            assert_eq!(x.kernel, y.kernel);
+            assert_eq!(x.core_mhz, y.core_mhz);
+            assert_eq!(x.mem_mhz, y.mem_mhz);
+            assert_eq!(x.time_us.to_bits(), y.time_us.to_bits());
+            assert_eq!(x.dram_txns, y.dram_txns);
+        }
+        // And the canonical order itself holds.
+        for w in a.points.windows(2) {
+            assert!(canonical_order(&w[0], &w[1]) != std::cmp::Ordering::Greater);
+        }
+    }
+
+    #[test]
+    fn predicted_sweep_routes_through_engine() {
+        let spec = GpuSpec::default();
+        let k = kernels::vector_add();
+        let profile = crate::profiler::profile(&spec, &k);
+        let engine = Engine::native(HwParams::paper_defaults());
+        let pairs = vec![(700.0, 700.0), (400.0, 1000.0)];
+        let s = predicted_sweep(&engine, &[profile.clone()], &pairs).unwrap();
+        assert_eq!(s.points.len(), 2);
+        for p in &s.points {
+            let want = crate::model::predict(
+                &profile.counters,
+                &HwParams::paper_defaults(),
+                p.core_mhz,
+                p.mem_mhz,
+            );
+            assert_eq!(p.time_us.to_bits(), want.time_us.to_bits());
+        }
+        // Cache warmed: a second predicted sweep is pure hits.
+        predicted_sweep(&engine, &[profile], &pairs).unwrap();
+        assert!(engine.cache_stats().unwrap().hits >= 2);
     }
 }

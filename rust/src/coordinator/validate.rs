@@ -5,7 +5,10 @@
 //! one baseline profile + the analytical model (or any `Predictor`
 //! baseline, for the ablation bench).
 
+use anyhow::Result;
+
 use crate::baselines::Predictor;
+use crate::engine::Engine;
 use crate::profiler::{self, Profile};
 use crate::sim::engine::simulate;
 use crate::sim::isa::Kernel;
@@ -131,6 +134,49 @@ pub fn validate_with(
     Validation { per_kernel }
 }
 
+/// Validate one kernel through the prediction [`Engine`]: ground truth
+/// from the simulator, predictions from one batched `predict_grid`
+/// call (cache-served on repeats).
+pub fn validate_kernel_with_engine(
+    spec: &GpuSpec,
+    kernel: &Kernel,
+    profile: &Profile,
+    engine: &Engine,
+    pairs: &[(f64, f64)],
+) -> Result<KernelValidation> {
+    let ests = engine.predict_grid(&profile.counters, pairs)?;
+    let points = pairs
+        .iter()
+        .zip(ests)
+        .map(|(&(cf, mf), est)| SamplePoint {
+            kernel: kernel.name.clone(),
+            core_mhz: cf,
+            mem_mhz: mf,
+            truth_us: ground_truth_us(spec, kernel, Clocks::new(cf, mf)),
+            pred_us: est.time_us,
+        })
+        .collect();
+    Ok(KernelValidation { kernel: kernel.name.clone(), points })
+}
+
+/// Full-suite validation through the prediction [`Engine`] — the path
+/// the CLI's `validate` / `report fig13|fig14` commands use.
+pub fn validate_with_engine(
+    spec: &GpuSpec,
+    kernels: &[Kernel],
+    engine: &Engine,
+    pairs: &[(f64, f64)],
+) -> Result<Validation> {
+    let per_kernel = kernels
+        .iter()
+        .map(|k| {
+            let profile = profiler::profile(spec, k);
+            validate_kernel_with_engine(spec, k, &profile, engine, pairs)
+        })
+        .collect::<Result<Vec<_>>>()?;
+    Ok(Validation { per_kernel })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -169,6 +215,24 @@ mod tests {
         assert!((v.overall_mape() - 0.065).abs() < 1e-12);
         assert!((v.fraction_below(0.10) - 0.75).abs() < 1e-12);
         assert!((v.max_abs_err() - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn engine_validation_matches_predictor_validation() {
+        let spec = GpuSpec::default();
+        let k = kernels::vector_add();
+        let prof = profiler::profile(&spec, &k);
+        let hw = HwParams::paper_defaults();
+        let pairs = [(700.0, 700.0), (400.0, 1000.0)];
+        let direct =
+            validate_kernel_with(&spec, &k, &prof, &PaperModel { hw }, &pairs);
+        let engine = Engine::native(hw);
+        let via_engine =
+            validate_kernel_with_engine(&spec, &k, &prof, &engine, &pairs).unwrap();
+        for (a, b) in direct.points.iter().zip(&via_engine.points) {
+            assert_eq!(a.pred_us.to_bits(), b.pred_us.to_bits());
+            assert_eq!(a.truth_us.to_bits(), b.truth_us.to_bits());
+        }
     }
 
     #[test]

@@ -6,7 +6,10 @@
 //! per clock domain with a voltage/frequency table, plus static power.
 //! Energy = P(cf, mf) × T(cf, mf), with T from any `Predictor`.
 
+use anyhow::Result;
+
 use crate::baselines::Predictor;
+use crate::engine::Engine;
 use crate::model::KernelCounters;
 
 /// Voltage-frequency curve: linear interpolation over (MHz, V) points.
@@ -104,22 +107,30 @@ pub enum Objective {
     Edp,
 }
 
-/// Evaluate every pair and pick the best per `objective`.
-pub fn advise(
-    counters: &KernelCounters,
-    predictor: &dyn Predictor,
+/// Shared optimizer core: times are supplied per pair (from any
+/// prediction path), power comes from the model, the objective picks.
+fn advise_points(
+    times_us: &[f64],
     power: &PowerModel,
     pairs: &[(f64, f64)],
     objective: Objective,
 ) -> (ConfigPoint, Vec<ConfigPoint>) {
     assert!(!pairs.is_empty());
+    assert_eq!(times_us.len(), pairs.len());
     let points: Vec<ConfigPoint> = pairs
         .iter()
-        .map(|&(cf, mf)| {
-            let time_us = predictor.predict_us(counters, cf, mf);
+        .zip(times_us)
+        .map(|(&(cf, mf), &time_us)| {
             let power_w = power.power_w(cf, mf);
             let energy_mj = power_w * time_us * 1e-3; // W·µs = µJ; /1e3 = mJ
-            ConfigPoint { core_mhz: cf, mem_mhz: mf, time_us, power_w, energy_mj, edp: energy_mj * time_us }
+            ConfigPoint {
+                core_mhz: cf,
+                mem_mhz: mf,
+                time_us,
+                power_w,
+                energy_mj,
+                edp: energy_mj * time_us,
+            }
         })
         .collect();
     let t_fastest = points.iter().map(|p| p.time_us).fold(f64::INFINITY, f64::min);
@@ -137,6 +148,34 @@ pub fn advise(
         .min_by(|a, b| key(a).total_cmp(&key(b)))
         .expect("at least the fastest point is feasible");
     (best, points)
+}
+
+/// Evaluate every pair and pick the best per `objective`.
+pub fn advise(
+    counters: &KernelCounters,
+    predictor: &dyn Predictor,
+    power: &PowerModel,
+    pairs: &[(f64, f64)],
+    objective: Objective,
+) -> (ConfigPoint, Vec<ConfigPoint>) {
+    let times: Vec<f64> =
+        pairs.iter().map(|&(cf, mf)| predictor.predict_us(counters, cf, mf)).collect();
+    advise_points(&times, power, pairs, objective)
+}
+
+/// Engine-routed advisor — one batched `predict_grid` call per
+/// invocation, so repeated advisor runs over the same grid (sweep of
+/// objectives, per-kernel loops) are served from the engine's cache.
+pub fn advise_with_engine(
+    counters: &KernelCounters,
+    engine: &Engine,
+    power: &PowerModel,
+    pairs: &[(f64, f64)],
+    objective: Objective,
+) -> Result<(ConfigPoint, Vec<ConfigPoint>)> {
+    let times: Vec<f64> =
+        engine.predict_grid(counters, pairs)?.iter().map(|e| e.time_us).collect();
+    Ok(advise_points(&times, power, pairs, objective))
 }
 
 #[cfg(test)]
@@ -232,6 +271,28 @@ mod tests {
         let t_fast = points.iter().map(|p| p.time_us).fold(f64::INFINITY, f64::min);
         assert!(tight.time_us <= 1.05 * t_fast + 1e-9);
         assert!(tight.energy_mj >= unconstrained.energy_mj - 1e-12);
+    }
+
+    #[test]
+    fn engine_advisor_matches_predictor_advisor() {
+        let hw = HwParams::paper_defaults();
+        let model = PaperModel { hw };
+        let power = PowerModel::gtx980();
+        let c = counters_membound();
+        let (direct_best, direct_points) =
+            advise(&c, &model, &power, &grid(), Objective::Energy);
+        let engine = Engine::native(hw);
+        let (engine_best, engine_points) =
+            advise_with_engine(&c, &engine, &power, &grid(), Objective::Energy).unwrap();
+        assert_eq!(direct_best.core_mhz, engine_best.core_mhz);
+        assert_eq!(direct_best.mem_mhz, engine_best.mem_mhz);
+        assert_eq!(direct_best.energy_mj.to_bits(), engine_best.energy_mj.to_bits());
+        for (a, b) in direct_points.iter().zip(&engine_points) {
+            assert_eq!(a.time_us.to_bits(), b.time_us.to_bits());
+        }
+        // Second advisor run over the same grid never recomputes.
+        advise_with_engine(&c, &engine, &power, &grid(), Objective::Edp).unwrap();
+        assert!(engine.cache_stats().unwrap().hits >= 49);
     }
 
     #[test]

@@ -1,0 +1,143 @@
+//! Bridges between the legacy `baselines::Predictor` trait and the
+//! engine's [`Backend`] abstraction, in both directions:
+//!
+//! * [`PredictorBackend`] — runs any `Predictor` (const-latency,
+//!   linear-freq, MWP/CWP-lite, L1-extended, …) behind the facade, so
+//!   the ablation bench and report emitters get caching and batching
+//!   for free without rewriting the baselines.
+//! * [`EnginePredictor`] — exposes an [`Engine`] wherever a
+//!   `&dyn Predictor` is still accepted (`dvfs::advise`,
+//!   `validate_with`), so legacy call sites can consume engine-backed
+//!   predictions during the migration.
+
+use anyhow::Result;
+
+use crate::baselines::Predictor;
+
+use super::{Backend, Engine, Estimate, Request};
+
+/// `Predictor` → `Backend` adapter. The regime is `None`: baselines are
+/// opaque time functions and cannot attribute a pipeline case.
+pub struct PredictorBackend {
+    inner: Box<dyn Predictor>,
+}
+
+impl PredictorBackend {
+    pub fn new(inner: Box<dyn Predictor>) -> Self {
+        PredictorBackend { inner }
+    }
+}
+
+impl Backend for PredictorBackend {
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+
+    fn predict_batch(&self, reqs: &[Request]) -> Result<Vec<Estimate>> {
+        Ok(reqs
+            .iter()
+            .map(|r| {
+                let time_us = self.inner.predict_us(&r.counters, r.core_mhz, r.mem_mhz);
+                // Back out the cycle quantities the facade reports
+                // (Eq. (6) round count; exact for any time prediction).
+                let t_exec_cycles = time_us * r.core_mhz;
+                let rounds = (r.counters.wpb * r.counters.n_blocks
+                    / (r.counters.aw * r.counters.n_sm))
+                    .max(1.0);
+                Estimate {
+                    t_active: t_exec_cycles / rounds,
+                    t_exec_cycles,
+                    time_us,
+                    regime: None,
+                }
+            })
+            .collect())
+    }
+}
+
+/// `Engine` → `Predictor` adapter for legacy call sites.
+pub struct EnginePredictor {
+    engine: Engine,
+    label: &'static str,
+}
+
+impl EnginePredictor {
+    pub fn new(engine: Engine, label: &'static str) -> Self {
+        EnginePredictor { engine, label }
+    }
+
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+}
+
+impl Predictor for EnginePredictor {
+    fn name(&self) -> &'static str {
+        self.label
+    }
+
+    fn predict_us(&self, c: &crate::model::KernelCounters, core_mhz: f64, mem_mhz: f64) -> f64 {
+        self.engine
+            .predict_one(c, core_mhz, mem_mhz)
+            .expect("engine backend failed")
+            .time_us
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::{ConstLatency, PaperModel};
+    use crate::model::{HwParams, KernelCounters};
+
+    fn counters() -> KernelCounters {
+        KernelCounters {
+            l2_hr: 0.2,
+            gld_trans: 4.0,
+            avr_inst: 2.0,
+            n_blocks: 128.0,
+            wpb: 8.0,
+            aw: 64.0,
+            n_sm: 16.0,
+            o_itrs: 8.0,
+            i_itrs: 0.0,
+            uses_smem: false,
+            smem_conflict: 1.0,
+            gld_body: 4.0,
+            gld_edge: 0.0,
+            mem_ops: 1.0,
+            l1_hr: 0.0,
+        }
+    }
+
+    #[test]
+    fn predictor_backend_matches_direct_calls() {
+        let hw = HwParams::paper_defaults();
+        let cl = ConstLatency { hw, baseline_core_mhz: 700.0, baseline_mem_mhz: 700.0 };
+        let want = cl.predict_us(&counters(), 500.0, 900.0);
+        let backend = PredictorBackend::new(Box::new(ConstLatency {
+            hw,
+            baseline_core_mhz: 700.0,
+            baseline_mem_mhz: 700.0,
+        }));
+        let got = backend
+            .predict_batch(&[Request { counters: counters(), core_mhz: 500.0, mem_mhz: 900.0 }])
+            .unwrap();
+        assert_eq!(got[0].time_us.to_bits(), want.to_bits());
+        assert_eq!(got[0].regime, None);
+        assert_eq!(backend.name(), "const-latency");
+        // Cycle back-out is consistent: time_us * cf == t_exec_cycles.
+        assert!((got[0].t_exec_cycles - want * 500.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn engine_predictor_round_trips_the_paper_model() {
+        let hw = HwParams::paper_defaults();
+        let engine = Engine::native(hw);
+        let p = EnginePredictor::new(engine, "engine-native");
+        let want = PaperModel { hw }.predict_us(&counters(), 800.0, 600.0);
+        let got = p.predict_us(&counters(), 800.0, 600.0);
+        assert_eq!(got.to_bits(), want.to_bits());
+        assert_eq!(p.name(), "engine-native");
+    }
+}

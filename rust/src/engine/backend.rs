@@ -1,0 +1,230 @@
+//! Prediction backends: the pluggable execution strategies behind the
+//! [`Engine`](super::Engine) facade.
+//!
+//! * [`NativeScalar`] — wraps `model::predict`; the latency-optimal
+//!   reference path, one row at a time, zero setup cost.
+//! * [`NativeBatch`] — chunked scoped-thread evaluation for sweep-sized
+//!   workloads (tokio/rayon are not in the offline vendor set —
+//!   DESIGN.md "Offline substitutions"); bit-identical to
+//!   `NativeScalar` row for row, deterministic output order.
+//! * `Pjrt` (in [`super::pjrt`]) — the dynamically batched service over
+//!   the AOT artifact executor.
+
+use anyhow::Result;
+
+use crate::model::{self, HwParams, KernelCounters, Regime};
+
+/// One prediction request: a profiled kernel at a frequency pair.
+#[derive(Debug, Clone, Copy)]
+pub struct Request {
+    pub counters: KernelCounters,
+    pub core_mhz: f64,
+    pub mem_mhz: f64,
+}
+
+/// Engine output for one request. Mirrors `model::Prediction`, with the
+/// regime optional because opaque backends (the `Predictor` adapter)
+/// cannot attribute a pipeline case.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Estimate {
+    /// Cycles for one round of active warps (`T_active`).
+    pub t_active: f64,
+    /// Total kernel cycles in the core domain (`T_exec`).
+    pub t_exec_cycles: f64,
+    /// Wall-clock microseconds at the requested core frequency.
+    pub time_us: f64,
+    /// Pipeline case, when the backend can attribute one.
+    pub regime: Option<Regime>,
+}
+
+impl From<model::Prediction> for Estimate {
+    fn from(p: model::Prediction) -> Self {
+        Estimate {
+            t_active: p.t_active,
+            t_exec_cycles: p.t_exec_cycles,
+            time_us: p.time_us,
+            regime: Some(p.regime),
+        }
+    }
+}
+
+/// A prediction execution strategy. Backends must be thread-safe: the
+/// facade shares one instance across `predict_stream` workers, scoped
+/// sweep threads and concurrent callers.
+pub trait Backend: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Evaluate every request, preserving order.
+    fn predict_batch(&self, reqs: &[Request]) -> Result<Vec<Estimate>>;
+
+    /// Single-request convenience (latency path).
+    fn predict_one(&self, req: &Request) -> Result<Estimate> {
+        let mut v = self.predict_batch(std::slice::from_ref(req))?;
+        Ok(v.remove(0))
+    }
+}
+
+/// Direct scalar evaluation of the analytical model.
+#[derive(Debug, Clone, Copy)]
+pub struct NativeScalar {
+    pub hw: HwParams,
+}
+
+impl NativeScalar {
+    pub fn new(hw: HwParams) -> Self {
+        NativeScalar { hw }
+    }
+}
+
+impl Backend for NativeScalar {
+    fn name(&self) -> &'static str {
+        "native-scalar"
+    }
+
+    fn predict_batch(&self, reqs: &[Request]) -> Result<Vec<Estimate>> {
+        Ok(reqs
+            .iter()
+            .map(|r| model::predict(&r.counters, &self.hw, r.core_mhz, r.mem_mhz).into())
+            .collect())
+    }
+}
+
+/// Scoped-thread chunked evaluation: splits the request slice into
+/// contiguous chunks, one per worker, and writes each worker's results
+/// straight into its own output window — no channels, no reordering, so
+/// results are bit-identical to [`NativeScalar`] in the same order.
+#[derive(Debug, Clone, Copy)]
+pub struct NativeBatch {
+    pub hw: HwParams,
+    /// Maximum worker threads (clamped to the request count).
+    pub workers: usize,
+    /// Below this many requests the scalar loop is used — thread spawn
+    /// costs more than evaluating a few rows.
+    pub parallel_threshold: usize,
+}
+
+/// Crossover measured by the `engine_cache` bench: one model evaluation
+/// is ~100 ns, a scoped spawn ~10 µs.
+pub const DEFAULT_PARALLEL_THRESHOLD: usize = 256;
+
+impl NativeBatch {
+    pub fn new(hw: HwParams, workers: usize) -> Self {
+        NativeBatch {
+            hw,
+            workers: workers.max(1),
+            parallel_threshold: DEFAULT_PARALLEL_THRESHOLD,
+        }
+    }
+}
+
+impl Backend for NativeBatch {
+    fn name(&self) -> &'static str {
+        "native-batch"
+    }
+
+    fn predict_batch(&self, reqs: &[Request]) -> Result<Vec<Estimate>> {
+        let workers = self.workers.min(reqs.len()).max(1);
+        if workers == 1 || reqs.len() < self.parallel_threshold {
+            return NativeScalar { hw: self.hw }.predict_batch(reqs);
+        }
+        let mut out = vec![Estimate::default(); reqs.len()];
+        let chunk = reqs.len().div_ceil(workers);
+        let hw = self.hw;
+        std::thread::scope(|scope| {
+            for (req_chunk, out_chunk) in reqs.chunks(chunk).zip(out.chunks_mut(chunk)) {
+                scope.spawn(move || {
+                    for (r, o) in req_chunk.iter().zip(out_chunk.iter_mut()) {
+                        *o = model::predict(&r.counters, &hw, r.core_mhz, r.mem_mhz).into();
+                    }
+                });
+            }
+        });
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn counters() -> KernelCounters {
+        KernelCounters {
+            l2_hr: 0.1,
+            gld_trans: 6.0,
+            avr_inst: 1.5,
+            n_blocks: 128.0,
+            wpb: 8.0,
+            aw: 64.0,
+            n_sm: 16.0,
+            o_itrs: 8.0,
+            i_itrs: 0.0,
+            uses_smem: false,
+            smem_conflict: 1.0,
+            gld_body: 6.0,
+            gld_edge: 0.0,
+            mem_ops: 2.0,
+            l1_hr: 0.0,
+        }
+    }
+
+    fn requests(n: usize) -> Vec<Request> {
+        (0..n)
+            .map(|i| Request {
+                counters: counters(),
+                core_mhz: 400.0 + (i % 7) as f64 * 100.0,
+                mem_mhz: 400.0 + (i / 7 % 7) as f64 * 100.0,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn scalar_matches_model() {
+        let hw = HwParams::paper_defaults();
+        let b = NativeScalar::new(hw);
+        let reqs = requests(5);
+        let out = b.predict_batch(&reqs).unwrap();
+        for (o, r) in out.iter().zip(&reqs) {
+            let want = model::predict(&r.counters, &hw, r.core_mhz, r.mem_mhz);
+            assert_eq!(o.time_us.to_bits(), want.time_us.to_bits());
+            assert_eq!(o.regime, Some(want.regime));
+        }
+    }
+
+    #[test]
+    fn batch_bit_identical_to_scalar_any_worker_count() {
+        let hw = HwParams::paper_defaults();
+        let reqs = requests(1000);
+        let want = NativeScalar::new(hw).predict_batch(&reqs).unwrap();
+        for workers in [1, 2, 3, 8] {
+            let mut b = NativeBatch::new(hw, workers);
+            b.parallel_threshold = 1; // force the threaded path
+            let got = b.predict_batch(&reqs).unwrap();
+            assert_eq!(got.len(), want.len());
+            for (g, w) in got.iter().zip(&want) {
+                assert_eq!(g.time_us.to_bits(), w.time_us.to_bits(), "workers={workers}");
+                assert_eq!(g.t_active.to_bits(), w.t_active.to_bits());
+                assert_eq!(g.regime, w.regime);
+            }
+        }
+    }
+
+    #[test]
+    fn small_batches_take_the_scalar_path() {
+        let hw = HwParams::paper_defaults();
+        let b = NativeBatch::new(hw, 8);
+        let reqs = requests(3);
+        let out = b.predict_batch(&reqs).unwrap();
+        assert_eq!(out.len(), 3);
+        assert!(out.iter().all(|e| e.time_us > 0.0));
+    }
+
+    #[test]
+    fn predict_one_default_impl() {
+        let hw = HwParams::paper_defaults();
+        let b = NativeScalar::new(hw);
+        let r = requests(1)[0];
+        let one = b.predict_one(&r).unwrap();
+        let want = model::predict(&r.counters, &hw, r.core_mhz, r.mem_mhz);
+        assert_eq!(one.time_us.to_bits(), want.time_us.to_bits());
+    }
+}

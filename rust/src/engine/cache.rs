@@ -1,0 +1,342 @@
+//! Sharded, memoizing frequency-grid cache.
+//!
+//! The advisor, the sweep validator and the report emitters all query
+//! the same (counters, hw) point over the same 49-pair grid, often
+//! repeatedly within one process (advise → report → validate). The
+//! cache makes every repeat free: a hit returns the stored [`Estimate`]
+//! without touching the backend.
+//!
+//! **Key quantization (DESIGN.md §8):** every `f64` input — all 15
+//! counter fields, the 7 hardware parameters and the two frequencies —
+//! is quantized to its nearest `f32` and keyed on the f32 bit pattern.
+//! f32 matches the AOT feature contract's precision, so two inputs that
+//! the artifact could not distinguish share one entry; inputs differing
+//! above f32 resolution never collide (bit-exact keys, no tolerance
+//! comparisons).
+//!
+//! **Sharding:** the key hash picks one of `shards` independent
+//! `Mutex<FxHashMap>` segments, so concurrent engine clients (the
+//! multi-worker PJRT service, `predict_stream`, scoped sweep threads)
+//! do not serialize on one lock. Hit/miss counters are lock-free
+//! atomics.
+
+use std::hash::{BuildHasher, Hash, Hasher};
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+use std::sync::Mutex;
+
+use crate::model::{HwParams, KernelCounters};
+use crate::util::fxhash::{FxBuildHasher, FxHashMap};
+
+use super::Estimate;
+
+/// Number of f32 words in a cache key: 15 counters + 7 hw params +
+/// core/mem MHz.
+const KEY_WORDS: usize = 24;
+
+/// Quantized lookup key (f32 bit patterns; see module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct CacheKey([u32; KEY_WORDS]);
+
+#[inline]
+fn q(x: f64) -> u32 {
+    (x as f32).to_bits()
+}
+
+impl CacheKey {
+    pub fn new(c: &KernelCounters, hw: &HwParams, core_mhz: f64, mem_mhz: f64) -> Self {
+        // Exhaustive destructuring (no `..`): adding a field to either
+        // struct without extending the key is a compile error, never a
+        // silent cache collision.
+        let KernelCounters {
+            l2_hr,
+            gld_trans,
+            avr_inst,
+            n_blocks,
+            wpb,
+            aw,
+            n_sm,
+            o_itrs,
+            i_itrs,
+            uses_smem,
+            smem_conflict,
+            gld_body,
+            gld_edge,
+            mem_ops,
+            l1_hr,
+        } = *c;
+        let HwParams {
+            dm_lat_a,
+            dm_lat_b,
+            dm_del,
+            l2_lat,
+            l2_del,
+            sh_lat,
+            inst_cycle,
+        } = *hw;
+        CacheKey([
+            q(l2_hr),
+            q(gld_trans),
+            q(avr_inst),
+            q(n_blocks),
+            q(wpb),
+            q(aw),
+            q(n_sm),
+            q(o_itrs),
+            q(i_itrs),
+            if uses_smem { 1 } else { 0 },
+            q(smem_conflict),
+            q(gld_body),
+            q(gld_edge),
+            q(mem_ops),
+            q(l1_hr),
+            q(dm_lat_a),
+            q(dm_lat_b),
+            q(dm_del),
+            q(l2_lat),
+            q(l2_del),
+            q(sh_lat),
+            q(inst_cycle),
+            q(core_mhz),
+            q(mem_mhz),
+        ])
+    }
+}
+
+/// Monotonic cache counters plus current occupancy.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub entries: usize,
+    /// Shards wiped because they reached capacity.
+    pub evictions: u64,
+}
+
+impl CacheStats {
+    /// Hits / lookups in [0, 1]; 0 when no lookups have happened.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            return 0.0;
+        }
+        self.hits as f64 / total as f64
+    }
+}
+
+/// The sharded memoization table.
+pub struct GridCache {
+    shards: Vec<Mutex<FxHashMap<CacheKey, Estimate>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+    max_entries_per_shard: usize,
+}
+
+/// Default shard count: enough to keep a 16-worker service off a single
+/// lock without wasting memory on small grids.
+pub const DEFAULT_SHARDS: usize = 16;
+/// Default per-shard capacity (≈1M entries total at 16 shards).
+pub const DEFAULT_SHARD_CAPACITY: usize = 65_536;
+
+impl Default for GridCache {
+    fn default() -> Self {
+        Self::new(DEFAULT_SHARDS, DEFAULT_SHARD_CAPACITY)
+    }
+}
+
+impl GridCache {
+    /// `shards` is clamped to at least 1; `max_entries_per_shard` bounds
+    /// memory: a shard that reaches the bound is wiped whole (epoch
+    /// eviction — cheap, and the working set re-warms in one grid pass).
+    pub fn new(shards: usize, max_entries_per_shard: usize) -> Self {
+        let shards = shards.max(1);
+        GridCache {
+            shards: (0..shards).map(|_| Mutex::new(FxHashMap::default())).collect(),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            max_entries_per_shard: max_entries_per_shard.max(1),
+        }
+    }
+
+    #[inline]
+    fn shard_of(&self, key: &CacheKey) -> usize {
+        let mut h = FxBuildHasher::default().build_hasher();
+        key.hash(&mut h);
+        // Pick the shard from the HIGH bits: the HashMap inside the
+        // shard indexes buckets with the low bits of this same hash,
+        // so folding low bits into the shard choice would cluster a
+        // shard's keys into 1/shards of its bucket space.
+        ((h.finish() >> 48) as usize) % self.shards.len()
+    }
+
+    /// Look up one key, counting the hit or miss.
+    pub fn get(&self, key: &CacheKey) -> Option<Estimate> {
+        let shard = self.shards[self.shard_of(key)].lock().expect("cache shard poisoned");
+        let found = shard.get(key).copied();
+        drop(shard);
+        match found {
+            Some(e) => {
+                self.hits.fetch_add(1, Relaxed);
+                Some(e)
+            }
+            None => {
+                self.misses.fetch_add(1, Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Insert (idempotent — later inserts of the same key overwrite with
+    /// an identical value by construction).
+    pub fn insert(&self, key: CacheKey, est: Estimate) {
+        let mut shard = self.shards[self.shard_of(&key)].lock().expect("cache shard poisoned");
+        if shard.len() >= self.max_entries_per_shard && !shard.contains_key(&key) {
+            shard.clear();
+            self.evictions.fetch_add(1, Relaxed);
+        }
+        shard.insert(key, est);
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Relaxed),
+            misses: self.misses.load(Relaxed),
+            entries: self
+                .shards
+                .iter()
+                .map(|s| s.lock().expect("cache shard poisoned").len())
+                .sum(),
+            evictions: self.evictions.load(Relaxed),
+        }
+    }
+
+    /// Drop every entry (counters are preserved).
+    pub fn clear(&self) {
+        for s in &self.shards {
+            s.lock().expect("cache shard poisoned").clear();
+        }
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Regime;
+
+    fn counters() -> KernelCounters {
+        KernelCounters {
+            l2_hr: 0.25,
+            gld_trans: 4.0,
+            avr_inst: 2.0,
+            n_blocks: 128.0,
+            wpb: 8.0,
+            aw: 64.0,
+            n_sm: 16.0,
+            o_itrs: 8.0,
+            i_itrs: 0.0,
+            uses_smem: false,
+            smem_conflict: 1.0,
+            gld_body: 4.0,
+            gld_edge: 0.0,
+            mem_ops: 1.0,
+            l1_hr: 0.0,
+        }
+    }
+
+    fn est(t: f64) -> Estimate {
+        Estimate {
+            t_active: t,
+            t_exec_cycles: 2.0 * t,
+            time_us: t / 700.0,
+            regime: Some(Regime::Memory),
+        }
+    }
+
+    #[test]
+    fn hit_after_insert_and_stats_count() {
+        let cache = GridCache::default();
+        let hw = HwParams::paper_defaults();
+        let k = CacheKey::new(&counters(), &hw, 700.0, 700.0);
+        assert!(cache.get(&k).is_none());
+        cache.insert(k, est(10.0));
+        assert_eq!(cache.get(&k), Some(est(10.0)));
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (1, 1, 1));
+        assert!((s.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn distinct_frequencies_distinct_keys() {
+        let hw = HwParams::paper_defaults();
+        let c = counters();
+        let a = CacheKey::new(&c, &hw, 700.0, 700.0);
+        let b = CacheKey::new(&c, &hw, 700.0, 800.0);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn sub_f32_differences_share_a_key() {
+        // Quantization contract: differences below f32 resolution
+        // collapse into one entry (the AOT artifact could not tell the
+        // two inputs apart either).
+        let hw = HwParams::paper_defaults();
+        let mut c2 = counters();
+        c2.avr_inst += 1e-12;
+        assert_eq!(
+            CacheKey::new(&counters(), &hw, 700.0, 700.0),
+            CacheKey::new(&c2, &hw, 700.0, 700.0)
+        );
+    }
+
+    #[test]
+    fn hw_params_are_part_of_the_key() {
+        let c = counters();
+        let a = CacheKey::new(&c, &HwParams::paper_defaults(), 700.0, 700.0);
+        let mut hw = HwParams::paper_defaults();
+        hw.dm_del += 1.0;
+        assert_ne!(a, CacheKey::new(&c, &hw, 700.0, 700.0));
+    }
+
+    #[test]
+    fn capacity_bound_evicts_by_epoch() {
+        let cache = GridCache::new(1, 4);
+        let hw = HwParams::paper_defaults();
+        for i in 0..10 {
+            let k = CacheKey::new(&counters(), &hw, 400.0 + i as f64, 700.0);
+            cache.insert(k, est(i as f64));
+        }
+        let s = cache.stats();
+        assert!(s.entries <= 4, "entries {}", s.entries);
+        assert!(s.evictions >= 1);
+    }
+
+    #[test]
+    fn concurrent_access_is_safe() {
+        let cache = std::sync::Arc::new(GridCache::new(8, 1024));
+        let hw = HwParams::paper_defaults();
+        let mut joins = Vec::new();
+        for t in 0..8u32 {
+            let cache = cache.clone();
+            joins.push(std::thread::spawn(move || {
+                for i in 0..200u32 {
+                    let k =
+                        CacheKey::new(&counters(), &hw, 400.0 + (i % 32) as f64, 400.0 + t as f64);
+                    if cache.get(&k).is_none() {
+                        cache.insert(k, est(i as f64));
+                    }
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        let s = cache.stats();
+        assert_eq!(s.hits + s.misses, 8 * 200);
+        assert!(s.entries <= 8 * 32);
+    }
+}

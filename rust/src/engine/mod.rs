@@ -1,0 +1,393 @@
+//! The unified prediction engine (DESIGN.md §8): **one entry point for
+//! every prediction in the system**.
+//!
+//! Before this layer existed each consumer hand-wired its own path —
+//! the CLI called `model::predict` directly, the DVFS advisor looped a
+//! `baselines::Predictor`, the sweep validator re-simulated, and the
+//! batched PJRT service lived off on its own in `coordinator/batcher`.
+//! Three disjoint APIs, no shared caching, no shared concurrency. The
+//! engine collapses them into one facade in front of pluggable
+//! backends:
+//!
+//! ```text
+//!   cli / dvfs / coordinator::{sweep,validate} / report / baselines
+//!                         │
+//!                   Engine facade
+//!        predict_one · predict_grid · predict_stream
+//!                         │
+//!            sharded quantized grid cache (cache.rs)
+//!                         │
+//!        ┌────────────────┼──────────────────┐
+//!   NativeScalar     NativeBatch         Pjrt (N workers,
+//!  (model::predict)  (scoped threads)    sharded queues)
+//!                                 └ PredictorBackend (any baseline)
+//! ```
+//!
+//! * [`Backend`] — the execution strategy trait ([`NativeScalar`],
+//!   [`NativeBatch`], [`pjrt::PjrtBackend`], [`adapter::PredictorBackend`]).
+//! * [`cache::GridCache`] — sharded memoization keyed on the f32-quantized
+//!   (counters, hw, core MHz, mem MHz) tuple; repeat advisor/sweep
+//!   queries on the same grid never recompute.
+//! * [`Engine`] — the facade: single-point, whole-grid and streaming
+//!   prediction over any backend, cache-transparent.
+
+pub mod adapter;
+pub mod backend;
+pub mod cache;
+pub mod pjrt;
+
+use std::sync::mpsc::{self, Receiver};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+
+pub use adapter::{EnginePredictor, PredictorBackend};
+pub use backend::{Backend, Estimate, NativeBatch, NativeScalar, Request};
+pub use cache::{CacheKey, CacheStats, GridCache};
+pub use pjrt::{BatchPrediction, BatchServer, PjrtBackend, ServerStats};
+
+use crate::baselines::Predictor;
+use crate::model::{HwParams, KernelCounters};
+
+/// One streaming job: predict a whole frequency grid for one profiled
+/// kernel. `id` is echoed in the [`StreamReply`] so out-of-order
+/// completions stay attributable.
+#[derive(Debug, Clone)]
+pub struct StreamJob {
+    pub id: u64,
+    pub counters: KernelCounters,
+    pub pairs: Vec<(f64, f64)>,
+}
+
+/// Completion of one [`StreamJob`]. The error is stringly-typed because
+/// replies cross a channel.
+#[derive(Debug)]
+pub struct StreamReply {
+    pub id: u64,
+    pub result: Result<Vec<Estimate>, String>,
+}
+
+/// Builder for [`Engine`] (backend choice, cache policy).
+pub struct EngineBuilder {
+    hw: HwParams,
+    backend: Option<Arc<dyn Backend>>,
+    cache: bool,
+    cache_shards: usize,
+    cache_shard_capacity: usize,
+}
+
+impl EngineBuilder {
+    pub fn new(hw: HwParams) -> Self {
+        EngineBuilder {
+            hw,
+            backend: None,
+            cache: true,
+            cache_shards: cache::DEFAULT_SHARDS,
+            cache_shard_capacity: cache::DEFAULT_SHARD_CAPACITY,
+        }
+    }
+
+    /// Use the scalar native backend (default).
+    pub fn scalar(mut self) -> Self {
+        self.backend = Some(Arc::new(NativeScalar::new(self.hw)) as Arc<dyn Backend>);
+        self
+    }
+
+    /// Use the scoped-thread chunked native backend.
+    pub fn batch(mut self, workers: usize) -> Self {
+        self.backend = Some(Arc::new(NativeBatch::new(self.hw, workers)) as Arc<dyn Backend>);
+        self
+    }
+
+    /// Use the sharded PJRT batching service.
+    pub fn pjrt(mut self, server: BatchServer) -> Self {
+        self.backend = Some(Arc::new(PjrtBackend::new(server)) as Arc<dyn Backend>);
+        self
+    }
+
+    /// Use any baseline `Predictor` through the adapter.
+    pub fn predictor(mut self, p: Box<dyn Predictor>) -> Self {
+        self.backend = Some(Arc::new(PredictorBackend::new(p)) as Arc<dyn Backend>);
+        self
+    }
+
+    /// Use a custom backend.
+    pub fn backend(mut self, b: Arc<dyn Backend>) -> Self {
+        self.backend = Some(b);
+        self
+    }
+
+    /// Disable the grid cache (always recompute).
+    pub fn without_cache(mut self) -> Self {
+        self.cache = false;
+        self
+    }
+
+    /// Override cache geometry.
+    pub fn cache_geometry(mut self, shards: usize, shard_capacity: usize) -> Self {
+        self.cache_shards = shards;
+        self.cache_shard_capacity = shard_capacity;
+        self
+    }
+
+    pub fn build(self) -> Engine {
+        Engine {
+            backend: self
+                .backend
+                .unwrap_or_else(|| Arc::new(NativeScalar::new(self.hw)) as Arc<dyn Backend>),
+            cache: if self.cache {
+                Some(Arc::new(GridCache::new(self.cache_shards, self.cache_shard_capacity)))
+            } else {
+                None
+            },
+            hw: self.hw,
+        }
+    }
+}
+
+/// The facade. Cheap to clone (`Arc` internals); clones share the
+/// backend and the cache, so a cloned engine keeps the warm state.
+#[derive(Clone)]
+pub struct Engine {
+    backend: Arc<dyn Backend>,
+    cache: Option<Arc<GridCache>>,
+    hw: HwParams,
+}
+
+impl Engine {
+    pub fn builder(hw: HwParams) -> EngineBuilder {
+        EngineBuilder::new(hw)
+    }
+
+    /// Scalar native backend with the default cache.
+    pub fn native(hw: HwParams) -> Engine {
+        Self::builder(hw).scalar().build()
+    }
+
+    /// Scoped-thread native backend with the default cache.
+    pub fn native_batch(hw: HwParams, workers: usize) -> Engine {
+        Self::builder(hw).batch(workers).build()
+    }
+
+    /// PJRT service backend (emulated executor, `workers` drain workers)
+    /// with the default cache.
+    pub fn pjrt_emulated(hw: HwParams, workers: usize) -> Result<Engine> {
+        let (server, _handles) =
+            BatchServer::start_emulated(hw.to_f32(), Duration::from_millis(1), workers)?;
+        Ok(Self::builder(hw).pjrt(server).build())
+    }
+
+    /// Wrap a baseline predictor behind the facade (adapter + cache).
+    pub fn from_predictor(hw: HwParams, p: Box<dyn Predictor>) -> Engine {
+        Self::builder(hw).predictor(p).build()
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    pub fn hw(&self) -> &HwParams {
+        &self.hw
+    }
+
+    /// Cache counters; `None` when the cache is disabled.
+    pub fn cache_stats(&self) -> Option<CacheStats> {
+        self.cache.as_ref().map(|c| c.stats())
+    }
+
+    /// Predict one (kernel, frequency-pair) sample.
+    pub fn predict_one(&self, c: &KernelCounters, core_mhz: f64, mem_mhz: f64) -> Result<Estimate> {
+        let mut v = self.predict_grid(c, &[(core_mhz, mem_mhz)])?;
+        Ok(v.remove(0))
+    }
+
+    /// Predict a whole frequency grid for one profile, serving repeats
+    /// from the cache and batching only the misses to the backend.
+    pub fn predict_grid(
+        &self,
+        c: &KernelCounters,
+        pairs: &[(f64, f64)],
+    ) -> Result<Vec<Estimate>> {
+        let Some(cache) = &self.cache else {
+            let reqs: Vec<Request> = pairs
+                .iter()
+                .map(|&(cf, mf)| Request { counters: *c, core_mhz: cf, mem_mhz: mf })
+                .collect();
+            return self.backend.predict_batch(&reqs);
+        };
+
+        let mut out: Vec<Option<Estimate>> = Vec::with_capacity(pairs.len());
+        let mut miss_idx: Vec<usize> = Vec::new();
+        let mut miss_reqs: Vec<Request> = Vec::new();
+        let mut miss_keys: Vec<CacheKey> = Vec::new();
+        for (i, &(cf, mf)) in pairs.iter().enumerate() {
+            let key = CacheKey::new(c, &self.hw, cf, mf);
+            match cache.get(&key) {
+                Some(e) => out.push(Some(e)),
+                None => {
+                    out.push(None);
+                    miss_idx.push(i);
+                    miss_reqs.push(Request { counters: *c, core_mhz: cf, mem_mhz: mf });
+                    miss_keys.push(key);
+                }
+            }
+        }
+        if !miss_reqs.is_empty() {
+            let fresh = self.backend.predict_batch(&miss_reqs)?;
+            for ((i, key), est) in miss_idx.into_iter().zip(miss_keys).zip(fresh) {
+                cache.insert(key, est);
+                out[i] = Some(est);
+            }
+        }
+        Ok(out.into_iter().map(|e| e.expect("all pairs filled")).collect())
+    }
+
+    /// Streaming API: evaluate many grid jobs on a detached worker,
+    /// delivering completions over a channel as they finish. The worker
+    /// shares this engine's backend and cache, so streamed results warm
+    /// the same cache the synchronous paths read.
+    ///
+    /// Jobs are evaluated in order on one worker — intra-job rows fan
+    /// out to the backend's own parallelism (the PJRT service's N
+    /// drain workers, `NativeBatch`'s scoped threads), and identical
+    /// jobs dedupe through the cache deterministically. Callers that
+    /// want cross-job concurrency clone the engine per stream (clones
+    /// share the backend and the warm cache).
+    pub fn predict_stream(&self, jobs: Vec<StreamJob>) -> Receiver<StreamReply> {
+        let (tx, rx) = mpsc::channel();
+        let engine = self.clone();
+        std::thread::spawn(move || {
+            for job in jobs {
+                let result = engine
+                    .predict_grid(&job.counters, &job.pairs)
+                    .map_err(|e| format!("{e:#}"));
+                if tx.send(StreamReply { id: job.id, result }).is_err() {
+                    return; // receiver dropped; stop evaluating
+                }
+            }
+        });
+        rx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model;
+
+    fn counters() -> KernelCounters {
+        KernelCounters {
+            l2_hr: 0.1,
+            gld_trans: 6.0,
+            avr_inst: 1.5,
+            n_blocks: 128.0,
+            wpb: 8.0,
+            aw: 64.0,
+            n_sm: 16.0,
+            o_itrs: 8.0,
+            i_itrs: 0.0,
+            uses_smem: false,
+            smem_conflict: 1.0,
+            gld_body: 6.0,
+            gld_edge: 0.0,
+            mem_ops: 2.0,
+            l1_hr: 0.0,
+        }
+    }
+
+    fn grid() -> Vec<(f64, f64)> {
+        crate::microbench::standard_grid()
+    }
+
+    #[test]
+    fn facade_matches_scalar_model() {
+        let hw = HwParams::paper_defaults();
+        let engine = Engine::native(hw);
+        let c = counters();
+        for &(cf, mf) in &[(400.0, 1000.0), (700.0, 700.0), (1000.0, 400.0)] {
+            let e = engine.predict_one(&c, cf, mf).unwrap();
+            let want = model::predict(&c, &hw, cf, mf);
+            assert_eq!(e.time_us.to_bits(), want.time_us.to_bits());
+            assert_eq!(e.regime, Some(want.regime));
+        }
+    }
+
+    #[test]
+    fn warm_grid_is_bit_identical_and_counts_hits() {
+        let hw = HwParams::paper_defaults();
+        let engine = Engine::native(hw);
+        let c = counters();
+        let cold = engine.predict_grid(&c, &grid()).unwrap();
+        let s0 = engine.cache_stats().unwrap();
+        assert_eq!(s0.misses, 49);
+        assert_eq!(s0.hits, 0);
+        let warm = engine.predict_grid(&c, &grid()).unwrap();
+        let s1 = engine.cache_stats().unwrap();
+        assert!(s1.hits >= 49, "hits {}", s1.hits);
+        for (a, b) in cold.iter().zip(&warm) {
+            assert_eq!(a.time_us.to_bits(), b.time_us.to_bits());
+            assert_eq!(a.t_active.to_bits(), b.t_active.to_bits());
+            assert_eq!(a.t_exec_cycles.to_bits(), b.t_exec_cycles.to_bits());
+            assert_eq!(a.regime, b.regime);
+        }
+    }
+
+    #[test]
+    fn without_cache_never_counts() {
+        let hw = HwParams::paper_defaults();
+        let engine = Engine::builder(hw).scalar().without_cache().build();
+        let c = counters();
+        engine.predict_grid(&c, &grid()).unwrap();
+        assert!(engine.cache_stats().is_none());
+    }
+
+    #[test]
+    fn clones_share_the_warm_cache() {
+        let hw = HwParams::paper_defaults();
+        let engine = Engine::native(hw);
+        let c = counters();
+        engine.predict_grid(&c, &grid()).unwrap();
+        let clone = engine.clone();
+        clone.predict_grid(&c, &grid()).unwrap();
+        assert!(clone.cache_stats().unwrap().hits >= 49);
+    }
+
+    #[test]
+    fn stream_replies_cover_all_jobs() {
+        let hw = HwParams::paper_defaults();
+        let engine = Engine::native(hw);
+        let c = counters();
+        let jobs: Vec<StreamJob> = (0..4)
+            .map(|i| StreamJob { id: i, counters: c, pairs: grid() })
+            .collect();
+        let rx = engine.predict_stream(jobs);
+        let mut seen = Vec::new();
+        for reply in rx {
+            let ests = reply.result.expect("native backend cannot fail");
+            assert_eq!(ests.len(), 49);
+            seen.push(reply.id);
+        }
+        seen.sort_unstable();
+        assert_eq!(seen, vec![0, 1, 2, 3]);
+        // All four jobs share one profile: 49 misses, 3*49 hits.
+        let s = engine.cache_stats().unwrap();
+        assert_eq!(s.misses, 49);
+        assert_eq!(s.hits, 3 * 49);
+    }
+
+    #[test]
+    fn mixed_hit_miss_grid_assembles_in_order() {
+        let hw = HwParams::paper_defaults();
+        let engine = Engine::native(hw);
+        let c = counters();
+        let small: Vec<(f64, f64)> = vec![(400.0, 400.0), (700.0, 700.0)];
+        engine.predict_grid(&c, &small).unwrap();
+        // Superset grid: 2 hits + 47 misses, order must match scalar.
+        let full = engine.predict_grid(&c, &grid()).unwrap();
+        for (e, &(cf, mf)) in full.iter().zip(&grid()) {
+            let want = model::predict(&c, &hw, cf, mf);
+            assert_eq!(e.time_us.to_bits(), want.time_us.to_bits(), "({cf},{mf})");
+        }
+    }
+}

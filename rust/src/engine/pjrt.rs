@@ -1,0 +1,471 @@
+//! The PJRT-backed prediction service: dynamic batching over the AOT
+//! artifact executor, upgraded from the original single drain worker
+//! (`coordinator/batcher.rs`, now a thin re-export) to **N workers over
+//! sharded request queues**.
+//!
+//! Requests are spread round-robin across per-worker mpsc queues; each
+//! worker drains up to a full `PREDICT_BATCH` (or until `max_wait`
+//! passes with a partial batch), executes one runtime call, and fans
+//! the rows back to the waiting clients. Sharding removes the
+//! single-queue bottleneck: with W workers, W batches execute
+//! concurrently and queue contention is 1/W of the single-lane design.
+
+use std::sync::atomic::{AtomicUsize, Ordering::Relaxed};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::model::params::{N_FEATURES, N_HW_PARAMS, N_OUTPUTS};
+use crate::model::{KernelCounters, Regime};
+use crate::runtime::{Runtime, PREDICT_BATCH};
+
+/// A decoded prediction row.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BatchPrediction {
+    pub t_active: f64,
+    pub t_exec_cycles: f64,
+    pub time_us: f64,
+    pub regime: Option<Regime>,
+}
+
+impl BatchPrediction {
+    fn from_row(row: [f32; N_OUTPUTS]) -> Self {
+        BatchPrediction {
+            t_active: row[0] as f64,
+            t_exec_cycles: row[1] as f64,
+            time_us: row[2] as f64,
+            regime: Regime::from_id(row[3] as u32),
+        }
+    }
+}
+
+struct Request {
+    features: [f32; N_FEATURES],
+    resp: Sender<BatchPrediction>,
+}
+
+/// Counters the service exposes (all monotonically increasing).
+#[derive(Debug, Default)]
+pub struct ServerStats {
+    pub requests: std::sync::atomic::AtomicU64,
+    pub batches: std::sync::atomic::AtomicU64,
+    pub rows_padded: std::sync::atomic::AtomicU64,
+}
+
+impl ServerStats {
+    pub fn requests(&self) -> u64 {
+        self.requests.load(std::sync::atomic::Ordering::Relaxed)
+    }
+    pub fn batches(&self) -> u64 {
+        self.batches.load(std::sync::atomic::Ordering::Relaxed)
+    }
+    pub fn rows_padded(&self) -> u64 {
+        self.rows_padded.load(std::sync::atomic::Ordering::Relaxed)
+    }
+    /// Mean occupancy of executed batches in [0, 1].
+    pub fn mean_occupancy(&self) -> f64 {
+        let b = self.batches();
+        if b == 0 {
+            return 0.0;
+        }
+        let total_rows = b * PREDICT_BATCH as u64;
+        (total_rows - self.rows_padded()) as f64 / total_rows as f64
+    }
+}
+
+/// Handle to the batching service. Cloneable and `Sync`; dropping every
+/// handle shuts the workers down.
+#[derive(Clone)]
+pub struct BatchServer {
+    shards: Arc<Vec<Mutex<Sender<Request>>>>,
+    next: Arc<AtomicUsize>,
+    stats: Arc<ServerStats>,
+    platform: String,
+}
+
+fn worker_loop(
+    runtime: Runtime,
+    hw: [f32; N_HW_PARAMS],
+    rx: Receiver<Request>,
+    max_wait: Duration,
+    stats: Arc<ServerStats>,
+) {
+    loop {
+        // Block for the first request of a batch.
+        let first = match rx.recv() {
+            Ok(r) => r,
+            Err(_) => return, // all senders dropped
+        };
+        let mut pending = vec![first];
+        let deadline = Instant::now() + max_wait;
+        while pending.len() < PREDICT_BATCH {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(r) => pending.push(r),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+
+        let rows: Vec<[f32; N_FEATURES]> = pending.iter().map(|r| r.features).collect();
+        stats.requests.fetch_add(rows.len() as u64, Relaxed);
+        stats.batches.fetch_add(1, Relaxed);
+        let padded = (PREDICT_BATCH - rows.len() % PREDICT_BATCH) % PREDICT_BATCH;
+        stats.rows_padded.fetch_add(padded as u64, Relaxed);
+
+        match runtime.predict(&rows, &hw) {
+            Ok(out) => {
+                for (req, row) in pending.into_iter().zip(out) {
+                    let _ = req.resp.send(BatchPrediction::from_row(row));
+                }
+            }
+            Err(e) => {
+                // Drop the response senders: clients see RecvError.
+                eprintln!("batch execution failed: {e:#}");
+            }
+        }
+    }
+}
+
+fn spawn_worker<F>(
+    factory: F,
+    hw: [f32; N_HW_PARAMS],
+    max_wait: Duration,
+    rx: Receiver<Request>,
+    stats: Arc<ServerStats>,
+    init_tx: Sender<Result<String>>,
+) -> JoinHandle<()>
+where
+    F: FnOnce() -> Result<Runtime> + Send + 'static,
+{
+    std::thread::spawn(move || {
+        // The real PJRT client is not `Send` (it holds an `Rc`
+        // internally), so each worker constructs its own Runtime; init
+        // errors are surfaced synchronously through `init_tx`.
+        let runtime = match factory() {
+            Ok(rt) => {
+                let _ = init_tx.send(Ok(rt.platform()));
+                rt
+            }
+            Err(e) => {
+                let _ = init_tx.send(Err(e));
+                return;
+            }
+        };
+        worker_loop(runtime, hw, rx, max_wait, stats);
+    })
+}
+
+impl BatchServer {
+    /// Start a single-worker service (the original batcher topology).
+    pub fn start<F>(
+        factory: F,
+        hw: [f32; N_HW_PARAMS],
+        max_wait: Duration,
+    ) -> Result<(Self, Vec<JoinHandle<()>>)>
+    where
+        F: FnOnce() -> Result<Runtime> + Send + 'static,
+    {
+        let stats = Arc::new(ServerStats::default());
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (init_tx, init_rx) = mpsc::channel();
+        let handle = spawn_worker(factory, hw, max_wait, rx, stats.clone(), init_tx);
+        let platform = init_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("batch worker died during init"))??;
+        Ok((
+            BatchServer {
+                shards: Arc::new(vec![Mutex::new(tx)]),
+                next: Arc::new(AtomicUsize::new(0)),
+                stats,
+                platform,
+            },
+            vec![handle],
+        ))
+    }
+
+    /// Start `workers` drain workers over sharded request queues.
+    pub fn start_sharded<F>(
+        factory: F,
+        hw: [f32; N_HW_PARAMS],
+        max_wait: Duration,
+        workers: usize,
+    ) -> Result<(Self, Vec<JoinHandle<()>>)>
+    where
+        F: Fn() -> Result<Runtime> + Clone + Send + 'static,
+    {
+        let workers = workers.max(1);
+        let stats = Arc::new(ServerStats::default());
+        let (init_tx, init_rx) = mpsc::channel();
+        let mut senders = Vec::with_capacity(workers);
+        let mut handles = Vec::with_capacity(workers);
+        for _ in 0..workers {
+            let (tx, rx) = mpsc::channel::<Request>();
+            senders.push(Mutex::new(tx));
+            handles.push(spawn_worker(
+                factory.clone(),
+                hw,
+                max_wait,
+                rx,
+                stats.clone(),
+                init_tx.clone(),
+            ));
+        }
+        drop(init_tx);
+        let mut platform = String::new();
+        for _ in 0..workers {
+            platform = init_rx
+                .recv()
+                .map_err(|_| anyhow::anyhow!("batch worker died during init"))??;
+        }
+        Ok((
+            BatchServer {
+                shards: Arc::new(senders),
+                next: Arc::new(AtomicUsize::new(0)),
+                stats,
+                platform,
+            },
+            handles,
+        ))
+    }
+
+    /// Start a single worker against the default artifacts directory
+    /// (fails without artifacts — see [`Runtime::load`]).
+    pub fn start_default(
+        hw: [f32; N_HW_PARAMS],
+        max_wait: Duration,
+    ) -> Result<(Self, Vec<JoinHandle<()>>)> {
+        Self::start(Runtime::load_default, hw, max_wait)
+    }
+
+    /// Start `workers` workers on the always-available emulated executor.
+    pub fn start_emulated(
+        hw: [f32; N_HW_PARAMS],
+        max_wait: Duration,
+        workers: usize,
+    ) -> Result<(Self, Vec<JoinHandle<()>>)> {
+        Self::start_sharded(|| Ok(Runtime::emulated()), hw, max_wait, workers)
+    }
+
+    /// Artifacts when present, emulation otherwise — the production
+    /// entry point (`gpufreq serve`, `--backend pjrt`).
+    pub fn start_auto(
+        hw: [f32; N_HW_PARAMS],
+        max_wait: Duration,
+        workers: usize,
+    ) -> Result<(Self, Vec<JoinHandle<()>>)> {
+        Self::start_sharded(|| Ok(Runtime::load_or_emulated()), hw, max_wait, workers)
+    }
+
+    /// PJRT platform name the workers run on.
+    pub fn platform(&self) -> &str {
+        &self.platform
+    }
+
+    /// Number of request shards (= workers).
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    fn enqueue(&self, features: [f32; N_FEATURES]) -> Result<mpsc::Receiver<BatchPrediction>> {
+        let (resp, rx) = mpsc::channel();
+        let shard = self.next.fetch_add(1, Relaxed) % self.shards.len();
+        self.shards[shard]
+            .lock()
+            .expect("request shard poisoned")
+            .send(Request { features, resp })
+            .map_err(|_| anyhow::anyhow!("batch server stopped"))?;
+        Ok(rx)
+    }
+
+    /// Blocking single prediction (latency path).
+    pub fn predict(
+        &self,
+        counters: &KernelCounters,
+        core_mhz: f64,
+        mem_mhz: f64,
+    ) -> Result<BatchPrediction> {
+        let rx = self.enqueue(counters.to_features(core_mhz, mem_mhz))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("batch execution failed"))
+    }
+
+    /// Blocking many-row prediction (throughput path): enqueues every
+    /// row across the shards before draining responses, so rows share
+    /// batches and workers run concurrently.
+    pub fn predict_features(
+        &self,
+        rows: &[[f32; N_FEATURES]],
+    ) -> Result<Vec<BatchPrediction>> {
+        let rxs: Result<Vec<_>> = rows.iter().map(|r| self.enqueue(*r)).collect();
+        rxs?.into_iter()
+            .map(|rx| rx.recv().map_err(|_| anyhow::anyhow!("batch execution failed")))
+            .collect()
+    }
+
+    /// Blocking grid prediction for one kernel profile.
+    pub fn predict_grid(
+        &self,
+        counters: &KernelCounters,
+        pairs: &[(f64, f64)],
+    ) -> Result<Vec<BatchPrediction>> {
+        let rows: Vec<[f32; N_FEATURES]> =
+            pairs.iter().map(|&(cf, mf)| counters.to_features(cf, mf)).collect();
+        self.predict_features(&rows)
+    }
+
+    pub fn stats(&self) -> &ServerStats {
+        &self.stats
+    }
+}
+
+/// [`Backend`](super::Backend) over the batching service.
+pub struct PjrtBackend {
+    server: BatchServer,
+}
+
+impl PjrtBackend {
+    pub fn new(server: BatchServer) -> Self {
+        PjrtBackend { server }
+    }
+
+    pub fn server(&self) -> &BatchServer {
+        &self.server
+    }
+}
+
+impl super::Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn predict_batch(&self, reqs: &[super::Request]) -> Result<Vec<super::Estimate>> {
+        let rows: Vec<[f32; N_FEATURES]> =
+            reqs.iter().map(|r| r.counters.to_features(r.core_mhz, r.mem_mhz)).collect();
+        let out = self.server.predict_features(&rows)?;
+        Ok(out
+            .into_iter()
+            .map(|p| super::Estimate {
+                t_active: p.t_active,
+                t_exec_cycles: p.t_exec_cycles,
+                time_us: p.time_us,
+                regime: p.regime,
+            })
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{self, HwParams};
+
+    fn counters() -> KernelCounters {
+        KernelCounters {
+            l2_hr: 0.1,
+            gld_trans: 6.0,
+            avr_inst: 1.5,
+            n_blocks: 128.0,
+            wpb: 8.0,
+            aw: 64.0,
+            n_sm: 16.0,
+            o_itrs: 8.0,
+            i_itrs: 0.0,
+            uses_smem: false,
+            smem_conflict: 1.0,
+            gld_body: 6.0,
+            gld_edge: 0.0,
+            mem_ops: 2.0,
+            l1_hr: 0.0,
+        }
+    }
+
+    #[test]
+    fn single_and_grid_predictions_match_native() {
+        let hw = HwParams::paper_defaults();
+        let (server, _h) =
+            BatchServer::start_emulated(hw.to_f32(), Duration::from_millis(2), 1).unwrap();
+        assert!(server.platform().to_lowercase().contains("cpu"));
+        let c = counters();
+
+        let one = server.predict(&c, 700.0, 700.0).unwrap();
+        let native = model::predict(&c, &hw, 700.0, 700.0);
+        assert!((one.time_us - native.time_us).abs() / native.time_us < 1e-4);
+        assert_eq!(one.regime, Some(native.regime));
+
+        let grid = crate::microbench::standard_grid();
+        let out = server.predict_grid(&c, &grid).unwrap();
+        assert_eq!(out.len(), 49);
+        for (p, &(cf, mf)) in out.iter().zip(&grid) {
+            let n = model::predict(&c, &hw, cf, mf);
+            assert!(
+                (p.time_us - n.time_us).abs() / n.time_us < 1e-4,
+                "({cf},{mf}): {} vs {}",
+                p.time_us,
+                n.time_us
+            );
+        }
+        assert!(server.stats().requests() >= 50);
+        assert!(server.stats().batches() >= 1);
+        assert!(server.stats().mean_occupancy() > 0.0);
+    }
+
+    #[test]
+    fn sharded_workers_cover_the_grid() {
+        let hw = HwParams::paper_defaults();
+        let (server, handles) =
+            BatchServer::start_emulated(hw.to_f32(), Duration::from_millis(2), 4).unwrap();
+        assert_eq!(server.shard_count(), 4);
+        assert_eq!(handles.len(), 4);
+        let c = counters();
+        let grid = crate::microbench::standard_grid();
+        let out = server.predict_grid(&c, &grid).unwrap();
+        assert_eq!(out.len(), 49);
+        for (p, &(cf, mf)) in out.iter().zip(&grid) {
+            let n = model::predict(&c, &hw, cf, mf);
+            assert!((p.time_us - n.time_us).abs() / n.time_us < 1e-4);
+        }
+        assert_eq!(server.stats().requests(), 49);
+    }
+
+    #[test]
+    fn concurrent_clients_are_all_served() {
+        let hw = HwParams::paper_defaults();
+        let (server, _h) =
+            BatchServer::start_emulated(hw.to_f32(), Duration::from_millis(5), 2).unwrap();
+        let mut joins = Vec::new();
+        for t in 0..8 {
+            let s = server.clone();
+            let c = counters();
+            joins.push(std::thread::spawn(move || {
+                let cf = 400.0 + (t as f64) * 50.0;
+                let p = s.predict(&c, cf, 700.0).unwrap();
+                assert!(p.time_us > 0.0);
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        let st = server.stats();
+        assert_eq!(st.requests(), 8);
+        // Batching must not inflate the batch count past the request count.
+        assert!(st.batches() <= 8);
+    }
+
+    #[test]
+    fn start_default_requires_artifacts() {
+        // From a clean checkout there are no AOT artifacts, so the
+        // artifact-pinned constructor must fail with actionable context;
+        // with artifacts present it must come up on a CPU platform.
+        let hw = HwParams::paper_defaults().to_f32();
+        match BatchServer::start_default(hw, Duration::from_millis(1)) {
+            Ok((server, _h)) => assert!(server.platform().to_lowercase().contains("cpu")),
+            Err(e) => assert!(format!("{e:#}").contains("make artifacts")),
+        }
+    }
+}

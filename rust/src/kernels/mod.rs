@@ -344,7 +344,9 @@ pub fn texture_filter() -> Kernel {
             body: vec![
                 // Bilinear taps over a hot texture window: strong
                 // temporal locality, absorbed by the per-SM L1.
-                Op::Load(MemPat::new(4, Addressing::Hot { lines: 512 }, region::TABLE).through_l1()),
+                Op::Load(
+                    MemPat::new(4, Addressing::Hot { lines: 512 }, region::TABLE).through_l1(),
+                ),
                 Op::Compute(6),
                 Op::Store(MemPat::new(4, Addressing::OwnLinear, region::OUT_C)),
             ],

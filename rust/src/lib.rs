@@ -8,8 +8,11 @@
 //! * [`profiler`] — one-shot baseline counter collection (Nsight stand-in)
 //! * [`model`] — the analytical model, Eqs. (2)–(21), scalar reference
 //! * [`baselines`] — const-latency / linear-freq / MWP-CWP-lite ablations
-//! * [`runtime`] — PJRT loader/executor for the AOT JAX/Pallas artifacts
-//! * [`coordinator`] — sweep orchestration, validation, request batching
+//! * [`runtime`] — executor for the AOT JAX/Pallas artifacts
+//! * [`engine`] — the unified prediction engine: pluggable backends
+//!   (native scalar / scoped-thread batch / sharded PJRT service),
+//!   sharded quantized grid cache, and the facade every consumer uses
+//! * [`coordinator`] — sweep orchestration and validation
 //! * [`dvfs`] — power model + energy-conservation advisor (paper §VII)
 //! * [`config`] — TOML-subset config system (Table V)
 //! * [`report`] — table/figure emitters for every paper artifact
@@ -18,6 +21,7 @@ pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod dvfs;
+pub mod engine;
 pub mod kernels;
 pub mod microbench;
 pub mod model;

@@ -234,7 +234,14 @@ mod tests {
 
     #[test]
     fn memory_regime_scales_with_ratio() {
-        let c = KernelCounters { avr_inst: 1.0, gld_trans: 16.0, aw: 64.0, l2_hr: 0.0, o_itrs: 64.0, ..counters() };
+        let c = KernelCounters {
+            avr_inst: 1.0,
+            gld_trans: 16.0,
+            aw: 64.0,
+            l2_hr: 0.0,
+            o_itrs: 64.0,
+            ..counters()
+        };
         let h = hw();
         let p_lo = predict(&c, &h, 1000.0, 400.0);
         let p_hi = predict(&c, &h, 1000.0, 1000.0);

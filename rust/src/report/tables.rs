@@ -5,6 +5,7 @@
 use crate::baselines::Predictor;
 use crate::coordinator::sweep::Sweep;
 use crate::coordinator::validate::Validation;
+use crate::model::HwParams;
 use crate::microbench::{self, BandwidthProbe};
 use crate::profiler::Profile;
 use crate::sim::engine::{Engine, SampleCfg};
@@ -80,9 +81,11 @@ pub fn table3(spec: &GpuSpec) -> Table {
 /// selects panels (a)/(b) (sweep memory) vs (c)/(d) (sweep core).
 pub fn fig2(sweep: &Sweep, kernels: &[Kernel], fixed_mhz: f64, sweep_memory: bool) -> Table {
     let (title, sweep_label) = if sweep_memory {
-        (format!("Fig. 2: speedup vs memory frequency (core fixed at {fixed_mhz:.0} MHz)"), "Mem MHz")
+        let t = format!("Fig. 2: speedup vs memory frequency (core fixed at {fixed_mhz:.0} MHz)");
+        (t, "Mem MHz")
     } else {
-        (format!("Fig. 2: speedup vs core frequency (memory fixed at {fixed_mhz:.0} MHz)"), "Core MHz")
+        let t = format!("Fig. 2: speedup vs core frequency (memory fixed at {fixed_mhz:.0} MHz)");
+        (t, "Core MHz")
     };
     let mut header = vec![sweep_label.to_string()];
     header.extend(kernels.iter().map(|k| k.name.clone()));
@@ -170,8 +173,12 @@ pub fn fig12(profiles: &[Profile]) -> Table {
 /// other fixed (panels a-d of the paper).
 pub fn fig13(v: &Validation, fixed_core: Option<f64>, fixed_mem: Option<f64>) -> Table {
     let (title, label) = match (fixed_core, fixed_mem) {
-        (Some(cf), None) => (format!("Fig. 13: error vs memory frequency (core = {cf:.0} MHz)"), "Mem MHz"),
-        (None, Some(mf)) => (format!("Fig. 13: error vs core frequency (memory = {mf:.0} MHz)"), "Core MHz"),
+        (Some(cf), None) => {
+            (format!("Fig. 13: error vs memory frequency (core = {cf:.0} MHz)"), "Mem MHz")
+        }
+        (None, Some(mf)) => {
+            (format!("Fig. 13: error vs core frequency (memory = {mf:.0} MHz)"), "Core MHz")
+        }
         _ => panic!("fix exactly one domain"),
     };
     let mut header = vec![label.to_string()];
@@ -265,17 +272,27 @@ pub fn ablation(rows: &[(String, f64, f64)]) -> Table {
 }
 
 /// Predictor-vs-predictor convenience for the ablation bench/CLI.
+/// Every predictor runs behind the engine facade
+/// (`Predictor` → `Backend` adapter), so each gets its own grid cache
+/// and the same batched prediction path as the production model.
+/// `hw` is the calibration the predictors were built with (it seeds
+/// each engine's cache key and `Engine::hw()` reporting).
 pub fn run_ablation(
     spec: &GpuSpec,
     kernels: &[Kernel],
-    predictors: &[Box<dyn Predictor>],
+    hw: HwParams,
+    predictors: Vec<Box<dyn Predictor>>,
     pairs: &[(f64, f64)],
 ) -> Vec<(String, f64, f64)> {
     predictors
-        .iter()
+        .into_iter()
         .map(|p| {
-            let v = crate::coordinator::validate::validate_with(spec, kernels, p.as_ref(), pairs);
-            (p.name().to_string(), v.overall_mape(), v.max_abs_err())
+            let name = p.name().to_string();
+            let engine = crate::engine::Engine::from_predictor(hw, p);
+            let v =
+                crate::coordinator::validate::validate_with_engine(spec, kernels, &engine, pairs)
+                    .expect("native ablation backends are infallible");
+            (name, v.overall_mape(), v.max_abs_err())
         })
         .collect()
 }

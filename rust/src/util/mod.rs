@@ -1,7 +1,8 @@
 //! Small in-tree utilities standing in for crates absent from the
-//! offline vendor set (criterion, proptest, rand) — DESIGN.md "Offline
-//! substitutions".
+//! offline vendor set (criterion, proptest, rand, rustc-hash) —
+//! DESIGN.md "Offline substitutions".
 
 pub mod bench;
 pub mod dheap;
+pub mod fxhash;
 pub mod prop;

@@ -1,0 +1,189 @@
+//! Integration tests for the unified prediction engine: backend
+//! equivalence, cache semantics (the PR's acceptance criteria), the
+//! adapter bridges and the streaming path.
+
+use std::time::Duration;
+
+use gpufreq::baselines::{ConstLatency, PaperModel, Predictor};
+use gpufreq::engine::{BatchServer, Engine, EnginePredictor, StreamJob};
+use gpufreq::kernels;
+use gpufreq::microbench;
+use gpufreq::model::{self, HwParams, KernelCounters};
+use gpufreq::profiler;
+use gpufreq::sim::{Clocks, GpuSpec};
+
+fn counters() -> KernelCounters {
+    KernelCounters {
+        l2_hr: 0.15,
+        gld_trans: 6.0,
+        avr_inst: 2.5,
+        n_blocks: 256.0,
+        wpb: 8.0,
+        aw: 64.0,
+        n_sm: 16.0,
+        o_itrs: 8.0,
+        i_itrs: 0.0,
+        uses_smem: false,
+        smem_conflict: 1.0,
+        gld_body: 6.0,
+        gld_edge: 0.0,
+        mem_ops: 2.0,
+        l1_hr: 0.0,
+    }
+}
+
+#[test]
+fn warm_cache_grid_is_bit_identical_to_native_scalar() {
+    // Acceptance: the warm-cache predict_grid path returns bit-identical
+    // results to NativeScalar and the hit-rate counter is >0 on the
+    // second call.
+    let hw = HwParams::paper_defaults();
+    let engine = Engine::native(hw);
+    let c = counters();
+    let grid = microbench::standard_grid();
+
+    let cold = engine.predict_grid(&c, &grid).unwrap();
+    let warm = engine.predict_grid(&c, &grid).unwrap();
+    for (i, (&(cf, mf), (a, b))) in grid.iter().zip(cold.iter().zip(&warm)).enumerate() {
+        let want = model::predict(&c, &hw, cf, mf);
+        assert_eq!(a.time_us.to_bits(), want.time_us.to_bits(), "cold[{i}]");
+        assert_eq!(b.time_us.to_bits(), want.time_us.to_bits(), "warm[{i}]");
+        assert_eq!(a.t_active.to_bits(), want.t_active.to_bits());
+        assert_eq!(b.t_active.to_bits(), want.t_active.to_bits());
+        assert_eq!(a.t_exec_cycles.to_bits(), want.t_exec_cycles.to_bits());
+        assert_eq!(b.t_exec_cycles.to_bits(), want.t_exec_cycles.to_bits());
+        assert_eq!(a.regime, Some(want.regime));
+        assert_eq!(b.regime, Some(want.regime));
+    }
+    let stats = engine.cache_stats().unwrap();
+    assert!(stats.hits > 0, "second grid call must hit the cache");
+    assert_eq!(stats.misses, grid.len() as u64);
+    assert!(stats.hit_rate() > 0.0);
+}
+
+#[test]
+fn all_three_backends_agree_on_the_grid() {
+    let hw = HwParams::paper_defaults();
+    let c = counters();
+    let grid = microbench::standard_grid();
+    let native = Engine::builder(hw).scalar().without_cache().build();
+    let batch = Engine::builder(hw).batch(4).without_cache().build();
+    let pjrt = Engine::pjrt_emulated(hw, 2).unwrap();
+
+    let a = native.predict_grid(&c, &grid).unwrap();
+    let b = batch.predict_grid(&c, &grid).unwrap();
+    let p = pjrt.predict_grid(&c, &grid).unwrap();
+    for i in 0..grid.len() {
+        // Native paths are bit-identical.
+        assert_eq!(a[i].time_us.to_bits(), b[i].time_us.to_bits());
+        // The PJRT path goes through the f32 feature packing: f32-close.
+        let rel = (p[i].time_us - a[i].time_us).abs() / a[i].time_us;
+        assert!(rel < 1e-4, "pair {i}: pjrt {} vs native {}", p[i].time_us, a[i].time_us);
+        assert_eq!(p[i].regime, a[i].regime);
+    }
+}
+
+#[test]
+fn engine_streaming_matches_synchronous_grid() {
+    let spec = GpuSpec::default();
+    let hw = HwParams::paper_defaults();
+    let engine = Engine::native(hw);
+    let grid = microbench::standard_grid();
+    let ks = [kernels::vector_add(), kernels::matrix_mul_shared(), kernels::black_scholes()];
+    let profiles: Vec<_> =
+        ks.iter().map(|k| profiler::profile_at(&spec, k, Clocks::new(700.0, 700.0))).collect();
+
+    let jobs: Vec<StreamJob> = profiles
+        .iter()
+        .enumerate()
+        .map(|(i, p)| StreamJob { id: i as u64, counters: p.counters, pairs: grid.clone() })
+        .collect();
+    let mut replies: Vec<_> = engine.predict_stream(jobs).into_iter().collect();
+    replies.sort_by_key(|r| r.id);
+    assert_eq!(replies.len(), 3);
+    for (reply, profile) in replies.iter().zip(&profiles) {
+        let ests = reply.result.as_ref().expect("native stream job");
+        let sync = engine.predict_grid(&profile.counters, &grid).unwrap();
+        for (e, s) in ests.iter().zip(&sync) {
+            assert_eq!(e.time_us.to_bits(), s.time_us.to_bits());
+        }
+    }
+}
+
+#[test]
+fn predictor_adapter_engine_matches_raw_baseline() {
+    let hw = HwParams::paper_defaults();
+    let raw = ConstLatency { hw, baseline_core_mhz: 700.0, baseline_mem_mhz: 700.0 };
+    let engine = Engine::from_predictor(
+        hw,
+        Box::new(ConstLatency { hw, baseline_core_mhz: 700.0, baseline_mem_mhz: 700.0 }),
+    );
+    let c = counters();
+    let grid = microbench::standard_grid();
+    let ests = engine.predict_grid(&c, &grid).unwrap();
+    for (e, &(cf, mf)) in ests.iter().zip(&grid) {
+        assert_eq!(e.time_us.to_bits(), raw.predict_us(&c, cf, mf).to_bits());
+        assert_eq!(e.regime, None, "opaque predictors carry no regime");
+    }
+    // Warm pass served from cache, still identical.
+    let warm = engine.predict_grid(&c, &grid).unwrap();
+    assert!(engine.cache_stats().unwrap().hits >= grid.len() as u64);
+    for (a, b) in ests.iter().zip(&warm) {
+        assert_eq!(a.time_us.to_bits(), b.time_us.to_bits());
+    }
+}
+
+#[test]
+fn engine_predictor_bridges_back_into_legacy_call_sites() {
+    let hw = HwParams::paper_defaults();
+    let bridged = EnginePredictor::new(Engine::native(hw), "paper-engine");
+    let direct = PaperModel { hw };
+    let c = counters();
+    for &(cf, mf) in &[(400.0, 400.0), (700.0, 1000.0), (1000.0, 400.0)] {
+        assert_eq!(
+            bridged.predict_us(&c, cf, mf).to_bits(),
+            direct.predict_us(&c, cf, mf).to_bits()
+        );
+    }
+}
+
+#[test]
+fn sharded_pjrt_service_survives_concurrent_grids() {
+    let hw = HwParams::paper_defaults();
+    let (server, _handles) =
+        BatchServer::start_emulated(hw.to_f32(), Duration::from_millis(2), 4).unwrap();
+    let engine = Engine::builder(hw).pjrt(server.clone()).build();
+    let grid = microbench::standard_grid();
+    std::thread::scope(|scope| {
+        for t in 0..6u32 {
+            let engine = engine.clone();
+            let grid = grid.clone();
+            scope.spawn(move || {
+                let mut c = counters();
+                c.avr_inst += t as f64; // distinct profiles defeat the cache
+                let out = engine.predict_grid(&c, &grid).unwrap();
+                assert_eq!(out.len(), 49);
+                for e in out {
+                    assert!(e.time_us > 0.0 && e.time_us.is_finite());
+                }
+            });
+        }
+    });
+    assert!(server.stats().requests() >= 6 * 49 - 5 * 49); // at least the misses
+    assert_eq!(server.shard_count(), 4);
+}
+
+#[test]
+fn distinct_hw_params_never_share_cache_entries() {
+    let c = counters();
+    let hw_a = HwParams::paper_defaults();
+    let mut hw_b = HwParams::paper_defaults();
+    hw_b.dm_del += 2.0;
+    let engine_a = Engine::native(hw_a);
+    let engine_b = Engine::native(hw_b);
+    let ea = engine_a.predict_one(&c, 700.0, 500.0).unwrap();
+    let eb = engine_b.predict_one(&c, 700.0, 500.0).unwrap();
+    assert_ne!(ea.time_us.to_bits(), eb.time_us.to_bits());
+    assert_eq!(ea.time_us.to_bits(), model::predict(&c, &hw_a, 700.0, 500.0).time_us.to_bits());
+    assert_eq!(eb.time_us.to_bits(), model::predict(&c, &hw_b, 700.0, 500.0).time_us.to_bits());
+}

@@ -53,7 +53,7 @@ fn paper_model_beats_baselines() {
     let spec = GpuSpec::default();
     let ex = microbench::extract(&spec, Clocks::new(700.0, 700.0));
     let ks = [kernels::vector_add(), kernels::matrix_mul_shared(), kernels::black_scholes()];
-    let rows = tables::run_ablation(&spec, &ks, &standard_baselines(ex.hw), &reduced_grid());
+    let rows = tables::run_ablation(&spec, &ks, ex.hw, standard_baselines(ex.hw), &reduced_grid());
     let paper = rows.iter().find(|(n, _, _)| n == "paper").unwrap().1;
     let const_lat = rows.iter().find(|(n, _, _)| n == "const-latency").unwrap().1;
     let linear = rows.iter().find(|(n, _, _)| n == "linear-freq").unwrap().1;
@@ -81,8 +81,11 @@ fn pjrt_grid_predictions_match_native_model() {
     let spec = GpuSpec::default();
     let baseline = Clocks::new(700.0, 700.0);
     let hw = HwParams::paper_defaults();
-    let (server, _h) = BatchServer::start_default(hw.to_f32(), Duration::from_millis(1))
-        .expect("artifacts present (make artifacts)");
+    // Two sharded drain workers over the always-available emulated
+    // executor; the artifact-pinned `start_default` path is covered by
+    // the feature-gated runtime tests.
+    let (server, _h) = BatchServer::start_emulated(hw.to_f32(), Duration::from_millis(1), 2)
+        .expect("emulated executor always starts");
     for k in [kernels::vector_add(), kernels::matrix_mul_shared()] {
         let p = profiler::profile_at(&spec, &k, baseline);
         let grid = reduced_grid();
@@ -93,6 +96,58 @@ fn pjrt_grid_predictions_match_native_model() {
             assert!(rel < 1e-4, "{} ({cf},{mf}): {} vs {}", k.name, pred.time_us, native.time_us);
             assert_eq!(pred.regime.map(|r| r as u32), Some(native.regime as u32));
         }
+    }
+}
+
+#[test]
+fn engine_facade_serves_every_legacy_consumer_path() {
+    // One engine, four consumers: validation, the advisor, the
+    // predicted sweep and the ablation adapter all agree with the
+    // direct model calls, and repeats ride the shared cache.
+    use gpufreq::coordinator::sweep::predicted_sweep;
+    use gpufreq::coordinator::validate::validate_with_engine;
+    use gpufreq::dvfs::advise_with_engine;
+    use gpufreq::engine::Engine;
+
+    let spec = GpuSpec::default();
+    let baseline = Clocks::new(700.0, 700.0);
+    let ex = microbench::extract(&spec, baseline);
+    let engine = Engine::native(ex.hw);
+    let ks = [kernels::vector_add(), kernels::black_scholes()];
+    let grid = reduced_grid();
+
+    // Validation through the engine == validation through the predictor.
+    let v_engine = validate_with_engine(&spec, &ks, &engine, &grid).unwrap();
+    let v_direct = validate_with(&spec, &ks, &PaperModel { hw: ex.hw }, &grid);
+    for (a, b) in v_engine.per_kernel.iter().zip(&v_direct.per_kernel) {
+        for (pa, pb) in a.points.iter().zip(&b.points) {
+            assert_eq!(pa.pred_us.to_bits(), pb.pred_us.to_bits());
+        }
+    }
+
+    // Advisor through the engine: grid now cached, zero recomputes.
+    let hits_before = engine.cache_stats().unwrap().hits;
+    let power = PowerModel::gtx980();
+    for k in &ks {
+        let p = profiler::profile_at(&spec, k, baseline);
+        let (best, points) =
+            advise_with_engine(&p.counters, &engine, &power, &grid, Objective::Energy).unwrap();
+        assert_eq!(points.len(), grid.len());
+        assert!(best.energy_mj > 0.0);
+    }
+    assert!(
+        engine.cache_stats().unwrap().hits >= hits_before + 2 * grid.len() as u64,
+        "advisor re-queries must be cache hits"
+    );
+
+    // Predicted sweep through the engine matches scalar predictions.
+    let profiles: Vec<_> = ks.iter().map(|k| profiler::profile_at(&spec, k, baseline)).collect();
+    let ps = predicted_sweep(&engine, &profiles, &grid).unwrap();
+    assert_eq!(ps.points.len(), ks.len() * grid.len());
+    for pt in &ps.points {
+        let prof = profiles.iter().find(|p| p.kernel == pt.kernel).unwrap();
+        let want = gpufreq::model::predict(&prof.counters, &ex.hw, pt.core_mhz, pt.mem_mhz);
+        assert_eq!(pt.time_us.to_bits(), want.time_us.to_bits());
     }
 }
 

@@ -1,0 +1,273 @@
+//! Regime-boundary property tests (`util::prop`, the proptest
+//! substitute): the piecewise model must be *numerically tame* where
+//! its pipeline cases switch.
+//!
+//! Analysis (DESIGN.md §8 "Boundary continuity"): with `mem_ops = 1`
+//! every pairwise gap between the four global-memory regime expressions
+//! at their switching condition is bounded by ~`T_active / #Aw`, i.e. a
+//! relative discontinuity of at most `1/aw` (the Compute ↔
+//! FewWarpsLongCompute boundary is exactly continuous). The generators
+//! therefore sample high-occupancy kernels (`aw ≥ 128`), where an
+//! epsilon frequency step across any boundary moves the prediction by
+//! well under 1 %. The shared-memory regimes are excluded: the
+//! SmemLight ↔ SmemIntense switch changes the pipeline *structure*
+//! (queue-hidden vs three-phase) and the model is intentionally
+//! discontinuous there (jumps up to ~90 % — measured and documented in
+//! DESIGN.md), exactly like the paper's own Figs. 10/11 case split.
+
+use gpufreq::model::{self, HwParams, KernelCounters, Regime};
+use gpufreq::util::prop::{forall, Rng};
+
+fn base_counters() -> KernelCounters {
+    KernelCounters {
+        l2_hr: 0.0,
+        gld_trans: 1.0,
+        avr_inst: 1.0,
+        n_blocks: 4096.0,
+        wpb: 8.0,
+        aw: 128.0,
+        n_sm: 16.0,
+        o_itrs: 64.0,
+        i_itrs: 0.0,
+        uses_smem: false,
+        smem_conflict: 1.0,
+        gld_body: 1.0,
+        gld_edge: 0.0,
+        mem_ops: 1.0,
+        l1_hr: 0.0,
+    }
+}
+
+/// Log-uniform sample in [lo, hi].
+fn log_range(r: &mut Rng, lo: f64, hi: f64) -> f64 {
+    (r.range(lo.ln(), hi.ln())).exp()
+}
+
+/// High-occupancy global-memory kernels: mixed compute/memory balance,
+/// mostly exercising the Compute ↔ Memory boundary.
+fn gen_mixed(r: &mut Rng) -> KernelCounters {
+    let wpb = if r.chance(0.5) { 8.0 } else { 16.0 };
+    let blocks_per_sm = [16.0, 24.0, 32.0][r.u32(0, 2) as usize];
+    KernelCounters {
+        l2_hr: r.range(0.0, 0.95),
+        gld_trans: r.range(1.0, 16.0),
+        avr_inst: log_range(r, 0.1, 200.0),
+        wpb,
+        aw: wpb * blocks_per_sm,
+        o_itrs: r.u32(32, 256) as f64,
+        ..base_counters()
+    }
+}
+
+/// Cache-hot, low-traffic kernels: pushes the few-warps regimes (1, 3)
+/// and their boundaries with Compute/Memory.
+fn gen_few_warps(r: &mut Rng) -> KernelCounters {
+    KernelCounters {
+        l2_hr: r.range(0.85, 0.995),
+        gld_trans: r.range(1.0, 3.0),
+        avr_inst: log_range(r, 0.05, 5.0),
+        aw: [128.0, 192.0, 256.0][r.u32(0, 2) as usize],
+        o_itrs: r.u32(64, 256) as f64,
+        ..base_counters()
+    }
+}
+
+fn random_mem_mhz(r: &mut Rng) -> f64 {
+    [400.0, 550.0, 700.0, 850.0, 1000.0][r.u32(0, 4) as usize]
+}
+
+/// Scan the core-frequency axis in epsilon steps; at every regime
+/// switch, check the relative jump, and everywhere check
+/// finite/positive. Returns the transitions seen.
+fn scan_boundaries(
+    c: &KernelCounters,
+    hw: &HwParams,
+    mem_mhz: f64,
+    step_mhz: f64,
+    max_jump: f64,
+) -> Vec<(Regime, Regime)> {
+    let mut transitions = Vec::new();
+    let mut prev: Option<(f64, Regime)> = None;
+    let mut cf = 400.0;
+    while cf <= 1000.0 + 1e-9 {
+        let p = model::predict(c, hw, cf, mem_mhz);
+        assert!(
+            p.time_us.is_finite() && p.time_us > 0.0,
+            "non-finite/non-positive at cf={cf} mf={mem_mhz}: {c:?}"
+        );
+        assert!(p.t_active.is_finite() && p.t_active > 0.0);
+        if let Some((t_prev, r_prev)) = prev {
+            if r_prev != p.regime {
+                let jump = (p.time_us - t_prev).abs() / t_prev;
+                assert!(
+                    jump < max_jump,
+                    "{:?} -> {:?} jump {:.3}% at cf={cf} mf={mem_mhz} (aw={}): {c:?}",
+                    r_prev,
+                    p.regime,
+                    jump * 100.0,
+                    c.aw
+                );
+                transitions.push((r_prev, p.regime));
+            }
+        }
+        prev = Some((p.time_us, p.regime));
+        cf += step_mhz;
+    }
+    transitions
+}
+
+#[test]
+fn global_regime_boundaries_are_continuous_under_1pct() {
+    let hw = HwParams::paper_defaults();
+    let mut rng = Rng::new(2024);
+    let mut n_boundaries = 0usize;
+    let mut saw_compute_memory = false;
+    for _ in 0..300 {
+        let c = gen_mixed(&mut rng);
+        let mf = random_mem_mhz(&mut rng);
+        for (a, b) in scan_boundaries(&c, &hw, mf, 0.5, 0.01) {
+            n_boundaries += 1;
+            if (a == Regime::Compute && b == Regime::Memory)
+                || (a == Regime::Memory && b == Regime::Compute)
+            {
+                saw_compute_memory = true;
+            }
+        }
+    }
+    assert!(n_boundaries > 10, "scan crossed only {n_boundaries} boundaries");
+    assert!(saw_compute_memory, "Compute <-> Memory boundary never exercised");
+}
+
+#[test]
+fn few_warps_boundaries_are_continuous_under_1pct() {
+    let hw = HwParams::paper_defaults();
+    let mut rng = Rng::new(4096);
+    let mut n_boundaries = 0usize;
+    let mut saw_few_warps = false;
+    for _ in 0..400 {
+        let c = gen_few_warps(&mut rng);
+        let mf = random_mem_mhz(&mut rng);
+        for (a, b) in scan_boundaries(&c, &hw, mf, 0.5, 0.01) {
+            n_boundaries += 1;
+            if matches!(a, Regime::FewWarpsLongCompute | Regime::FewWarpsShortCompute)
+                || matches!(b, Regime::FewWarpsLongCompute | Regime::FewWarpsShortCompute)
+            {
+                saw_few_warps = true;
+            }
+        }
+    }
+    assert!(n_boundaries > 5, "scan crossed only {n_boundaries} boundaries");
+    assert!(saw_few_warps, "few-warps boundaries never exercised");
+}
+
+#[test]
+fn compute_to_few_warps_long_boundary_is_nearly_exact() {
+    // Handpicked crossing of the Eq. (9) / Eq. (15) switch
+    // (`comp_iter * (aw-1) = lat_iter`): with mem_ops = 1 the two
+    // expressions coincide at the boundary, so the jump must be far
+    // below the generic 1 % bound.
+    let hw = HwParams::paper_defaults();
+    let c = KernelCounters {
+        l2_hr: 0.8,
+        gld_trans: 1.0,
+        avr_inst: 1.7,
+        aw: 80.0,
+        o_itrs: 64.0,
+        ..base_counters()
+    };
+    let mut found = false;
+    let mut prev: Option<(f64, Regime)> = None;
+    let mut cf = 400.0;
+    while cf <= 1000.0 + 1e-9 {
+        let p = model::predict(&c, &hw, cf, 700.0);
+        if let Some((t_prev, r_prev)) = prev {
+            if r_prev != p.regime {
+                let pair = (r_prev, p.regime);
+                assert!(
+                    pair == (Regime::Compute, Regime::FewWarpsLongCompute)
+                        || pair == (Regime::FewWarpsLongCompute, Regime::Compute),
+                    "unexpected transition {pair:?} at cf={cf}"
+                );
+                let jump = (p.time_us - t_prev).abs() / t_prev;
+                assert!(jump < 0.005, "jump {:.4}% at cf={cf}", jump * 100.0);
+                found = true;
+            }
+        }
+        prev = Some((p.time_us, p.regime));
+        cf += 0.25;
+    }
+    assert!(found, "the scan must cross the Compute/FewWarpsLongCompute boundary");
+}
+
+#[test]
+fn compute_regime_time_monotone_in_inverse_core_frequency() {
+    // Satellite property: within the Compute regime, time_us is
+    // monotonically increasing in 1/core_mhz (equivalently, strictly
+    // decreasing in core_mhz — higher clock never hurts compute-bound
+    // kernels).
+    let hw = HwParams::paper_defaults();
+    forall(
+        7001,
+        200,
+        |r| {
+            let mut c = gen_mixed(r);
+            c.avr_inst = log_range(r, 20.0, 500.0);
+            c.l2_hr = r.range(0.5, 0.99);
+            (c, random_mem_mhz(r))
+        },
+        |(c, mf)| {
+            let mut last: Option<f64> = None;
+            let mut cf = 400.0;
+            while cf <= 1000.0 + 1e-9 {
+                let p = model::predict(c, &hw, cf, *mf);
+                if p.regime == Regime::Compute {
+                    if let Some(prev_t) = last {
+                        if p.time_us >= prev_t {
+                            return false;
+                        }
+                    }
+                    last = Some(p.time_us);
+                } else {
+                    last = None; // only compare within contiguous Compute spans
+                }
+                cf += 10.0;
+            }
+            true
+        },
+    );
+}
+
+#[test]
+fn boundary_scan_also_holds_at_memory_axis() {
+    // Same continuity property sweeping the *memory* clock with the
+    // core clock fixed (the other epsilon direction over the grid).
+    let hw = HwParams::paper_defaults();
+    let mut rng = Rng::new(9090);
+    let mut n_boundaries = 0usize;
+    for _ in 0..200 {
+        let c = gen_mixed(&mut rng);
+        let cf = [400.0, 700.0, 1000.0][rng.u32(0, 2) as usize];
+        let mut prev: Option<(f64, Regime)> = None;
+        let mut mf = 400.0;
+        while mf <= 1000.0 + 1e-9 {
+            let p = model::predict(&c, &hw, cf, mf);
+            assert!(p.time_us.is_finite() && p.time_us > 0.0);
+            if let Some((t_prev, r_prev)) = prev {
+                if r_prev != p.regime {
+                    let jump = (p.time_us - t_prev).abs() / t_prev;
+                    assert!(
+                        jump < 0.01,
+                        "{:?} -> {:?} jump {:.3}% at cf={cf} mf={mf}: {c:?}",
+                        r_prev,
+                        p.regime,
+                        jump * 100.0
+                    );
+                    n_boundaries += 1;
+                }
+            }
+            prev = Some((p.time_us, p.regime));
+            mf += 0.5;
+        }
+    }
+    assert!(n_boundaries > 5, "memory-axis scan crossed only {n_boundaries} boundaries");
+}

@@ -152,13 +152,16 @@ fn prop_l2_hit_rate_reduces_memory_time() {
 
 #[test]
 fn prop_pjrt_matches_native_on_random_inputs() {
-    // 256 random (counters, frequency) rows through the AOT artifact
-    // must agree with the scalar Rust model to f32 tolerance.
-    let rt = Runtime::load_default().expect("artifacts present (make artifacts)");
+    // 256 random (counters, frequency) rows through the PJRT executor
+    // (emulated: same f32 feature packing and computation the AOT
+    // artifact lowers) must agree with the scalar Rust model to f32
+    // tolerance.
+    let rt = Runtime::emulated();
     let hw = HwParams::paper_defaults();
     let mut rng = Rng::new(107);
-    let cases: Vec<(KernelCounters, f64, f64)> =
-        (0..256).map(|_| (random_counters(&mut rng), random_clock(&mut rng), random_clock(&mut rng))).collect();
+    let cases: Vec<(KernelCounters, f64, f64)> = (0..256)
+        .map(|_| (random_counters(&mut rng), random_clock(&mut rng), random_clock(&mut rng)))
+        .collect();
     let rows: Vec<_> = cases.iter().map(|(c, cf, mf)| c.to_features(*cf, *mf)).collect();
     let got = rt.predict(&rows, &hw.to_f32()).unwrap();
     for ((c, cf, mf), g) in cases.iter().zip(got) {
