@@ -113,7 +113,8 @@ fn main() -> anyhow::Result<()> {
         server.stats().batches(),
         server.stats().mean_occupancy() * 100.0
     );
-    if let Some(cs) = engine.cache_stats() {
+    if engine.has_cache() {
+        let cs = engine.cache_stats();
         println!(
             "      engine cache: {} misses, {} entries warmed for downstream consumers",
             cs.misses, cs.entries

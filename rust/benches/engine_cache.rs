@@ -5,7 +5,8 @@
 
 use gpufreq::engine::{Backend, Engine, NativeBatch, Request};
 use gpufreq::model::{HwParams, KernelCounters};
-use gpufreq::util::bench;
+use gpufreq::service::json::Value;
+use gpufreq::util::bench::{self, Stats};
 
 fn counters(i: usize) -> KernelCounters {
     KernelCounters {
@@ -39,6 +40,20 @@ fn grid_13x13() -> Vec<(f64, f64)> {
     out
 }
 
+/// One bench result as a JSON object (grid timings normalized to
+/// per-pair throughput).
+fn stats_json(s: &Stats, pairs_per_iter: usize) -> Value {
+    Value::obj(vec![
+        ("mean_ms", Value::num(s.mean_ns / 1e6)),
+        ("p50_ms", Value::num(s.p50_ns / 1e6)),
+        ("p99_ms", Value::num(s.p99_ns / 1e6)),
+        (
+            "pairs_per_s",
+            Value::num(pairs_per_iter as f64 / (s.mean_ns / 1e9)),
+        ),
+    ])
+}
+
 fn main() {
     let hw = HwParams::paper_defaults();
     let grid = grid_13x13();
@@ -47,7 +62,7 @@ fn main() {
     bench::section("Engine cache: cold vs warm predict_grid (13x13 = 169 pairs)");
 
     // Cold: a fresh engine per iteration, every pair is a miss.
-    bench::bench("cold grid (native-scalar, fresh cache)", 2, 20, || {
+    let cold = bench::bench("cold grid (native-scalar, fresh cache)", 2, 20, || {
         let engine = Engine::native(hw);
         std::hint::black_box(engine.predict_grid(&c0, &grid).unwrap());
     });
@@ -58,7 +73,7 @@ fn main() {
     let warm = bench::bench("warm grid (native-scalar, all hits)", 2, 20, || {
         std::hint::black_box(warm_engine.predict_grid(&c0, &grid).unwrap());
     });
-    let s = warm_engine.cache_stats().unwrap();
+    let s = warm_engine.cache_stats();
     println!(
         "cache after warm runs: {} hits / {} misses ({:.1}% hit rate, {} entries)",
         s.hits,
@@ -70,7 +85,7 @@ fn main() {
 
     // Uncached reference: the same grid with memoization disabled.
     let uncached = Engine::builder(hw).scalar().without_cache().build();
-    bench::bench("uncached grid (native-scalar)", 2, 20, || {
+    let uncached_stats = bench::bench("uncached grid (native-scalar)", 2, 20, || {
         std::hint::black_box(uncached.predict_grid(&c0, &grid).unwrap());
     });
 
@@ -85,11 +100,15 @@ fn main() {
     // Straight through Backend::predict_batch: every row keeps its own
     // counters, so this measures backend throughput on genuinely
     // distinct inputs (no cache in this path).
+    let mut batch8: Option<Stats> = None;
     for workers in [1usize, 2, 4, 8] {
         let backend = NativeBatch::new(hw, workers);
-        bench::bench(&format!("native-batch predict ({workers} workers)"), 1, 10, || {
+        let s = bench::bench(&format!("native-batch predict ({workers} workers)"), 1, 10, || {
             std::hint::black_box(backend.predict_batch(&reqs).unwrap());
         });
+        if workers == 8 {
+            batch8 = Some(s);
+        }
     }
 
     bench::section("Engine backends: PJRT service grid (169 pairs, 2 workers)");
@@ -98,4 +117,23 @@ fn main() {
     bench::bench("pjrt-emulated warm grid", 1, 10, || {
         std::hint::black_box(pjrt.predict_grid(&c0, &grid).unwrap());
     });
+
+    // Machine-readable results at the repo root (perf trajectory
+    // tracking — see BENCH_service_load.json for the serving layer).
+    let out = Value::obj(vec![
+        ("bench", Value::str("engine_cache")),
+        ("grid_pairs", Value::num(grid.len() as f64)),
+        ("cold_grid", stats_json(&cold, grid.len())),
+        ("warm_grid", stats_json(&warm, grid.len())),
+        ("uncached_grid", stats_json(&uncached_stats, grid.len())),
+        (
+            "native_batch_8_workers",
+            stats_json(&batch8.expect("8-worker run recorded"), reqs.len()),
+        ),
+    ]);
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("BENCH_engine_cache.json");
+    std::fs::write(&path, out.render() + "\n").expect("write BENCH_engine_cache.json");
+    println!("wrote {}", path.display());
 }

@@ -1,0 +1,198 @@
+//! Closed-loop load harness for the HTTP prediction service
+//! (DESIGN.md §9, experiment E3): N keep-alive connections drive an
+//! in-process server as fast as responses return, reporting throughput
+//! and exact client-side p50/p99/p999 latency, then a saturation phase
+//! verifies 429 shedding and the graceful drain. Results also land in
+//! `BENCH_service_load.json` at the repo root so the perf trajectory
+//! is tracked across PRs.
+
+use std::time::{Duration, Instant};
+
+use gpufreq::dvfs::PowerModel;
+use gpufreq::engine::Engine;
+use gpufreq::microbench;
+use gpufreq::model::{HwParams, KernelCounters};
+use gpufreq::service::json::Value;
+use gpufreq::service::{Client, Service, ServiceConfig, ServiceState};
+use gpufreq::util::bench::{percentile, section};
+
+/// Total requests over the measured phase (acceptance: ≥ 50k).
+const TOTAL_REQUESTS: usize = 60_000;
+/// Concurrent closed-loop connections (acceptance: ≥ 8).
+const CONNECTIONS: usize = 8;
+
+fn counters() -> KernelCounters {
+    KernelCounters {
+        l2_hr: 0.1,
+        gld_trans: 6.0,
+        avr_inst: 1.5,
+        n_blocks: 128.0,
+        wpb: 8.0,
+        aw: 64.0,
+        n_sm: 16.0,
+        o_itrs: 8.0,
+        i_itrs: 0.0,
+        uses_smem: false,
+        smem_conflict: 1.0,
+        gld_body: 6.0,
+        gld_edge: 0.0,
+        mem_ops: 2.0,
+        l1_hr: 0.0,
+    }
+}
+
+fn state() -> ServiceState {
+    let hw = HwParams::paper_defaults();
+    let mut s = ServiceState::new(
+        Engine::native(hw),
+        PowerModel::gtx980(),
+        microbench::standard_grid(),
+    );
+    s.register_kernel("VA", counters());
+    s
+}
+
+fn main() {
+    section(&format!(
+        "Service load: {TOTAL_REQUESTS} requests over {CONNECTIONS} closed-loop connections"
+    ));
+    let svc = Service::start(
+        state(),
+        ServiceConfig {
+            workers: CONNECTIONS,
+            queue_capacity: 2 * CONNECTIONS,
+            ..ServiceConfig::default()
+        },
+    )
+    .expect("service starts");
+    let addr = svc.addr();
+
+    // Warm the engine cache outside the timer (one grid pass).
+    {
+        let mut c = Client::connect(&addr).expect("warmup connect");
+        let r = c.post("/v1/grid", r#"{"kernel":"VA"}"#).expect("warmup grid");
+        assert_eq!(r.status, 200, "warmup failed: {}", r.body);
+    }
+
+    let per_thread = TOTAL_REQUESTS.div_ceil(CONNECTIONS);
+    let t0 = Instant::now();
+    let mut latencies_ns: Vec<f64> = Vec::with_capacity(per_thread * CONNECTIONS);
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for t in 0..CONNECTIONS {
+            handles.push(scope.spawn(move || {
+                let mut c = Client::connect(&addr).expect("client connect");
+                let mut local = Vec::with_capacity(per_thread);
+                // Cycle frequencies so requests exercise the whole
+                // cached grid, staggered per connection.
+                for i in 0..per_thread {
+                    let cf = 400 + 100 * ((t + i) % 7);
+                    let mf = 400 + 100 * ((t + i / 7) % 7);
+                    let body =
+                        format!(r#"{{"kernel":"VA","core_mhz":{cf},"mem_mhz":{mf}}}"#);
+                    let s = Instant::now();
+                    let r = c.post("/v1/predict", &body).expect("predict");
+                    local.push(s.elapsed().as_nanos() as f64);
+                    assert_eq!(r.status, 200, "{}", r.body);
+                }
+                local
+            }));
+        }
+        for h in handles {
+            latencies_ns.extend(h.join().expect("load thread"));
+        }
+    });
+    let elapsed = t0.elapsed();
+
+    let n = latencies_ns.len();
+    assert!(n >= 50_000, "must sustain >= 50k requests, did {n}");
+    latencies_ns.sort_by(f64::total_cmp);
+    let throughput = n as f64 / elapsed.as_secs_f64();
+    let p50_us = percentile(&latencies_ns, 0.5) / 1e3;
+    let p99_us = percentile(&latencies_ns, 0.99) / 1e3;
+    let p999_us = percentile(&latencies_ns, 0.999) / 1e3;
+    let mean_us = latencies_ns.iter().sum::<f64>() / n as f64 / 1e3;
+    println!(
+        "served {n} requests in {:.2} s  ->  {throughput:.0} req/s over {CONNECTIONS} connections",
+        elapsed.as_secs_f64()
+    );
+    println!(
+        "latency  mean {mean_us:.1} us   p50 {p50_us:.1} us   p99 {p99_us:.1} us   p999 {p999_us:.1} us"
+    );
+    let served = svc.metrics().requests_total();
+    assert!(served >= n as u64, "server-side count {served} < client-side {n}");
+
+    // Graceful drain of the loaded server.
+    let drain_t0 = Instant::now();
+    svc.shutdown();
+    let drain = drain_t0.elapsed();
+    println!("drained loaded server in {:.0} ms", drain.as_secs_f64() * 1e3);
+    assert!(drain < Duration::from_secs(10), "drain took {drain:?}");
+
+    section("Admission control: forced backlog sheds 429");
+    // 1 worker + 2-deep queue: a pinned connection and two idle queued
+    // ones put the next arrivals over the high-water mark.
+    let small = Service::start(
+        state(),
+        ServiceConfig {
+            workers: 1,
+            queue_capacity: 2,
+            poll_interval: Duration::from_millis(10),
+            ..ServiceConfig::default()
+        },
+    )
+    .expect("small service starts");
+    let saddr = small.addr();
+    let mut holder = Client::connect(&saddr).expect("holder");
+    assert_eq!(holder.get("/healthz").expect("healthz").status, 200);
+    let _queued_a = Client::connect(&saddr).expect("queued a");
+    let _queued_b = Client::connect(&saddr).expect("queued b");
+    std::thread::sleep(Duration::from_millis(150));
+    let mut shed_429 = 0u64;
+    for _ in 0..5 {
+        let mut probe = Client::connect(&saddr).expect("probe");
+        probe.set_read_timeout(Some(Duration::from_secs(5))).expect("timeout");
+        match probe.read_response() {
+            Ok(r) if r.status == 429 => {
+                assert_eq!(r.header("retry-after"), Some("1"));
+                shed_429 += 1;
+            }
+            Ok(r) => println!("probe got {} (queue had headroom)", r.status),
+            Err(e) => println!("probe error: {e}"),
+        }
+    }
+    println!("shed {shed_429}/5 probes with 429 + Retry-After");
+    assert!(shed_429 >= 1, "admission control must shed under forced backlog");
+    drop(holder);
+    let drain2_t0 = Instant::now();
+    small.shutdown();
+    println!(
+        "drained saturated server in {:.0} ms",
+        drain2_t0.elapsed().as_secs_f64() * 1e3
+    );
+
+    // Machine-readable results at the repo root.
+    let out = Value::obj(vec![
+        ("bench", Value::str("service_load")),
+        ("requests", Value::num(n as f64)),
+        ("connections", Value::num(CONNECTIONS as f64)),
+        ("elapsed_s", Value::num(elapsed.as_secs_f64())),
+        ("throughput_rps", Value::num(throughput)),
+        (
+            "latency_us",
+            Value::obj(vec![
+                ("mean", Value::num(mean_us)),
+                ("p50", Value::num(p50_us)),
+                ("p99", Value::num(p99_us)),
+                ("p999", Value::num(p999_us)),
+            ]),
+        ),
+        ("shed_429", Value::num(shed_429 as f64)),
+        ("drain_ms", Value::num(drain.as_secs_f64() * 1e3)),
+    ]);
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("BENCH_service_load.json");
+    std::fs::write(&path, out.render() + "\n").expect("write BENCH_service_load.json");
+    println!("wrote {}", path.display());
+}

@@ -23,6 +23,7 @@ use crate::microbench;
 use crate::model::{HwParams, KernelCounters};
 use crate::profiler;
 use crate::report::tables;
+use crate::service::{Service, ServiceConfig, ServiceState};
 use crate::sim::isa::Kernel;
 
 pub const USAGE: &str = "\
@@ -40,7 +41,11 @@ COMMANDS:
   report <ARTIFACT>       Regenerate a paper artifact: table1 table2 table3
                           table6 fig2 fig5 fig12 fig13 fig14 ablation
   advise <KERNEL>         DVFS energy advisor (paper §VII application)
-  serve                   Demo the streaming prediction service (PJRT backend)
+  serve                   Run the standing HTTP prediction service:
+                          POST /v1/predict · /v1/grid · /v1/advise,
+                          GET /healthz · /metrics (DESIGN.md §9).
+                          Runs until stdin closes (EOF drains gracefully)
+  stream-demo             Demo the streaming prediction path (PJRT backend)
   help                    Show this message
 
 OPTIONS:
@@ -52,6 +57,10 @@ OPTIONS:
   --csv                   Emit CSV instead of ASCII tables
   --objective <NAME>      advise: energy | edp | slack:<frac> (default energy)
   --workers <N>           sweep/predict parallelism (default: # cpus)
+  --addr <HOST:PORT>      serve: bind address (default 127.0.0.1:8077; port 0
+                          picks an ephemeral port)
+  --queue-depth <N>       serve: admission-control high-water mark — pending
+                          connections beyond this are shed with 429 (default 64)
 ";
 
 /// Parsed command line.
@@ -66,6 +75,8 @@ pub struct Args {
     pub csv: bool,
     pub objective: String,
     pub workers: usize,
+    pub addr: String,
+    pub queue_depth: usize,
 }
 
 impl Default for Args {
@@ -80,6 +91,8 @@ impl Default for Args {
             csv: false,
             objective: "energy".into(),
             workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+            addr: "127.0.0.1:8077".into(),
+            queue_depth: 64,
         }
     }
 }
@@ -126,6 +139,16 @@ pub fn parse_args(argv: &[String]) -> Result<Args> {
                     .context("--workers needs a number")?
                     .parse()
                     .context("--workers must be an integer")?
+            }
+            "--addr" => {
+                args.addr = it.next().context("--addr needs host:port")?.clone()
+            }
+            "--queue-depth" => {
+                args.queue_depth = it
+                    .next()
+                    .context("--queue-depth needs a number")?
+                    .parse()
+                    .context("--queue-depth must be an integer")?
             }
             flag if flag.starts_with("--") => bail!("unknown flag {flag}"),
             pos => args.positional.push(pos.to_string()),
@@ -198,7 +221,8 @@ pub fn build_engine(args: &Args, hw: HwParams) -> Result<Engine> {
 }
 
 fn print_cache_line(engine: &Engine) {
-    if let Some(s) = engine.cache_stats() {
+    if engine.has_cache() {
+        let s = engine.cache_stats();
         println!(
             "engine[{}] cache: {} hits / {} misses ({:.0}% hit rate, {} entries)",
             engine.backend_name(),
@@ -347,8 +371,11 @@ pub fn run(args: Args) -> Result<i32> {
             );
         }
         "serve" => {
-            // serve IS the PJRT-service demo: --backend is ignored here
-            // (USAGE documents the command as PJRT-backed).
+            run_serve(&args, &cfg)?;
+        }
+        "stream-demo" => {
+            // stream-demo IS the PJRT-service demo: --backend is
+            // ignored here (USAGE documents the command as PJRT-backed).
             let ex = microbench::extract(&spec, baseline);
             let server = start_pjrt_server(&args, ex.hw)?;
             println!(
@@ -418,6 +445,69 @@ pub fn run(args: Args) -> Result<i32> {
         }
     }
     Ok(0)
+}
+
+/// `gpufreq serve`: profile the selected kernels once at the baseline
+/// (the paper's one-shot counter pass), put the shared engine behind
+/// the HTTP service (DESIGN.md §9), and run until stdin reaches EOF —
+/// which triggers the graceful drain. Ctrl-C still hard-kills.
+fn run_serve(args: &Args, cfg: &Config) -> Result<()> {
+    let spec = cfg.gpu.clone();
+    let baseline = cfg.sweep.baseline();
+    let pairs = cfg.sweep.pairs();
+    let ex = microbench::extract(&spec, baseline);
+    let engine = build_engine(args, ex.hw)?;
+    let backend_name = engine.backend_name();
+    let ks = selected_kernels(args, cfg)?;
+    // Profile on scoped threads — one simulator run per kernel
+    // dominates startup, predictions afterwards are microseconds.
+    let mut counters: Vec<Option<KernelCounters>> = vec![None; ks.len()];
+    std::thread::scope(|scope| {
+        for (slot, k) in counters.iter_mut().zip(&ks) {
+            let spec = &spec;
+            scope.spawn(move || {
+                *slot = Some(profiler::profile_at(spec, k, baseline).counters);
+            });
+        }
+    });
+    let mut state = ServiceState::new(engine, PowerModel::gtx980(), pairs);
+    for (k, c) in ks.iter().zip(counters) {
+        state.register_kernel(&k.name, c.expect("profiled"));
+    }
+    let service = Service::start(
+        state,
+        ServiceConfig {
+            addr: args.addr.clone(),
+            workers: args.workers.clamp(1, 64),
+            queue_capacity: args.queue_depth,
+            ..ServiceConfig::default()
+        },
+    )?;
+    println!("gpufreq service listening on http://{}", service.addr());
+    println!("  routes : GET /healthz · GET /metrics · POST /v1/predict · POST /v1/grid · POST /v1/advise");
+    println!(
+        "  config : {} kernels · backend {} · {} workers · queue high-water {}",
+        ks.len(),
+        backend_name,
+        args.workers.clamp(1, 64),
+        args.queue_depth
+    );
+    println!("close stdin (Ctrl-D) to drain and exit");
+    // Park on stdin; EOF (or a read error) starts the drain.
+    let mut sink = [0u8; 4096];
+    let mut stdin = std::io::stdin().lock();
+    loop {
+        match std::io::Read::read(&mut stdin, &mut sink) {
+            Ok(0) => break,
+            Ok(_) => continue,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(_) => break,
+        }
+    }
+    let served = service.metrics().requests_total();
+    service.shutdown();
+    println!("drained cleanly after {served} requests");
+    Ok(())
 }
 
 fn run_report(what: &str, args: &Args, cfg: &Config) -> Result<()> {
@@ -547,10 +637,27 @@ mod tests {
             args.backend = backend.into();
             let e = build_engine(&args, hw).unwrap();
             assert_eq!(e.backend_name(), name);
-            assert!(e.cache_stats().is_some());
+            assert!(e.has_cache());
         }
         args.backend = "native".into();
         args.cache = false;
-        assert!(build_engine(&args, hw).unwrap().cache_stats().is_none());
+        let uncached = build_engine(&args, hw).unwrap();
+        assert!(!uncached.has_cache());
+        // Disabled cache still reports (zeroed) stats — /metrics keeps
+        // its cache series under --no-cache.
+        assert_eq!(uncached.cache_stats().hits, 0);
+    }
+
+    #[test]
+    fn parses_serve_flags() {
+        let a = parse_args(&argv("serve --addr 0.0.0.0:9000 --queue-depth 128")).unwrap();
+        assert_eq!(a.command, "serve");
+        assert_eq!(a.addr, "0.0.0.0:9000");
+        assert_eq!(a.queue_depth, 128);
+        assert!(parse_args(&argv("serve --queue-depth lots")).is_err());
+        // Defaults are loopback + a 64-deep queue.
+        let d = Args::default();
+        assert_eq!(d.addr, "127.0.0.1:8077");
+        assert_eq!(d.queue_depth, 64);
     }
 }

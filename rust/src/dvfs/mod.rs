@@ -223,6 +223,109 @@ mod tests {
     }
 
     #[test]
+    fn vf_curve_clamps_at_both_ends() {
+        // Below the first point and above the last, interpolation must
+        // clamp (a controller can ask for out-of-table frequencies).
+        for curve in [VfCurve::maxwell_core(), VfCurve::gddr5_mem()] {
+            let (f_lo, v_lo) = curve.points[0];
+            let (f_hi, v_hi) = *curve.points.last().unwrap();
+            assert_eq!(curve.volts(f_lo - 1000.0), v_lo);
+            assert_eq!(curve.volts(0.0), v_lo);
+            assert_eq!(curve.volts(f_lo), v_lo);
+            assert_eq!(curve.volts(f_hi), v_hi);
+            assert_eq!(curve.volts(f_hi + 1000.0), v_hi);
+            // Interior points stay within the envelope and monotone.
+            let mut prev = v_lo;
+            let mut f = f_lo;
+            while f <= f_hi {
+                let v = curve.volts(f);
+                assert!(v >= prev - 1e-12, "non-monotone at {f}: {v} < {prev}");
+                assert!((v_lo..=v_hi).contains(&v), "{v} outside [{v_lo}, {v_hi}]");
+                prev = v;
+                f += 25.0;
+            }
+        }
+    }
+
+    #[test]
+    fn energy_is_power_times_time_at_every_point() {
+        // Every ConfigPoint must satisfy E = P × T (Eq. 1 applied to
+        // the advisor's mJ bookkeeping: W·µs = µJ, /1e3 = mJ) and
+        // EDP = E × T, for every objective.
+        let model = PaperModel { hw: HwParams::paper_defaults() };
+        let power = PowerModel::gtx980();
+        for objective in
+            [Objective::Energy, Objective::Edp, Objective::EnergyWithSlack(0.1)]
+        {
+            let (_, points) =
+                advise(&counters_membound(), &model, &power, &grid(), objective);
+            assert_eq!(points.len(), 49);
+            for p in &points {
+                assert_eq!(p.power_w.to_bits(), power.power_w(p.core_mhz, p.mem_mhz).to_bits());
+                let want_mj = p.power_w * p.time_us * 1e-3;
+                assert!(
+                    (p.energy_mj - want_mj).abs() <= 1e-12 * want_mj.abs().max(1.0),
+                    "E != P*T at {}/{}: {} vs {}",
+                    p.core_mhz,
+                    p.mem_mhz,
+                    p.energy_mj,
+                    want_mj
+                );
+                let want_edp = p.energy_mj * p.time_us;
+                assert!((p.edp - want_edp).abs() <= 1e-12 * want_edp.abs().max(1.0));
+            }
+        }
+    }
+
+    #[test]
+    fn advisor_picks_the_exhaustive_argmin() {
+        // On a small grid, re-derive the optimum by brute force from
+        // the returned points and check the advisor agrees exactly.
+        let model = PaperModel { hw: HwParams::paper_defaults() };
+        let power = PowerModel::gtx980();
+        let small: Vec<(f64, f64)> = [400.0, 700.0, 1000.0]
+            .iter()
+            .flat_map(|&c| [400.0, 700.0, 1000.0].iter().map(move |&m| (c, m)))
+            .collect();
+        for c in [counters_membound(), counters_compbound()] {
+            for objective in [Objective::Energy, Objective::Edp] {
+                let (best, points) = advise(&c, &model, &power, &small, objective);
+                assert_eq!(points.len(), 9);
+                let key = |p: &ConfigPoint| match objective {
+                    Objective::Edp => p.edp,
+                    _ => p.energy_mj,
+                };
+                let brute = points
+                    .iter()
+                    .min_by(|a, b| key(a).total_cmp(&key(b)))
+                    .unwrap();
+                assert_eq!(best.core_mhz, brute.core_mhz, "{objective:?}");
+                assert_eq!(best.mem_mhz, brute.mem_mhz, "{objective:?}");
+                assert_eq!(key(&best).to_bits(), key(brute).to_bits());
+                // And nothing beats it.
+                for p in &points {
+                    assert!(key(p) >= key(&best));
+                }
+            }
+            // Slack: brute-force over the feasible subset only, using
+            // the advisor's exact boundary arithmetic.
+            let slack = 0.2;
+            let (best, points) =
+                advise(&c, &model, &power, &small, Objective::EnergyWithSlack(slack));
+            let t_fast =
+                points.iter().map(|p| p.time_us).fold(f64::INFINITY, f64::min);
+            let brute = points
+                .iter()
+                .filter(|p| p.time_us <= (1.0 + slack) * t_fast)
+                .min_by(|a, b| a.energy_mj.total_cmp(&b.energy_mj))
+                .unwrap();
+            assert_eq!(best.core_mhz, brute.core_mhz);
+            assert_eq!(best.mem_mhz, brute.mem_mhz);
+            assert!(best.time_us <= (1.0 + slack) * t_fast + 1e-9);
+        }
+    }
+
+    #[test]
     fn power_monotone_in_both_domains() {
         let p = PowerModel::gtx980();
         assert!(p.power_w(1000.0, 700.0) > p.power_w(400.0, 700.0));
@@ -292,7 +395,7 @@ mod tests {
         }
         // Second advisor run over the same grid never recomputes.
         advise_with_engine(&c, &engine, &power, &grid(), Objective::Edp).unwrap();
-        assert!(engine.cache_stats().unwrap().hits >= 49);
+        assert!(engine.cache_stats().hits >= 49);
     }
 
     #[test]

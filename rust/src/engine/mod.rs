@@ -191,9 +191,22 @@ impl Engine {
         &self.hw
     }
 
-    /// Cache counters; `None` when the cache is disabled.
-    pub fn cache_stats(&self) -> Option<CacheStats> {
-        self.cache.as_ref().map(|c| c.stats())
+    /// Whether this engine memoizes grids (false after `without_cache`).
+    pub fn has_cache(&self) -> bool {
+        self.cache.is_some()
+    }
+
+    /// Cache counters. When the cache is disabled via
+    /// [`EngineBuilder::without_cache`] this returns an **all-zero**
+    /// `CacheStats` rather than an `Option`: the serving layer's
+    /// `/metrics` exposition must emit the `service_cache_*` series
+    /// unconditionally (a scraper that sees the line disappear when an
+    /// operator flips `--no-cache` reads it as a broken exporter, not a
+    /// configuration change). Zero hits / zero misses is also literally
+    /// true for a disabled cache. Use [`Engine::has_cache`] to
+    /// distinguish "disabled" from "enabled but untouched".
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache.as_ref().map(|c| c.stats()).unwrap_or_default()
     }
 
     /// Predict one (kernel, frequency-pair) sample.
@@ -319,11 +332,11 @@ mod tests {
         let engine = Engine::native(hw);
         let c = counters();
         let cold = engine.predict_grid(&c, &grid()).unwrap();
-        let s0 = engine.cache_stats().unwrap();
+        let s0 = engine.cache_stats();
         assert_eq!(s0.misses, 49);
         assert_eq!(s0.hits, 0);
         let warm = engine.predict_grid(&c, &grid()).unwrap();
-        let s1 = engine.cache_stats().unwrap();
+        let s1 = engine.cache_stats();
         assert!(s1.hits >= 49, "hits {}", s1.hits);
         for (a, b) in cold.iter().zip(&warm) {
             assert_eq!(a.time_us.to_bits(), b.time_us.to_bits());
@@ -334,12 +347,21 @@ mod tests {
     }
 
     #[test]
-    fn without_cache_never_counts() {
+    fn without_cache_reports_zeroed_stats() {
         let hw = HwParams::paper_defaults();
         let engine = Engine::builder(hw).scalar().without_cache().build();
         let c = counters();
         engine.predict_grid(&c, &grid()).unwrap();
-        assert!(engine.cache_stats().is_none());
+        // Disabled cache: stats are present (so `/metrics` always has
+        // the series) but identically zero, and `has_cache` tells the
+        // difference from an untouched live cache.
+        assert!(!engine.has_cache());
+        assert_eq!(engine.cache_stats(), CacheStats::default());
+        let cached = Engine::native(hw);
+        assert!(cached.has_cache());
+        assert_eq!(cached.cache_stats(), CacheStats::default());
+        cached.predict_grid(&c, &grid()).unwrap();
+        assert_eq!(cached.cache_stats().misses, 49);
     }
 
     #[test]
@@ -350,7 +372,7 @@ mod tests {
         engine.predict_grid(&c, &grid()).unwrap();
         let clone = engine.clone();
         clone.predict_grid(&c, &grid()).unwrap();
-        assert!(clone.cache_stats().unwrap().hits >= 49);
+        assert!(clone.cache_stats().hits >= 49);
     }
 
     #[test]
@@ -371,7 +393,7 @@ mod tests {
         seen.sort_unstable();
         assert_eq!(seen, vec![0, 1, 2, 3]);
         // All four jobs share one profile: 49 misses, 3*49 hits.
-        let s = engine.cache_stats().unwrap();
+        let s = engine.cache_stats();
         assert_eq!(s.misses, 49);
         assert_eq!(s.hits, 3 * 49);
     }

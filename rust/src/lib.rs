@@ -14,6 +14,9 @@
 //!   sharded quantized grid cache, and the facade every consumer uses
 //! * [`coordinator`] — sweep orchestration and validation
 //! * [`dvfs`] — power model + energy-conservation advisor (paper §VII)
+//! * [`service`] — the standing HTTP prediction service (`gpufreq
+//!   serve`): std-only HTTP/1.1 worker pool with bounded-queue
+//!   admission control, DVFS-advisor routes and `/metrics`
 //! * [`config`] — TOML-subset config system (Table V)
 //! * [`report`] — table/figure emitters for every paper artifact
 pub mod baselines;
@@ -28,5 +31,6 @@ pub mod model;
 pub mod profiler;
 pub mod report;
 pub mod runtime;
+pub mod service;
 pub mod sim;
 pub mod util;

@@ -1,0 +1,183 @@
+//! Minimal blocking HTTP/1.1 client for the prediction service: the
+//! load harness (`benches/service_load.rs`), the smoke test and CI all
+//! drive the server through this, so no `curl` is needed anywhere.
+//!
+//! One [`Client`] owns one keep-alive connection and issues one request
+//! at a time — exactly the closed-loop shape the load harness measures.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+use super::json::{ParseError, Value};
+
+/// A parsed response.
+#[derive(Debug, Clone)]
+pub struct ClientResponse {
+    pub status: u16,
+    pub headers: Vec<(String, String)>,
+    pub body: String,
+}
+
+impl ClientResponse {
+    /// Case-insensitive header lookup.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// Parse the body as JSON.
+    pub fn json(&self) -> Result<Value, ParseError> {
+        Value::parse(&self.body)
+    }
+}
+
+fn bad_data(msg: &str) -> std::io::Error {
+    std::io::Error::new(std::io::ErrorKind::InvalidData, msg.to_string())
+}
+
+/// One keep-alive connection to the service.
+pub struct Client {
+    stream: TcpStream,
+    buf: Vec<u8>,
+}
+
+impl Client {
+    pub fn connect(addr: &SocketAddr) -> std::io::Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        Ok(Client { stream, buf: Vec::with_capacity(4096) })
+    }
+
+    /// Bound how long [`read_response`](Self::read_response) waits.
+    pub fn set_read_timeout(&mut self, t: Option<Duration>) -> std::io::Result<()> {
+        self.stream.set_read_timeout(t)
+    }
+
+    pub fn get(&mut self, path: &str) -> std::io::Result<ClientResponse> {
+        self.request("GET", path, None)
+    }
+
+    pub fn post(&mut self, path: &str, body: &str) -> std::io::Result<ClientResponse> {
+        self.request("POST", path, Some(body))
+    }
+
+    /// Send one request and block for its response.
+    pub fn request(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: Option<&str>,
+    ) -> std::io::Result<ClientResponse> {
+        let body = body.unwrap_or("");
+        let head = format!(
+            "{method} {path} HTTP/1.1\r\nHost: gpufreq\r\nContent-Length: {}\r\nContent-Type: application/json\r\n\r\n",
+            body.len()
+        );
+        self.stream.write_all(head.as_bytes())?;
+        if !body.is_empty() {
+            self.stream.write_all(body.as_bytes())?;
+        }
+        self.stream.flush()?;
+        self.read_response()
+    }
+
+    /// Read one response without sending anything first — used to probe
+    /// admission control, where the server answers 429 at accept time.
+    pub fn read_response(&mut self) -> std::io::Result<ClientResponse> {
+        let mut chunk = [0u8; 4096];
+        loop {
+            if let Some((resp, consumed)) = try_parse_response(&self.buf)? {
+                self.buf.drain(..consumed);
+                return Ok(resp);
+            }
+            match self.stream.read(&mut chunk) {
+                Ok(0) => {
+                    return Err(std::io::Error::new(
+                        std::io::ErrorKind::UnexpectedEof,
+                        "connection closed before a complete response",
+                    ))
+                }
+                Ok(n) => self.buf.extend_from_slice(&chunk[..n]),
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(e),
+            }
+        }
+    }
+}
+
+/// Incremental response parse, mirroring `http::try_parse` for the
+/// response direction.
+fn try_parse_response(buf: &[u8]) -> std::io::Result<Option<(ClientResponse, usize)>> {
+    let Some(head_end) = buf.windows(4).position(|w| w == b"\r\n\r\n") else {
+        return Ok(None);
+    };
+    let head = std::str::from_utf8(&buf[..head_end])
+        .map_err(|_| bad_data("response head is not valid UTF-8"))?;
+    let mut lines = head.split("\r\n");
+    let status_line = lines.next().ok_or_else(|| bad_data("empty response"))?;
+    let mut parts = status_line.split_ascii_whitespace();
+    let version = parts.next().ok_or_else(|| bad_data("missing version"))?;
+    if !version.starts_with("HTTP/1.") {
+        return Err(bad_data("unsupported HTTP version in response"));
+    }
+    let status: u16 = parts
+        .next()
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| bad_data("bad status code"))?;
+    let mut headers = Vec::new();
+    for line in lines {
+        if line.is_empty() {
+            continue;
+        }
+        let (name, value) =
+            line.split_once(':').ok_or_else(|| bad_data("malformed response header"))?;
+        headers.push((name.trim().to_string(), value.trim().to_string()));
+    }
+    let content_length = match headers
+        .iter()
+        .find(|(k, _)| k.eq_ignore_ascii_case("content-length"))
+    {
+        Some((_, v)) => v.parse::<usize>().map_err(|_| bad_data("bad Content-Length"))?,
+        None => 0,
+    };
+    let body_start = head_end + 4;
+    if buf.len() < body_start + content_length {
+        return Ok(None);
+    }
+    let body = String::from_utf8(buf[body_start..body_start + content_length].to_vec())
+        .map_err(|_| bad_data("response body is not valid UTF-8"))?;
+    Ok(Some((ClientResponse { status, headers, body }, body_start + content_length)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_a_response_with_body() {
+        let raw = b"HTTP/1.1 429 Too Many Requests\r\nContent-Type: application/json\r\nContent-Length: 11\r\nRetry-After: 1\r\nConnection: close\r\n\r\n{\"error\":1}";
+        let (resp, consumed) = try_parse_response(raw).unwrap().unwrap();
+        assert_eq!(consumed, raw.len());
+        assert_eq!(resp.status, 429);
+        assert_eq!(resp.header("retry-after"), Some("1"));
+        assert_eq!(resp.header("RETRY-AFTER"), Some("1"));
+        assert_eq!(resp.body, "{\"error\":1}");
+        assert_eq!(resp.json().unwrap().get("error").and_then(Value::as_f64), Some(1.0));
+    }
+
+    #[test]
+    fn incomplete_responses_wait() {
+        let raw = b"HTTP/1.1 200 OK\r\nContent-Length: 5\r\n\r\nhel";
+        assert!(try_parse_response(raw).unwrap().is_none());
+        assert!(try_parse_response(b"HTTP/1.1 200").unwrap().is_none());
+    }
+
+    #[test]
+    fn malformed_responses_error() {
+        assert!(try_parse_response(b"ICMP nope\r\n\r\n").is_err());
+        assert!(try_parse_response(b"HTTP/1.1 soup\r\n\r\n").is_err());
+    }
+}

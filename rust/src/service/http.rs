@@ -1,0 +1,318 @@
+//! Minimal HTTP/1.1 wire handling (DESIGN.md §9): request parsing from
+//! a growable byte buffer and response serialization. `std`-only — no
+//! hyper/tiny_http in the offline vendor set.
+//!
+//! The parser is incremental: [`try_parse`] returns `Ok(None)` until a
+//! complete head (+ `Content-Length` body) is buffered, so the server's
+//! read loop can append chunks and re-try, and pipelined requests fall
+//! out naturally (the consumed byte count lets the caller drain exactly
+//! one request).
+
+use std::io::Write;
+use std::net::TcpStream;
+
+/// Largest accepted request head (start line + headers).
+pub const MAX_HEAD_BYTES: usize = 16 * 1024;
+/// Largest accepted request body.
+pub const MAX_BODY_BYTES: usize = 1024 * 1024;
+
+/// One parsed request.
+#[derive(Debug, Clone)]
+pub struct HttpRequest {
+    pub method: String,
+    /// Path only (any `?query` suffix is split off and kept verbatim).
+    pub path: String,
+    pub query: Option<String>,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl HttpRequest {
+    /// Case-insensitive header lookup.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// HTTP/1.1 default is keep-alive unless `Connection: close`.
+    pub fn keep_alive(&self) -> bool {
+        !matches!(self.header("connection"), Some(v) if v.eq_ignore_ascii_case("close"))
+    }
+
+    pub fn body_str(&self) -> Result<&str, HttpError> {
+        std::str::from_utf8(&self.body).map_err(|_| HttpError::new("body is not valid UTF-8"))
+    }
+}
+
+/// A malformed-request error; the server answers 400 and closes.
+#[derive(Debug, Clone)]
+pub struct HttpError {
+    pub message: String,
+}
+
+impl HttpError {
+    pub fn new(message: &str) -> Self {
+        HttpError { message: message.to_string() }
+    }
+}
+
+impl std::fmt::Display for HttpError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.message)
+    }
+}
+
+impl std::error::Error for HttpError {}
+
+/// Try to parse one complete request from the front of `buf`.
+///
+/// * `Ok(Some((req, consumed)))` — a full request; the caller drains
+///   `consumed` bytes (pipelining keeps any following request intact).
+/// * `Ok(None)` — incomplete; read more bytes and retry.
+/// * `Err(_)` — malformed or over-limit; the connection is poisoned.
+pub fn try_parse(buf: &[u8]) -> Result<Option<(HttpRequest, usize)>, HttpError> {
+    let Some(head_end) = find_head_end(buf) else {
+        if buf.len() > MAX_HEAD_BYTES {
+            return Err(HttpError::new("request head exceeds 16 KiB"));
+        }
+        return Ok(None);
+    };
+    if head_end > MAX_HEAD_BYTES {
+        return Err(HttpError::new("request head exceeds 16 KiB"));
+    }
+    let head = std::str::from_utf8(&buf[..head_end])
+        .map_err(|_| HttpError::new("request head is not valid UTF-8"))?;
+    let mut lines = head.split("\r\n");
+    let start = lines.next().ok_or_else(|| HttpError::new("empty request"))?;
+    let mut parts = start.split_ascii_whitespace();
+    let method = parts.next().ok_or_else(|| HttpError::new("missing method"))?;
+    let target = parts.next().ok_or_else(|| HttpError::new("missing request target"))?;
+    let version = parts.next().ok_or_else(|| HttpError::new("missing HTTP version"))?;
+    if !version.starts_with("HTTP/1.") {
+        return Err(HttpError::new("unsupported HTTP version"));
+    }
+    let mut headers = Vec::new();
+    for line in lines {
+        if line.is_empty() {
+            continue;
+        }
+        let (name, value) = line
+            .split_once(':')
+            .ok_or_else(|| HttpError::new("malformed header line"))?;
+        headers.push((name.trim().to_string(), value.trim().to_string()));
+    }
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), Some(q.to_string())),
+        None => (target.to_string(), None),
+    };
+    // Only Content-Length framing is implemented; silently ignoring a
+    // Transfer-Encoding would desync the connection (the chunk stream
+    // would be parsed as the next pipelined request).
+    if headers.iter().any(|(k, _)| k.eq_ignore_ascii_case("transfer-encoding")) {
+        return Err(HttpError::new("Transfer-Encoding is not supported; use Content-Length"));
+    }
+    let content_length = match headers
+        .iter()
+        .find(|(k, _)| k.eq_ignore_ascii_case("content-length"))
+    {
+        Some((_, v)) => v
+            .parse::<usize>()
+            .map_err(|_| HttpError::new("bad Content-Length"))?,
+        None => 0,
+    };
+    if content_length > MAX_BODY_BYTES {
+        return Err(HttpError::new("body exceeds 1 MiB"));
+    }
+    let body_start = head_end + 4; // past \r\n\r\n
+    if buf.len() < body_start + content_length {
+        return Ok(None);
+    }
+    let req = HttpRequest {
+        method: method.to_string(),
+        path,
+        query,
+        headers,
+        body: buf[body_start..body_start + content_length].to_vec(),
+    };
+    Ok(Some((req, body_start + content_length)))
+}
+
+/// Byte offset of the `\r\n\r\n` head terminator, if buffered.
+fn find_head_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+/// A response ready to serialize.
+#[derive(Debug, Clone)]
+pub struct HttpResponse {
+    pub status: u16,
+    pub content_type: &'static str,
+    pub body: String,
+    /// Extra headers (e.g. `Retry-After`), appended verbatim.
+    pub extra_headers: Vec<(String, String)>,
+    /// Ask the peer (and the server loop) to close after this response.
+    pub close: bool,
+}
+
+impl HttpResponse {
+    pub fn json(status: u16, body: String) -> Self {
+        HttpResponse {
+            status,
+            content_type: "application/json",
+            body,
+            extra_headers: Vec::new(),
+            close: false,
+        }
+    }
+
+    pub fn text(status: u16, body: String) -> Self {
+        HttpResponse {
+            status,
+            content_type: "text/plain; charset=utf-8",
+            body,
+            extra_headers: Vec::new(),
+            close: false,
+        }
+    }
+
+    pub fn with_header(mut self, name: &str, value: String) -> Self {
+        self.extra_headers.push((name.to_string(), value));
+        self
+    }
+
+    pub fn closing(mut self) -> Self {
+        self.close = true;
+        self
+    }
+}
+
+/// Canonical reason phrases for the statuses the service emits.
+pub fn status_text(code: u16) -> &'static str {
+    match code {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+/// Serialize and send one response (always with `Content-Length`).
+pub fn write_response(stream: &mut TcpStream, resp: &HttpResponse) -> std::io::Result<()> {
+    let mut head = format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\n",
+        resp.status,
+        status_text(resp.status),
+        resp.content_type,
+        resp.body.len()
+    );
+    for (k, v) in &resp.extra_headers {
+        head.push_str(k);
+        head.push_str(": ");
+        head.push_str(v);
+        head.push_str("\r\n");
+    }
+    head.push_str(if resp.close {
+        "Connection: close\r\n\r\n"
+    } else {
+        "Connection: keep-alive\r\n\r\n"
+    });
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(resp.body.as_bytes())?;
+    stream.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn raw(method: &str, path: &str, body: &str) -> Vec<u8> {
+        format!(
+            "{method} {path} HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        )
+        .into_bytes()
+    }
+
+    #[test]
+    fn parses_a_complete_post() {
+        let buf = raw("POST", "/v1/predict", "{\"a\":1}");
+        let (req, consumed) = try_parse(&buf).unwrap().unwrap();
+        assert_eq!(consumed, buf.len());
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/v1/predict");
+        assert_eq!(req.query, None);
+        assert_eq!(req.header("host"), Some("x"));
+        assert_eq!(req.header("HOST"), Some("x"));
+        assert_eq!(req.body_str().unwrap(), "{\"a\":1}");
+        assert!(req.keep_alive());
+    }
+
+    #[test]
+    fn incremental_parse_waits_for_body() {
+        let buf = raw("POST", "/v1/grid", "{\"kernel\":\"VA\"}");
+        for cut in [0, 5, 20, buf.len() - 1] {
+            assert!(try_parse(&buf[..cut]).unwrap().is_none(), "cut at {cut}");
+        }
+        assert!(try_parse(&buf).unwrap().is_some());
+    }
+
+    #[test]
+    fn pipelined_requests_consume_one_at_a_time() {
+        let mut buf = raw("GET", "/healthz", "");
+        let second = raw("GET", "/metrics", "");
+        buf.extend_from_slice(&second);
+        let (first, consumed) = try_parse(&buf).unwrap().unwrap();
+        assert_eq!(first.path, "/healthz");
+        let rest = &buf[consumed..];
+        let (next, consumed2) = try_parse(rest).unwrap().unwrap();
+        assert_eq!(next.path, "/metrics");
+        assert_eq!(consumed2, rest.len());
+    }
+
+    #[test]
+    fn query_split_and_connection_close() {
+        let buf = "GET /metrics?verbose=1 HTTP/1.1\r\nConnection: close\r\n\r\n";
+        let (req, _) = try_parse(buf.as_bytes()).unwrap().unwrap();
+        assert_eq!(req.path, "/metrics");
+        assert_eq!(req.query.as_deref(), Some("verbose=1"));
+        assert!(!req.keep_alive());
+    }
+
+    #[test]
+    fn rejects_malformed_heads() {
+        assert!(try_parse(b"BROKEN\r\n\r\n").is_err());
+        assert!(try_parse(b"GET / SPDY/3\r\n\r\n").is_err());
+        assert!(try_parse(b"GET / HTTP/1.1\r\nbadheader\r\n\r\n").is_err());
+        assert!(try_parse(b"GET / HTTP/1.1\r\nContent-Length: soup\r\n\r\n").is_err());
+        // Unsupported framing must be rejected, not silently desynced.
+        assert!(try_parse(b"POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n").is_err());
+    }
+
+    #[test]
+    fn enforces_size_limits() {
+        let huge_head = format!("GET / HTTP/1.1\r\nX: {}\r\n\r\n", "a".repeat(MAX_HEAD_BYTES));
+        assert!(try_parse(huge_head.as_bytes()).is_err());
+        // An over-limit head that never terminates is rejected once the
+        // buffer alone exceeds the cap (no unbounded buffering).
+        let unterminated = vec![b'a'; MAX_HEAD_BYTES + 1];
+        assert!(try_parse(&unterminated).is_err());
+        let big_body = format!(
+            "POST / HTTP/1.1\r\nContent-Length: {}\r\n\r\n",
+            MAX_BODY_BYTES + 1
+        );
+        assert!(try_parse(big_body.as_bytes()).is_err());
+    }
+
+    #[test]
+    fn status_lines_cover_service_codes() {
+        for code in [200, 400, 404, 405, 429, 500, 503] {
+            assert_ne!(status_text(code), "Unknown");
+        }
+    }
+}

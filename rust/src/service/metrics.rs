@@ -1,0 +1,327 @@
+//! Service observability (DESIGN.md §9): lock-free request counters,
+//! per-route latency histograms and the `/metrics` text exposition.
+//!
+//! The histogram uses fixed log-linear bucket bounds (1-2-5 decades
+//! from 1 µs to 100 s), so recording is one atomic increment and
+//! quantile queries never allocate. Bounds are coarse (≤ 2.5× between
+//! neighbours) — exact percentiles for benchmarking come from the load
+//! harness's client-side samples; the histogram is for live gauges.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering::Relaxed};
+use std::time::Duration;
+
+use crate::engine::CacheStats;
+
+/// Histogram bucket upper bounds, microseconds.
+const BUCKET_BOUNDS_US: [f64; 24] = [
+    1.0, 2.0, 5.0, 10.0, 20.0, 50.0, 100.0, 200.0, 500.0, 1e3, 2e3, 5e3, 1e4, 2e4, 5e4, 1e5,
+    2e5, 5e5, 1e6, 2e6, 5e6, 1e7, 2e7, 5e7,
+];
+
+/// A fixed-bound latency histogram with atomic buckets.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: [AtomicU64; BUCKET_BOUNDS_US.len()],
+    /// Samples above the last bound.
+    overflow: AtomicU64,
+    count: AtomicU64,
+    /// Nanosecond accumulation — sub-microsecond handler times (cache
+    /// hits, /healthz) must not truncate the mean to zero.
+    sum_ns: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            overflow: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histogram {
+    pub fn record(&self, d: Duration) {
+        let us = d.as_secs_f64() * 1e6;
+        match BUCKET_BOUNDS_US.iter().position(|&b| us <= b) {
+            Some(i) => self.buckets[i].fetch_add(1, Relaxed),
+            None => self.overflow.fetch_add(1, Relaxed),
+        };
+        self.count.fetch_add(1, Relaxed);
+        self.sum_ns.fetch_add(d.as_nanos().min(u64::MAX as u128) as u64, Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Relaxed)
+    }
+
+    /// Mean latency in microseconds (0 when empty).
+    pub fn mean_us(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        self.sum_ns.load(Relaxed) as f64 / 1e3 / n as f64
+    }
+
+    /// Approximate quantile (`q` in [0, 1]): the upper bound of the
+    /// bucket where the cumulative count crosses `q·total`.
+    pub fn quantile_us(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * total as f64).ceil().max(1.0) as u64;
+        let mut cumulative = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            cumulative += b.load(Relaxed);
+            if cumulative >= target {
+                return BUCKET_BOUNDS_US[i];
+            }
+        }
+        // Target sits in the overflow tail.
+        BUCKET_BOUNDS_US[BUCKET_BOUNDS_US.len() - 1]
+    }
+}
+
+/// The routes the service meters. `Other` absorbs 404 traffic.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Route {
+    Healthz,
+    Metrics,
+    Predict,
+    Grid,
+    Advise,
+    Other,
+}
+
+impl Route {
+    pub const ALL: [Route; 6] =
+        [Route::Healthz, Route::Metrics, Route::Predict, Route::Grid, Route::Advise, Route::Other];
+
+    pub fn of_path(path: &str) -> Route {
+        match path {
+            "/healthz" => Route::Healthz,
+            "/metrics" => Route::Metrics,
+            "/v1/predict" => Route::Predict,
+            "/v1/grid" => Route::Grid,
+            "/v1/advise" => Route::Advise,
+            _ => Route::Other,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Route::Healthz => "/healthz",
+            Route::Metrics => "/metrics",
+            Route::Predict => "/v1/predict",
+            Route::Grid => "/v1/grid",
+            Route::Advise => "/v1/advise",
+            Route::Other => "other",
+        }
+    }
+
+    fn index(self) -> usize {
+        match self {
+            Route::Healthz => 0,
+            Route::Metrics => 1,
+            Route::Predict => 2,
+            Route::Grid => 3,
+            Route::Advise => 4,
+            Route::Other => 5,
+        }
+    }
+}
+
+/// Per-route counters + latency.
+#[derive(Debug, Default)]
+pub struct RouteMetrics {
+    pub requests: AtomicU64,
+    pub ok: AtomicU64,
+    pub client_errors: AtomicU64,
+    pub server_errors: AtomicU64,
+    pub latency: Histogram,
+}
+
+/// Everything `/metrics` exposes. Shared (`Arc`) between the acceptor,
+/// the workers and the `Service` handle; all counters are atomics.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    routes: [RouteMetrics; Route::ALL.len()],
+    /// Connections accepted (admitted or shed).
+    pub connections_total: AtomicU64,
+    /// Connections answered 429 at admission.
+    pub shed_total: AtomicU64,
+    /// Current depth of the pending-connection queue (gauge).
+    pub queue_depth: AtomicUsize,
+    /// High-water mark the admission control sheds at.
+    pub queue_capacity: AtomicUsize,
+}
+
+impl Metrics {
+    pub fn route(&self, r: Route) -> &RouteMetrics {
+        &self.routes[r.index()]
+    }
+
+    /// Record one handled request.
+    pub fn record(&self, r: Route, status: u16, elapsed: Duration) {
+        let m = self.route(r);
+        m.requests.fetch_add(1, Relaxed);
+        match status {
+            200..=299 => m.ok.fetch_add(1, Relaxed),
+            400..=499 => m.client_errors.fetch_add(1, Relaxed),
+            _ => m.server_errors.fetch_add(1, Relaxed),
+        };
+        m.latency.record(elapsed);
+    }
+
+    /// Total requests over every route.
+    pub fn requests_total(&self) -> u64 {
+        self.routes.iter().map(|r| r.requests.load(Relaxed)).sum()
+    }
+
+    /// Render the text exposition (`GET /metrics`). Cache counters come
+    /// from the engine — zeroed when the cache is disabled, so the
+    /// lines are always present and scrapers never see a gap.
+    pub fn render(&self, cache: &CacheStats, uptime: Duration, backend: &str) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::with_capacity(2048);
+        let _ = writeln!(out, "# gpufreq prediction service");
+        let _ = writeln!(out, "service_uptime_seconds {:.3}", uptime.as_secs_f64());
+        let _ = writeln!(out, "service_backend_info{{backend=\"{backend}\"}} 1");
+        let _ = writeln!(
+            out,
+            "service_connections_total {}",
+            self.connections_total.load(Relaxed)
+        );
+        let _ = writeln!(out, "service_shed_total {}", self.shed_total.load(Relaxed));
+        let _ = writeln!(out, "service_queue_depth {}", self.queue_depth.load(Relaxed));
+        let _ = writeln!(
+            out,
+            "service_queue_capacity {}",
+            self.queue_capacity.load(Relaxed)
+        );
+        let _ = writeln!(out, "service_cache_hits {}", cache.hits);
+        let _ = writeln!(out, "service_cache_misses {}", cache.misses);
+        let _ = writeln!(out, "service_cache_entries {}", cache.entries);
+        let _ = writeln!(out, "service_cache_evictions {}", cache.evictions);
+        for r in Route::ALL {
+            let m = self.route(r);
+            let n = m.requests.load(Relaxed);
+            if n == 0 && r == Route::Other {
+                // Real routes emit zeros so dashboards see the series
+                // immediately; the catch-all stays silent until it fires.
+                continue;
+            }
+            let name = r.name();
+            let _ = writeln!(out, "service_requests_total{{route=\"{name}\"}} {n}");
+            let _ = writeln!(
+                out,
+                "service_responses_total{{route=\"{name}\",class=\"2xx\"}} {}",
+                m.ok.load(Relaxed)
+            );
+            let _ = writeln!(
+                out,
+                "service_responses_total{{route=\"{name}\",class=\"4xx\"}} {}",
+                m.client_errors.load(Relaxed)
+            );
+            let _ = writeln!(
+                out,
+                "service_responses_total{{route=\"{name}\",class=\"5xx\"}} {}",
+                m.server_errors.load(Relaxed)
+            );
+            let _ = writeln!(
+                out,
+                "service_latency_us{{route=\"{name}\",stat=\"mean\"}} {:.1}",
+                m.latency.mean_us()
+            );
+            for (q, label) in [(0.5, "p50"), (0.99, "p99"), (0.999, "p999")] {
+                let _ = writeln!(
+                    out,
+                    "service_latency_us{{route=\"{name}\",stat=\"{label}\"}} {:.1}",
+                    m.latency.quantile_us(q)
+                );
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_quantiles_bracket_the_samples() {
+        let h = Histogram::default();
+        // 99 fast samples at ~3 µs, one slow at ~40 ms.
+        for _ in 0..99 {
+            h.record(Duration::from_micros(3));
+        }
+        h.record(Duration::from_millis(40));
+        assert_eq!(h.count(), 100);
+        assert_eq!(h.quantile_us(0.5), 5.0); // 3 µs falls in the ≤5 bucket
+        assert_eq!(h.quantile_us(0.99), 5.0);
+        assert_eq!(h.quantile_us(1.0), 5e4); // 40 ms falls in the ≤50 ms bucket
+        assert!(h.mean_us() > 3.0 && h.mean_us() < 1000.0);
+    }
+
+    #[test]
+    fn empty_histogram_is_all_zero() {
+        let h = Histogram::default();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile_us(0.5), 0.0);
+        assert_eq!(h.mean_us(), 0.0);
+    }
+
+    #[test]
+    fn sub_microsecond_samples_keep_a_nonzero_mean() {
+        let h = Histogram::default();
+        for _ in 0..10 {
+            h.record(Duration::from_nanos(300));
+        }
+        assert!((h.mean_us() - 0.3).abs() < 1e-9, "mean {}", h.mean_us());
+        assert_eq!(h.quantile_us(0.5), 1.0); // ≤ 1 µs bucket
+    }
+
+    #[test]
+    fn overflow_samples_report_the_top_bound() {
+        let h = Histogram::default();
+        h.record(Duration::from_secs(120));
+        assert_eq!(h.quantile_us(0.5), BUCKET_BOUNDS_US[BUCKET_BOUNDS_US.len() - 1]);
+    }
+
+    #[test]
+    fn route_mapping_is_total() {
+        assert_eq!(Route::of_path("/healthz"), Route::Healthz);
+        assert_eq!(Route::of_path("/v1/predict"), Route::Predict);
+        assert_eq!(Route::of_path("/nope"), Route::Other);
+        for r in Route::ALL {
+            assert_eq!(Route::of_path(r.name()), if r == Route::Other { Route::Other } else { r });
+        }
+    }
+
+    #[test]
+    fn render_contains_all_core_series() {
+        let m = Metrics::default();
+        m.record(Route::Predict, 200, Duration::from_micros(10));
+        m.record(Route::Predict, 400, Duration::from_micros(12));
+        m.record(Route::Advise, 500, Duration::from_micros(15));
+        let text = m.render(&CacheStats::default(), Duration::from_secs(2), "native-scalar");
+        for needle in [
+            "service_uptime_seconds",
+            "service_queue_depth 0",
+            "service_cache_hits 0",
+            "service_requests_total{route=\"/v1/predict\"} 2",
+            "service_responses_total{route=\"/v1/predict\",class=\"2xx\"} 1",
+            "service_responses_total{route=\"/v1/predict\",class=\"4xx\"} 1",
+            "service_responses_total{route=\"/v1/advise\",class=\"5xx\"} 1",
+            "service_latency_us{route=\"/v1/predict\",stat=\"p50\"}",
+        ] {
+            assert!(text.contains(needle), "missing `{needle}` in:\n{text}");
+        }
+        // The catch-all stays silent until it fires.
+        assert!(!text.contains("route=\"other\""));
+    }
+}

@@ -1,0 +1,43 @@
+//! The standing prediction service (DESIGN.md §9): the paper's model
+//! behind a network socket.
+//!
+//! The paper closes (§VII) by proposing "a real-time voltage and
+//! frequency controller" built on the model; the model is cheap enough
+//! (microseconds per estimate, counters + a handful of hardware
+//! parameters) that the natural deployment is a standing oracle that
+//! cluster schedulers query online. This module is that layer — written
+//! against `std` only, like every other offline substitution in the
+//! crate (no hyper, no serde, no tokio):
+//!
+//! ```text
+//!            TCP clients (schedulers, load harness, CI)
+//!                            │ client.rs
+//!   ┌────────────────────────▼─────────────────────────┐
+//!   │ server.rs   acceptor → bounded queue → N workers │
+//!   │             (429 + Retry-After past high-water)  │
+//!   │ http.rs     HTTP/1.1 parse / serialize           │
+//!   │ routes.rs   /healthz /metrics /v1/{predict,      │
+//!   │             grid, advise}                        │
+//!   │ json.rs     hand-rolled JSON both directions     │
+//!   │ metrics.rs  counters + latency histograms        │
+//!   └────────────────────────┬─────────────────────────┘
+//!                            │
+//!                  engine::Engine (PR 1)
+//!              dvfs::{PowerModel, advise}  (§VII)
+//! ```
+//!
+//! Start one with [`Service::start`] (the CLI's `serve` subcommand does
+//! exactly this after profiling the Table VI kernels), drive it with
+//! [`Client`], and read live counters at `GET /metrics`.
+
+pub mod client;
+pub mod http;
+pub mod json;
+pub mod metrics;
+pub mod routes;
+pub mod server;
+
+pub use client::{Client, ClientResponse};
+pub use metrics::{Histogram, Metrics, Route};
+pub use routes::ServiceState;
+pub use server::{Service, ServiceConfig};

@@ -1,0 +1,676 @@
+//! Route handlers (DESIGN.md §9): pure functions from a parsed
+//! [`HttpRequest`] to an [`HttpResponse`], with no socket handling —
+//! the server loop owns I/O, this module owns the wire protocol.
+//!
+//! | route            | method | body                                          |
+//! |------------------|--------|-----------------------------------------------|
+//! | `/healthz`       | GET    | —                                             |
+//! | `/metrics`       | GET    | —                                             |
+//! | `/v1/predict`    | POST   | `{kernel|counters, core_mhz, mem_mhz}`        |
+//! | `/v1/grid`       | POST   | `{kernel|counters, pairs?}`                   |
+//! | `/v1/advise`     | POST   | `{kernel|counters, objective?, deadline_us?, pairs?, include_points?}` |
+//!
+//! Kernels are resolved against profiles registered at startup (the
+//! `serve` subcommand profiles the Table VI workloads once at the
+//! baseline, exactly like the paper's one-shot counter pass); callers
+//! with their own profiler pass raw `counters` instead.
+
+use std::time::Instant;
+
+use crate::dvfs::{ConfigPoint, Objective, PowerModel};
+use crate::engine::{Engine, Estimate};
+use crate::model::KernelCounters;
+
+use super::http::{HttpRequest, HttpResponse};
+use super::json::Value;
+use super::metrics::{Metrics, Route};
+
+/// Everything the handlers read: the shared engine, the power model and
+/// the kernel-profile registry. Built once, shared (`Arc`) across the
+/// worker pool.
+pub struct ServiceState {
+    pub engine: Engine,
+    pub power: PowerModel,
+    /// Grid used when a request omits `pairs` (the paper's 49 pairs).
+    pub default_pairs: Vec<(f64, f64)>,
+    profiles: Vec<(String, KernelCounters)>,
+    pub started: Instant,
+}
+
+impl ServiceState {
+    pub fn new(engine: Engine, power: PowerModel, default_pairs: Vec<(f64, f64)>) -> Self {
+        ServiceState {
+            engine,
+            power,
+            default_pairs,
+            profiles: Vec::new(),
+            started: Instant::now(),
+        }
+    }
+
+    /// Register a profiled kernel for `{"kernel": name}` requests.
+    pub fn register_kernel(&mut self, name: &str, counters: KernelCounters) {
+        match self.profiles.iter_mut().find(|(n, _)| n == name) {
+            Some((_, c)) => *c = counters,
+            None => self.profiles.push((name.to_string(), counters)),
+        }
+    }
+
+    pub fn counters_for(&self, name: &str) -> Option<KernelCounters> {
+        self.profiles.iter().find(|(n, _)| n == name).map(|(_, c)| *c)
+    }
+
+    pub fn kernel_names(&self) -> Vec<&str> {
+        self.profiles.iter().map(|(n, _)| n.as_str()).collect()
+    }
+
+    pub fn kernel_count(&self) -> usize {
+        self.profiles.len()
+    }
+}
+
+fn error_json(status: u16, message: &str) -> HttpResponse {
+    HttpResponse::json(
+        status,
+        Value::obj(vec![("error", Value::str(message))]).render(),
+    )
+}
+
+/// Dispatch one request. Handler panics become 500s — a worker thread
+/// must survive any single bad request.
+pub fn handle(state: &ServiceState, metrics: &Metrics, req: &HttpRequest) -> HttpResponse {
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        dispatch(state, metrics, req)
+    }));
+    match result {
+        Ok(resp) => resp,
+        Err(_) => error_json(500, "internal error (handler panicked)"),
+    }
+}
+
+fn dispatch(state: &ServiceState, metrics: &Metrics, req: &HttpRequest) -> HttpResponse {
+    match (req.method.as_str(), Route::of_path(&req.path)) {
+        ("GET", Route::Healthz) => healthz(state),
+        ("GET", Route::Metrics) => metrics_route(state, metrics),
+        ("POST", Route::Predict) => predict(state, req),
+        ("POST", Route::Grid) => grid(state, req),
+        ("POST", Route::Advise) => advise(state, req),
+        (_, Route::Other) => error_json(404, "unknown route"),
+        _ => error_json(405, "method not allowed for this route"),
+    }
+}
+
+fn healthz(state: &ServiceState) -> HttpResponse {
+    let body = Value::obj(vec![
+        ("status", Value::str("ok")),
+        ("backend", Value::str(state.engine.backend_name())),
+        ("kernels", Value::num(state.kernel_count() as f64)),
+        (
+            "uptime_ms",
+            Value::num(state.started.elapsed().as_secs_f64() * 1e3),
+        ),
+    ]);
+    HttpResponse::json(200, body.render())
+}
+
+fn metrics_route(state: &ServiceState, metrics: &Metrics) -> HttpResponse {
+    let text = metrics.render(
+        &state.engine.cache_stats(),
+        state.started.elapsed(),
+        state.engine.backend_name(),
+    );
+    HttpResponse::text(200, text)
+}
+
+/// Resolve the request's kernel: a registered profile name or an
+/// inline `counters` object.
+fn resolve_counters(state: &ServiceState, body: &Value) -> Result<KernelCounters, String> {
+    if let Some(name) = body.get("kernel").and_then(Value::as_str) {
+        return state.counters_for(name).ok_or_else(|| {
+            format!(
+                "unknown kernel `{name}` (registered: {})",
+                state.kernel_names().join(", ")
+            )
+        });
+    }
+    let Some(c) = body.get("counters") else {
+        return Err("body needs `kernel` (string) or `counters` (object)".to_string());
+    };
+    counters_from_json(c)
+}
+
+/// Strict-ish counters decoding: the fields the model always reads are
+/// required; the rest default like a simple global-memory kernel.
+fn counters_from_json(v: &Value) -> Result<KernelCounters, String> {
+    let req = |key: &str| -> Result<f64, String> {
+        v.get(key)
+            .and_then(Value::as_f64)
+            .ok_or_else(|| format!("counters.{key} must be a number"))
+    };
+    let opt = |key: &str, default: f64| -> Result<f64, String> {
+        match v.get(key) {
+            None => Ok(default),
+            Some(x) => x
+                .as_f64()
+                .ok_or_else(|| format!("counters.{key} must be a number")),
+        }
+    };
+    let gld_trans = req("gld_trans")?;
+    Ok(KernelCounters {
+        l2_hr: req("l2_hr")?,
+        gld_trans,
+        avr_inst: req("avr_inst")?,
+        n_blocks: req("n_blocks")?,
+        wpb: req("wpb")?,
+        aw: req("aw")?,
+        n_sm: req("n_sm")?,
+        o_itrs: req("o_itrs")?,
+        i_itrs: opt("i_itrs", 0.0)?,
+        uses_smem: match v.get("uses_smem") {
+            None => false,
+            Some(b) => b
+                .as_bool()
+                .ok_or_else(|| "counters.uses_smem must be a bool".to_string())?,
+        },
+        smem_conflict: opt("smem_conflict", 1.0)?,
+        gld_body: opt("gld_body", gld_trans)?,
+        gld_edge: opt("gld_edge", 0.0)?,
+        mem_ops: opt("mem_ops", 1.0)?,
+        l1_hr: opt("l1_hr", 0.0)?,
+    })
+}
+
+/// Decode an optional `pairs` array; fall back to the default grid.
+fn resolve_pairs(state: &ServiceState, body: &Value) -> Result<Vec<(f64, f64)>, String> {
+    let Some(raw) = body.get("pairs") else {
+        return Ok(state.default_pairs.clone());
+    };
+    let items = raw
+        .as_array()
+        .ok_or_else(|| "`pairs` must be an array of [core_mhz, mem_mhz]".to_string())?;
+    if items.is_empty() {
+        return Err("`pairs` must not be empty".to_string());
+    }
+    let mut out = Vec::with_capacity(items.len());
+    for (i, item) in items.iter().enumerate() {
+        let pair = item.as_array().ok_or_else(|| format!("pairs[{i}] must be [core, mem]"))?;
+        let (Some(cf), Some(mf)) = (
+            pair.first().and_then(Value::as_f64),
+            pair.get(1).and_then(Value::as_f64),
+        ) else {
+            return Err(format!("pairs[{i}] must be two numbers"));
+        };
+        if !(cf.is_finite() && mf.is_finite() && cf > 0.0 && mf > 0.0) || pair.len() != 2 {
+            return Err(format!("pairs[{i}] must be two positive finite frequencies"));
+        }
+        out.push((cf, mf));
+    }
+    Ok(out)
+}
+
+fn parse_body(req: &HttpRequest) -> Result<Value, HttpResponse> {
+    let text = req
+        .body_str()
+        .map_err(|e| error_json(400, &e.message))?;
+    if text.trim().is_empty() {
+        return Err(error_json(400, "request body must be a JSON object"));
+    }
+    Value::parse(text).map_err(|e| error_json(400, &e.to_string()))
+}
+
+fn estimate_json(cf: f64, mf: f64, e: &Estimate) -> Value {
+    Value::obj(vec![
+        ("core_mhz", Value::num(cf)),
+        ("mem_mhz", Value::num(mf)),
+        ("time_us", Value::num(e.time_us)),
+        ("t_active", Value::num(e.t_active)),
+        ("t_exec_cycles", Value::num(e.t_exec_cycles)),
+        (
+            "regime",
+            match e.regime {
+                Some(r) => Value::str(format!("{r:?}")),
+                None => Value::Null,
+            },
+        ),
+    ])
+}
+
+fn config_point_json(p: &ConfigPoint) -> Value {
+    Value::obj(vec![
+        ("core_mhz", Value::num(p.core_mhz)),
+        ("mem_mhz", Value::num(p.mem_mhz)),
+        ("time_us", Value::num(p.time_us)),
+        ("power_w", Value::num(p.power_w)),
+        ("energy_mj", Value::num(p.energy_mj)),
+        ("edp", Value::num(p.edp)),
+    ])
+}
+
+/// `POST /v1/predict` — one estimate at one frequency pair.
+fn predict(state: &ServiceState, req: &HttpRequest) -> HttpResponse {
+    let body = match parse_body(req) {
+        Ok(v) => v,
+        Err(resp) => return resp,
+    };
+    let counters = match resolve_counters(state, &body) {
+        Ok(c) => c,
+        Err(m) => return error_json(400, &m),
+    };
+    let (Some(cf), Some(mf)) = (
+        body.get("core_mhz").and_then(Value::as_f64),
+        body.get("mem_mhz").and_then(Value::as_f64),
+    ) else {
+        return error_json(400, "body needs numeric `core_mhz` and `mem_mhz`");
+    };
+    if !(cf.is_finite() && mf.is_finite() && cf > 0.0 && mf > 0.0) {
+        return error_json(400, "frequencies must be positive finite MHz");
+    }
+    match state.engine.predict_one(&counters, cf, mf) {
+        Ok(e) => HttpResponse::json(200, estimate_json(cf, mf, &e).render()),
+        Err(e) => error_json(500, &format!("prediction failed: {e:#}")),
+    }
+}
+
+/// `POST /v1/grid` — a whole frequency-grid sweep (cache-served on
+/// repeats; the response carries the engine's cache counters).
+fn grid(state: &ServiceState, req: &HttpRequest) -> HttpResponse {
+    let body = match parse_body(req) {
+        Ok(v) => v,
+        Err(resp) => return resp,
+    };
+    let counters = match resolve_counters(state, &body) {
+        Ok(c) => c,
+        Err(m) => return error_json(400, &m),
+    };
+    let pairs = match resolve_pairs(state, &body) {
+        Ok(p) => p,
+        Err(m) => return error_json(400, &m),
+    };
+    let ests = match state.engine.predict_grid(&counters, &pairs) {
+        Ok(v) => v,
+        Err(e) => return error_json(500, &format!("prediction failed: {e:#}")),
+    };
+    let cache = state.engine.cache_stats();
+    let points: Vec<Value> = pairs
+        .iter()
+        .zip(&ests)
+        .map(|(&(cf, mf), e)| estimate_json(cf, mf, e))
+        .collect();
+    let resp = Value::obj(vec![
+        ("points", Value::arr(points)),
+        (
+            "cache",
+            Value::obj(vec![
+                ("hits", Value::num(cache.hits as f64)),
+                ("misses", Value::num(cache.misses as f64)),
+                ("entries", Value::num(cache.entries as f64)),
+                ("evictions", Value::num(cache.evictions as f64)),
+            ]),
+        ),
+    ]);
+    HttpResponse::json(200, resp.render())
+}
+
+fn parse_objective(body: &Value) -> Result<Objective, String> {
+    match body.get("objective") {
+        None => Ok(Objective::Energy),
+        Some(Value::Str(s)) => match s.as_str() {
+            "energy" => Ok(Objective::Energy),
+            "edp" => Ok(Objective::Edp),
+            other => Err(format!("unknown objective `{other}` (energy | edp | {{\"slack\": f}})")),
+        },
+        Some(obj) => obj
+            .get("slack")
+            .and_then(Value::as_f64)
+            .map(Objective::EnergyWithSlack)
+            .ok_or_else(|| "objective must be \"energy\", \"edp\" or {\"slack\": f}".to_string()),
+    }
+}
+
+/// `POST /v1/advise` — the DVFS oracle: energy-optimal (core, mem)
+/// under an optional absolute deadline (the paper's §VII real-time
+/// controller application).
+fn advise(state: &ServiceState, req: &HttpRequest) -> HttpResponse {
+    let body = match parse_body(req) {
+        Ok(v) => v,
+        Err(resp) => return resp,
+    };
+    let counters = match resolve_counters(state, &body) {
+        Ok(c) => c,
+        Err(m) => return error_json(400, &m),
+    };
+    let pairs = match resolve_pairs(state, &body) {
+        Ok(p) => p,
+        Err(m) => return error_json(400, &m),
+    };
+    let objective = match parse_objective(&body) {
+        Ok(o) => o,
+        Err(m) => return error_json(400, &m),
+    };
+    let deadline_us = match body.get("deadline_us") {
+        None => None,
+        Some(v) => match v.as_f64() {
+            Some(d) if d > 0.0 && d.is_finite() => Some(d),
+            _ => return error_json(400, "`deadline_us` must be a positive finite number"),
+        },
+    };
+    let (best, points) =
+        match crate::dvfs::advise_with_engine(&counters, &state.engine, &state.power, &pairs, objective)
+        {
+            Ok(r) => r,
+            Err(e) => return error_json(500, &format!("advisor failed: {e:#}")),
+        };
+    let fastest = *points
+        .iter()
+        .min_by(|a, b| a.time_us.total_cmp(&b.time_us))
+        .expect("non-empty grid");
+    // Absolute deadline: re-select among points meeting it. If nothing
+    // does, report infeasible and fall back to the fastest point — a
+    // real-time controller still needs *a* setting to apply.
+    let (best, feasible) = match deadline_us {
+        None => (best, true),
+        Some(deadline) => {
+            let key = |p: &ConfigPoint| match objective {
+                Objective::Edp => p.edp,
+                _ => p.energy_mj,
+            };
+            let within = points
+                .iter()
+                .filter(|p| p.time_us <= deadline)
+                .min_by(|a, b| key(a).total_cmp(&key(b)));
+            match within {
+                Some(p) => (*p, true),
+                None => (fastest, false),
+            }
+        }
+    };
+    let mut fields = vec![
+        (
+            "objective",
+            Value::str(match objective {
+                Objective::Energy => "energy".to_string(),
+                Objective::Edp => "edp".to_string(),
+                Objective::EnergyWithSlack(s) => format!("slack:{s}"),
+            }),
+        ),
+        ("feasible", Value::Bool(feasible)),
+        ("best", config_point_json(&best)),
+        ("fastest", config_point_json(&fastest)),
+        ("points_evaluated", Value::num(points.len() as f64)),
+    ];
+    if let Some(d) = deadline_us {
+        fields.push(("deadline_us", Value::num(d)));
+    }
+    if body.get("include_points").and_then(Value::as_bool) == Some(true) {
+        fields.push((
+            "points",
+            Value::arr(points.iter().map(config_point_json).collect()),
+        ));
+    }
+    HttpResponse::json(200, Value::obj(fields).render())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::Engine;
+    use crate::model::HwParams;
+
+    fn counters() -> KernelCounters {
+        KernelCounters {
+            l2_hr: 0.1,
+            gld_trans: 6.0,
+            avr_inst: 1.5,
+            n_blocks: 128.0,
+            wpb: 8.0,
+            aw: 64.0,
+            n_sm: 16.0,
+            o_itrs: 8.0,
+            i_itrs: 0.0,
+            uses_smem: false,
+            smem_conflict: 1.0,
+            gld_body: 6.0,
+            gld_edge: 0.0,
+            mem_ops: 2.0,
+            l1_hr: 0.0,
+        }
+    }
+
+    fn state() -> ServiceState {
+        let hw = HwParams::paper_defaults();
+        let mut s = ServiceState::new(
+            Engine::native(hw),
+            PowerModel::gtx980(),
+            crate::microbench::standard_grid(),
+        );
+        s.register_kernel("VA", counters());
+        s
+    }
+
+    fn post(path: &str, body: &str) -> HttpRequest {
+        HttpRequest {
+            method: "POST".to_string(),
+            path: path.to_string(),
+            query: None,
+            headers: Vec::new(),
+            body: body.as_bytes().to_vec(),
+        }
+    }
+
+    fn get(path: &str) -> HttpRequest {
+        HttpRequest {
+            method: "GET".to_string(),
+            path: path.to_string(),
+            query: None,
+            headers: Vec::new(),
+            body: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn predict_round_trip_matches_engine() {
+        let st = state();
+        let m = Metrics::default();
+        let resp = handle(
+            &st,
+            &m,
+            &post("/v1/predict", r#"{"kernel":"VA","core_mhz":700,"mem_mhz":700}"#),
+        );
+        assert_eq!(resp.status, 200);
+        let v = Value::parse(&resp.body).unwrap();
+        let want = st.engine.predict_one(&counters(), 700.0, 700.0).unwrap();
+        let got = v.get("time_us").and_then(Value::as_f64).unwrap();
+        // JSON round-trips f64 via shortest-representation `{}`: exact.
+        assert_eq!(got.to_bits(), want.time_us.to_bits());
+        assert!(v.get("regime").and_then(Value::as_str).is_some());
+    }
+
+    #[test]
+    fn predict_accepts_inline_counters() {
+        let st = state();
+        let m = Metrics::default();
+        let body = r#"{"counters":{"l2_hr":0.1,"gld_trans":6,"avr_inst":1.5,"n_blocks":128,
+            "wpb":8,"aw":64,"n_sm":16,"o_itrs":8,"mem_ops":2},
+            "core_mhz":500,"mem_mhz":900}"#;
+        let resp = handle(&st, &m, &post("/v1/predict", body));
+        assert_eq!(resp.status, 200, "{}", resp.body);
+        let v = Value::parse(&resp.body).unwrap();
+        let want = st.engine.predict_one(&counters(), 500.0, 900.0).unwrap();
+        assert_eq!(
+            v.get("time_us").and_then(Value::as_f64).unwrap().to_bits(),
+            want.time_us.to_bits()
+        );
+    }
+
+    #[test]
+    fn predict_errors_are_400_with_json_bodies() {
+        let st = state();
+        let m = Metrics::default();
+        for body in [
+            "",
+            "not json",
+            r#"{"kernel":"NOPE","core_mhz":700,"mem_mhz":700}"#,
+            r#"{"kernel":"VA"}"#,
+            r#"{"kernel":"VA","core_mhz":-1,"mem_mhz":700}"#,
+            r#"{"kernel":"VA","core_mhz":1e999,"mem_mhz":700}"#,
+            r#"{"counters":{"l2_hr":0.1},"core_mhz":700,"mem_mhz":700}"#,
+        ] {
+            let resp = handle(&st, &m, &post("/v1/predict", body));
+            assert_eq!(resp.status, 400, "body `{body}` -> {}", resp.body);
+            assert!(Value::parse(&resp.body).unwrap().get("error").is_some());
+        }
+    }
+
+    #[test]
+    fn grid_defaults_to_standard_pairs_and_reports_cache() {
+        let st = state();
+        let m = Metrics::default();
+        let resp = handle(&st, &m, &post("/v1/grid", r#"{"kernel":"VA"}"#));
+        assert_eq!(resp.status, 200);
+        let v = Value::parse(&resp.body).unwrap();
+        assert_eq!(v.get("points").and_then(Value::as_array).unwrap().len(), 49);
+        let cache = v.get("cache").unwrap();
+        assert_eq!(cache.get("misses").and_then(Value::as_f64), Some(49.0));
+        // Second call is fully cache-served.
+        let resp2 = handle(&st, &m, &post("/v1/grid", r#"{"kernel":"VA"}"#));
+        let v2 = Value::parse(&resp2.body).unwrap();
+        assert!(v2.get("cache").unwrap().get("hits").and_then(Value::as_f64).unwrap() >= 49.0);
+    }
+
+    #[test]
+    fn grid_accepts_explicit_pairs() {
+        let st = state();
+        let m = Metrics::default();
+        let resp = handle(
+            &st,
+            &m,
+            &post("/v1/grid", r#"{"kernel":"VA","pairs":[[400,400],[1000,1000]]}"#),
+        );
+        assert_eq!(resp.status, 200);
+        let v = Value::parse(&resp.body).unwrap();
+        let pts = v.get("points").and_then(Value::as_array).unwrap();
+        assert_eq!(pts.len(), 2);
+        assert_eq!(pts[1].get("core_mhz").and_then(Value::as_f64), Some(1000.0));
+        for bad in [
+            r#"{"kernel":"VA","pairs":[]}"#,
+            r#"{"kernel":"VA","pairs":[[400]]}"#,
+            r#"{"kernel":"VA","pairs":[[400,0]]}"#,
+            r#"{"kernel":"VA","pairs":[[400,400,400]]}"#,
+            r#"{"kernel":"VA","pairs":"all"}"#,
+        ] {
+            assert_eq!(handle(&st, &m, &post("/v1/grid", bad)).status, 400, "{bad}");
+        }
+    }
+
+    #[test]
+    fn advise_energy_matches_dvfs_module() {
+        let st = state();
+        let m = Metrics::default();
+        let resp = handle(&st, &m, &post("/v1/advise", r#"{"kernel":"VA"}"#));
+        assert_eq!(resp.status, 200);
+        let v = Value::parse(&resp.body).unwrap();
+        assert_eq!(v.get("feasible").and_then(Value::as_bool), Some(true));
+        let (want, _) = crate::dvfs::advise_with_engine(
+            &counters(),
+            &st.engine,
+            &st.power,
+            &st.default_pairs,
+            Objective::Energy,
+        )
+        .unwrap();
+        let best = v.get("best").unwrap();
+        assert_eq!(best.get("core_mhz").and_then(Value::as_f64), Some(want.core_mhz));
+        assert_eq!(best.get("mem_mhz").and_then(Value::as_f64), Some(want.mem_mhz));
+    }
+
+    #[test]
+    fn advise_deadline_constrains_and_falls_back() {
+        let st = state();
+        let m = Metrics::default();
+        // A generous deadline: feasible, best meets it.
+        let resp = handle(
+            &st,
+            &m,
+            &post("/v1/advise", r#"{"kernel":"VA","deadline_us":1e9,"include_points":true}"#),
+        );
+        let v = Value::parse(&resp.body).unwrap();
+        assert_eq!(v.get("feasible").and_then(Value::as_bool), Some(true));
+        assert_eq!(v.get("points").and_then(Value::as_array).unwrap().len(), 49);
+        // An impossible deadline: infeasible, falls back to fastest.
+        let resp = handle(
+            &st,
+            &m,
+            &post("/v1/advise", r#"{"kernel":"VA","deadline_us":0.001}"#),
+        );
+        let v = Value::parse(&resp.body).unwrap();
+        assert_eq!(v.get("feasible").and_then(Value::as_bool), Some(false));
+        let best = v.get("best").unwrap().get("time_us").and_then(Value::as_f64).unwrap();
+        let fastest = v.get("fastest").unwrap().get("time_us").and_then(Value::as_f64).unwrap();
+        assert_eq!(best.to_bits(), fastest.to_bits());
+        // Tight-but-possible deadline: the chosen point meets it.
+        let loose = handle(&st, &m, &post("/v1/advise", r#"{"kernel":"VA"}"#));
+        let unconstrained = Value::parse(&loose.body)
+            .unwrap()
+            .get("best")
+            .unwrap()
+            .get("time_us")
+            .and_then(Value::as_f64)
+            .unwrap();
+        let deadline = (unconstrained + fastest) / 2.0;
+        let resp = handle(
+            &st,
+            &m,
+            &post("/v1/advise", &format!(r#"{{"kernel":"VA","deadline_us":{deadline}}}"#)),
+        );
+        let v = Value::parse(&resp.body).unwrap();
+        assert_eq!(v.get("feasible").and_then(Value::as_bool), Some(true));
+        assert!(
+            v.get("best").unwrap().get("time_us").and_then(Value::as_f64).unwrap() <= deadline
+        );
+    }
+
+    #[test]
+    fn advise_objectives_parse() {
+        let st = state();
+        let m = Metrics::default();
+        for body in [
+            r#"{"kernel":"VA","objective":"edp"}"#,
+            r#"{"kernel":"VA","objective":{"slack":0.05}}"#,
+        ] {
+            assert_eq!(handle(&st, &m, &post("/v1/advise", body)).status, 200, "{body}");
+        }
+        assert_eq!(
+            handle(&st, &m, &post("/v1/advise", r#"{"kernel":"VA","objective":"speed"}"#)).status,
+            400
+        );
+    }
+
+    #[test]
+    fn health_metrics_and_routing() {
+        let st = state();
+        let m = Metrics::default();
+        let h = handle(&st, &m, &get("/healthz"));
+        assert_eq!(h.status, 200);
+        let v = Value::parse(&h.body).unwrap();
+        assert_eq!(v.get("status").and_then(Value::as_str), Some("ok"));
+        assert_eq!(v.get("kernels").and_then(Value::as_f64), Some(1.0));
+
+        let mx = handle(&st, &m, &get("/metrics"));
+        assert_eq!(mx.status, 200);
+        assert!(mx.body.contains("service_cache_hits"));
+
+        assert_eq!(handle(&st, &m, &get("/nope")).status, 404);
+        assert_eq!(handle(&st, &m, &get("/v1/predict")).status, 405);
+        assert_eq!(handle(&st, &m, &post("/healthz", "{}")).status, 405);
+    }
+
+    #[test]
+    fn register_kernel_overwrites_by_name() {
+        let mut st = state();
+        let mut c = counters();
+        c.avr_inst = 99.0;
+        st.register_kernel("VA", c);
+        assert_eq!(st.kernel_count(), 1);
+        assert_eq!(st.counters_for("VA").unwrap().avr_inst, 99.0);
+    }
+}

@@ -1,0 +1,513 @@
+//! The standing HTTP server (DESIGN.md §9): `TcpListener` acceptor,
+//! bounded pending-connection queue with load shedding, and a fixed
+//! worker pool that owns connections keep-alive style.
+//!
+//! ```text
+//!   clients ──► acceptor ──► bounded queue ──► worker 0..W
+//!                  │   (capacity = high-water)     │
+//!                  └─► 429 + Retry-After when full └─► routes::handle
+//! ```
+//!
+//! **Sizing model:** a worker serves one connection at a time (blocking
+//! I/O — no epoll in `std`), so `workers` is the concurrent-connection
+//! budget and the queue absorbs bursts. Past the high-water mark the
+//! acceptor answers `429 Too Many Requests` with `Retry-After` and
+//! closes — shedding at admission costs microseconds and keeps the
+//! tail latency of admitted work flat (the alternative, unbounded
+//! queueing, melts p999 first).
+//!
+//! **Shutdown/drain:** `Service::shutdown` flips the flag, wakes the
+//! acceptor with a self-connect, closes the queue, then joins. Workers
+//! finish the request in flight, serve anything already buffered on
+//! their connection (bounded by a few poll intervals), and close with
+//! `Connection: close`; queued-but-unserved connections get the same
+//! bounded drain when popped.
+
+use std::collections::VecDeque;
+use std::io::Read;
+use std::net::{IpAddr, Ipv4Addr, Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering::SeqCst};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context as _, Result};
+
+use super::http::{self, HttpResponse};
+use super::json::Value;
+use super::metrics::{Metrics, Route};
+use super::routes::{self, ServiceState};
+
+/// Tunables for [`Service::start`].
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    /// Bind address; port 0 picks an ephemeral port.
+    pub addr: String,
+    /// Worker threads = concurrent-connection budget.
+    pub workers: usize,
+    /// Pending-connection high-water mark; beyond it, 429.
+    pub queue_capacity: usize,
+    /// `Retry-After` seconds advertised on shed responses.
+    pub retry_after_secs: u32,
+    /// Worker read-poll interval: the granularity at which idle
+    /// connections notice the shutdown flag.
+    pub poll_interval: Duration,
+    /// Close connections idle longer than this (frees the worker).
+    pub idle_timeout: Duration,
+    /// Per-syscall write timeout: a client that stops reading cannot
+    /// pin a worker (or hang the drain) past this bound per write.
+    pub write_timeout: Duration,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            addr: "127.0.0.1:0".to_string(),
+            workers: std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4)
+                .clamp(2, 16),
+            queue_capacity: 64,
+            retry_after_secs: 1,
+            poll_interval: Duration::from_millis(50),
+            idle_timeout: Duration::from_secs(60),
+            write_timeout: Duration::from_secs(10),
+        }
+    }
+}
+
+/// During drain, a connection gets this many poll intervals to finish
+/// delivering an in-flight request before the worker closes it.
+const DRAIN_POLLS: u32 = 4;
+
+struct QueueInner {
+    deque: VecDeque<TcpStream>,
+    closed: bool,
+}
+
+/// Bounded MPMC connection queue: non-blocking producer (the acceptor
+/// sheds instead of waiting), condvar-blocking consumers (workers).
+struct ConnQueue {
+    inner: Mutex<QueueInner>,
+    ready: Condvar,
+    capacity: usize,
+}
+
+impl ConnQueue {
+    fn new(capacity: usize) -> Self {
+        ConnQueue {
+            inner: Mutex::new(QueueInner { deque: VecDeque::new(), closed: false }),
+            ready: Condvar::new(),
+            capacity: capacity.max(1),
+        }
+    }
+
+    /// Hand back the stream when the queue is at the high-water mark
+    /// (or closed) so the caller can shed it.
+    fn try_push(&self, s: TcpStream, metrics: &Metrics) -> std::result::Result<(), TcpStream> {
+        let mut g = self.inner.lock().expect("queue poisoned");
+        if g.closed || g.deque.len() >= self.capacity {
+            return Err(s);
+        }
+        g.deque.push_back(s);
+        metrics.queue_depth.store(g.deque.len(), SeqCst);
+        drop(g);
+        self.ready.notify_one();
+        Ok(())
+    }
+
+    /// Blocking pop; drains remaining items after close, then `None`.
+    fn pop(&self, metrics: &Metrics) -> Option<TcpStream> {
+        let mut g = self.inner.lock().expect("queue poisoned");
+        loop {
+            if let Some(s) = g.deque.pop_front() {
+                metrics.queue_depth.store(g.deque.len(), SeqCst);
+                return Some(s);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.ready.wait(g).expect("queue poisoned");
+        }
+    }
+
+    fn close(&self) {
+        self.inner.lock().expect("queue poisoned").closed = true;
+        self.ready.notify_all();
+    }
+}
+
+struct Shared {
+    state: ServiceState,
+    metrics: Arc<Metrics>,
+    queue: ConnQueue,
+    shutdown: AtomicBool,
+    cfg: ServiceConfig,
+}
+
+impl Shared {
+    fn is_shutdown(&self) -> bool {
+        self.shutdown.load(SeqCst)
+    }
+}
+
+/// A running server. Dropping (or calling [`Service::shutdown`]) drains
+/// and joins every thread.
+pub struct Service {
+    addr: SocketAddr,
+    shared: Arc<Shared>,
+    acceptor: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl Service {
+    /// Bind, spawn the pool and start accepting.
+    pub fn start(state: ServiceState, cfg: ServiceConfig) -> Result<Service> {
+        let listener =
+            TcpListener::bind(&cfg.addr).with_context(|| format!("binding {}", cfg.addr))?;
+        let addr = listener.local_addr().context("resolving bound address")?;
+        let metrics = Arc::new(Metrics::default());
+        metrics.queue_capacity.store(cfg.queue_capacity.max(1), SeqCst);
+        let shared = Arc::new(Shared {
+            state,
+            metrics,
+            queue: ConnQueue::new(cfg.queue_capacity),
+            shutdown: AtomicBool::new(false),
+            cfg: cfg.clone(),
+        });
+        let mut workers = Vec::with_capacity(cfg.workers.max(1));
+        for i in 0..cfg.workers.max(1) {
+            let sh = Arc::clone(&shared);
+            let handle = std::thread::Builder::new()
+                .name(format!("svc-worker-{i}"))
+                .spawn(move || worker_loop(sh))
+                .context("spawning service worker")?;
+            workers.push(handle);
+        }
+        let acceptor = {
+            let sh = Arc::clone(&shared);
+            std::thread::Builder::new()
+                .name("svc-acceptor".to_string())
+                .spawn(move || acceptor_loop(sh, listener))
+                .context("spawning service acceptor")?
+        };
+        Ok(Service { addr, shared, acceptor: Some(acceptor), workers })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Live counters (shared with the running threads).
+    pub fn metrics(&self) -> Arc<Metrics> {
+        Arc::clone(&self.shared.metrics)
+    }
+
+    /// Graceful drain: stop accepting, serve what's in flight (bounded
+    /// by a few poll intervals per connection), join every thread.
+    pub fn shutdown(mut self) {
+        self.shutdown_impl();
+    }
+
+    fn shutdown_impl(&mut self) {
+        if !self.shared.shutdown.swap(true, SeqCst) {
+            // Wake the blocking accept. Bound-to-any addresses are not
+            // connectable on every platform; aim at loopback instead.
+            let mut wake = self.addr;
+            if wake.ip().is_unspecified() {
+                wake.set_ip(IpAddr::V4(Ipv4Addr::LOCALHOST));
+            }
+            let _ = TcpStream::connect_timeout(&wake, Duration::from_millis(500));
+        }
+        if let Some(h) = self.acceptor.take() {
+            let _ = h.join();
+        }
+        // The acceptor closes the queue on exit; repeat in case it
+        // died early, so workers cannot block forever.
+        self.shared.queue.close();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Service {
+    fn drop(&mut self) {
+        self.shutdown_impl();
+    }
+}
+
+fn acceptor_loop(shared: Arc<Shared>, listener: TcpListener) {
+    for conn in listener.incoming() {
+        if shared.is_shutdown() {
+            break; // the wake connection (or a late client) is dropped
+        }
+        let stream = match conn {
+            Ok(s) => s,
+            Err(_) => continue,
+        };
+        shared.metrics.connections_total.fetch_add(1, SeqCst);
+        if let Err(rejected) = shared.queue.try_push(stream, &shared.metrics) {
+            shed(&shared, rejected);
+        }
+    }
+    shared.queue.close();
+}
+
+/// Admission-control rejection: 429 + `Retry-After`, written straight
+/// from the acceptor (microseconds — no worker time spent). The
+/// response goes out before any request is read; shedding is a
+/// connection-level decision (DESIGN.md §9).
+fn shed(shared: &Shared, mut stream: TcpStream) {
+    shared.metrics.shed_total.fetch_add(1, SeqCst);
+    let body = Value::obj(vec![
+        ("error", Value::str("server overloaded, retry later")),
+        ("queue_capacity", Value::num(shared.cfg.queue_capacity as f64)),
+    ]);
+    let resp = HttpResponse::json(429, body.render())
+        .with_header("Retry-After", shared.cfg.retry_after_secs.to_string())
+        .closing();
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_write_timeout(Some(shared.cfg.write_timeout));
+    if http::write_response(&mut stream, &resp).is_ok() {
+        // Close as cleanly as cheaply possible: scoop request bytes
+        // that already arrived so the FIN is not turned into an RST
+        // that could destroy the 429 in the peer's receive buffer.
+        // Non-blocking — shedding happens exactly when the server is
+        // overloaded, so the acceptor must not stall here (bytes that
+        // race in after this instant just risk the rare RST).
+        let _ = stream.shutdown(Shutdown::Write);
+        let _ = stream.set_nonblocking(true);
+        let mut scratch = [0u8; 1024];
+        let _ = stream.read(&mut scratch);
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    while let Some(stream) = shared.queue.pop(&shared.metrics) {
+        serve_connection(&shared, stream);
+    }
+}
+
+/// Serve one connection until close/EOF/error — HTTP/1.1 keep-alive
+/// with pipelining (every complete buffered request is served before
+/// the next read).
+fn serve_connection(shared: &Shared, mut stream: TcpStream) {
+    let _ = stream.set_nodelay(true);
+    if stream.set_read_timeout(Some(shared.cfg.poll_interval)).is_err()
+        || stream.set_write_timeout(Some(shared.cfg.write_timeout)).is_err()
+    {
+        return;
+    }
+    let mut buf: Vec<u8> = Vec::with_capacity(4096);
+    let mut chunk = [0u8; 4096];
+    let mut last_activity = Instant::now();
+    let mut shutdown_polls: u32 = 0;
+    loop {
+        // Serve everything already buffered.
+        loop {
+            match http::try_parse(&buf) {
+                Ok(Some((req, consumed))) => {
+                    buf.drain(..consumed);
+                    last_activity = Instant::now();
+                    let route = Route::of_path(&req.path);
+                    let t0 = Instant::now();
+                    let mut resp = routes::handle(&shared.state, &shared.metrics, &req);
+                    shared.metrics.record(route, resp.status, t0.elapsed());
+                    resp.close = resp.close || !req.keep_alive() || shared.is_shutdown();
+                    let close = resp.close;
+                    if http::write_response(&mut stream, &resp).is_err() || close {
+                        return;
+                    }
+                }
+                Ok(None) => break,
+                Err(e) => {
+                    let body = Value::obj(vec![("error", Value::str(e.message))]).render();
+                    shared.metrics.record(Route::Other, 400, Duration::ZERO);
+                    let _ =
+                        http::write_response(&mut stream, &HttpResponse::json(400, body).closing());
+                    return;
+                }
+            }
+        }
+        match stream.read(&mut chunk) {
+            Ok(0) => return, // client closed
+            Ok(n) => {
+                buf.extend_from_slice(&chunk[..n]);
+                last_activity = Instant::now();
+            }
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                // Poll tick: notice shutdown and idle clients.
+                if shared.is_shutdown() {
+                    shutdown_polls += 1;
+                    // Idle connections close on the first tick; one
+                    // with a partial request gets a bounded grace.
+                    if buf.is_empty() || shutdown_polls >= DRAIN_POLLS {
+                        return;
+                    }
+                } else if last_activity.elapsed() >= shared.cfg.idle_timeout {
+                    return;
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(_) => return,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dvfs::PowerModel;
+    use crate::engine::Engine;
+    use crate::model::{HwParams, KernelCounters};
+    use crate::service::client::Client;
+
+    fn test_counters() -> KernelCounters {
+        KernelCounters {
+            l2_hr: 0.1,
+            gld_trans: 6.0,
+            avr_inst: 1.5,
+            n_blocks: 128.0,
+            wpb: 8.0,
+            aw: 64.0,
+            n_sm: 16.0,
+            o_itrs: 8.0,
+            i_itrs: 0.0,
+            uses_smem: false,
+            smem_conflict: 1.0,
+            gld_body: 6.0,
+            gld_edge: 0.0,
+            mem_ops: 2.0,
+            l1_hr: 0.0,
+        }
+    }
+
+    fn test_state() -> ServiceState {
+        let hw = HwParams::paper_defaults();
+        let mut s = ServiceState::new(
+            Engine::native(hw),
+            PowerModel::gtx980(),
+            crate::microbench::standard_grid(),
+        );
+        s.register_kernel("VA", test_counters());
+        s
+    }
+
+    fn fast_cfg(workers: usize, queue_capacity: usize) -> ServiceConfig {
+        ServiceConfig {
+            workers,
+            queue_capacity,
+            poll_interval: Duration::from_millis(10),
+            ..ServiceConfig::default()
+        }
+    }
+
+    #[test]
+    fn keep_alive_round_trips_on_one_connection() {
+        let svc = Service::start(test_state(), fast_cfg(2, 8)).unwrap();
+        let mut c = Client::connect(&svc.addr()).unwrap();
+        for _ in 0..3 {
+            let r = c.get("/healthz").unwrap();
+            assert_eq!(r.status, 200);
+            assert!(r.body.contains("\"ok\""));
+        }
+        let r = c
+            .post("/v1/predict", r#"{"kernel":"VA","core_mhz":700,"mem_mhz":700}"#)
+            .unwrap();
+        assert_eq!(r.status, 200);
+        let m = svc.metrics();
+        assert_eq!(m.route(Route::Healthz).requests.load(SeqCst), 3);
+        assert_eq!(m.route(Route::Predict).requests.load(SeqCst), 1);
+        drop(c);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn concurrent_clients_each_get_correct_answers() {
+        let svc = Service::start(test_state(), fast_cfg(4, 16)).unwrap();
+        let addr = svc.addr();
+        std::thread::scope(|scope| {
+            for t in 0..4u32 {
+                scope.spawn(move || {
+                    let mut c = Client::connect(&addr).unwrap();
+                    for i in 0..10 {
+                        let cf = 400 + 100 * ((t as usize + i) % 7);
+                        let body =
+                            format!(r#"{{"kernel":"VA","core_mhz":{cf},"mem_mhz":700}}"#);
+                        let r = c.post("/v1/predict", &body).unwrap();
+                        assert_eq!(r.status, 200);
+                        let v = r.json().unwrap();
+                        assert_eq!(
+                            v.get("core_mhz").and_then(Value::as_f64),
+                            Some(cf as f64)
+                        );
+                        assert!(v.get("time_us").and_then(Value::as_f64).unwrap() > 0.0);
+                    }
+                });
+            }
+        });
+        let m = svc.metrics();
+        assert_eq!(m.route(Route::Predict).requests.load(SeqCst), 40);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn overload_sheds_with_429_and_retry_after() {
+        // One worker, tiny queue. A held-open connection pins the
+        // worker; two more fill the queue; the next is shed.
+        let svc = Service::start(test_state(), fast_cfg(1, 2)).unwrap();
+        let addr = svc.addr();
+        let mut holder = Client::connect(&addr).unwrap();
+        assert_eq!(holder.get("/healthz").unwrap().status, 200);
+        // These two sit in the queue (the worker is parked on `holder`).
+        let _queued_a = Client::connect(&addr).unwrap();
+        let _queued_b = Client::connect(&addr).unwrap();
+        // Give the acceptor a moment to enqueue both.
+        std::thread::sleep(Duration::from_millis(100));
+        let mut shed = Client::connect(&addr).unwrap();
+        shed.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        let r = shed.read_response().unwrap();
+        assert_eq!(r.status, 429);
+        assert_eq!(r.header("retry-after"), Some("1"));
+        assert!(r.body.contains("overloaded"));
+        assert!(svc.metrics().shed_total.load(SeqCst) >= 1);
+        drop(holder);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn shutdown_drains_and_joins() {
+        let svc = Service::start(test_state(), fast_cfg(2, 8)).unwrap();
+        let addr = svc.addr();
+        let mut c = Client::connect(&addr).unwrap();
+        assert_eq!(c.get("/healthz").unwrap().status, 200);
+        let t0 = Instant::now();
+        svc.shutdown(); // idle connection: closed within a poll tick
+        assert!(t0.elapsed() < Duration::from_secs(5), "drain took {:?}", t0.elapsed());
+        // The worker closed the kept-alive connection during drain
+        // (asserting on the held connection, not the port — the
+        // ephemeral port may be reassigned to a parallel test).
+        let _ = c.set_read_timeout(Some(Duration::from_secs(5)));
+        assert!(c.get("/healthz").is_err(), "connection must be closed after drain");
+    }
+
+    #[test]
+    fn malformed_requests_get_400_and_close() {
+        use std::io::Write as _;
+        let svc = Service::start(test_state(), fast_cfg(1, 4)).unwrap();
+        let mut raw = TcpStream::connect(svc.addr()).unwrap();
+        raw.write_all(b"NONSENSE\r\n\r\n").unwrap();
+        let mut out = Vec::new();
+        raw.read_to_end(&mut out).unwrap(); // server closes after 400
+        let text = String::from_utf8_lossy(&out);
+        assert!(text.starts_with("HTTP/1.1 400"), "{text}");
+        svc.shutdown();
+    }
+}

@@ -11,12 +11,26 @@ pub struct Stats {
     pub mean_ns: f64,
     pub min_ns: f64,
     pub max_ns: f64,
+    /// Median of the measured runs (nearest rank).
+    pub p50_ns: f64,
+    /// 99th percentile of the measured runs (nearest rank; equals the
+    /// max below 100 iterations).
+    pub p99_ns: f64,
 }
 
 impl Stats {
     pub fn mean_ms(&self) -> f64 {
         self.mean_ns / 1e6
     }
+}
+
+/// Nearest-rank percentile of an ascending-sorted sample vector.
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * q.clamp(0.0, 1.0)).round() as usize;
+    sorted[idx]
 }
 
 /// Measure `f` with `warmup` unmeasured runs then `iters` measured runs.
@@ -32,11 +46,15 @@ pub fn measure<F: FnMut()>(warmup: u32, iters: u32, mut f: F) -> Stats {
         samples.push(t.elapsed().as_nanos() as f64);
     }
     let sum: f64 = samples.iter().sum();
+    let mut sorted = samples.clone();
+    sorted.sort_by(f64::total_cmp);
     Stats {
         iters,
         mean_ns: sum / iters as f64,
-        min_ns: samples.iter().copied().fold(f64::INFINITY, f64::min),
-        max_ns: samples.iter().copied().fold(0.0, f64::max),
+        min_ns: sorted[0],
+        max_ns: sorted[sorted.len() - 1],
+        p50_ns: percentile(&sorted, 0.5),
+        p99_ns: percentile(&sorted, 0.99),
     }
 }
 
@@ -70,6 +88,18 @@ mod tests {
         assert_eq!(s.iters, 5);
         assert!(s.mean_ns > 0.0);
         assert!(s.min_ns <= s.mean_ns && s.mean_ns <= s.max_ns);
+        assert!(s.min_ns <= s.p50_ns && s.p50_ns <= s.p99_ns && s.p99_ns <= s.max_ns);
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let sorted: Vec<f64> = (1..=100).map(f64::from).collect();
+        assert_eq!(percentile(&sorted, 0.0), 1.0);
+        assert_eq!(percentile(&sorted, 1.0), 100.0);
+        assert_eq!(percentile(&sorted, 0.5), 51.0); // round(99*0.5)=50 -> 51.0
+        assert_eq!(percentile(&sorted, 0.99), 99.0);
+        assert_eq!(percentile(&[], 0.5), 0.0);
+        assert_eq!(percentile(&[7.0], 0.999), 7.0);
     }
 
     #[test]

@@ -126,7 +126,7 @@ fn engine_facade_serves_every_legacy_consumer_path() {
     }
 
     // Advisor through the engine: grid now cached, zero recomputes.
-    let hits_before = engine.cache_stats().unwrap().hits;
+    let hits_before = engine.cache_stats().hits;
     let power = PowerModel::gtx980();
     for k in &ks {
         let p = profiler::profile_at(&spec, k, baseline);
@@ -136,7 +136,7 @@ fn engine_facade_serves_every_legacy_consumer_path() {
         assert!(best.energy_mj > 0.0);
     }
     assert!(
-        engine.cache_stats().unwrap().hits >= hits_before + 2 * grid.len() as u64,
+        engine.cache_stats().hits >= hits_before + 2 * grid.len() as u64,
         "advisor re-queries must be cache hits"
     );
 

@@ -1,0 +1,169 @@
+//! Service smoke test (DESIGN.md §9) — the CI job step: boot the HTTP
+//! server on an ephemeral port, exercise /healthz, /v1/predict and
+//! /v1/advise with the in-crate client, force the bounded queue to shed
+//! a 429, and verify the graceful drain. No curl needed anywhere.
+
+use std::time::{Duration, Instant};
+
+use gpufreq::dvfs::PowerModel;
+use gpufreq::engine::Engine;
+use gpufreq::microbench;
+use gpufreq::model::{HwParams, KernelCounters};
+use gpufreq::service::json::Value;
+use gpufreq::service::{Client, Service, ServiceConfig, ServiceState};
+
+fn counters() -> KernelCounters {
+    KernelCounters {
+        l2_hr: 0.1,
+        gld_trans: 6.0,
+        avr_inst: 1.5,
+        n_blocks: 128.0,
+        wpb: 8.0,
+        aw: 64.0,
+        n_sm: 16.0,
+        o_itrs: 8.0,
+        i_itrs: 0.0,
+        uses_smem: false,
+        smem_conflict: 1.0,
+        gld_body: 6.0,
+        gld_edge: 0.0,
+        mem_ops: 2.0,
+        l1_hr: 0.0,
+    }
+}
+
+fn state() -> ServiceState {
+    let hw = HwParams::paper_defaults();
+    let mut s = ServiceState::new(
+        Engine::native(hw),
+        PowerModel::gtx980(),
+        microbench::standard_grid(),
+    );
+    s.register_kernel("VA", counters());
+    s
+}
+
+fn cfg(workers: usize, queue_capacity: usize) -> ServiceConfig {
+    ServiceConfig {
+        workers,
+        queue_capacity,
+        poll_interval: Duration::from_millis(10),
+        ..ServiceConfig::default()
+    }
+}
+
+#[test]
+fn healthz_predict_advise_and_metrics_round_trip() {
+    let svc = Service::start(state(), cfg(2, 16)).expect("service starts on an ephemeral port");
+    let mut c = Client::connect(&svc.addr()).unwrap();
+    c.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+
+    // GET /healthz
+    let r = c.get("/healthz").unwrap();
+    assert_eq!(r.status, 200);
+    let v = r.json().unwrap();
+    assert_eq!(v.get("status").and_then(Value::as_str), Some("ok"));
+    assert_eq!(v.get("kernels").and_then(Value::as_f64), Some(1.0));
+
+    // POST /v1/predict matches the engine exactly.
+    let r = c
+        .post("/v1/predict", r#"{"kernel":"VA","core_mhz":800,"mem_mhz":600}"#)
+        .unwrap();
+    assert_eq!(r.status, 200, "{}", r.body);
+    let v = r.json().unwrap();
+    let want = Engine::native(HwParams::paper_defaults())
+        .predict_one(&counters(), 800.0, 600.0)
+        .unwrap();
+    assert_eq!(
+        v.get("time_us").and_then(Value::as_f64).unwrap().to_bits(),
+        want.time_us.to_bits(),
+        "served prediction must be bit-identical to the engine"
+    );
+
+    // POST /v1/advise returns a feasible best on the default grid.
+    let r = c
+        .post("/v1/advise", r#"{"kernel":"VA","objective":"energy","deadline_us":1e9}"#)
+        .unwrap();
+    assert_eq!(r.status, 200, "{}", r.body);
+    let v = r.json().unwrap();
+    assert_eq!(v.get("feasible").and_then(Value::as_bool), Some(true));
+    let best = v.get("best").expect("best config present");
+    for key in ["core_mhz", "mem_mhz", "time_us", "power_w", "energy_mj"] {
+        assert!(best.get(key).and_then(Value::as_f64).unwrap() > 0.0, "{key}");
+    }
+
+    // GET /metrics reflects the traffic just sent.
+    let r = c.get("/metrics").unwrap();
+    assert_eq!(r.status, 200);
+    for needle in [
+        "service_requests_total{route=\"/v1/predict\"} 1",
+        "service_requests_total{route=\"/v1/advise\"} 1",
+        "service_cache_hits",
+        "service_queue_depth",
+    ] {
+        assert!(r.body.contains(needle), "missing `{needle}` in:\n{}", r.body);
+    }
+
+    drop(c);
+    svc.shutdown();
+}
+
+#[test]
+fn forced_backlog_sheds_429_with_retry_after() {
+    // One worker + a 2-deep queue. The worker is pinned by a held-open
+    // keep-alive connection; two idle connections fill the queue; the
+    // next connection must be shed at admission with 429.
+    let svc = Service::start(state(), cfg(1, 2)).unwrap();
+    let addr = svc.addr();
+
+    let mut holder = Client::connect(&addr).unwrap();
+    holder.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    assert_eq!(holder.get("/healthz").unwrap().status, 200);
+
+    let _queued_a = Client::connect(&addr).unwrap();
+    let _queued_b = Client::connect(&addr).unwrap();
+    // Let the acceptor enqueue both before probing the high-water mark.
+    std::thread::sleep(Duration::from_millis(150));
+
+    let mut probe = Client::connect(&addr).unwrap();
+    probe.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    // Admission control answers without a request being sent.
+    let r = probe.read_response().expect("shed response");
+    assert_eq!(r.status, 429);
+    assert_eq!(r.header("retry-after"), Some("1"));
+    assert!(r.body.contains("overloaded"), "{}", r.body);
+
+    let m = svc.metrics();
+    assert!(m.shed_total.load(std::sync::atomic::Ordering::SeqCst) >= 1);
+
+    // The pinned worker still serves its connection fine.
+    assert_eq!(holder.get("/healthz").unwrap().status, 200);
+
+    drop(holder);
+    svc.shutdown();
+}
+
+#[test]
+fn shutdown_drains_within_bounds_and_closes_connections() {
+    let svc = Service::start(state(), cfg(2, 8)).unwrap();
+    let addr = svc.addr();
+    let mut c = Client::connect(&addr).unwrap();
+    c.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    assert_eq!(c.get("/healthz").unwrap().status, 200);
+    let t0 = Instant::now();
+    svc.shutdown(); // joins the acceptor and every worker
+    assert!(
+        t0.elapsed() < Duration::from_secs(5),
+        "drain must finish promptly, took {:?}",
+        t0.elapsed()
+    );
+    // The worker closed our keep-alive connection during the drain, so
+    // the next request observes EOF (or a reset) instead of an answer.
+    // (Asserting on the held connection, not on re-connecting to the
+    // port — the ephemeral port may be reassigned to a parallel test.)
+    c.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    assert!(
+        c.get("/healthz").is_err(),
+        "connection must be closed after drain"
+    );
+}
