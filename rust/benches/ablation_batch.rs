@@ -4,7 +4,7 @@
 
 use std::time::Duration;
 
-use gpufreq::coordinator::batcher::BatchServer;
+use gpufreq::engine::BatchServer;
 use gpufreq::model::{self, HwParams, KernelCounters};
 use gpufreq::runtime::Runtime;
 use gpufreq::util::bench;

@@ -1,11 +1,19 @@
 //! Closed-loop load harness for the HTTP prediction service
 //! (DESIGN.md §9, experiment E3): N keep-alive connections drive an
 //! in-process server as fast as responses return, reporting throughput
-//! and exact client-side p50/p99/p999 latency, then a saturation phase
-//! verifies 429 shedding and the graceful drain. Results also land in
-//! `BENCH_service_load.json` at the repo root so the perf trajectory
-//! is tracked across PRs.
+//! and exact client-side p50/p99/p999 latency — first over the `/v1`
+//! shim, then over the handle-based `/v2/predict` batch route — then a
+//! saturation phase verifies 429 shedding and the graceful drain.
+//!
+//! **Perf gate:** the typed v2 path must not cost more than 1.25× the
+//! v1 baseline at p99 (plus a small absolute guard for scheduler
+//! noise on microsecond-scale percentiles) — handle resolution and the
+//! batch envelope are supposed to be bookkeeping, not work. Both
+//! percentile sets land in `BENCH_service_load.json` at the repo root
+//! (`latency_us` is the recorded v1 baseline, `v2_latency_us` the
+//! handle path) so the trajectory is tracked across PRs.
 
+use std::net::SocketAddr;
 use std::time::{Duration, Instant};
 
 use gpufreq::dvfs::PowerModel;
@@ -16,10 +24,15 @@ use gpufreq::service::json::Value;
 use gpufreq::service::{Client, Service, ServiceConfig, ServiceState};
 use gpufreq::util::bench::{percentile, section};
 
-/// Total requests over the measured phase (acceptance: ≥ 50k).
+/// Total requests over each measured phase (acceptance: ≥ 50k).
 const TOTAL_REQUESTS: usize = 60_000;
 /// Concurrent closed-loop connections (acceptance: ≥ 8).
 const CONNECTIONS: usize = 8;
+/// p99(v2) must stay within this factor of p99(v1)…
+const P99_RATIO_LIMIT: f64 = 1.25;
+/// …plus this absolute slack (µs): microsecond-scale percentiles from
+/// two sequential phases can differ by a scheduler hiccup alone.
+const P99_SLACK_US: f64 = 100.0;
 
 fn counters() -> KernelCounters {
     KernelCounters {
@@ -52,9 +65,99 @@ fn state() -> ServiceState {
     s
 }
 
+struct Phase {
+    latencies_ns: Vec<f64>,
+    elapsed: Duration,
+}
+
+/// Drive `TOTAL_REQUESTS` closed-loop requests over `CONNECTIONS`
+/// keep-alive connections; `body` maps (thread, iteration) to the
+/// request body for `path`.
+fn run_phase(
+    addr: &SocketAddr,
+    path: &'static str,
+    body: impl Fn(usize, usize) -> String + Copy + Send,
+) -> Phase {
+    let per_thread = TOTAL_REQUESTS.div_ceil(CONNECTIONS);
+    let t0 = Instant::now();
+    let mut latencies_ns: Vec<f64> = Vec::with_capacity(per_thread * CONNECTIONS);
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for t in 0..CONNECTIONS {
+            let addr = *addr;
+            handles.push(scope.spawn(move || {
+                let mut c = Client::connect(&addr).expect("client connect");
+                let mut local = Vec::with_capacity(per_thread);
+                for i in 0..per_thread {
+                    let b = body(t, i);
+                    let s = Instant::now();
+                    let r = c.post(path, &b).expect("request");
+                    local.push(s.elapsed().as_nanos() as f64);
+                    assert_eq!(r.status, 200, "{}", r.body);
+                }
+                local
+            }));
+        }
+        for h in handles {
+            latencies_ns.extend(h.join().expect("load thread"));
+        }
+    });
+    Phase { latencies_ns, elapsed: t0.elapsed() }
+}
+
+struct Summary {
+    n: usize,
+    elapsed_s: f64,
+    throughput: f64,
+    mean_us: f64,
+    p50_us: f64,
+    p99_us: f64,
+    p999_us: f64,
+}
+
+fn summarize(label: &str, mut phase: Phase) -> Summary {
+    let n = phase.latencies_ns.len();
+    assert!(n >= 50_000, "must sustain >= 50k requests, did {n}");
+    phase.latencies_ns.sort_by(f64::total_cmp);
+    let throughput = n as f64 / phase.elapsed.as_secs_f64();
+    let s = Summary {
+        n,
+        elapsed_s: phase.elapsed.as_secs_f64(),
+        throughput,
+        mean_us: phase.latencies_ns.iter().sum::<f64>() / n as f64 / 1e3,
+        p50_us: percentile(&phase.latencies_ns, 0.5) / 1e3,
+        p99_us: percentile(&phase.latencies_ns, 0.99) / 1e3,
+        p999_us: percentile(&phase.latencies_ns, 0.999) / 1e3,
+    };
+    println!(
+        "{label}: {n} requests in {:.2} s  ->  {throughput:.0} req/s over {CONNECTIONS} connections",
+        phase.elapsed.as_secs_f64()
+    );
+    println!(
+        "{label}: latency  mean {:.1} us   p50 {:.1} us   p99 {:.1} us   p999 {:.1} us",
+        s.mean_us, s.p50_us, s.p99_us, s.p999_us
+    );
+    s
+}
+
+fn latency_json(s: &Summary) -> Value {
+    Value::obj(vec![
+        ("mean", Value::num(s.mean_us)),
+        ("p50", Value::num(s.p50_us)),
+        ("p99", Value::num(s.p99_us)),
+        ("p999", Value::num(s.p999_us)),
+    ])
+}
+
+/// Frequencies cycle over the whole cached grid, staggered per
+/// connection — identical traffic shape for both protocol phases.
+fn freqs(t: usize, i: usize) -> (usize, usize) {
+    (400 + 100 * ((t + i) % 7), 400 + 100 * ((t + i / 7) % 7))
+}
+
 fn main() {
     section(&format!(
-        "Service load: {TOTAL_REQUESTS} requests over {CONNECTIONS} closed-loop connections"
+        "Service load: {TOTAL_REQUESTS} requests x 2 protocol phases over {CONNECTIONS} closed-loop connections"
     ));
     let svc = Service::start(
         state(),
@@ -67,60 +170,58 @@ fn main() {
     .expect("service starts");
     let addr = svc.addr();
 
-    // Warm the engine cache outside the timer (one grid pass).
+    // Warm the engine cache outside the timer (one grid pass), and
+    // pin down the v2 handles: the boot GPU is dev-1, "VA" is krn-1.
     {
         let mut c = Client::connect(&addr).expect("warmup connect");
         let r = c.post("/v1/grid", r#"{"kernel":"VA"}"#).expect("warmup grid");
         assert_eq!(r.status, 200, "warmup failed: {}", r.body);
+        let r = c
+            .post(
+                "/v2/predict",
+                r#"{"requests":[{"device":"dev-1","kernel":"krn-1","core_mhz":700,"mem_mhz":700}]}"#,
+            )
+            .expect("warmup v2");
+        assert_eq!(r.status, 200, "v2 warmup failed: {}", r.body);
     }
 
-    let per_thread = TOTAL_REQUESTS.div_ceil(CONNECTIONS);
-    let t0 = Instant::now();
-    let mut latencies_ns: Vec<f64> = Vec::with_capacity(per_thread * CONNECTIONS);
-    std::thread::scope(|scope| {
-        let mut handles = Vec::new();
-        for t in 0..CONNECTIONS {
-            handles.push(scope.spawn(move || {
-                let mut c = Client::connect(&addr).expect("client connect");
-                let mut local = Vec::with_capacity(per_thread);
-                // Cycle frequencies so requests exercise the whole
-                // cached grid, staggered per connection.
-                for i in 0..per_thread {
-                    let cf = 400 + 100 * ((t + i) % 7);
-                    let mf = 400 + 100 * ((t + i / 7) % 7);
-                    let body =
-                        format!(r#"{{"kernel":"VA","core_mhz":{cf},"mem_mhz":{mf}}}"#);
-                    let s = Instant::now();
-                    let r = c.post("/v1/predict", &body).expect("predict");
-                    local.push(s.elapsed().as_nanos() as f64);
-                    assert_eq!(r.status, 200, "{}", r.body);
-                }
-                local
-            }));
-        }
-        for h in handles {
-            latencies_ns.extend(h.join().expect("load thread"));
-        }
-    });
-    let elapsed = t0.elapsed();
+    // Phase 1: the /v1 shim (the recorded baseline).
+    let v1 = summarize(
+        "v1/predict",
+        run_phase(&addr, "/v1/predict", |t, i| {
+            let (cf, mf) = freqs(t, i);
+            format!(r#"{{"kernel":"VA","core_mhz":{cf},"mem_mhz":{mf}}}"#)
+        }),
+    );
 
-    let n = latencies_ns.len();
-    assert!(n >= 50_000, "must sustain >= 50k requests, did {n}");
-    latencies_ns.sort_by(f64::total_cmp);
-    let throughput = n as f64 / elapsed.as_secs_f64();
-    let p50_us = percentile(&latencies_ns, 0.5) / 1e3;
-    let p99_us = percentile(&latencies_ns, 0.99) / 1e3;
-    let p999_us = percentile(&latencies_ns, 0.999) / 1e3;
-    let mean_us = latencies_ns.iter().sum::<f64>() / n as f64 / 1e3;
-    println!(
-        "served {n} requests in {:.2} s  ->  {throughput:.0} req/s over {CONNECTIONS} connections",
-        elapsed.as_secs_f64()
+    // Phase 2: the typed /v2 handle path, same traffic shape.
+    let v2 = summarize(
+        "v2/predict",
+        run_phase(&addr, "/v2/predict", |t, i| {
+            let (cf, mf) = freqs(t, i);
+            format!(
+                r#"{{"requests":[{{"device":"dev-1","kernel":"krn-1","core_mhz":{cf},"mem_mhz":{mf}}}]}}"#
+            )
+        }),
     );
+
+    let p99_ratio = v2.p99_us / v1.p99_us;
     println!(
-        "latency  mean {mean_us:.1} us   p50 {p50_us:.1} us   p99 {p99_us:.1} us   p999 {p999_us:.1} us"
+        "v2/v1 p99 ratio: {p99_ratio:.3} (limit {P99_RATIO_LIMIT} + {P99_SLACK_US} us slack)"
     );
+    assert!(
+        v2.p99_us <= P99_RATIO_LIMIT * v1.p99_us + P99_SLACK_US,
+        "v2 handle path p99 {:.1} us exceeds {P99_RATIO_LIMIT}x the v1 baseline {:.1} us",
+        v2.p99_us,
+        v1.p99_us
+    );
+
     let served = svc.metrics().requests_total();
-    assert!(served >= n as u64, "server-side count {served} < client-side {n}");
+    assert!(
+        served >= (v1.n + v2.n) as u64,
+        "server-side count {served} < client-side {}",
+        v1.n + v2.n
+    );
 
     // Graceful drain of the loaded server.
     let drain_t0 = Instant::now();
@@ -171,22 +272,21 @@ fn main() {
         drain2_t0.elapsed().as_secs_f64() * 1e3
     );
 
-    // Machine-readable results at the repo root.
+    // Machine-readable results at the repo root. `latency_us` stays
+    // the v1 baseline (schema-compatible with earlier PRs);
+    // `v2_latency_us` and the gate ratio ride alongside.
     let out = Value::obj(vec![
         ("bench", Value::str("service_load")),
-        ("requests", Value::num(n as f64)),
+        ("requests", Value::num(v1.n as f64)),
         ("connections", Value::num(CONNECTIONS as f64)),
-        ("elapsed_s", Value::num(elapsed.as_secs_f64())),
-        ("throughput_rps", Value::num(throughput)),
-        (
-            "latency_us",
-            Value::obj(vec![
-                ("mean", Value::num(mean_us)),
-                ("p50", Value::num(p50_us)),
-                ("p99", Value::num(p99_us)),
-                ("p999", Value::num(p999_us)),
-            ]),
-        ),
+        ("elapsed_s", Value::num(v1.elapsed_s)),
+        ("throughput_rps", Value::num(v1.throughput)),
+        ("latency_us", latency_json(&v1)),
+        ("v2_requests", Value::num(v2.n as f64)),
+        ("v2_throughput_rps", Value::num(v2.throughput)),
+        ("v2_latency_us", latency_json(&v2)),
+        ("v2_p99_over_v1_p99", Value::num(p99_ratio)),
+        ("p99_ratio_limit", Value::num(P99_RATIO_LIMIT)),
         ("shed_429", Value::num(shed_429 as f64)),
         ("drain_ms", Value::num(drain.as_secs_f64() * 1e3)),
     ]);

@@ -8,6 +8,7 @@
 //! and the shared grid cache comes for free.
 
 use std::path::PathBuf;
+use std::sync::Arc;
 use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
@@ -16,12 +17,13 @@ use crate::baselines::standard_baselines;
 use crate::config::{self, Config};
 use crate::coordinator::sweep::run_sweep;
 use crate::coordinator::validate::{validate_with_engine, SamplePoint, Validation};
-use crate::dvfs::{advise_with_engine, Objective, PowerModel};
+use crate::dvfs::{advise_with_handles, Objective};
 use crate::engine::{BatchServer, Engine, StreamJob};
 use crate::kernels;
 use crate::microbench;
 use crate::model::{HwParams, KernelCounters};
 use crate::profiler;
+use crate::registry::{DeviceRegistry, KernelCatalog};
 use crate::report::tables;
 use crate::service::{Service, ServiceConfig, ServiceState};
 use crate::sim::isa::Kernel;
@@ -36,14 +38,25 @@ COMMANDS:
   list-kernels            List the Table VI workloads
   microbench              Run the §IV probes: Eq. (4) fit, dm_del, latencies
   profile <KERNEL>        One-shot baseline profile of a kernel (or 'all')
+  devices                 Register every configs/*.toml GPU (or just
+                          --config) into a device registry — §IV probes
+                          measure each device's parameters — and list
+                          the dev-<n> handles (DESIGN.md §10)
+  kernels                 Profile the workloads once at the baseline and
+                          list the kernel catalog's krn-<n> handles
   sweep                   Simulate kernels over the frequency grid (ground truth)
   validate                Full Fig. 13/14 validation: simulate + predict + MAPE
   report <ARTIFACT>       Regenerate a paper artifact: table1 table2 table3
                           table6 fig2 fig5 fig12 fig13 fig14 ablation
-  advise <KERNEL>         DVFS energy advisor (paper §VII application)
+  advise <KERNEL>         DVFS energy advisor (paper §VII application),
+                          resolved through the device registry
   serve                   Run the standing HTTP prediction service:
-                          POST /v1/predict · /v1/grid · /v1/advise,
-                          GET /healthz · /metrics (DESIGN.md §9).
+                          v2 (handle protocol): POST /v2/devices ·
+                          GET /v2/devices · POST /v2/kernels ·
+                          GET /v2/kernels · POST /v2/predict (batch) ·
+                          POST /v2/advise; v1 (compat shim):
+                          POST /v1/predict · /v1/grid · /v1/advise;
+                          GET /healthz · /metrics (DESIGN.md §9–§10).
                           Runs until stdin closes (EOF drains gracefully)
   stream-demo             Demo the streaming prediction path (PJRT backend)
   help                    Show this message
@@ -301,6 +314,85 @@ pub fn run(args: Args) -> Result<i32> {
             }
             print_table(&t, args.csv);
         }
+        "devices" => {
+            // One registry, one row per config: each GPU's parameters
+            // are measured by the §IV probes against its own spec.
+            let registry = DeviceRegistry::new();
+            let paths: Vec<PathBuf> = match &args.config {
+                Some(p) => vec![p.clone()],
+                None => {
+                    let mut found: Vec<PathBuf> = std::fs::read_dir("configs")
+                        .map(|rd| {
+                            rd.filter_map(|e| e.ok().map(|e| e.path()))
+                                .filter(|p| p.extension().is_some_and(|x| x == "toml"))
+                                .collect()
+                        })
+                        .unwrap_or_default();
+                    found.sort();
+                    found
+                }
+            };
+            if paths.is_empty() {
+                bail!(
+                    "no device configs found (run from rust/ with a configs/ dir, \
+                     or pass --config)"
+                );
+            }
+            let mut t = crate::report::Table::new(
+                "Device registry (parameters measured per config, §IV)",
+                &[
+                    "handle", "name", "dm_lat_a", "dm_lat_b", "dm_del", "l2_lat", "sh_lat",
+                    "inst", "P@1000/1000 W",
+                ],
+            );
+            for path in &paths {
+                let id = registry
+                    .register_from_config(path)
+                    .with_context(|| format!("registering {}", path.display()))?;
+                let r = registry.get(id).expect("just registered");
+                t.row(vec![
+                    id.to_string(),
+                    r.name.clone(),
+                    format!("{:.2}", r.hw.dm_lat_a),
+                    format!("{:.2}", r.hw.dm_lat_b),
+                    format!("{:.2}", r.hw.dm_del),
+                    format!("{:.1}", r.hw.l2_lat),
+                    format!("{:.1}", r.hw.sh_lat),
+                    format!("{:.2}", r.hw.inst_cycle),
+                    format!("{:.1}", r.power.power_w(1000.0, 1000.0)),
+                ]);
+            }
+            print_table(&t, args.csv);
+        }
+        "kernels" => {
+            // Profile once at the baseline (the paper's one-shot
+            // counter pass) and show the catalog handles the v2 API
+            // addresses kernels by.
+            let catalog = KernelCatalog::new();
+            let ks = selected_kernels(&args, &cfg)?;
+            let mut t = crate::report::Table::new(
+                &format!(
+                    "Kernel catalog (profiled @ {:.0}/{:.0} MHz)",
+                    baseline.core_mhz, baseline.mem_mhz
+                ),
+                &["handle", "name", "time_us", "l2_hr", "gld", "avr_inst", "#Aw", "smem"],
+            );
+            for k in &ks {
+                let p = profiler::profile_at(&spec, k, baseline);
+                let id = catalog.register(&k.name, p.counters);
+                t.row(vec![
+                    id.to_string(),
+                    k.name.clone(),
+                    format!("{:.1}", p.baseline_time_us),
+                    format!("{:.3}", p.counters.l2_hr),
+                    format!("{:.1}", p.counters.gld_trans),
+                    format!("{:.2}", p.counters.avr_inst),
+                    format!("{:.0}", p.counters.aw),
+                    format!("{}", p.counters.uses_smem),
+                ]);
+            }
+            print_table(&t, args.csv);
+        }
         "sweep" => {
             let ks = selected_kernels(&args, &cfg)?;
             let sweep = run_sweep(&spec, &ks, &pairs, args.workers);
@@ -346,12 +438,24 @@ pub fn run(args: Args) -> Result<i32> {
                 ),
                 other => bail!("unknown objective {other}"),
             };
-            let engine = build_engine(&args, ex.hw)?;
-            let power = PowerModel::gtx980();
-            let (best, points) =
-                advise_with_engine(&p.counters, &engine, &power, &pairs, objective)?;
+            // Resolve through the registry (DESIGN.md §10): the device
+            // owns its measured parameters and `[power]` model, the
+            // catalog owns the baseline profile, and the advisor works
+            // on handles — the same path `POST /v2/advise` takes.
+            let registry = Arc::new(DeviceRegistry::new());
+            let device_name = cfg.device_name.clone().unwrap_or_else(|| "default".to_string());
+            let device = registry
+                .try_register(&device_name, ex.hw, cfg.power.clone(), usize::MAX)
+                .map_err(|e| anyhow::anyhow!("registering `{device_name}`: {e}"))?;
+            let catalog = Arc::new(KernelCatalog::new());
+            let kernel = catalog.register(name, p.counters);
+            let engine = build_engine(&args, ex.hw)?.with_handles(registry, catalog, device)?;
+            let (best, points) = advise_with_handles(&engine, device, kernel, &pairs, objective)?;
+            let title = format!(
+                "DVFS advisor for {name} [{device}/{kernel} on {device_name}] ({objective:?})"
+            );
             let mut t = crate::report::Table::new(
-                &format!("DVFS advisor for {name} ({:?})", objective),
+                &title,
                 &["core MHz", "mem MHz", "time_us", "power W", "energy mJ", "EDP"],
             );
             for cp in &points {
@@ -470,7 +574,7 @@ fn run_serve(args: &Args, cfg: &Config) -> Result<()> {
             });
         }
     });
-    let mut state = ServiceState::new(engine, PowerModel::gtx980(), pairs);
+    let mut state = ServiceState::new(engine, cfg.power.clone(), pairs);
     for (k, c) in ks.iter().zip(counters) {
         state.register_kernel(&k.name, c.expect("profiled"));
     }
@@ -484,7 +588,8 @@ fn run_serve(args: &Args, cfg: &Config) -> Result<()> {
         },
     )?;
     println!("gpufreq service listening on http://{}", service.addr());
-    println!("  routes : GET /healthz · GET /metrics · POST /v1/predict · POST /v1/grid · POST /v1/advise");
+    println!("  v2     : POST+GET /v2/devices · POST+GET /v2/kernels · POST /v2/predict (batch) · POST /v2/advise");
+    println!("  v1+ops : POST /v1/predict · POST /v1/grid · POST /v1/advise · GET /healthz · GET /metrics");
     println!(
         "  config : {} kernels · backend {} · {} workers · queue high-water {}",
         ks.len(),
@@ -646,6 +751,17 @@ mod tests {
         // Disabled cache still reports (zeroed) stats — /metrics keeps
         // its cache series under --no-cache.
         assert_eq!(uncached.cache_stats().hits, 0);
+    }
+
+    #[test]
+    fn usage_documents_the_handle_commands_and_v2_routes() {
+        let needles = [
+            "devices", "kernels", "dev-<n>", "krn-<n>", "/v2/predict", "/v2/devices",
+            "/v1/predict",
+        ];
+        for needle in needles {
+            assert!(USAGE.contains(needle), "USAGE is missing `{needle}`");
+        }
     }
 
     #[test]

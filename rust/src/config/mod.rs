@@ -1,10 +1,16 @@
-//! Config system: typed loading of GPU specs (the paper's Table V) and
-//! sweep/baseline settings from TOML-subset files in `configs/`.
+//! Config system: typed loading of GPU specs (the paper's Table V),
+//! sweep/baseline settings, and per-device DVFS power models from
+//! TOML-subset files in `configs/`. A config file is the on-disk form
+//! of one `registry::DeviceRecord`: `[gpu]` feeds the §IV
+//! micro-benchmarks that *measure* `HwParams`, `[power]` carries the
+//! Eq. (1) coefficients and V/f curves, and `[device] name` labels the
+//! record (file stem when absent).
 
 pub mod toml;
 
 use std::path::Path;
 
+use crate::dvfs::{PowerModel, VfCurve};
 use crate::sim::{Clocks, GpuSpec};
 use toml::Document;
 
@@ -70,6 +76,11 @@ pub struct Config {
     pub sweep: SweepConfig,
     /// Kernel names to run (empty = all).
     pub kernels: Vec<String>,
+    /// Device label for the registry (`[device] name`); `None` falls
+    /// back to the config file stem.
+    pub device_name: Option<String>,
+    /// DVFS power model (`[power]` section; GTX 980 defaults).
+    pub power: PowerModel,
 }
 
 /// Build a `GpuSpec` from a parsed document's `[gpu]` section, using
@@ -108,6 +119,51 @@ pub fn gpu_from_doc(doc: &Document) -> GpuSpec {
     }
 }
 
+/// Parse a V/f curve string of the form `"400:0.85, 600:0.95"`
+/// ((MHz, volts) points, comma-separated); validity (non-empty,
+/// positive finite, strictly ascending) is enforced by the shared
+/// [`VfCurve::try_from_points`] constructor.
+fn vf_curve_from_str(text: &str, key: &str) -> Result<VfCurve, toml::ParseError> {
+    let bad = |message: String| toml::ParseError { line: 0, message };
+    let mut points = Vec::new();
+    for part in text.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let (f, v) = part
+            .split_once(':')
+            .ok_or_else(|| bad(format!("{key}: expected `mhz:volts`, got `{part}`")))?;
+        let f: f64 = f
+            .trim()
+            .parse()
+            .map_err(|_| bad(format!("{key}: bad frequency `{f}`")))?;
+        let v: f64 = v.trim().parse().map_err(|_| bad(format!("{key}: bad voltage `{v}`")))?;
+        points.push((f, v));
+    }
+    VfCurve::try_from_points(points).map_err(|m| bad(format!("{key}: {m}")))
+}
+
+/// Build a `PowerModel` from a document's `[power]` section, with the
+/// GTX 980 calibration for anything unspecified. V/f curves are
+/// strings of `mhz:volts` points: `core_vf = "400:0.85, 1000:1.2125"`.
+pub fn power_from_doc(doc: &Document) -> Result<PowerModel, toml::ParseError> {
+    let d = PowerModel::gtx980();
+    let curve = |key: &str, default: VfCurve| -> Result<VfCurve, toml::ParseError> {
+        match doc.get(key).and_then(|v| v.as_str()) {
+            Some(text) => vf_curve_from_str(text, key),
+            None => Ok(default),
+        }
+    };
+    Ok(PowerModel {
+        core_curve: curve("power.core_vf", d.core_curve)?,
+        mem_curve: curve("power.mem_vf", d.mem_curve)?,
+        core_coeff: doc.f64_or("power.core_coeff", d.core_coeff),
+        mem_coeff: doc.f64_or("power.mem_coeff", d.mem_coeff),
+        static_w: doc.f64_or("power.static_w", d.static_w),
+    })
+}
+
 /// Build a `SweepConfig` from a document's `[sweep]` section.
 pub fn sweep_from_doc(doc: &Document) -> SweepConfig {
     let d = SweepConfig::default();
@@ -130,7 +186,15 @@ pub fn from_text(text: &str) -> Result<Config, toml::ParseError> {
         .and_then(|v| v.as_str().map(|s| s.to_string()))
         .map(|s| s.split(',').map(|k| k.trim().to_string()).filter(|k| !k.is_empty()).collect())
         .unwrap_or_default();
-    Ok(Config { gpu: gpu_from_doc(&doc), sweep: sweep_from_doc(&doc), kernels })
+    let device_name =
+        doc.get("device.name").and_then(|v| v.as_str()).map(|s| s.to_string());
+    Ok(Config {
+        gpu: gpu_from_doc(&doc),
+        sweep: sweep_from_doc(&doc),
+        kernels,
+        device_name,
+        power: power_from_doc(&doc)?,
+    })
 }
 
 /// Load a configuration file.
@@ -188,6 +252,48 @@ names = "VA, MMS"
     #[test]
     fn bad_config_is_an_error() {
         assert!(from_text("gpu = [broken").is_err());
+    }
+
+    #[test]
+    fn device_and_power_sections_parse() {
+        let c = from_text(
+            r#"
+[device]
+name = "lab-rig"
+[power]
+core_coeff = 0.05
+static_w = 30.0
+core_vf = "400:0.9, 800:1.1"
+"#,
+        )
+        .unwrap();
+        assert_eq!(c.device_name.as_deref(), Some("lab-rig"));
+        assert_eq!(c.power.core_coeff, 0.05);
+        assert_eq!(c.power.static_w, 30.0);
+        // Unspecified power fields keep the GTX 980 calibration.
+        assert_eq!(c.power.mem_coeff, PowerModel::gtx980().mem_coeff);
+        assert_eq!(c.power.core_curve.points, vec![(400.0, 0.9), (800.0, 1.1)]);
+        assert_eq!(c.power.mem_curve.points, PowerModel::gtx980().mem_curve.points);
+        // Defaults when both sections are absent.
+        let d = from_text("").unwrap();
+        assert_eq!(d.device_name, None);
+        assert_eq!(d.power.core_coeff, PowerModel::gtx980().core_coeff);
+    }
+
+    #[test]
+    fn malformed_vf_curves_are_errors() {
+        for bad in [
+            r#"[power]
+core_vf = "nonsense""#,
+            r#"[power]
+core_vf = "400:0.9, 300:1.0""#,
+            r#"[power]
+mem_vf = "400:-1""#,
+            r#"[power]
+mem_vf = "  ""#,
+        ] {
+            assert!(from_text(bad).is_err(), "should reject {bad}");
+        }
     }
 
     #[test]

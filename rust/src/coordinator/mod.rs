@@ -1,12 +1,10 @@
 //! L3 coordination: sweep orchestration and model validation. The
-//! request-batching service that used to live here moved into the
-//! unified prediction engine (`engine::pjrt`); `batcher` remains as a
-//! compatibility re-export.
+//! request-batching service that used to live here (`batcher`) moved
+//! into the unified prediction engine — use `engine::pjrt::BatchServer`
+//! (re-exported as `engine::BatchServer`).
 
-pub mod batcher;
 pub mod sweep;
 pub mod validate;
 
-pub use batcher::{BatchPrediction, BatchServer};
 pub use sweep::{predicted_sweep, run_sweep, Sweep, SweepPoint};
 pub use validate::{validate_with, validate_with_engine, Validation};

@@ -20,6 +20,27 @@ pub struct VfCurve {
 }
 
 impl VfCurve {
+    /// Validated constructor — the single invariant gate for every
+    /// construction path (TOML `[power]` sections, the `/v2` wire):
+    /// at least one point, positive finite values, strictly ascending
+    /// frequencies.
+    pub fn try_from_points(points: Vec<(f64, f64)>) -> Result<VfCurve, String> {
+        if points.is_empty() {
+            return Err("curve needs at least one (mhz, volts) point".to_string());
+        }
+        let mut prev = f64::NEG_INFINITY;
+        for &(f, v) in &points {
+            if !(f.is_finite() && v.is_finite() && f > 0.0 && v > 0.0) {
+                return Err(format!("point {f}:{v} must be positive and finite"));
+            }
+            if f <= prev {
+                return Err(format!("frequencies must be strictly ascending at {f}"));
+            }
+            prev = f;
+        }
+        Ok(VfCurve { points })
+    }
+
     /// A Maxwell-like curve: 0.85 V at 400 MHz up to 1.2125 V at
     /// 1000 MHz (matching published GTX 980 V/f steps in shape).
     pub fn maxwell_core() -> Self {
@@ -60,6 +81,14 @@ pub struct PowerModel {
     pub mem_coeff: f64,
     /// Static/leakage power, W.
     pub static_w: f64,
+}
+
+/// The GTX 980 calibration is the crate-wide default (matching
+/// `HwParams::paper_defaults` and `GpuSpec::default`).
+impl Default for PowerModel {
+    fn default() -> Self {
+        PowerModel::gtx980()
+    }
 }
 
 impl PowerModel {
@@ -176,6 +205,28 @@ pub fn advise_with_engine(
     let times: Vec<f64> =
         engine.predict_grid(counters, pairs)?.iter().map(|e| e.time_us).collect();
     Ok(advise_points(&times, power, pairs, objective))
+}
+
+/// Handle-routed advisor (DESIGN.md §10): the device's own power model
+/// comes from the engine's registry and timings from the device-keyed
+/// handle path, so two registered GPUs get independent advice without
+/// the caller threading `HwParams`/`PowerModel` structs around.
+pub fn advise_with_handles(
+    engine: &Engine,
+    device: crate::registry::DeviceId,
+    kernel: crate::registry::KernelId,
+    pairs: &[(f64, f64)],
+    objective: Objective,
+) -> Result<(ConfigPoint, Vec<ConfigPoint>)> {
+    let record = engine.device_record(device)?;
+    let points: Vec<crate::registry::FreqPoint> =
+        pairs.iter().map(|&p| p.into()).collect();
+    let times: Vec<f64> = engine
+        .predict_points(device, kernel, &points)?
+        .iter()
+        .map(|e| e.time_us)
+        .collect();
+    Ok(advise_points(&times, &record.power, pairs, objective))
 }
 
 #[cfg(test)]

@@ -14,6 +14,12 @@
 //! above f32 resolution never collide (bit-exact keys, no tolerance
 //! comparisons).
 //!
+//! **Device identity (DESIGN.md §10):** keys additionally carry a
+//! 64-bit device word — the `registry::DeviceId` for handle-path
+//! lookups, [`ANONYMOUS_DEVICE`] for raw-struct calls — so two
+//! registered GPUs can never collide on quantized frequency keys even
+//! when their measured parameters agree at f32 resolution.
+//!
 //! **Sharding:** the key hash picks one of `shards` independent
 //! `Mutex<FxHashMap>` segments, so concurrent engine clients (the
 //! multi-worker PJRT service, `predict_stream`, scoped sweep threads)
@@ -29,9 +35,14 @@ use crate::util::fxhash::{FxBuildHasher, FxHashMap};
 
 use super::Estimate;
 
-/// Number of f32 words in a cache key: 15 counters + 7 hw params +
-/// core/mem MHz.
-const KEY_WORDS: usize = 24;
+/// Number of u32 words in a cache key: a 64-bit device-identity word
+/// (split in two) + 15 counters + 7 hw params + core/mem MHz.
+const KEY_WORDS: usize = 26;
+
+/// Device-identity word for lookups made through the raw-struct path
+/// (no registry handle). Registered devices use their `DeviceId` value,
+/// which starts at 1.
+pub const ANONYMOUS_DEVICE: u64 = 0;
 
 /// Quantized lookup key (f32 bit patterns; see module docs).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -43,7 +54,23 @@ fn q(x: f64) -> u32 {
 }
 
 impl CacheKey {
+    /// Key for the anonymous raw-struct path (no device identity).
     pub fn new(c: &KernelCounters, hw: &HwParams, core_mhz: f64, mem_mhz: f64) -> Self {
+        Self::for_device(ANONYMOUS_DEVICE, c, hw, core_mhz, mem_mhz)
+    }
+
+    /// Key carrying a device identity word (DESIGN.md §10). Two
+    /// registered devices never share an entry even when every numeric
+    /// input quantizes to the same f32 words — device parameters that
+    /// differ only below f32 resolution still produce different f64
+    /// predictions, so identity must be part of the key.
+    pub fn for_device(
+        device: u64,
+        c: &KernelCounters,
+        hw: &HwParams,
+        core_mhz: f64,
+        mem_mhz: f64,
+    ) -> Self {
         // Exhaustive destructuring (no `..`): adding a field to either
         // struct without extending the key is a compile error, never a
         // silent cache collision.
@@ -74,6 +101,8 @@ impl CacheKey {
             inst_cycle,
         } = *hw;
         CacheKey([
+            (device >> 32) as u32,
+            device as u32,
             q(l2_hr),
             q(gld_trans),
             q(avr_inst),
@@ -300,6 +329,26 @@ mod tests {
         let mut hw = HwParams::paper_defaults();
         hw.dm_del += 1.0;
         assert_ne!(a, CacheKey::new(&c, &hw, 700.0, 700.0));
+    }
+
+    #[test]
+    fn device_identity_is_part_of_the_key() {
+        // Regression (DESIGN.md §10): two registered devices must never
+        // share an entry, even when their numeric inputs are identical
+        // after f32 quantization.
+        let hw = HwParams::paper_defaults();
+        let c = counters();
+        let anon = CacheKey::new(&c, &hw, 700.0, 700.0);
+        let dev1 = CacheKey::for_device(1, &c, &hw, 700.0, 700.0);
+        let dev2 = CacheKey::for_device(2, &c, &hw, 700.0, 700.0);
+        assert_eq!(anon, CacheKey::for_device(ANONYMOUS_DEVICE, &c, &hw, 700.0, 700.0));
+        assert_ne!(anon, dev1);
+        assert_ne!(dev1, dev2);
+        // High device-id bits are not truncated away.
+        assert_ne!(
+            CacheKey::for_device(1, &c, &hw, 700.0, 700.0),
+            CacheKey::for_device(1 | (1 << 32), &c, &hw, 700.0, 700.0)
+        );
     }
 
     #[test]

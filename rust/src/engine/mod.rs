@@ -37,18 +37,20 @@ pub mod cache;
 pub mod pjrt;
 
 use std::sync::mpsc::{self, Receiver};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 pub use adapter::{EnginePredictor, PredictorBackend};
 pub use backend::{Backend, Estimate, NativeBatch, NativeScalar, Request};
-pub use cache::{CacheKey, CacheStats, GridCache};
+pub use cache::{CacheKey, CacheStats, GridCache, ANONYMOUS_DEVICE};
 pub use pjrt::{BatchPrediction, BatchServer, PjrtBackend, ServerStats};
 
 use crate::baselines::Predictor;
 use crate::model::{HwParams, KernelCounters};
+use crate::registry::{DeviceId, DeviceRecord, DeviceRegistry, FreqPoint, KernelCatalog, KernelId};
+use crate::util::fxhash::FxHashMap;
 
 /// One streaming job: predict a whole frequency grid for one profiled
 /// kernel. `id` is echoed in the [`StreamReply`] so out-of-order
@@ -68,10 +70,34 @@ pub struct StreamReply {
     pub result: Result<Vec<Estimate>, String>,
 }
 
+/// How the engine reconstructs a backend for a *different* device than
+/// the one it was built for (the handle path, DESIGN.md §10). Native
+/// strategies rebuild per device from the device's measured `HwParams`;
+/// opaque backends (PJRT service, boxed predictors, custom) are bound
+/// to one parameter set, so other devices fall back to the scalar
+/// native model — bit-identical to what the raw-struct path would
+/// produce for that device.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum BackendKind {
+    Scalar,
+    Batch(usize),
+    Opaque,
+}
+
+impl BackendKind {
+    fn build(self, hw: HwParams) -> Arc<dyn Backend> {
+        match self {
+            BackendKind::Scalar | BackendKind::Opaque => Arc::new(NativeScalar::new(hw)),
+            BackendKind::Batch(workers) => Arc::new(NativeBatch::new(hw, workers)),
+        }
+    }
+}
+
 /// Builder for [`Engine`] (backend choice, cache policy).
 pub struct EngineBuilder {
     hw: HwParams,
     backend: Option<Arc<dyn Backend>>,
+    kind: BackendKind,
     cache: bool,
     cache_shards: usize,
     cache_shard_capacity: usize,
@@ -82,6 +108,7 @@ impl EngineBuilder {
         EngineBuilder {
             hw,
             backend: None,
+            kind: BackendKind::Scalar,
             cache: true,
             cache_shards: cache::DEFAULT_SHARDS,
             cache_shard_capacity: cache::DEFAULT_SHARD_CAPACITY,
@@ -91,30 +118,35 @@ impl EngineBuilder {
     /// Use the scalar native backend (default).
     pub fn scalar(mut self) -> Self {
         self.backend = Some(Arc::new(NativeScalar::new(self.hw)) as Arc<dyn Backend>);
+        self.kind = BackendKind::Scalar;
         self
     }
 
     /// Use the scoped-thread chunked native backend.
     pub fn batch(mut self, workers: usize) -> Self {
         self.backend = Some(Arc::new(NativeBatch::new(self.hw, workers)) as Arc<dyn Backend>);
+        self.kind = BackendKind::Batch(workers);
         self
     }
 
     /// Use the sharded PJRT batching service.
     pub fn pjrt(mut self, server: BatchServer) -> Self {
         self.backend = Some(Arc::new(PjrtBackend::new(server)) as Arc<dyn Backend>);
+        self.kind = BackendKind::Opaque;
         self
     }
 
     /// Use any baseline `Predictor` through the adapter.
     pub fn predictor(mut self, p: Box<dyn Predictor>) -> Self {
         self.backend = Some(Arc::new(PredictorBackend::new(p)) as Arc<dyn Backend>);
+        self.kind = BackendKind::Opaque;
         self
     }
 
     /// Use a custom backend.
     pub fn backend(mut self, b: Arc<dyn Backend>) -> Self {
         self.backend = Some(b);
+        self.kind = BackendKind::Opaque;
         self
     }
 
@@ -136,14 +168,30 @@ impl EngineBuilder {
             backend: self
                 .backend
                 .unwrap_or_else(|| Arc::new(NativeScalar::new(self.hw)) as Arc<dyn Backend>),
+            kind: self.kind,
             cache: if self.cache {
                 Some(Arc::new(GridCache::new(self.cache_shards, self.cache_shard_capacity)))
             } else {
                 None
             },
             hw: self.hw,
+            device_key: ANONYMOUS_DEVICE,
+            handles: None,
         }
     }
+}
+
+/// Handle-resolution state (DESIGN.md §10): the registry/catalog this
+/// engine answers `(DeviceId, KernelId, FreqPoint)` calls against, plus
+/// lazily-built per-device backends. Shared by engine clones.
+struct Handles {
+    registry: Arc<DeviceRegistry>,
+    catalog: Arc<KernelCatalog>,
+    /// The device the engine's primary backend was built for; its
+    /// handle calls reuse that backend (PJRT batching included).
+    primary: DeviceId,
+    /// Lazily-built backends for every other device.
+    per_device: Mutex<FxHashMap<u64, Arc<dyn Backend>>>,
 }
 
 /// The facade. Cheap to clone (`Arc` internals); clones share the
@@ -151,8 +199,15 @@ impl EngineBuilder {
 #[derive(Clone)]
 pub struct Engine {
     backend: Arc<dyn Backend>,
+    kind: BackendKind,
     cache: Option<Arc<GridCache>>,
     hw: HwParams,
+    /// Device-identity word raw-struct lookups are cached under:
+    /// [`ANONYMOUS_DEVICE`] for a free-standing engine, the primary
+    /// `DeviceId` once handles are attached (so the v1 shim and the v2
+    /// handle path share warm entries on the default device).
+    device_key: u64,
+    handles: Option<Arc<Handles>>,
 }
 
 impl Engine {
@@ -181,6 +236,97 @@ impl Engine {
     /// Wrap a baseline predictor behind the facade (adapter + cache).
     pub fn from_predictor(hw: HwParams, p: Box<dyn Predictor>) -> Engine {
         Self::builder(hw).predictor(p).build()
+    }
+
+    /// Attach a device registry + kernel catalog, turning on the
+    /// handle-based API (DESIGN.md §10). `primary` names the device the
+    /// engine's backend was built for — it must already be registered,
+    /// its measured parameters must match the engine's, and its handle
+    /// calls reuse the primary backend (other devices get lazily-built
+    /// native backends per the configured strategy). The raw-struct path is
+    /// re-keyed under `primary`, so v1-shim traffic and v2 handle
+    /// traffic on the default device share warm cache entries.
+    pub fn with_handles(
+        mut self,
+        registry: Arc<DeviceRegistry>,
+        catalog: Arc<KernelCatalog>,
+        primary: DeviceId,
+    ) -> Result<Engine> {
+        let Some(record) = registry.get(primary) else {
+            bail!("primary device {primary} is not in the registry");
+        };
+        if record.hw != self.hw {
+            bail!(
+                "primary device {primary} ({}) was registered with different hardware \
+                 parameters than this engine was built for",
+                record.name
+            );
+        }
+        let mut per_device = FxHashMap::default();
+        per_device.insert(primary.0, Arc::clone(&self.backend));
+        self.device_key = primary.0;
+        self.handles = Some(Arc::new(Handles {
+            registry,
+            catalog,
+            primary,
+            per_device: Mutex::new(per_device),
+        }));
+        Ok(self)
+    }
+
+    /// Whether the handle-based API is available.
+    pub fn has_handles(&self) -> bool {
+        self.handles.is_some()
+    }
+
+    pub fn registry(&self) -> Option<&Arc<DeviceRegistry>> {
+        self.handles.as_ref().map(|h| &h.registry)
+    }
+
+    pub fn catalog(&self) -> Option<&Arc<KernelCatalog>> {
+        self.handles.as_ref().map(|h| &h.catalog)
+    }
+
+    /// The device the primary backend serves (`None` before
+    /// [`Engine::with_handles`]).
+    pub fn primary_device(&self) -> Option<DeviceId> {
+        self.handles.as_ref().map(|h| h.primary)
+    }
+
+    fn handles(&self) -> Result<&Handles> {
+        match &self.handles {
+            Some(h) => Ok(h.as_ref()),
+            None => bail!("engine has no registry attached (Engine::with_handles)"),
+        }
+    }
+
+    /// Resolve a device handle to its full record.
+    pub fn device_record(&self, device: DeviceId) -> Result<DeviceRecord> {
+        let h = self.handles()?;
+        match h.registry.get(device) {
+            Some(r) => Ok(r),
+            None => bail!("unknown device {device}"),
+        }
+    }
+
+    /// Resolve a kernel handle to its baseline-profiled counters.
+    pub fn kernel_counters(&self, kernel: KernelId) -> Result<KernelCounters> {
+        let h = self.handles()?;
+        match h.catalog.get(kernel) {
+            Some(e) => Ok(e.counters),
+            None => bail!("unknown kernel {kernel}"),
+        }
+    }
+
+    /// The backend serving `device`: the primary backend for the
+    /// primary device, otherwise a lazily-built (and memoized) native
+    /// backend around the device's measured parameters.
+    fn backend_for(&self, record: &DeviceRecord) -> Result<Arc<dyn Backend>> {
+        let h = self.handles()?;
+        let mut g = h.per_device.lock().expect("per-device backends poisoned");
+        Ok(Arc::clone(
+            g.entry(record.id.0).or_insert_with(|| self.kind.build(record.hw)),
+        ))
     }
 
     pub fn backend_name(&self) -> &'static str {
@@ -215,6 +361,107 @@ impl Engine {
         Ok(v.remove(0))
     }
 
+    /// Handle path, single point: predict `kernel` on `device` at one
+    /// frequency point (DESIGN.md §10).
+    pub fn predict_handle(
+        &self,
+        device: DeviceId,
+        kernel: KernelId,
+        point: FreqPoint,
+    ) -> Result<Estimate> {
+        let mut v = self.predict_tuples(&[(device, kernel, point)])?;
+        Ok(v.remove(0))
+    }
+
+    /// Handle path, one kernel over many frequency points — the v2
+    /// grid/advise shape.
+    pub fn predict_points(
+        &self,
+        device: DeviceId,
+        kernel: KernelId,
+        points: &[FreqPoint],
+    ) -> Result<Vec<Estimate>> {
+        let tuples: Vec<(DeviceId, KernelId, FreqPoint)> =
+            points.iter().map(|&p| (device, kernel, p)).collect();
+        self.predict_tuples(&tuples)
+    }
+
+    /// Handle path, batch-first (the `/v2/predict` shape): arbitrary
+    /// `(device, kernel, frequency)` tuples in one call, answered in
+    /// order. Handles resolve up front (one failed lookup fails the
+    /// whole batch before any prediction runs), cache hits are served
+    /// per-tuple under the device-identity key, and misses are batched
+    /// **per device** to that device's backend.
+    pub fn predict_tuples(
+        &self,
+        tuples: &[(DeviceId, KernelId, FreqPoint)],
+    ) -> Result<Vec<Estimate>> {
+        struct Miss {
+            index: usize,
+            key: Option<CacheKey>,
+            req: Request,
+        }
+
+        use std::collections::hash_map::Entry;
+
+        // Resolve every handle first; records/counters are memoized so
+        // grid-shaped batches pay one registry lookup per handle.
+        let mut records: FxHashMap<u64, DeviceRecord> = FxHashMap::default();
+        let mut kernels: FxHashMap<u64, KernelCounters> = FxHashMap::default();
+        for &(d, k, p) in tuples {
+            if let Entry::Vacant(slot) = records.entry(d.0) {
+                slot.insert(self.device_record(d)?);
+            }
+            if let Entry::Vacant(slot) = kernels.entry(k.0) {
+                slot.insert(self.kernel_counters(k)?);
+            }
+            if !p.is_valid() {
+                bail!(
+                    "invalid frequency point ({}, {}) MHz: frequencies must be positive \
+                     and finite",
+                    p.core_mhz,
+                    p.mem_mhz
+                );
+            }
+        }
+
+        let mut out: Vec<Option<Estimate>> = vec![None; tuples.len()];
+        // Misses grouped by device, preserving intra-device order.
+        let mut misses: FxHashMap<u64, Vec<Miss>> = FxHashMap::default();
+        for (i, &(d, k, p)) in tuples.iter().enumerate() {
+            let counters = &kernels[&k.0];
+            let hw = &records[&d.0].hw;
+            let key = self
+                .cache
+                .as_ref()
+                .map(|_| CacheKey::for_device(d.0, counters, hw, p.core_mhz, p.mem_mhz));
+            if let (Some(cache), Some(key)) = (&self.cache, &key) {
+                if let Some(e) = cache.get(key) {
+                    out[i] = Some(e);
+                    continue;
+                }
+            }
+            misses.entry(d.0).or_default().push(Miss {
+                index: i,
+                key,
+                req: Request { counters: *counters, core_mhz: p.core_mhz, mem_mhz: p.mem_mhz },
+            });
+        }
+
+        for (device, list) in misses {
+            let backend = self.backend_for(&records[&device])?;
+            let reqs: Vec<Request> = list.iter().map(|m| m.req).collect();
+            let fresh = backend.predict_batch(&reqs)?;
+            for (m, est) in list.into_iter().zip(fresh) {
+                if let (Some(cache), Some(key)) = (&self.cache, m.key) {
+                    cache.insert(key, est);
+                }
+                out[m.index] = Some(est);
+            }
+        }
+        Ok(out.into_iter().map(|e| e.expect("all tuples filled")).collect())
+    }
+
     /// Predict a whole frequency grid for one profile, serving repeats
     /// from the cache and batching only the misses to the backend.
     pub fn predict_grid(
@@ -235,7 +482,7 @@ impl Engine {
         let mut miss_reqs: Vec<Request> = Vec::new();
         let mut miss_keys: Vec<CacheKey> = Vec::new();
         for (i, &(cf, mf)) in pairs.iter().enumerate() {
-            let key = CacheKey::new(c, &self.hw, cf, mf);
+            let key = CacheKey::for_device(self.device_key, c, &self.hw, cf, mf);
             match cache.get(&key) {
                 Some(e) => out.push(Some(e)),
                 None => {
@@ -396,6 +643,144 @@ mod tests {
         let s = engine.cache_stats();
         assert_eq!(s.misses, 49);
         assert_eq!(s.hits, 3 * 49);
+    }
+
+    fn handle_engine() -> (Engine, DeviceId, DeviceId, KernelId) {
+        let hw = HwParams::paper_defaults();
+        let registry = Arc::new(crate::registry::DeviceRegistry::new());
+        let primary = registry.register("gtx980", hw, crate::dvfs::PowerModel::gtx980());
+        // A second device whose parameters differ only BELOW f32
+        // resolution: quantized cache words are identical, but the f64
+        // model evaluates to different bits.
+        let mut hw_b = hw;
+        hw_b.dm_del += 1e-9;
+        let other = registry.register("gtx980-b", hw_b, crate::dvfs::PowerModel::gtx980());
+        let catalog = Arc::new(crate::registry::KernelCatalog::new());
+        let kernel = catalog.register("VA", counters());
+        let engine = Engine::native(hw).with_handles(registry, catalog, primary).unwrap();
+        (engine, primary, other, kernel)
+    }
+
+    #[test]
+    fn handle_path_matches_raw_struct_path_bit_for_bit() {
+        let (engine, primary, _, kernel) = handle_engine();
+        let c = counters();
+        let points: Vec<FreqPoint> = grid().iter().map(|&p| p.into()).collect();
+        let via_handles = engine.predict_points(primary, kernel, &points).unwrap();
+        let raw = engine.predict_grid(&c, &grid()).unwrap();
+        for (a, b) in via_handles.iter().zip(&raw) {
+            assert_eq!(a.time_us.to_bits(), b.time_us.to_bits());
+            assert_eq!(a.regime, b.regime);
+        }
+        // Both paths key on the primary device: the raw pass re-reads
+        // the handle pass's 49 entries instead of recomputing.
+        let s = engine.cache_stats();
+        assert_eq!(s.misses, 49);
+        assert_eq!(s.hits, 49);
+    }
+
+    #[test]
+    fn two_devices_never_share_cache_entries() {
+        // Regression for the device-identity cache key (DESIGN.md §10):
+        // dev-2's parameters differ from dev-1's only below f32
+        // resolution, so WITHOUT the identity word both devices would
+        // quantize to the same key and the second lookup would be a
+        // false hit returning dev-1's estimate.
+        let (engine, primary, other, kernel) = handle_engine();
+        let p = FreqPoint::new(700.0, 700.0);
+        let a = engine.predict_handle(primary, kernel, p).unwrap();
+        let b = engine.predict_handle(other, kernel, p).unwrap();
+        assert_ne!(
+            a.time_us.to_bits(),
+            b.time_us.to_bits(),
+            "sub-f32 parameter difference must still change the f64 prediction"
+        );
+        let s = engine.cache_stats();
+        assert_eq!((s.hits, s.misses), (0, 2), "second device must miss, not falsely hit");
+        // Repeats hit per device and stay distinct.
+        let a2 = engine.predict_handle(primary, kernel, p).unwrap();
+        let b2 = engine.predict_handle(other, kernel, p).unwrap();
+        assert_eq!(a.time_us.to_bits(), a2.time_us.to_bits());
+        assert_eq!(b.time_us.to_bits(), b2.time_us.to_bits());
+        assert_eq!(engine.cache_stats().hits, 2);
+    }
+
+    #[test]
+    fn mixed_device_batch_answers_in_order() {
+        let (engine, primary, other, kernel) = handle_engine();
+        let tuples: Vec<(DeviceId, KernelId, FreqPoint)> = grid()
+            .iter()
+            .enumerate()
+            .map(|(i, &(cf, mf))| {
+                let d = if i % 2 == 0 { primary } else { other };
+                (d, kernel, FreqPoint::new(cf, mf))
+            })
+            .collect();
+        let got = engine.predict_tuples(&tuples).unwrap();
+        let c = counters();
+        for (e, &(d, _, p)) in got.iter().zip(&tuples) {
+            let mut hw = HwParams::paper_defaults();
+            if d != primary {
+                hw.dm_del += 1e-9;
+            }
+            let want = model::predict(&c, &hw, p.core_mhz, p.mem_mhz);
+            assert_eq!(e.time_us.to_bits(), want.time_us.to_bits(), "{d} {p:?}");
+        }
+    }
+
+    #[test]
+    fn handle_errors_are_typed_and_early() {
+        let (engine, primary, _, kernel) = handle_engine();
+        let p = FreqPoint::new(700.0, 700.0);
+        let err = engine
+            .predict_tuples(&[(DeviceId(99), kernel, p)])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("unknown device dev-99"), "{err}");
+        let err = engine
+            .predict_tuples(&[(primary, KernelId(42), p)])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("unknown kernel krn-42"), "{err}");
+        let err = engine
+            .predict_tuples(&[(primary, kernel, FreqPoint::new(f64::NAN, 700.0))])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("invalid frequency point"), "{err}");
+        // A failed resolve anywhere in the batch fails before any
+        // prediction runs: nothing is cached.
+        let _ = engine.predict_tuples(&[
+            (primary, kernel, p),
+            (DeviceId(99), kernel, p),
+        ]);
+        assert_eq!(engine.cache_stats().entries, 0);
+        // An engine without handles reports that, not a lookup miss.
+        let bare = Engine::native(HwParams::paper_defaults());
+        assert!(!bare.has_handles());
+        let err = bare.predict_handle(primary, kernel, p).unwrap_err().to_string();
+        assert!(err.contains("no registry attached"), "{err}");
+    }
+
+    #[test]
+    fn with_handles_rejects_mismatched_primary() {
+        let hw = HwParams::paper_defaults();
+        let registry = Arc::new(crate::registry::DeviceRegistry::new());
+        let mut other_hw = hw;
+        other_hw.l2_lat += 50.0;
+        let wrong = registry.register("other", other_hw, crate::dvfs::PowerModel::gtx980());
+        let catalog = Arc::new(crate::registry::KernelCatalog::new());
+        let err = Engine::native(hw)
+            .with_handles(Arc::clone(&registry), Arc::clone(&catalog), wrong)
+            .map(|_| ())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("different hardware parameters"), "{err}");
+        let err = Engine::native(hw)
+            .with_handles(registry, catalog, DeviceId(7))
+            .map(|_| ())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("not in the registry"), "{err}");
     }
 
     #[test]

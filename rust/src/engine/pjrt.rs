@@ -1,6 +1,6 @@
 //! The PJRT-backed prediction service: dynamic batching over the AOT
 //! artifact executor, upgraded from the original single drain worker
-//! (`coordinator/batcher.rs`, now a thin re-export) to **N workers over
+//! (formerly `coordinator/batcher.rs`) to **N workers over
 //! sharded request queues**.
 //!
 //! Requests are spread round-robin across per-worker mpsc queues; each

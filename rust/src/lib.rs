@@ -13,6 +13,8 @@
 //!   (native scalar / scoped-thread batch / sharded PJRT service),
 //!   sharded quantized grid cache, and the facade every consumer uses
 //! * [`coordinator`] — sweep orchestration and validation
+//! * [`registry`] — device registry + kernel catalog: the stable
+//!   `(DeviceId, KernelId, FreqPoint)` handles behind the typed v2 API
 //! * [`dvfs`] — power model + energy-conservation advisor (paper §VII)
 //! * [`service`] — the standing HTTP prediction service (`gpufreq
 //!   serve`): std-only HTTP/1.1 worker pool with bounded-queue
@@ -29,6 +31,7 @@ pub mod kernels;
 pub mod microbench;
 pub mod model;
 pub mod profiler;
+pub mod registry;
 pub mod report;
 pub mod runtime;
 pub mod service;

@@ -1,0 +1,590 @@
+//! Device and kernel identity (DESIGN.md §10): the handle layer behind
+//! the typed v2 prediction API.
+//!
+//! The paper's workflow is inherently multi-device — hardware
+//! parameters are micro-benchmarked **per GPU** (§IV) and kernels are
+//! profiled **once per device** at the baseline frequency (§V) — so a
+//! production prediction service must address devices and kernels by
+//! stable identity instead of re-shipping full `HwParams` /
+//! `KernelCounters` blobs on every request:
+//!
+//! * [`DeviceRegistry`] — registered GPUs. Each [`DeviceRecord`] owns
+//!   the device's measured [`HwParams`] and its DVFS [`PowerModel`]
+//!   (V/f curves + Eq. (1) coefficients). Loadable from
+//!   `configs/*.toml` via [`DeviceRegistry::register_from_config`],
+//!   which runs the §IV micro-benchmarks against the config's
+//!   `GpuSpec` — parameters are *measured per device*, never copied.
+//! * [`KernelCatalog`] — named kernels with their baseline-profiled
+//!   counters (the paper's one-shot Nsight pass).
+//! * [`DeviceId`] / [`KernelId`] / [`FreqPoint`] — the handle triple
+//!   `engine::Engine` and the `/v2` wire protocol operate on.
+//!
+//! Identity semantics: device records are **immutable** — re-registering
+//! a name mints a fresh id (the name resolves to the latest record), so
+//! a cache entry keyed on a `DeviceId` can never silently refer to
+//! changed parameters. Kernels follow the v1 service semantics instead:
+//! re-registering a name updates the counters in place under the same
+//! id (counters are part of every cache key, so stale hits cannot
+//! survive a counter change above f32 resolution).
+
+use std::fmt;
+use std::path::Path;
+use std::str::FromStr;
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+use std::sync::RwLock;
+
+use anyhow::{Context as _, Result};
+
+use crate::config;
+use crate::dvfs::PowerModel;
+use crate::microbench;
+use crate::model::{HwParams, KernelCounters};
+
+/// Opaque handle for a registered device. Renders as `dev-<n>` on the
+/// wire; ids start at 1 (0 is reserved for the anonymous raw-struct
+/// path in the engine's cache key).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct DeviceId(pub u64);
+
+/// Opaque handle for a catalogued kernel. Renders as `krn-<n>`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct KernelId(pub u64);
+
+impl fmt::Display for DeviceId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "dev-{}", self.0)
+    }
+}
+
+impl fmt::Display for KernelId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "krn-{}", self.0)
+    }
+}
+
+fn parse_handle(s: &str, prefix: &str) -> Option<u64> {
+    let n: u64 = s.strip_prefix(prefix)?.parse().ok()?;
+    (n > 0).then_some(n)
+}
+
+impl FromStr for DeviceId {
+    type Err = ();
+
+    fn from_str(s: &str) -> std::result::Result<Self, ()> {
+        parse_handle(s, "dev-").map(DeviceId).ok_or(())
+    }
+}
+
+impl FromStr for KernelId {
+    type Err = ();
+
+    fn from_str(s: &str) -> std::result::Result<Self, ()> {
+        parse_handle(s, "krn-").map(KernelId).ok_or(())
+    }
+}
+
+/// Whether `name` collides with the wire-handle grammar
+/// (`dev-<n>` / `krn-<n>`). Such names are reserved: a device literally
+/// named "dev-1" would be shadowed by whichever record holds id 1, so
+/// every registration path rejects them (enforced in `try_register`).
+pub fn is_reserved_name(name: &str) -> bool {
+    name.parse::<DeviceId>().is_ok() || name.parse::<KernelId>().is_ok()
+}
+
+/// Why a registration was refused.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RegisterError {
+    /// The capacity bound was reached.
+    Full,
+    /// The name collides with the `dev-<n>`/`krn-<n>` handle grammar.
+    ReservedName,
+}
+
+impl fmt::Display for RegisterError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RegisterError::Full => write!(f, "registry is full"),
+            RegisterError::ReservedName => {
+                write!(f, "names matching the handle grammar (dev-<n> / krn-<n>) are reserved")
+            }
+        }
+    }
+}
+
+impl std::error::Error for RegisterError {}
+
+/// One (core, mem) frequency operating point, MHz.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FreqPoint {
+    pub core_mhz: f64,
+    pub mem_mhz: f64,
+}
+
+impl FreqPoint {
+    pub fn new(core_mhz: f64, mem_mhz: f64) -> Self {
+        FreqPoint { core_mhz, mem_mhz }
+    }
+
+    /// Frequencies a prediction can be evaluated at: positive, finite.
+    pub fn is_valid(&self) -> bool {
+        self.core_mhz.is_finite()
+            && self.mem_mhz.is_finite()
+            && self.core_mhz > 0.0
+            && self.mem_mhz > 0.0
+    }
+}
+
+impl From<(f64, f64)> for FreqPoint {
+    fn from((core_mhz, mem_mhz): (f64, f64)) -> Self {
+        FreqPoint { core_mhz, mem_mhz }
+    }
+}
+
+/// Everything the system knows about one registered GPU.
+#[derive(Debug, Clone)]
+pub struct DeviceRecord {
+    pub id: DeviceId,
+    pub name: String,
+    /// Measured hardware parameters (§IV micro-benchmarks).
+    pub hw: HwParams,
+    /// DVFS V/f curves + Eq. (1) power coefficients.
+    pub power: PowerModel,
+}
+
+/// Registered GPUs, addressed by [`DeviceId`] or name. Thread-safe and
+/// cheap to share behind an `Arc`; all methods take `&self`.
+#[derive(Debug)]
+pub struct DeviceRegistry {
+    records: RwLock<Vec<DeviceRecord>>,
+    next_id: AtomicU64,
+}
+
+/// Manual impl: ids must start at 1 (0 is the reserved anonymous
+/// device word), which a derived `Default` would violate.
+impl Default for DeviceRegistry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl DeviceRegistry {
+    pub fn new() -> Self {
+        DeviceRegistry { records: RwLock::new(Vec::new()), next_id: AtomicU64::new(1) }
+    }
+
+    /// Register a device; returns its fresh handle. Re-registering an
+    /// existing name mints a new id (records are immutable) and the
+    /// name resolves to the newest record from then on.
+    ///
+    /// Panics on a handle-shaped name ([`is_reserved_name`]) — use
+    /// [`DeviceRegistry::try_register`] for externally-supplied names.
+    pub fn register(&self, name: &str, hw: HwParams, power: PowerModel) -> DeviceId {
+        match self.try_register(name, hw, power, usize::MAX) {
+            Ok(id) => id,
+            Err(e) => panic!("register `{name}`: {e}"),
+        }
+    }
+
+    /// [`DeviceRegistry::register`] with the invariants made fallible:
+    /// handle-shaped names are rejected (they would be shadowed by
+    /// real ids — enforced here so *every* construction path agrees),
+    /// and the capacity bound is checked under the same write lock
+    /// that appends the record, so concurrent registrations (service
+    /// workers) can never overshoot `max`.
+    pub fn try_register(
+        &self,
+        name: &str,
+        hw: HwParams,
+        power: PowerModel,
+        max: usize,
+    ) -> Result<DeviceId, RegisterError> {
+        if is_reserved_name(name) {
+            return Err(RegisterError::ReservedName);
+        }
+        let mut g = self.records.write().expect("registry poisoned");
+        if g.len() >= max {
+            return Err(RegisterError::Full);
+        }
+        let id = DeviceId(self.next_id.fetch_add(1, Relaxed));
+        g.push(DeviceRecord { id, name: name.to_string(), hw, power });
+        Ok(id)
+    }
+
+    /// Load a `configs/*.toml` GPU description and register it: the
+    /// §IV micro-benchmarks run against the config's simulator spec to
+    /// *measure* `HwParams`, and `[power]`/`[device]` sections supply
+    /// the power model and name (file stem when unnamed).
+    pub fn register_from_config(&self, path: &Path) -> Result<DeviceId> {
+        let cfg = config::load(path)?;
+        let name = cfg
+            .device_name
+            .clone()
+            .or_else(|| path.file_stem().map(|s| s.to_string_lossy().into_owned()))
+            .context("config has no [device] name and the path has no file stem")?;
+        let ex = microbench::extract(&cfg.gpu, cfg.sweep.baseline());
+        self.try_register(&name, ex.hw, cfg.power, usize::MAX)
+            .map_err(|e| anyhow::anyhow!("registering `{name}`: {e}"))
+    }
+
+    pub fn get(&self, id: DeviceId) -> Option<DeviceRecord> {
+        self.records
+            .read()
+            .expect("registry poisoned")
+            .iter()
+            .find(|r| r.id == id)
+            .cloned()
+    }
+
+    /// Latest record registered under `name`.
+    pub fn by_name(&self, name: &str) -> Option<DeviceRecord> {
+        self.records
+            .read()
+            .expect("registry poisoned")
+            .iter()
+            .rev()
+            .find(|r| r.name == name)
+            .cloned()
+    }
+
+    /// Resolve a wire handle to just its id — no record clone, for
+    /// hot paths that only route. `dev-<n>` wins when that id exists;
+    /// anything else (including a handle-shaped string whose id is
+    /// absent) falls back to name lookup.
+    pub fn resolve_id(&self, handle: &str) -> Option<DeviceId> {
+        let g = self.records.read().expect("registry poisoned");
+        if let Ok(id) = handle.parse::<DeviceId>() {
+            if g.iter().any(|r| r.id == id) {
+                return Some(id);
+            }
+        }
+        g.iter().rev().find(|r| r.name == handle).map(|r| r.id)
+    }
+
+    /// Resolve a wire handle to a full record clone (see
+    /// [`DeviceRegistry::resolve_id`] for precedence).
+    pub fn resolve(&self, handle: &str) -> Option<DeviceRecord> {
+        let id = self.resolve_id(handle)?;
+        self.get(id)
+    }
+
+    /// Every record, in registration order.
+    pub fn list(&self) -> Vec<DeviceRecord> {
+        self.records.read().expect("registry poisoned").clone()
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.read().expect("registry poisoned").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// One catalogued kernel: a name plus its baseline-profiled counters.
+#[derive(Debug, Clone)]
+pub struct KernelEntry {
+    pub id: KernelId,
+    pub name: String,
+    pub counters: KernelCounters,
+}
+
+/// Named kernels with baseline-profiled counters, addressed by
+/// [`KernelId`] or name. Same sharing model as [`DeviceRegistry`].
+#[derive(Debug)]
+pub struct KernelCatalog {
+    entries: RwLock<Vec<KernelEntry>>,
+    next_id: AtomicU64,
+}
+
+/// Manual impl: ids start at 1, matching [`KernelCatalog::new`].
+impl Default for KernelCatalog {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl KernelCatalog {
+    pub fn new() -> Self {
+        KernelCatalog { entries: RwLock::new(Vec::new()), next_id: AtomicU64::new(1) }
+    }
+
+    /// Register (or re-profile) a kernel. A known name keeps its id and
+    /// gets the new counters; a new name mints a fresh id.
+    ///
+    /// Panics on a handle-shaped name ([`is_reserved_name`]) — use
+    /// [`KernelCatalog::try_register`] for externally-supplied names.
+    pub fn register(&self, name: &str, counters: KernelCounters) -> KernelId {
+        match self.try_register(name, counters, usize::MAX) {
+            Ok(id) => id,
+            Err(e) => panic!("register `{name}`: {e}"),
+        }
+    }
+
+    /// [`KernelCatalog::register`] with the invariants made fallible:
+    /// handle-shaped names are rejected, and the capacity bound on
+    /// **new** names (in-place re-profiles never grow the catalog and
+    /// always succeed) is checked under the write lock so concurrent
+    /// registrations can never overshoot `max`.
+    pub fn try_register(
+        &self,
+        name: &str,
+        counters: KernelCounters,
+        max: usize,
+    ) -> Result<KernelId, RegisterError> {
+        if is_reserved_name(name) {
+            return Err(RegisterError::ReservedName);
+        }
+        let mut g = self.entries.write().expect("catalog poisoned");
+        if let Some(e) = g.iter_mut().find(|e| e.name == name) {
+            e.counters = counters;
+            return Ok(e.id);
+        }
+        if g.len() >= max {
+            return Err(RegisterError::Full);
+        }
+        let id = KernelId(self.next_id.fetch_add(1, Relaxed));
+        g.push(KernelEntry { id, name: name.to_string(), counters });
+        Ok(id)
+    }
+
+    pub fn get(&self, id: KernelId) -> Option<KernelEntry> {
+        self.entries
+            .read()
+            .expect("catalog poisoned")
+            .iter()
+            .find(|e| e.id == id)
+            .cloned()
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<KernelEntry> {
+        self.entries
+            .read()
+            .expect("catalog poisoned")
+            .iter()
+            .find(|e| e.name == name)
+            .cloned()
+    }
+
+    /// Resolve a wire handle to just its id — no entry clone. Same
+    /// precedence as [`DeviceRegistry::resolve_id`].
+    pub fn resolve_id(&self, handle: &str) -> Option<KernelId> {
+        let g = self.entries.read().expect("catalog poisoned");
+        if let Ok(id) = handle.parse::<KernelId>() {
+            if g.iter().any(|e| e.id == id) {
+                return Some(id);
+            }
+        }
+        g.iter().find(|e| e.name == handle).map(|e| e.id)
+    }
+
+    /// Resolve a wire handle to a full entry clone.
+    pub fn resolve(&self, handle: &str) -> Option<KernelEntry> {
+        let id = self.resolve_id(handle)?;
+        self.get(id)
+    }
+
+    pub fn list(&self) -> Vec<KernelEntry> {
+        self.entries.read().expect("catalog poisoned").clone()
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        self.entries.read().expect("catalog poisoned").iter().map(|e| e.name.clone()).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.read().expect("catalog poisoned").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn counters() -> KernelCounters {
+        KernelCounters {
+            l2_hr: 0.1,
+            gld_trans: 6.0,
+            avr_inst: 1.5,
+            n_blocks: 128.0,
+            wpb: 8.0,
+            aw: 64.0,
+            n_sm: 16.0,
+            o_itrs: 8.0,
+            i_itrs: 0.0,
+            uses_smem: false,
+            smem_conflict: 1.0,
+            gld_body: 6.0,
+            gld_edge: 0.0,
+            mem_ops: 2.0,
+            l1_hr: 0.0,
+        }
+    }
+
+    #[test]
+    fn handles_render_and_parse() {
+        assert_eq!(DeviceId(3).to_string(), "dev-3");
+        assert_eq!("dev-3".parse::<DeviceId>(), Ok(DeviceId(3)));
+        assert_eq!(KernelId(7).to_string(), "krn-7");
+        assert_eq!("krn-7".parse::<KernelId>(), Ok(KernelId(7)));
+        for bad in ["dev-", "dev-0", "krn-x", "dev-3x", "3", "", "krn--1"] {
+            assert!(bad.parse::<DeviceId>().is_err(), "{bad}");
+            assert!(bad.parse::<KernelId>().is_err(), "{bad}");
+        }
+        // 0 is reserved for the anonymous raw path.
+        assert!("dev-0".parse::<DeviceId>().is_err());
+    }
+
+    #[test]
+    fn freq_point_validity() {
+        assert!(FreqPoint::new(700.0, 700.0).is_valid());
+        for bad in [
+            FreqPoint::new(0.0, 700.0),
+            FreqPoint::new(700.0, -1.0),
+            FreqPoint::new(f64::NAN, 700.0),
+            FreqPoint::new(700.0, f64::INFINITY),
+        ] {
+            assert!(!bad.is_valid(), "{bad:?}");
+        }
+    }
+
+    #[test]
+    fn registry_register_get_list() {
+        let reg = DeviceRegistry::new();
+        assert!(reg.is_empty());
+        let a = reg.register("gtx980", HwParams::paper_defaults(), PowerModel::gtx980());
+        let mut hw2 = HwParams::paper_defaults();
+        hw2.dm_del += 1.0;
+        let b = reg.register("gtx960", hw2, PowerModel::gtx980());
+        // Ids start at 1 — 0 is the engine's anonymous raw-path word —
+        // and `Default` must agree with `new`.
+        assert_eq!(a, DeviceId(1));
+        assert_ne!(a, b);
+        assert_eq!(reg.len(), 2);
+        let fresh = DeviceRegistry::default();
+        assert_eq!(
+            fresh.register("d", HwParams::paper_defaults(), PowerModel::gtx980()),
+            DeviceId(1)
+        );
+        assert_eq!(KernelCatalog::default().register("k", counters()), KernelId(1));
+        assert_eq!(reg.get(a).unwrap().name, "gtx980");
+        assert_eq!(reg.by_name("gtx960").unwrap().id, b);
+        assert_eq!(reg.resolve(&a.to_string()).unwrap().id, a);
+        assert_eq!(reg.resolve("gtx980").unwrap().id, a);
+        assert!(reg.get(DeviceId(99)).is_none());
+        assert!(reg.resolve("dev-99").is_none());
+        let names: Vec<String> = reg.list().into_iter().map(|r| r.name).collect();
+        assert_eq!(names, ["gtx980", "gtx960"]);
+    }
+
+    #[test]
+    fn reregistered_device_name_mints_a_fresh_id() {
+        let reg = DeviceRegistry::new();
+        let a = reg.register("lab", HwParams::paper_defaults(), PowerModel::gtx980());
+        let mut hw2 = HwParams::paper_defaults();
+        hw2.l2_lat += 10.0;
+        let b = reg.register("lab", hw2, PowerModel::gtx980());
+        assert_ne!(a, b, "records are immutable; re-register mints a new id");
+        // The name resolves to the newest record; the old id still works.
+        assert_eq!(reg.by_name("lab").unwrap().id, b);
+        assert_eq!(reg.get(a).unwrap().hw, HwParams::paper_defaults());
+        assert_eq!(reg.get(b).unwrap().hw, hw2);
+    }
+
+    #[test]
+    fn catalog_updates_counters_in_place() {
+        let cat = KernelCatalog::new();
+        let a = cat.register("VA", counters());
+        let mut c2 = counters();
+        c2.avr_inst = 42.0;
+        let b = cat.register("VA", c2);
+        assert_eq!(a, b, "known names keep their id");
+        assert_eq!(cat.len(), 1);
+        assert_eq!(cat.get(a).unwrap().counters.avr_inst, 42.0);
+        assert_eq!(cat.resolve("VA").unwrap().id, a);
+        assert_eq!(cat.resolve(&a.to_string()).unwrap().name, "VA");
+        assert!(cat.resolve("krn-9").is_none());
+        assert_eq!(cat.names(), ["VA"]);
+    }
+
+    #[test]
+    fn resolve_prefers_live_ids_then_names() {
+        let reg = DeviceRegistry::new();
+        let a = reg.register("gpu-a", HwParams::paper_defaults(), PowerModel::gtx980());
+        // A handle-shaped string resolves by id when that id is live.
+        assert_eq!(reg.resolve_id("dev-1"), Some(a));
+        assert_eq!(reg.resolve_id("gpu-a"), Some(a));
+        assert_eq!(reg.resolve_id("dev-99"), None);
+        let cat = KernelCatalog::new();
+        let k = cat.register("va", counters());
+        assert_eq!(cat.resolve_id("krn-1"), Some(k));
+        assert_eq!(cat.resolve_id("va"), Some(k));
+        assert_eq!(cat.resolve_id("krn-9"), None);
+    }
+
+    #[test]
+    fn reserved_names_are_rejected_at_the_source() {
+        // Handle-shaped names would be shadowed by real ids; every
+        // construction path funnels through try_register, which
+        // refuses them.
+        let hw = HwParams::paper_defaults();
+        let reg = DeviceRegistry::new();
+        assert_eq!(
+            reg.try_register("dev-9", hw, PowerModel::gtx980(), 10),
+            Err(RegisterError::ReservedName)
+        );
+        assert_eq!(
+            reg.try_register("krn-3", hw, PowerModel::gtx980(), 10),
+            Err(RegisterError::ReservedName)
+        );
+        assert_eq!(reg.len(), 0);
+        let cat = KernelCatalog::new();
+        assert_eq!(cat.try_register("krn-1", counters(), 10), Err(RegisterError::ReservedName));
+        assert_eq!(cat.len(), 0);
+        assert!(is_reserved_name("dev-9"));
+        assert!(is_reserved_name("krn-3"));
+        assert!(!is_reserved_name("gtx980"));
+        assert!(!is_reserved_name("dev-x"));
+        assert!(!is_reserved_name(""));
+    }
+
+    #[test]
+    fn try_register_enforces_the_bound_under_the_lock() {
+        let reg = DeviceRegistry::new();
+        let hw = HwParams::paper_defaults();
+        assert!(reg.try_register("a", hw, PowerModel::gtx980(), 1).is_ok());
+        assert_eq!(
+            reg.try_register("b", hw, PowerModel::gtx980(), 1),
+            Err(RegisterError::Full)
+        );
+        assert_eq!(reg.len(), 1);
+        let cat = KernelCatalog::new();
+        let k = cat.try_register("k", counters(), 1).unwrap();
+        // In-place re-profiles bypass the bound; new names do not.
+        let mut c2 = counters();
+        c2.avr_inst = 7.0;
+        assert_eq!(cat.try_register("k", c2, 1), Ok(k));
+        assert_eq!(cat.get(k).unwrap().counters.avr_inst, 7.0);
+        assert_eq!(cat.try_register("k2", counters(), 1), Err(RegisterError::Full));
+        assert_eq!(cat.len(), 1);
+    }
+
+    #[test]
+    fn register_from_config_measures_per_device_params() {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("configs");
+        let reg = DeviceRegistry::new();
+        let a = reg.register_from_config(&dir.join("gtx980.toml")).unwrap();
+        let b = reg.register_from_config(&dir.join("gtx960.toml")).unwrap();
+        let ra = reg.get(a).unwrap();
+        let rb = reg.get(b).unwrap();
+        assert_eq!(ra.name, "gtx980");
+        assert_eq!(rb.name, "gtx960");
+        // The 960 config describes a slower memory subsystem; the
+        // measured Eq. (4) slope must reflect it (no parameter copying).
+        assert!(rb.hw.dm_lat_a > ra.hw.dm_lat_a);
+    }
+}

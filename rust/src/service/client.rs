@@ -64,6 +64,12 @@ impl Client {
         self.request("POST", path, Some(body))
     }
 
+    /// POST a built JSON value (the typed-v2 convenience: render once,
+    /// send, no string templating at call sites).
+    pub fn post_json(&mut self, path: &str, body: &Value) -> std::io::Result<ClientResponse> {
+        self.post(path, &body.render())
+    }
+
     /// Send one request and block for its response.
     pub fn request(
         &mut self,

@@ -93,12 +93,26 @@ pub enum Route {
     Predict,
     Grid,
     Advise,
+    DevicesV2,
+    KernelsV2,
+    PredictV2,
+    AdviseV2,
     Other,
 }
 
 impl Route {
-    pub const ALL: [Route; 6] =
-        [Route::Healthz, Route::Metrics, Route::Predict, Route::Grid, Route::Advise, Route::Other];
+    pub const ALL: [Route; 10] = [
+        Route::Healthz,
+        Route::Metrics,
+        Route::Predict,
+        Route::Grid,
+        Route::Advise,
+        Route::DevicesV2,
+        Route::KernelsV2,
+        Route::PredictV2,
+        Route::AdviseV2,
+        Route::Other,
+    ];
 
     pub fn of_path(path: &str) -> Route {
         match path {
@@ -107,6 +121,10 @@ impl Route {
             "/v1/predict" => Route::Predict,
             "/v1/grid" => Route::Grid,
             "/v1/advise" => Route::Advise,
+            "/v2/devices" => Route::DevicesV2,
+            "/v2/kernels" => Route::KernelsV2,
+            "/v2/predict" => Route::PredictV2,
+            "/v2/advise" => Route::AdviseV2,
             _ => Route::Other,
         }
     }
@@ -118,6 +136,10 @@ impl Route {
             Route::Predict => "/v1/predict",
             Route::Grid => "/v1/grid",
             Route::Advise => "/v1/advise",
+            Route::DevicesV2 => "/v2/devices",
+            Route::KernelsV2 => "/v2/kernels",
+            Route::PredictV2 => "/v2/predict",
+            Route::AdviseV2 => "/v2/advise",
             Route::Other => "other",
         }
     }
@@ -129,7 +151,11 @@ impl Route {
             Route::Predict => 2,
             Route::Grid => 3,
             Route::Advise => 4,
-            Route::Other => 5,
+            Route::DevicesV2 => 5,
+            Route::KernelsV2 => 6,
+            Route::PredictV2 => 7,
+            Route::AdviseV2 => 8,
+            Route::Other => 9,
         }
     }
 }
@@ -296,6 +322,8 @@ mod tests {
     fn route_mapping_is_total() {
         assert_eq!(Route::of_path("/healthz"), Route::Healthz);
         assert_eq!(Route::of_path("/v1/predict"), Route::Predict);
+        assert_eq!(Route::of_path("/v2/predict"), Route::PredictV2);
+        assert_eq!(Route::of_path("/v2/devices"), Route::DevicesV2);
         assert_eq!(Route::of_path("/nope"), Route::Other);
         for r in Route::ALL {
             assert_eq!(Route::of_path(r.name()), if r == Route::Other { Route::Other } else { r });

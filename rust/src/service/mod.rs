@@ -16,15 +16,23 @@
 //!   │ server.rs   acceptor → bounded queue → N workers │
 //!   │             (429 + Retry-After past high-water)  │
 //!   │ http.rs     HTTP/1.1 parse / serialize           │
-//!   │ routes.rs   /healthz /metrics /v1/{predict,      │
-//!   │             grid, advise}                        │
+//!   │ routes.rs   /healthz /metrics                    │
+//!   │             /v1/{predict, grid, advise}  (shim)  │
+//!   │             /v2/{devices, kernels, predict,      │
+//!   │             advise}           (handle protocol)  │
 //!   │ json.rs     hand-rolled JSON both directions     │
 //!   │ metrics.rs  counters + latency histograms        │
 //!   └────────────────────────┬─────────────────────────┘
 //!                            │
-//!                  engine::Engine (PR 1)
+//!            engine::Engine + registry::{DeviceRegistry,
+//!            KernelCatalog}          (DESIGN.md §8, §10)
 //!              dvfs::{PowerModel, advise}  (§VII)
 //! ```
+//!
+//! `/v2` is the typed, handle-based protocol (DESIGN.md §10): register
+//! devices and kernels once, then predict/advise by
+//! `(device, kernel, frequency)` handles — batch-first. `/v1` remains
+//! as a compatibility shim interpreted against the boot GPU.
 //!
 //! Start one with [`Service::start`] (the CLI's `serve` subcommand does
 //! exactly this after profiling the Table VI kernels), drive it with
@@ -39,5 +47,5 @@ pub mod server;
 
 pub use client::{Client, ClientResponse};
 pub use metrics::{Histogram, Metrics, Route};
-pub use routes::ServiceState;
+pub use routes::{ServiceState, DEFAULT_DEVICE_NAME};
 pub use server::{Service, ServiceConfig};

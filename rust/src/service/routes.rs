@@ -1,78 +1,113 @@
-//! Route handlers (DESIGN.md §9): pure functions from a parsed
+//! Route handlers (DESIGN.md §9–§10): pure functions from a parsed
 //! [`HttpRequest`] to an [`HttpResponse`], with no socket handling —
 //! the server loop owns I/O, this module owns the wire protocol.
 //!
-//! | route            | method | body                                          |
-//! |------------------|--------|-----------------------------------------------|
-//! | `/healthz`       | GET    | —                                             |
-//! | `/metrics`       | GET    | —                                             |
-//! | `/v1/predict`    | POST   | `{kernel|counters, core_mhz, mem_mhz}`        |
-//! | `/v1/grid`       | POST   | `{kernel|counters, pairs?}`                   |
-//! | `/v1/advise`     | POST   | `{kernel|counters, objective?, deadline_us?, pairs?, include_points?}` |
+//! | route            | method   | body                                        |
+//! |------------------|----------|---------------------------------------------|
+//! | `/healthz`       | GET      | —                                           |
+//! | `/metrics`       | GET      | —                                           |
+//! | `/v1/predict`    | POST     | `{kernel\|counters, core_mhz, mem_mhz}`     |
+//! | `/v1/grid`       | POST     | `{kernel\|counters, pairs?}`                |
+//! | `/v1/advise`     | POST     | `{kernel\|counters, objective?, deadline_us?, pairs?, include_points?}` |
+//! | `/v2/devices`    | POST/GET | `{name, hw?, power?}` / —                   |
+//! | `/v2/kernels`    | POST/GET | `{name, counters}` / —                      |
+//! | `/v2/predict`    | POST     | `{requests: [{device, kernel, core_mhz, mem_mhz}]}` (batch-first) |
+//! | `/v2/advise`     | POST     | `{device, kernel, objective?, deadline_us?, pairs?, include_points?}` |
 //!
-//! Kernels are resolved against profiles registered at startup (the
-//! `serve` subcommand profiles the Table VI workloads once at the
-//! baseline, exactly like the paper's one-shot counter pass); callers
-//! with their own profiler pass raw `counters` instead.
+//! **v2 is the handle-based protocol** (DESIGN.md §10): devices and
+//! kernels are registered once and addressed by stable `dev-<n>` /
+//! `krn-<n>` handles (names also resolve), so requests never re-ship
+//! `HwParams`/`KernelCounters` blobs. **v1 is a compatibility shim**:
+//! every v1 request is interpreted against the service's *default
+//! device* (the GPU the server booted with, `dev-1`); named kernels
+//! resolve through the same catalog v2 registers into, and inline
+//! `counters` run as an anonymous, uncatalogued kernel. Both paths
+//! produce byte-identical predictions for the same inputs — the shim
+//! is routing, not arithmetic.
+//!
+//! Every error body is structured JSON `{error, code}` with a stable
+//! machine-readable `code`: `bad_json`, `bad_request`,
+//! `unknown_kernel`, `unknown_device`, `unknown_route`,
+//! `method_not_allowed`, `registry_full`, `internal` (plus
+//! `overloaded` and `bad_http` from the server loop).
 
+use std::sync::Arc;
 use std::time::Instant;
 
-use crate::dvfs::{ConfigPoint, Objective, PowerModel};
+use crate::dvfs::{ConfigPoint, Objective, PowerModel, VfCurve};
 use crate::engine::{Engine, Estimate};
-use crate::model::KernelCounters;
+use crate::model::{HwParams, KernelCounters};
+use crate::registry::{
+    DeviceId, DeviceRecord, DeviceRegistry, FreqPoint, KernelCatalog, KernelId, RegisterError,
+};
 
 use super::http::{HttpRequest, HttpResponse};
 use super::json::Value;
 use super::metrics::{Metrics, Route};
 
-/// Everything the handlers read: the shared engine, the power model and
-/// the kernel-profile registry. Built once, shared (`Arc`) across the
-/// worker pool.
+/// Name the boot GPU is registered under in the device registry.
+pub const DEFAULT_DEVICE_NAME: &str = "default";
+
+/// Everything the handlers read: the shared engine (with its device
+/// registry and kernel catalog attached) and the default frequency
+/// grid. Built once, shared (`Arc`) across the worker pool.
 pub struct ServiceState {
     pub engine: Engine,
+    /// The default device's power model (kept for v1 compatibility;
+    /// v2 devices each carry their own).
     pub power: PowerModel,
     /// Grid used when a request omits `pairs` (the paper's 49 pairs).
     pub default_pairs: Vec<(f64, f64)>,
-    profiles: Vec<(String, KernelCounters)>,
+    pub registry: Arc<DeviceRegistry>,
+    pub catalog: Arc<KernelCatalog>,
+    /// Handle of the boot GPU every v1 request resolves to.
+    pub default_device: DeviceId,
     pub started: Instant,
 }
 
 impl ServiceState {
     pub fn new(engine: Engine, power: PowerModel, default_pairs: Vec<(f64, f64)>) -> Self {
+        let registry = Arc::new(DeviceRegistry::new());
+        let default_device =
+            registry.register(DEFAULT_DEVICE_NAME, *engine.hw(), power.clone());
+        let catalog = Arc::new(KernelCatalog::new());
+        let engine = engine
+            .with_handles(Arc::clone(&registry), Arc::clone(&catalog), default_device)
+            .expect("default device is freshly registered with the engine's parameters");
         ServiceState {
             engine,
             power,
             default_pairs,
-            profiles: Vec::new(),
+            registry,
+            catalog,
+            default_device,
             started: Instant::now(),
         }
     }
 
-    /// Register a profiled kernel for `{"kernel": name}` requests.
+    /// Register a profiled kernel for `{"kernel": name}` requests
+    /// (v1) and handle resolution (v2).
     pub fn register_kernel(&mut self, name: &str, counters: KernelCounters) {
-        match self.profiles.iter_mut().find(|(n, _)| n == name) {
-            Some((_, c)) => *c = counters,
-            None => self.profiles.push((name.to_string(), counters)),
-        }
+        self.catalog.register(name, counters);
     }
 
     pub fn counters_for(&self, name: &str) -> Option<KernelCounters> {
-        self.profiles.iter().find(|(n, _)| n == name).map(|(_, c)| *c)
+        self.catalog.by_name(name).map(|e| e.counters)
     }
 
-    pub fn kernel_names(&self) -> Vec<&str> {
-        self.profiles.iter().map(|(n, _)| n.as_str()).collect()
+    pub fn kernel_names(&self) -> Vec<String> {
+        self.catalog.names()
     }
 
     pub fn kernel_count(&self) -> usize {
-        self.profiles.len()
+        self.catalog.len()
     }
 }
 
-fn error_json(status: u16, message: &str) -> HttpResponse {
+fn error_json(status: u16, code: &str, message: &str) -> HttpResponse {
     HttpResponse::json(
         status,
-        Value::obj(vec![("error", Value::str(message))]).render(),
+        Value::obj(vec![("error", Value::str(message)), ("code", Value::str(code))]).render(),
     )
 }
 
@@ -84,7 +119,7 @@ pub fn handle(state: &ServiceState, metrics: &Metrics, req: &HttpRequest) -> Htt
     }));
     match result {
         Ok(resp) => resp,
-        Err(_) => error_json(500, "internal error (handler panicked)"),
+        Err(_) => error_json(500, "internal", "internal error (handler panicked)"),
     }
 }
 
@@ -95,8 +130,14 @@ fn dispatch(state: &ServiceState, metrics: &Metrics, req: &HttpRequest) -> HttpR
         ("POST", Route::Predict) => predict(state, req),
         ("POST", Route::Grid) => grid(state, req),
         ("POST", Route::Advise) => advise(state, req),
-        (_, Route::Other) => error_json(404, "unknown route"),
-        _ => error_json(405, "method not allowed for this route"),
+        ("POST", Route::DevicesV2) => v2_register_device(state, req),
+        ("GET", Route::DevicesV2) => v2_list_devices(state),
+        ("POST", Route::KernelsV2) => v2_register_kernel(state, req),
+        ("GET", Route::KernelsV2) => v2_list_kernels(state),
+        ("POST", Route::PredictV2) => v2_predict(state, req),
+        ("POST", Route::AdviseV2) => v2_advise(state, req),
+        (_, Route::Other) => error_json(404, "unknown_route", "unknown route"),
+        _ => error_json(405, "method_not_allowed", "method not allowed for this route"),
     }
 }
 
@@ -104,6 +145,7 @@ fn healthz(state: &ServiceState) -> HttpResponse {
     let body = Value::obj(vec![
         ("status", Value::str("ok")),
         ("backend", Value::str(state.engine.backend_name())),
+        ("devices", Value::num(state.registry.len() as f64)),
         ("kernels", Value::num(state.kernel_count() as f64)),
         (
             "uptime_ms",
@@ -122,8 +164,8 @@ fn metrics_route(state: &ServiceState, metrics: &Metrics) -> HttpResponse {
     HttpResponse::text(200, text)
 }
 
-/// Resolve the request's kernel: a registered profile name or an
-/// inline `counters` object.
+/// Resolve the v1 request's kernel: a registered profile name or an
+/// inline `counters` object (the anonymous-kernel shim path).
 fn resolve_counters(state: &ServiceState, body: &Value) -> Result<KernelCounters, String> {
     if let Some(name) = body.get("kernel").and_then(Value::as_str) {
         return state.counters_for(name).ok_or_else(|| {
@@ -141,20 +183,37 @@ fn resolve_counters(state: &ServiceState, body: &Value) -> Result<KernelCounters
 
 /// Strict-ish counters decoding: the fields the model always reads are
 /// required; the rest default like a simple global-memory kernel.
+/// Every numeric field must be non-negative and finite (the catalog
+/// persists these — a poisoned record would serve NaN/negative
+/// predictions to every client), and the model's divisors (`aw`,
+/// `n_sm`) must be positive.
 fn counters_from_json(v: &Value) -> Result<KernelCounters, String> {
+    let number = |key: &str, x: &Value| -> Result<f64, String> {
+        match x.as_f64() {
+            Some(f) if f.is_finite() && f >= 0.0 => Ok(f),
+            _ => Err(format!("counters.{key} must be a non-negative finite number")),
+        }
+    };
     let req = |key: &str| -> Result<f64, String> {
-        v.get(key)
-            .and_then(Value::as_f64)
-            .ok_or_else(|| format!("counters.{key} must be a number"))
+        match v.get(key) {
+            Some(x) => number(key, x),
+            None => Err(format!("counters.{key} must be a number")),
+        }
     };
     let opt = |key: &str, default: f64| -> Result<f64, String> {
         match v.get(key) {
             None => Ok(default),
-            Some(x) => x
-                .as_f64()
-                .ok_or_else(|| format!("counters.{key} must be a number")),
+            Some(x) => number(key, x),
         }
     };
+    for key in ["aw", "n_sm"] {
+        // NaN falls through here and is rejected by `number` below.
+        if let Some(f) = v.get(key).and_then(Value::as_f64) {
+            if f <= 0.0 {
+                return Err(format!("counters.{key} must be positive (the model divides by it)"));
+            }
+        }
+    }
     let gld_trans = req("gld_trans")?;
     Ok(KernelCounters {
         l2_hr: req("l2_hr")?,
@@ -177,6 +236,145 @@ fn counters_from_json(v: &Value) -> Result<KernelCounters, String> {
         gld_edge: opt("gld_edge", 0.0)?,
         mem_ops: opt("mem_ops", 1.0)?,
         l1_hr: opt("l1_hr", 0.0)?,
+    })
+}
+
+/// Render counters back to the wire shape `counters_from_json` accepts.
+/// Exhaustive destructuring (no `..`), like the engine's cache key:
+/// adding a `KernelCounters` field without extending the wire encoding
+/// is a compile error, never a silently-dropped field.
+fn counters_json(c: &KernelCounters) -> Value {
+    let KernelCounters {
+        l2_hr,
+        gld_trans,
+        avr_inst,
+        n_blocks,
+        wpb,
+        aw,
+        n_sm,
+        o_itrs,
+        i_itrs,
+        uses_smem,
+        smem_conflict,
+        gld_body,
+        gld_edge,
+        mem_ops,
+        l1_hr,
+    } = *c;
+    Value::obj(vec![
+        ("l2_hr", Value::num(l2_hr)),
+        ("gld_trans", Value::num(gld_trans)),
+        ("avr_inst", Value::num(avr_inst)),
+        ("n_blocks", Value::num(n_blocks)),
+        ("wpb", Value::num(wpb)),
+        ("aw", Value::num(aw)),
+        ("n_sm", Value::num(n_sm)),
+        ("o_itrs", Value::num(o_itrs)),
+        ("i_itrs", Value::num(i_itrs)),
+        ("uses_smem", Value::Bool(uses_smem)),
+        ("smem_conflict", Value::num(smem_conflict)),
+        ("gld_body", Value::num(gld_body)),
+        ("gld_edge", Value::num(gld_edge)),
+        ("mem_ops", Value::num(mem_ops)),
+        ("l1_hr", Value::num(l1_hr)),
+    ])
+}
+
+/// Exhaustive destructuring for the same reason as `counters_json`.
+fn hw_json(hw: &HwParams) -> Value {
+    let HwParams { dm_lat_a, dm_lat_b, dm_del, l2_lat, l2_del, sh_lat, inst_cycle } = *hw;
+    Value::obj(vec![
+        ("dm_lat_a", Value::num(dm_lat_a)),
+        ("dm_lat_b", Value::num(dm_lat_b)),
+        ("dm_del", Value::num(dm_del)),
+        ("l2_lat", Value::num(l2_lat)),
+        ("l2_del", Value::num(l2_del)),
+        ("sh_lat", Value::num(sh_lat)),
+        ("inst_cycle", Value::num(inst_cycle)),
+    ])
+}
+
+/// Decode a partial `hw` object over `defaults` (the boot device's
+/// measured parameters); every present field must be a finite number.
+fn hw_from_json(v: &Value, defaults: HwParams) -> Result<HwParams, String> {
+    if !matches!(v, Value::Obj(_)) {
+        return Err("`hw` must be an object".to_string());
+    }
+    let field = |key: &str, default: f64| -> Result<f64, String> {
+        match v.get(key) {
+            None => Ok(default),
+            Some(x) => match x.as_f64() {
+                Some(f) if f.is_finite() && f >= 0.0 => Ok(f),
+                _ => Err(format!("hw.{key} must be a non-negative finite number")),
+            },
+        }
+    };
+    Ok(HwParams {
+        dm_lat_a: field("dm_lat_a", defaults.dm_lat_a)?,
+        dm_lat_b: field("dm_lat_b", defaults.dm_lat_b)?,
+        dm_del: field("dm_del", defaults.dm_del)?,
+        l2_lat: field("l2_lat", defaults.l2_lat)?,
+        l2_del: field("l2_del", defaults.l2_del)?,
+        sh_lat: field("sh_lat", defaults.sh_lat)?,
+        inst_cycle: field("inst_cycle", defaults.inst_cycle)?,
+    })
+}
+
+/// Decode a `[[mhz, volts], ...]` V/f curve; validity (non-empty,
+/// positive finite, strictly ascending) is enforced by the shared
+/// `VfCurve::try_from_points` constructor.
+fn vf_from_json(v: &Value, key: &str) -> Result<VfCurve, String> {
+    let items = v
+        .as_array()
+        .ok_or_else(|| format!("power.{key} must be an array of [mhz, volts] pairs"))?;
+    let mut points = Vec::with_capacity(items.len());
+    for (i, item) in items.iter().enumerate() {
+        let pair = item
+            .as_array()
+            .ok_or_else(|| format!("power.{key}[{i}] must be [mhz, volts]"))?;
+        let (Some(f), Some(volts)) = (
+            pair.first().and_then(Value::as_f64),
+            pair.get(1).and_then(Value::as_f64),
+        ) else {
+            return Err(format!("power.{key}[{i}] must be two numbers"));
+        };
+        if pair.len() != 2 {
+            return Err(format!("power.{key}[{i}] must be exactly [mhz, volts]"));
+        }
+        points.push((f, volts));
+    }
+    VfCurve::try_from_points(points).map_err(|m| format!("power.{key}: {m}"))
+}
+
+/// Decode a partial `power` object over `defaults` (the boot device's
+/// power model — mirroring how partial `hw` inherits the boot GPU's
+/// measured parameters).
+fn power_from_json(v: &Value, defaults: &PowerModel) -> Result<PowerModel, String> {
+    if !matches!(v, Value::Obj(_)) {
+        return Err("`power` must be an object".to_string());
+    }
+    let d = defaults.clone();
+    let coeff = |key: &str, default: f64| -> Result<f64, String> {
+        match v.get(key) {
+            None => Ok(default),
+            Some(x) => match x.as_f64() {
+                Some(f) if f.is_finite() && f >= 0.0 => Ok(f),
+                _ => Err(format!("power.{key} must be a non-negative finite number")),
+            },
+        }
+    };
+    Ok(PowerModel {
+        core_curve: match v.get("core_vf") {
+            None => d.core_curve,
+            Some(c) => vf_from_json(c, "core_vf")?,
+        },
+        mem_curve: match v.get("mem_vf") {
+            None => d.mem_curve,
+            Some(c) => vf_from_json(c, "mem_vf")?,
+        },
+        core_coeff: coeff("core_coeff", d.core_coeff)?,
+        mem_coeff: coeff("mem_coeff", d.mem_coeff)?,
+        static_w: coeff("static_w", d.static_w)?,
     })
 }
 
@@ -211,11 +409,11 @@ fn resolve_pairs(state: &ServiceState, body: &Value) -> Result<Vec<(f64, f64)>, 
 fn parse_body(req: &HttpRequest) -> Result<Value, HttpResponse> {
     let text = req
         .body_str()
-        .map_err(|e| error_json(400, &e.message))?;
+        .map_err(|e| error_json(400, "bad_json", &e.message))?;
     if text.trim().is_empty() {
-        return Err(error_json(400, "request body must be a JSON object"));
+        return Err(error_json(400, "bad_json", "request body must be a JSON object"));
     }
-    Value::parse(text).map_err(|e| error_json(400, &e.to_string()))
+    Value::parse(text).map_err(|e| error_json(400, "bad_json", &e.to_string()))
 }
 
 fn estimate_json(cf: f64, mf: f64, e: &Estimate) -> Value {
@@ -246,7 +444,8 @@ fn config_point_json(p: &ConfigPoint) -> Value {
     ])
 }
 
-/// `POST /v1/predict` — one estimate at one frequency pair.
+/// `POST /v1/predict` — one estimate at one frequency pair on the
+/// default device.
 fn predict(state: &ServiceState, req: &HttpRequest) -> HttpResponse {
     let body = match parse_body(req) {
         Ok(v) => v,
@@ -254,25 +453,37 @@ fn predict(state: &ServiceState, req: &HttpRequest) -> HttpResponse {
     };
     let counters = match resolve_counters(state, &body) {
         Ok(c) => c,
-        Err(m) => return error_json(400, &m),
+        Err(m) => return error_json(400, v1_kernel_code(&body), &m),
     };
     let (Some(cf), Some(mf)) = (
         body.get("core_mhz").and_then(Value::as_f64),
         body.get("mem_mhz").and_then(Value::as_f64),
     ) else {
-        return error_json(400, "body needs numeric `core_mhz` and `mem_mhz`");
+        return error_json(400, "bad_request", "body needs numeric `core_mhz` and `mem_mhz`");
     };
     if !(cf.is_finite() && mf.is_finite() && cf > 0.0 && mf > 0.0) {
-        return error_json(400, "frequencies must be positive finite MHz");
+        return error_json(400, "bad_request", "frequencies must be positive finite MHz");
     }
     match state.engine.predict_one(&counters, cf, mf) {
         Ok(e) => HttpResponse::json(200, estimate_json(cf, mf, &e).render()),
-        Err(e) => error_json(500, &format!("prediction failed: {e:#}")),
+        Err(e) => error_json(500, "internal", &format!("prediction failed: {e:#}")),
     }
 }
 
-/// `POST /v1/grid` — a whole frequency-grid sweep (cache-served on
-/// repeats; the response carries the engine's cache counters).
+/// Error code for a failed v1 kernel resolution: an unknown *named*
+/// kernel is `unknown_kernel`; malformed/missing counters are
+/// `bad_request`.
+fn v1_kernel_code(body: &Value) -> &'static str {
+    if body.get("kernel").and_then(Value::as_str).is_some() {
+        "unknown_kernel"
+    } else {
+        "bad_request"
+    }
+}
+
+/// `POST /v1/grid` — a whole frequency-grid sweep on the default
+/// device (cache-served on repeats; the response carries the engine's
+/// cache counters).
 fn grid(state: &ServiceState, req: &HttpRequest) -> HttpResponse {
     let body = match parse_body(req) {
         Ok(v) => v,
@@ -280,15 +491,15 @@ fn grid(state: &ServiceState, req: &HttpRequest) -> HttpResponse {
     };
     let counters = match resolve_counters(state, &body) {
         Ok(c) => c,
-        Err(m) => return error_json(400, &m),
+        Err(m) => return error_json(400, v1_kernel_code(&body), &m),
     };
     let pairs = match resolve_pairs(state, &body) {
         Ok(p) => p,
-        Err(m) => return error_json(400, &m),
+        Err(m) => return error_json(400, "bad_request", &m),
     };
     let ests = match state.engine.predict_grid(&counters, &pairs) {
         Ok(v) => v,
-        Err(e) => return error_json(500, &format!("prediction failed: {e:#}")),
+        Err(e) => return error_json(500, "internal", &format!("prediction failed: {e:#}")),
     };
     let cache = state.engine.cache_stats();
     let points: Vec<Value> = pairs
@@ -327,46 +538,33 @@ fn parse_objective(body: &Value) -> Result<Objective, String> {
     }
 }
 
-/// `POST /v1/advise` — the DVFS oracle: energy-optimal (core, mem)
-/// under an optional absolute deadline (the paper's §VII real-time
-/// controller application).
-fn advise(state: &ServiceState, req: &HttpRequest) -> HttpResponse {
-    let body = match parse_body(req) {
-        Ok(v) => v,
-        Err(resp) => return resp,
-    };
-    let counters = match resolve_counters(state, &body) {
-        Ok(c) => c,
-        Err(m) => return error_json(400, &m),
-    };
-    let pairs = match resolve_pairs(state, &body) {
-        Ok(p) => p,
-        Err(m) => return error_json(400, &m),
-    };
-    let objective = match parse_objective(&body) {
-        Ok(o) => o,
-        Err(m) => return error_json(400, &m),
-    };
-    let deadline_us = match body.get("deadline_us") {
-        None => None,
+fn parse_deadline(body: &Value) -> Result<Option<f64>, String> {
+    match body.get("deadline_us") {
+        None => Ok(None),
         Some(v) => match v.as_f64() {
-            Some(d) if d > 0.0 && d.is_finite() => Some(d),
-            _ => return error_json(400, "`deadline_us` must be a positive finite number"),
+            Some(d) if d > 0.0 && d.is_finite() => Ok(Some(d)),
+            _ => Err("`deadline_us` must be a positive finite number".to_string()),
         },
-    };
-    let (best, points) =
-        match crate::dvfs::advise_with_engine(&counters, &state.engine, &state.power, &pairs, objective)
-        {
-            Ok(r) => r,
-            Err(e) => return error_json(500, &format!("advisor failed: {e:#}")),
-        };
+    }
+}
+
+/// Shared v1/v2 advise response assembly: apply the absolute-deadline
+/// re-selection (fall back to the fastest point with `feasible:false`
+/// when nothing meets it — a real-time controller still needs *a*
+/// setting to apply), then render. `extra` fields lead the object
+/// (the v2 handlers echo the resolved handles there).
+fn advise_payload(
+    best: ConfigPoint,
+    points: &[ConfigPoint],
+    objective: Objective,
+    deadline_us: Option<f64>,
+    include_points: bool,
+    extra: Vec<(&str, Value)>,
+) -> Value {
     let fastest = *points
         .iter()
         .min_by(|a, b| a.time_us.total_cmp(&b.time_us))
         .expect("non-empty grid");
-    // Absolute deadline: re-select among points meeting it. If nothing
-    // does, report infeasible and fall back to the fastest point — a
-    // real-time controller still needs *a* setting to apply.
     let (best, feasible) = match deadline_us {
         None => (best, true),
         Some(deadline) => {
@@ -384,30 +582,337 @@ fn advise(state: &ServiceState, req: &HttpRequest) -> HttpResponse {
             }
         }
     };
-    let mut fields = vec![
-        (
-            "objective",
-            Value::str(match objective {
-                Objective::Energy => "energy".to_string(),
-                Objective::Edp => "edp".to_string(),
-                Objective::EnergyWithSlack(s) => format!("slack:{s}"),
-            }),
-        ),
-        ("feasible", Value::Bool(feasible)),
-        ("best", config_point_json(&best)),
-        ("fastest", config_point_json(&fastest)),
-        ("points_evaluated", Value::num(points.len() as f64)),
-    ];
+    let mut fields = extra;
+    fields.push((
+        "objective",
+        Value::str(match objective {
+            Objective::Energy => "energy".to_string(),
+            Objective::Edp => "edp".to_string(),
+            Objective::EnergyWithSlack(s) => format!("slack:{s}"),
+        }),
+    ));
+    fields.push(("feasible", Value::Bool(feasible)));
+    fields.push(("best", config_point_json(&best)));
+    fields.push(("fastest", config_point_json(&fastest)));
+    fields.push(("points_evaluated", Value::num(points.len() as f64)));
     if let Some(d) = deadline_us {
         fields.push(("deadline_us", Value::num(d)));
     }
-    if body.get("include_points").and_then(Value::as_bool) == Some(true) {
+    if include_points {
         fields.push((
             "points",
             Value::arr(points.iter().map(config_point_json).collect()),
         ));
     }
-    HttpResponse::json(200, Value::obj(fields).render())
+    Value::obj(fields)
+}
+
+/// `POST /v1/advise` — the DVFS oracle on the default device:
+/// energy-optimal (core, mem) under an optional absolute deadline (the
+/// paper's §VII real-time controller application).
+fn advise(state: &ServiceState, req: &HttpRequest) -> HttpResponse {
+    let body = match parse_body(req) {
+        Ok(v) => v,
+        Err(resp) => return resp,
+    };
+    let counters = match resolve_counters(state, &body) {
+        Ok(c) => c,
+        Err(m) => return error_json(400, v1_kernel_code(&body), &m),
+    };
+    let pairs = match resolve_pairs(state, &body) {
+        Ok(p) => p,
+        Err(m) => return error_json(400, "bad_request", &m),
+    };
+    let objective = match parse_objective(&body) {
+        Ok(o) => o,
+        Err(m) => return error_json(400, "bad_request", &m),
+    };
+    let deadline_us = match parse_deadline(&body) {
+        Ok(d) => d,
+        Err(m) => return error_json(400, "bad_request", &m),
+    };
+    let (best, points) =
+        match crate::dvfs::advise_with_engine(&counters, &state.engine, &state.power, &pairs, objective)
+        {
+            Ok(r) => r,
+            Err(e) => return error_json(500, "internal", &format!("advisor failed: {e:#}")),
+        };
+    let include_points = body.get("include_points").and_then(Value::as_bool) == Some(true);
+    let payload =
+        advise_payload(best, &points, objective, deadline_us, include_points, Vec::new());
+    HttpResponse::json(200, payload.render())
+}
+
+/// Registration bounds: records are immutable and never evicted (that
+/// is what makes the handles stable), so a public service must bound
+/// how many an unauthenticated client can create. Past the bound,
+/// registration answers 429 `registry_full`; prediction routes are
+/// unaffected.
+const MAX_DEVICES: usize = 1024;
+const MAX_KERNELS: usize = 4096;
+
+/// `POST /v2/devices` — register a GPU: a name plus (optionally
+/// partial) measured `hw` parameters and a `power` model (both
+/// defaulting field-wise to the boot device's). Returns the fresh
+/// `dev-<n>` handle. Re-registering a name mints a new handle; the
+/// name resolves to the newest record.
+fn v2_register_device(state: &ServiceState, req: &HttpRequest) -> HttpResponse {
+    let body = match parse_body(req) {
+        Ok(v) => v,
+        Err(resp) => return resp,
+    };
+    let Some(name) = body.get("name").and_then(Value::as_str).filter(|n| !n.is_empty()) else {
+        return error_json(400, "bad_request", "body needs a non-empty `name` string");
+    };
+    let hw = match body.get("hw") {
+        None => *state.engine.hw(),
+        Some(o) => match hw_from_json(o, *state.engine.hw()) {
+            Ok(hw) => hw,
+            Err(m) => return error_json(400, "bad_request", &m),
+        },
+    };
+    let power = match body.get("power") {
+        None => state.power.clone(),
+        Some(o) => match power_from_json(o, &state.power) {
+            Ok(p) => p,
+            Err(m) => return error_json(400, "bad_request", &m),
+        },
+    };
+    // Name validity and the bound are enforced by the registry itself
+    // (the bound inside its write lock, so concurrent workers cannot
+    // overshoot it).
+    let id = match state.registry.try_register(name, hw, power, MAX_DEVICES) {
+        Ok(id) => id,
+        Err(RegisterError::Full) => {
+            return error_json(429, "registry_full", "device registry is full")
+        }
+        Err(e) => return error_json(400, "bad_request", &e.to_string()),
+    };
+    let resp = Value::obj(vec![
+        ("device", Value::str(id.to_string())),
+        ("name", Value::str(name)),
+        ("hw", hw_json(&hw)),
+    ]);
+    HttpResponse::json(200, resp.render())
+}
+
+fn device_json(r: &DeviceRecord) -> Value {
+    Value::obj(vec![
+        ("device", Value::str(r.id.to_string())),
+        ("name", Value::str(r.name.clone())),
+        ("hw", hw_json(&r.hw)),
+    ])
+}
+
+/// `GET /v2/devices` — every registered device, in registration order.
+fn v2_list_devices(state: &ServiceState) -> HttpResponse {
+    let records = state.registry.list();
+    let resp = Value::obj(vec![
+        ("devices", Value::arr(records.iter().map(device_json).collect())),
+        ("count", Value::num(records.len() as f64)),
+    ]);
+    HttpResponse::json(200, resp.render())
+}
+
+/// `POST /v2/kernels` — catalogue a kernel's baseline-profiled
+/// counters under a name. Returns the `krn-<n>` handle; re-registering
+/// a known name keeps its handle and updates the counters.
+fn v2_register_kernel(state: &ServiceState, req: &HttpRequest) -> HttpResponse {
+    let body = match parse_body(req) {
+        Ok(v) => v,
+        Err(resp) => return resp,
+    };
+    let Some(name) = body.get("name").and_then(Value::as_str).filter(|n| !n.is_empty()) else {
+        return error_json(400, "bad_request", "body needs a non-empty `name` string");
+    };
+    let Some(raw) = body.get("counters") else {
+        return error_json(400, "bad_request", "body needs a `counters` object");
+    };
+    let counters = match counters_from_json(raw) {
+        Ok(c) => c,
+        Err(m) => return error_json(400, "bad_request", &m),
+    };
+    // Re-profiling a known name updates in place; only NEW names grow
+    // the catalog, so only they hit the bound (checked inside the
+    // catalog's write lock — concurrency-safe).
+    let id = match state.catalog.try_register(name, counters, MAX_KERNELS) {
+        Ok(id) => id,
+        Err(RegisterError::Full) => {
+            return error_json(429, "registry_full", "kernel catalog is full")
+        }
+        Err(e) => return error_json(400, "bad_request", &e.to_string()),
+    };
+    let resp = Value::obj(vec![
+        ("kernel", Value::str(id.to_string())),
+        ("name", Value::str(name)),
+    ]);
+    HttpResponse::json(200, resp.render())
+}
+
+/// `GET /v2/kernels` — the catalogue, counters included.
+fn v2_list_kernels(state: &ServiceState) -> HttpResponse {
+    let entries = state.catalog.list();
+    let kernels: Vec<Value> = entries
+        .iter()
+        .map(|e| {
+            Value::obj(vec![
+                ("kernel", Value::str(e.id.to_string())),
+                ("name", Value::str(e.name.clone())),
+                ("counters", counters_json(&e.counters)),
+            ])
+        })
+        .collect();
+    let resp = Value::obj(vec![
+        ("kernels", Value::arr(kernels)),
+        ("count", Value::num(entries.len() as f64)),
+    ]);
+    HttpResponse::json(200, resp.render())
+}
+
+/// Resolve one v2 request item's handles to ids (no record clones —
+/// consumers that need the full record fetch it through the engine),
+/// or answer with the right structured error (404
+/// `unknown_device`/`unknown_kernel`, 400 `bad_request`).
+fn resolve_item(
+    state: &ServiceState,
+    item: &Value,
+    ctx: &str,
+) -> Result<(DeviceId, KernelId), HttpResponse> {
+    let Some(device) = item.get("device").and_then(Value::as_str) else {
+        return Err(error_json(
+            400,
+            "bad_request",
+            &format!("{ctx}: `device` must be a handle string (dev-<n> or a name)"),
+        ));
+    };
+    let Some(kernel) = item.get("kernel").and_then(Value::as_str) else {
+        return Err(error_json(
+            400,
+            "bad_request",
+            &format!("{ctx}: `kernel` must be a handle string (krn-<n> or a name)"),
+        ));
+    };
+    let Some(did) = state.registry.resolve_id(device) else {
+        return Err(error_json(
+            404,
+            "unknown_device",
+            &format!("{ctx}: unknown device `{device}`"),
+        ));
+    };
+    let Some(kid) = state.catalog.resolve_id(kernel) else {
+        return Err(error_json(
+            404,
+            "unknown_kernel",
+            &format!("{ctx}: unknown kernel `{kernel}`"),
+        ));
+    };
+    Ok((did, kid))
+}
+
+/// `POST /v2/predict` — the batch-first handle path: many
+/// `(device, kernel, frequency)` tuples per request, answered in
+/// order. The whole batch resolves before anything is predicted, so a
+/// single bad tuple fails the request without partial work.
+fn v2_predict(state: &ServiceState, req: &HttpRequest) -> HttpResponse {
+    let body = match parse_body(req) {
+        Ok(v) => v,
+        Err(resp) => return resp,
+    };
+    let Some(items) = body.get("requests").and_then(Value::as_array) else {
+        return error_json(400, "bad_request", "body needs a `requests` array");
+    };
+    if items.is_empty() {
+        return error_json(400, "bad_request", "`requests` must not be empty");
+    }
+    let mut tuples = Vec::with_capacity(items.len());
+    for (i, item) in items.iter().enumerate() {
+        let ctx = format!("requests[{i}]");
+        // resolve_item is id-only (no record clones); the engine
+        // memoizes the actual record fetch per distinct handle.
+        let (did, kid) = match resolve_item(state, item, &ctx) {
+            Ok(pair) => pair,
+            Err(resp) => return resp,
+        };
+        let (Some(cf), Some(mf)) = (
+            item.get("core_mhz").and_then(Value::as_f64),
+            item.get("mem_mhz").and_then(Value::as_f64),
+        ) else {
+            return error_json(
+                400,
+                "bad_request",
+                &format!("{ctx}: needs numeric `core_mhz` and `mem_mhz`"),
+            );
+        };
+        let point = FreqPoint::new(cf, mf);
+        if !point.is_valid() {
+            return error_json(
+                400,
+                "bad_request",
+                &format!("{ctx}: frequencies must be positive finite MHz"),
+            );
+        }
+        tuples.push((did, kid, point));
+    }
+    let estimates = match state.engine.predict_tuples(&tuples) {
+        Ok(v) => v,
+        Err(e) => return error_json(500, "internal", &format!("prediction failed: {e:#}")),
+    };
+    let results: Vec<Value> = estimates
+        .iter()
+        .zip(&tuples)
+        .map(|(e, &(d, k, p))| {
+            let mut fields = vec![
+                ("device".to_string(), Value::str(d.to_string())),
+                ("kernel".to_string(), Value::str(k.to_string())),
+            ];
+            if let Value::Obj(rest) = estimate_json(p.core_mhz, p.mem_mhz, e) {
+                fields.extend(rest);
+            }
+            Value::Obj(fields)
+        })
+        .collect();
+    let resp = Value::obj(vec![
+        ("results", Value::arr(results)),
+        ("count", Value::num(tuples.len() as f64)),
+    ]);
+    HttpResponse::json(200, resp.render())
+}
+
+/// `POST /v2/advise` — the DVFS oracle through handles: the device's
+/// own registered power model drives the energy arithmetic.
+fn v2_advise(state: &ServiceState, req: &HttpRequest) -> HttpResponse {
+    let body = match parse_body(req) {
+        Ok(v) => v,
+        Err(resp) => return resp,
+    };
+    let (did, kid) = match resolve_item(state, &body, "body") {
+        Ok(pair) => pair,
+        Err(resp) => return resp,
+    };
+    let pairs = match resolve_pairs(state, &body) {
+        Ok(p) => p,
+        Err(m) => return error_json(400, "bad_request", &m),
+    };
+    let objective = match parse_objective(&body) {
+        Ok(o) => o,
+        Err(m) => return error_json(400, "bad_request", &m),
+    };
+    let deadline_us = match parse_deadline(&body) {
+        Ok(d) => d,
+        Err(m) => return error_json(400, "bad_request", &m),
+    };
+    let (best, points) =
+        match crate::dvfs::advise_with_handles(&state.engine, did, kid, &pairs, objective) {
+            Ok(r) => r,
+            Err(e) => return error_json(500, "internal", &format!("advisor failed: {e:#}")),
+        };
+    let include_points = body.get("include_points").and_then(Value::as_bool) == Some(true);
+    let extra = vec![
+        ("device", Value::str(did.to_string())),
+        ("kernel", Value::str(kid.to_string())),
+    ];
+    let payload = advise_payload(best, &points, objective, deadline_us, include_points, extra);
+    HttpResponse::json(200, payload.render())
 }
 
 #[cfg(test)]
@@ -517,8 +1022,18 @@ mod tests {
         ] {
             let resp = handle(&st, &m, &post("/v1/predict", body));
             assert_eq!(resp.status, 400, "body `{body}` -> {}", resp.body);
-            assert!(Value::parse(&resp.body).unwrap().get("error").is_some());
+            let v = Value::parse(&resp.body).unwrap();
+            assert!(v.get("error").is_some());
+            assert!(v.get("code").and_then(Value::as_str).is_some(), "{}", resp.body);
         }
+        // The unknown-named-kernel case carries its specific code.
+        let resp = handle(
+            &st,
+            &m,
+            &post("/v1/predict", r#"{"kernel":"NOPE","core_mhz":700,"mem_mhz":700}"#),
+        );
+        let v = Value::parse(&resp.body).unwrap();
+        assert_eq!(v.get("code").and_then(Value::as_str), Some("unknown_kernel"));
     }
 
     #[test]
@@ -654,6 +1169,8 @@ mod tests {
         let v = Value::parse(&h.body).unwrap();
         assert_eq!(v.get("status").and_then(Value::as_str), Some("ok"));
         assert_eq!(v.get("kernels").and_then(Value::as_f64), Some(1.0));
+        // The boot GPU is always registered as the default device.
+        assert_eq!(v.get("devices").and_then(Value::as_f64), Some(1.0));
 
         let mx = handle(&st, &m, &get("/metrics"));
         assert_eq!(mx.status, 200);
@@ -662,6 +1179,7 @@ mod tests {
         assert_eq!(handle(&st, &m, &get("/nope")).status, 404);
         assert_eq!(handle(&st, &m, &get("/v1/predict")).status, 405);
         assert_eq!(handle(&st, &m, &post("/healthz", "{}")).status, 405);
+        assert_eq!(handle(&st, &m, &get("/v2/predict")).status, 405);
     }
 
     #[test]
@@ -672,5 +1190,274 @@ mod tests {
         st.register_kernel("VA", c);
         assert_eq!(st.kernel_count(), 1);
         assert_eq!(st.counters_for("VA").unwrap().avr_inst, 99.0);
+    }
+
+    // ---- /v2 ----
+
+    #[test]
+    fn v2_device_lifecycle_register_list_resolve() {
+        let st = state();
+        let m = Metrics::default();
+        // The boot device pre-exists as dev-1 "default".
+        let r = handle(&st, &m, &get("/v2/devices"));
+        assert_eq!(r.status, 200);
+        let v = Value::parse(&r.body).unwrap();
+        assert_eq!(v.get("count").and_then(Value::as_f64), Some(1.0));
+        let first = &v.get("devices").and_then(Value::as_array).unwrap()[0];
+        assert_eq!(first.get("device").and_then(Value::as_str), Some("dev-1"));
+        assert_eq!(first.get("name").and_then(Value::as_str), Some(DEFAULT_DEVICE_NAME));
+
+        // Register a second GPU with partially-overridden hw + power.
+        let body = r#"{"name":"gtx960","hw":{"dm_lat_a":240.0,"l2_lat":210.0},
+            "power":{"static_w":18.0,"core_vf":[[400,0.8],[1000,1.15]]}}"#;
+        let r = handle(&st, &m, &post("/v2/devices", body));
+        assert_eq!(r.status, 200, "{}", r.body);
+        let v = Value::parse(&r.body).unwrap();
+        assert_eq!(v.get("device").and_then(Value::as_str), Some("dev-2"));
+        let hw = v.get("hw").unwrap();
+        assert_eq!(hw.get("dm_lat_a").and_then(Value::as_f64), Some(240.0));
+        // Unspecified hw fields inherit the boot device's parameters.
+        assert_eq!(
+            hw.get("dm_lat_b").and_then(Value::as_f64),
+            Some(HwParams::paper_defaults().dm_lat_b)
+        );
+        let rec = st.registry.resolve("gtx960").unwrap();
+        assert_eq!(rec.power.static_w, 18.0);
+        assert_eq!(rec.power.core_curve.points, vec![(400.0, 0.8), (1000.0, 1.15)]);
+        assert_eq!(st.registry.len(), 2);
+    }
+
+    #[test]
+    fn v2_kernel_register_and_list_round_trip() {
+        let st = state();
+        let m = Metrics::default();
+        let body = r#"{"name":"MMS","counters":{"l2_hr":0.4,"gld_trans":4,"avr_inst":12,
+            "n_blocks":64,"wpb":8,"aw":48,"n_sm":16,"o_itrs":16,"uses_smem":true,
+            "smem_conflict":1.5,"mem_ops":1}}"#;
+        let r = handle(&st, &m, &post("/v2/kernels", body));
+        assert_eq!(r.status, 200, "{}", r.body);
+        let v = Value::parse(&r.body).unwrap();
+        // "VA" took krn-1 at boot.
+        assert_eq!(v.get("kernel").and_then(Value::as_str), Some("krn-2"));
+        let r = handle(&st, &m, &get("/v2/kernels"));
+        let v = Value::parse(&r.body).unwrap();
+        assert_eq!(v.get("count").and_then(Value::as_f64), Some(2.0));
+        let listed = v.get("kernels").and_then(Value::as_array).unwrap();
+        let mms = listed.iter().find(|k| k.get("name").and_then(Value::as_str) == Some("MMS"));
+        let c = mms.unwrap().get("counters").unwrap();
+        assert_eq!(c.get("uses_smem").and_then(Value::as_bool), Some(true));
+        assert_eq!(c.get("avr_inst").and_then(Value::as_f64), Some(12.0));
+    }
+
+    #[test]
+    fn v2_predict_batch_matches_raw_struct_path() {
+        let st = state();
+        let m = Metrics::default();
+        let body = r#"{"requests":[
+            {"device":"dev-1","kernel":"krn-1","core_mhz":700,"mem_mhz":700},
+            {"device":"default","kernel":"VA","core_mhz":400,"mem_mhz":1000},
+            {"device":"dev-1","kernel":"krn-1","core_mhz":1000,"mem_mhz":400}]}"#;
+        let r = handle(&st, &m, &post("/v2/predict", body));
+        assert_eq!(r.status, 200, "{}", r.body);
+        let v = Value::parse(&r.body).unwrap();
+        assert_eq!(v.get("count").and_then(Value::as_f64), Some(3.0));
+        let results = v.get("results").and_then(Value::as_array).unwrap();
+        for (res, (cf, mf)) in
+            results.iter().zip([(700.0, 700.0), (400.0, 1000.0), (1000.0, 400.0)])
+        {
+            // Handles echo back resolved, and predictions are
+            // byte-identical to the raw-struct path.
+            assert_eq!(res.get("device").and_then(Value::as_str), Some("dev-1"));
+            assert_eq!(res.get("kernel").and_then(Value::as_str), Some("krn-1"));
+            let want = st.engine.predict_one(&counters(), cf, mf).unwrap();
+            assert_eq!(
+                res.get("time_us").and_then(Value::as_f64).unwrap().to_bits(),
+                want.time_us.to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn v2_errors_carry_stable_codes() {
+        let st = state();
+        let m = Metrics::default();
+        let code_of = |r: &HttpResponse| {
+            Value::parse(&r.body)
+                .unwrap()
+                .get("code")
+                .and_then(Value::as_str)
+                .map(str::to_string)
+                .unwrap()
+        };
+        let r = handle(
+            &st,
+            &m,
+            &post(
+                "/v2/predict",
+                r#"{"requests":[{"device":"dev-9","kernel":"krn-1","core_mhz":700,"mem_mhz":700}]}"#,
+            ),
+        );
+        assert_eq!((r.status, code_of(&r).as_str()), (404, "unknown_device"), "{}", r.body);
+        let r = handle(
+            &st,
+            &m,
+            &post(
+                "/v2/predict",
+                r#"{"requests":[{"device":"dev-1","kernel":"krn-9","core_mhz":700,"mem_mhz":700}]}"#,
+            ),
+        );
+        assert_eq!((r.status, code_of(&r).as_str()), (404, "unknown_kernel"));
+        let r = handle(&st, &m, &post("/v2/predict", r#"{"requests":[]}"#));
+        assert_eq!((r.status, code_of(&r).as_str()), (400, "bad_request"));
+        let r = handle(&st, &m, &post("/v2/predict", "{nope"));
+        assert_eq!((r.status, code_of(&r).as_str()), (400, "bad_json"));
+        let r = handle(
+            &st,
+            &m,
+            &post(
+                "/v2/predict",
+                r#"{"requests":[{"device":"dev-1","kernel":"krn-1","core_mhz":-5,"mem_mhz":700}]}"#,
+            ),
+        );
+        assert_eq!((r.status, code_of(&r).as_str()), (400, "bad_request"));
+        let r = handle(&st, &m, &post("/v2/advise", r#"{"device":"dev-1","kernel":"nope"}"#));
+        assert_eq!((r.status, code_of(&r).as_str()), (404, "unknown_kernel"));
+        let r = handle(&st, &m, &get("/v2/nope"));
+        assert_eq!((r.status, code_of(&r).as_str()), (404, "unknown_route"));
+        let r = handle(&st, &m, &get("/v2/advise"));
+        assert_eq!((r.status, code_of(&r).as_str()), (405, "method_not_allowed"));
+        for bad_device in [
+            r#"{"name":"","hw":{}}"#,
+            r#"{"name":"x","hw":{"dm_del":"soup"}}"#,
+            r#"{"name":"x","hw":{"dm_lat_a":-500}}"#,
+            r#"{"name":"x","power":{"core_vf":[[1000,1.2],[400,0.8]]}}"#,
+            // Handle-shaped names would be shadowed by real ids.
+            r#"{"name":"dev-7"}"#,
+            r#"{"name":"krn-7"}"#,
+        ] {
+            let r = handle(&st, &m, &post("/v2/devices", bad_device));
+            assert_eq!((r.status, code_of(&r).as_str()), (400, "bad_request"), "{bad_device}");
+        }
+        // Reserved kernel names are refused by the catalog itself, and
+        // negative counters never poison a persistent record.
+        for bad_kernel in [
+            r#"{"name":"krn-7","counters":{"l2_hr":0.1,"gld_trans":6,"avr_inst":1.5,
+                "n_blocks":128,"wpb":8,"aw":64,"n_sm":16,"o_itrs":8}}"#,
+            r#"{"name":"neg","counters":{"l2_hr":0.1,"gld_trans":-6,"avr_inst":1.5,
+                "n_blocks":128,"wpb":8,"aw":64,"n_sm":16,"o_itrs":8}}"#,
+            r#"{"name":"zero-sm","counters":{"l2_hr":0.1,"gld_trans":6,"avr_inst":1.5,
+                "n_blocks":128,"wpb":8,"aw":64,"n_sm":0,"o_itrs":8}}"#,
+        ] {
+            let r = handle(&st, &m, &post("/v2/kernels", bad_kernel));
+            assert_eq!((r.status, code_of(&r).as_str()), (400, "bad_request"), "{bad_kernel}");
+        }
+    }
+
+    #[test]
+    fn registration_is_bounded() {
+        let st = state();
+        let m = Metrics::default();
+        // Fill the registry up to the bound directly (dev-1 exists).
+        for i in 0..(MAX_DEVICES - 1) {
+            st.registry.register(
+                &format!("fill-{i}"),
+                HwParams::paper_defaults(),
+                PowerModel::gtx980(),
+            );
+        }
+        let r = handle(&st, &m, &post("/v2/devices", r#"{"name":"one-too-many"}"#));
+        assert_eq!(r.status, 429, "{}", r.body);
+        let v = Value::parse(&r.body).unwrap();
+        assert_eq!(v.get("code").and_then(Value::as_str), Some("registry_full"));
+        // Prediction on existing handles still works at the bound.
+        let r = handle(
+            &st,
+            &m,
+            &post(
+                "/v2/predict",
+                r#"{"requests":[{"device":"dev-1","kernel":"krn-1","core_mhz":700,"mem_mhz":700}]}"#,
+            ),
+        );
+        assert_eq!(r.status, 200, "{}", r.body);
+        // Re-profiling a known kernel name never hits the catalog bound.
+        for i in 0..(MAX_KERNELS - 1) {
+            st.catalog.register(&format!("fill-{i}"), counters());
+        }
+        let reprofile = r#"{"name":"VA","counters":{"l2_hr":0.2,"gld_trans":6,"avr_inst":1.5,
+            "n_blocks":128,"wpb":8,"aw":64,"n_sm":16,"o_itrs":8}}"#;
+        assert_eq!(handle(&st, &m, &post("/v2/kernels", reprofile)).status, 200);
+        let fresh = r#"{"name":"brand-new","counters":{"l2_hr":0.2,"gld_trans":6,"avr_inst":1.5,
+            "n_blocks":128,"wpb":8,"aw":64,"n_sm":16,"o_itrs":8}}"#;
+        let r = handle(&st, &m, &post("/v2/kernels", fresh));
+        assert_eq!(r.status, 429, "{}", r.body);
+    }
+
+    #[test]
+    fn v2_device_defaults_inherit_the_boot_power_model() {
+        // A service booted with a non-default power model: devices
+        // registered without (or with partial) `power` inherit IT, not
+        // the GTX 980 calibration — same contract as partial `hw`.
+        let hw = HwParams::paper_defaults();
+        let mut boot_power = PowerModel::gtx980();
+        boot_power.static_w = 77.0;
+        let st = ServiceState::new(
+            Engine::native(hw),
+            boot_power,
+            crate::microbench::standard_grid(),
+        );
+        let m = Metrics::default();
+        let r = handle(&st, &m, &post("/v2/devices", r#"{"name":"plain"}"#));
+        assert_eq!(r.status, 200, "{}", r.body);
+        assert_eq!(st.registry.resolve("plain").unwrap().power.static_w, 77.0);
+        let r = handle(
+            &st,
+            &m,
+            &post("/v2/devices", r#"{"name":"partial","power":{"core_coeff":0.05}}"#),
+        );
+        assert_eq!(r.status, 200, "{}", r.body);
+        let rec = st.registry.resolve("partial").unwrap();
+        assert_eq!(rec.power.core_coeff, 0.05);
+        assert_eq!(rec.power.static_w, 77.0, "unspecified power fields inherit boot model");
+        // Negative hardware parameters are rejected outright.
+        let r = handle(
+            &st,
+            &m,
+            &post("/v2/devices", r#"{"name":"bad","hw":{"dm_lat_a":-500}}"#),
+        );
+        assert_eq!(r.status, 400, "{}", r.body);
+    }
+
+    #[test]
+    fn v2_advise_uses_the_devices_own_power_model() {
+        let st = state();
+        let m = Metrics::default();
+        // A device with enormous static power shifts the energy optimum
+        // toward faster (shorter) configurations.
+        let r = handle(
+            &st,
+            &m,
+            &post("/v2/devices", r#"{"name":"hot","power":{"static_w":5000}}"#),
+        );
+        assert_eq!(r.status, 200);
+        let r1 = handle(&st, &m, &post("/v2/advise", r#"{"device":"dev-1","kernel":"VA"}"#));
+        let r2 = handle(&st, &m, &post("/v2/advise", r#"{"device":"hot","kernel":"VA"}"#));
+        assert_eq!(r1.status, 200, "{}", r1.body);
+        assert_eq!(r2.status, 200, "{}", r2.body);
+        let v1 = Value::parse(&r1.body).unwrap();
+        let v2 = Value::parse(&r2.body).unwrap();
+        assert_eq!(v2.get("device").and_then(Value::as_str), Some("dev-2"));
+        let t1 = v1.get("best").unwrap().get("time_us").and_then(Value::as_f64).unwrap();
+        let t2 = v2.get("best").unwrap().get("time_us").and_then(Value::as_f64).unwrap();
+        assert!(
+            t2 <= t1,
+            "static-power-dominated device must not pick a slower point ({t2} vs {t1})"
+        );
+        // And the default-device v2 advice matches v1 advice exactly.
+        let rv1 = handle(&st, &m, &post("/v1/advise", r#"{"kernel":"VA"}"#));
+        let vv1 = Value::parse(&rv1.body).unwrap();
+        assert_eq!(
+            vv1.get("best").unwrap().get("energy_mj").and_then(Value::as_f64),
+            v1.get("best").unwrap().get("energy_mj").and_then(Value::as_f64),
+        );
     }
 }

@@ -263,6 +263,7 @@ fn shed(shared: &Shared, mut stream: TcpStream) {
     shared.metrics.shed_total.fetch_add(1, SeqCst);
     let body = Value::obj(vec![
         ("error", Value::str("server overloaded, retry later")),
+        ("code", Value::str("overloaded")),
         ("queue_capacity", Value::num(shared.cfg.queue_capacity as f64)),
     ]);
     let resp = HttpResponse::json(429, body.render())
@@ -323,7 +324,11 @@ fn serve_connection(shared: &Shared, mut stream: TcpStream) {
                 }
                 Ok(None) => break,
                 Err(e) => {
-                    let body = Value::obj(vec![("error", Value::str(e.message))]).render();
+                    let body = Value::obj(vec![
+                        ("error", Value::str(e.message)),
+                        ("code", Value::str("bad_http")),
+                    ])
+                    .render();
                     shared.metrics.record(Route::Other, 400, Duration::ZERO);
                     let _ =
                         http::write_response(&mut stream, &HttpResponse::json(400, body).closing());

@@ -4,7 +4,7 @@
 use std::time::Duration;
 
 use gpufreq::baselines::{standard_baselines, ConstLatency, PaperModel};
-use gpufreq::coordinator::batcher::BatchServer;
+use gpufreq::engine::BatchServer;
 use gpufreq::coordinator::sweep::run_sweep;
 use gpufreq::coordinator::validate::{validate_with, ground_truth_us};
 use gpufreq::dvfs::{advise, Objective, PowerModel};

@@ -1,7 +1,9 @@
-//! Service smoke test (DESIGN.md §9) — the CI job step: boot the HTTP
-//! server on an ephemeral port, exercise /healthz, /v1/predict and
-//! /v1/advise with the in-crate client, force the bounded queue to shed
-//! a 429, and verify the graceful drain. No curl needed anywhere.
+//! Service smoke test (DESIGN.md §9–§10) — the CI job step: boot the
+//! HTTP server on an ephemeral port, exercise /healthz, the /v1 shim
+//! and the full /v2 handle lifecycle (register device → register
+//! kernel → batch predict → advise) with the in-crate client, check
+//! the structured error taxonomy, force the bounded queue to shed a
+//! 429, and verify the graceful drain. No curl needed anywhere.
 
 use std::time::{Duration, Instant};
 
@@ -10,7 +12,7 @@ use gpufreq::engine::Engine;
 use gpufreq::microbench;
 use gpufreq::model::{HwParams, KernelCounters};
 use gpufreq::service::json::Value;
-use gpufreq::service::{Client, Service, ServiceConfig, ServiceState};
+use gpufreq::service::{Client, ClientResponse, Service, ServiceConfig, ServiceState};
 
 fn counters() -> KernelCounters {
     KernelCounters {
@@ -103,6 +105,153 @@ fn healthz_predict_advise_and_metrics_round_trip() {
     ] {
         assert!(r.body.contains(needle), "missing `{needle}` in:\n{}", r.body);
     }
+
+    drop(c);
+    svc.shutdown();
+}
+
+/// The full v2 handle lifecycle over the wire: register a device,
+/// register a kernel, batch-predict across a frequency grid, advise —
+/// and every prediction byte-identical to the raw-struct path for the
+/// same inputs.
+#[test]
+fn v2_lifecycle_register_predict_advise_round_trip() {
+    let svc = Service::start(state(), cfg(2, 16)).expect("service starts");
+    let mut c = Client::connect(&svc.addr()).unwrap();
+    c.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+
+    // 1. Register a device (hw defaults to the boot GPU's measured
+    //    parameters, so predictions are comparable to the raw path).
+    let r = c.post("/v2/devices", r#"{"name":"smoke-gpu"}"#).unwrap();
+    assert_eq!(r.status, 200, "{}", r.body);
+    let v = r.json().unwrap();
+    let device = v.get("device").and_then(Value::as_str).unwrap().to_string();
+    assert_eq!(device, "dev-2", "boot device holds dev-1");
+
+    // 2. Register a kernel with explicit counters.
+    let body = r#"{"name":"smoke-kernel","counters":{"l2_hr":0.1,"gld_trans":6,
+        "avr_inst":1.5,"n_blocks":128,"wpb":8,"aw":64,"n_sm":16,"o_itrs":8,"mem_ops":2}}"#;
+    let r = c.post("/v2/kernels", body).unwrap();
+    assert_eq!(r.status, 200, "{}", r.body);
+    let v = r.json().unwrap();
+    let kernel = v.get("kernel").and_then(Value::as_str).unwrap().to_string();
+    assert_eq!(kernel, "krn-2", "the boot profile holds krn-1");
+
+    // 3. Batch-predict across a frequency grid in ONE request.
+    let grid: Vec<(f64, f64)> = microbench::standard_grid();
+    let requests: Vec<String> = grid
+        .iter()
+        .map(|(cf, mf)| {
+            format!(
+                r#"{{"device":"{device}","kernel":"{kernel}","core_mhz":{cf},"mem_mhz":{mf}}}"#
+            )
+        })
+        .collect();
+    let r = c
+        .post("/v2/predict", &format!(r#"{{"requests":[{}]}}"#, requests.join(",")))
+        .unwrap();
+    assert_eq!(r.status, 200, "{}", r.body);
+    let v = r.json().unwrap();
+    assert_eq!(v.get("count").and_then(Value::as_f64), Some(grid.len() as f64));
+    let results = v.get("results").and_then(Value::as_array).unwrap();
+    // Byte-identical to the raw-struct path for the same inputs.
+    let engine = Engine::native(HwParams::paper_defaults());
+    for (res, &(cf, mf)) in results.iter().zip(&grid) {
+        let want = engine.predict_one(&counters(), cf, mf).unwrap();
+        assert_eq!(
+            res.get("time_us").and_then(Value::as_f64).unwrap().to_bits(),
+            want.time_us.to_bits(),
+            "({cf},{mf})"
+        );
+        assert_eq!(res.get("device").and_then(Value::as_str), Some(device.as_str()));
+        assert_eq!(res.get("kernel").and_then(Value::as_str), Some(kernel.as_str()));
+    }
+
+    // 4. Advise on the registered device.
+    let r = c
+        .post(
+            "/v2/advise",
+            &format!(r#"{{"device":"{device}","kernel":"{kernel}","deadline_us":1e9}}"#),
+        )
+        .unwrap();
+    assert_eq!(r.status, 200, "{}", r.body);
+    let v = r.json().unwrap();
+    assert_eq!(v.get("feasible").and_then(Value::as_bool), Some(true));
+    assert!(v.get("best").unwrap().get("energy_mj").and_then(Value::as_f64).unwrap() > 0.0);
+    assert_eq!(v.get("device").and_then(Value::as_str), Some(device.as_str()));
+
+    // 5. Both registrations are listable.
+    let v = c.get("/v2/devices").unwrap().json().unwrap();
+    assert_eq!(v.get("count").and_then(Value::as_f64), Some(2.0));
+    let v = c.get("/v2/kernels").unwrap().json().unwrap();
+    assert_eq!(v.get("count").and_then(Value::as_f64), Some(2.0));
+
+    drop(c);
+    svc.shutdown();
+}
+
+fn code_of(r: &ClientResponse) -> String {
+    r.json()
+        .unwrap_or_else(|e| panic!("non-JSON error body `{}`: {e}", r.body))
+        .get("code")
+        .and_then(Value::as_str)
+        .unwrap_or_else(|| panic!("error body without code: {}", r.body))
+        .to_string()
+}
+
+/// Error taxonomy: every failure is structured JSON with a stable
+/// machine-readable `code`, across 404/405/400 and unknown handles.
+#[test]
+fn error_taxonomy_is_structured_and_stable() {
+    let svc = Service::start(state(), cfg(2, 16)).expect("service starts");
+    let mut c = Client::connect(&svc.addr()).unwrap();
+    c.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+
+    // 404 unknown route.
+    let r = c.get("/v3/predict").unwrap();
+    assert_eq!((r.status, code_of(&r).as_str()), (404, "unknown_route"), "{}", r.body);
+
+    // 405 wrong method on a real route, both protocol versions.
+    let r = c.get("/v1/predict").unwrap();
+    assert_eq!((r.status, code_of(&r).as_str()), (405, "method_not_allowed"));
+    let r = c.post("/healthz", "{}").unwrap();
+    assert_eq!((r.status, code_of(&r).as_str()), (405, "method_not_allowed"));
+    let r = c.get("/v2/predict").unwrap();
+    assert_eq!((r.status, code_of(&r).as_str()), (405, "method_not_allowed"));
+
+    // 400 malformed JSON.
+    let r = c.post("/v2/predict", "{not json").unwrap();
+    assert_eq!((r.status, code_of(&r).as_str()), (400, "bad_json"));
+    let r = c.post("/v1/predict", "").unwrap();
+    assert_eq!((r.status, code_of(&r).as_str()), (400, "bad_json"));
+
+    // 400 well-formed but invalid.
+    let r = c.post("/v2/predict", r#"{"requests":[]}"#).unwrap();
+    assert_eq!((r.status, code_of(&r).as_str()), (400, "bad_request"));
+
+    // Unknown handles on /v2: 404 with specific codes.
+    let r = c
+        .post(
+            "/v2/predict",
+            r#"{"requests":[{"device":"dev-77","kernel":"krn-1","core_mhz":700,"mem_mhz":700}]}"#,
+        )
+        .unwrap();
+    assert_eq!((r.status, code_of(&r).as_str()), (404, "unknown_device"), "{}", r.body);
+    let r = c
+        .post(
+            "/v2/predict",
+            r#"{"requests":[{"device":"dev-1","kernel":"krn-77","core_mhz":700,"mem_mhz":700}]}"#,
+        )
+        .unwrap();
+    assert_eq!((r.status, code_of(&r).as_str()), (404, "unknown_kernel"));
+    let r = c.post("/v2/advise", r#"{"device":"ghost","kernel":"VA"}"#).unwrap();
+    assert_eq!((r.status, code_of(&r).as_str()), (404, "unknown_device"));
+
+    // The v1 shim carries codes too (unknown named kernel).
+    let r = c
+        .post("/v1/predict", r#"{"kernel":"NOPE","core_mhz":700,"mem_mhz":700}"#)
+        .unwrap();
+    assert_eq!((r.status, code_of(&r).as_str()), (400, "unknown_kernel"));
 
     drop(c);
     svc.shutdown();

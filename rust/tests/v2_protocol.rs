@@ -1,0 +1,286 @@
+//! Property tests (util::prop) for the v2 wire protocol's JSON
+//! round-tripping: every v2 request/response shape must survive
+//! encode → parse → encode **byte-identically** — including string
+//! escapes and adversarial float values — and non-finite floats must
+//! never reach the wire as unparseable bytes (they render as `null`).
+//!
+//! The first `render` is the canonical form (Rust's shortest-roundtrip
+//! f64 formatting), so byte-identity of the second render proves the
+//! parser loses nothing the renderer can express.
+
+use gpufreq::service::json::Value;
+use gpufreq::util::prop::{forall, Rng};
+
+/// A finite f64 drawn from several magnitudes (integers, tiny,
+/// huge, negative) — everything a counters/hw/latency field can hold.
+fn finite_f64(r: &mut Rng) -> f64 {
+    match r.u32(0, 5) {
+        0 => r.u32(0, 2000) as f64,                 // MHz-like integers
+        1 => r.range(0.0, 1.0),                     // hit rates
+        2 => -r.range(0.0, 1e6),                    // negatives
+        3 => r.range(0.0, 1e-9),                    // denormal-ish tiny
+        4 => r.range(1e12, 1e15),                   // huge cycle counts
+        _ => r.range(0.0, 1e6),
+    }
+}
+
+/// Strings exercising every escape class the renderer knows: quotes,
+/// backslashes, control characters, multi-byte UTF-8.
+fn wire_string(r: &mut Rng) -> String {
+    const POOL: &[&str] = &[
+        "a", "Z", "7", "_", "-", " ", "\"", "\\", "\n", "\r", "\t", "\u{1}", "\u{1f}", "/",
+        "é", "λ", "😀", "dev-", "krn-", "{", "}", "[", "]",
+    ];
+    let n = r.u32(0, 12);
+    let mut s = String::new();
+    for _ in 0..n {
+        s.push_str(POOL[r.u32(0, POOL.len() as u32 - 1) as usize]);
+    }
+    s
+}
+
+fn obj(fields: Vec<(String, Value)>) -> Value {
+    Value::Obj(fields)
+}
+
+fn key(r: &mut Rng, canonical: &str) -> String {
+    // Mostly the real field name; sometimes an adversarial one, since
+    // unknown fields must round-trip too (clients may send extras).
+    if r.chance(0.85) {
+        canonical.to_string()
+    } else {
+        wire_string(r)
+    }
+}
+
+fn counters_value(r: &mut Rng) -> Value {
+    let fields = [
+        "l2_hr", "gld_trans", "avr_inst", "n_blocks", "wpb", "aw", "n_sm", "o_itrs", "i_itrs",
+        "smem_conflict", "gld_body", "gld_edge", "mem_ops", "l1_hr",
+    ];
+    let mut out: Vec<(String, Value)> = fields
+        .iter()
+        .map(|f| (key(r, f), Value::num(finite_f64(r))))
+        .collect();
+    out.push(("uses_smem".to_string(), Value::Bool(r.chance(0.5))));
+    obj(out)
+}
+
+fn hw_value(r: &mut Rng) -> Value {
+    let fields = ["dm_lat_a", "dm_lat_b", "dm_del", "l2_lat", "l2_del", "sh_lat", "inst_cycle"];
+    obj(fields.iter().map(|f| (key(r, f), Value::num(finite_f64(r)))).collect())
+}
+
+fn vf_value(r: &mut Rng) -> Value {
+    let n = r.u32(1, 4);
+    Value::arr(
+        (0..n)
+            .map(|_| Value::arr(vec![Value::num(finite_f64(r)), Value::num(finite_f64(r))]))
+            .collect(),
+    )
+}
+
+/// `POST /v2/devices` request.
+fn device_request(r: &mut Rng) -> Value {
+    let mut fields = vec![("name".to_string(), Value::str(wire_string(r)))];
+    if r.chance(0.7) {
+        fields.push(("hw".to_string(), hw_value(r)));
+    }
+    if r.chance(0.5) {
+        fields.push((
+            "power".to_string(),
+            obj(vec![
+                ("core_coeff".to_string(), Value::num(finite_f64(r))),
+                ("mem_coeff".to_string(), Value::num(finite_f64(r))),
+                ("static_w".to_string(), Value::num(finite_f64(r))),
+                ("core_vf".to_string(), vf_value(r)),
+                ("mem_vf".to_string(), vf_value(r)),
+            ]),
+        ));
+    }
+    obj(fields)
+}
+
+/// `POST /v2/kernels` request.
+fn kernel_request(r: &mut Rng) -> Value {
+    obj(vec![
+        ("name".to_string(), Value::str(wire_string(r))),
+        ("counters".to_string(), counters_value(r)),
+    ])
+}
+
+fn handle_pair(r: &mut Rng) -> [(String, Value); 2] {
+    [
+        ("device".to_string(), Value::str(format!("dev-{}", r.u32(1, 9)))),
+        ("kernel".to_string(), Value::str(format!("krn-{}", r.u32(1, 9)))),
+    ]
+}
+
+/// `POST /v2/predict` request (batch-first).
+fn predict_request(r: &mut Rng) -> Value {
+    let n = r.u32(1, 8);
+    let items: Vec<Value> = (0..n)
+        .map(|_| {
+            let mut fields = handle_pair(r).to_vec();
+            fields.push(("core_mhz".to_string(), Value::num(finite_f64(r))));
+            fields.push(("mem_mhz".to_string(), Value::num(finite_f64(r))));
+            obj(fields)
+        })
+        .collect();
+    obj(vec![
+        ("requests".to_string(), Value::arr(items)),
+        ("count".to_string(), Value::num(n as f64)),
+    ])
+}
+
+fn estimate_value(r: &mut Rng) -> Value {
+    let mut fields = handle_pair(r).to_vec();
+    for f in ["core_mhz", "mem_mhz", "time_us", "t_active", "t_exec_cycles"] {
+        fields.push((f.to_string(), Value::num(finite_f64(r))));
+    }
+    fields.push((
+        "regime".to_string(),
+        if r.chance(0.2) { Value::Null } else { Value::str(wire_string(r)) },
+    ));
+    obj(fields)
+}
+
+/// `POST /v2/predict` response.
+fn predict_response(r: &mut Rng) -> Value {
+    let n = r.u32(1, 6);
+    obj(vec![
+        ("results".to_string(), Value::arr((0..n).map(|_| estimate_value(r)).collect())),
+        ("count".to_string(), Value::num(n as f64)),
+    ])
+}
+
+fn config_point_value(r: &mut Rng) -> Value {
+    obj(["core_mhz", "mem_mhz", "time_us", "power_w", "energy_mj", "edp"]
+        .iter()
+        .map(|f| (f.to_string(), Value::num(finite_f64(r))))
+        .collect())
+}
+
+/// `POST /v2/advise` response.
+fn advise_response(r: &mut Rng) -> Value {
+    let mut fields = handle_pair(r).to_vec();
+    fields.push(("objective".to_string(), Value::str(wire_string(r))));
+    fields.push(("feasible".to_string(), Value::Bool(r.chance(0.5))));
+    fields.push(("best".to_string(), config_point_value(r)));
+    fields.push(("fastest".to_string(), config_point_value(r)));
+    fields.push(("points_evaluated".to_string(), Value::num(r.u32(1, 49) as f64)));
+    if r.chance(0.5) {
+        fields.push(("deadline_us".to_string(), Value::num(finite_f64(r))));
+    }
+    if r.chance(0.3) {
+        let n = r.u32(1, 5);
+        fields.push((
+            "points".to_string(),
+            Value::arr((0..n).map(|_| config_point_value(r)).collect()),
+        ));
+    }
+    obj(fields)
+}
+
+/// Devices/kernels list responses.
+fn list_response(r: &mut Rng) -> Value {
+    let n = r.u32(0, 4);
+    let devices: Vec<Value> = (0..n)
+        .map(|i| {
+            obj(vec![
+                ("device".to_string(), Value::str(format!("dev-{}", i + 1))),
+                ("name".to_string(), Value::str(wire_string(r))),
+                ("hw".to_string(), hw_value(r)),
+            ])
+        })
+        .collect();
+    obj(vec![
+        ("devices".to_string(), Value::arr(devices)),
+        ("count".to_string(), Value::num(n as f64)),
+    ])
+}
+
+/// encode → parse → encode must be byte-identical, and the parsed tree
+/// must equal the original.
+fn round_trips(v: &Value) -> bool {
+    let first = v.render();
+    let Ok(parsed) = Value::parse(&first) else {
+        return false;
+    };
+    parsed == *v && parsed.render() == first
+}
+
+#[test]
+fn device_requests_round_trip_byte_identically() {
+    forall(0xD0, 300, device_request, round_trips);
+}
+
+#[test]
+fn kernel_requests_round_trip_byte_identically() {
+    forall(0xC1, 300, kernel_request, round_trips);
+}
+
+#[test]
+fn predict_requests_round_trip_byte_identically() {
+    forall(0x9E, 300, predict_request, round_trips);
+}
+
+#[test]
+fn predict_responses_round_trip_byte_identically() {
+    forall(0x9F, 300, predict_response, round_trips);
+}
+
+#[test]
+fn advise_responses_round_trip_byte_identically() {
+    forall(0xA0, 200, advise_response, round_trips);
+}
+
+#[test]
+fn list_responses_round_trip_byte_identically() {
+    forall(0xA1, 200, list_response, round_trips);
+}
+
+#[test]
+fn non_finite_floats_never_reach_the_wire() {
+    // Inject a non-finite number somewhere in an otherwise-valid
+    // response: the rendered document must still parse (the value
+    // degrades to `null`), and the bytes must not contain inf/NaN.
+    forall(
+        0xBAD,
+        300,
+        |r| {
+            let poison = match r.u32(0, 2) {
+                0 => f64::NAN,
+                1 => f64::INFINITY,
+                _ => f64::NEG_INFINITY,
+            };
+            let mut resp = predict_response(r);
+            // Overwrite one numeric leaf with the poison value.
+            if let Value::Obj(fields) = &mut resp {
+                if let Some((_, Value::Arr(results))) =
+                    fields.iter_mut().find(|(k, _)| k.as_str() == "results")
+                {
+                    if let Some(Value::Obj(est)) = results.first_mut() {
+                        if let Some((_, slot)) =
+                            est.iter_mut().find(|(k, _)| k.as_str() == "time_us")
+                        {
+                            *slot = Value::num(poison);
+                        }
+                    }
+                }
+            }
+            resp
+        },
+        |resp| {
+            let text = resp.render();
+            if text.contains("inf") || text.contains("NaN") {
+                return false;
+            }
+            let Ok(parsed) = Value::parse(&text) else {
+                return false;
+            };
+            // Re-rendering the parsed (nulled) tree is stable.
+            parsed.render() == text
+        },
+    );
+}
