@@ -1,0 +1,167 @@
+//! Fleet-planner bench + gate (DESIGN.md §11): plan a synthetic fleet
+//! of 240 jobs over every registered device (the two `configs/*.toml`
+//! GPUs, parameters measured per device by the §IV probes) and assert
+//! the planner strictly beats the run-everything-at-max-frequency
+//! baseline on total energy while meeting **every** deadline. Timings
+//! and totals land in `BENCH_planner.json` at the repo root.
+
+use std::sync::Arc;
+
+use gpufreq::engine::Engine;
+use gpufreq::model::KernelCounters;
+use gpufreq::planner::{plan, plan_with_baseline, Job, PlannerConfig};
+use gpufreq::registry::{DeviceRegistry, KernelCatalog, KernelId};
+use gpufreq::service::json::Value;
+use gpufreq::util::bench;
+
+const FLEET_JOBS: usize = 240;
+
+/// Synthetic kernel mix: the index sweeps memory-boundedness (l2 hit
+/// rate, transaction count) and compute intensity, so the fleet spans
+/// the paper's regimes and device/frequency choice genuinely matters.
+fn counters(i: usize) -> KernelCounters {
+    KernelCounters {
+        l2_hr: (i % 10) as f64 / 10.0,
+        gld_trans: 4.0 + (i % 12) as f64,
+        avr_inst: 0.5 + 12.0 * (i % 5) as f64,
+        n_blocks: 256.0,
+        wpb: 8.0,
+        aw: 64.0,
+        n_sm: 16.0,
+        o_itrs: 8.0,
+        i_itrs: (i % 16) as f64,
+        uses_smem: i % 3 == 0,
+        smem_conflict: 1.0 + (i % 4) as f64,
+        gld_body: 4.0 + (i % 12) as f64,
+        gld_edge: (i % 8) as f64,
+        mem_ops: 1.0 + (i % 4) as f64,
+        l1_hr: 0.0,
+    }
+}
+
+fn main() {
+    bench::section("Planner fleet: registry setup (per-device §IV probes)");
+    let configs = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("configs");
+    let registry = Arc::new(DeviceRegistry::new());
+    let primary = registry
+        .register_from_config(&configs.join("gtx980.toml"))
+        .expect("register gtx980");
+    registry
+        .register_from_config(&configs.join("gtx960.toml"))
+        .expect("register gtx960");
+    let records = registry.list();
+    println!("registered {} devices", records.len());
+    assert!(records.len() >= 2, "the fleet needs every configs/*.toml device");
+
+    let catalog = Arc::new(KernelCatalog::new());
+    let kernel_ids: Vec<KernelId> =
+        (0..8).map(|i| catalog.register(&format!("synth-{i}"), counters(i * 7 + 1))).collect();
+
+    let hw = registry.get(primary).expect("registered").hw;
+    let engine = Engine::native(hw)
+        .with_handles(Arc::clone(&registry), Arc::clone(&catalog), primary)
+        .expect("attach handles");
+
+    // Deadlines must be meetable on ANY device (so zero violations is a
+    // planner guarantee, not luck): budget = headroom × the job's
+    // worst-device runtime at max frequency. headroom cycles through
+    // tight/medium/loose; a third of the fleet runs unconstrained.
+    let max_point = |power: &gpufreq::dvfs::PowerModel| {
+        let core = power.core_curve.points.last().expect("non-empty curve").0;
+        let mem = power.mem_curve.points.last().expect("non-empty curve").0;
+        gpufreq::registry::FreqPoint::new(core, mem)
+    };
+    let mut worst_max_us = vec![0.0f64; kernel_ids.len()];
+    for (ki, &kid) in kernel_ids.iter().enumerate() {
+        for rec in &records {
+            let t = engine
+                .predict_handle(rec.id, kid, max_point(&rec.power))
+                .expect("predict at max frequency")
+                .time_us;
+            worst_max_us[ki] = worst_max_us[ki].max(t);
+        }
+    }
+
+    let headrooms = [1.1, 1.5, 2.5];
+    let jobs: Vec<Job> = (0..FLEET_JOBS)
+        .map(|i| {
+            let ki = i % kernel_ids.len();
+            let scale = 1.0 + (i % 7) as f64;
+            let job = Job::new(format!("job-{i}"), kernel_ids[ki], scale);
+            if i % 3 == 2 {
+                job
+            } else {
+                let headroom = headrooms[(i / 3) % headrooms.len()];
+                job.with_deadline(headroom * scale * worst_max_us[ki])
+            }
+        })
+        .collect();
+    assert!(jobs.len() >= 200, "the gate is defined over a >=200 job fleet");
+
+    // Balanced per-device concurrency cap.
+    let cap = jobs.len().div_ceil(records.len());
+    let cfg = PlannerConfig { device_cap: cap, ..PlannerConfig::default() };
+
+    bench::section(&format!(
+        "Planner fleet: {} jobs x {} devices (cap {cap}/device)",
+        jobs.len(),
+        records.len()
+    ));
+    // Warm pass outside the timer primes the engine's grid cache and
+    // produces the plan under test (one evaluation pass covers the
+    // baseline too).
+    let (planned, naive) = plan_with_baseline(&engine, &jobs, &cfg).expect("plannable fleet");
+    let naive = naive.expect("round-robin baseline is placeable under a balanced cap");
+    let solve = bench::bench("plan (warm engine cache)", 1, 10, || {
+        std::hint::black_box(plan(&engine, &jobs, &cfg).expect("plannable"));
+    });
+
+    // ---- The gate ----
+    let violations = planned.deadline_violations(&jobs);
+    assert_eq!(violations, 0, "an emitted plan must meet every deadline");
+    assert!(
+        planned.total_energy_mj < naive.total_energy_mj,
+        "planner energy {} mJ must be strictly below the max-frequency baseline {} mJ",
+        planned.total_energy_mj,
+        naive.total_energy_mj
+    );
+    for rec in &records {
+        let load = planned.load_of(rec.id);
+        assert!(load <= cap, "cap violated on {}: {load} > {cap}", rec.id);
+    }
+    let saved_pct = planned.energy_savings_pct_vs(&naive);
+    println!(
+        "plan {:.1} mJ vs baseline {:.1} mJ ({saved_pct:.1}% saved, {} local-search steps, \
+         0 violations)",
+        planned.total_energy_mj, naive.total_energy_mj, planned.swaps_applied
+    );
+    let cache = engine.cache_stats();
+    println!(
+        "engine cache: {} hits / {} misses ({} entries)",
+        cache.hits, cache.misses, cache.entries
+    );
+
+    let out = Value::obj(vec![
+        ("bench", Value::str("planner_fleet")),
+        ("jobs", Value::num(jobs.len() as f64)),
+        ("devices", Value::num(records.len() as f64)),
+        ("device_cap", Value::num(cap as f64)),
+        ("planned_energy_mj", Value::num(planned.total_energy_mj)),
+        ("baseline_energy_mj", Value::num(naive.total_energy_mj)),
+        ("energy_savings_pct", Value::num(saved_pct)),
+        ("deadline_violations", Value::num(violations as f64)),
+        (
+            "baseline_deadline_violations",
+            Value::num(naive.deadline_violations(&jobs) as f64),
+        ),
+        ("swaps_applied", Value::num(planned.swaps_applied as f64)),
+        ("solve_mean_ms", Value::num(solve.mean_ns / 1e6)),
+        ("solve_p50_ms", Value::num(solve.p50_ns / 1e6)),
+        ("solve_p99_ms", Value::num(solve.p99_ns / 1e6)),
+    ]);
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("BENCH_planner.json");
+    std::fs::write(&path, out.render() + "\n").expect("write BENCH_planner.json");
+    println!("wrote {}", path.display());
+}

@@ -22,8 +22,9 @@ use crate::engine::{BatchServer, Engine, StreamJob};
 use crate::kernels;
 use crate::microbench;
 use crate::model::{HwParams, KernelCounters};
+use crate::planner::{self, Job, PlanObjective, PlannerConfig};
 use crate::profiler;
-use crate::registry::{DeviceRegistry, KernelCatalog};
+use crate::registry::{DeviceRegistry, KernelCatalog, KernelId};
 use crate::report::tables;
 use crate::service::{Service, ServiceConfig, ServiceState};
 use crate::sim::isa::Kernel;
@@ -48,28 +49,39 @@ COMMANDS:
   validate                Full Fig. 13/14 validation: simulate + predict + MAPE
   report <ARTIFACT>       Regenerate a paper artifact: table1 table2 table3
                           table6 fig2 fig5 fig12 fig13 fig14 ablation
-  advise <KERNEL>         DVFS energy advisor (paper §VII application),
-                          resolved through the device registry
+  advise <KERNEL>         DVFS energy advisor for one kernel (paper §VII
+                          application), resolved through the device registry
+  plan                    Fleet DVFS planner (DESIGN.md §11): register every
+                          configs/*.toml device, profile the workloads,
+                          synthesize a --jobs job fleet and print the
+                          energy-minimal assignment vs. the run-at-max-
+                          frequency baseline
   serve                   Run the standing HTTP prediction service:
-                          v2 (handle protocol): POST /v2/devices ·
-                          GET /v2/devices · POST /v2/kernels ·
-                          GET /v2/kernels · POST /v2/predict (batch) ·
-                          POST /v2/advise; v1 (compat shim):
-                          POST /v1/predict · /v1/grid · /v1/advise;
-                          GET /healthz · /metrics (DESIGN.md §9–§10).
-                          Runs until stdin closes (EOF drains gracefully)
-  stream-demo             Demo the streaming prediction path (PJRT backend)
+                          v2 (handle protocol): POST/GET /v2/devices ·
+                          POST/GET /v2/kernels · POST /v2/predict (batch) ·
+                          POST /v2/advise · POST /v2/plan (fleet planner);
+                          v1 (compat shim): POST /v1/predict · /v1/grid ·
+                          /v1/advise; GET /healthz · /metrics (DESIGN.md
+                          §9–§11). Runs until stdin closes (EOF drains
+                          gracefully)
+  stream-demo             Demo the streaming prediction path (always uses the
+                          PJRT batching backend; --backend is ignored)
   help                    Show this message
 
 OPTIONS:
-  --config <PATH>         TOML config (default: configs/gtx980.toml if present)
+  --config <PATH>         TOML config (default: configs/gtx980.toml if present);
+                          devices/plan: restrict registration to this config
   --kernels <A,B,...>     Restrict to these kernels
   --backend <NAME>        Prediction backend: native | batch | pjrt (default native)
   --pjrt                  Alias for --backend pjrt
   --no-cache              Disable the engine's frequency-grid cache
   --csv                   Emit CSV instead of ASCII tables
-  --objective <NAME>      advise: energy | edp | slack:<frac> (default energy)
-  --workers <N>           sweep/predict parallelism (default: # cpus)
+  --objective <NAME>      advise: energy | edp | slack:<frac>;
+                          plan: energy | edp (default energy)
+  --workers <N>           sweep/validate/serve parallelism (default: # cpus)
+  --jobs <N>              plan: synthetic fleet size (default 24)
+  --device-cap <N>        plan: per-device concurrency cap (default 0 =
+                          balanced, ceil(jobs / devices))
   --addr <HOST:PORT>      serve: bind address (default 127.0.0.1:8077; port 0
                           picks an ephemeral port)
   --queue-depth <N>       serve: admission-control high-water mark — pending
@@ -88,6 +100,8 @@ pub struct Args {
     pub csv: bool,
     pub objective: String,
     pub workers: usize,
+    pub jobs: usize,
+    pub device_cap: usize,
     pub addr: String,
     pub queue_depth: usize,
 }
@@ -104,6 +118,8 @@ impl Default for Args {
             csv: false,
             objective: "energy".into(),
             workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+            jobs: 24,
+            device_cap: 0,
             addr: "127.0.0.1:8077".into(),
             queue_depth: 64,
         }
@@ -152,6 +168,20 @@ pub fn parse_args(argv: &[String]) -> Result<Args> {
                     .context("--workers needs a number")?
                     .parse()
                     .context("--workers must be an integer")?
+            }
+            "--jobs" => {
+                args.jobs = it
+                    .next()
+                    .context("--jobs needs a number")?
+                    .parse()
+                    .context("--jobs must be an integer")?
+            }
+            "--device-cap" => {
+                args.device_cap = it
+                    .next()
+                    .context("--device-cap needs a number")?
+                    .parse()
+                    .context("--device-cap must be an integer")?
             }
             "--addr" => {
                 args.addr = it.next().context("--addr needs host:port")?.clone()
@@ -318,26 +348,7 @@ pub fn run(args: Args) -> Result<i32> {
             // One registry, one row per config: each GPU's parameters
             // are measured by the §IV probes against its own spec.
             let registry = DeviceRegistry::new();
-            let paths: Vec<PathBuf> = match &args.config {
-                Some(p) => vec![p.clone()],
-                None => {
-                    let mut found: Vec<PathBuf> = std::fs::read_dir("configs")
-                        .map(|rd| {
-                            rd.filter_map(|e| e.ok().map(|e| e.path()))
-                                .filter(|p| p.extension().is_some_and(|x| x == "toml"))
-                                .collect()
-                        })
-                        .unwrap_or_default();
-                    found.sort();
-                    found
-                }
-            };
-            if paths.is_empty() {
-                bail!(
-                    "no device configs found (run from rust/ with a configs/ dir, \
-                     or pass --config)"
-                );
-            }
+            let paths = discover_configs(&args)?;
             let mut t = crate::report::Table::new(
                 "Device registry (parameters measured per config, §IV)",
                 &[
@@ -474,6 +485,9 @@ pub fn run(args: Args) -> Result<i32> {
                 best.core_mhz, best.mem_mhz, best.time_us, best.power_w, best.energy_mj
             );
         }
+        "plan" => {
+            run_plan(&args, &cfg)?;
+        }
         "serve" => {
             run_serve(&args, &cfg)?;
         }
@@ -551,6 +565,155 @@ pub fn run(args: Args) -> Result<i32> {
     Ok(0)
 }
 
+/// Device configs to register: just `--config` when given, otherwise
+/// every `configs/*.toml`, sorted for a stable handle order.
+fn discover_configs(args: &Args) -> Result<Vec<PathBuf>> {
+    let paths: Vec<PathBuf> = match &args.config {
+        Some(p) => vec![p.clone()],
+        None => {
+            let mut found: Vec<PathBuf> = std::fs::read_dir("configs")
+                .map(|rd| {
+                    rd.filter_map(|e| e.ok().map(|e| e.path()))
+                        .filter(|p| p.extension().is_some_and(|x| x == "toml"))
+                        .collect()
+                })
+                .unwrap_or_default();
+            found.sort();
+            found
+        }
+    };
+    if paths.is_empty() {
+        bail!(
+            "no device configs found (run from rust/ with a configs/ dir, \
+             or pass --config)"
+        );
+    }
+    Ok(paths)
+}
+
+/// `gpufreq plan`: the fleet planner demo (DESIGN.md §11). Registers
+/// every discovered GPU config (§IV probes measure each device's own
+/// parameters), profiles the selected kernels once at the baseline,
+/// synthesizes a deterministic fleet of `--jobs` jobs (mixed workload
+/// scales, two in three with a latency budget) and prints the planned
+/// assignment next to the run-everything-at-max-frequency baseline.
+fn run_plan(args: &Args, cfg: &Config) -> Result<()> {
+    let spec = cfg.gpu.clone();
+    let baseline = cfg.sweep.baseline();
+    let registry = Arc::new(DeviceRegistry::new());
+    for path in discover_configs(args)? {
+        registry
+            .register_from_config(&path)
+            .with_context(|| format!("registering {}", path.display()))?;
+    }
+    let records = registry.list();
+    let primary = records.first().expect("discover_configs is non-empty").clone();
+
+    let catalog = Arc::new(KernelCatalog::new());
+    let ks = selected_kernels(args, cfg)?;
+    // One-shot baseline profiles (the paper's counter pass) on scoped
+    // threads — the simulator runs dominate the wall clock. Register
+    // serially afterwards so handle numbering stays deterministic.
+    let mut profiled: Vec<Option<(KernelCounters, f64)>> = vec![None; ks.len()];
+    std::thread::scope(|scope| {
+        for (slot, k) in profiled.iter_mut().zip(&ks) {
+            let spec = &spec;
+            scope.spawn(move || {
+                let p = profiler::profile_at(spec, k, baseline);
+                *slot = Some((p.counters, p.baseline_time_us));
+            });
+        }
+    });
+    let kernels: Vec<(KernelId, f64)> = ks
+        .iter()
+        .zip(profiled)
+        .map(|(k, p)| {
+            let (counters, base_us) = p.expect("profiled");
+            (catalog.register(&k.name, counters), base_us)
+        })
+        .collect();
+
+    let engine =
+        build_engine(args, primary.hw)?.with_handles(Arc::clone(&registry), catalog, primary.id)?;
+
+    // Deterministic synthetic fleet: cycle kernels, vary the workload
+    // scale 1–5×, and give two jobs in three a latency budget with
+    // comfortable headroom over the baseline-clock profile (max
+    // frequency runs faster than the baseline clocks, so every budget
+    // is meetable and the planner has real slack to spend).
+    let n = args.jobs.max(1);
+    let mut jobs = Vec::with_capacity(n);
+    for i in 0..n {
+        let (kid, base_us) = kernels[i % kernels.len()];
+        let scale = (1 + i % 5) as f64;
+        let mut job = Job::new(format!("job-{i}"), kid, scale);
+        if i % 3 != 0 {
+            let headroom = if i % 2 == 0 { 2.0 } else { 3.0 };
+            job = job.with_deadline(headroom * scale * base_us);
+        }
+        jobs.push(job);
+    }
+    let device_cap = if args.device_cap == 0 {
+        n.div_ceil(records.len())
+    } else {
+        args.device_cap
+    };
+    let objective = match args.objective.as_str() {
+        "energy" => PlanObjective::Energy,
+        "edp" => PlanObjective::Edp,
+        other => bail!("plan supports --objective energy | edp (got {other})"),
+    };
+    let pcfg = PlannerConfig { objective, device_cap, ..PlannerConfig::default() };
+    // One evaluation pass yields both the plan and the naive foil.
+    let (planned, naive) = planner::plan_with_baseline(&engine, &jobs, &pcfg)?;
+    let naive = naive.context("max-frequency baseline is unplaceable under this cap")?;
+
+    let mut t = crate::report::Table::new(
+        &format!(
+            "Fleet plan: {n} jobs over {} devices (cap {device_cap}/device, {})",
+            records.len(),
+            objective.name()
+        ),
+        &[
+            "job", "kernel", "device", "core MHz", "mem MHz", "time_us", "deadline_us",
+            "power W", "energy mJ",
+        ],
+    );
+    for a in &planned.assignments {
+        let job = &jobs[a.job];
+        t.row(vec![
+            job.name.clone(),
+            job.kernel.to_string(),
+            a.device.to_string(),
+            format!("{:.0}", a.point.core_mhz),
+            format!("{:.0}", a.point.mem_mhz),
+            format!("{:.1}", a.time_us),
+            match job.deadline_us {
+                Some(d) => format!("{d:.1}"),
+                None => "-".to_string(),
+            },
+            format!("{:.1}", a.power_w),
+            format!("{:.2}", a.energy_mj),
+        ]);
+    }
+    print_table(&t, args.csv);
+    let saved = planned.energy_savings_pct_vs(&naive);
+    println!(
+        "PLAN : {:.1} mJ total ({} local-search steps, {} deadline violations, longest job {:.1} us)",
+        planned.total_energy_mj,
+        planned.swaps_applied,
+        planned.deadline_violations(&jobs),
+        planned.max_time_us
+    );
+    println!(
+        "NAIVE: {:.1} mJ at max frequency ({} deadline violations) -> {saved:.1}% energy saved",
+        naive.total_energy_mj,
+        naive.deadline_violations(&jobs)
+    );
+    print_cache_line(&engine);
+    Ok(())
+}
+
 /// `gpufreq serve`: profile the selected kernels once at the baseline
 /// (the paper's one-shot counter pass), put the shared engine behind
 /// the HTTP service (DESIGN.md §9), and run until stdin reaches EOF —
@@ -588,7 +751,7 @@ fn run_serve(args: &Args, cfg: &Config) -> Result<()> {
         },
     )?;
     println!("gpufreq service listening on http://{}", service.addr());
-    println!("  v2     : POST+GET /v2/devices · POST+GET /v2/kernels · POST /v2/predict (batch) · POST /v2/advise");
+    println!("  v2     : POST+GET /v2/devices · POST+GET /v2/kernels · POST /v2/predict (batch) · POST /v2/advise · POST /v2/plan");
     println!("  v1+ops : POST /v1/predict · POST /v1/grid · POST /v1/advise · GET /healthz · GET /metrics");
     println!(
         "  config : {} kernels · backend {} · {} workers · queue high-water {}",
@@ -754,14 +917,35 @@ mod tests {
     }
 
     #[test]
-    fn usage_documents_the_handle_commands_and_v2_routes() {
+    fn usage_documents_every_command_and_v2_route() {
+        // The help-drift audit: every subcommand `run` dispatches must
+        // appear in USAGE, alongside the full v2 route surface and the
+        // flags the planner added.
         let needles = [
-            "devices", "kernels", "dev-<n>", "krn-<n>", "/v2/predict", "/v2/devices",
-            "/v1/predict",
+            "list-kernels", "microbench", "profile", "devices", "kernels", "sweep",
+            "validate", "report", "advise", "plan", "serve", "stream-demo",
+            "dev-<n>", "krn-<n>", "/v2/predict", "/v2/devices", "/v2/kernels",
+            "/v2/advise", "/v2/plan", "/v1/predict", "--jobs", "--device-cap",
+            "--objective", "--queue-depth", "--addr", "--backend", "--workers",
         ];
         for needle in needles {
             assert!(USAGE.contains(needle), "USAGE is missing `{needle}`");
         }
+    }
+
+    #[test]
+    fn parses_plan_flags() {
+        let a = parse_args(&argv("plan --jobs 100 --device-cap 8 --objective edp")).unwrap();
+        assert_eq!(a.command, "plan");
+        assert_eq!(a.jobs, 100);
+        assert_eq!(a.device_cap, 8);
+        assert_eq!(a.objective, "edp");
+        assert!(parse_args(&argv("plan --jobs lots")).is_err());
+        assert!(parse_args(&argv("plan --device-cap some")).is_err());
+        // Defaults: a 24-job fleet, balanced caps.
+        let d = Args::default();
+        assert_eq!(d.jobs, 24);
+        assert_eq!(d.device_cap, 0);
     }
 
     #[test]

@@ -5,6 +5,12 @@
 //! Power follows the paper's Eq. (1), `P_dynamic = a·C·V²·f`, applied
 //! per clock domain with a voltage/frequency table, plus static power.
 //! Energy = P(cf, mf) × T(cf, mf), with T from any `Predictor`.
+//!
+//! This module advises **one kernel on one device**. For batch
+//! scheduling — many deadline-tagged jobs across every registered GPU,
+//! under per-device concurrency caps — see [`crate::planner`], which
+//! reuses the same [`PowerModel`] arithmetic per device (DESIGN.md
+//! §11).
 
 use anyhow::Result;
 

@@ -30,6 +30,26 @@
 //!   queries on the same grid never recompute.
 //! * [`Engine`] — the facade: single-point, whole-grid and streaming
 //!   prediction over any backend, cache-transparent.
+//!
+//! # Example
+//!
+//! ```
+//! use gpufreq::engine::Engine;
+//! use gpufreq::model::{HwParams, KernelCounters};
+//!
+//! let engine = Engine::native(HwParams::paper_defaults());
+//! # let counters = KernelCounters {
+//! #     l2_hr: 0.1, gld_trans: 6.0, avr_inst: 1.5, n_blocks: 128.0,
+//! #     wpb: 8.0, aw: 64.0, n_sm: 16.0, o_itrs: 8.0, i_itrs: 0.0,
+//! #     uses_smem: false, smem_conflict: 1.0, gld_body: 6.0,
+//! #     gld_edge: 0.0, mem_ops: 2.0, l1_hr: 0.0,
+//! # };
+//! // One profiled kernel over two frequency points, one batched call;
+//! // repeats on the same grid are served from the shared cache.
+//! let grid = engine.predict_grid(&counters, &[(400.0, 1000.0), (1000.0, 400.0)]).unwrap();
+//! assert_eq!(grid.len(), 2);
+//! assert!(grid.iter().all(|e| e.time_us > 0.0));
+//! ```
 
 pub mod adapter;
 pub mod backend;

@@ -16,6 +16,9 @@
 //! * [`registry`] — device registry + kernel catalog: the stable
 //!   `(DeviceId, KernelId, FreqPoint)` handles behind the typed v2 API
 //! * [`dvfs`] — power model + energy-conservation advisor (paper §VII)
+//! * [`planner`] — fleet-scale DVFS planning: assign a batch of
+//!   deadline-tagged jobs to devices and (core, mem) points,
+//!   minimizing total energy (greedy + relocation/swap local search)
 //! * [`service`] — the standing HTTP prediction service (`gpufreq
 //!   serve`): std-only HTTP/1.1 worker pool with bounded-queue
 //!   admission control, DVFS-advisor routes and `/metrics`
@@ -30,6 +33,7 @@ pub mod engine;
 pub mod kernels;
 pub mod microbench;
 pub mod model;
+pub mod planner;
 pub mod profiler;
 pub mod registry;
 pub mod report;

@@ -1,0 +1,275 @@
+//! Fleet-scale DVFS planning (DESIGN.md §11): from a per-kernel
+//! frequency advisor to a scheduler-facing subsystem.
+//!
+//! The paper's model exists to answer one question cheaply — which
+//! (core, mem) frequency pair should a kernel run at to save energy
+//! without blowing its latency budget. [`dvfs::advise_with_handles`]
+//! answers it for a *single* kernel on a *single* device. The related
+//! scheduling literature (Ilager et al.'s deadline-aware frequency
+//! scaling, Wang et al.'s DSO optimizer — see PAPERS.md) shows the real
+//! payoff is fleet-level: many jobs, many GPUs, one energy bill. This
+//! module is that layer:
+//!
+//! ```text
+//!   jobs:    [(kernel, workload scale, deadline?), …]
+//!   devices: every DeviceRecord in the engine's registry
+//!                         │
+//!                  planner::plan
+//!     exhaustive per-job argmin over each device's V/f grid
+//!        → greedy placement under per-device concurrency caps
+//!        → local search: relocations + pairwise swaps (solver.rs)
+//!                         │
+//!   Plan: per-job (device, core MHz, mem MHz) + fleet totals
+//! ```
+//!
+//! Latency comes from [`engine::Engine::predict_tuples`] (one batched
+//! call for the whole candidate table, cache-served on repeats); power
+//! comes from each device's registered [`dvfs::PowerModel`]; energy is
+//! the paper's Eq. (1) bookkeeping, `E = P(cf, mf) × T(cf, mf)`, per
+//! job. A [`Plan`] either meets **every** deadline or is not emitted at
+//! all — infeasibility is a structured [`PlanError::Infeasible`], never
+//! a silently-late assignment.
+//!
+//! # Example
+//!
+//! ```
+//! use std::sync::Arc;
+//! use gpufreq::dvfs::PowerModel;
+//! use gpufreq::engine::Engine;
+//! use gpufreq::model::{HwParams, KernelCounters};
+//! use gpufreq::planner::{plan, Job, PlannerConfig};
+//! use gpufreq::registry::{DeviceRegistry, KernelCatalog};
+//!
+//! let hw = HwParams::paper_defaults();
+//! let registry = Arc::new(DeviceRegistry::new());
+//! let gpu = registry.register("gtx980", hw, PowerModel::gtx980());
+//! let catalog = Arc::new(KernelCatalog::new());
+//! # let counters = KernelCounters {
+//! #     l2_hr: 0.1, gld_trans: 6.0, avr_inst: 1.5, n_blocks: 128.0,
+//! #     wpb: 8.0, aw: 64.0, n_sm: 16.0, o_itrs: 8.0, i_itrs: 0.0,
+//! #     uses_smem: false, smem_conflict: 1.0, gld_body: 6.0,
+//! #     gld_edge: 0.0, mem_ops: 2.0, l1_hr: 0.0,
+//! # };
+//! let kernel = catalog.register("VA", counters);
+//! let engine = Engine::native(hw).with_handles(registry, catalog, gpu).unwrap();
+//!
+//! let jobs = vec![Job::new("nightly-sweep", kernel, 4.0).with_deadline(1e9)];
+//! let p = plan(&engine, &jobs, &PlannerConfig::default()).unwrap();
+//! assert_eq!(p.assignments.len(), 1);
+//! assert!(p.assignments[0].time_us <= 1e9);
+//! ```
+//!
+//! [`dvfs::advise_with_handles`]: crate::dvfs::advise_with_handles
+//! [`dvfs::PowerModel`]: crate::dvfs::PowerModel
+//! [`engine::Engine::predict_tuples`]: crate::engine::Engine::predict_tuples
+
+pub mod solver;
+
+pub use solver::{
+    device_grid, max_frequency_baseline, plan, plan_with_baseline, PlannerConfig, MAX_JOBS,
+};
+
+use std::fmt;
+
+use crate::registry::{DeviceId, FreqPoint, KernelId};
+
+/// One schedulable unit of fleet work: a catalogued kernel executed
+/// `scale` times back-to-back, optionally under a latency budget.
+#[derive(Debug, Clone)]
+pub struct Job {
+    /// Operator-facing label, echoed in plans and errors.
+    pub name: String,
+    /// The catalogued kernel the job runs.
+    pub kernel: KernelId,
+    /// Workload scale: the job's runtime is `scale ×` the kernel's
+    /// single-invocation prediction. Must be positive and finite.
+    pub scale: f64,
+    /// Absolute budget on the *scaled* runtime, µs. `None` means the
+    /// job only participates in the energy objective.
+    pub deadline_us: Option<f64>,
+}
+
+impl Job {
+    /// A job with no deadline (pure energy minimization).
+    pub fn new(name: impl Into<String>, kernel: KernelId, scale: f64) -> Job {
+        Job { name: name.into(), kernel, scale, deadline_us: None }
+    }
+
+    /// Attach an absolute deadline (µs, on the scaled runtime).
+    pub fn with_deadline(mut self, deadline_us: f64) -> Job {
+        self.deadline_us = Some(deadline_us);
+        self
+    }
+}
+
+/// What the planner minimizes, summed over all jobs. Deadline
+/// feasibility is a hard constraint under either objective, not a
+/// third objective — a plan that misses a deadline is not a worse
+/// plan, it is not a plan (see [`PlanError::Infeasible`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlanObjective {
+    /// Total fleet energy, mJ.
+    Energy,
+    /// Total energy-delay product, mJ·µs (per job, then summed) —
+    /// biases each job toward faster points than pure energy would.
+    Edp,
+}
+
+impl PlanObjective {
+    /// Stable wire name (`/v2/plan`'s `objective` field).
+    pub fn name(self) -> &'static str {
+        match self {
+            PlanObjective::Energy => "energy",
+            PlanObjective::Edp => "edp",
+        }
+    }
+}
+
+/// One job's placement in an emitted [`Plan`].
+#[derive(Debug, Clone, Copy)]
+pub struct Assignment {
+    /// Index into the job slice the plan was built from.
+    pub job: usize,
+    pub device: DeviceId,
+    /// The chosen (core, mem) operating point.
+    pub point: FreqPoint,
+    /// Scaled job runtime at `point`, µs.
+    pub time_us: f64,
+    /// Board power at `point` (the device's own Eq. (1) model), W.
+    pub power_w: f64,
+    /// `power_w × time_us`, in mJ.
+    pub energy_mj: f64,
+    /// `energy_mj × time_us`.
+    pub edp: f64,
+}
+
+/// An assignment of every job to a device and operating point. Plans
+/// emitted by [`plan`] meet all deadlines by construction; plans from
+/// [`max_frequency_baseline`] may not (count the misses with
+/// [`Plan::deadline_violations`]).
+#[derive(Debug, Clone)]
+pub struct Plan {
+    pub objective: PlanObjective,
+    /// One entry per input job, in input order.
+    pub assignments: Vec<Assignment>,
+    /// Fleet energy, mJ (sum over assignments).
+    pub total_energy_mj: f64,
+    /// Fleet EDP, mJ·µs (sum over assignments).
+    pub total_edp: f64,
+    /// Longest single job runtime in the plan, µs.
+    pub max_time_us: f64,
+    /// Improvement steps the local-search phase applied (single-job
+    /// relocations + pairwise device swaps).
+    pub swaps_applied: usize,
+}
+
+impl Plan {
+    /// How many jobs the plan placed on `device`.
+    pub fn load_of(&self, device: DeviceId) -> usize {
+        self.assignments.iter().filter(|a| a.device == device).count()
+    }
+
+    /// Energy saved relative to `baseline`, in percent (0 when the
+    /// baseline's total is not positive). The one formula the bench,
+    /// the `/v2/plan` route and the CLI all report.
+    pub fn energy_savings_pct_vs(&self, baseline: &Plan) -> f64 {
+        if baseline.total_energy_mj > 0.0 {
+            (1.0 - self.total_energy_mj / baseline.total_energy_mj) * 100.0
+        } else {
+            0.0
+        }
+    }
+
+    /// Assignments whose runtime exceeds their job's deadline. Zero for
+    /// every plan [`plan`] emits; possibly non-zero for the
+    /// max-frequency baseline.
+    pub fn deadline_violations(&self, jobs: &[Job]) -> usize {
+        self.assignments
+            .iter()
+            .filter(|a| match jobs[a.job].deadline_us {
+                Some(d) => a.time_us > d,
+                None => false,
+            })
+            .count()
+    }
+}
+
+/// Why no plan was produced.
+#[derive(Debug)]
+pub enum PlanError {
+    /// Malformed input: empty job list, non-positive scale or deadline,
+    /// an invalid candidate grid, or an engine without handles.
+    Invalid(String),
+    /// A job's kernel handle does not resolve in the engine's catalog.
+    UnknownKernel { job: usize, name: String, kernel: KernelId },
+    /// A requested device handle is not in the engine's registry.
+    UnknownDevice { device: DeviceId },
+    /// The solver could not satisfy this job under the deadlines and
+    /// per-device concurrency caps. `detail` says which constraint
+    /// binds. An unreachable deadline is a *proof* of infeasibility
+    /// (every device × point was priced); the exhausted-capacity case
+    /// is decided by a one-level relocation repair, so a rare,
+    /// tightly-entangled instance can be refused even though some
+    /// exotic assignment exists — the remedy either way is raising the
+    /// cap or relaxing a deadline.
+    Infeasible { job: usize, name: String, detail: String },
+    /// The prediction engine itself failed.
+    Engine(String),
+}
+
+impl fmt::Display for PlanError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PlanError::Invalid(m) => write!(f, "invalid plan request: {m}"),
+            PlanError::UnknownKernel { job, name, kernel } => {
+                write!(f, "job {job} (`{name}`): unknown kernel {kernel}")
+            }
+            PlanError::UnknownDevice { device } => write!(f, "unknown device {device}"),
+            PlanError::Infeasible { job, name, detail } => {
+                write!(f, "infeasible: job {job} (`{name}`): {detail}")
+            }
+            PlanError::Engine(m) => write!(f, "prediction engine failed: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for PlanError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn job_builder_sets_fields() {
+        let j = Job::new("batch", KernelId(3), 2.5);
+        assert_eq!(j.name, "batch");
+        assert_eq!(j.kernel, KernelId(3));
+        assert_eq!(j.scale, 2.5);
+        assert_eq!(j.deadline_us, None);
+        let j = j.with_deadline(1500.0);
+        assert_eq!(j.deadline_us, Some(1500.0));
+    }
+
+    #[test]
+    fn objective_wire_names_are_stable() {
+        assert_eq!(PlanObjective::Energy.name(), "energy");
+        assert_eq!(PlanObjective::Edp.name(), "edp");
+    }
+
+    #[test]
+    fn plan_error_displays_are_attributable() {
+        let e = PlanError::Infeasible {
+            job: 3,
+            name: "night-batch".into(),
+            detail: "deadline 10 µs is unreachable".into(),
+        };
+        let msg = e.to_string();
+        assert!(msg.contains("job 3"), "{msg}");
+        assert!(msg.contains("night-batch"), "{msg}");
+        assert!(msg.contains("infeasible"), "{msg}");
+        let e = PlanError::UnknownKernel { job: 0, name: "j".into(), kernel: KernelId(9) };
+        assert!(e.to_string().contains("krn-9"), "{e}");
+        let e = PlanError::UnknownDevice { device: DeviceId(4) };
+        assert!(e.to_string().contains("dev-4"), "{e}");
+    }
+}

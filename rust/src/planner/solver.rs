@@ -1,0 +1,1105 @@
+//! The planning solver (DESIGN.md §11): exhaustive per-job argmin over
+//! each device's V/f grid, greedy placement under per-device
+//! concurrency caps, then pairwise-swap local search.
+//!
+//! Phases, for `J` jobs, `D` devices, `K` distinct kernels and `P`
+//! candidate points per device:
+//!
+//! 1. **Evaluate** — one batched [`Engine::predict_tuples`] call over
+//!    the `K × D × P` table (jobs sharing a kernel share predictions),
+//!    then an `O(J·D·P)` scan producing `best[j][d]`: the
+//!    deadline-feasible objective argmin for job `j` on device `d`.
+//! 2. **Greedy** — jobs in tightest-deadline-first order each take the
+//!    globally cheapest `best[j][d]` among devices with spare capacity
+//!    (`O(J·D)`); a one-level relocation repair handles the case where
+//!    every deadline-feasible device is at its cap.
+//! 3. **Local search** — interleaved single-job relocations (to any
+//!    device with spare capacity — these can change the load vector
+//!    greedy settled on) and pairwise device swaps (each side
+//!    re-argmins its point via the precomputed table; loads are
+//!    preserved), applying only strict improvements. `O(J·D + J²)`
+//!    per round, bounded rounds.
+//!
+//! Greedy + swap is deliberate: at current grid sizes (`P ≤ 49`,
+//! `D ≤ 1024`) the evaluation table dominates the cost, the greedy
+//! choice is already the unconstrained optimum whenever caps don't
+//! bind, and pairwise swaps remove the order-dependence caps introduce.
+//! See DESIGN.md §11 for why heavier machinery (MILP, simulated
+//! annealing) buys nothing measurable here.
+//!
+//! [`Engine::predict_tuples`]: crate::engine::Engine::predict_tuples
+
+use std::collections::HashSet;
+
+use crate::dvfs::PowerModel;
+use crate::engine::Engine;
+use crate::registry::{DeviceId, DeviceRecord, FreqPoint, KernelId};
+use crate::util::fxhash::FxHashMap;
+
+use super::{Assignment, Job, Plan, PlanError, PlanObjective};
+
+/// Cost ceilings guarding the solve (checked arithmetically **before**
+/// any table is allocated — the `/v2/plan` route is an unauthenticated
+/// surface, so every dimension a caller controls must be bounded, and
+/// the greedy repair phase gets an explicit work budget too):
+///
+/// * `MAX_JOBS` (this constant) bounds the `O(J²)`-per-round swap
+///   phase; it is public so the `/v2/plan` route can refuse oversized
+///   requests before parsing every job — one source of truth for the
+///   limit.
+/// * `MAX_JOB_DEVICE_PAIRS` bounds the `best[j][d]` table and every
+///   `O(J·D)` scan (greedy, repair victims).
+/// * `MAX_EVALUATIONS` bounds `jobs × total candidate points` — the
+///   prediction table and the per-job candidate scan. A plan over the
+///   full 49-pair grid, 8 devices and 4096 jobs sits at ~1.6M.
+///
+/// Violations are refused as [`PlanError::Invalid`].
+pub const MAX_JOBS: usize = 4096;
+const MAX_JOB_DEVICE_PAIRS: usize = 1 << 17;
+const MAX_EVALUATIONS: usize = 2_000_000;
+
+/// Solver knobs. The default plans over every registered device with
+/// unbounded per-device concurrency, deriving each device's candidate
+/// grid from its own V/f curves.
+#[derive(Debug, Clone)]
+pub struct PlannerConfig {
+    pub objective: PlanObjective,
+    /// Restrict planning to these devices; `None` means every device
+    /// in the engine's registry. Duplicates are ignored.
+    pub devices: Option<Vec<DeviceId>>,
+    /// Per-device concurrency cap: at most this many jobs per device.
+    /// `usize::MAX` (the default) is unbounded.
+    pub device_cap: usize,
+    /// Explicit candidate (core, mem) MHz points shared by every
+    /// device; `None` derives each device's grid from its registered
+    /// V/f curves ([`device_grid`]).
+    pub pairs: Option<Vec<(f64, f64)>>,
+    /// Upper bound on swap-refinement passes. Each pass only applies
+    /// strict improvements, so the loop usually converges earlier.
+    pub max_swap_rounds: usize,
+}
+
+impl Default for PlannerConfig {
+    fn default() -> Self {
+        PlannerConfig {
+            objective: PlanObjective::Energy,
+            devices: None,
+            device_cap: usize::MAX,
+            pairs: None,
+            max_swap_rounds: 8,
+        }
+    }
+}
+
+/// Candidate operating points for one device: the cross product of the
+/// frequency breakpoints of its registered core and memory V/f curves.
+/// Never empty (a [`crate::dvfs::VfCurve`] validates at least one
+/// point).
+pub fn device_grid(power: &PowerModel) -> Vec<FreqPoint> {
+    let mut out =
+        Vec::with_capacity(power.core_curve.points.len() * power.mem_curve.points.len());
+    for &(cf, _) in &power.core_curve.points {
+        for &(mf, _) in &power.mem_curve.points {
+            out.push(FreqPoint::new(cf, mf));
+        }
+    }
+    out
+}
+
+/// One evaluated (device, point) choice for one job.
+#[derive(Debug, Clone, Copy)]
+struct Candidate {
+    point: FreqPoint,
+    time_us: f64,
+    power_w: f64,
+    energy_mj: f64,
+    edp: f64,
+}
+
+impl Candidate {
+    fn key(&self, objective: PlanObjective) -> f64 {
+        match objective {
+            PlanObjective::Energy => self.energy_mj,
+            PlanObjective::Edp => self.edp,
+        }
+    }
+}
+
+/// The evaluated candidate table: everything needed to price one
+/// (job, device, point) choice without another engine call.
+struct EvalTable {
+    /// Candidate points per device.
+    grids: Vec<Vec<FreqPoint>>,
+    /// `times[d][k][p]`: single-invocation µs (k indexes the distinct
+    /// kernels; see `job_kernel`).
+    times: Vec<Vec<Vec<f64>>>,
+    /// `power[d][p]`: board watts at that device's point `p`.
+    power: Vec<Vec<f64>>,
+    /// Distinct-kernel table index per job.
+    job_kernel: Vec<usize>,
+}
+
+impl EvalTable {
+    fn eval(&self, jobs: &[Job], j: usize, di: usize, pi: usize) -> Candidate {
+        let time_us = jobs[j].scale * self.times[di][self.job_kernel[j]][pi];
+        let power_w = self.power[di][pi];
+        let energy_mj = power_w * time_us * 1e-3; // W·µs = µJ; /1e3 = mJ
+        Candidate {
+            point: self.grids[di][pi],
+            time_us,
+            power_w,
+            energy_mj,
+            edp: energy_mj * time_us,
+        }
+    }
+}
+
+/// Everything the placement phases read, evaluated up front.
+struct Prepared {
+    devices: Vec<DeviceRecord>,
+    table: EvalTable,
+    /// Max-frequency point index per device (the baseline's choice,
+    /// priced on demand through `table` — a dense J×D table would be
+    /// 1/D used).
+    max_point_idx: Vec<usize>,
+    /// `best[j][d]`: deadline-feasible objective argmin for job `j` on
+    /// device `d`; `None` when no point on `d` meets the deadline.
+    best: Vec<Vec<Option<Candidate>>>,
+    /// Fastest achievable scaled runtime per job over every device and
+    /// point (µs) — the infeasibility diagnostic.
+    fastest_us: Vec<f64>,
+}
+
+impl Prepared {
+    /// The max-frequency candidate for job `j` on device `d`.
+    fn at_max(&self, jobs: &[Job], j: usize, d: usize) -> Candidate {
+        self.table.eval(jobs, j, d, self.max_point_idx[d])
+    }
+}
+
+fn prepare(engine: &Engine, jobs: &[Job], cfg: &PlannerConfig) -> Result<Prepared, PlanError> {
+    let Some(registry) = engine.registry() else {
+        return Err(PlanError::Invalid(
+            "engine has no registry attached (Engine::with_handles)".to_string(),
+        ));
+    };
+    if jobs.is_empty() {
+        return Err(PlanError::Invalid("job list is empty".to_string()));
+    }
+    if jobs.len() > MAX_JOBS {
+        return Err(PlanError::Invalid(format!(
+            "plan is too large: {} jobs (limit {MAX_JOBS} per solve)",
+            jobs.len()
+        )));
+    }
+    for (i, job) in jobs.iter().enumerate() {
+        if !(job.scale.is_finite() && job.scale > 0.0) {
+            return Err(PlanError::Invalid(format!(
+                "job {i} (`{}`): scale must be positive and finite, got {}",
+                job.name, job.scale
+            )));
+        }
+        if let Some(d) = job.deadline_us {
+            if !(d.is_finite() && d > 0.0) {
+                return Err(PlanError::Invalid(format!(
+                    "job {i} (`{}`): deadline_us must be positive and finite, got {d}",
+                    job.name
+                )));
+            }
+        }
+        if engine.kernel_counters(job.kernel).is_err() {
+            return Err(PlanError::UnknownKernel {
+                job: i,
+                name: job.name.clone(),
+                kernel: job.kernel,
+            });
+        }
+    }
+
+    // Resolve the device set (deduplicated, order-preserving).
+    let devices: Vec<DeviceRecord> = match &cfg.devices {
+        None => registry.list(),
+        Some(ids) => {
+            let mut seen: HashSet<DeviceId> = HashSet::with_capacity(ids.len());
+            let mut out = Vec::with_capacity(ids.len());
+            for &id in ids {
+                if !seen.insert(id) {
+                    continue;
+                }
+                match registry.get(id) {
+                    Some(r) => out.push(r),
+                    None => return Err(PlanError::UnknownDevice { device: id }),
+                }
+            }
+            out
+        }
+    };
+    if devices.is_empty() {
+        return Err(PlanError::Invalid("no devices to plan over".to_string()));
+    }
+    if jobs.len().saturating_mul(devices.len()) > MAX_JOB_DEVICE_PAIRS {
+        return Err(PlanError::Invalid(format!(
+            "plan is too large: {} jobs x {} devices = {} job-device pairs (limit {})",
+            jobs.len(),
+            devices.len(),
+            jobs.len().saturating_mul(devices.len()),
+            MAX_JOB_DEVICE_PAIRS
+        )));
+    }
+
+    // Candidate grids, per device.
+    if let Some(pairs) = &cfg.pairs {
+        if pairs.is_empty() {
+            return Err(PlanError::Invalid("candidate pairs list is empty".to_string()));
+        }
+        for &(cf, mf) in pairs {
+            if !FreqPoint::new(cf, mf).is_valid() {
+                return Err(PlanError::Invalid(format!(
+                    "candidate pair ({cf}, {mf}) MHz: frequencies must be positive and finite"
+                )));
+            }
+        }
+    }
+    // Refuse oversized solves BEFORE any table is materialized: the
+    // device set, explicit `pairs` and the registered V/f curves are
+    // all caller-controlled (curves can carry arbitrarily many
+    // breakpoints), so the point counts are computed arithmetically
+    // first and only then are the grids allocated.
+    let points_per_device: Vec<usize> = devices
+        .iter()
+        .map(|r| match &cfg.pairs {
+            Some(pairs) => pairs.len(),
+            None => r
+                .power
+                .core_curve
+                .points
+                .len()
+                .saturating_mul(r.power.mem_curve.points.len()),
+        })
+        .collect();
+    let total_points = points_per_device.iter().fold(0usize, |a, &b| a.saturating_add(b));
+    let evaluations = jobs.len().saturating_mul(total_points);
+    if evaluations > MAX_EVALUATIONS {
+        return Err(PlanError::Invalid(format!(
+            "plan is too large: {} jobs x {} candidate points over {} devices = {} \
+             evaluations (limit {})",
+            jobs.len(),
+            total_points,
+            devices.len(),
+            evaluations,
+            MAX_EVALUATIONS
+        )));
+    }
+    let grids: Vec<Vec<FreqPoint>> = devices
+        .iter()
+        .map(|r| match &cfg.pairs {
+            Some(pairs) => pairs.iter().map(|&p| p.into()).collect(),
+            None => device_grid(&r.power),
+        })
+        .collect();
+
+    // Distinct kernels, in first-appearance order.
+    let mut kernel_ids: Vec<KernelId> = Vec::new();
+    let mut kernel_index: FxHashMap<u64, usize> = FxHashMap::default();
+    for job in jobs {
+        kernel_index.entry(job.kernel.0).or_insert_with(|| {
+            kernel_ids.push(job.kernel);
+            kernel_ids.len() - 1
+        });
+    }
+
+    // One batched prediction over the whole K × D × P table. Jobs only
+    // rescale these times, so fleet size never multiplies engine work.
+    let mut tuples: Vec<(DeviceId, KernelId, FreqPoint)> = Vec::new();
+    for (di, rec) in devices.iter().enumerate() {
+        for &kid in &kernel_ids {
+            for &p in &grids[di] {
+                tuples.push((rec.id, kid, p));
+            }
+        }
+    }
+    let estimates = engine
+        .predict_tuples(&tuples)
+        .map_err(|e| PlanError::Engine(format!("{e:#}")))?;
+
+    // times[d][k][p]: single-invocation µs. Power depends only on the
+    // device and point: power[d][p].
+    let mut times: Vec<Vec<Vec<f64>>> = Vec::with_capacity(devices.len());
+    let mut cursor = 0usize;
+    for (di, _) in devices.iter().enumerate() {
+        let mut per_kernel = Vec::with_capacity(kernel_ids.len());
+        for _ in &kernel_ids {
+            let mut per_point = Vec::with_capacity(grids[di].len());
+            for _ in &grids[di] {
+                per_point.push(estimates[cursor].time_us);
+                cursor += 1;
+            }
+            per_kernel.push(per_point);
+        }
+        times.push(per_kernel);
+    }
+    let power: Vec<Vec<f64>> = devices
+        .iter()
+        .enumerate()
+        .map(|(di, rec)| {
+            grids[di].iter().map(|p| rec.power.power_w(p.core_mhz, p.mem_mhz)).collect()
+        })
+        .collect();
+
+    // Max-frequency point per device: highest core, then highest mem.
+    let max_point_idx: Vec<usize> = grids
+        .iter()
+        .map(|grid| {
+            let mut best = 0usize;
+            for (i, p) in grid.iter().enumerate() {
+                let b = grid[best];
+                if p.core_mhz > b.core_mhz
+                    || (p.core_mhz == b.core_mhz && p.mem_mhz > b.mem_mhz)
+                {
+                    best = i;
+                }
+            }
+            best
+        })
+        .collect();
+
+    let job_kernel: Vec<usize> = jobs.iter().map(|job| kernel_index[&job.kernel.0]).collect();
+    let table = EvalTable { grids, times, power, job_kernel };
+
+    let mut best: Vec<Vec<Option<Candidate>>> = Vec::with_capacity(jobs.len());
+    let mut fastest_us: Vec<f64> = Vec::with_capacity(jobs.len());
+    for (j, job) in jobs.iter().enumerate() {
+        let mut per_device: Vec<Option<Candidate>> = Vec::with_capacity(devices.len());
+        let mut fastest = f64::INFINITY;
+        for di in 0..devices.len() {
+            let mut chosen: Option<Candidate> = None;
+            let mut chosen_key = f64::INFINITY;
+            for pi in 0..table.grids[di].len() {
+                let c = table.eval(jobs, j, di, pi);
+                fastest = fastest.min(c.time_us);
+                let feasible = match job.deadline_us {
+                    Some(d) => c.time_us <= d,
+                    None => true,
+                };
+                if feasible && c.key(cfg.objective) < chosen_key {
+                    chosen_key = c.key(cfg.objective);
+                    chosen = Some(c);
+                }
+            }
+            per_device.push(chosen);
+        }
+        best.push(per_device);
+        fastest_us.push(fastest);
+    }
+
+    Ok(Prepared { devices, table, max_point_idx, best, fastest_us })
+}
+
+/// Assemble the output [`Plan`] from a placement.
+fn assemble(
+    prepared: &Prepared,
+    choice: impl Fn(usize, usize) -> Candidate,
+    dev_of: &[usize],
+    objective: PlanObjective,
+    swaps_applied: usize,
+) -> Plan {
+    let mut assignments = Vec::with_capacity(dev_of.len());
+    let (mut energy, mut edp, mut max_t) = (0.0f64, 0.0f64, 0.0f64);
+    for (j, &d) in dev_of.iter().enumerate() {
+        let c = choice(j, d);
+        energy += c.energy_mj;
+        edp += c.edp;
+        max_t = max_t.max(c.time_us);
+        assignments.push(Assignment {
+            job: j,
+            device: prepared.devices[d].id,
+            point: c.point,
+            time_us: c.time_us,
+            power_w: c.power_w,
+            energy_mj: c.energy_mj,
+            edp: c.edp,
+        });
+    }
+    Plan {
+        objective,
+        assignments,
+        total_energy_mj: energy,
+        total_edp: edp,
+        max_time_us: max_t,
+        swaps_applied,
+    }
+}
+
+/// Produce an energy-minimal (or EDP-minimal) assignment of `jobs` to
+/// the registered devices and per-job (core, mem) operating points.
+/// Every deadline in an emitted plan is met; when the search cannot
+/// achieve that, the result is a structured [`PlanError::Infeasible`]
+/// naming the first unplaceable job (see that variant's docs for the
+/// exact strength of the claim in the capacity-bound case).
+///
+/// Deterministic: identical inputs produce identical plans (ties break
+/// toward lower device index, then lower point index).
+pub fn plan(engine: &Engine, jobs: &[Job], cfg: &PlannerConfig) -> Result<Plan, PlanError> {
+    let prepared = prepare(engine, jobs, cfg)?;
+    let (dev_of, swaps) = greedy_and_swap(&prepared, jobs, cfg)?;
+    Ok(assemble(
+        &prepared,
+        |j, d| prepared.best[j][d].expect("placed jobs are feasible"),
+        &dev_of,
+        cfg.objective,
+        swaps,
+    ))
+}
+
+/// [`plan`] and [`max_frequency_baseline`] from **one** evaluation
+/// pass: the K×D×P prediction table and candidate scans are the
+/// dominant cost of a solve, and callers that report the baseline next
+/// to the plan (the `/v2/plan` route, `gpufreq plan`) must not pay it
+/// twice. The baseline is advisory: a corner case that makes only the
+/// round-robin placement infeasible yields `None` rather than failing
+/// a valid plan.
+pub fn plan_with_baseline(
+    engine: &Engine,
+    jobs: &[Job],
+    cfg: &PlannerConfig,
+) -> Result<(Plan, Option<Plan>), PlanError> {
+    let prepared = prepare(engine, jobs, cfg)?;
+    let (dev_of, swaps) = greedy_and_swap(&prepared, jobs, cfg)?;
+    let planned = assemble(
+        &prepared,
+        |j, d| prepared.best[j][d].expect("placed jobs are feasible"),
+        &dev_of,
+        cfg.objective,
+        swaps,
+    );
+    let baseline = baseline_assign(&prepared, jobs, cfg).ok().map(|b| {
+        assemble(&prepared, |j, d| prepared.at_max(jobs, j, d), &b, cfg.objective, 0)
+    });
+    Ok((planned, baseline))
+}
+
+/// Greedy + swap placement over an evaluated table: returns the device
+/// index per job (input order) and the number of swaps applied.
+fn greedy_and_swap(
+    prepared: &Prepared,
+    jobs: &[Job],
+    cfg: &PlannerConfig,
+) -> Result<(Vec<usize>, usize), PlanError> {
+    let d_count = prepared.devices.len();
+    let n = jobs.len();
+
+    // Greedy phase: tightest deadlines place first, so loose jobs
+    // cannot squat on the only device a tight job fits.
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| {
+        let da = jobs[a].deadline_us.unwrap_or(f64::INFINITY);
+        let db = jobs[b].deadline_us.unwrap_or(f64::INFINITY);
+        da.total_cmp(&db).then(a.cmp(&b))
+    });
+    let mut load = vec![0usize; d_count];
+    let mut dev_of: Vec<usize> = vec![usize::MAX; n];
+    let mut placed: Vec<usize> = Vec::with_capacity(n);
+    // The one-level repair scans placed × devices per stuck job; on an
+    // adversarially entangled fleet that is O(J²·D²) total, so it gets
+    // an explicit work budget. Exhausting it is reported as the
+    // capacity infeasibility it effectively is.
+    let mut repair_budget: usize = MAX_EVALUATIONS;
+    for &j in &order {
+        let mut pick: Option<usize> = None;
+        let mut pick_key = f64::INFINITY;
+        for d in 0..d_count {
+            if load[d] >= cfg.device_cap {
+                continue;
+            }
+            if let Some(c) = prepared.best[j][d] {
+                let key = c.key(cfg.objective);
+                if key < pick_key {
+                    pick_key = key;
+                    pick = Some(d);
+                }
+            }
+        }
+        if let Some(d) = pick {
+            dev_of[j] = d;
+            load[d] += 1;
+            placed.push(j);
+            continue;
+        }
+        // No feasible device with spare capacity. Distinguish an
+        // unreachable deadline from exhausted capacity, and in the
+        // latter case attempt a one-level repair: relocate one placed
+        // job off a deadline-feasible device so `j` fits.
+        let feasible_devs: Vec<usize> =
+            (0..d_count).filter(|&d| prepared.best[j][d].is_some()).collect();
+        if feasible_devs.is_empty() {
+            return Err(PlanError::Infeasible {
+                job: j,
+                name: jobs[j].name.clone(),
+                detail: match jobs[j].deadline_us {
+                    Some(dl) => format!(
+                        "deadline {dl} µs is unreachable on every device: fastest \
+                         achievable runtime is {:.3} µs",
+                        prepared.fastest_us[j]
+                    ),
+                    None => "no device offers a valid operating point".to_string(),
+                },
+            });
+        }
+        // (victim, from-device, to-device), cheapest total objective.
+        let mut repair: Option<(usize, usize, usize)> = None;
+        let mut repair_delta = f64::INFINITY;
+        'search: for &d in &feasible_devs {
+            let cost_j = prepared.best[j][d].expect("feasible").key(cfg.objective);
+            for &i in &placed {
+                if dev_of[i] != d {
+                    continue;
+                }
+                if repair_budget < d_count {
+                    // Budget exhausted: stop with whatever repair the
+                    // scan found so far (possibly none).
+                    break 'search;
+                }
+                repair_budget -= d_count;
+                let cur_i = prepared.best[i][d].expect("placed jobs are feasible");
+                for d2 in 0..d_count {
+                    if d2 == d || load[d2] >= cfg.device_cap {
+                        continue;
+                    }
+                    let Some(alt_i) = prepared.best[i][d2] else { continue };
+                    let delta =
+                        alt_i.key(cfg.objective) - cur_i.key(cfg.objective) + cost_j;
+                    if delta < repair_delta {
+                        repair_delta = delta;
+                        repair = Some((i, d, d2));
+                    }
+                }
+            }
+        }
+        match repair {
+            Some((i, d, d2)) => {
+                dev_of[i] = d2;
+                load[d] -= 1;
+                load[d2] += 1;
+                dev_of[j] = d;
+                load[d] += 1;
+                placed.push(j);
+            }
+            None => {
+                return Err(PlanError::Infeasible {
+                    job: j,
+                    name: jobs[j].name.clone(),
+                    detail: format!(
+                        "every device that can meet the job's constraints is at its \
+                         concurrency cap ({} jobs/device over {} devices)",
+                        cfg.device_cap, d_count
+                    ),
+                })
+            }
+        }
+    }
+
+    // Local search: single-job relocations (which can change the load
+    // vector greedy settled on, as long as the target device has spare
+    // capacity) interleaved with pairwise device swaps (which preserve
+    // loads). Every applied step strictly improves the objective, so
+    // the loop terminates; caps and feasibility are preserved by
+    // construction (`best` is deadline-filtered, loads are rechecked
+    // on moves and untouched by swaps).
+    let mut steps = 0usize;
+    for _ in 0..cfg.max_swap_rounds {
+        let mut improved = false;
+        for a in 0..n {
+            let da = dev_of[a];
+            let cur = prepared.best[a][da].expect("placed").key(cfg.objective);
+            let mut target: Option<usize> = None;
+            let mut target_key = cur;
+            for d in 0..d_count {
+                if d == da || load[d] >= cfg.device_cap {
+                    continue;
+                }
+                if let Some(c) = prepared.best[a][d] {
+                    let key = c.key(cfg.objective);
+                    if target_key - key > 1e-9 * cur.abs().max(1e-12) {
+                        target_key = key;
+                        target = Some(d);
+                    }
+                }
+            }
+            if let Some(d) = target {
+                load[da] -= 1;
+                load[d] += 1;
+                dev_of[a] = d;
+                steps += 1;
+                improved = true;
+            }
+        }
+        for a in 0..n {
+            for b in (a + 1)..n {
+                let (da, db) = (dev_of[a], dev_of[b]);
+                if da == db {
+                    continue;
+                }
+                let (Some(a_on_db), Some(b_on_da)) =
+                    (prepared.best[a][db], prepared.best[b][da])
+                else {
+                    continue;
+                };
+                let cur = prepared.best[a][da].expect("placed").key(cfg.objective)
+                    + prepared.best[b][db].expect("placed").key(cfg.objective);
+                let alt = a_on_db.key(cfg.objective) + b_on_da.key(cfg.objective);
+                if cur - alt > 1e-9 * cur.abs().max(1e-12) {
+                    dev_of[a] = db;
+                    dev_of[b] = da;
+                    steps += 1;
+                    improved = true;
+                }
+            }
+        }
+        if !improved {
+            break;
+        }
+    }
+
+    Ok((dev_of, steps))
+}
+
+/// The naive fleet: round-robin jobs over the devices (respecting the
+/// same concurrency cap) and run everything at each device's maximum
+/// frequency point. This is what a scheduler without the model does —
+/// the reference [`plan`] must beat on total energy. Deadlines are
+/// *not* enforced (audit the result with
+/// [`Plan::deadline_violations`]).
+pub fn max_frequency_baseline(
+    engine: &Engine,
+    jobs: &[Job],
+    cfg: &PlannerConfig,
+) -> Result<Plan, PlanError> {
+    let prepared = prepare(engine, jobs, cfg)?;
+    let dev_of = baseline_assign(&prepared, jobs, cfg)?;
+    Ok(assemble(&prepared, |j, d| prepared.at_max(jobs, j, d), &dev_of, cfg.objective, 0))
+}
+
+/// Round-robin placement under the cap (the baseline's device choice).
+fn baseline_assign(
+    prepared: &Prepared,
+    jobs: &[Job],
+    cfg: &PlannerConfig,
+) -> Result<Vec<usize>, PlanError> {
+    let d_count = prepared.devices.len();
+    let mut load = vec![0usize; d_count];
+    let mut dev_of: Vec<usize> = Vec::with_capacity(jobs.len());
+    let mut cursor = 0usize;
+    for j in 0..jobs.len() {
+        let mut placed = None;
+        for step in 0..d_count {
+            let d = (cursor + step) % d_count;
+            if load[d] < cfg.device_cap {
+                placed = Some(d);
+                cursor = (d + 1) % d_count;
+                break;
+            }
+        }
+        let Some(d) = placed else {
+            return Err(PlanError::Infeasible {
+                job: j,
+                name: jobs[j].name.clone(),
+                detail: format!(
+                    "every device is at its concurrency cap ({} jobs/device over {} \
+                     devices)",
+                    cfg.device_cap, d_count
+                ),
+            });
+        };
+        load[d] += 1;
+        dev_of.push(d);
+    }
+    Ok(dev_of)
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::Arc;
+
+    use super::*;
+    use crate::model::{HwParams, KernelCounters};
+    use crate::registry::{DeviceRegistry, KernelCatalog};
+
+    fn counters_membound() -> KernelCounters {
+        KernelCounters {
+            l2_hr: 0.0,
+            gld_trans: 12.0,
+            avr_inst: 0.4,
+            n_blocks: 256.0,
+            wpb: 8.0,
+            aw: 64.0,
+            n_sm: 16.0,
+            o_itrs: 8.0,
+            i_itrs: 0.0,
+            uses_smem: false,
+            smem_conflict: 1.0,
+            gld_body: 12.0,
+            gld_edge: 0.0,
+            mem_ops: 3.0,
+            l1_hr: 0.0,
+        }
+    }
+
+    fn counters_compbound() -> KernelCounters {
+        KernelCounters { avr_inst: 100.0, l2_hr: 0.9, gld_trans: 2.0, ..counters_membound() }
+    }
+
+    /// Two-device fixture: the second GPU has slightly slower DRAM and
+    /// a cheaper power model, so device choice matters.
+    fn fixture() -> (Engine, Vec<DeviceId>, Vec<KernelId>) {
+        let hw = HwParams::paper_defaults();
+        let registry = Arc::new(DeviceRegistry::new());
+        let a = registry.register("gpu-a", hw, PowerModel::gtx980());
+        let mut hw_b = hw;
+        hw_b.dm_del += 1.0;
+        let mut power_b = PowerModel::gtx980();
+        power_b.static_w = 14.0;
+        power_b.core_coeff = 0.05;
+        let b = registry.register("gpu-b", hw_b, power_b);
+        let catalog = Arc::new(KernelCatalog::new());
+        let mem = catalog.register("membound", counters_membound());
+        let comp = catalog.register("compbound", counters_compbound());
+        let engine = Engine::native(hw).with_handles(registry, catalog, a).unwrap();
+        (engine, vec![a, b], vec![mem, comp])
+    }
+
+    fn fleet(kernels: &[KernelId], n: usize) -> Vec<Job> {
+        (0..n)
+            .map(|i| {
+                Job::new(format!("job-{i}"), kernels[i % kernels.len()], 1.0 + (i % 4) as f64)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn device_grid_is_the_curve_cross_product() {
+        let g = device_grid(&PowerModel::gtx980());
+        // maxwell_core has 4 breakpoints, gddr5_mem has 2.
+        assert_eq!(g.len(), 8);
+        assert!(g.contains(&FreqPoint::new(400.0, 400.0)));
+        assert!(g.contains(&FreqPoint::new(1000.0, 1000.0)));
+        assert!(g.iter().all(FreqPoint::is_valid));
+    }
+
+    #[test]
+    fn energy_is_power_times_time_for_every_assignment() {
+        // The objective-math invariant: E = P×T (in mJ) and
+        // EDP = E×T hold exactly for every emitted assignment, and the
+        // plan totals are the sums.
+        let (engine, devices, kernels) = fixture();
+        let jobs = fleet(&kernels, 12);
+        let p = plan(&engine, &jobs, &PlannerConfig::default()).unwrap();
+        assert_eq!(p.assignments.len(), 12);
+        let registry = engine.registry().unwrap();
+        let (mut te, mut tedp) = (0.0, 0.0);
+        for a in &p.assignments {
+            let rec = registry.get(a.device).unwrap();
+            assert!(devices.contains(&a.device));
+            assert_eq!(
+                a.power_w.to_bits(),
+                rec.power.power_w(a.point.core_mhz, a.point.mem_mhz).to_bits(),
+                "power must come from the device's own model"
+            );
+            let want_mj = a.power_w * a.time_us * 1e-3;
+            assert!(
+                (a.energy_mj - want_mj).abs() <= 1e-12 * want_mj.abs().max(1.0),
+                "E != P*T: {} vs {want_mj}",
+                a.energy_mj
+            );
+            let want_edp = a.energy_mj * a.time_us;
+            assert!((a.edp - want_edp).abs() <= 1e-12 * want_edp.abs().max(1.0));
+            te += a.energy_mj;
+            tedp += a.edp;
+        }
+        assert!((p.total_energy_mj - te).abs() <= 1e-9 * te.max(1.0));
+        assert!((p.total_edp - tedp).abs() <= 1e-9 * tedp.max(1.0));
+        let max_t = p.assignments.iter().map(|a| a.time_us).fold(0.0, f64::max);
+        assert_eq!(p.max_time_us.to_bits(), max_t.to_bits());
+    }
+
+    #[test]
+    fn uncapped_plan_matches_per_job_exhaustive_argmin() {
+        // Without caps the planner must equal brute force: every job
+        // independently takes the global (device, point) argmin.
+        let (engine, devices, kernels) = fixture();
+        let jobs = fleet(&kernels, 6);
+        let p = plan(&engine, &jobs, &PlannerConfig::default()).unwrap();
+        let registry = engine.registry().unwrap();
+        for (j, job) in jobs.iter().enumerate() {
+            let mut brute: Option<(DeviceId, FreqPoint, f64)> = None;
+            for &d in &devices {
+                let rec = registry.get(d).unwrap();
+                for point in device_grid(&rec.power) {
+                    let t = job.scale
+                        * engine.predict_handle(d, job.kernel, point).unwrap().time_us;
+                    let e = rec.power.power_w(point.core_mhz, point.mem_mhz) * t * 1e-3;
+                    let better = match brute {
+                        None => true,
+                        Some((.., be)) => e < be,
+                    };
+                    if better {
+                        brute = Some((d, point, e));
+                    }
+                }
+            }
+            let (bd, bp, be) = brute.unwrap();
+            let a = &p.assignments[j];
+            assert_eq!(a.device, bd, "job {j}");
+            assert_eq!(a.point, bp, "job {j}");
+            assert!((a.energy_mj - be).abs() <= 1e-12 * be.max(1.0));
+        }
+        assert_eq!(p.swaps_applied, 0, "unconstrained greedy is already optimal");
+    }
+
+    #[test]
+    fn deadlines_are_hard_constraints() {
+        let (engine, _, kernels) = fixture();
+        // A roomy deadline: met, and the energy optimum may be slow.
+        let loose = [Job::new("loose", kernels[0], 2.0).with_deadline(1e9)];
+        let p = plan(&engine, &loose, &PlannerConfig::default()).unwrap();
+        assert_eq!(p.deadline_violations(&loose), 0);
+        // Tighten to just above the fastest achievable: still met,
+        // with strictly more energy than the unconstrained optimum.
+        let unconstrained = plan(
+            &engine,
+            &[Job::new("free", kernels[0], 2.0)],
+            &PlannerConfig::default(),
+        )
+        .unwrap();
+        let fastest = max_frequency_baseline(
+            &engine,
+            &[Job::new("fast", kernels[0], 2.0)],
+            &PlannerConfig::default(),
+        )
+        .unwrap();
+        let tight_dl = fastest.assignments[0].time_us * 1.01;
+        let tight = [Job::new("tight", kernels[0], 2.0).with_deadline(tight_dl)];
+        let p = plan(&engine, &tight, &PlannerConfig::default()).unwrap();
+        assert!(p.assignments[0].time_us <= tight_dl);
+        assert!(p.total_energy_mj >= unconstrained.total_energy_mj - 1e-12);
+    }
+
+    #[test]
+    fn impossible_deadline_is_a_structured_infeasibility() {
+        let (engine, _, kernels) = fixture();
+        let jobs = [
+            Job::new("fine", kernels[0], 1.0),
+            Job::new("doomed", kernels[1], 1.0).with_deadline(1e-3),
+        ];
+        let err = plan(&engine, &jobs, &PlannerConfig::default()).unwrap_err();
+        match err {
+            PlanError::Infeasible { job, ref name, ref detail } => {
+                assert_eq!(job, 1);
+                assert_eq!(name, "doomed");
+                assert!(detail.contains("unreachable"), "{detail}");
+                assert!(detail.contains("fastest"), "{detail}");
+            }
+            other => panic!("expected Infeasible, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn capacity_caps_bind_and_repair_relocates() {
+        let (engine, devices, kernels) = fixture();
+        // Cap 1/device over 2 devices: three jobs cannot fit.
+        let cfg = PlannerConfig { device_cap: 1, ..PlannerConfig::default() };
+        let jobs = fleet(&kernels, 3);
+        let err = plan(&engine, &jobs, &cfg).unwrap_err();
+        assert!(matches!(err, PlanError::Infeasible { .. }), "{err:?}");
+        // Two jobs fit exactly: one per device, caps respected.
+        let jobs = fleet(&kernels, 2);
+        let p = plan(&engine, &jobs, &cfg).unwrap();
+        for &d in &devices {
+            assert!(p.load_of(d) <= 1);
+        }
+        assert_eq!(p.load_of(devices[0]) + p.load_of(devices[1]), 2);
+        // A deadline-squeezed job displaces a squatter: job 1 can only
+        // run on SOME device fast enough, and the repair must relocate
+        // whoever greedy parked there first.
+        let mut tight = fleet(&kernels, 2);
+        let fastest = max_frequency_baseline(&engine, &tight, &PlannerConfig::default())
+            .unwrap()
+            .assignments
+            .iter()
+            .map(|a| a.time_us)
+            .fold(f64::INFINITY, f64::min);
+        tight[1] = tight[1].clone().with_deadline(fastest * 100.0);
+        let p = plan(&engine, &tight, &cfg).unwrap();
+        assert_eq!(p.deadline_violations(&tight), 0);
+    }
+
+    #[test]
+    fn swap_refinement_beats_or_matches_greedy_under_caps() {
+        // Force caps to bind so greedy order matters, then check the
+        // refined plan meets every constraint and the totals are no
+        // worse than a cap-respecting round-robin at the energy argmin
+        // point per device (a valid feasible reference).
+        let (engine, devices, kernels) = fixture();
+        let n = 8;
+        let cfg = PlannerConfig { device_cap: n / 2, ..PlannerConfig::default() };
+        let jobs = fleet(&kernels, n);
+        let p = plan(&engine, &jobs, &cfg).unwrap();
+        assert_eq!(p.deadline_violations(&jobs), 0);
+        for &d in &devices {
+            assert!(p.load_of(d) <= n / 2, "cap violated on {d}");
+        }
+        let baseline = max_frequency_baseline(&engine, &jobs, &cfg).unwrap();
+        assert!(
+            p.total_energy_mj < baseline.total_energy_mj,
+            "planned {} mJ must beat max-frequency {} mJ",
+            p.total_energy_mj,
+            baseline.total_energy_mj
+        );
+    }
+
+    #[test]
+    fn explicit_pairs_override_the_curve_grid() {
+        let (engine, _, kernels) = fixture();
+        let cfg = PlannerConfig {
+            pairs: Some(vec![(700.0, 700.0)]),
+            ..PlannerConfig::default()
+        };
+        let jobs = fleet(&kernels, 4);
+        let p = plan(&engine, &jobs, &cfg).unwrap();
+        for a in &p.assignments {
+            assert_eq!(a.point, FreqPoint::new(700.0, 700.0));
+        }
+        let bad = PlannerConfig { pairs: Some(vec![]), ..PlannerConfig::default() };
+        assert!(matches!(plan(&engine, &jobs, &bad), Err(PlanError::Invalid(_))));
+        let bad = PlannerConfig {
+            pairs: Some(vec![(0.0, 700.0)]),
+            ..PlannerConfig::default()
+        };
+        assert!(matches!(plan(&engine, &jobs, &bad), Err(PlanError::Invalid(_))));
+    }
+
+    #[test]
+    fn input_validation_is_typed() {
+        let (engine, devices, kernels) = fixture();
+        let cfg = PlannerConfig::default();
+        assert!(matches!(plan(&engine, &[], &cfg), Err(PlanError::Invalid(_))));
+        let bad_scale = [Job::new("z", kernels[0], 0.0)];
+        assert!(matches!(plan(&engine, &bad_scale, &cfg), Err(PlanError::Invalid(_))));
+        let bad_deadline = [Job::new("d", kernels[0], 1.0).with_deadline(f64::NAN)];
+        assert!(matches!(plan(&engine, &bad_deadline, &cfg), Err(PlanError::Invalid(_))));
+        let ghost = [Job::new("g", KernelId(99), 1.0)];
+        match plan(&engine, &ghost, &cfg) {
+            Err(PlanError::UnknownKernel { job: 0, kernel, .. }) => {
+                assert_eq!(kernel, KernelId(99))
+            }
+            other => panic!("expected UnknownKernel, got {other:?}"),
+        }
+        let ghost_dev = PlannerConfig {
+            devices: Some(vec![devices[0], DeviceId(404)]),
+            ..PlannerConfig::default()
+        };
+        let jobs = fleet(&kernels, 1);
+        match plan(&engine, &jobs, &ghost_dev) {
+            Err(PlanError::UnknownDevice { device }) => assert_eq!(device, DeviceId(404)),
+            other => panic!("expected UnknownDevice, got {other:?}"),
+        }
+        // An engine without handles is an Invalid, not a panic.
+        let bare = Engine::native(HwParams::paper_defaults());
+        assert!(matches!(plan(&bare, &jobs, &cfg), Err(PlanError::Invalid(_))));
+    }
+
+    #[test]
+    fn restricting_devices_is_honored_and_deduplicated() {
+        let (engine, devices, kernels) = fixture();
+        let cfg = PlannerConfig {
+            devices: Some(vec![devices[1], devices[1]]),
+            device_cap: 4,
+            ..PlannerConfig::default()
+        };
+        let jobs = fleet(&kernels, 4);
+        let p = plan(&engine, &jobs, &cfg).unwrap();
+        assert_eq!(p.load_of(devices[1]), 4, "duplicates must not double the cap");
+        assert_eq!(p.load_of(devices[0]), 0);
+        // A fifth job cannot fit once the dedup'd cap binds.
+        let jobs = fleet(&kernels, 5);
+        assert!(matches!(plan(&engine, &jobs, &cfg), Err(PlanError::Infeasible { .. })));
+    }
+
+    #[test]
+    fn plan_with_baseline_matches_the_separate_calls_bit_for_bit() {
+        let (engine, _, kernels) = fixture();
+        let jobs = fleet(&kernels, 10);
+        let cfg = PlannerConfig { device_cap: 5, ..PlannerConfig::default() };
+        let (p, b) = plan_with_baseline(&engine, &jobs, &cfg).unwrap();
+        let p2 = plan(&engine, &jobs, &cfg).unwrap();
+        let b2 = max_frequency_baseline(&engine, &jobs, &cfg).unwrap();
+        let b = b.expect("balanced cap admits round-robin");
+        let assert_same = |x: &Plan, y: &Plan| {
+            assert_eq!(x.assignments.len(), y.assignments.len());
+            for (ax, ay) in x.assignments.iter().zip(&y.assignments) {
+                assert_eq!(ax.device, ay.device);
+                assert_eq!(ax.point, ay.point);
+                assert_eq!(ax.energy_mj.to_bits(), ay.energy_mj.to_bits());
+            }
+            assert_eq!(x.total_energy_mj.to_bits(), y.total_energy_mj.to_bits());
+        };
+        assert_same(&p, &p2);
+        assert_same(&b, &b2);
+    }
+
+    #[test]
+    fn oversized_solves_are_refused_before_allocation() {
+        // An unauthenticated caller must not be able to force a
+        // multi-gigabyte table: jobs × candidate points is bounded.
+        let (engine, _, kernels) = fixture();
+        let huge_grid: Vec<(f64, f64)> =
+            (0..2001).map(|i| (400.0 + i as f64 * 0.1, 700.0)).collect();
+        let jobs = fleet(&kernels, 1000);
+        let cfg = PlannerConfig { pairs: Some(huge_grid), ..PlannerConfig::default() };
+        // 1000 jobs × (2001 points × 2 devices) > 2M evaluations.
+        match plan(&engine, &jobs, &cfg) {
+            Err(PlanError::Invalid(m)) => assert!(m.contains("too large"), "{m}"),
+            other => panic!("expected Invalid(too large), got {other:?}"),
+        }
+        // The job count itself is capped (the O(J²) swap phase).
+        let too_many = fleet(&kernels, 4097);
+        match plan(&engine, &too_many, &PlannerConfig::default()) {
+            Err(PlanError::Invalid(m)) => assert!(m.contains("4096"), "{m}"),
+            other => panic!("expected Invalid(job cap), got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn plans_are_deterministic() {
+        let (engine, _, kernels) = fixture();
+        let jobs = fleet(&kernels, 16);
+        let cfg = PlannerConfig { device_cap: 8, ..PlannerConfig::default() };
+        let a = plan(&engine, &jobs, &cfg).unwrap();
+        let b = plan(&engine, &jobs, &cfg).unwrap();
+        assert_eq!(a.assignments.len(), b.assignments.len());
+        for (x, y) in a.assignments.iter().zip(&b.assignments) {
+            assert_eq!(x.device, y.device);
+            assert_eq!(x.point, y.point);
+            assert_eq!(x.energy_mj.to_bits(), y.energy_mj.to_bits());
+        }
+        assert_eq!(a.total_energy_mj.to_bits(), b.total_energy_mj.to_bits());
+        assert_eq!(a.swaps_applied, b.swaps_applied);
+    }
+
+    #[test]
+    fn membound_jobs_downclock_core_compbound_keep_it_high() {
+        // The paper's motivation carried to fleet scale: DRAM-bound
+        // work parks at low core frequency, compute-bound work keeps
+        // core high but memory low.
+        let (engine, _, kernels) = fixture();
+        let jobs = [
+            Job::new("mem", kernels[0], 1.0),
+            Job::new("comp", kernels[1], 1.0),
+        ];
+        let p = plan(&engine, &jobs, &PlannerConfig::default()).unwrap();
+        let mem = &p.assignments[0];
+        let comp = &p.assignments[1];
+        assert!(mem.point.core_mhz <= 600.0, "membound core {}", mem.point.core_mhz);
+        assert!(comp.point.mem_mhz <= 600.0, "compbound mem {}", comp.point.mem_mhz);
+        assert!(comp.point.core_mhz >= mem.point.core_mhz);
+    }
+}

@@ -17,7 +17,10 @@
 //! * [`KernelCatalog`] — named kernels with their baseline-profiled
 //!   counters (the paper's one-shot Nsight pass).
 //! * [`DeviceId`] / [`KernelId`] / [`FreqPoint`] — the handle triple
-//!   `engine::Engine` and the `/v2` wire protocol operate on.
+//!   `engine::Engine` and the `/v2` wire protocol operate on. The
+//!   fleet planner ([`crate::planner`]) also derives each device's
+//!   candidate operating points from the record's `PowerModel` V/f
+//!   curves, so a registered GPU is plannable with no extra setup.
 //!
 //! Identity semantics: device records are **immutable** — re-registering
 //! a name mints a fresh id (the name resolves to the latest record), so

@@ -4,6 +4,23 @@
 //!
 //! One [`Client`] owns one keep-alive connection and issues one request
 //! at a time — exactly the closed-loop shape the load harness measures.
+//!
+//! # Example
+//!
+//! ```no_run
+//! use gpufreq::service::Client;
+//!
+//! let addr = "127.0.0.1:8077".parse().unwrap();
+//! let mut client = Client::connect(&addr)?;
+//! let health = client.get("/healthz")?;
+//! assert_eq!(health.status, 200);
+//! let plan = client.post(
+//!     "/v2/plan",
+//!     r#"{"jobs":[{"kernel":"VA","scale":2,"deadline_us":1e6}]}"#,
+//! )?;
+//! println!("{}", plan.body);
+//! # Ok::<(), std::io::Error>(())
+//! ```
 
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpStream};

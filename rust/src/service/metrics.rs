@@ -97,11 +97,12 @@ pub enum Route {
     KernelsV2,
     PredictV2,
     AdviseV2,
+    PlanV2,
     Other,
 }
 
 impl Route {
-    pub const ALL: [Route; 10] = [
+    pub const ALL: [Route; 11] = [
         Route::Healthz,
         Route::Metrics,
         Route::Predict,
@@ -111,6 +112,7 @@ impl Route {
         Route::KernelsV2,
         Route::PredictV2,
         Route::AdviseV2,
+        Route::PlanV2,
         Route::Other,
     ];
 
@@ -125,6 +127,7 @@ impl Route {
             "/v2/kernels" => Route::KernelsV2,
             "/v2/predict" => Route::PredictV2,
             "/v2/advise" => Route::AdviseV2,
+            "/v2/plan" => Route::PlanV2,
             _ => Route::Other,
         }
     }
@@ -140,6 +143,7 @@ impl Route {
             Route::KernelsV2 => "/v2/kernels",
             Route::PredictV2 => "/v2/predict",
             Route::AdviseV2 => "/v2/advise",
+            Route::PlanV2 => "/v2/plan",
             Route::Other => "other",
         }
     }
@@ -155,7 +159,8 @@ impl Route {
             Route::KernelsV2 => 6,
             Route::PredictV2 => 7,
             Route::AdviseV2 => 8,
-            Route::Other => 9,
+            Route::PlanV2 => 9,
+            Route::Other => 10,
         }
     }
 }
@@ -324,6 +329,7 @@ mod tests {
         assert_eq!(Route::of_path("/v1/predict"), Route::Predict);
         assert_eq!(Route::of_path("/v2/predict"), Route::PredictV2);
         assert_eq!(Route::of_path("/v2/devices"), Route::DevicesV2);
+        assert_eq!(Route::of_path("/v2/plan"), Route::PlanV2);
         assert_eq!(Route::of_path("/nope"), Route::Other);
         for r in Route::ALL {
             assert_eq!(Route::of_path(r.name()), if r == Route::Other { Route::Other } else { r });

@@ -19,7 +19,7 @@
 //!   │ routes.rs   /healthz /metrics                    │
 //!   │             /v1/{predict, grid, advise}  (shim)  │
 //!   │             /v2/{devices, kernels, predict,      │
-//!   │             advise}           (handle protocol)  │
+//!   │             advise, plan}     (handle protocol)  │
 //!   │ json.rs     hand-rolled JSON both directions     │
 //!   │ metrics.rs  counters + latency histograms        │
 //!   └────────────────────────┬─────────────────────────┘
@@ -27,11 +27,14 @@
 //!            engine::Engine + registry::{DeviceRegistry,
 //!            KernelCatalog}          (DESIGN.md §8, §10)
 //!              dvfs::{PowerModel, advise}  (§VII)
+//!              planner::plan  (fleet DVFS, §11)
 //! ```
 //!
 //! `/v2` is the typed, handle-based protocol (DESIGN.md §10): register
 //! devices and kernels once, then predict/advise by
-//! `(device, kernel, frequency)` handles — batch-first. `/v1` remains
+//! `(device, kernel, frequency)` handles — batch-first — or hand the
+//! whole fleet to `POST /v2/plan` (DESIGN.md §11) for a deadline-aware,
+//! energy-minimal job→(device, frequency) assignment. `/v1` remains
 //! as a compatibility shim interpreted against the boot GPU.
 //!
 //! Start one with [`Service::start`] (the CLI's `serve` subcommand does

@@ -13,6 +13,7 @@
 //! | `/v2/kernels`    | POST/GET | `{name, counters}` / —                      |
 //! | `/v2/predict`    | POST     | `{requests: [{device, kernel, core_mhz, mem_mhz}]}` (batch-first) |
 //! | `/v2/advise`     | POST     | `{device, kernel, objective?, deadline_us?, pairs?, include_points?}` |
+//! | `/v2/plan`       | POST     | `{jobs: [{kernel, scale?, deadline_us?, name?}], devices?, objective?, device_cap?, pairs?}` |
 //!
 //! **v2 is the handle-based protocol** (DESIGN.md §10): devices and
 //! kernels are registered once and addressed by stable `dev-<n>` /
@@ -28,8 +29,9 @@
 //! Every error body is structured JSON `{error, code}` with a stable
 //! machine-readable `code`: `bad_json`, `bad_request`,
 //! `unknown_kernel`, `unknown_device`, `unknown_route`,
-//! `method_not_allowed`, `registry_full`, `internal` (plus
-//! `overloaded` and `bad_http` from the server loop).
+//! `method_not_allowed`, `registry_full`, `infeasible` (422, from the
+//! fleet planner), `internal` (plus `overloaded` and `bad_http` from
+//! the server loop).
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -37,6 +39,7 @@ use std::time::Instant;
 use crate::dvfs::{ConfigPoint, Objective, PowerModel, VfCurve};
 use crate::engine::{Engine, Estimate};
 use crate::model::{HwParams, KernelCounters};
+use crate::planner::{self, Job, PlanError, PlanObjective, PlannerConfig};
 use crate::registry::{
     DeviceId, DeviceRecord, DeviceRegistry, FreqPoint, KernelCatalog, KernelId, RegisterError,
 };
@@ -136,6 +139,7 @@ fn dispatch(state: &ServiceState, metrics: &Metrics, req: &HttpRequest) -> HttpR
         ("GET", Route::KernelsV2) => v2_list_kernels(state),
         ("POST", Route::PredictV2) => v2_predict(state, req),
         ("POST", Route::AdviseV2) => v2_advise(state, req),
+        ("POST", Route::PlanV2) => v2_plan(state, req),
         (_, Route::Other) => error_json(404, "unknown_route", "unknown route"),
         _ => error_json(405, "method_not_allowed", "method not allowed for this route"),
     }
@@ -915,6 +919,233 @@ fn v2_advise(state: &ServiceState, req: &HttpRequest) -> HttpResponse {
     HttpResponse::json(200, payload.render())
 }
 
+/// Map a typed [`PlanError`] onto the service's `{error, code}`
+/// taxonomy. Infeasibility is its own 422 code — the request was
+/// well-formed, the constraints just cannot be satisfied, and a
+/// scheduler must tell those apart from malformed input.
+fn plan_error(e: &PlanError) -> HttpResponse {
+    match e {
+        PlanError::Invalid(_) => error_json(400, "bad_request", &e.to_string()),
+        PlanError::UnknownKernel { .. } => error_json(404, "unknown_kernel", &e.to_string()),
+        PlanError::UnknownDevice { .. } => error_json(404, "unknown_device", &e.to_string()),
+        PlanError::Infeasible { .. } => error_json(422, "infeasible", &e.to_string()),
+        PlanError::Engine(_) => error_json(500, "internal", &e.to_string()),
+    }
+}
+
+/// `POST /v2/plan` — the fleet-level DVFS planner (DESIGN.md §11):
+/// assign a batch of jobs to registered devices and per-job
+/// (core, mem) operating points, minimizing total energy (or EDP)
+/// while meeting every per-job deadline. The response carries the
+/// max-frequency baseline for the same fleet so callers can see what
+/// the plan saves.
+fn v2_plan(state: &ServiceState, req: &HttpRequest) -> HttpResponse {
+    let body = match parse_body(req) {
+        Ok(v) => v,
+        Err(resp) => return resp,
+    };
+    let Some(items) = body.get("jobs").and_then(Value::as_array) else {
+        return error_json(400, "bad_request", "body needs a `jobs` array");
+    };
+    if items.is_empty() {
+        return error_json(400, "bad_request", "`jobs` must not be empty");
+    }
+    // Early refusal with the solver's own bound — one source of truth
+    // — so an oversized request is rejected before every job parses.
+    if items.len() > planner::MAX_JOBS {
+        return error_json(
+            400,
+            "bad_request",
+            &format!("`jobs` is limited to {} per request", planner::MAX_JOBS),
+        );
+    }
+    let mut jobs = Vec::with_capacity(items.len());
+    for (i, item) in items.iter().enumerate() {
+        let ctx = format!("jobs[{i}]");
+        let Some(kernel) = item.get("kernel").and_then(Value::as_str) else {
+            return error_json(
+                400,
+                "bad_request",
+                &format!("{ctx}: `kernel` must be a handle string (krn-<n> or a name)"),
+            );
+        };
+        let Some(kid) = state.catalog.resolve_id(kernel) else {
+            return error_json(
+                404,
+                "unknown_kernel",
+                &format!("{ctx}: unknown kernel `{kernel}`"),
+            );
+        };
+        let scale = match item.get("scale") {
+            None => 1.0,
+            Some(v) => match v.as_f64() {
+                Some(s) if s.is_finite() && s > 0.0 => s,
+                _ => {
+                    return error_json(
+                        400,
+                        "bad_request",
+                        &format!("{ctx}: `scale` must be a positive finite number"),
+                    )
+                }
+            },
+        };
+        let name = item
+            .get("name")
+            .and_then(Value::as_str)
+            .map(str::to_string)
+            .unwrap_or_else(|| format!("job-{i}"));
+        let mut job = Job::new(name, kid, scale);
+        match item.get("deadline_us") {
+            None => {}
+            Some(v) => match v.as_f64() {
+                Some(d) if d.is_finite() && d > 0.0 => job = job.with_deadline(d),
+                _ => {
+                    return error_json(
+                        400,
+                        "bad_request",
+                        &format!("{ctx}: `deadline_us` must be a positive finite number"),
+                    )
+                }
+            },
+        }
+        jobs.push(job);
+    }
+    let devices = match body.get("devices") {
+        None => None,
+        Some(v) => {
+            let Some(handles) = v.as_array() else {
+                return error_json(
+                    400,
+                    "bad_request",
+                    "`devices` must be an array of handle strings",
+                );
+            };
+            if handles.is_empty() {
+                return error_json(400, "bad_request", "`devices` must not be empty");
+            }
+            let mut ids = Vec::with_capacity(handles.len());
+            for (i, h) in handles.iter().enumerate() {
+                let Some(s) = h.as_str() else {
+                    return error_json(
+                        400,
+                        "bad_request",
+                        &format!("devices[{i}] must be a handle string (dev-<n> or a name)"),
+                    );
+                };
+                let Some(id) = state.registry.resolve_id(s) else {
+                    return error_json(
+                        404,
+                        "unknown_device",
+                        &format!("devices[{i}]: unknown device `{s}`"),
+                    );
+                };
+                ids.push(id);
+            }
+            Some(ids)
+        }
+    };
+    let objective = match body.get("objective") {
+        None => PlanObjective::Energy,
+        Some(Value::Str(s)) => match s.as_str() {
+            "energy" => PlanObjective::Energy,
+            "edp" => PlanObjective::Edp,
+            other => {
+                return error_json(
+                    400,
+                    "bad_request",
+                    &format!("unknown objective `{other}` (energy | edp)"),
+                )
+            }
+        },
+        Some(_) => {
+            return error_json(400, "bad_request", "objective must be \"energy\" or \"edp\"")
+        }
+    };
+    let device_cap = match body.get("device_cap") {
+        None => usize::MAX,
+        Some(v) => match v.as_f64() {
+            Some(c) if c.is_finite() && c >= 1.0 && c.fract() == 0.0 && c <= 1e9 => c as usize,
+            _ => {
+                return error_json(
+                    400,
+                    "bad_request",
+                    "`device_cap` must be a positive integer",
+                )
+            }
+        },
+    };
+    let pairs = match body.get("pairs") {
+        None => None,
+        Some(_) => match resolve_pairs(state, &body) {
+            Ok(p) => Some(p),
+            Err(m) => return error_json(400, "bad_request", &m),
+        },
+    };
+    let cfg = PlannerConfig {
+        objective,
+        devices,
+        device_cap,
+        pairs,
+        ..PlannerConfig::default()
+    };
+    // One evaluation pass produces both the plan and the advisory
+    // max-frequency baseline — the candidate table is the dominant
+    // cost and must not be paid twice per request.
+    let (planned, baseline) = match planner::plan_with_baseline(&state.engine, &jobs, &cfg) {
+        Ok(pair) => pair,
+        Err(e) => return plan_error(&e),
+    };
+
+    let assignments: Vec<Value> = planned
+        .assignments
+        .iter()
+        .map(|a| {
+            let job = &jobs[a.job];
+            let mut fields = vec![
+                ("job", Value::num(a.job as f64)),
+                ("name", Value::str(job.name.clone())),
+                ("kernel", Value::str(job.kernel.to_string())),
+                ("device", Value::str(a.device.to_string())),
+                ("core_mhz", Value::num(a.point.core_mhz)),
+                ("mem_mhz", Value::num(a.point.mem_mhz)),
+                ("time_us", Value::num(a.time_us)),
+                ("power_w", Value::num(a.power_w)),
+                ("energy_mj", Value::num(a.energy_mj)),
+                ("edp", Value::num(a.edp)),
+            ];
+            if let Some(d) = job.deadline_us {
+                fields.push(("deadline_us", Value::num(d)));
+            }
+            Value::obj(fields)
+        })
+        .collect();
+    let mut fields = vec![
+        ("objective", Value::str(planned.objective.name())),
+        ("assignments", Value::arr(assignments)),
+        ("count", Value::num(planned.assignments.len() as f64)),
+        ("total_energy_mj", Value::num(planned.total_energy_mj)),
+        ("total_edp", Value::num(planned.total_edp)),
+        ("max_time_us", Value::num(planned.max_time_us)),
+        ("swaps_applied", Value::num(planned.swaps_applied as f64)),
+    ];
+    if let Some(b) = baseline {
+        let savings = planned.energy_savings_pct_vs(&b);
+        fields.push((
+            "baseline",
+            Value::obj(vec![
+                ("total_energy_mj", Value::num(b.total_energy_mj)),
+                ("max_time_us", Value::num(b.max_time_us)),
+                (
+                    "deadline_violations",
+                    Value::num(b.deadline_violations(&jobs) as f64),
+                ),
+            ]),
+        ));
+        fields.push(("energy_savings_pct", Value::num(savings)));
+    }
+    HttpResponse::json(200, Value::obj(fields).render())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1459,5 +1690,132 @@ mod tests {
             vv1.get("best").unwrap().get("energy_mj").and_then(Value::as_f64),
             v1.get("best").unwrap().get("energy_mj").and_then(Value::as_f64),
         );
+    }
+
+    #[test]
+    fn v2_plan_assigns_every_job_and_reports_the_baseline() {
+        let st = state();
+        let m = Metrics::default();
+        // A second device so the fleet actually has a choice.
+        let r = handle(
+            &st,
+            &m,
+            &post("/v2/devices", r#"{"name":"aux","power":{"static_w":15.0}}"#),
+        );
+        assert_eq!(r.status, 200, "{}", r.body);
+        let body = r#"{"jobs":[
+            {"kernel":"VA","scale":2,"deadline_us":1e9,"name":"nightly"},
+            {"kernel":"krn-1"},
+            {"kernel":"VA","scale":4}],
+            "device_cap":2}"#;
+        let r = handle(&st, &m, &post("/v2/plan", body));
+        assert_eq!(r.status, 200, "{}", r.body);
+        let v = Value::parse(&r.body).unwrap();
+        assert_eq!(v.get("objective").and_then(Value::as_str), Some("energy"));
+        assert_eq!(v.get("count").and_then(Value::as_f64), Some(3.0));
+        let assignments = v.get("assignments").and_then(Value::as_array).unwrap();
+        assert_eq!(assignments.len(), 3);
+        let mut total = 0.0;
+        for (i, a) in assignments.iter().enumerate() {
+            assert_eq!(a.get("job").and_then(Value::as_f64), Some(i as f64));
+            assert_eq!(a.get("kernel").and_then(Value::as_str), Some("krn-1"));
+            let dev = a.get("device").and_then(Value::as_str).unwrap();
+            assert!(dev == "dev-1" || dev == "dev-2", "{dev}");
+            let e = a.get("energy_mj").and_then(Value::as_f64).unwrap();
+            let p = a.get("power_w").and_then(Value::as_f64).unwrap();
+            let t = a.get("time_us").and_then(Value::as_f64).unwrap();
+            assert!((e - p * t * 1e-3).abs() <= 1e-9 * e.max(1.0), "E != P*T on the wire");
+            total += e;
+        }
+        assert_eq!(assignments[0].get("name").and_then(Value::as_str), Some("nightly"));
+        assert_eq!(assignments[0].get("deadline_us").and_then(Value::as_f64), Some(1e9));
+        assert_eq!(assignments[1].get("name").and_then(Value::as_str), Some("job-1"));
+        let reported = v.get("total_energy_mj").and_then(Value::as_f64).unwrap();
+        assert!((reported - total).abs() <= 1e-9 * total.max(1.0));
+        // The baseline block reports what the naive max-frequency
+        // fleet would cost — and the plan never costs more.
+        let baseline = v.get("baseline").expect("baseline present");
+        let base_e = baseline.get("total_energy_mj").and_then(Value::as_f64).unwrap();
+        assert!(reported <= base_e, "plan {reported} vs baseline {base_e}");
+        assert!(v.get("energy_savings_pct").and_then(Value::as_f64).unwrap() >= 0.0);
+    }
+
+    #[test]
+    fn v2_plan_errors_carry_stable_codes() {
+        let st = state();
+        let m = Metrics::default();
+        let code_of = |r: &HttpResponse| {
+            Value::parse(&r.body)
+                .unwrap()
+                .get("code")
+                .and_then(Value::as_str)
+                .map(str::to_string)
+                .unwrap()
+        };
+        // An impossible deadline is 422 `infeasible`, naming the job.
+        let r = handle(
+            &st,
+            &m,
+            &post(
+                "/v2/plan",
+                r#"{"jobs":[{"kernel":"VA","deadline_us":1e-4,"name":"doomed"}]}"#,
+            ),
+        );
+        assert_eq!((r.status, code_of(&r).as_str()), (422, "infeasible"), "{}", r.body);
+        assert!(r.body.contains("doomed"), "{}", r.body);
+        // Malformed inputs are 400s; unknown handles are 404s.
+        for bad in [
+            r#"{}"#,
+            r#"{"jobs":[]}"#,
+            r#"{"jobs":[{"kernel":"VA","scale":0}]}"#,
+            r#"{"jobs":[{"kernel":"VA","scale":-2}]}"#,
+            r#"{"jobs":[{"kernel":"VA","deadline_us":0}]}"#,
+            r#"{"jobs":[{"kernel":"VA"}],"objective":"speed"}"#,
+            r#"{"jobs":[{"kernel":"VA"}],"device_cap":0}"#,
+            r#"{"jobs":[{"kernel":"VA"}],"device_cap":1.5}"#,
+            r#"{"jobs":[{"kernel":"VA"}],"devices":[]}"#,
+            r#"{"jobs":[{"kernel":"VA"}],"pairs":[]}"#,
+        ] {
+            let r = handle(&st, &m, &post("/v2/plan", bad));
+            assert_eq!((r.status, code_of(&r).as_str()), (400, "bad_request"), "{bad}");
+        }
+        let r = handle(&st, &m, &post("/v2/plan", r#"{"jobs":[{"kernel":"ghost"}]}"#));
+        assert_eq!((r.status, code_of(&r).as_str()), (404, "unknown_kernel"));
+        let r = handle(
+            &st,
+            &m,
+            &post("/v2/plan", r#"{"jobs":[{"kernel":"VA"}],"devices":["dev-99"]}"#),
+        );
+        assert_eq!((r.status, code_of(&r).as_str()), (404, "unknown_device"));
+        // Capacity that cannot hold the fleet is infeasible, not 500.
+        let r = handle(
+            &st,
+            &m,
+            &post(
+                "/v2/plan",
+                r#"{"jobs":[{"kernel":"VA"},{"kernel":"VA"}],"device_cap":1}"#,
+            ),
+        );
+        assert_eq!((r.status, code_of(&r).as_str()), (422, "infeasible"), "{}", r.body);
+    }
+
+    #[test]
+    fn v2_plan_respects_explicit_pairs_and_objective() {
+        let st = state();
+        let m = Metrics::default();
+        let r = handle(
+            &st,
+            &m,
+            &post(
+                "/v2/plan",
+                r#"{"jobs":[{"kernel":"VA"}],"pairs":[[700,700]],"objective":"edp"}"#,
+            ),
+        );
+        assert_eq!(r.status, 200, "{}", r.body);
+        let v = Value::parse(&r.body).unwrap();
+        assert_eq!(v.get("objective").and_then(Value::as_str), Some("edp"));
+        let a = &v.get("assignments").and_then(Value::as_array).unwrap()[0];
+        assert_eq!(a.get("core_mhz").and_then(Value::as_f64), Some(700.0));
+        assert_eq!(a.get("mem_mhz").and_then(Value::as_f64), Some(700.0));
     }
 }

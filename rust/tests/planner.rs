@@ -1,0 +1,186 @@
+//! Planner property tests (DESIGN.md §11): over randomized fleets —
+//! mixed kernels, scales, deadline tightness (including impossible
+//! ones) and capacity pressure — every call either emits a plan that
+//! meets **all** deadlines within the concurrency caps, or returns a
+//! structured infeasibility naming the blocked job. No third outcome.
+
+use std::sync::Arc;
+
+use gpufreq::dvfs::PowerModel;
+use gpufreq::engine::Engine;
+use gpufreq::model::{HwParams, KernelCounters};
+use gpufreq::planner::{max_frequency_baseline, plan, Job, PlanError, PlannerConfig};
+use gpufreq::registry::{DeviceId, DeviceRegistry, KernelCatalog, KernelId};
+use gpufreq::util::prop::Rng;
+
+fn counters(i: usize) -> KernelCounters {
+    KernelCounters {
+        l2_hr: (i % 10) as f64 / 10.0,
+        gld_trans: 4.0 + (i % 12) as f64,
+        avr_inst: 0.5 + 10.0 * (i % 4) as f64,
+        n_blocks: 128.0,
+        wpb: 8.0,
+        aw: 64.0,
+        n_sm: 16.0,
+        o_itrs: 8.0,
+        i_itrs: 0.0,
+        uses_smem: false,
+        smem_conflict: 1.0,
+        gld_body: 4.0 + (i % 12) as f64,
+        gld_edge: 0.0,
+        mem_ops: 1.0 + (i % 3) as f64,
+        l1_hr: 0.0,
+    }
+}
+
+/// Three devices with distinct hardware and power calibrations.
+fn fixture() -> (Engine, Vec<DeviceId>, Vec<KernelId>) {
+    let hw = HwParams::paper_defaults();
+    let registry = Arc::new(DeviceRegistry::new());
+    let a = registry.register("fleet-a", hw, PowerModel::gtx980());
+    let mut hw_b = hw;
+    hw_b.dm_del += 1.5;
+    let mut power_b = PowerModel::gtx980();
+    power_b.static_w = 15.0;
+    let b = registry.register("fleet-b", hw_b, power_b);
+    let mut hw_c = hw;
+    hw_c.l2_lat += 40.0;
+    let mut power_c = PowerModel::gtx980();
+    power_c.core_coeff = 0.05;
+    power_c.mem_coeff = 0.025;
+    let c = registry.register("fleet-c", hw_c, power_c);
+    let catalog = Arc::new(KernelCatalog::new());
+    let kernels: Vec<KernelId> =
+        (0..5).map(|i| catalog.register(&format!("k{i}"), counters(i * 3 + 1))).collect();
+    let engine = Engine::native(hw).with_handles(registry, catalog, a).unwrap();
+    (engine, vec![a, b, c], kernels)
+}
+
+#[test]
+fn every_outcome_is_a_valid_plan_or_a_structured_infeasibility() {
+    let (engine, devices, kernels) = fixture();
+    let mut rng = Rng::new(0x5eed1a);
+    let mut plans = 0usize;
+    let mut infeasible = 0usize;
+    for case in 0..60 {
+        let n = rng.u32(1, 24) as usize;
+        // Deadline style is drawn per case (a single impossible job
+        // already makes a whole fleet infeasible, so per-job draws
+        // would leave almost no feasible cases).
+        let style = rng.u32(0, 3);
+        let jobs: Vec<Job> = (0..n)
+            .map(|i| {
+                let kid = kernels[rng.u32(0, kernels.len() as u32 - 1) as usize];
+                let scale = (rng.u32(1, 6)) as f64;
+                let job = Job::new(format!("c{case}-j{i}"), kid, scale);
+                match style {
+                    // Unconstrained.
+                    0 => job,
+                    // Generous budgets — always meetable.
+                    1 => job.with_deadline(rng.range(1e7, 1e9)),
+                    // Budgets in the plausible range: sometimes bind,
+                    // sometimes don't.
+                    2 => job.with_deadline(scale * rng.range(50.0, 5e4)),
+                    // Mostly impossible.
+                    _ => job.with_deadline(rng.range(1e-3, 10.0)),
+                }
+            })
+            .collect();
+        // Capacity pressure: from strangling (a few per device) to
+        // balanced to unbounded.
+        let cap = match rng.u32(0, 2) {
+            0 => rng.u32(1, 4) as usize,
+            1 => n.div_ceil(devices.len()) + rng.u32(0, 2) as usize,
+            _ => usize::MAX,
+        };
+        let cfg = PlannerConfig { device_cap: cap, ..PlannerConfig::default() };
+        match plan(&engine, &jobs, &cfg) {
+            Ok(p) => {
+                plans += 1;
+                assert_eq!(p.assignments.len(), jobs.len(), "case {case}: one per job");
+                // Every deadline met, every cap respected, E = P×T.
+                assert_eq!(
+                    p.deadline_violations(&jobs),
+                    0,
+                    "case {case}: an emitted plan must meet every deadline"
+                );
+                for &d in &devices {
+                    assert!(
+                        p.load_of(d) <= cap,
+                        "case {case}: cap {cap} violated on {d}"
+                    );
+                }
+                let mut total = 0.0;
+                for (j, a) in p.assignments.iter().enumerate() {
+                    assert_eq!(a.job, j, "case {case}: input order preserved");
+                    assert!(devices.contains(&a.device));
+                    assert!(a.time_us > 0.0 && a.power_w > 0.0);
+                    let want = a.power_w * a.time_us * 1e-3;
+                    assert!(
+                        (a.energy_mj - want).abs() <= 1e-9 * want.max(1.0),
+                        "case {case}: E != P*T"
+                    );
+                    total += a.energy_mj;
+                }
+                assert!(
+                    (p.total_energy_mj - total).abs() <= 1e-6 * total.max(1.0),
+                    "case {case}: totals must be the sum of assignments"
+                );
+            }
+            Err(PlanError::Infeasible { job, name, detail }) => {
+                infeasible += 1;
+                assert!(job < jobs.len(), "case {case}: job index {job} out of range");
+                assert_eq!(name, jobs[job].name, "case {case}: error names the job");
+                assert!(!detail.is_empty());
+            }
+            Err(other) => {
+                panic!("case {case}: valid inputs must never yield {other:?}")
+            }
+        }
+    }
+    // The generator must actually exercise both outcomes.
+    assert!(plans >= 5, "only {plans} feasible cases — generator drifted");
+    assert!(infeasible >= 5, "only {infeasible} infeasible cases — generator drifted");
+}
+
+#[test]
+fn plans_never_lose_to_the_max_frequency_baseline() {
+    // Whenever both the plan and the naive baseline exist and the
+    // baseline itself meets every deadline (i.e. it is a feasible
+    // solution of the same problem), the planner must cost no more.
+    let (engine, devices, kernels) = fixture();
+    let mut rng = Rng::new(0xbeef);
+    let mut compared = 0usize;
+    for _ in 0..30 {
+        let n = rng.u32(2, 30) as usize;
+        let jobs: Vec<Job> = (0..n)
+            .map(|i| {
+                let kid = kernels[rng.u32(0, kernels.len() as u32 - 1) as usize];
+                let job = Job::new(format!("j{i}"), kid, (rng.u32(1, 4)) as f64);
+                if rng.chance(0.5) {
+                    job.with_deadline(rng.range(1e6, 1e9))
+                } else {
+                    job
+                }
+            })
+            .collect();
+        let cap = n.div_ceil(devices.len()) + rng.u32(0, 3) as usize;
+        let cfg = PlannerConfig { device_cap: cap, ..PlannerConfig::default() };
+        let (Ok(p), Ok(b)) =
+            (plan(&engine, &jobs, &cfg), max_frequency_baseline(&engine, &jobs, &cfg))
+        else {
+            continue;
+        };
+        if b.deadline_violations(&jobs) > 0 {
+            continue;
+        }
+        compared += 1;
+        assert!(
+            p.total_energy_mj <= b.total_energy_mj * (1.0 + 1e-9),
+            "planned {} mJ must not exceed the feasible baseline {} mJ",
+            p.total_energy_mj,
+            b.total_energy_mj
+        );
+    }
+    assert!(compared >= 10, "only {compared} comparable cases — generator drifted");
+}

@@ -1,9 +1,10 @@
-//! Service smoke test (DESIGN.md §9–§10) — the CI job step: boot the
-//! HTTP server on an ephemeral port, exercise /healthz, the /v1 shim
-//! and the full /v2 handle lifecycle (register device → register
-//! kernel → batch predict → advise) with the in-crate client, check
-//! the structured error taxonomy, force the bounded queue to shed a
-//! 429, and verify the graceful drain. No curl needed anywhere.
+//! Service smoke test (DESIGN.md §9–§11) — the CI job step: boot the
+//! HTTP server on an ephemeral port, exercise /healthz, the /v1 shim,
+//! the full /v2 handle lifecycle (register device → register kernel →
+//! batch predict → advise) and the /v2/plan fleet planner with the
+//! in-crate client, check the structured error taxonomy (including the
+//! planner's 422 `infeasible`), force the bounded queue to shed a 429,
+//! and verify the graceful drain. No curl needed anywhere.
 
 use std::time::{Duration, Instant};
 
@@ -185,6 +186,78 @@ fn v2_lifecycle_register_predict_advise_round_trip() {
     assert_eq!(v.get("count").and_then(Value::as_f64), Some(2.0));
     let v = c.get("/v2/kernels").unwrap().json().unwrap();
     assert_eq!(v.get("count").and_then(Value::as_f64), Some(2.0));
+
+    drop(c);
+    svc.shutdown();
+}
+
+/// `POST /v2/plan` over the wire: register a second device, plan a
+/// small deadline-tagged fleet, check the assignment invariants and
+/// the baseline comparison, then force a structured 422 infeasibility.
+#[test]
+fn v2_plan_round_trip_and_infeasibility() {
+    let svc = Service::start(state(), cfg(2, 16)).expect("service starts");
+    let mut c = Client::connect(&svc.addr()).unwrap();
+    c.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+
+    // A second, cheaper-idle device so placement is a real choice.
+    let r = c
+        .post("/v2/devices", r#"{"name":"aux-gpu","power":{"static_w":15.0}}"#)
+        .unwrap();
+    assert_eq!(r.status, 200, "{}", r.body);
+
+    let body = r#"{"jobs":[
+        {"kernel":"VA","scale":2,"deadline_us":1e9,"name":"nightly"},
+        {"kernel":"VA","scale":1},
+        {"kernel":"krn-1","scale":3,"deadline_us":5e8}],
+        "device_cap":2}"#;
+    let r = c.post("/v2/plan", body).unwrap();
+    assert_eq!(r.status, 200, "{}", r.body);
+    let v = r.json().unwrap();
+    assert_eq!(v.get("count").and_then(Value::as_f64), Some(3.0));
+    assert_eq!(v.get("objective").and_then(Value::as_str), Some("energy"));
+    let assignments = v.get("assignments").and_then(Value::as_array).unwrap();
+    assert_eq!(assignments.len(), 3);
+    for a in assignments {
+        // Every assignment meets its deadline and satisfies E = P×T.
+        let t = a.get("time_us").and_then(Value::as_f64).unwrap();
+        if let Some(d) = a.get("deadline_us").and_then(Value::as_f64) {
+            assert!(t <= d, "{}", r.body);
+        }
+        let p = a.get("power_w").and_then(Value::as_f64).unwrap();
+        let e = a.get("energy_mj").and_then(Value::as_f64).unwrap();
+        assert!((e - p * t * 1e-3).abs() <= 1e-9 * e.max(1.0));
+        let dev = a.get("device").and_then(Value::as_str).unwrap();
+        assert!(dev == "dev-1" || dev == "dev-2", "{dev}");
+    }
+    // The plan never costs more than the max-frequency baseline.
+    let total = v.get("total_energy_mj").and_then(Value::as_f64).unwrap();
+    let base = v
+        .get("baseline")
+        .and_then(|b| b.get("total_energy_mj"))
+        .and_then(Value::as_f64)
+        .unwrap();
+    assert!(total <= base, "plan {total} mJ vs baseline {base} mJ");
+    assert!(v.get("energy_savings_pct").and_then(Value::as_f64).unwrap() >= 0.0);
+
+    // An impossible deadline is a structured 422, naming the job.
+    let r = c
+        .post(
+            "/v2/plan",
+            r#"{"jobs":[{"kernel":"VA","deadline_us":1e-4,"name":"doomed"}]}"#,
+        )
+        .unwrap();
+    assert_eq!(r.status, 422, "{}", r.body);
+    assert_eq!(code_of(&r), "infeasible");
+    assert!(r.body.contains("doomed"), "{}", r.body);
+
+    // /metrics carries the new route's series.
+    let m = c.get("/metrics").unwrap();
+    assert!(
+        m.body.contains("service_requests_total{route=\"/v2/plan\"} 2"),
+        "{}",
+        m.body
+    );
 
     drop(c);
     svc.shutdown();
