@@ -4,11 +4,20 @@
 //! the planner strictly beats the run-everything-at-max-frequency
 //! baseline on total energy while meeting **every** deadline. Timings
 //! and totals land in `BENCH_planner.json` at the repo root.
+//!
+//! A second phase measures raw candidate-table throughput — the
+//! planner's dominant cost — two ways over the identical K×D×P
+//! workload: the scalar baseline (build a `Vec<Request>`, evaluate
+//! through `NativeScalar::predict_batch`, one struct walk per point)
+//! versus the SoA slab path (`model::soa::predict_slab`, invariants
+//! hoisted once per (device, kernel)). **Gate:** the SoA path must
+//! sustain ≥ 2× the scalar baseline's tuples/s in the same run.
 
 use std::sync::Arc;
+use std::time::Instant;
 
-use gpufreq::engine::Engine;
-use gpufreq::model::KernelCounters;
+use gpufreq::engine::{Backend, Engine, NativeScalar, Request};
+use gpufreq::model::{soa, KernelCounters};
 use gpufreq::planner::{plan, plan_with_baseline, Job, PlannerConfig};
 use gpufreq::registry::{DeviceRegistry, KernelCatalog, KernelId};
 use gpufreq::service::json::Value;
@@ -141,6 +150,75 @@ fn main() {
         cache.hits, cache.misses, cache.entries
     );
 
+    // ---- Candidate-table throughput: scalar vs SoA ----
+    // The identical K×D×P workload both ways: every synthetic kernel on
+    // every device over a dense frequency grid.
+    let mut grid_core: Vec<f64> = Vec::new();
+    let mut grid_mem: Vec<f64> = Vec::new();
+    for ci in 0..60 {
+        for mi in 0..60 {
+            grid_core.push(400.0 + 15.0 * ci as f64);
+            grid_mem.push(300.0 + 12.0 * mi as f64);
+        }
+    }
+    let points = grid_core.len();
+    let kernel_counters: Vec<KernelCounters> = (0..8).map(|i| counters(i * 7 + 1)).collect();
+    let tuples_per_pass = kernel_counters.len() * records.len() * points;
+    bench::section(&format!(
+        "Candidate-table throughput: {} kernels x {} devices x {points} points = {tuples_per_pass} tuples/pass",
+        kernel_counters.len(),
+        records.len()
+    ));
+    const PASSES: usize = 5;
+    let scalar_backends: Vec<NativeScalar> =
+        records.iter().map(|rec| NativeScalar::new(rec.hw)).collect();
+
+    // Scalar baseline: per (device, kernel) build the request tuples
+    // and walk them one struct at a time — the pre-SoA table build.
+    let mut sink = 0.0f64;
+    let t0 = Instant::now();
+    for _ in 0..PASSES {
+        for backend in &scalar_backends {
+            for c in &kernel_counters {
+                let reqs: Vec<Request> = grid_core
+                    .iter()
+                    .zip(&grid_mem)
+                    .map(|(&cf, &mf)| Request { counters: *c, core_mhz: cf, mem_mhz: mf })
+                    .collect();
+                let ests = backend.predict_batch(&reqs).expect("scalar batch");
+                sink += ests[0].time_us;
+            }
+        }
+    }
+    let scalar_s = t0.elapsed().as_secs_f64();
+    let scalar_tuples_per_s = (PASSES * tuples_per_pass) as f64 / scalar_s;
+
+    // SoA path: hoist invariants once per (device, kernel), then run
+    // the frequency slabs straight through.
+    let t1 = Instant::now();
+    for _ in 0..PASSES {
+        for rec in &records {
+            for c in &kernel_counters {
+                let slab = soa::predict_slab(c, &rec.hw, &grid_core, &grid_mem);
+                sink += slab.time_us[0];
+            }
+        }
+    }
+    let soa_s = t1.elapsed().as_secs_f64();
+    let soa_tuples_per_s = (PASSES * tuples_per_pass) as f64 / soa_s;
+    std::hint::black_box(sink);
+
+    let soa_speedup = soa_tuples_per_s / scalar_tuples_per_s;
+    println!(
+        "scalar {scalar_tuples_per_s:.0} tuples/s vs SoA {soa_tuples_per_s:.0} tuples/s \
+         ({soa_speedup:.2}x)"
+    );
+    assert!(
+        soa_tuples_per_s >= 2.0 * scalar_tuples_per_s,
+        "SoA table build must sustain >= 2x scalar throughput, got {soa_speedup:.2}x \
+         ({soa_tuples_per_s:.0} vs {scalar_tuples_per_s:.0} tuples/s)"
+    );
+
     let out = Value::obj(vec![
         ("bench", Value::str("planner_fleet")),
         ("jobs", Value::num(jobs.len() as f64)),
@@ -158,6 +236,10 @@ fn main() {
         ("solve_mean_ms", Value::num(solve.mean_ns / 1e6)),
         ("solve_p50_ms", Value::num(solve.p50_ns / 1e6)),
         ("solve_p99_ms", Value::num(solve.p99_ns / 1e6)),
+        ("table_tuples", Value::num(tuples_per_pass as f64)),
+        ("scalar_tuples_per_s", Value::num(scalar_tuples_per_s)),
+        ("soa_tuples_per_s", Value::num(soa_tuples_per_s)),
+        ("soa_speedup", Value::num(soa_speedup)),
     ]);
     let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
         .join("..")

@@ -5,13 +5,20 @@
 //! shim, then over the handle-based `/v2/predict` batch route — then a
 //! saturation phase verifies 429 shedding and the graceful drain.
 //!
+//! A third *wide* phase drives the same server with 96 keep-alive
+//! connections — 12× the executor pool — exercising the readiness
+//! core's whole point: idle connections park on the poll loop instead
+//! of each pinning a thread, so the tail (p999) stays bounded far past
+//! the worker count.
+//!
 //! **Perf gate:** the typed v2 path must not cost more than 1.25× the
 //! v1 baseline at p99 (plus a small absolute guard for scheduler
 //! noise on microsecond-scale percentiles) — handle resolution and the
-//! batch envelope are supposed to be bookkeeping, not work. Both
+//! batch envelope are supposed to be bookkeeping, not work. All
 //! percentile sets land in `BENCH_service_load.json` at the repo root
 //! (`latency_us` is the recorded v1 baseline, `v2_latency_us` the
-//! handle path) so the trajectory is tracked across PRs.
+//! handle path, `wide_latency_us` the 96-connection phase) so the
+//! trajectory is tracked across PRs.
 
 use std::net::SocketAddr;
 use std::time::{Duration, Instant};
@@ -28,6 +35,11 @@ use gpufreq::util::bench::{percentile, section};
 const TOTAL_REQUESTS: usize = 60_000;
 /// Concurrent closed-loop connections (acceptance: ≥ 8).
 const CONNECTIONS: usize = 8;
+/// Keep-alive connections in the wide phase (acceptance: ≥ 80) —
+/// well past the executor pool, to measure connection multiplexing.
+const WIDE_CONNECTIONS: usize = 96;
+/// Requests in the wide phase (500 per connection).
+const WIDE_REQUESTS: usize = 48_000;
 /// p99(v2) must stay within this factor of p99(v1)…
 const P99_RATIO_LIMIT: f64 = 1.25;
 /// …plus this absolute slack (µs): microsecond-scale percentiles from
@@ -70,20 +82,22 @@ struct Phase {
     elapsed: Duration,
 }
 
-/// Drive `TOTAL_REQUESTS` closed-loop requests over `CONNECTIONS`
-/// keep-alive connections; `body` maps (thread, iteration) to the
-/// request body for `path`.
+/// Drive `total` closed-loop requests over `connections` keep-alive
+/// connections; `body` maps (thread, iteration) to the request body
+/// for `path`.
 fn run_phase(
     addr: &SocketAddr,
     path: &'static str,
+    connections: usize,
+    total: usize,
     body: impl Fn(usize, usize) -> String + Copy + Send,
 ) -> Phase {
-    let per_thread = TOTAL_REQUESTS.div_ceil(CONNECTIONS);
+    let per_thread = total.div_ceil(connections);
     let t0 = Instant::now();
-    let mut latencies_ns: Vec<f64> = Vec::with_capacity(per_thread * CONNECTIONS);
+    let mut latencies_ns: Vec<f64> = Vec::with_capacity(per_thread * connections);
     std::thread::scope(|scope| {
         let mut handles = Vec::new();
-        for t in 0..CONNECTIONS {
+        for t in 0..connections {
             let addr = *addr;
             handles.push(scope.spawn(move || {
                 let mut c = Client::connect(&addr).expect("client connect");
@@ -115,9 +129,9 @@ struct Summary {
     p999_us: f64,
 }
 
-fn summarize(label: &str, mut phase: Phase) -> Summary {
+fn summarize(label: &str, connections: usize, min_n: usize, mut phase: Phase) -> Summary {
     let n = phase.latencies_ns.len();
-    assert!(n >= 50_000, "must sustain >= 50k requests, did {n}");
+    assert!(n >= min_n, "must sustain >= {min_n} requests, did {n}");
     phase.latencies_ns.sort_by(f64::total_cmp);
     let throughput = n as f64 / phase.elapsed.as_secs_f64();
     let s = Summary {
@@ -130,7 +144,7 @@ fn summarize(label: &str, mut phase: Phase) -> Summary {
         p999_us: percentile(&phase.latencies_ns, 0.999) / 1e3,
     };
     println!(
-        "{label}: {n} requests in {:.2} s  ->  {throughput:.0} req/s over {CONNECTIONS} connections",
+        "{label}: {n} requests in {:.2} s  ->  {throughput:.0} req/s over {connections} connections",
         phase.elapsed.as_secs_f64()
     );
     println!(
@@ -163,7 +177,9 @@ fn main() {
         state(),
         ServiceConfig {
             workers: CONNECTIONS,
-            queue_capacity: 2 * CONNECTIONS,
+            // Admission credit workers + queue_capacity must cover the
+            // wide phase's 96 keep-alive connections.
+            queue_capacity: 128,
             ..ServiceConfig::default()
         },
     )
@@ -188,7 +204,9 @@ fn main() {
     // Phase 1: the /v1 shim (the recorded baseline).
     let v1 = summarize(
         "v1/predict",
-        run_phase(&addr, "/v1/predict", |t, i| {
+        CONNECTIONS,
+        50_000,
+        run_phase(&addr, "/v1/predict", CONNECTIONS, TOTAL_REQUESTS, |t, i| {
             let (cf, mf) = freqs(t, i);
             format!(r#"{{"kernel":"VA","core_mhz":{cf},"mem_mhz":{mf}}}"#)
         }),
@@ -197,12 +215,35 @@ fn main() {
     // Phase 2: the typed /v2 handle path, same traffic shape.
     let v2 = summarize(
         "v2/predict",
-        run_phase(&addr, "/v2/predict", |t, i| {
+        CONNECTIONS,
+        50_000,
+        run_phase(&addr, "/v2/predict", CONNECTIONS, TOTAL_REQUESTS, |t, i| {
             let (cf, mf) = freqs(t, i);
             format!(
                 r#"{{"requests":[{{"device":"dev-1","kernel":"krn-1","core_mhz":{cf},"mem_mhz":{mf}}}]}}"#
             )
         }),
+    );
+
+    // Phase 3 (wide): 96 keep-alive connections against an 8-thread
+    // executor pool — the readiness core multiplexes all of them on
+    // the poll loop; the old design would need 96 parked threads.
+    section(&format!(
+        "Wide keep-alive: {WIDE_REQUESTS} requests over {WIDE_CONNECTIONS} connections, {CONNECTIONS} executors"
+    ));
+    let wide = summarize(
+        "v1/predict wide",
+        WIDE_CONNECTIONS,
+        WIDE_REQUESTS,
+        run_phase(&addr, "/v1/predict", WIDE_CONNECTIONS, WIDE_REQUESTS, |t, i| {
+            let (cf, mf) = freqs(t, i);
+            format!(r#"{{"kernel":"VA","core_mhz":{cf},"mem_mhz":{mf}}}"#)
+        }),
+    );
+    assert!(
+        wide.p999_us.is_finite() && wide.p999_us > 0.0,
+        "wide-phase p999 must be measurable, got {}",
+        wide.p999_us
     );
 
     let p99_ratio = v2.p99_us / v1.p99_us;
@@ -287,6 +328,10 @@ fn main() {
         ("v2_latency_us", latency_json(&v2)),
         ("v2_p99_over_v1_p99", Value::num(p99_ratio)),
         ("p99_ratio_limit", Value::num(P99_RATIO_LIMIT)),
+        ("wide_connections", Value::num(WIDE_CONNECTIONS as f64)),
+        ("wide_requests", Value::num(wide.n as f64)),
+        ("wide_throughput_rps", Value::num(wide.throughput)),
+        ("wide_latency_us", latency_json(&wide)),
         ("shed_429", Value::num(shed_429 as f64)),
         ("drain_ms", Value::num(drain.as_secs_f64() * 1e3)),
     ]);

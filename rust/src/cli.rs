@@ -84,8 +84,10 @@ OPTIONS:
                           balanced, ceil(jobs / devices))
   --addr <HOST:PORT>      serve: bind address (default 127.0.0.1:8077; port 0
                           picks an ephemeral port)
-  --queue-depth <N>       serve: admission-control high-water mark — pending
-                          connections beyond this are shed with 429 (default 64)
+  --queue-depth <N>       serve: admission credit beyond the executor pool —
+                          up to workers + N connections stay live on the
+                          readiness poll loop; past that, new connections are
+                          shed with 429 + Retry-After (default 64)
 ";
 
 /// Parsed command line.
@@ -754,9 +756,10 @@ fn run_serve(args: &Args, cfg: &Config) -> Result<()> {
     println!("  v2     : POST+GET /v2/devices · POST+GET /v2/kernels · POST /v2/predict (batch) · POST /v2/advise · POST /v2/plan");
     println!("  v1+ops : POST /v1/predict · POST /v1/grid · POST /v1/advise · GET /healthz · GET /metrics");
     println!(
-        "  config : {} kernels · backend {} · {} workers · queue high-water {}",
+        "  config : {} kernels · backend {} · {} executors · admission credit {}+{}",
         ks.len(),
         backend_name,
+        args.workers.clamp(1, 64),
         args.workers.clamp(1, 64),
         args.queue_depth
     );

@@ -126,9 +126,14 @@ pub fn predicted_sweep(
     profiles: &[Profile],
     pairs: &[(f64, f64)],
 ) -> Result<Sweep> {
+    // The grid is shared by every profile: split it into frequency
+    // slabs once and hand each profile to the engine's SoA slab path
+    // ([`Engine::predict_slabs`]) instead of rebuilding pair tuples.
+    let core: Vec<f64> = pairs.iter().map(|&(cf, _)| cf).collect();
+    let mem: Vec<f64> = pairs.iter().map(|&(_, mf)| mf).collect();
     let mut points = Vec::with_capacity(profiles.len() * pairs.len());
     for p in profiles {
-        let ests = engine.predict_grid(&p.counters, pairs)?;
+        let ests = engine.predict_slabs(&p.counters, &core, &mem)?;
         for (est, &(cf, mf)) in ests.iter().zip(pairs) {
             points.push(SweepPoint {
                 kernel: p.kernel.clone(),

@@ -12,6 +12,7 @@
 
 use anyhow::Result;
 
+use crate::model::soa::{SlabOut, SoaKernel};
 use crate::model::{self, HwParams, KernelCounters, Regime};
 
 /// One prediction request: a profiled kernel at a frequency pair.
@@ -62,6 +63,39 @@ pub trait Backend: Send + Sync {
         let mut v = self.predict_batch(std::slice::from_ref(req))?;
         Ok(v.remove(0))
     }
+
+    /// Evaluate one kernel over a frequency slab (`core_mhz[i]`,
+    /// `mem_mhz[i]`), preserving order. Native backends route this
+    /// through `model::soa` — per-kernel invariants hoisted once, no
+    /// per-point struct walks. The default implementation expands to a
+    /// request batch so opaque backends (the `Predictor` adapter, PJRT)
+    /// stay correct without changes.
+    fn predict_points(
+        &self,
+        counters: &KernelCounters,
+        core_mhz: &[f64],
+        mem_mhz: &[f64],
+    ) -> Result<Vec<Estimate>> {
+        assert_eq!(core_mhz.len(), mem_mhz.len());
+        let reqs: Vec<Request> = core_mhz
+            .iter()
+            .zip(mem_mhz)
+            .map(|(&cf, &mf)| Request { counters: *counters, core_mhz: cf, mem_mhz: mf })
+            .collect();
+        self.predict_batch(&reqs)
+    }
+}
+
+/// Reassemble a SoA slab into the engine's row-major estimate form.
+fn slab_to_estimates(slab: &SlabOut) -> Vec<Estimate> {
+    (0..slab.len())
+        .map(|i| Estimate {
+            t_active: slab.t_active[i],
+            t_exec_cycles: slab.t_exec_cycles[i],
+            time_us: slab.time_us[i],
+            regime: Some(slab.regime[i]),
+        })
+        .collect()
 }
 
 /// Direct scalar evaluation of the analytical model.
@@ -86,6 +120,16 @@ impl Backend for NativeScalar {
             .iter()
             .map(|r| model::predict(&r.counters, &self.hw, r.core_mhz, r.mem_mhz).into())
             .collect())
+    }
+
+    fn predict_points(
+        &self,
+        counters: &KernelCounters,
+        core_mhz: &[f64],
+        mem_mhz: &[f64],
+    ) -> Result<Vec<Estimate>> {
+        let slab = SoaKernel::new(counters, &self.hw).predict(core_mhz, mem_mhz);
+        Ok(slab_to_estimates(&slab))
     }
 }
 
@@ -135,6 +179,39 @@ impl Backend for NativeBatch {
                 scope.spawn(move || {
                     for (r, o) in req_chunk.iter().zip(out_chunk.iter_mut()) {
                         *o = model::predict(&r.counters, &hw, r.core_mhz, r.mem_mhz).into();
+                    }
+                });
+            }
+        });
+        Ok(out)
+    }
+
+    fn predict_points(
+        &self,
+        counters: &KernelCounters,
+        core_mhz: &[f64],
+        mem_mhz: &[f64],
+    ) -> Result<Vec<Estimate>> {
+        assert_eq!(core_mhz.len(), mem_mhz.len());
+        let n = core_mhz.len();
+        let workers = self.workers.min(n).max(1);
+        let kernel = SoaKernel::new(counters, &self.hw);
+        if workers == 1 || n < self.parallel_threshold {
+            return Ok(slab_to_estimates(&kernel.predict(core_mhz, mem_mhz)));
+        }
+        let mut out = vec![Estimate::default(); n];
+        let chunk = n.div_ceil(workers);
+        std::thread::scope(|scope| {
+            for ((core_chunk, mem_chunk), out_chunk) in core_mhz
+                .chunks(chunk)
+                .zip(mem_mhz.chunks(chunk))
+                .zip(out.chunks_mut(chunk))
+            {
+                let kernel = &kernel;
+                scope.spawn(move || {
+                    let slab = kernel.predict(core_chunk, mem_chunk);
+                    for (o, e) in out_chunk.iter_mut().zip(slab_to_estimates(&slab)) {
+                        *o = e;
                     }
                 });
             }
@@ -216,6 +293,59 @@ mod tests {
         let out = b.predict_batch(&reqs).unwrap();
         assert_eq!(out.len(), 3);
         assert!(out.iter().all(|e| e.time_us > 0.0));
+    }
+
+    #[test]
+    fn slab_path_bit_identical_to_request_batch() {
+        let hw = HwParams::paper_defaults();
+        let c = counters();
+        let reqs = requests(777);
+        let core: Vec<f64> = reqs.iter().map(|r| r.core_mhz).collect();
+        let mem: Vec<f64> = reqs.iter().map(|r| r.mem_mhz).collect();
+        let want = NativeScalar::new(hw).predict_batch(&reqs).unwrap();
+        // Scalar backend, SoA slab entry point.
+        let got = NativeScalar::new(hw).predict_points(&c, &core, &mem).unwrap();
+        assert_eq!(got.len(), want.len());
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!(g.time_us.to_bits(), w.time_us.to_bits());
+            assert_eq!(g.t_active.to_bits(), w.t_active.to_bits());
+            assert_eq!(g.t_exec_cycles.to_bits(), w.t_exec_cycles.to_bits());
+            assert_eq!(g.regime, w.regime);
+        }
+        // Threaded slab path, every worker count.
+        for workers in [1, 2, 3, 8] {
+            let mut b = NativeBatch::new(hw, workers);
+            b.parallel_threshold = 1; // force the threaded path
+            let got = b.predict_points(&c, &core, &mem).unwrap();
+            for (g, w) in got.iter().zip(&want) {
+                assert_eq!(g.time_us.to_bits(), w.time_us.to_bits(), "workers={workers}");
+                assert_eq!(g.regime, w.regime);
+            }
+        }
+    }
+
+    #[test]
+    fn default_trait_slab_impl_matches_batch() {
+        // A backend that does not override predict_points must still be
+        // correct through the request-expansion default.
+        struct Opaque(NativeScalar);
+        impl Backend for Opaque {
+            fn name(&self) -> &'static str {
+                "opaque"
+            }
+            fn predict_batch(&self, reqs: &[Request]) -> Result<Vec<Estimate>> {
+                self.0.predict_batch(reqs)
+            }
+        }
+        let hw = HwParams::paper_defaults();
+        let c = counters();
+        let core = [400.0, 700.0, 1000.0];
+        let mem = [600.0, 600.0, 900.0];
+        let got = Opaque(NativeScalar::new(hw)).predict_points(&c, &core, &mem).unwrap();
+        for (i, g) in got.iter().enumerate() {
+            let want = model::predict(&c, &hw, core[i], mem[i]);
+            assert_eq!(g.time_us.to_bits(), want.time_us.to_bits());
+        }
     }
 
     #[test]

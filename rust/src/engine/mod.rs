@@ -394,34 +394,78 @@ impl Engine {
     }
 
     /// Handle path, one kernel over many frequency points — the v2
-    /// grid/advise shape.
+    /// grid/advise shape and the planner's candidate-table unit. This
+    /// is the lean slab path: handles resolve once, cache hits are
+    /// served per point, and all misses go to the device's backend as a
+    /// single `model::soa` slab call (no per-point struct walks).
     pub fn predict_points(
         &self,
         device: DeviceId,
         kernel: KernelId,
         points: &[FreqPoint],
     ) -> Result<Vec<Estimate>> {
-        let tuples: Vec<(DeviceId, KernelId, FreqPoint)> =
-            points.iter().map(|&p| (device, kernel, p)).collect();
-        self.predict_tuples(&tuples)
+        if points.is_empty() {
+            return Ok(Vec::new());
+        }
+        let record = self.device_record(device)?;
+        let counters = self.kernel_counters(kernel)?;
+        for p in points {
+            if !p.is_valid() {
+                bail!(
+                    "invalid frequency point ({}, {}) MHz: frequencies must be positive \
+                     and finite",
+                    p.core_mhz,
+                    p.mem_mhz
+                );
+            }
+        }
+        let backend = self.backend_for(&record)?;
+        let Some(cache) = &self.cache else {
+            let core: Vec<f64> = points.iter().map(|p| p.core_mhz).collect();
+            let mem: Vec<f64> = points.iter().map(|p| p.mem_mhz).collect();
+            return backend.predict_points(&counters, &core, &mem);
+        };
+        let mut out: Vec<Option<Estimate>> = Vec::with_capacity(points.len());
+        let mut miss_idx: Vec<usize> = Vec::new();
+        let mut miss_keys: Vec<CacheKey> = Vec::new();
+        let mut miss_core: Vec<f64> = Vec::new();
+        let mut miss_mem: Vec<f64> = Vec::new();
+        for (i, p) in points.iter().enumerate() {
+            let key =
+                CacheKey::for_device(device.0, &counters, &record.hw, p.core_mhz, p.mem_mhz);
+            match cache.get(&key) {
+                Some(e) => out.push(Some(e)),
+                None => {
+                    out.push(None);
+                    miss_idx.push(i);
+                    miss_keys.push(key);
+                    miss_core.push(p.core_mhz);
+                    miss_mem.push(p.mem_mhz);
+                }
+            }
+        }
+        if !miss_idx.is_empty() {
+            let fresh = backend.predict_points(&counters, &miss_core, &miss_mem)?;
+            for ((i, key), est) in miss_idx.into_iter().zip(miss_keys).zip(fresh) {
+                cache.insert(key, est);
+                out[i] = Some(est);
+            }
+        }
+        Ok(out.into_iter().map(|e| e.expect("all points filled")).collect())
     }
 
     /// Handle path, batch-first (the `/v2/predict` shape): arbitrary
     /// `(device, kernel, frequency)` tuples in one call, answered in
     /// order. Handles resolve up front (one failed lookup fails the
-    /// whole batch before any prediction runs), cache hits are served
-    /// per-tuple under the device-identity key, and misses are batched
-    /// **per device** to that device's backend.
+    /// whole batch before any prediction runs), identical tuples are
+    /// deduplicated (one evaluation fans back out to every duplicate —
+    /// even on cache-disabled engines), cache hits are served per-tuple
+    /// under the device-identity key, and misses are grouped **per
+    /// (device, kernel)** into SoA slab calls to that device's backend.
     pub fn predict_tuples(
         &self,
         tuples: &[(DeviceId, KernelId, FreqPoint)],
     ) -> Result<Vec<Estimate>> {
-        struct Miss {
-            index: usize,
-            key: Option<CacheKey>,
-            req: Request,
-        }
-
         use std::collections::hash_map::Entry;
 
         // Resolve every handle first; records/counters are memoized so
@@ -445,10 +489,32 @@ impl Engine {
             }
         }
 
+        // Misses grouped by (device, kernel): each group becomes one
+        // slab evaluation, preserving intra-group order.
+        struct Group {
+            idx: Vec<usize>,
+            keys: Vec<Option<CacheKey>>,
+            core: Vec<f64>,
+            mem: Vec<f64>,
+        }
+
         let mut out: Vec<Option<Estimate>> = vec![None; tuples.len()];
-        // Misses grouped by device, preserving intra-device order.
-        let mut misses: FxHashMap<u64, Vec<Miss>> = FxHashMap::default();
+        // Duplicate tuples (same device, kernel and exact frequency
+        // bits) are answered from their first occurrence, so
+        // pathological planner inputs never pay P× redundant calls.
+        let mut first_seen: FxHashMap<(u64, u64, u64, u64), usize> = FxHashMap::default();
+        let mut dups: Vec<(usize, usize)> = Vec::new();
+        let mut groups: FxHashMap<(u64, u64), Group> = FxHashMap::default();
         for (i, &(d, k, p)) in tuples.iter().enumerate() {
+            match first_seen.entry((d.0, k.0, p.core_mhz.to_bits(), p.mem_mhz.to_bits())) {
+                Entry::Occupied(first) => {
+                    dups.push((i, *first.get()));
+                    continue;
+                }
+                Entry::Vacant(slot) => {
+                    slot.insert(i);
+                }
+            }
             let counters = &kernels[&k.0];
             let hw = &records[&d.0].hw;
             let key = self
@@ -461,23 +527,30 @@ impl Engine {
                     continue;
                 }
             }
-            misses.entry(d.0).or_default().push(Miss {
-                index: i,
-                key,
-                req: Request { counters: *counters, core_mhz: p.core_mhz, mem_mhz: p.mem_mhz },
+            let g = groups.entry((d.0, k.0)).or_insert_with(|| Group {
+                idx: Vec::new(),
+                keys: Vec::new(),
+                core: Vec::new(),
+                mem: Vec::new(),
             });
+            g.idx.push(i);
+            g.keys.push(key);
+            g.core.push(p.core_mhz);
+            g.mem.push(p.mem_mhz);
         }
 
-        for (device, list) in misses {
+        for ((device, kernel), g) in groups {
             let backend = self.backend_for(&records[&device])?;
-            let reqs: Vec<Request> = list.iter().map(|m| m.req).collect();
-            let fresh = backend.predict_batch(&reqs)?;
-            for (m, est) in list.into_iter().zip(fresh) {
-                if let (Some(cache), Some(key)) = (&self.cache, m.key) {
+            let fresh = backend.predict_points(&kernels[&kernel], &g.core, &g.mem)?;
+            for ((i, key), est) in g.idx.into_iter().zip(g.keys).zip(fresh) {
+                if let (Some(cache), Some(key)) = (&self.cache, key) {
                     cache.insert(key, est);
                 }
-                out[m.index] = Some(est);
+                out[i] = Some(est);
             }
+        }
+        for (i, first) in dups {
+            out[i] = out[first];
         }
         Ok(out.into_iter().map(|e| e.expect("all tuples filled")).collect())
     }
@@ -489,32 +562,47 @@ impl Engine {
         c: &KernelCounters,
         pairs: &[(f64, f64)],
     ) -> Result<Vec<Estimate>> {
+        let core: Vec<f64> = pairs.iter().map(|&(cf, _)| cf).collect();
+        let mem: Vec<f64> = pairs.iter().map(|&(_, mf)| mf).collect();
+        self.predict_slabs(c, &core, &mem)
+    }
+
+    /// [`Engine::predict_grid`] over pre-split frequency slabs
+    /// (`core_mhz[i]`, `mem_mhz[i]`) — the sweep/candidate-table shape.
+    /// Callers that already hold slabs (coordinator sweeps, bench
+    /// harnesses) skip the pair-tuple round trip; misses reach the
+    /// backend as one `model::soa` slab call.
+    pub fn predict_slabs(
+        &self,
+        c: &KernelCounters,
+        core_mhz: &[f64],
+        mem_mhz: &[f64],
+    ) -> Result<Vec<Estimate>> {
+        assert_eq!(core_mhz.len(), mem_mhz.len());
         let Some(cache) = &self.cache else {
-            let reqs: Vec<Request> = pairs
-                .iter()
-                .map(|&(cf, mf)| Request { counters: *c, core_mhz: cf, mem_mhz: mf })
-                .collect();
-            return self.backend.predict_batch(&reqs);
+            return self.backend.predict_points(c, core_mhz, mem_mhz);
         };
 
-        let mut out: Vec<Option<Estimate>> = Vec::with_capacity(pairs.len());
+        let mut out: Vec<Option<Estimate>> = Vec::with_capacity(core_mhz.len());
         let mut miss_idx: Vec<usize> = Vec::new();
-        let mut miss_reqs: Vec<Request> = Vec::new();
         let mut miss_keys: Vec<CacheKey> = Vec::new();
-        for (i, &(cf, mf)) in pairs.iter().enumerate() {
+        let mut miss_core: Vec<f64> = Vec::new();
+        let mut miss_mem: Vec<f64> = Vec::new();
+        for (i, (&cf, &mf)) in core_mhz.iter().zip(mem_mhz).enumerate() {
             let key = CacheKey::for_device(self.device_key, c, &self.hw, cf, mf);
             match cache.get(&key) {
                 Some(e) => out.push(Some(e)),
                 None => {
                     out.push(None);
                     miss_idx.push(i);
-                    miss_reqs.push(Request { counters: *c, core_mhz: cf, mem_mhz: mf });
                     miss_keys.push(key);
+                    miss_core.push(cf);
+                    miss_mem.push(mf);
                 }
             }
         }
-        if !miss_reqs.is_empty() {
-            let fresh = self.backend.predict_batch(&miss_reqs)?;
+        if !miss_idx.is_empty() {
+            let fresh = self.backend.predict_points(c, &miss_core, &miss_mem)?;
             for ((i, key), est) in miss_idx.into_iter().zip(miss_keys).zip(fresh) {
                 cache.insert(key, est);
                 out[i] = Some(est);
@@ -746,6 +834,62 @@ mod tests {
             let want = model::predict(&c, &hw, p.core_mhz, p.mem_mhz);
             assert_eq!(e.time_us.to_bits(), want.time_us.to_bits(), "{d} {p:?}");
         }
+    }
+
+    #[test]
+    fn duplicate_tuples_evaluate_once_and_fan_out() {
+        let (engine, primary, _, kernel) = handle_engine();
+        let p = FreqPoint::new(700.0, 700.0);
+        let tuples = vec![(primary, kernel, p); 5];
+        let got = engine.predict_tuples(&tuples).unwrap();
+        assert_eq!(got.len(), 5);
+        assert!(got.windows(2).all(|w| w[0] == w[1]));
+        // Dedupe happens before the cache: one miss, zero hits.
+        let s = engine.cache_stats();
+        assert_eq!((s.misses, s.hits), (1, 0), "duplicates must not even touch the cache");
+        let want = model::predict(&counters(), engine.hw(), 700.0, 700.0);
+        assert_eq!(got[0].time_us.to_bits(), want.time_us.to_bits());
+    }
+
+    #[test]
+    fn dedupe_reaches_backend_once_even_without_cache() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+
+        struct Counting {
+            inner: NativeScalar,
+            points: Arc<AtomicUsize>,
+        }
+        impl Backend for Counting {
+            fn name(&self) -> &'static str {
+                "counting"
+            }
+            fn predict_batch(&self, reqs: &[Request]) -> Result<Vec<Estimate>> {
+                self.points.fetch_add(reqs.len(), Ordering::SeqCst);
+                self.inner.predict_batch(reqs)
+            }
+        }
+
+        let hw = HwParams::paper_defaults();
+        let registry = Arc::new(crate::registry::DeviceRegistry::new());
+        let primary = registry.register("gtx980", hw, crate::dvfs::PowerModel::gtx980());
+        let catalog = Arc::new(crate::registry::KernelCatalog::new());
+        let kernel = catalog.register("VA", counters());
+        let evaluated = Arc::new(AtomicUsize::new(0));
+        let engine = Engine::builder(hw)
+            .backend(Arc::new(Counting {
+                inner: NativeScalar::new(hw),
+                points: Arc::clone(&evaluated),
+            }))
+            .without_cache()
+            .build()
+            .with_handles(registry, catalog, primary)
+            .unwrap();
+        let p = FreqPoint::new(700.0, 700.0);
+        let tuples = vec![(primary, kernel, p); 7];
+        let got = engine.predict_tuples(&tuples).unwrap();
+        assert_eq!(got.len(), 7);
+        assert!(got.windows(2).all(|w| w[0] == w[1]));
+        assert_eq!(evaluated.load(Ordering::SeqCst), 1, "7 identical tuples, 1 model call");
     }
 
     #[test]

@@ -9,6 +9,7 @@
 
 pub mod fit;
 pub mod params;
+pub mod soa;
 
 pub use params::{HwParams, KernelCounters};
 

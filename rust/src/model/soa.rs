@@ -1,0 +1,368 @@
+//! Struct-of-arrays batch evaluation of the analytical model.
+//!
+//! The scalar reference ([`super::predict`]) walks `KernelCounters` /
+//! `HwParams` structs per point. Every consumer that matters — the
+//! planner's K×D×P candidate table, `/v2/predict` batches, grid sweeps
+//! — evaluates *one* (device, kernel) pair over *many* frequency
+//! points, so all counter-derived subexpressions are loop-invariant.
+//! [`SoaKernel::new`] hoists them once; [`SoaKernel::fill`] then runs a
+//! tight loop over frequency slabs (`&[f64]` core / `&[f64]` mem) with
+//! no struct indirection, branch-minimal regime selection (all
+//! candidate times are computed, then selected), and slab outputs.
+//!
+//! **Bit-identity contract**: only subexpressions whose floating-point
+//! expression *tree* is unchanged are hoisted (e.g. `l2_lat * l2_hr` is
+//! computed once; `(a*r + b) * m` is *never* reassociated into an
+//! affine form). Every per-point expression below reproduces the exact
+//! association order of the scalar code, so outputs are bit-for-bit
+//! equal to [`super::predict`] — not merely within an ULP. The property
+//! test `tests/model_soa.rs` asserts `to_bits()` equality across all
+//! six regimes.
+
+use super::{HwParams, KernelCounters, Prediction, Regime};
+
+/// Output slabs for one `(kernel, device)` pair over a frequency slab.
+#[derive(Debug, Clone, Default)]
+pub struct SlabOut {
+    /// Cycles for one round of active warps (`T_active`).
+    pub t_active: Vec<f64>,
+    /// Total kernel cycles in the core domain (`T_exec`).
+    pub t_exec_cycles: Vec<f64>,
+    /// Wall-clock microseconds at the point's core frequency.
+    pub time_us: Vec<f64>,
+    /// Selected pipeline regime per point.
+    pub regime: Vec<Regime>,
+}
+
+impl SlabOut {
+    /// Pre-size all four slabs for `n` points.
+    pub fn with_capacity(n: usize) -> SlabOut {
+        SlabOut {
+            t_active: Vec::with_capacity(n),
+            t_exec_cycles: Vec::with_capacity(n),
+            time_us: Vec::with_capacity(n),
+            regime: Vec::with_capacity(n),
+        }
+    }
+
+    /// Number of evaluated points.
+    pub fn len(&self) -> usize {
+        self.t_active.len()
+    }
+
+    /// True when no points have been evaluated.
+    pub fn is_empty(&self) -> bool {
+        self.t_active.is_empty()
+    }
+
+    /// Reassemble point `i` as a scalar [`Prediction`].
+    pub fn get(&self, i: usize) -> Prediction {
+        Prediction {
+            t_active: self.t_active[i],
+            t_exec_cycles: self.t_exec_cycles[i],
+            time_us: self.time_us[i],
+            regime: self.regime[i],
+        }
+    }
+
+    fn clear_and_reserve(&mut self, n: usize) {
+        self.t_active.clear();
+        self.t_exec_cycles.clear();
+        self.time_us.clear();
+        self.regime.clear();
+        self.t_active.reserve(n);
+        self.t_exec_cycles.reserve(n);
+        self.time_us.reserve(n);
+        self.regime.reserve(n);
+    }
+}
+
+/// All per-kernel loop invariants of Eqs. (4)–(21), hoisted once.
+///
+/// Fields mirror the scalar code's intermediates; names note the
+/// originating expression. Everything that depends on the frequency
+/// ratio stays in the per-point loop.
+#[derive(Debug, Clone, Copy)]
+pub struct SoaKernel {
+    // Eq. (4)/(5) frequency-dependent terms' constant factors.
+    dm_lat_a: f64,
+    dm_lat_b: f64,
+    dm_del: f64,
+    /// `1.0 - l2_hr`
+    miss: f64,
+    /// `l2_lat * l2_hr` (Eq. 5a hit half)
+    l2h_lat: f64,
+    /// `l2_del * l2_hr` (Eq. 5b hit half)
+    l2h_del: f64,
+    /// `inst_cycle * avr_inst` (Eq. 7b)
+    avr_comp: f64,
+    /// `avr_comp * gld_trans` ("C" per body iteration)
+    comp_iter: f64,
+    gld_trans: f64,
+    aw: f64,
+    o: f64,
+    /// `aw - 1.0`
+    aw1: f64,
+    /// `o - 1.0`
+    o1: f64,
+    /// `mem_ops.max(1.0)`
+    mo: f64,
+    /// `comp_iter * (aw - 1.0)` (Eq. 15 head / Eq. 12 condition)
+    caw1: f64,
+    /// `comp_iter * aw * o` (Eq. 9 head)
+    ciawo: f64,
+    // Shared-memory path invariants.
+    uses_smem: bool,
+    gld_body: f64,
+    gld_edge: f64,
+    sh_lat: f64,
+    /// `avr_comp + sh_lat` (Eq. 16 condition LHS)
+    acs: f64,
+    /// `aw - wpb` (Eq. 16 condition window)
+    awpb: f64,
+    /// `max(comp_iter * aw, i_itrs * smem_conflict * aw)` (Eq. 19)
+    ap: f64,
+    /// `sh_lat * i_itrs` (Eq. 19 latency chain)
+    chain: f64,
+    /// `(wpb * n_blocks / (aw * n_sm)).max(1.0)` (Eq. 6)
+    rounds: f64,
+}
+
+impl SoaKernel {
+    /// Hoist every counter-only subexpression of the model.
+    pub fn new(c: &KernelCounters, hw: &HwParams) -> SoaKernel {
+        let avr_comp = hw.inst_cycle * c.avr_inst;
+        let comp_iter = avr_comp * c.gld_trans;
+        let aw = c.aw;
+        let o = c.o_itrs;
+        let alu = comp_iter * aw;
+        let port = c.i_itrs * c.smem_conflict * aw;
+        SoaKernel {
+            dm_lat_a: hw.dm_lat_a,
+            dm_lat_b: hw.dm_lat_b,
+            dm_del: hw.dm_del,
+            miss: 1.0 - c.l2_hr,
+            l2h_lat: hw.l2_lat * c.l2_hr,
+            l2h_del: hw.l2_del * c.l2_hr,
+            avr_comp,
+            comp_iter,
+            gld_trans: c.gld_trans,
+            aw,
+            o,
+            aw1: aw - 1.0,
+            o1: o - 1.0,
+            mo: c.mem_ops.max(1.0),
+            caw1: comp_iter * (aw - 1.0),
+            ciawo: comp_iter * aw * o,
+            uses_smem: c.uses_smem,
+            gld_body: c.gld_body,
+            gld_edge: c.gld_edge,
+            sh_lat: hw.sh_lat,
+            acs: avr_comp + hw.sh_lat,
+            awpb: aw - c.wpb,
+            ap: alu.max(port),
+            chain: hw.sh_lat * c.i_itrs,
+            rounds: (c.wpb * c.n_blocks / (aw * c.n_sm)).max(1.0),
+        }
+    }
+
+    /// Evaluate the slab, appending to `out` (cleared first).
+    ///
+    /// Panics if the slabs differ in length or any frequency is not
+    /// strictly positive (same contract as the scalar `predict`).
+    pub fn fill(&self, core_mhz: &[f64], mem_mhz: &[f64], out: &mut SlabOut) {
+        assert_eq!(
+            core_mhz.len(),
+            mem_mhz.len(),
+            "core and mem frequency slabs must have equal length"
+        );
+        // Validate up front so the hot loop carries no panic edges.
+        for (&cf, &mf) in core_mhz.iter().zip(mem_mhz) {
+            assert!(cf > 0.0 && mf > 0.0);
+        }
+        out.clear_and_reserve(core_mhz.len());
+        if self.uses_smem {
+            self.fill_smem(core_mhz, mem_mhz, out);
+        } else {
+            self.fill_plain(core_mhz, mem_mhz, out);
+        }
+    }
+
+    /// Convenience wrapper allocating a fresh [`SlabOut`].
+    pub fn predict(&self, core_mhz: &[f64], mem_mhz: &[f64]) -> SlabOut {
+        let mut out = SlabOut::with_capacity(core_mhz.len());
+        self.fill(core_mhz, mem_mhz, &mut out);
+        out
+    }
+
+    /// Eqs. (9)/(11)/(13)/(15): the four non-smem pipeline cases. All
+    /// candidate times are computed unconditionally so the compiler can
+    /// lower the selection to branchless `select`s and vectorize.
+    fn fill_plain(&self, core_mhz: &[f64], mem_mhz: &[f64], out: &mut SlabOut) {
+        let s = self;
+        for (&cf, &mf) in core_mhz.iter().zip(mem_mhz) {
+            let ratio = cf / mf;
+            let dm_lat = s.dm_lat_a * ratio + s.dm_lat_b; // Eq. (4)
+            let agl_lat = s.l2h_lat + dm_lat * s.miss; // Eq. (5a)
+            let agl_del = s.l2h_del + s.dm_del * ratio * s.miss; // Eq. (5b)
+            let q = agl_del * s.gld_trans;
+            let lat_iter = agl_lat * s.mo;
+            // Candidates (exact scalar expression trees).
+            let t_compute = s.ciawo + agl_lat; // Eq. (9)
+            let t_few_long = s.caw1 + (s.comp_iter + lat_iter) * s.o; // Eq. (15)
+            let t_memory = agl_lat + s.comp_iter + q * s.aw * s.o; // Eq. (11)
+            let t_few_short =
+                q * s.aw + agl_lat + s.comp_iter + (s.comp_iter + lat_iter) * s.o1; // Eq. (13)
+            // Conditions (Eq. 8/12 and the corrected 10b/12b direction).
+            let long = s.avr_comp >= agl_del;
+            let hidden = s.caw1 >= lat_iter;
+            let saturated = (s.comp_iter + agl_lat) <= q * s.aw1;
+            let (t_active, regime) = if long {
+                if hidden {
+                    (t_compute, Regime::Compute)
+                } else {
+                    (t_few_long, Regime::FewWarpsLongCompute)
+                }
+            } else if saturated {
+                (t_memory, Regime::Memory)
+            } else {
+                (t_few_short, Regime::FewWarpsShortCompute)
+            };
+            let t_exec = t_active * s.rounds; // Eq. (6)
+            out.t_active.push(t_active);
+            out.t_exec_cycles.push(t_exec);
+            out.time_us.push(t_exec / cf);
+            out.regime.push(regime);
+        }
+    }
+
+    /// Eqs. (16)–(21): the two shared-memory pipeline cases.
+    fn fill_smem(&self, core_mhz: &[f64], mem_mhz: &[f64], out: &mut SlabOut) {
+        let s = self;
+        for (&cf, &mf) in core_mhz.iter().zip(mem_mhz) {
+            let ratio = cf / mf;
+            let dm_lat = s.dm_lat_a * ratio + s.dm_lat_b; // Eq. (4)
+            let agl_lat = s.l2h_lat + dm_lat * s.miss; // Eq. (5a)
+            let agl_del = s.l2h_del + s.dm_del * ratio * s.miss; // Eq. (5b)
+            let q = agl_del * s.gld_trans;
+            let q_body = agl_del * s.gld_body;
+            let t_light = s.comp_iter + agl_lat + q * s.aw * s.o; // Eq. (17)
+            let mem_iter = q_body * s.aw; // Eq. (20)
+            let body = (s.ap.max(mem_iter) + s.chain) * s.o; // Eq. (19)
+            let edge = agl_del * s.gld_edge * s.aw; // Eq. (18)
+            let t_intense = body.max(edge) + agl_lat + s.sh_lat; // Eq. (21)
+            let light = s.avr_comp <= agl_del && s.acs < q_body * s.awpb; // Eq. (16)
+            let (t_active, regime) = if light {
+                (t_light, Regime::SmemLight)
+            } else {
+                (t_intense, Regime::SmemIntense)
+            };
+            let t_exec = t_active * s.rounds; // Eq. (6)
+            out.t_active.push(t_active);
+            out.t_exec_cycles.push(t_exec);
+            out.time_us.push(t_exec / cf);
+            out.regime.push(regime);
+        }
+    }
+}
+
+/// One-shot slab evaluation: hoist invariants, evaluate, return slabs.
+pub fn predict_slab(
+    c: &KernelCounters,
+    hw: &HwParams,
+    core_mhz: &[f64],
+    mem_mhz: &[f64],
+) -> SlabOut {
+    SoaKernel::new(c, hw).predict(core_mhz, mem_mhz)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model;
+
+    fn counters() -> KernelCounters {
+        KernelCounters {
+            l2_hr: 0.2,
+            gld_trans: 4.0,
+            avr_inst: 20.0,
+            n_blocks: 128.0,
+            wpb: 8.0,
+            aw: 32.0,
+            n_sm: 16.0,
+            o_itrs: 16.0,
+            i_itrs: 0.0,
+            uses_smem: false,
+            smem_conflict: 1.0,
+            gld_body: 4.0,
+            gld_edge: 0.0,
+            mem_ops: 1.0,
+            l1_hr: 0.0,
+        }
+    }
+
+    #[test]
+    fn slab_matches_scalar_bit_for_bit_on_a_grid() {
+        let c = counters();
+        let hw = HwParams::paper_defaults();
+        let mut core = Vec::new();
+        let mut mem = Vec::new();
+        for ci in 0..13 {
+            for mi in 0..13 {
+                core.push(400.0 + 75.0 * ci as f64);
+                mem.push(300.0 + 60.0 * mi as f64);
+            }
+        }
+        let slab = predict_slab(&c, &hw, &core, &mem);
+        assert_eq!(slab.len(), core.len());
+        for i in 0..core.len() {
+            let want = model::predict(&c, &hw, core[i], mem[i]);
+            assert_eq!(slab.t_active[i].to_bits(), want.t_active.to_bits());
+            assert_eq!(slab.t_exec_cycles[i].to_bits(), want.t_exec_cycles.to_bits());
+            assert_eq!(slab.time_us[i].to_bits(), want.time_us.to_bits());
+            assert_eq!(slab.regime[i], want.regime);
+            assert_eq!(slab.get(i), want);
+        }
+    }
+
+    #[test]
+    fn smem_slab_matches_scalar() {
+        let c = KernelCounters {
+            uses_smem: true,
+            avr_inst: 40.0,
+            i_itrs: 32.0,
+            aw: 16.0,
+            gld_body: 4.0,
+            gld_edge: 2.0,
+            ..counters()
+        };
+        let hw = HwParams::paper_defaults();
+        let core = [400.0, 700.0, 1000.0, 1300.0];
+        let mem = [500.0, 500.0, 900.0, 300.0];
+        let slab = predict_slab(&c, &hw, &core, &mem);
+        for i in 0..core.len() {
+            let want = model::predict(&c, &hw, core[i], mem[i]);
+            assert_eq!(slab.time_us[i].to_bits(), want.time_us.to_bits());
+            assert_eq!(slab.regime[i], want.regime);
+        }
+    }
+
+    #[test]
+    fn empty_slab_is_fine() {
+        let slab = predict_slab(&counters(), &HwParams::paper_defaults(), &[], &[]);
+        assert!(slab.is_empty());
+        assert_eq!(slab.len(), 0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn mismatched_slab_lengths_panic() {
+        predict_slab(&counters(), &HwParams::paper_defaults(), &[700.0], &[]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn nonpositive_frequency_panics_like_scalar() {
+        predict_slab(&counters(), &HwParams::paper_defaults(), &[0.0], &[700.0]);
+    }
+}

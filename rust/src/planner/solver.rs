@@ -5,8 +5,9 @@
 //! Phases, for `J` jobs, `D` devices, `K` distinct kernels and `P`
 //! candidate points per device:
 //!
-//! 1. **Evaluate** — one batched [`Engine::predict_tuples`] call over
-//!    the `K × D × P` table (jobs sharing a kernel share predictions),
+//! 1. **Evaluate** — `K × D` slab calls ([`Engine::predict_points`],
+//!    one SoA-evaluated slab per (device, kernel)) covering the
+//!    `K × D × P` table (jobs sharing a kernel share predictions),
 //!    then an `O(J·D·P)` scan producing `best[j][d]`: the
 //!    deadline-feasible objective argmin for job `j` on device `d`.
 //! 2. **Greedy** — jobs in tightest-deadline-first order each take the
@@ -27,7 +28,7 @@
 //! See DESIGN.md §11 for why heavier machinery (MILP, simulated
 //! annealing) buys nothing measurable here.
 //!
-//! [`Engine::predict_tuples`]: crate::engine::Engine::predict_tuples
+//! [`Engine::predict_points`]: crate::engine::Engine::predict_points
 
 use std::collections::HashSet;
 
@@ -308,33 +309,22 @@ fn prepare(engine: &Engine, jobs: &[Job], cfg: &PlannerConfig) -> Result<Prepare
         });
     }
 
-    // One batched prediction over the whole K × D × P table. Jobs only
-    // rescale these times, so fleet size never multiplies engine work.
-    let mut tuples: Vec<(DeviceId, KernelId, FreqPoint)> = Vec::new();
-    for (di, rec) in devices.iter().enumerate() {
-        for &kid in &kernel_ids {
-            for &p in &grids[di] {
-                tuples.push((rec.id, kid, p));
-            }
-        }
-    }
-    let estimates = engine
-        .predict_tuples(&tuples)
-        .map_err(|e| PlanError::Engine(format!("{e:#}")))?;
-
+    // The K × D × P candidate table as K × D slab calls: one
+    // [`Engine::predict_points`] per (device, kernel) over that
+    // device's grid. Each call evaluates its whole slab through
+    // `model::soa` (per-kernel invariants hoisted once), so fleet size
+    // never multiplies engine work and no per-tuple structs are built.
+    //
     // times[d][k][p]: single-invocation µs. Power depends only on the
     // device and point: power[d][p].
     let mut times: Vec<Vec<Vec<f64>>> = Vec::with_capacity(devices.len());
-    let mut cursor = 0usize;
-    for (di, _) in devices.iter().enumerate() {
+    for (di, rec) in devices.iter().enumerate() {
         let mut per_kernel = Vec::with_capacity(kernel_ids.len());
-        for _ in &kernel_ids {
-            let mut per_point = Vec::with_capacity(grids[di].len());
-            for _ in &grids[di] {
-                per_point.push(estimates[cursor].time_us);
-                cursor += 1;
-            }
-            per_kernel.push(per_point);
+        for &kid in &kernel_ids {
+            let estimates = engine
+                .predict_points(rec.id, kid, &grids[di])
+                .map_err(|e| PlanError::Engine(format!("{e:#}")))?;
+            per_kernel.push(estimates.into_iter().map(|e| e.time_us).collect::<Vec<f64>>());
         }
         times.push(per_kernel);
     }

@@ -203,9 +203,14 @@ pub fn status_text(code: u16) -> &'static str {
     }
 }
 
-/// Serialize and send one response (always with `Content-Length`).
-pub fn write_response(stream: &mut TcpStream, resp: &HttpResponse) -> std::io::Result<()> {
-    let mut head = format!(
+/// Serialize one response (head + body, always with `Content-Length`)
+/// into a byte buffer — the unit the nonblocking server core appends to
+/// a per-connection write buffer and drains on writability.
+pub fn encode_response_into(resp: &HttpResponse, out: &mut Vec<u8>) {
+    out.reserve(resp.body.len() + 160);
+    // write! to a Vec<u8> is infallible.
+    let _ = write!(
+        out,
         "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\n",
         resp.status,
         status_text(resp.status),
@@ -213,18 +218,30 @@ pub fn write_response(stream: &mut TcpStream, resp: &HttpResponse) -> std::io::R
         resp.body.len()
     );
     for (k, v) in &resp.extra_headers {
-        head.push_str(k);
-        head.push_str(": ");
-        head.push_str(v);
-        head.push_str("\r\n");
+        out.extend_from_slice(k.as_bytes());
+        out.extend_from_slice(b": ");
+        out.extend_from_slice(v.as_bytes());
+        out.extend_from_slice(b"\r\n");
     }
-    head.push_str(if resp.close {
-        "Connection: close\r\n\r\n"
+    out.extend_from_slice(if resp.close {
+        b"Connection: close\r\n\r\n".as_slice()
     } else {
-        "Connection: keep-alive\r\n\r\n"
+        b"Connection: keep-alive\r\n\r\n".as_slice()
     });
-    stream.write_all(head.as_bytes())?;
-    stream.write_all(resp.body.as_bytes())?;
+    out.extend_from_slice(resp.body.as_bytes());
+}
+
+/// [`encode_response_into`] into a fresh buffer.
+pub fn encode_response(resp: &HttpResponse) -> Vec<u8> {
+    let mut out = Vec::with_capacity(resp.body.len() + 160);
+    encode_response_into(resp, &mut out);
+    out
+}
+
+/// Serialize and send one response over a blocking stream (CLI-side and
+/// test helpers; the server core uses [`encode_response_into`]).
+pub fn write_response(stream: &mut TcpStream, resp: &HttpResponse) -> std::io::Result<()> {
+    stream.write_all(&encode_response(resp))?;
     stream.flush()
 }
 
@@ -308,6 +325,24 @@ mod tests {
             MAX_BODY_BYTES + 1
         );
         assert!(try_parse(big_body.as_bytes()).is_err());
+    }
+
+    #[test]
+    fn encode_response_carries_headers_and_body() {
+        let resp = HttpResponse::json(429, "{\"error\":\"overloaded\"}".to_string())
+            .with_header("Retry-After", "1".to_string())
+            .closing();
+        let bytes = encode_response(&resp);
+        let text = String::from_utf8(bytes).unwrap();
+        assert!(text.starts_with("HTTP/1.1 429 Too Many Requests\r\n"), "{text}");
+        assert!(text.contains("Content-Type: application/json\r\n"));
+        assert!(text.contains("Content-Length: 22\r\n"));
+        assert!(text.contains("Retry-After: 1\r\n"));
+        assert!(text.contains("Connection: close\r\n\r\n"));
+        assert!(text.ends_with("{\"error\":\"overloaded\"}"));
+        // Keep-alive default.
+        let ka = encode_response(&HttpResponse::text(200, "ok".into()));
+        assert!(String::from_utf8(ka).unwrap().contains("Connection: keep-alive\r\n\r\n"));
     }
 
     #[test]

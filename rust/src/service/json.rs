@@ -96,6 +96,16 @@ impl Value {
         out
     }
 
+    /// Render to a compact JSON string, pre-sizing the buffer. Route
+    /// handlers that can estimate response cardinality (e.g. one array
+    /// element per request tuple) use this to avoid the doubling
+    /// reallocations `render` incurs on large batch responses.
+    pub fn render_sized(&self, capacity: usize) -> String {
+        let mut out = String::with_capacity(capacity);
+        self.render_into(&mut out);
+        out
+    }
+
     fn render_into(&self, out: &mut String) {
         match self {
             Value::Null => out.push_str("null"),

@@ -175,8 +175,9 @@ pub struct RouteMetrics {
     pub latency: Histogram,
 }
 
-/// Everything `/metrics` exposes. Shared (`Arc`) between the acceptor,
-/// the workers and the `Service` handle; all counters are atomics.
+/// Everything `/metrics` exposes. Shared (`Arc`) between the poll
+/// loop, the executors and the `Service` handle; all counters are
+/// atomics.
 #[derive(Debug, Default)]
 pub struct Metrics {
     routes: [RouteMetrics; Route::ALL.len()],
@@ -184,9 +185,13 @@ pub struct Metrics {
     pub connections_total: AtomicU64,
     /// Connections answered 429 at admission.
     pub shed_total: AtomicU64,
-    /// Current depth of the pending-connection queue (gauge).
+    /// Parsed requests waiting for an executor thread (gauge). With
+    /// the readiness-driven core, idle keep-alive connections cost
+    /// nothing here — only requests that have fully arrived and are
+    /// queued for compute show up.
     pub queue_depth: AtomicUsize,
-    /// High-water mark the admission control sheds at.
+    /// Admission-credit component: up to `workers + queue_capacity`
+    /// connections are live before new ones are shed with 429.
     pub queue_capacity: AtomicUsize,
 }
 

@@ -13,8 +13,8 @@
 //!            TCP clients (schedulers, load harness, CI)
 //!                            │ client.rs
 //!   ┌────────────────────────▼─────────────────────────┐
-//!   │ server.rs   acceptor → bounded queue → N workers │
-//!   │             (429 + Retry-After past high-water)  │
+//!   │ server.rs   poll(2) readiness loop → exec pool   │
+//!   │             (429 + Retry-After past the credit)  │
 //!   │ http.rs     HTTP/1.1 parse / serialize           │
 //!   │ routes.rs   /healthz /metrics                    │
 //!   │             /v1/{predict, grid, advise}  (shim)  │

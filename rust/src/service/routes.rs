@@ -879,7 +879,10 @@ fn v2_predict(state: &ServiceState, req: &HttpRequest) -> HttpResponse {
         ("results", Value::arr(results)),
         ("count", Value::num(tuples.len() as f64)),
     ]);
-    HttpResponse::json(200, resp.render())
+    // One result object per tuple at ~200 bytes (two handle strings,
+    // five numeric fields) plus envelope — sized up front so large
+    // batches serialize without doubling reallocations.
+    HttpResponse::json(200, resp.render_sized(48 + 200 * tuples.len()))
 }
 
 /// `POST /v2/advise` — the DVFS oracle through handles: the device's
@@ -1143,7 +1146,10 @@ fn v2_plan(state: &ServiceState, req: &HttpRequest) -> HttpResponse {
         ));
         fields.push(("energy_savings_pct", Value::num(savings)));
     }
-    HttpResponse::json(200, Value::obj(fields).render())
+    // ~240 bytes per assignment (ten named numeric/string fields) plus
+    // envelope and baseline block — pre-sized for fleet-sized plans.
+    let n_assigned = planned.assignments.len();
+    HttpResponse::json(200, Value::obj(fields).render_sized(300 + 240 * n_assigned))
 }
 
 #[cfg(test)]

@@ -1,31 +1,47 @@
-//! The standing HTTP server (DESIGN.md §9): `TcpListener` acceptor,
-//! bounded pending-connection queue with load shedding, and a fixed
-//! worker pool that owns connections keep-alive style.
+//! The standing HTTP server (DESIGN.md §9, §12): a nonblocking
+//! readiness-driven connection core plus a small executor pool that
+//! holds a thread only while computing a response body — never while
+//! waiting on a socket.
 //!
 //! ```text
-//!   clients ──► acceptor ──► bounded queue ──► worker 0..W
-//!                  │   (capacity = high-water)     │
-//!                  └─► 429 + Retry-After when full └─► routes::handle
+//!   clients ──► accept (nonblocking) ──► connection table (poll loop)
+//!                  │  admitted while live < workers + queue_capacity
+//!                  └─► 429 + Retry-After beyond the admission credit
+//!
+//!   poll loop: readiness ──► per-conn read/parse ──► exec queue
+//!                 ▲                                      │
+//!                 └── waker ◄── Done{conn, resp} ◄── executor 0..W
 //! ```
 //!
-//! **Sizing model:** a worker serves one connection at a time (blocking
-//! I/O — no epoll in `std`), so `workers` is the concurrent-connection
-//! budget and the queue absorbs bursts. Past the high-water mark the
-//! acceptor answers `429 Too Many Requests` with `Retry-After` and
-//! closes — shedding at admission costs microseconds and keeps the
-//! tail latency of admitted work flat (the alternative, unbounded
-//! queueing, melts p999 first).
+//! **Sizing model:** connections are registered with the poll loop and
+//! cost only their buffers while idle, so tens of thousands of
+//! keep-alive connections never consume a thread each. `workers` sizes
+//! the executor pool (concurrent request *bodies*), and
+//! `workers + queue_capacity` is the live-connection admission credit —
+//! the same shed threshold the old thread-per-connection pool enforced
+//! ("workers serving + queue pending"), kept byte-compatible: past it,
+//! new connections get `429 Too Many Requests` with `Retry-After` and
+//! are closed. Shedding at admission costs microseconds and keeps the
+//! tail latency of admitted work flat.
 //!
-//! **Shutdown/drain:** `Service::shutdown` flips the flag, wakes the
-//! acceptor with a self-connect, closes the queue, then joins. Workers
-//! finish the request in flight, serve anything already buffered on
-//! their connection (bounded by a few poll intervals), and close with
-//! `Connection: close`; queued-but-unserved connections get the same
-//! bounded drain when popped.
+//! **Connection state machine:** each registered connection owns a read
+//! buffer, a write buffer, and an `executing` flag. Readiness drives
+//! reads; complete requests dispatch to the executor queue (one in
+//! flight per connection — pipelined requests are parsed from the
+//! buffer as each response is delivered, preserving FIFO order);
+//! responses are serialized into the write buffer and drained on
+//! writability. Parse errors answer `400` and poison the connection.
+//!
+//! **Shutdown/drain:** `Service::shutdown` flips the flag and wakes the
+//! poll loop. Idle connections close on the next tick; a connection
+//! with a partial request gets [`DRAIN_POLLS`] ticks of grace; requests
+//! in flight finish, are delivered with `Connection: close`, and the
+//! connection closes once flushed. The poll thread exits when the table
+//! is empty, then the executor queue closes and every thread joins.
 
 use std::collections::VecDeque;
-use std::io::Read;
-use std::net::{IpAddr, Ipv4Addr, Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::io::{ErrorKind, Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering::SeqCst};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
@@ -33,29 +49,33 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context as _, Result};
 
-use super::http::{self, HttpResponse};
+use super::http::{self, HttpRequest, HttpResponse};
 use super::json::Value;
 use super::metrics::{Metrics, Route};
 use super::routes::{self, ServiceState};
+use crate::util::fxhash::FxHashMap;
 
 /// Tunables for [`Service::start`].
 #[derive(Debug, Clone)]
 pub struct ServiceConfig {
     /// Bind address; port 0 picks an ephemeral port.
     pub addr: String,
-    /// Worker threads = concurrent-connection budget.
+    /// Executor threads = concurrent request-body budget (connections
+    /// themselves are free: the poll loop multiplexes them all).
     pub workers: usize,
-    /// Pending-connection high-water mark; beyond it, 429.
+    /// Admission credit beyond the executor pool: up to
+    /// `workers + queue_capacity` connections are live at once; beyond
+    /// that, new connections are shed with 429.
     pub queue_capacity: usize,
     /// `Retry-After` seconds advertised on shed responses.
     pub retry_after_secs: u32,
-    /// Worker read-poll interval: the granularity at which idle
-    /// connections notice the shutdown flag.
+    /// Poll-loop tick: the granularity at which idle connections notice
+    /// shutdown and timeouts (readiness events wake the loop sooner).
     pub poll_interval: Duration,
-    /// Close connections idle longer than this (frees the worker).
+    /// Close connections idle longer than this.
     pub idle_timeout: Duration,
-    /// Per-syscall write timeout: a client that stops reading cannot
-    /// pin a worker (or hang the drain) past this bound per write.
+    /// A peer that stops reading cannot hold a half-written response
+    /// (or hang the drain) past this bound without progress.
     pub write_timeout: Duration,
 }
 
@@ -76,71 +96,225 @@ impl Default for ServiceConfig {
     }
 }
 
-/// During drain, a connection gets this many poll intervals to finish
-/// delivering an in-flight request before the worker closes it.
+/// During drain, a connection holding a partial request gets this many
+/// poll ticks to complete it before the loop closes it.
 const DRAIN_POLLS: u32 = 4;
 
-struct QueueInner {
-    deque: VecDeque<TcpStream>,
+/// Per-connection read budget per readiness tick — keeps one firehose
+/// peer from starving the rest of the table.
+const READ_BUDGET_PER_TICK: usize = 64 * 1024;
+
+/// Stop reading ahead once this much request data is buffered while a
+/// request is executing (enough for one fully pipelined follow-up).
+const PIPELINE_HIGH_WATER: usize = http::MAX_HEAD_BYTES + http::MAX_BODY_BYTES;
+
+/// Readiness syscall shim. `std` exposes nonblocking sockets but no
+/// readiness API, so on Unix this binds `poll(2)` directly (no mio /
+/// tokio in the offline vendor set — the libc symbol is already linked
+/// by `std` itself). Elsewhere a sleep-tick fallback reports every
+/// registered socket as maybe-ready; the per-connection state machines
+/// absorb spurious wakeups via `WouldBlock`, trading O(live) scans per
+/// tick for portability.
+#[cfg(unix)]
+mod readiness {
+    use std::io;
+    use std::net::{TcpListener, TcpStream};
+    use std::os::unix::io::AsRawFd;
+
+    pub const POLLIN: i16 = 0x001;
+    pub const POLLOUT: i16 = 0x004;
+    pub const POLLERR: i16 = 0x008;
+    pub const POLLHUP: i16 = 0x010;
+    pub const POLLNVAL: i16 = 0x020;
+
+    /// Mirrors `struct pollfd` (POSIX: int fd; short events, revents).
+    #[repr(C)]
+    #[derive(Clone, Copy)]
+    pub struct PollFd {
+        pub fd: i32,
+        pub events: i16,
+        pub revents: i16,
+    }
+
+    impl PollFd {
+        pub fn new(fd: i32, events: i16) -> PollFd {
+            PollFd { fd, events, revents: 0 }
+        }
+    }
+
+    #[cfg(target_os = "macos")]
+    type Nfds = u32;
+    #[cfg(not(target_os = "macos"))]
+    type Nfds = std::ffi::c_ulong;
+
+    extern "C" {
+        fn poll(fds: *mut PollFd, nfds: Nfds, timeout: i32) -> i32;
+    }
+
+    /// Block until readiness or `timeout_ms`; retries `EINTR`.
+    pub fn wait(fds: &mut [PollFd], timeout_ms: i32) -> io::Result<usize> {
+        loop {
+            let rc = unsafe { poll(fds.as_mut_ptr(), fds.len() as Nfds, timeout_ms) };
+            if rc >= 0 {
+                return Ok(rc as usize);
+            }
+            let err = io::Error::last_os_error();
+            if err.kind() != io::ErrorKind::Interrupted {
+                return Err(err);
+            }
+        }
+    }
+
+    pub fn stream_fd(s: &TcpStream) -> i32 {
+        s.as_raw_fd()
+    }
+
+    pub fn listener_fd(l: &TcpListener) -> i32 {
+        l.as_raw_fd()
+    }
+}
+
+#[cfg(not(unix))]
+mod readiness {
+    use std::io;
+    use std::net::{TcpListener, TcpStream};
+
+    pub const POLLIN: i16 = 0x001;
+    pub const POLLOUT: i16 = 0x004;
+    pub const POLLERR: i16 = 0x008;
+    pub const POLLHUP: i16 = 0x010;
+    pub const POLLNVAL: i16 = 0x020;
+
+    #[derive(Clone, Copy)]
+    pub struct PollFd {
+        pub fd: i32,
+        pub events: i16,
+        pub revents: i16,
+    }
+
+    impl PollFd {
+        pub fn new(fd: i32, events: i16) -> PollFd {
+            PollFd { fd, events, revents: 0 }
+        }
+    }
+
+    /// Portable fallback: pace with a short sleep and echo every
+    /// requested interest as ready (spurious wakeups resolve to
+    /// `WouldBlock` in the state machines).
+    pub fn wait(fds: &mut [PollFd], timeout_ms: i32) -> io::Result<usize> {
+        std::thread::sleep(std::time::Duration::from_millis(timeout_ms.clamp(1, 2) as u64));
+        for f in fds.iter_mut() {
+            f.revents = f.events;
+        }
+        Ok(fds.len())
+    }
+
+    pub fn stream_fd(_s: &TcpStream) -> i32 {
+        0
+    }
+
+    pub fn listener_fd(_l: &TcpListener) -> i32 {
+        0
+    }
+}
+
+/// One parsed request handed to the executor pool.
+struct Work {
+    conn: u64,
+    route: Route,
+    keep_alive: bool,
+    req: HttpRequest,
+    submitted: Instant,
+}
+
+/// A computed response on its way back to the poll loop.
+struct Done {
+    conn: u64,
+    resp: HttpResponse,
+}
+
+struct ExecInner {
+    deque: VecDeque<Work>,
     closed: bool,
 }
 
-/// Bounded MPMC connection queue: non-blocking producer (the acceptor
-/// sheds instead of waiting), condvar-blocking consumers (workers).
-struct ConnQueue {
-    inner: Mutex<QueueInner>,
+/// The executor queue: parsed requests awaiting a worker thread. Depth
+/// is naturally bounded by the admission credit (one request in flight
+/// per live connection), and exported as the `service_queue_depth`
+/// gauge.
+struct ExecQueue {
+    inner: Mutex<ExecInner>,
     ready: Condvar,
-    capacity: usize,
 }
 
-impl ConnQueue {
-    fn new(capacity: usize) -> Self {
-        ConnQueue {
-            inner: Mutex::new(QueueInner { deque: VecDeque::new(), closed: false }),
+impl ExecQueue {
+    fn new() -> Self {
+        ExecQueue {
+            inner: Mutex::new(ExecInner { deque: VecDeque::new(), closed: false }),
             ready: Condvar::new(),
-            capacity: capacity.max(1),
         }
     }
 
-    /// Hand back the stream when the queue is at the high-water mark
-    /// (or closed) so the caller can shed it.
-    fn try_push(&self, s: TcpStream, metrics: &Metrics) -> std::result::Result<(), TcpStream> {
-        let mut g = self.inner.lock().expect("queue poisoned");
-        if g.closed || g.deque.len() >= self.capacity {
-            return Err(s);
-        }
-        g.deque.push_back(s);
+    fn push(&self, w: Work, metrics: &Metrics) {
+        let mut g = self.inner.lock().expect("exec queue poisoned");
+        g.deque.push_back(w);
         metrics.queue_depth.store(g.deque.len(), SeqCst);
         drop(g);
         self.ready.notify_one();
-        Ok(())
     }
 
     /// Blocking pop; drains remaining items after close, then `None`.
-    fn pop(&self, metrics: &Metrics) -> Option<TcpStream> {
-        let mut g = self.inner.lock().expect("queue poisoned");
+    fn pop(&self, metrics: &Metrics) -> Option<Work> {
+        let mut g = self.inner.lock().expect("exec queue poisoned");
         loop {
-            if let Some(s) = g.deque.pop_front() {
+            if let Some(w) = g.deque.pop_front() {
                 metrics.queue_depth.store(g.deque.len(), SeqCst);
-                return Some(s);
+                return Some(w);
             }
             if g.closed {
                 return None;
             }
-            g = self.ready.wait(g).expect("queue poisoned");
+            g = self.ready.wait(g).expect("exec queue poisoned");
         }
     }
 
     fn close(&self) {
-        self.inner.lock().expect("queue poisoned").closed = true;
+        self.inner.lock().expect("exec queue poisoned").closed = true;
         self.ready.notify_all();
     }
+}
+
+/// Wakes the poll loop from executor threads: a nonblocking loopback
+/// socket pair (bind → connect → accept — `std` has no `pipe`); one
+/// byte written to `tx` makes `rx` readable.
+struct Waker {
+    tx: TcpStream,
+}
+
+impl Waker {
+    fn wake(&self) {
+        // WouldBlock means wake bytes are already pending — good enough.
+        let _ = (&self.tx).write(&[1u8]);
+    }
+}
+
+fn wake_pair() -> Result<(TcpStream, TcpStream)> {
+    let l = TcpListener::bind("127.0.0.1:0").context("binding waker listener")?;
+    let addr = l.local_addr().context("resolving waker address")?;
+    let tx = TcpStream::connect(addr).context("connecting waker")?;
+    let (rx, _) = l.accept().context("accepting waker")?;
+    tx.set_nonblocking(true).context("waker tx nonblocking")?;
+    rx.set_nonblocking(true).context("waker rx nonblocking")?;
+    let _ = tx.set_nodelay(true);
+    Ok((tx, rx))
 }
 
 struct Shared {
     state: ServiceState,
     metrics: Arc<Metrics>,
-    queue: ConnQueue,
+    exec: ExecQueue,
+    done: Mutex<Vec<Done>>,
+    waker: Waker,
     shutdown: AtomicBool,
     cfg: ServiceConfig,
 }
@@ -151,27 +325,85 @@ impl Shared {
     }
 }
 
+/// One registered connection's state machine.
+struct Conn {
+    stream: TcpStream,
+    /// Bytes read but not yet parsed into a request.
+    buf: Vec<u8>,
+    /// Serialized responses awaiting writability.
+    out: Vec<u8>,
+    out_pos: usize,
+    /// A request from this connection is in the executor.
+    executing: bool,
+    /// Close once `out` is fully flushed (Connection: close, 400, drain).
+    close_after_flush: bool,
+    /// The peer half-closed (EOF on read).
+    peer_eof: bool,
+    /// A parse error was answered; no further reads or dispatches.
+    poisoned: bool,
+    /// Fatal I/O error; close immediately.
+    failed: bool,
+    last_activity: Instant,
+    /// Last time a pending write made progress (write-stall bound).
+    last_write_progress: Instant,
+}
+
+impl Conn {
+    fn new(stream: TcpStream) -> Conn {
+        let now = Instant::now();
+        Conn {
+            stream,
+            buf: Vec::with_capacity(1024),
+            out: Vec::new(),
+            out_pos: 0,
+            executing: false,
+            close_after_flush: false,
+            peer_eof: false,
+            poisoned: false,
+            failed: false,
+            last_activity: now,
+            last_write_progress: now,
+        }
+    }
+
+    fn flushed(&self) -> bool {
+        self.out_pos >= self.out.len()
+    }
+
+    fn wants_read(&self) -> bool {
+        !self.poisoned && !self.peer_eof && !self.failed && self.buf.len() < PIPELINE_HIGH_WATER
+    }
+
+    fn wants_write(&self) -> bool {
+        !self.flushed()
+    }
+}
+
 /// A running server. Dropping (or calling [`Service::shutdown`]) drains
 /// and joins every thread.
 pub struct Service {
     addr: SocketAddr,
     shared: Arc<Shared>,
-    acceptor: Option<JoinHandle<()>>,
+    poll: Option<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
 }
 
 impl Service {
-    /// Bind, spawn the pool and start accepting.
+    /// Bind, spawn the executor pool and the poll loop, start serving.
     pub fn start(state: ServiceState, cfg: ServiceConfig) -> Result<Service> {
         let listener =
             TcpListener::bind(&cfg.addr).with_context(|| format!("binding {}", cfg.addr))?;
+        listener.set_nonblocking(true).context("listener nonblocking")?;
         let addr = listener.local_addr().context("resolving bound address")?;
         let metrics = Arc::new(Metrics::default());
         metrics.queue_capacity.store(cfg.queue_capacity.max(1), SeqCst);
+        let (wake_tx, wake_rx) = wake_pair()?;
         let shared = Arc::new(Shared {
             state,
             metrics,
-            queue: ConnQueue::new(cfg.queue_capacity),
+            exec: ExecQueue::new(),
+            done: Mutex::new(Vec::new()),
+            waker: Waker { tx: wake_tx },
             shutdown: AtomicBool::new(false),
             cfg: cfg.clone(),
         });
@@ -179,19 +411,19 @@ impl Service {
         for i in 0..cfg.workers.max(1) {
             let sh = Arc::clone(&shared);
             let handle = std::thread::Builder::new()
-                .name(format!("svc-worker-{i}"))
-                .spawn(move || worker_loop(sh))
-                .context("spawning service worker")?;
+                .name(format!("svc-exec-{i}"))
+                .spawn(move || exec_loop(sh))
+                .context("spawning service executor")?;
             workers.push(handle);
         }
-        let acceptor = {
+        let poll = {
             let sh = Arc::clone(&shared);
             std::thread::Builder::new()
-                .name("svc-acceptor".to_string())
-                .spawn(move || acceptor_loop(sh, listener))
-                .context("spawning service acceptor")?
+                .name("svc-poll".to_string())
+                .spawn(move || poll_loop(sh, listener, wake_rx))
+                .context("spawning service poll loop")?
         };
-        Ok(Service { addr, shared, acceptor: Some(acceptor), workers })
+        Ok(Service { addr, shared, poll: Some(poll), workers })
     }
 
     /// The bound address (resolves port 0).
@@ -204,28 +436,22 @@ impl Service {
         Arc::clone(&self.shared.metrics)
     }
 
-    /// Graceful drain: stop accepting, serve what's in flight (bounded
-    /// by a few poll intervals per connection), join every thread.
+    /// Graceful drain: stop accepting, finish what's in flight (bounded
+    /// by a few poll ticks), close every connection, join every thread.
     pub fn shutdown(mut self) {
         self.shutdown_impl();
     }
 
     fn shutdown_impl(&mut self) {
         if !self.shared.shutdown.swap(true, SeqCst) {
-            // Wake the blocking accept. Bound-to-any addresses are not
-            // connectable on every platform; aim at loopback instead.
-            let mut wake = self.addr;
-            if wake.ip().is_unspecified() {
-                wake.set_ip(IpAddr::V4(Ipv4Addr::LOCALHOST));
-            }
-            let _ = TcpStream::connect_timeout(&wake, Duration::from_millis(500));
+            self.shared.waker.wake();
         }
-        if let Some(h) = self.acceptor.take() {
+        // Join the poll loop first: it needs live executors to finish
+        // in-flight requests during the drain.
+        if let Some(h) = self.poll.take() {
             let _ = h.join();
         }
-        // The acceptor closes the queue on exit; repeat in case it
-        // died early, so workers cannot block forever.
-        self.shared.queue.close();
+        self.shared.exec.close();
         for h in self.workers.drain(..) {
             let _ = h.join();
         }
@@ -238,25 +464,22 @@ impl Drop for Service {
     }
 }
 
-fn acceptor_loop(shared: Arc<Shared>, listener: TcpListener) {
-    for conn in listener.incoming() {
-        if shared.is_shutdown() {
-            break; // the wake connection (or a late client) is dropped
-        }
-        let stream = match conn {
-            Ok(s) => s,
-            Err(_) => continue,
-        };
-        shared.metrics.connections_total.fetch_add(1, SeqCst);
-        if let Err(rejected) = shared.queue.try_push(stream, &shared.metrics) {
-            shed(&shared, rejected);
-        }
+/// Executor thread: pop parsed requests, compute, hand the response
+/// back to the poll loop. The thread is occupied only for the body of
+/// `routes::handle` — socket waiting happens in the poll loop.
+fn exec_loop(shared: Arc<Shared>) {
+    while let Some(w) = shared.exec.pop(&shared.metrics) {
+        let mut resp = routes::handle(&shared.state, &shared.metrics, &w.req);
+        shared.metrics.record(w.route, resp.status, w.submitted.elapsed());
+        resp.close = resp.close || !w.keep_alive || shared.is_shutdown();
+        shared.done.lock().expect("done list poisoned").push(Done { conn: w.conn, resp });
+        shared.waker.wake();
     }
-    shared.queue.close();
 }
 
 /// Admission-control rejection: 429 + `Retry-After`, written straight
-/// from the acceptor (microseconds — no worker time spent). The
+/// from the poll loop (microseconds — the accepted stream is still in
+/// blocking mode, and the write is bounded by `write_timeout`). The
 /// response goes out before any request is read; shedding is a
 /// connection-level decision (DESIGN.md §9).
 fn shed(shared: &Shared, mut stream: TcpStream) {
@@ -276,7 +499,7 @@ fn shed(shared: &Shared, mut stream: TcpStream) {
         // that already arrived so the FIN is not turned into an RST
         // that could destroy the 429 in the peer's receive buffer.
         // Non-blocking — shedding happens exactly when the server is
-        // overloaded, so the acceptor must not stall here (bytes that
+        // overloaded, so the poll loop must not stall here (bytes that
         // race in after this instant just risk the rare RST).
         let _ = stream.shutdown(Shutdown::Write);
         let _ = stream.set_nonblocking(true);
@@ -285,83 +508,287 @@ fn shed(shared: &Shared, mut stream: TcpStream) {
     }
 }
 
-fn worker_loop(shared: Arc<Shared>) {
-    while let Some(stream) = shared.queue.pop(&shared.metrics) {
-        serve_connection(&shared, stream);
+/// Drain the connection's write buffer as far as the socket allows.
+/// Returns `false` on a fatal write error (`failed` is set).
+fn flush_out(c: &mut Conn) -> bool {
+    while c.out_pos < c.out.len() {
+        match c.stream.write(&c.out[c.out_pos..]) {
+            Ok(0) => {
+                c.failed = true;
+                return false;
+            }
+            Ok(n) => {
+                c.out_pos += n;
+                c.last_write_progress = Instant::now();
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => {
+                c.failed = true;
+                return false;
+            }
+        }
+    }
+    if c.out_pos > 0 && c.flushed() {
+        c.out.clear();
+        c.out_pos = 0;
+    }
+    true
+}
+
+/// Parse the next buffered request and dispatch it to the executors
+/// (at most one in flight per connection — pipelining re-enters here on
+/// delivery, preserving FIFO response order).
+fn try_dispatch(shared: &Shared, c: &mut Conn, id: u64) {
+    if c.executing || c.poisoned || c.close_after_flush || c.failed {
+        return;
+    }
+    match http::try_parse(&c.buf) {
+        Ok(Some((req, consumed))) => {
+            c.buf.drain(..consumed);
+            c.last_activity = Instant::now();
+            c.executing = true;
+            shared.exec.push(
+                Work {
+                    conn: id,
+                    route: Route::of_path(&req.path),
+                    keep_alive: req.keep_alive(),
+                    req,
+                    submitted: Instant::now(),
+                },
+                &shared.metrics,
+            );
+        }
+        Ok(None) => {}
+        Err(e) => {
+            let body = Value::obj(vec![
+                ("error", Value::str(e.message)),
+                ("code", Value::str("bad_http")),
+            ])
+            .render();
+            shared.metrics.record(Route::Other, 400, Duration::ZERO);
+            let resp = HttpResponse::json(400, body).closing();
+            http::encode_response_into(&resp, &mut c.out);
+            c.poisoned = true;
+            c.close_after_flush = true;
+            c.last_write_progress = Instant::now();
+            let _ = flush_out(c);
+        }
     }
 }
 
-/// Serve one connection until close/EOF/error — HTTP/1.1 keep-alive
-/// with pipelining (every complete buffered request is served before
-/// the next read).
-fn serve_connection(shared: &Shared, mut stream: TcpStream) {
-    let _ = stream.set_nodelay(true);
-    if stream.set_read_timeout(Some(shared.cfg.poll_interval)).is_err()
-        || stream.set_write_timeout(Some(shared.cfg.write_timeout)).is_err()
-    {
+/// Apply one computed response: buffer it, flush opportunistically, and
+/// chain the next pipelined request if one is already buffered.
+fn deliver(shared: &Shared, c: &mut Conn, id: u64, mut resp: HttpResponse) {
+    c.executing = false;
+    if shared.is_shutdown() {
+        resp.close = true;
+    }
+    if resp.close {
+        c.close_after_flush = true;
+    }
+    http::encode_response_into(&resp, &mut c.out);
+    c.last_activity = Instant::now();
+    c.last_write_progress = Instant::now();
+    if !flush_out(c) {
         return;
     }
-    let mut buf: Vec<u8> = Vec::with_capacity(4096);
-    let mut chunk = [0u8; 4096];
-    let mut last_activity = Instant::now();
-    let mut shutdown_polls: u32 = 0;
+    try_dispatch(shared, c, id);
+}
+
+/// Read as much as this tick's budget allows, then try to dispatch.
+fn handle_read(shared: &Shared, c: &mut Conn, id: u64) {
+    let mut chunk = [0u8; 16 * 1024];
+    let mut taken = 0usize;
+    while taken < READ_BUDGET_PER_TICK && c.wants_read() {
+        match c.stream.read(&mut chunk) {
+            Ok(0) => {
+                c.peer_eof = true;
+                break;
+            }
+            Ok(n) => {
+                c.buf.extend_from_slice(&chunk[..n]);
+                c.last_activity = Instant::now();
+                taken += n;
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => {
+                c.failed = true;
+                return;
+            }
+        }
+    }
+    try_dispatch(shared, c, id);
+}
+
+/// Whether the connection has nothing left to do and should be dropped.
+fn should_close(c: &Conn) -> bool {
+    if c.failed {
+        return true;
+    }
+    if c.executing {
+        return false;
+    }
+    if c.close_after_flush && c.flushed() {
+        return true;
+    }
+    // Half-closed peer: once the response pipeline is empty there is
+    // nothing left to deliver (a partial request can never complete).
+    c.peer_eof && c.flushed()
+}
+
+/// The readiness loop: owns the listener, the waker receive side and
+/// every registered connection.
+fn poll_loop(shared: Arc<Shared>, listener: TcpListener, wake_rx: TcpStream) {
+    use readiness::{PollFd, POLLERR, POLLHUP, POLLIN, POLLNVAL, POLLOUT};
+
+    let admission_credit = shared.cfg.workers.max(1) + shared.cfg.queue_capacity.max(1);
+    let timeout_ms = shared.cfg.poll_interval.as_millis().clamp(1, 1_000) as i32;
+    let mut conns: FxHashMap<u64, Conn> = FxHashMap::default();
+    let mut next_id: u64 = 0;
+    let mut fds: Vec<PollFd> = Vec::new();
+    let mut ids: Vec<u64> = Vec::new();
+    let mut draining = false;
+    let mut drain_ticks: u32 = 0;
+
     loop {
-        // Serve everything already buffered.
-        loop {
-            match http::try_parse(&buf) {
-                Ok(Some((req, consumed))) => {
-                    buf.drain(..consumed);
-                    last_activity = Instant::now();
-                    let route = Route::of_path(&req.path);
-                    let t0 = Instant::now();
-                    let mut resp = routes::handle(&shared.state, &shared.metrics, &req);
-                    shared.metrics.record(route, resp.status, t0.elapsed());
-                    resp.close = resp.close || !req.keep_alive() || shared.is_shutdown();
-                    let close = resp.close;
-                    if http::write_response(&mut stream, &resp).is_err() || close {
-                        return;
-                    }
-                }
-                Ok(None) => break,
-                Err(e) => {
-                    let body = Value::obj(vec![
-                        ("error", Value::str(e.message)),
-                        ("code", Value::str("bad_http")),
-                    ])
-                    .render();
-                    shared.metrics.record(Route::Other, 400, Duration::ZERO);
-                    let _ =
-                        http::write_response(&mut stream, &HttpResponse::json(400, body).closing());
-                    return;
+        // Apply responses computed since the last tick.
+        let done: Vec<Done> = {
+            let mut g = shared.done.lock().expect("done list poisoned");
+            std::mem::take(&mut *g)
+        };
+        for d in done {
+            if let Some(c) = conns.get_mut(&d.conn) {
+                deliver(&shared, c, d.conn, d.resp);
+            }
+        }
+
+        if shared.is_shutdown() && !draining {
+            draining = true;
+            drain_ticks = 0;
+        }
+        if draining && conns.is_empty() {
+            return;
+        }
+
+        // Interest set: waker, listener, then every connection.
+        fds.clear();
+        ids.clear();
+        fds.push(PollFd::new(readiness::stream_fd(&wake_rx), POLLIN));
+        fds.push(PollFd::new(
+            readiness::listener_fd(&listener),
+            if draining { 0 } else { POLLIN },
+        ));
+        for (&id, c) in conns.iter() {
+            let mut events = 0i16;
+            if c.wants_read() {
+                events |= POLLIN;
+            }
+            if c.wants_write() {
+                events |= POLLOUT;
+            }
+            fds.push(PollFd::new(readiness::stream_fd(&c.stream), events));
+            ids.push(id);
+        }
+
+        if readiness::wait(&mut fds, timeout_ms).is_err() {
+            // A failed readiness syscall is unrecoverable; drop
+            // everything rather than spin.
+            return;
+        }
+
+        // Waker: drain the pending wake bytes.
+        if fds[0].revents != 0 {
+            let mut scratch = [0u8; 64];
+            while let Ok(n) = (&wake_rx).read(&mut scratch) {
+                if n == 0 {
+                    break;
                 }
             }
         }
-        match stream.read(&mut chunk) {
-            Ok(0) => return, // client closed
-            Ok(n) => {
-                buf.extend_from_slice(&chunk[..n]);
-                last_activity = Instant::now();
-            }
-            Err(e)
-                if matches!(
-                    e.kind(),
-                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
-                ) =>
-            {
-                // Poll tick: notice shutdown and idle clients.
-                if shared.is_shutdown() {
-                    shutdown_polls += 1;
-                    // Idle connections close on the first tick; one
-                    // with a partial request gets a bounded grace.
-                    if buf.is_empty() || shutdown_polls >= DRAIN_POLLS {
-                        return;
+
+        // Listener: accept everything pending; admit or shed.
+        if !draining && fds[1].revents != 0 {
+            loop {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        shared.metrics.connections_total.fetch_add(1, SeqCst);
+                        if conns.len() >= admission_credit {
+                            shed(&shared, stream);
+                            continue;
+                        }
+                        let _ = stream.set_nodelay(true);
+                        if stream.set_nonblocking(true).is_err() {
+                            continue;
+                        }
+                        let id = next_id;
+                        next_id += 1;
+                        conns.insert(id, Conn::new(stream));
+                        // A request may already be readable; the next
+                        // tick's POLLIN picks it up.
                     }
-                } else if last_activity.elapsed() >= shared.cfg.idle_timeout {
-                    return;
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                    Err(_) => break, // transient (EMFILE, aborted handshake)
                 }
             }
-            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
-            Err(_) => return,
+        } else if draining && fds[1].revents != 0 {
+            // Late connections during drain are accepted and dropped so
+            // the backlog does not hold half-open sockets.
+            while let Ok((s, _)) = listener.accept() {
+                drop(s);
+            }
+        }
+
+        // Connection readiness.
+        for (i, &id) in ids.iter().enumerate() {
+            let r = fds[i + 2].revents;
+            if r == 0 {
+                continue;
+            }
+            let Some(c) = conns.get_mut(&id) else { continue };
+            if r & (POLLIN | POLLERR | POLLHUP | POLLNVAL) != 0 && c.wants_read() {
+                handle_read(&shared, c, id);
+            }
+            if r & (POLLOUT | POLLERR | POLLHUP) != 0 && c.wants_write() {
+                let _ = flush_out(c);
+            }
+        }
+
+        // Maintenance: closes, timeouts, drain bookkeeping.
+        if draining {
+            drain_ticks = drain_ticks.saturating_add(1);
+        }
+        let now = Instant::now();
+        let mut to_close: Vec<u64> = Vec::new();
+        for (&id, c) in conns.iter() {
+            if should_close(c) {
+                to_close.push(id);
+                continue;
+            }
+            if !c.flushed()
+                && now.duration_since(c.last_write_progress) >= shared.cfg.write_timeout
+            {
+                to_close.push(id); // write stalled: peer stopped reading
+                continue;
+            }
+            if draining {
+                if c.executing || !c.flushed() {
+                    // In flight: the delivered response closes it.
+                } else if c.buf.is_empty() || drain_ticks >= DRAIN_POLLS {
+                    // Idle connections close on the first drain tick; a
+                    // partial request gets DRAIN_POLLS of grace.
+                    to_close.push(id);
+                }
+            } else if !c.executing
+                && now.duration_since(c.last_activity) >= shared.cfg.idle_timeout
+            {
+                to_close.push(id);
+            }
+        }
+        for id in to_close {
+            conns.remove(&id); // drop closes the socket (FIN)
         }
     }
 }
@@ -465,16 +892,17 @@ mod tests {
 
     #[test]
     fn overload_sheds_with_429_and_retry_after() {
-        // One worker, tiny queue. A held-open connection pins the
-        // worker; two more fill the queue; the next is shed.
+        // workers + queue_capacity = 3 is the admission credit: one
+        // active connection plus two idle ones exhaust it; the next
+        // connection is shed at accept.
         let svc = Service::start(test_state(), fast_cfg(1, 2)).unwrap();
         let addr = svc.addr();
         let mut holder = Client::connect(&addr).unwrap();
         assert_eq!(holder.get("/healthz").unwrap().status, 200);
-        // These two sit in the queue (the worker is parked on `holder`).
+        // These two occupy the remaining admission credit.
         let _queued_a = Client::connect(&addr).unwrap();
         let _queued_b = Client::connect(&addr).unwrap();
-        // Give the acceptor a moment to enqueue both.
+        // Give the poll loop a moment to register both.
         std::thread::sleep(Duration::from_millis(100));
         let mut shed = Client::connect(&addr).unwrap();
         shed.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
@@ -483,7 +911,51 @@ mod tests {
         assert_eq!(r.header("retry-after"), Some("1"));
         assert!(r.body.contains("overloaded"));
         assert!(svc.metrics().shed_total.load(SeqCst) >= 1);
+        // Admitted connections keep working while the credit is full.
+        assert_eq!(holder.get("/healthz").unwrap().status, 200);
         drop(holder);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn many_keepalive_connections_exceed_the_worker_count() {
+        // The whole point of the readiness core: 48 live keep-alive
+        // connections served by 2 executor threads (the old model would
+        // have parked 46 of them waiting for a worker).
+        let svc = Service::start(test_state(), fast_cfg(2, 256)).unwrap();
+        let addr = svc.addr();
+        let mut clients: Vec<Client> =
+            (0..48).map(|_| Client::connect(&addr).unwrap()).collect();
+        for round in 0..2 {
+            for c in clients.iter_mut() {
+                let r = c.get("/healthz").unwrap();
+                assert_eq!(r.status, 200, "round {round}");
+            }
+        }
+        let m = svc.metrics();
+        assert_eq!(m.route(Route::Healthz).requests.load(SeqCst), 96);
+        assert_eq!(m.connections_total.load(SeqCst), 48);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn pipelined_requests_are_answered_in_order() {
+        use std::io::Write as _;
+        let svc = Service::start(test_state(), fast_cfg(2, 8)).unwrap();
+        let mut raw = TcpStream::connect(svc.addr()).unwrap();
+        raw.write_all(
+            b"GET /healthz HTTP/1.1\r\n\r\nGET /metrics HTTP/1.1\r\nConnection: close\r\n\r\n",
+        )
+        .unwrap();
+        let mut out = Vec::new();
+        raw.read_to_end(&mut out).unwrap(); // server closes after the 2nd
+        let text = String::from_utf8_lossy(&out);
+        let first = text.find("HTTP/1.1 200").expect("first response");
+        let second = text[first + 1..].find("HTTP/1.1 200").expect("second response");
+        let metrics_body = &text[first + 1 + second..];
+        assert!(text.contains("\"ok\""), "{text}");
+        // The second response is /metrics and already counts the first.
+        assert!(metrics_body.contains("service_requests_total"), "{text}");
         svc.shutdown();
     }
 
@@ -496,7 +968,7 @@ mod tests {
         let t0 = Instant::now();
         svc.shutdown(); // idle connection: closed within a poll tick
         assert!(t0.elapsed() < Duration::from_secs(5), "drain took {:?}", t0.elapsed());
-        // The worker closed the kept-alive connection during drain
+        // The poll loop closed the kept-alive connection during drain
         // (asserting on the held connection, not the port — the
         // ephemeral port may be reassigned to a parallel test).
         let _ = c.set_read_timeout(Some(Duration::from_secs(5)));

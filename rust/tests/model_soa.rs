@@ -1,0 +1,199 @@
+//! Property test: the SoA slab evaluator (`model::soa`) is bit-for-bit
+//! identical to the scalar reference (`model::predict`) — not merely
+//! close. The SoA layer hoists loop invariants but must never
+//! reassociate a floating-point expression, so `to_bits()` equality is
+//! the contract, checked across randomized counters, hardware
+//! parameters and frequency grids spanning all six pipeline regimes.
+
+use gpufreq::model::soa::{predict_slab, SoaKernel};
+use gpufreq::model::{predict, HwParams, KernelCounters, Regime};
+use gpufreq::util::prop::Rng;
+
+/// A randomized model instance: counters, hardware, and a frequency
+/// slab to evaluate it on.
+#[derive(Debug, Clone)]
+struct Case {
+    c: KernelCounters,
+    hw: HwParams,
+    core: Vec<f64>,
+    mem: Vec<f64>,
+}
+
+fn gen_counters(r: &mut Rng) -> KernelCounters {
+    // Skew `avr_inst` toward both extremes so the long-compute
+    // condition (Eq. 8) flips often; same for `l2_hr` and `aw`, which
+    // drive the hidden/saturated conditions.
+    let avr_inst = if r.chance(0.5) { r.range(0.005, 1.0) } else { r.range(1.0, 80.0) };
+    KernelCounters {
+        l2_hr: r.range(0.0, 1.0),
+        gld_trans: r.u32(1, 64) as f64,
+        avr_inst,
+        n_blocks: r.u32(1, 4096) as f64,
+        wpb: r.u32(1, 32) as f64,
+        aw: r.u32(1, 64) as f64,
+        n_sm: r.u32(1, 32) as f64,
+        o_itrs: r.u32(1, 256) as f64,
+        i_itrs: r.u32(0, 64) as f64,
+        uses_smem: r.chance(0.5),
+        smem_conflict: r.range(1.0, 8.0),
+        gld_body: r.u32(0, 32) as f64,
+        gld_edge: r.range(0.0, 8.0),
+        mem_ops: r.range(0.0, 8.0),
+        l1_hr: r.range(0.0, 1.0),
+    }
+}
+
+fn gen_hw(r: &mut Rng) -> HwParams {
+    HwParams {
+        dm_lat_a: r.range(50.0, 500.0),
+        dm_lat_b: r.range(10.0, 300.0),
+        dm_del: r.range(1.0, 50.0),
+        l2_lat: r.range(50.0, 400.0),
+        l2_del: r.range(0.5, 20.0),
+        sh_lat: r.range(5.0, 100.0),
+        inst_cycle: r.range(1.0, 16.0),
+    }
+}
+
+fn gen_case(r: &mut Rng) -> Case {
+    let n = r.u32(1, 24) as usize;
+    let mut core = Vec::with_capacity(n);
+    let mut mem = Vec::with_capacity(n);
+    for _ in 0..n {
+        core.push(r.range(100.0, 2000.0));
+        mem.push(r.range(100.0, 2000.0));
+    }
+    Case { c: gen_counters(r), hw: gen_hw(r), core, mem }
+}
+
+/// Assert slab == scalar bit-for-bit on every point of `case`, marking
+/// each regime the scalar model selects.
+fn check_case(case: &Case, seen: &mut [bool; 6]) {
+    let slab = predict_slab(&case.c, &case.hw, &case.core, &case.mem);
+    assert_eq!(slab.len(), case.core.len());
+    for i in 0..case.core.len() {
+        let want = predict(&case.c, &case.hw, case.core[i], case.mem[i]);
+        seen[want.regime as usize] = true;
+        assert_eq!(
+            slab.t_active[i].to_bits(),
+            want.t_active.to_bits(),
+            "t_active diverged at point {i} of {case:?}"
+        );
+        assert_eq!(
+            slab.t_exec_cycles[i].to_bits(),
+            want.t_exec_cycles.to_bits(),
+            "t_exec_cycles diverged at point {i} of {case:?}"
+        );
+        assert_eq!(
+            slab.time_us[i].to_bits(),
+            want.time_us.to_bits(),
+            "time_us diverged at point {i} of {case:?}"
+        );
+        assert_eq!(slab.regime[i], want.regime, "regime diverged at point {i} of {case:?}");
+        // The reassembled scalar view agrees with the raw slabs.
+        let p = slab.get(i);
+        assert_eq!(p.time_us.to_bits(), want.time_us.to_bits());
+        assert_eq!(p.regime, want.regime);
+    }
+}
+
+/// Directed instances aimed at each of the six regimes, so coverage
+/// does not hinge on the randomized generator's luck. (The test does
+/// not assert which regime each lands in — only identity — but
+/// together with the random pool every regime must appear.)
+fn directed_cases() -> Vec<Case> {
+    let hw = HwParams::paper_defaults();
+    let grid: Vec<(f64, f64)> = vec![
+        (400.0, 400.0),
+        (400.0, 1000.0),
+        (1000.0, 400.0),
+        (1000.0, 1000.0),
+        (1600.0, 300.0),
+    ];
+    let (core, mem): (Vec<f64>, Vec<f64>) = grid.into_iter().unzip();
+    let base = KernelCounters {
+        l2_hr: 0.2,
+        gld_trans: 4.0,
+        avr_inst: 20.0,
+        n_blocks: 128.0,
+        wpb: 8.0,
+        aw: 32.0,
+        n_sm: 16.0,
+        o_itrs: 16.0,
+        i_itrs: 0.0,
+        uses_smem: false,
+        smem_conflict: 1.0,
+        gld_body: 4.0,
+        gld_edge: 0.0,
+        mem_ops: 1.0,
+        l1_hr: 0.0,
+    };
+    let mk = move |c: KernelCounters| Case { c, hw, core: core.clone(), mem: mem.clone() };
+    vec![
+        // Compute: heavy per-warp compute, plenty of warps.
+        mk(KernelCounters { avr_inst: 60.0, aw: 64.0, ..base }),
+        // FewWarpsLongCompute: long compute but a single active warp.
+        mk(KernelCounters { avr_inst: 60.0, aw: 1.0, ..base }),
+        // Memory: negligible compute, wide transaction queue.
+        mk(KernelCounters { avr_inst: 0.01, gld_trans: 32.0, aw: 32.0, ..base }),
+        // FewWarpsShortCompute: negligible compute, starved queue.
+        mk(KernelCounters { avr_inst: 0.01, gld_trans: 1.0, aw: 2.0, l2_hr: 0.9, ..base }),
+        // SmemLight: smem present but the body queue dominates.
+        mk(KernelCounters {
+            uses_smem: true,
+            avr_inst: 0.01,
+            gld_body: 16.0,
+            aw: 64.0,
+            i_itrs: 4.0,
+            ..base
+        }),
+        // SmemIntense: compute-bound smem pipeline.
+        mk(KernelCounters {
+            uses_smem: true,
+            avr_inst: 100.0,
+            gld_body: 2.0,
+            aw: 16.0,
+            i_itrs: 16.0,
+            ..base
+        }),
+    ]
+}
+
+#[test]
+fn soa_is_bit_identical_to_scalar_across_regimes() {
+    let mut seen = [false; 6];
+    for case in directed_cases() {
+        check_case(&case, &mut seen);
+    }
+    let mut rng = Rng::new(0xD5F5_C0DE);
+    for _ in 0..500 {
+        let case = gen_case(&mut rng);
+        check_case(&case, &mut seen);
+    }
+    for id in 0..6u32 {
+        assert!(
+            seen[id as usize],
+            "regime {:?} never exercised — widen the generators",
+            Regime::from_id(id).unwrap()
+        );
+    }
+}
+
+#[test]
+fn hoisted_kernel_is_reusable_across_slabs() {
+    // One SoaKernel, many fills: reuse must not leak state between
+    // slabs (the planner evaluates one kernel over per-device grids).
+    let mut rng = Rng::new(0xBEEF);
+    let case = gen_case(&mut rng);
+    let kernel = SoaKernel::new(&case.c, &case.hw);
+    let mut out = gpufreq::model::soa::SlabOut::default();
+    for split in [1usize, case.core.len() / 2, case.core.len()] {
+        let split = split.clamp(1, case.core.len());
+        kernel.fill(&case.core[..split], &case.mem[..split], &mut out);
+        assert_eq!(out.len(), split);
+        for i in 0..split {
+            let want = predict(&case.c, &case.hw, case.core[i], case.mem[i]);
+            assert_eq!(out.time_us[i].to_bits(), want.time_us.to_bits());
+        }
+    }
+}
