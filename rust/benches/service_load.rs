@@ -11,14 +11,21 @@
 //! of each pinning a thread, so the tail (p999) stays bounded far past
 //! the worker count.
 //!
-//! **Perf gate:** the typed v2 path must not cost more than 1.25× the
+//! **Perf gates:** the typed v2 path must not cost more than 1.25× the
 //! v1 baseline at p99 (plus a small absolute guard for scheduler
 //! noise on microsecond-scale percentiles) — handle resolution and the
-//! batch envelope are supposed to be bookkeeping, not work. All
-//! percentile sets land in `BENCH_service_load.json` at the repo root
-//! (`latency_us` is the recorded v1 baseline, `v2_latency_us` the
-//! handle path, `wide_latency_us` the 96-connection phase) so the
-//! trajectory is tracked across PRs.
+//! batch envelope are supposed to be bookkeeping, not work. A fourth
+//! phase boots two fresh servers — tracing on (span ring + request
+//! ids) vs. tracing off (`trace_capacity: 0`) — drives the identical
+//! keep-alive workload at both, and asserts the traced p99 stays
+//! within 1.10× the untraced baseline: observability that taxes the
+//! hot path double-digit percent is observability nobody turns on
+//! (DESIGN.md §13). All percentile sets land in
+//! `BENCH_service_load.json` at the repo root (`latency_us` is the
+//! recorded v1 baseline, `v2_latency_us` the handle path,
+//! `wide_latency_us` the 96-connection phase, `traced_latency_us` /
+//! `untraced_latency_us` the overhead pair) so the trajectory is
+//! tracked across PRs.
 
 use std::net::SocketAddr;
 use std::time::{Duration, Instant};
@@ -45,6 +52,12 @@ const P99_RATIO_LIMIT: f64 = 1.25;
 /// …plus this absolute slack (µs): microsecond-scale percentiles from
 /// two sequential phases can differ by a scheduler hiccup alone.
 const P99_SLACK_US: f64 = 100.0;
+/// Requests per server in the tracing-overhead phase.
+const TRACE_REQUESTS: usize = 30_000;
+/// p99(traced) must stay within this factor of p99(untraced): the span
+/// clock reads, the compute-attribution deltas, and the ring write are
+/// budgeted at single-digit percent of a keep-alive request.
+const TRACE_RATIO_LIMIT: f64 = 1.10;
 
 fn counters() -> KernelCounters {
     KernelCounters {
@@ -271,6 +284,79 @@ fn main() {
     println!("drained loaded server in {:.0} ms", drain.as_secs_f64() * 1e3);
     assert!(drain < Duration::from_secs(10), "drain took {drain:?}");
 
+    // Phase 4: tracing overhead. Two fresh servers, identical traffic:
+    // one with span capture + ring retention fully on, one with
+    // `trace_capacity: 0` (ring off; stage histograms and request-id
+    // minting stay on — that is the permanent cost of the feature,
+    // the gate prices the *optional* part).
+    section(&format!(
+        "Tracing overhead: {TRACE_REQUESTS} requests x 2 servers (ring on vs. off) over {CONNECTIONS} connections"
+    ));
+    let trace_phase = |trace_capacity: usize| {
+        let svc = Service::start(
+            state(),
+            ServiceConfig {
+                workers: CONNECTIONS,
+                queue_capacity: 128,
+                trace_capacity,
+                slow_us: 0.0,
+                ..ServiceConfig::default()
+            },
+        )
+        .expect("trace-phase service starts");
+        let addr = svc.addr();
+        let mut c = Client::connect(&addr).expect("warmup connect");
+        let r = c.post("/v1/grid", r#"{"kernel":"VA"}"#).expect("warmup grid");
+        assert_eq!(r.status, 200, "warmup failed: {}", r.body);
+        drop(c);
+        let phase = run_phase(&addr, "/v1/predict", CONNECTIONS, TRACE_REQUESTS, |t, i| {
+            let (cf, mf) = freqs(t, i);
+            format!(r#"{{"kernel":"VA","core_mhz":{cf},"mem_mhz":{mf}}}"#)
+        });
+        // Sanity: the traced server must actually be retaining traces —
+        // a gate that "passes" because capture silently never ran
+        // measures nothing.
+        let mut c = Client::connect(&addr).expect("traces connect");
+        let r = c.get("/debug/traces").expect("debug traces");
+        assert_eq!(r.status, 200, "{}", r.body);
+        let count = r
+            .json()
+            .expect("traces json")
+            .get("count")
+            .and_then(Value::as_f64)
+            .expect("trace count");
+        if trace_capacity == 0 {
+            assert_eq!(count, 0.0, "disabled ring must retain nothing");
+        } else {
+            assert!(count > 0.0, "traced server retained no traces");
+        }
+        drop(c);
+        svc.shutdown();
+        phase
+    };
+    let untraced = summarize(
+        "v1/predict ring-off",
+        CONNECTIONS,
+        TRACE_REQUESTS,
+        trace_phase(0),
+    );
+    let traced = summarize(
+        "v1/predict ring-on",
+        CONNECTIONS,
+        TRACE_REQUESTS,
+        trace_phase(512),
+    );
+    let trace_ratio = traced.p99_us / untraced.p99_us;
+    println!(
+        "traced/untraced p99 ratio: {trace_ratio:.3} (limit {TRACE_RATIO_LIMIT} + {P99_SLACK_US} us slack)"
+    );
+    assert!(
+        traced.p99_us <= TRACE_RATIO_LIMIT * untraced.p99_us + P99_SLACK_US,
+        "traced p99 {:.1} us exceeds {TRACE_RATIO_LIMIT}x the untraced baseline {:.1} us",
+        traced.p99_us,
+        untraced.p99_us
+    );
+
     section("Admission control: forced backlog sheds 429");
     // 1 worker + 2-deep queue: a pinned connection and two idle queued
     // ones put the next arrivals over the high-water mark.
@@ -332,6 +418,10 @@ fn main() {
         ("wide_requests", Value::num(wide.n as f64)),
         ("wide_throughput_rps", Value::num(wide.throughput)),
         ("wide_latency_us", latency_json(&wide)),
+        ("untraced_latency_us", latency_json(&untraced)),
+        ("traced_latency_us", latency_json(&traced)),
+        ("traced_p99_over_untraced_p99", Value::num(trace_ratio)),
+        ("trace_ratio_limit", Value::num(TRACE_RATIO_LIMIT)),
         ("shed_429", Value::num(shed_429 as f64)),
         ("drain_ms", Value::num(drain.as_secs_f64() * 1e3)),
     ]);

@@ -59,10 +59,12 @@ COMMANDS:
   serve                   Run the standing HTTP prediction service:
                           v2 (handle protocol): POST/GET /v2/devices ·
                           POST/GET /v2/kernels · POST /v2/predict (batch) ·
-                          POST /v2/advise · POST /v2/plan (fleet planner);
+                          POST /v2/advise · POST /v2/plan (fleet planner) ·
+                          POST /v2/observations (live model-accuracy MAPE);
                           v1 (compat shim): POST /v1/predict · /v1/grid ·
-                          /v1/advise; GET /healthz · /metrics (DESIGN.md
-                          §9–§11). Runs until stdin closes (EOF drains
+                          /v1/advise; GET /healthz · /metrics ·
+                          /debug/traces (slow-trace ring, DESIGN.md
+                          §9–§13). Runs until stdin closes (EOF drains
                           gracefully)
   stream-demo             Demo the streaming prediction path (always uses the
                           PJRT batching backend; --backend is ignored)
@@ -88,6 +90,12 @@ OPTIONS:
                           up to workers + N connections stay live on the
                           readiness poll loop; past that, new connections are
                           shed with 429 + Retry-After (default 64)
+  --slow-us <US>          serve: only retain request traces at least this
+                          slow, in microseconds, for GET /debug/traces
+                          (default 0 = retain every trace)
+  --trace-capacity <N>    serve: slow-trace ring size; 0 disables retention
+                          entirely — stage histograms and X-Request-Id stay
+                          on (default 256)
 ";
 
 /// Parsed command line.
@@ -106,6 +114,8 @@ pub struct Args {
     pub device_cap: usize,
     pub addr: String,
     pub queue_depth: usize,
+    pub slow_us: f64,
+    pub trace_capacity: usize,
 }
 
 impl Default for Args {
@@ -124,6 +134,8 @@ impl Default for Args {
             device_cap: 0,
             addr: "127.0.0.1:8077".into(),
             queue_depth: 64,
+            slow_us: 0.0,
+            trace_capacity: crate::obs::DEFAULT_TRACE_CAPACITY,
         }
     }
 }
@@ -194,6 +206,23 @@ pub fn parse_args(argv: &[String]) -> Result<Args> {
                     .context("--queue-depth needs a number")?
                     .parse()
                     .context("--queue-depth must be an integer")?
+            }
+            "--slow-us" => {
+                args.slow_us = it
+                    .next()
+                    .context("--slow-us needs a number")?
+                    .parse()
+                    .context("--slow-us must be a number of microseconds")?;
+                if !(args.slow_us.is_finite() && args.slow_us >= 0.0) {
+                    bail!("--slow-us must be finite and non-negative");
+                }
+            }
+            "--trace-capacity" => {
+                args.trace_capacity = it
+                    .next()
+                    .context("--trace-capacity needs a number")?
+                    .parse()
+                    .context("--trace-capacity must be an integer")?
             }
             flag if flag.starts_with("--") => bail!("unknown flag {flag}"),
             pos => args.positional.push(pos.to_string()),
@@ -749,12 +778,22 @@ fn run_serve(args: &Args, cfg: &Config) -> Result<()> {
             addr: args.addr.clone(),
             workers: args.workers.clamp(1, 64),
             queue_capacity: args.queue_depth,
+            slow_us: args.slow_us,
+            trace_capacity: args.trace_capacity,
             ..ServiceConfig::default()
         },
     )?;
     println!("gpufreq service listening on http://{}", service.addr());
-    println!("  v2     : POST+GET /v2/devices · POST+GET /v2/kernels · POST /v2/predict (batch) · POST /v2/advise · POST /v2/plan");
-    println!("  v1+ops : POST /v1/predict · POST /v1/grid · POST /v1/advise · GET /healthz · GET /metrics");
+    println!("  v2     : POST+GET /v2/devices · POST+GET /v2/kernels · POST /v2/predict (batch) · POST /v2/advise · POST /v2/plan · POST /v2/observations");
+    println!("  v1+ops : POST /v1/predict · POST /v1/grid · POST /v1/advise · GET /healthz · GET /metrics · GET /debug/traces");
+    if args.trace_capacity == 0 {
+        println!("  traces : disabled (--trace-capacity 0)");
+    } else {
+        println!(
+            "  traces : ring of {} · retaining requests ≥ {:.0} µs (--slow-us)",
+            args.trace_capacity, args.slow_us
+        );
+    }
     println!(
         "  config : {} kernels · backend {} · {} executors · admission credit {}+{}",
         ks.len(),
@@ -928,8 +967,10 @@ mod tests {
             "list-kernels", "microbench", "profile", "devices", "kernels", "sweep",
             "validate", "report", "advise", "plan", "serve", "stream-demo",
             "dev-<n>", "krn-<n>", "/v2/predict", "/v2/devices", "/v2/kernels",
-            "/v2/advise", "/v2/plan", "/v1/predict", "--jobs", "--device-cap",
+            "/v2/advise", "/v2/plan", "/v2/observations", "/v1/predict",
+            "/debug/traces", "--jobs", "--device-cap",
             "--objective", "--queue-depth", "--addr", "--backend", "--workers",
+            "--slow-us", "--trace-capacity",
         ];
         for needle in needles {
             assert!(USAGE.contains(needle), "USAGE is missing `{needle}`");
@@ -953,14 +994,25 @@ mod tests {
 
     #[test]
     fn parses_serve_flags() {
-        let a = parse_args(&argv("serve --addr 0.0.0.0:9000 --queue-depth 128")).unwrap();
+        let a = parse_args(&argv(
+            "serve --addr 0.0.0.0:9000 --queue-depth 128 --slow-us 250.5 --trace-capacity 32",
+        ))
+        .unwrap();
         assert_eq!(a.command, "serve");
         assert_eq!(a.addr, "0.0.0.0:9000");
         assert_eq!(a.queue_depth, 128);
+        assert_eq!(a.slow_us, 250.5);
+        assert_eq!(a.trace_capacity, 32);
         assert!(parse_args(&argv("serve --queue-depth lots")).is_err());
-        // Defaults are loopback + a 64-deep queue.
+        assert!(parse_args(&argv("serve --slow-us soon")).is_err());
+        assert!(parse_args(&argv("serve --slow-us -1")).is_err());
+        assert!(parse_args(&argv("serve --slow-us inf")).is_err());
+        assert!(parse_args(&argv("serve --trace-capacity lots")).is_err());
+        // Defaults are loopback + a 64-deep queue, tracing everything.
         let d = Args::default();
         assert_eq!(d.addr, "127.0.0.1:8077");
         assert_eq!(d.queue_depth, 64);
+        assert_eq!(d.slow_us, 0.0);
+        assert_eq!(d.trace_capacity, 256);
     }
 }

@@ -10,10 +10,58 @@
 //! * `Pjrt` (in [`super::pjrt`]) — the dynamically batched service over
 //!   the AOT artifact executor.
 
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+
 use anyhow::Result;
 
 use crate::model::soa::{SlabOut, SoaKernel};
 use crate::model::{self, HwParams, KernelCounters, Regime};
+
+/// Cumulative compute-side counters for span attribution (DESIGN.md
+/// §13): every SoA slab evaluation the engine issues to a backend, and
+/// the frequency points those slabs covered. Engine clones share one
+/// instance; the serving layer snapshots before/after a handler runs
+/// and charges the delta to that request's compute span. Approximate
+/// under concurrency (two in-flight requests may claim each other's
+/// slabs) — attribution, not accounting.
+#[derive(Debug, Default)]
+pub struct ComputeCounters {
+    slab_calls: AtomicU64,
+    points: AtomicU64,
+}
+
+impl ComputeCounters {
+    /// Note one slab call covering `points` frequency points.
+    pub fn note_slab(&self, points: usize) {
+        self.slab_calls.fetch_add(1, Relaxed);
+        self.points.fetch_add(points as u64, Relaxed);
+    }
+
+    pub fn snapshot(&self) -> ComputeStats {
+        ComputeStats {
+            slab_calls: self.slab_calls.load(Relaxed),
+            points: self.points.load(Relaxed),
+        }
+    }
+}
+
+/// A point-in-time view of [`ComputeCounters`]; subtract two snapshots
+/// to attribute work to an interval.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ComputeStats {
+    pub slab_calls: u64,
+    pub points: u64,
+}
+
+impl ComputeStats {
+    /// Counter movement since an `earlier` snapshot.
+    pub fn since(self, earlier: ComputeStats) -> ComputeStats {
+        ComputeStats {
+            slab_calls: self.slab_calls.saturating_sub(earlier.slab_calls),
+            points: self.points.saturating_sub(earlier.points),
+        }
+    }
+}
 
 /// One prediction request: a profiled kernel at a frequency pair.
 #[derive(Debug, Clone, Copy)]
@@ -252,6 +300,18 @@ mod tests {
                 mem_mhz: 400.0 + (i / 7 % 7) as f64 * 100.0,
             })
             .collect()
+    }
+
+    #[test]
+    fn compute_counters_accumulate_and_diff() {
+        let c = ComputeCounters::default();
+        let before = c.snapshot();
+        c.note_slab(49);
+        c.note_slab(7);
+        let after = c.snapshot();
+        assert_eq!(after, ComputeStats { slab_calls: 2, points: 56 });
+        assert_eq!(after.since(before), ComputeStats { slab_calls: 2, points: 56 });
+        assert_eq!(before.since(after), ComputeStats::default()); // saturates
     }
 
     #[test]

@@ -63,7 +63,9 @@ use std::time::Duration;
 use anyhow::{bail, Result};
 
 pub use adapter::{EnginePredictor, PredictorBackend};
-pub use backend::{Backend, Estimate, NativeBatch, NativeScalar, Request};
+pub use backend::{
+    Backend, ComputeCounters, ComputeStats, Estimate, NativeBatch, NativeScalar, Request,
+};
 pub use cache::{CacheKey, CacheStats, GridCache, ANONYMOUS_DEVICE};
 pub use pjrt::{BatchPrediction, BatchServer, PjrtBackend, ServerStats};
 
@@ -197,6 +199,7 @@ impl EngineBuilder {
             hw: self.hw,
             device_key: ANONYMOUS_DEVICE,
             handles: None,
+            compute: Arc::new(ComputeCounters::default()),
         }
     }
 }
@@ -228,6 +231,9 @@ pub struct Engine {
     /// handle path share warm entries on the default device).
     device_key: u64,
     handles: Option<Arc<Handles>>,
+    /// Compute-span attribution counters (DESIGN.md §13), shared by
+    /// clones like the cache.
+    compute: Arc<ComputeCounters>,
 }
 
 impl Engine {
@@ -375,6 +381,13 @@ impl Engine {
         self.cache.as_ref().map(|c| c.stats()).unwrap_or_default()
     }
 
+    /// Cumulative compute-side counters (SoA slab calls issued, points
+    /// covered). The serving layer snapshots around a handler call to
+    /// attribute slab work to that request's compute span.
+    pub fn compute_stats(&self) -> ComputeStats {
+        self.compute.snapshot()
+    }
+
     /// Predict one (kernel, frequency-pair) sample.
     pub fn predict_one(&self, c: &KernelCounters, core_mhz: f64, mem_mhz: f64) -> Result<Estimate> {
         let mut v = self.predict_grid(c, &[(core_mhz, mem_mhz)])?;
@@ -423,6 +436,7 @@ impl Engine {
         let Some(cache) = &self.cache else {
             let core: Vec<f64> = points.iter().map(|p| p.core_mhz).collect();
             let mem: Vec<f64> = points.iter().map(|p| p.mem_mhz).collect();
+            self.compute.note_slab(points.len());
             return backend.predict_points(&counters, &core, &mem);
         };
         let mut out: Vec<Option<Estimate>> = Vec::with_capacity(points.len());
@@ -445,6 +459,7 @@ impl Engine {
             }
         }
         if !miss_idx.is_empty() {
+            self.compute.note_slab(miss_core.len());
             let fresh = backend.predict_points(&counters, &miss_core, &miss_mem)?;
             for ((i, key), est) in miss_idx.into_iter().zip(miss_keys).zip(fresh) {
                 cache.insert(key, est);
@@ -541,6 +556,7 @@ impl Engine {
 
         for ((device, kernel), g) in groups {
             let backend = self.backend_for(&records[&device])?;
+            self.compute.note_slab(g.core.len());
             let fresh = backend.predict_points(&kernels[&kernel], &g.core, &g.mem)?;
             for ((i, key), est) in g.idx.into_iter().zip(g.keys).zip(fresh) {
                 if let (Some(cache), Some(key)) = (&self.cache, key) {
@@ -580,6 +596,7 @@ impl Engine {
     ) -> Result<Vec<Estimate>> {
         assert_eq!(core_mhz.len(), mem_mhz.len());
         let Some(cache) = &self.cache else {
+            self.compute.note_slab(core_mhz.len());
             return self.backend.predict_points(c, core_mhz, mem_mhz);
         };
 
@@ -602,6 +619,7 @@ impl Engine {
             }
         }
         if !miss_idx.is_empty() {
+            self.compute.note_slab(miss_core.len());
             let fresh = self.backend.predict_points(c, &miss_core, &miss_mem)?;
             for ((i, key), est) in miss_idx.into_iter().zip(miss_keys).zip(fresh) {
                 cache.insert(key, est);
@@ -717,6 +735,22 @@ mod tests {
         assert_eq!(cached.cache_stats(), CacheStats::default());
         cached.predict_grid(&c, &grid()).unwrap();
         assert_eq!(cached.cache_stats().misses, 49);
+    }
+
+    #[test]
+    fn compute_stats_attribute_slab_work_and_skip_warm_hits() {
+        let hw = HwParams::paper_defaults();
+        let engine = Engine::native(hw);
+        let c = counters();
+        assert_eq!(engine.compute_stats(), ComputeStats::default());
+        engine.predict_grid(&c, &grid()).unwrap();
+        let cold = engine.compute_stats();
+        assert_eq!(cold, ComputeStats { slab_calls: 1, points: 49 });
+        // Warm repeat: all 49 points served from cache, no slab issued.
+        engine.predict_grid(&c, &grid()).unwrap();
+        assert_eq!(engine.compute_stats().since(cold), ComputeStats::default());
+        // Clones share the counters like they share the cache.
+        assert_eq!(engine.clone().compute_stats(), cold);
     }
 
     #[test]

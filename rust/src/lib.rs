@@ -15,6 +15,9 @@
 //! * [`coordinator`] — sweep orchestration and validation
 //! * [`registry`] — device registry + kernel catalog: the stable
 //!   `(DeviceId, KernelId, FreqPoint)` handles behind the typed v2 API
+//! * [`obs`] — trace-first observability: per-request span capture
+//!   into a slow-trace ring and rolling per-(device, kernel) model
+//!   accuracy windows (live MAPE)
 //! * [`dvfs`] — power model + energy-conservation advisor (paper §VII)
 //! * [`planner`] — fleet-scale DVFS planning: assign a batch of
 //!   deadline-tagged jobs to devices and (core, mem) points,
@@ -33,6 +36,7 @@ pub mod engine;
 pub mod kernels;
 pub mod microbench;
 pub mod model;
+pub mod obs;
 pub mod planner;
 pub mod profiler;
 pub mod registry;

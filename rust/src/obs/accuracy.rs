@@ -1,0 +1,186 @@
+//! Live model-accuracy telemetry (DESIGN.md §13): rolling
+//! absolute-percent-error windows per (device, kernel).
+//!
+//! The paper's validation is a one-time offline sweep (≈3.5% mean
+//! error, Table VII). `POST /v2/observations` turns that into a
+//! continuous signal: every measured sample is compared against the
+//! model's prediction *at ingest time* and folded into a bounded
+//! rolling window, so `/metrics` can expose a live
+//! `model_mape{device,kernel}` gauge that drifts when the hardware or
+//! the workload does. A future calibration pass refits when the gauge
+//! leaves budget; this layer only measures.
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+/// Default rolling-window length per (device, kernel) series.
+pub const DEFAULT_ERROR_WINDOW: usize = 256;
+
+/// Bound on distinct (device, kernel) series so an id-spraying client
+/// cannot grow the tracker without limit. Matches the registry's own
+/// capacity order (1024 devices × a few kernels each is far beyond
+/// what one service instance meters in practice).
+pub const MAX_SERIES: usize = 4096;
+
+/// One (device, kernel) accuracy series as exposed in `/metrics`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AccuracySeries {
+    /// Canonical device handle (`dev-<n>`).
+    pub device: String,
+    /// Canonical kernel handle (`krn-<n>`).
+    pub kernel: String,
+    /// Mean absolute percent error over the current window.
+    pub mape_pct: f64,
+    /// Samples currently in the window (≤ the configured window).
+    pub window: usize,
+    /// Total samples ever ingested for this series.
+    pub samples: u64,
+}
+
+#[derive(Debug)]
+struct Series {
+    device: String,
+    kernel: String,
+    errors: VecDeque<f64>,
+    samples: u64,
+}
+
+/// Rolling per-(device, kernel) error windows. Ingest is mutex-guarded
+/// — observations arrive at calibration cadence (seconds), not at
+/// predict cadence (microseconds), so a lock here never contends with
+/// the serving hot path.
+#[derive(Debug)]
+pub struct AccuracyTracker {
+    window: usize,
+    series: Mutex<Vec<Series>>,
+}
+
+impl Default for AccuracyTracker {
+    fn default() -> Self {
+        AccuracyTracker::new(DEFAULT_ERROR_WINDOW)
+    }
+}
+
+impl AccuracyTracker {
+    pub fn new(window: usize) -> AccuracyTracker {
+        AccuracyTracker { window: window.max(1), series: Mutex::new(Vec::new()) }
+    }
+
+    /// The configured rolling-window length.
+    pub fn window(&self) -> usize {
+        self.window
+    }
+
+    /// Fold one measured sample into the (device, kernel) series and
+    /// return the absolute percent error it contributed. `measured_us`
+    /// must be positive (the route layer rejects non-positive
+    /// measurements before calling). Returns `None` when the series
+    /// table is full and this key is new — the sample is dropped
+    /// rather than evicting someone else's history.
+    pub fn observe(
+        &self,
+        device: &str,
+        kernel: &str,
+        predicted_us: f64,
+        measured_us: f64,
+    ) -> Option<f64> {
+        let err_pct = ((predicted_us - measured_us) / measured_us).abs() * 100.0;
+        let mut g = self.series.lock().expect("accuracy series poisoned");
+        let idx = match g.iter().position(|s| s.device == device && s.kernel == kernel) {
+            Some(i) => i,
+            None => {
+                if g.len() >= MAX_SERIES {
+                    return None;
+                }
+                g.push(Series {
+                    device: device.to_string(),
+                    kernel: kernel.to_string(),
+                    errors: VecDeque::with_capacity(self.window.min(64)),
+                    samples: 0,
+                });
+                g.len() - 1
+            }
+        };
+        let slot = &mut g[idx];
+        if slot.errors.len() == self.window {
+            slot.errors.pop_front();
+        }
+        slot.errors.push_back(err_pct);
+        slot.samples += 1;
+        Some(err_pct)
+    }
+
+    /// Every series, in first-observation order, with its current MAPE.
+    pub fn snapshot(&self) -> Vec<AccuracySeries> {
+        let g = self.series.lock().expect("accuracy series poisoned");
+        g.iter()
+            .map(|s| AccuracySeries {
+                device: s.device.clone(),
+                kernel: s.kernel.clone(),
+                mape_pct: if s.errors.is_empty() {
+                    0.0
+                } else {
+                    s.errors.iter().sum::<f64>() / s.errors.len() as f64
+                },
+                window: s.errors.len(),
+                samples: s.samples,
+            })
+            .collect()
+    }
+
+    /// Total samples ingested across every series.
+    pub fn total_samples(&self) -> u64 {
+        self.series.lock().expect("accuracy series poisoned").iter().map(|s| s.samples).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mape_is_the_mean_absolute_percent_error() {
+        let t = AccuracyTracker::new(16);
+        // +10% and -30% against a 100 µs measurement → MAPE 20%.
+        assert_eq!(t.observe("dev-1", "krn-1", 110.0, 100.0), Some(10.0));
+        assert_eq!(t.observe("dev-1", "krn-1", 70.0, 100.0), Some(30.0));
+        let snap = t.snapshot();
+        assert_eq!(snap.len(), 1);
+        assert!((snap[0].mape_pct - 20.0).abs() < 1e-12, "mape {}", snap[0].mape_pct);
+        assert_eq!(snap[0].window, 2);
+        assert_eq!(snap[0].samples, 2);
+    }
+
+    #[test]
+    fn window_rolls_old_errors_out() {
+        let t = AccuracyTracker::new(2);
+        t.observe("dev-1", "krn-1", 200.0, 100.0); // 100% — must roll out
+        t.observe("dev-1", "krn-1", 110.0, 100.0); // 10%
+        t.observe("dev-1", "krn-1", 130.0, 100.0); // 30%
+        let snap = t.snapshot();
+        assert!((snap[0].mape_pct - 20.0).abs() < 1e-12, "mape {}", snap[0].mape_pct);
+        assert_eq!(snap[0].window, 2); // bounded by the window
+        assert_eq!(snap[0].samples, 3); // lifetime count keeps growing
+    }
+
+    #[test]
+    fn series_are_keyed_per_device_and_kernel() {
+        let t = AccuracyTracker::default();
+        t.observe("dev-1", "krn-1", 110.0, 100.0);
+        t.observe("dev-1", "krn-2", 150.0, 100.0);
+        t.observe("dev-2", "krn-1", 100.0, 100.0);
+        let snap = t.snapshot();
+        assert_eq!(snap.len(), 3);
+        assert_eq!(snap[2].device, "dev-2");
+        assert_eq!(snap[2].mape_pct, 0.0); // exact prediction
+        assert_eq!(t.total_samples(), 3);
+    }
+
+    #[test]
+    fn overprediction_and_underprediction_both_count_positive() {
+        let t = AccuracyTracker::default();
+        assert_eq!(t.observe("d", "k", 80.0, 100.0), Some(20.0));
+        assert_eq!(t.observe("d", "k", 120.0, 100.0), Some(20.0));
+        assert!((t.snapshot()[0].mape_pct - 20.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,31 @@
+//! Trace-first observability (DESIGN.md §13): request spans and live
+//! model-accuracy telemetry, `std`-only like every other layer.
+//!
+//! Two halves, both threaded through the serving stack:
+//!
+//! * [`trace`] — per-request span capture. Every admitted request gets
+//!   a trace ID (echoed as `X-Request-Id`) and one duration per
+//!   [`Stage`] of its lifecycle — accept, parse, queue-wait, engine
+//!   compute (with cache and SoA-slab attribution), response render,
+//!   write-flush. Completed traces land in a [`TraceRing`]: a
+//!   fixed-capacity ring of recent slow traces (`--slow-us` sets the
+//!   retention threshold) that `GET /debug/traces` dumps as JSON.
+//!   Recording is wait-free on the hot path — one atomic slot claim
+//!   plus a `try_lock` that *skips* under contention rather than
+//!   blocking an executor.
+//! * [`accuracy`] — the live half of the paper's 3.5%-error claim.
+//!   `POST /v2/observations` feeds measured kernel times into an
+//!   [`AccuracyTracker`], which keeps a rolling absolute-percent-error
+//!   window per (device, kernel) and surfaces MAPE as
+//!   `model_mape{device,kernel}` gauges in `/metrics` — the offline
+//!   benchmark number becomes a monitored production SLO.
+//!
+//! This module deliberately sits *below* `service` in the crate graph
+//! (it knows nothing about HTTP or routes), so the engine and future
+//! calibration passes can consume the same signals.
+
+pub mod accuracy;
+pub mod trace;
+
+pub use accuracy::{AccuracySeries, AccuracyTracker, DEFAULT_ERROR_WINDOW};
+pub use trace::{Stage, TraceRecord, TraceRing, DEFAULT_TRACE_CAPACITY};

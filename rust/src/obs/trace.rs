@@ -1,0 +1,261 @@
+//! Per-request span capture: stages, trace records and the slow-trace
+//! ring (DESIGN.md §13).
+
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+use std::sync::Mutex;
+
+/// Default ring capacity when `--trace-capacity` is not given.
+pub const DEFAULT_TRACE_CAPACITY: usize = 256;
+
+/// The stages of one request's lifecycle, in wall-clock order. Each
+/// admitted request records one duration per stage; the sum is the
+/// server-side total (client-observed latency adds network time).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    /// From connection-ready (accept, or the previous response on a
+    /// keep-alive connection) until the request head+body had fully
+    /// arrived — mostly client/network time the server waits out.
+    Accept,
+    /// HTTP head + body framing parse.
+    Parse,
+    /// Parsed and queued, waiting for an executor thread.
+    Queue,
+    /// The route handler: engine compute plus response-body JSON.
+    Compute,
+    /// Serializing the response head + body into the write buffer.
+    Render,
+    /// The synchronous socket flush after render (a slow consumer's
+    /// residual bytes drain on later poll ticks and are not charged
+    /// here — see DESIGN.md §13).
+    Flush,
+}
+
+impl Stage {
+    pub const COUNT: usize = 6;
+
+    pub const ALL: [Stage; Stage::COUNT] = [
+        Stage::Accept,
+        Stage::Parse,
+        Stage::Queue,
+        Stage::Compute,
+        Stage::Render,
+        Stage::Flush,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Accept => "accept",
+            Stage::Parse => "parse",
+            Stage::Queue => "queue",
+            Stage::Compute => "compute",
+            Stage::Render => "render",
+            Stage::Flush => "flush",
+        }
+    }
+
+    pub fn index(self) -> usize {
+        match self {
+            Stage::Accept => 0,
+            Stage::Parse => 1,
+            Stage::Queue => 2,
+            Stage::Compute => 3,
+            Stage::Render => 4,
+            Stage::Flush => 5,
+        }
+    }
+}
+
+/// One completed request trace: identity, outcome and the per-stage
+/// latency breakdown, plus compute-side attribution (engine cache hits
+/// and misses, SoA slab evaluations issued while the handler ran).
+#[derive(Debug, Clone)]
+pub struct TraceRecord {
+    /// The request id echoed in `X-Request-Id` (client-supplied or
+    /// server-generated `req-<n>`).
+    pub id: String,
+    /// Route name as metered (`Route::name`), `"other"` for 404s.
+    pub route: &'static str,
+    pub status: u16,
+    /// Microseconds per [`Stage`], indexed by [`Stage::index`].
+    pub stages_us: [f64; Stage::COUNT],
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub slab_calls: u64,
+}
+
+impl TraceRecord {
+    /// Server-side total: the sum over every stage.
+    pub fn total_us(&self) -> f64 {
+        self.stages_us.iter().sum()
+    }
+}
+
+/// Fixed-capacity ring of recent slow traces. Writers claim a slot
+/// with one `fetch_add` and then `try_lock` it — a reader (or a
+/// same-slot writer) holding the lock makes the writer *drop* the
+/// trace instead of blocking, so the executor hot path never waits.
+/// `slow_us` is the retention threshold: traces whose server-side
+/// total is below it are not retained (0 retains everything).
+/// Capacity 0 disables retention entirely (`enabled()` is false) —
+/// the bench harness uses that as the untraced baseline.
+#[derive(Debug)]
+pub struct TraceRing {
+    slots: Vec<Mutex<Option<TraceRecord>>>,
+    /// Total slot claims; the next record lands in `head % capacity`.
+    head: AtomicU64,
+    /// Records dropped to slot contention.
+    dropped: AtomicU64,
+    slow_us: f64,
+    /// Source for server-generated request ids (`req-<n>`).
+    next_id: AtomicU64,
+}
+
+impl TraceRing {
+    pub fn new(capacity: usize, slow_us: f64) -> TraceRing {
+        TraceRing {
+            slots: (0..capacity).map(|_| Mutex::new(None)).collect(),
+            head: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+            slow_us: if slow_us.is_finite() { slow_us.max(0.0) } else { 0.0 },
+            next_id: AtomicU64::new(1),
+        }
+    }
+
+    /// A capacity-0 ring: ids still mint, nothing is retained.
+    pub fn disabled() -> TraceRing {
+        TraceRing::new(0, 0.0)
+    }
+
+    /// Whether traces are retained at all (capacity > 0).
+    pub fn enabled(&self) -> bool {
+        !self.slots.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// The retention threshold in microseconds (0 = keep everything).
+    pub fn slow_us(&self) -> f64 {
+        self.slow_us
+    }
+
+    /// Mint a fresh server-side request id (monotonic from 1). Minting
+    /// works even on a disabled ring: `X-Request-Id` is unconditional.
+    pub fn next_request_id(&self) -> u64 {
+        self.next_id.fetch_add(1, Relaxed)
+    }
+
+    /// Total traces retained (cumulative, including overwritten ones).
+    pub fn recorded_total(&self) -> u64 {
+        self.head.load(Relaxed)
+    }
+
+    /// Traces dropped to slot contention (cumulative).
+    pub fn dropped_total(&self) -> u64 {
+        self.dropped.load(Relaxed)
+    }
+
+    /// Retain one completed trace if it clears the slow threshold.
+    pub fn record(&self, t: TraceRecord) {
+        if !self.enabled() || t.total_us() < self.slow_us {
+            return;
+        }
+        let seq = self.head.fetch_add(1, Relaxed);
+        let slot = (seq % self.slots.len() as u64) as usize;
+        match self.slots[slot].try_lock() {
+            Ok(mut g) => *g = Some(t),
+            Err(_) => {
+                self.dropped.fetch_add(1, Relaxed);
+            }
+        }
+    }
+
+    /// The retained traces, newest first. Slots a writer holds at the
+    /// moment of the snapshot are skipped, not waited on.
+    pub fn snapshot(&self) -> Vec<TraceRecord> {
+        let cap = self.slots.len() as u64;
+        if cap == 0 {
+            return Vec::new();
+        }
+        let head = self.head.load(Relaxed);
+        let mut out = Vec::with_capacity(self.slots.len());
+        for i in 0..cap.min(head) {
+            let slot = ((head - 1 - i) % cap) as usize;
+            if let Ok(g) = self.slots[slot].try_lock() {
+                if let Some(t) = g.as_ref() {
+                    out.push(t.clone());
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn trace(id: &str, total_us: f64) -> TraceRecord {
+        let mut stages_us = [0.0; Stage::COUNT];
+        stages_us[Stage::Compute.index()] = total_us;
+        TraceRecord {
+            id: id.to_string(),
+            route: "/v1/predict",
+            status: 200,
+            stages_us,
+            cache_hits: 0,
+            cache_misses: 0,
+            slab_calls: 0,
+        }
+    }
+
+    #[test]
+    fn stage_tables_are_consistent() {
+        for (i, s) in Stage::ALL.into_iter().enumerate() {
+            assert_eq!(s.index(), i);
+            assert!(!s.name().is_empty());
+        }
+    }
+
+    #[test]
+    fn ring_keeps_the_newest_n_and_evicts_the_oldest() {
+        let ring = TraceRing::new(2, 0.0);
+        ring.record(trace("a", 10.0));
+        ring.record(trace("b", 20.0));
+        ring.record(trace("c", 30.0));
+        let got: Vec<String> = ring.snapshot().into_iter().map(|t| t.id).collect();
+        assert_eq!(got, ["c", "b"]); // newest first; "a" was evicted
+        assert_eq!(ring.recorded_total(), 3);
+    }
+
+    #[test]
+    fn slow_threshold_filters_fast_traces() {
+        let ring = TraceRing::new(4, 100.0);
+        ring.record(trace("fast", 50.0));
+        ring.record(trace("slow", 250.0));
+        ring.record(trace("edge", 100.0)); // exactly at threshold: kept
+        let got: Vec<String> = ring.snapshot().into_iter().map(|t| t.id).collect();
+        assert_eq!(got, ["edge", "slow"]);
+    }
+
+    #[test]
+    fn disabled_ring_retains_nothing_but_still_mints_ids() {
+        let ring = TraceRing::disabled();
+        assert!(!ring.enabled());
+        ring.record(trace("x", 1e9));
+        assert!(ring.snapshot().is_empty());
+        assert_eq!(ring.recorded_total(), 0);
+        assert_eq!(ring.next_request_id(), 1);
+        assert_eq!(ring.next_request_id(), 2);
+    }
+
+    #[test]
+    fn total_sums_every_stage() {
+        let mut t = trace("t", 0.0);
+        for (i, v) in t.stages_us.iter_mut().enumerate() {
+            *v = (i + 1) as f64;
+        }
+        assert_eq!(t.total_us(), 21.0);
+    }
+}

@@ -6,11 +6,23 @@
 //! quantile queries never allocate. Bounds are coarse (≤ 2.5× between
 //! neighbours) — exact percentiles for benchmarking come from the load
 //! harness's client-side samples; the histogram is for live gauges.
+//! External scrapers get the raw cumulative counts too: every
+//! histogram also renders Prometheus-convention
+//! `…_bucket{…,le="<bound>"}` / `…_sum` / `…_count` lines, with the
+//! overflow tail exposed as the `le="+Inf"` bucket.
+//!
+//! Besides the per-route histograms, `/metrics` exposes per-[`Stage`]
+//! request-lifecycle histograms (`service_stage_latency_us…`, fed by
+//! the span capture in `server.rs` — DESIGN.md §13) and the live
+//! model-accuracy gauges (`model_mape{device,kernel}`,
+//! `model_samples_total{device,kernel}`) fed by `POST
+//! /v2/observations`.
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering::Relaxed};
 use std::time::Duration;
 
 use crate::engine::CacheStats;
+use crate::obs::{AccuracySeries, Stage};
 
 /// Histogram bucket upper bounds, microseconds.
 const BUCKET_BOUNDS_US: [f64; 24] = [
@@ -66,7 +78,9 @@ impl Histogram {
     }
 
     /// Approximate quantile (`q` in [0, 1]): the upper bound of the
-    /// bucket where the cumulative count crosses `q·total`.
+    /// bucket where the cumulative count crosses `q·total`, or
+    /// `+Inf` when the target sits in the overflow tail — a 120 s
+    /// sample must not masquerade as the 50 s top bound.
     pub fn quantile_us(&self, q: f64) -> f64 {
         let total = self.count();
         if total == 0 {
@@ -80,8 +94,31 @@ impl Histogram {
                 return BUCKET_BOUNDS_US[i];
             }
         }
-        // Target sits in the overflow tail.
-        BUCKET_BOUNDS_US[BUCKET_BOUNDS_US.len() - 1]
+        // Target sits in the overflow (+Inf) bucket.
+        f64::INFINITY
+    }
+
+    /// Total microseconds recorded (Prometheus `…_sum`).
+    pub fn sum_us(&self) -> f64 {
+        self.sum_ns.load(Relaxed) as f64 / 1e3
+    }
+
+    /// Samples above the last finite bound (the `le="+Inf"` tail).
+    pub fn overflow(&self) -> u64 {
+        self.overflow.load(Relaxed)
+    }
+
+    /// Cumulative (bound, count) pairs, Prometheus histogram
+    /// convention: entry `i` counts every sample ≤ `BUCKET_BOUNDS_US[i]`.
+    /// The `+Inf` bucket is [`Histogram::count`]. Reads race recording
+    /// benignly (counts are monotone; a scrape may be one sample
+    /// stale per bucket).
+    pub fn cumulative_buckets(&self) -> [(f64, u64); BUCKET_BOUNDS_US.len()] {
+        let mut cumulative = 0u64;
+        std::array::from_fn(|i| {
+            cumulative += self.buckets[i].load(Relaxed);
+            (BUCKET_BOUNDS_US[i], cumulative)
+        })
     }
 }
 
@@ -98,11 +135,13 @@ pub enum Route {
     PredictV2,
     AdviseV2,
     PlanV2,
+    ObservationsV2,
+    DebugTraces,
     Other,
 }
 
 impl Route {
-    pub const ALL: [Route; 11] = [
+    pub const ALL: [Route; 13] = [
         Route::Healthz,
         Route::Metrics,
         Route::Predict,
@@ -113,6 +152,8 @@ impl Route {
         Route::PredictV2,
         Route::AdviseV2,
         Route::PlanV2,
+        Route::ObservationsV2,
+        Route::DebugTraces,
         Route::Other,
     ];
 
@@ -128,6 +169,8 @@ impl Route {
             "/v2/predict" => Route::PredictV2,
             "/v2/advise" => Route::AdviseV2,
             "/v2/plan" => Route::PlanV2,
+            "/v2/observations" => Route::ObservationsV2,
+            "/debug/traces" => Route::DebugTraces,
             _ => Route::Other,
         }
     }
@@ -144,6 +187,8 @@ impl Route {
             Route::PredictV2 => "/v2/predict",
             Route::AdviseV2 => "/v2/advise",
             Route::PlanV2 => "/v2/plan",
+            Route::ObservationsV2 => "/v2/observations",
+            Route::DebugTraces => "/debug/traces",
             Route::Other => "other",
         }
     }
@@ -160,7 +205,9 @@ impl Route {
             Route::PredictV2 => 7,
             Route::AdviseV2 => 8,
             Route::PlanV2 => 9,
-            Route::Other => 10,
+            Route::ObservationsV2 => 10,
+            Route::DebugTraces => 11,
+            Route::Other => 12,
         }
     }
 }
@@ -181,6 +228,9 @@ pub struct RouteMetrics {
 #[derive(Debug, Default)]
 pub struct Metrics {
     routes: [RouteMetrics; Route::ALL.len()],
+    /// Request-lifecycle latency per [`Stage`] (DESIGN.md §13), fed by
+    /// the server's span capture across every route.
+    stages: [Histogram; Stage::COUNT],
     /// Connections accepted (admitted or shed).
     pub connections_total: AtomicU64,
     /// Connections answered 429 at admission.
@@ -198,6 +248,15 @@ pub struct Metrics {
 impl Metrics {
     pub fn route(&self, r: Route) -> &RouteMetrics {
         &self.routes[r.index()]
+    }
+
+    pub fn stage(&self, s: Stage) -> &Histogram {
+        &self.stages[s.index()]
+    }
+
+    /// Record one lifecycle-stage duration (span capture, server.rs).
+    pub fn record_stage(&self, s: Stage, elapsed: Duration) {
+        self.stages[s.index()].record(elapsed);
     }
 
     /// Record one handled request.
@@ -220,9 +279,18 @@ impl Metrics {
     /// Render the text exposition (`GET /metrics`). Cache counters come
     /// from the engine — zeroed when the cache is disabled, so the
     /// lines are always present and scrapers never see a gap.
-    pub fn render(&self, cache: &CacheStats, uptime: Duration, backend: &str) -> String {
+    /// `accuracy` is the live model-error snapshot from the
+    /// [`crate::obs::AccuracyTracker`] (empty until the first
+    /// `POST /v2/observations`).
+    pub fn render(
+        &self,
+        cache: &CacheStats,
+        uptime: Duration,
+        backend: &str,
+        accuracy: &[AccuracySeries],
+    ) -> String {
         use std::fmt::Write as _;
-        let mut out = String::with_capacity(2048);
+        let mut out = String::with_capacity(16 * 1024);
         let _ = writeln!(out, "# gpufreq prediction service");
         let _ = writeln!(out, "service_uptime_seconds {:.3}", uptime.as_secs_f64());
         let _ = writeln!(out, "service_backend_info{{backend=\"{backend}\"}} 1");
@@ -267,21 +335,58 @@ impl Metrics {
                 "service_responses_total{{route=\"{name}\",class=\"5xx\"}} {}",
                 m.server_errors.load(Relaxed)
             );
-            let _ = writeln!(
-                out,
-                "service_latency_us{{route=\"{name}\",stat=\"mean\"}} {:.1}",
-                m.latency.mean_us()
+            write_histogram(
+                &mut out,
+                "service_latency_us",
+                &format!("route=\"{name}\""),
+                &m.latency,
             );
-            for (q, label) in [(0.5, "p50"), (0.99, "p99"), (0.999, "p999")] {
-                let _ = writeln!(
-                    out,
-                    "service_latency_us{{route=\"{name}\",stat=\"{label}\"}} {:.1}",
-                    m.latency.quantile_us(q)
-                );
-            }
+        }
+        // Request-lifecycle stages (DESIGN.md §13). Always present —
+        // zeros until the server's span capture fires.
+        for s in Stage::ALL {
+            write_histogram(
+                &mut out,
+                "service_stage_latency_us",
+                &format!("stage=\"{}\"", s.name()),
+                self.stage(s),
+            );
+        }
+        // Live model accuracy, one series per observed (device, kernel).
+        let _ = writeln!(out, "model_observation_series {}", accuracy.len());
+        for a in accuracy {
+            let labels = format!("device=\"{}\",kernel=\"{}\"", a.device, a.kernel);
+            let _ = writeln!(out, "model_samples_total{{{labels}}} {}", a.samples);
+            let _ = writeln!(out, "model_mape{{{labels}}} {:.3}", a.mape_pct);
         }
         out
     }
+}
+
+/// `+Inf`-aware gauge formatting: overflow-tail quantiles are infinite.
+fn fmt_us(v: f64) -> String {
+    if v.is_infinite() {
+        "+Inf".to_string()
+    } else {
+        format!("{v:.1}")
+    }
+}
+
+/// One histogram's full exposition: the mean/p50/p99/p999 gauges plus
+/// the Prometheus-convention cumulative `_bucket`/`_sum`/`_count`
+/// lines (the overflow tail is the `le="+Inf"` bucket).
+fn write_histogram(out: &mut String, metric: &str, labels: &str, h: &Histogram) {
+    use std::fmt::Write as _;
+    let _ = writeln!(out, "{metric}{{{labels},stat=\"mean\"}} {:.1}", h.mean_us());
+    for (q, label) in [(0.5, "p50"), (0.99, "p99"), (0.999, "p999")] {
+        let _ = writeln!(out, "{metric}{{{labels},stat=\"{label}\"}} {}", fmt_us(h.quantile_us(q)));
+    }
+    for (bound, cumulative) in h.cumulative_buckets() {
+        let _ = writeln!(out, "{metric}_bucket{{{labels},le=\"{bound}\"}} {cumulative}");
+    }
+    let _ = writeln!(out, "{metric}_bucket{{{labels},le=\"+Inf\"}} {}", h.count());
+    let _ = writeln!(out, "{metric}_sum{{{labels}}} {:.1}", h.sum_us());
+    let _ = writeln!(out, "{metric}_count{{{labels}}} {}", h.count());
 }
 
 #[cfg(test)]
@@ -322,10 +427,38 @@ mod tests {
     }
 
     #[test]
-    fn overflow_samples_report_the_top_bound() {
+    fn overflow_samples_report_the_inf_bucket() {
+        // A 120 s sample is beyond the 50 s top bound: it must report
+        // +Inf, not masquerade as the top bound.
         let h = Histogram::default();
         h.record(Duration::from_secs(120));
-        assert_eq!(h.quantile_us(0.5), BUCKET_BOUNDS_US[BUCKET_BOUNDS_US.len() - 1]);
+        assert_eq!(h.quantile_us(0.5), f64::INFINITY);
+        assert_eq!(h.overflow(), 1);
+        // Every finite cumulative bucket is empty; the sample only
+        // exists in the +Inf tail (i.e. in `count`).
+        assert!(h.cumulative_buckets().iter().all(|&(_, n)| n == 0));
+        assert_eq!(h.count(), 1);
+        // A fast sample alongside keeps the low quantiles finite while
+        // the max stays +Inf.
+        h.record(Duration::from_micros(3));
+        assert_eq!(h.quantile_us(0.25), 5.0);
+        assert_eq!(h.quantile_us(1.0), f64::INFINITY);
+    }
+
+    #[test]
+    fn cumulative_buckets_follow_prometheus_convention() {
+        let h = Histogram::default();
+        h.record(Duration::from_micros(3)); // ≤ 5
+        h.record(Duration::from_micros(4)); // ≤ 5
+        h.record(Duration::from_micros(40)); // ≤ 50
+        let buckets = h.cumulative_buckets();
+        let at = |bound: f64| buckets.iter().find(|&&(b, _)| b == bound).unwrap().1;
+        assert_eq!(at(2.0), 0);
+        assert_eq!(at(5.0), 2);
+        assert_eq!(at(20.0), 2);
+        assert_eq!(at(50.0), 3); // cumulative, not per-bucket
+        assert_eq!(at(5e7), 3);
+        assert!((h.sum_us() - 47.0).abs() < 1e-9, "sum {}", h.sum_us());
     }
 
     #[test]
@@ -335,6 +468,8 @@ mod tests {
         assert_eq!(Route::of_path("/v2/predict"), Route::PredictV2);
         assert_eq!(Route::of_path("/v2/devices"), Route::DevicesV2);
         assert_eq!(Route::of_path("/v2/plan"), Route::PlanV2);
+        assert_eq!(Route::of_path("/v2/observations"), Route::ObservationsV2);
+        assert_eq!(Route::of_path("/debug/traces"), Route::DebugTraces);
         assert_eq!(Route::of_path("/nope"), Route::Other);
         for r in Route::ALL {
             assert_eq!(Route::of_path(r.name()), if r == Route::Other { Route::Other } else { r });
@@ -347,7 +482,16 @@ mod tests {
         m.record(Route::Predict, 200, Duration::from_micros(10));
         m.record(Route::Predict, 400, Duration::from_micros(12));
         m.record(Route::Advise, 500, Duration::from_micros(15));
-        let text = m.render(&CacheStats::default(), Duration::from_secs(2), "native-scalar");
+        m.record_stage(Stage::Compute, Duration::from_micros(8));
+        let accuracy = [AccuracySeries {
+            device: "dev-1".into(),
+            kernel: "krn-1".into(),
+            mape_pct: 3.5,
+            window: 2,
+            samples: 2,
+        }];
+        let text =
+            m.render(&CacheStats::default(), Duration::from_secs(2), "native-scalar", &accuracy);
         for needle in [
             "service_uptime_seconds",
             "service_queue_depth 0",
@@ -357,10 +501,41 @@ mod tests {
             "service_responses_total{route=\"/v1/predict\",class=\"4xx\"} 1",
             "service_responses_total{route=\"/v1/advise\",class=\"5xx\"} 1",
             "service_latency_us{route=\"/v1/predict\",stat=\"p50\"}",
+            // Prometheus-convention cumulative histogram (satellite):
+            // both samples sit at or under the 20 µs bound.
+            "service_latency_us_bucket{route=\"/v1/predict\",le=\"10\"} 1",
+            "service_latency_us_bucket{route=\"/v1/predict\",le=\"20\"} 2",
+            "service_latency_us_bucket{route=\"/v1/predict\",le=\"+Inf\"} 2",
+            "service_latency_us_sum{route=\"/v1/predict\"}",
+            "service_latency_us_count{route=\"/v1/predict\"} 2",
+            // New typed routes emit zeros immediately like every real route.
+            "service_requests_total{route=\"/v2/observations\"} 0",
+            "service_requests_total{route=\"/debug/traces\"} 0",
+            // Request-lifecycle stage histograms (DESIGN.md §13).
+            "service_stage_latency_us{stage=\"compute\",stat=\"p50\"}",
+            "service_stage_latency_us_bucket{stage=\"compute\",le=\"10\"} 1",
+            "service_stage_latency_us_count{stage=\"queue\"} 0",
+            // Live model accuracy fed by POST /v2/observations.
+            "model_observation_series 1",
+            "model_samples_total{device=\"dev-1\",kernel=\"krn-1\"} 2",
+            "model_mape{device=\"dev-1\",kernel=\"krn-1\"} 3.500",
         ] {
             assert!(text.contains(needle), "missing `{needle}` in:\n{text}");
         }
         // The catch-all stays silent until it fires.
         assert!(!text.contains("route=\"other\""));
+    }
+
+    #[test]
+    fn infinite_quantile_gauges_render_as_inf() {
+        let m = Metrics::default();
+        m.record(Route::Healthz, 200, Duration::from_secs(120));
+        let text = m.render(&CacheStats::default(), Duration::from_secs(1), "native-scalar", &[]);
+        assert!(
+            text.contains("service_latency_us{route=\"/healthz\",stat=\"p50\"} +Inf"),
+            "overflow quantile must render +Inf:\n{text}"
+        );
+        assert!(text.contains("service_latency_us_bucket{route=\"/healthz\",le=\"50000000\"} 0"));
+        assert!(text.contains("service_latency_us_bucket{route=\"/healthz\",le=\"+Inf\"} 1"));
     }
 }

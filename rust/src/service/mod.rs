@@ -16,10 +16,10 @@
 //!   │ server.rs   poll(2) readiness loop → exec pool   │
 //!   │             (429 + Retry-After past the credit)  │
 //!   │ http.rs     HTTP/1.1 parse / serialize           │
-//!   │ routes.rs   /healthz /metrics                    │
+//!   │ routes.rs   /healthz /metrics /debug/traces      │
 //!   │             /v1/{predict, grid, advise}  (shim)  │
 //!   │             /v2/{devices, kernels, predict,      │
-//!   │             advise, plan}     (handle protocol)  │
+//!   │             advise, plan, observations}          │
 //!   │ json.rs     hand-rolled JSON both directions     │
 //!   │ metrics.rs  counters + latency histograms        │
 //!   └────────────────────────┬─────────────────────────┘
@@ -28,6 +28,7 @@
 //!            KernelCatalog}          (DESIGN.md §8, §10)
 //!              dvfs::{PowerModel, advise}  (§VII)
 //!              planner::plan  (fleet DVFS, §11)
+//!              obs::{TraceRing, AccuracyTracker}  (§13)
 //! ```
 //!
 //! `/v2` is the typed, handle-based protocol (DESIGN.md §10): register
@@ -40,6 +41,14 @@
 //! Start one with [`Service::start`] (the CLI's `serve` subcommand does
 //! exactly this after profiling the Table VI kernels), drive it with
 //! [`Client`], and read live counters at `GET /metrics`.
+//!
+//! Every admitted request is traced (DESIGN.md §13): the response
+//! carries an `X-Request-Id` header, per-stage latency lands in the
+//! `service_stage_latency_us` histograms, and traces slower than
+//! `--slow-us` are retained in a lock-free ring behind
+//! `GET /debug/traces`. Measured runtimes posted to
+//! `POST /v2/observations` are scored against the model live and
+//! surface as `model_mape{device,kernel}` in `/metrics`.
 
 pub mod client;
 pub mod http;

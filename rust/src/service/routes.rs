@@ -14,6 +14,8 @@
 //! | `/v2/predict`    | POST     | `{requests: [{device, kernel, core_mhz, mem_mhz}]}` (batch-first) |
 //! | `/v2/advise`     | POST     | `{device, kernel, objective?, deadline_us?, pairs?, include_points?}` |
 //! | `/v2/plan`       | POST     | `{jobs: [{kernel, scale?, deadline_us?, name?}], devices?, objective?, device_cap?, pairs?}` |
+//! | `/v2/observations` | POST   | `{observations: [{device, kernel, core_mhz, mem_mhz, measured_us\|measured_ms}]}` |
+//! | `/debug/traces`  | GET      | —                                           |
 //!
 //! **v2 is the handle-based protocol** (DESIGN.md §10): devices and
 //! kernels are registered once and addressed by stable `dev-<n>` /
@@ -39,6 +41,7 @@ use std::time::Instant;
 use crate::dvfs::{ConfigPoint, Objective, PowerModel, VfCurve};
 use crate::engine::{Engine, Estimate};
 use crate::model::{HwParams, KernelCounters};
+use crate::obs::{AccuracyTracker, Stage, TraceRecord, TraceRing, DEFAULT_TRACE_CAPACITY};
 use crate::planner::{self, Job, PlanError, PlanObjective, PlannerConfig};
 use crate::registry::{
     DeviceId, DeviceRecord, DeviceRegistry, FreqPoint, KernelCatalog, KernelId, RegisterError,
@@ -66,6 +69,13 @@ pub struct ServiceState {
     /// Handle of the boot GPU every v1 request resolves to.
     pub default_device: DeviceId,
     pub started: Instant,
+    /// Slow-trace ring behind `GET /debug/traces` (DESIGN.md §13).
+    /// `Service::start` rebuilds it from `ServiceConfig`
+    /// (`--trace-capacity`, `--slow-us`) before serving.
+    pub traces: Arc<TraceRing>,
+    /// Rolling model-error windows fed by `POST /v2/observations` and
+    /// surfaced as `model_mape{device,kernel}` in `/metrics`.
+    pub accuracy: Arc<AccuracyTracker>,
 }
 
 impl ServiceState {
@@ -85,6 +95,8 @@ impl ServiceState {
             catalog,
             default_device,
             started: Instant::now(),
+            traces: Arc::new(TraceRing::new(DEFAULT_TRACE_CAPACITY, 0.0)),
+            accuracy: Arc::new(AccuracyTracker::default()),
         }
     }
 
@@ -140,6 +152,8 @@ fn dispatch(state: &ServiceState, metrics: &Metrics, req: &HttpRequest) -> HttpR
         ("POST", Route::PredictV2) => v2_predict(state, req),
         ("POST", Route::AdviseV2) => v2_advise(state, req),
         ("POST", Route::PlanV2) => v2_plan(state, req),
+        ("POST", Route::ObservationsV2) => v2_observations(state, req),
+        ("GET", Route::DebugTraces) => debug_traces(state),
         (_, Route::Other) => error_json(404, "unknown_route", "unknown route"),
         _ => error_json(405, "method_not_allowed", "method not allowed for this route"),
     }
@@ -164,8 +178,158 @@ fn metrics_route(state: &ServiceState, metrics: &Metrics) -> HttpResponse {
         &state.engine.cache_stats(),
         state.started.elapsed(),
         state.engine.backend_name(),
+        &state.accuracy.snapshot(),
     );
     HttpResponse::text(200, text)
+}
+
+/// `POST /v2/observations`: ingest measured runtimes, score each one
+/// against the model's prediction at the same frequency point, and fold
+/// the absolute percent error into the per-(device, kernel) rolling
+/// window that `/metrics` reports as `model_mape`.
+///
+/// Items are validated and resolved in full before any window is
+/// touched, so a malformed batch leaves the accuracy state untouched.
+fn v2_observations(state: &ServiceState, req: &HttpRequest) -> HttpResponse {
+    let body = match parse_body(req) {
+        Ok(v) => v,
+        Err(resp) => return resp,
+    };
+    let Some(items) = body.get("observations").and_then(Value::as_array) else {
+        return error_json(400, "bad_request", "body needs `observations` (non-empty array)");
+    };
+    if items.is_empty() {
+        return error_json(400, "bad_request", "`observations` must not be empty");
+    }
+
+    // Pass 1: resolve + validate everything, mutate nothing.
+    let mut resolved: Vec<(DeviceId, KernelId, FreqPoint, f64)> = Vec::with_capacity(items.len());
+    for (i, item) in items.iter().enumerate() {
+        let ctx = format!("observations[{i}]");
+        let (did, kid) = match resolve_item(state, item, &ctx) {
+            Ok(pair) => pair,
+            Err(resp) => return resp,
+        };
+        let num = |key: &str| item.get(key).and_then(Value::as_f64);
+        let (Some(core), Some(mem)) = (num("core_mhz"), num("mem_mhz")) else {
+            return error_json(
+                400,
+                "bad_request",
+                &format!("{ctx} needs numeric `core_mhz` and `mem_mhz`"),
+            );
+        };
+        let point = FreqPoint::new(core, mem);
+        if !point.is_valid() {
+            return error_json(
+                400,
+                "bad_request",
+                &format!("{ctx}: frequencies must be positive and finite"),
+            );
+        }
+        let measured_us = match (num("measured_us"), num("measured_ms")) {
+            (Some(us), None) => us,
+            (None, Some(ms)) => ms * 1e3,
+            (Some(_), Some(_)) => {
+                return error_json(
+                    400,
+                    "bad_request",
+                    &format!("{ctx} has both `measured_us` and `measured_ms`; send one"),
+                );
+            }
+            (None, None) => {
+                return error_json(
+                    400,
+                    "bad_request",
+                    &format!("{ctx} needs `measured_us` or `measured_ms`"),
+                );
+            }
+        };
+        if !(measured_us.is_finite() && measured_us > 0.0) {
+            return error_json(
+                400,
+                "bad_request",
+                &format!("{ctx}: measured runtime must be positive and finite"),
+            );
+        }
+        resolved.push((did, kid, point, measured_us));
+    }
+
+    // Pass 2: predict and fold into the rolling windows. Labels are the
+    // canonical handle forms ("dev-<n>"/"krn-<n>") so the same physical
+    // series accumulates no matter how the client named the pair.
+    let mut results = Vec::with_capacity(resolved.len());
+    let mut dropped = 0u64;
+    for (did, kid, point, measured_us) in resolved {
+        let est = match state.engine.predict_handle(did, kid, point) {
+            Ok(est) => est,
+            Err(e) => return error_json(500, "internal", &format!("prediction failed: {e}")),
+        };
+        let err_pct = state
+            .accuracy
+            .observe(&did.to_string(), &kid.to_string(), est.time_us, measured_us);
+        if err_pct.is_none() {
+            dropped += 1;
+        }
+        let fallback_pct = ((est.time_us - measured_us) / measured_us).abs() * 100.0;
+        results.push(Value::obj(vec![
+            ("device", Value::str(did.to_string())),
+            ("kernel", Value::str(kid.to_string())),
+            ("core_mhz", Value::num(point.core_mhz)),
+            ("mem_mhz", Value::num(point.mem_mhz)),
+            ("predicted_us", Value::num(est.time_us)),
+            ("measured_us", Value::num(measured_us)),
+            ("abs_pct_error", Value::num(err_pct.unwrap_or(fallback_pct))),
+        ]));
+    }
+
+    let count = results.len();
+    let resp = Value::obj(vec![
+        ("results", Value::arr(results)),
+        ("count", Value::num(count as f64)),
+        ("dropped", Value::num(dropped as f64)),
+        ("samples_total", Value::num(state.accuracy.total_samples() as f64)),
+    ]);
+    HttpResponse::json(200, resp.render_sized(256 + 256 * count))
+}
+
+/// `GET /debug/traces`: dump the retained span records, newest first.
+/// Intended for a human with `curl` chasing a latency report — the ring
+/// is tiny and lock-free, so hitting this on a live server is safe.
+fn debug_traces(state: &ServiceState) -> HttpResponse {
+    let traces = state.traces.snapshot();
+    let items: Vec<Value> = traces.iter().map(trace_json).collect();
+    let count = items.len();
+    let resp = Value::obj(vec![
+        ("traces", Value::arr(items)),
+        ("count", Value::num(count as f64)),
+        ("capacity", Value::num(state.traces.capacity() as f64)),
+        ("slow_us", Value::num(state.traces.slow_us())),
+        ("recorded_total", Value::num(state.traces.recorded_total() as f64)),
+        ("dropped_total", Value::num(state.traces.dropped_total() as f64)),
+    ]);
+    HttpResponse::json(200, resp.render_sized(256 + 512 * count))
+}
+
+fn trace_json(t: &TraceRecord) -> Value {
+    let stages = Stage::ALL
+        .iter()
+        .map(|s| (s.name().to_string(), Value::num(t.stages_us[s.index()])))
+        .collect();
+    Value::obj(vec![
+        ("id", Value::str(t.id.clone())),
+        ("route", Value::str(t.route)),
+        ("status", Value::num(t.status as f64)),
+        ("total_us", Value::num(t.total_us())),
+        ("stages_us", Value::Obj(stages)),
+        (
+            "cache",
+            Value::obj(vec![
+                ("hits", Value::num(t.cache_hits as f64)),
+                ("misses", Value::num(t.cache_misses as f64)),
+            ]),
+        ),
+        ("slab_calls", Value::num(t.slab_calls as f64)),
+    ])
 }
 
 /// Resolve the v1 request's kernel: a registered profile name or an
@@ -1209,6 +1373,11 @@ mod tests {
         }
     }
 
+    /// The stable error code carried in an error response's body.
+    fn code_of(r: &HttpResponse) -> String {
+        Value::parse(&r.body).unwrap().get("code").and_then(Value::as_str).unwrap().to_string()
+    }
+
     #[test]
     fn predict_round_trip_matches_engine() {
         let st = state();
@@ -1823,5 +1992,144 @@ mod tests {
         let a = &v.get("assignments").and_then(Value::as_array).unwrap()[0];
         assert_eq!(a.get("core_mhz").and_then(Value::as_f64), Some(700.0));
         assert_eq!(a.get("mem_mhz").and_then(Value::as_f64), Some(700.0));
+    }
+
+    #[test]
+    fn v2_observations_scores_samples_and_feeds_metrics() {
+        let st = state();
+        let m = Metrics::default();
+        // Feed back the model's own prediction as the "measurement":
+        // a perfectly calibrated sample, so MAPE must be exactly zero.
+        let want = st.engine.predict_one(&counters(), 700.0, 700.0).unwrap();
+        let body = format!(
+            r#"{{"observations":[{{"device":"dev-1","kernel":"VA","core_mhz":700,"mem_mhz":700,"measured_us":{}}}]}}"#,
+            want.time_us
+        );
+        let r = handle(&st, &m, &post("/v2/observations", &body));
+        assert_eq!(r.status, 200, "{}", r.body);
+        let v = Value::parse(&r.body).unwrap();
+        assert_eq!(v.get("count").and_then(Value::as_f64), Some(1.0));
+        assert_eq!(v.get("dropped").and_then(Value::as_f64), Some(0.0));
+        let item = &v.get("results").and_then(Value::as_array).unwrap()[0];
+        // Labels come back canonical even though the kernel was named.
+        assert_eq!(item.get("kernel").and_then(Value::as_str), Some("krn-1"));
+        assert_eq!(item.get("abs_pct_error").and_then(Value::as_f64), Some(0.0));
+
+        // A 2x-slower measurement lands a 50% error in the same series.
+        let body = format!(
+            r#"{{"observations":[{{"device":"dev-1","kernel":"krn-1","core_mhz":700,"mem_mhz":700,"measured_ms":{}}}]}}"#,
+            2.0 * want.time_us / 1e3
+        );
+        let r = handle(&st, &m, &post("/v2/observations", &body));
+        assert_eq!(r.status, 200, "{}", r.body);
+        let series = st.accuracy.snapshot();
+        assert_eq!(series.len(), 1);
+        assert_eq!(series[0].samples, 2);
+        assert!((series[0].mape_pct - 25.0).abs() < 1e-9, "{}", series[0].mape_pct);
+
+        // ... and /metrics now carries the live MAPE gauge.
+        let r = handle(&st, &m, &get("/metrics"));
+        let needle = "model_mape{device=\"dev-1\",kernel=\"krn-1\"} 25.000";
+        assert!(r.body.contains(needle), "{}", r.body);
+        assert!(r.body.contains("model_samples_total{device=\"dev-1\",kernel=\"krn-1\"} 2"));
+    }
+
+    #[test]
+    fn v2_observations_rejects_malformed_batches_atomically() {
+        let st = state();
+        let m = Metrics::default();
+        for (body, status, code) in [
+            (r#"{}"#, 400, "bad_request"),
+            (r#"{"observations":[]}"#, 400, "bad_request"),
+            // Missing measurement field.
+            (
+                r#"{"observations":[{"device":"dev-1","kernel":"VA","core_mhz":700,"mem_mhz":700}]}"#,
+                400,
+                "bad_request",
+            ),
+            // Both measurement fields.
+            (
+                r#"{"observations":[{"device":"dev-1","kernel":"VA","core_mhz":700,"mem_mhz":700,"measured_us":1,"measured_ms":1}]}"#,
+                400,
+                "bad_request",
+            ),
+            // Non-positive measurement and bad frequency.
+            (
+                r#"{"observations":[{"device":"dev-1","kernel":"VA","core_mhz":700,"mem_mhz":700,"measured_us":0}]}"#,
+                400,
+                "bad_request",
+            ),
+            (
+                r#"{"observations":[{"device":"dev-1","kernel":"VA","core_mhz":-5,"mem_mhz":700,"measured_us":1}]}"#,
+                400,
+                "bad_request",
+            ),
+            (
+                r#"{"observations":[{"device":"dev-9","kernel":"VA","core_mhz":700,"mem_mhz":700,"measured_us":1}]}"#,
+                404,
+                "unknown_device",
+            ),
+            (
+                r#"{"observations":[{"device":"dev-1","kernel":"ghost","core_mhz":700,"mem_mhz":700,"measured_us":1}]}"#,
+                404,
+                "unknown_kernel",
+            ),
+            // A good first item must not be ingested when a later item
+            // is broken: validation is all-or-nothing.
+            (
+                r#"{"observations":[
+                    {"device":"dev-1","kernel":"VA","core_mhz":700,"mem_mhz":700,"measured_us":100},
+                    {"device":"dev-1","kernel":"ghost","core_mhz":700,"mem_mhz":700,"measured_us":100}]}"#,
+                404,
+                "unknown_kernel",
+            ),
+        ] {
+            let r = handle(&st, &m, &post("/v2/observations", body));
+            assert_eq!((r.status, code_of(&r).as_str()), (status, code), "{body} -> {}", r.body);
+        }
+        assert_eq!(st.accuracy.total_samples(), 0, "rejected batches must not ingest");
+        // Method check: observations are POST-only.
+        let r = handle(&st, &m, &get("/v2/observations"));
+        assert_eq!((r.status, code_of(&r).as_str()), (405, "method_not_allowed"));
+    }
+
+    #[test]
+    fn debug_traces_dumps_ring_contents_newest_first() {
+        let st = state();
+        let m = Metrics::default();
+        // The handler renders whatever the ring retained; feed it two
+        // synthetic records directly (the server integration test covers
+        // end-to-end capture).
+        for (id, status) in [("req-1", 200u16), ("req-2", 404u16)] {
+            let mut stages_us = [0.0; Stage::COUNT];
+            stages_us[Stage::Compute.index()] = 42.0;
+            st.traces.record(TraceRecord {
+                id: id.to_string(),
+                route: "/v1/predict",
+                status,
+                stages_us,
+                cache_hits: 3,
+                cache_misses: 1,
+                slab_calls: 1,
+            });
+        }
+        let r = handle(&st, &m, &get("/debug/traces"));
+        assert_eq!(r.status, 200, "{}", r.body);
+        let v = Value::parse(&r.body).unwrap();
+        assert_eq!(v.get("count").and_then(Value::as_f64), Some(2.0));
+        assert_eq!(v.get("recorded_total").and_then(Value::as_f64), Some(2.0));
+        let traces = v.get("traces").and_then(Value::as_array).unwrap();
+        assert_eq!(traces[0].get("id").and_then(Value::as_str), Some("req-2"));
+        assert_eq!(traces[1].get("id").and_then(Value::as_str), Some("req-1"));
+        assert_eq!(traces[0].get("status").and_then(Value::as_f64), Some(404.0));
+        let stages = traces[0].get("stages_us").unwrap();
+        assert_eq!(stages.get("compute").and_then(Value::as_f64), Some(42.0));
+        assert_eq!(stages.get("queue").and_then(Value::as_f64), Some(0.0));
+        assert_eq!(traces[0].get("total_us").and_then(Value::as_f64), Some(42.0));
+        let cache = traces[0].get("cache").unwrap();
+        assert_eq!(cache.get("hits").and_then(Value::as_f64), Some(3.0));
+        // Traces are GET-only.
+        let r = handle(&st, &m, &post("/debug/traces", ""));
+        assert_eq!((r.status, code_of(&r).as_str()), (405, "method_not_allowed"));
     }
 }

@@ -53,6 +53,7 @@ use super::http::{self, HttpRequest, HttpResponse};
 use super::json::Value;
 use super::metrics::{Metrics, Route};
 use super::routes::{self, ServiceState};
+use crate::obs::{Stage, TraceRecord, TraceRing, DEFAULT_TRACE_CAPACITY};
 use crate::util::fxhash::FxHashMap;
 
 /// Tunables for [`Service::start`].
@@ -77,6 +78,15 @@ pub struct ServiceConfig {
     /// A peer that stops reading cannot hold a half-written response
     /// (or hang the drain) past this bound without progress.
     pub write_timeout: Duration,
+    /// Slow-trace retention threshold in microseconds (`--slow-us`):
+    /// completed traces whose server-side total is below it are not
+    /// retained for `GET /debug/traces`. 0 retains every trace.
+    pub slow_us: f64,
+    /// Capacity of the slow-trace ring (`--trace-capacity`). 0 disables
+    /// trace retention and per-request cache/slab attribution entirely
+    /// (the bench harness's untraced baseline); `X-Request-Id` echo and
+    /// the per-stage `/metrics` histograms stay on either way.
+    pub trace_capacity: usize,
 }
 
 impl Default for ServiceConfig {
@@ -92,6 +102,8 @@ impl Default for ServiceConfig {
             poll_interval: Duration::from_millis(50),
             idle_timeout: Duration::from_secs(60),
             write_timeout: Duration::from_secs(10),
+            slow_us: 0.0,
+            trace_capacity: DEFAULT_TRACE_CAPACITY,
         }
     }
 }
@@ -225,12 +237,42 @@ struct Work {
     keep_alive: bool,
     req: HttpRequest,
     submitted: Instant,
+    /// Span capture so far (DESIGN.md §13): the request id plus the
+    /// accept and parse stage durations measured in the poll loop.
+    spans: ReqSpans,
+}
+
+/// The poll-loop half of a request's span record.
+struct ReqSpans {
+    /// Echoed as `X-Request-Id` (client-supplied or `req-<n>`).
+    id: String,
+    /// Connection-ready (accept or previous response) → request fully
+    /// buffered: mostly client/network time the server waited out.
+    accept: Duration,
+    /// HTTP head + body framing parse.
+    parse: Duration,
 }
 
 /// A computed response on its way back to the poll loop.
 struct Done {
     conn: u64,
     resp: HttpResponse,
+    trace: PendingTrace,
+}
+
+/// Everything known about a request's trace before the render and
+/// flush stages run in the poll loop, which completes and records it.
+struct PendingTrace {
+    id: String,
+    route: Route,
+    status: u16,
+    accept: Duration,
+    parse: Duration,
+    queue: Duration,
+    compute: Duration,
+    cache_hits: u64,
+    cache_misses: u64,
+    slab_calls: u64,
 }
 
 struct ExecInner {
@@ -346,6 +388,10 @@ struct Conn {
     last_activity: Instant,
     /// Last time a pending write made progress (write-stall bound).
     last_write_progress: Instant,
+    /// When this connection last became ready for a fresh request
+    /// (accept, or the previous response's delivery) — the start of the
+    /// next request's `accept` span.
+    req_wait_start: Instant,
 }
 
 impl Conn {
@@ -363,6 +409,7 @@ impl Conn {
             failed: false,
             last_activity: now,
             last_write_progress: now,
+            req_wait_start: now,
         }
     }
 
@@ -390,7 +437,11 @@ pub struct Service {
 
 impl Service {
     /// Bind, spawn the executor pool and the poll loop, start serving.
-    pub fn start(state: ServiceState, cfg: ServiceConfig) -> Result<Service> {
+    pub fn start(mut state: ServiceState, cfg: ServiceConfig) -> Result<Service> {
+        // The trace ring is sized by the server config, not the state
+        // constructor: rebuild it here so `--trace-capacity 0` really
+        // disables retention and `--slow-us` takes effect.
+        state.traces = Arc::new(TraceRing::new(cfg.trace_capacity, cfg.slow_us));
         let listener =
             TcpListener::bind(&cfg.addr).with_context(|| format!("binding {}", cfg.addr))?;
         listener.set_nonblocking(true).context("listener nonblocking")?;
@@ -469,10 +520,44 @@ impl Drop for Service {
 /// `routes::handle` — socket waiting happens in the poll loop.
 fn exec_loop(shared: Arc<Shared>) {
     while let Some(w) = shared.exec.pop(&shared.metrics) {
+        let queue = w.submitted.elapsed();
+        // Cache/slab attribution only when traces are retained: the
+        // snapshots are a handful of atomic loads, but the untraced
+        // baseline should not pay even those.
+        let before = shared.state.traces.enabled().then(|| {
+            (shared.state.engine.cache_stats(), shared.state.engine.compute_stats())
+        });
+        let compute_start = Instant::now();
         let mut resp = routes::handle(&shared.state, &shared.metrics, &w.req);
+        let compute = compute_start.elapsed();
         shared.metrics.record(w.route, resp.status, w.submitted.elapsed());
         resp.close = resp.close || !w.keep_alive || shared.is_shutdown();
-        shared.done.lock().expect("done list poisoned").push(Done { conn: w.conn, resp });
+        let (cache_hits, cache_misses, slab_calls) = match before {
+            Some((c0, k0)) => {
+                let c1 = shared.state.engine.cache_stats();
+                let k1 = shared.state.engine.compute_stats().since(k0);
+                (
+                    c1.hits.saturating_sub(c0.hits),
+                    c1.misses.saturating_sub(c0.misses),
+                    k1.slab_calls,
+                )
+            }
+            None => (0, 0, 0),
+        };
+        let trace = PendingTrace {
+            id: w.spans.id.clone(),
+            route: w.route,
+            status: resp.status,
+            accept: w.spans.accept,
+            parse: w.spans.parse,
+            queue,
+            compute,
+            cache_hits,
+            cache_misses,
+            slab_calls,
+        };
+        let resp = resp.with_header("X-Request-Id", w.spans.id);
+        shared.done.lock().expect("done list poisoned").push(Done { conn: w.conn, resp, trace });
         shared.waker.wake();
     }
 }
@@ -543,11 +628,17 @@ fn try_dispatch(shared: &Shared, c: &mut Conn, id: u64) {
     if c.executing || c.poisoned || c.close_after_flush || c.failed {
         return;
     }
+    let parse_start = Instant::now();
     match http::try_parse(&c.buf) {
         Ok(Some((req, consumed))) => {
+            let parse = parse_start.elapsed();
+            // Everything since the connection was last ready for a
+            // request is accept/read wait (saturates to zero).
+            let accept = parse_start.duration_since(c.req_wait_start);
             c.buf.drain(..consumed);
             c.last_activity = Instant::now();
             c.executing = true;
+            let id_str = request_id(&shared.state.traces, &req);
             shared.exec.push(
                 Work {
                     conn: id,
@@ -555,6 +646,7 @@ fn try_dispatch(shared: &Shared, c: &mut Conn, id: u64) {
                     keep_alive: req.keep_alive(),
                     req,
                     submitted: Instant::now(),
+                    spans: ReqSpans { id: id_str, accept, parse },
                 },
                 &shared.metrics,
             );
@@ -577,9 +669,55 @@ fn try_dispatch(shared: &Shared, c: &mut Conn, id: u64) {
     }
 }
 
-/// Apply one computed response: buffer it, flush opportunistically, and
-/// chain the next pipelined request if one is already buffered.
-fn deliver(shared: &Shared, c: &mut Conn, id: u64, mut resp: HttpResponse) {
+/// The request id echoed in `X-Request-Id`: the client's own header
+/// when it is a sane token (so distributed traces correlate), else a
+/// server-minted `req-<n>`.
+fn request_id(ring: &TraceRing, req: &HttpRequest) -> String {
+    match req.header("x-request-id") {
+        Some(v) if !v.is_empty() && v.len() <= 64 && v.bytes().all(|b| b.is_ascii_graphic()) => {
+            v.to_string()
+        }
+        _ => format!("req-{}", ring.next_request_id()),
+    }
+}
+
+/// Complete a request's trace with the render and flush stages: feed
+/// the per-stage `/metrics` histograms (always) and the slow-trace
+/// ring (when retention is enabled and the total clears `--slow-us`).
+fn finish_trace(shared: &Shared, t: PendingTrace, render: Duration, flush: Duration) {
+    let m = &shared.metrics;
+    m.record_stage(Stage::Accept, t.accept);
+    m.record_stage(Stage::Parse, t.parse);
+    m.record_stage(Stage::Queue, t.queue);
+    m.record_stage(Stage::Compute, t.compute);
+    m.record_stage(Stage::Render, render);
+    m.record_stage(Stage::Flush, flush);
+    if !shared.state.traces.enabled() {
+        return;
+    }
+    let us = |d: Duration| d.as_secs_f64() * 1e6;
+    let mut stages_us = [0.0; Stage::COUNT];
+    stages_us[Stage::Accept.index()] = us(t.accept);
+    stages_us[Stage::Parse.index()] = us(t.parse);
+    stages_us[Stage::Queue.index()] = us(t.queue);
+    stages_us[Stage::Compute.index()] = us(t.compute);
+    stages_us[Stage::Render.index()] = us(render);
+    stages_us[Stage::Flush.index()] = us(flush);
+    shared.state.traces.record(TraceRecord {
+        id: t.id,
+        route: t.route.name(),
+        status: t.status,
+        stages_us,
+        cache_hits: t.cache_hits,
+        cache_misses: t.cache_misses,
+        slab_calls: t.slab_calls,
+    });
+}
+
+/// Apply one computed response: buffer it, flush opportunistically,
+/// complete the trace, and chain the next pipelined request if one is
+/// already buffered.
+fn deliver(shared: &Shared, c: &mut Conn, id: u64, mut resp: HttpResponse, trace: PendingTrace) {
     c.executing = false;
     if shared.is_shutdown() {
         resp.close = true;
@@ -587,10 +725,19 @@ fn deliver(shared: &Shared, c: &mut Conn, id: u64, mut resp: HttpResponse) {
     if resp.close {
         c.close_after_flush = true;
     }
+    let render_start = Instant::now();
     http::encode_response_into(&resp, &mut c.out);
+    let render = render_start.elapsed();
     c.last_activity = Instant::now();
     c.last_write_progress = Instant::now();
-    if !flush_out(c) {
+    let flush_start = Instant::now();
+    let flush_ok = flush_out(c);
+    // Charged flush time is the synchronous drain only; a slow
+    // consumer's residual bytes trickle out on later poll ticks and are
+    // not attributed (DESIGN.md §13).
+    finish_trace(shared, trace, render, flush_start.elapsed());
+    c.req_wait_start = Instant::now();
+    if !flush_ok {
         return;
     }
     try_dispatch(shared, c, id);
@@ -660,7 +807,7 @@ fn poll_loop(shared: Arc<Shared>, listener: TcpListener, wake_rx: TcpStream) {
         };
         for d in done {
             if let Some(c) = conns.get_mut(&d.conn) {
-                deliver(&shared, c, d.conn, d.resp);
+                deliver(&shared, c, d.conn, d.resp, d.trace);
             }
         }
 
@@ -973,6 +1120,67 @@ mod tests {
         // ephemeral port may be reassigned to a parallel test).
         let _ = c.set_read_timeout(Some(Duration::from_secs(5)));
         assert!(c.get("/healthz").is_err(), "connection must be closed after drain");
+    }
+
+    #[test]
+    fn responses_echo_request_ids_and_retain_traces() {
+        use std::io::Write as _;
+        let cfg = ServiceConfig { slow_us: 0.0, trace_capacity: 8, ..fast_cfg(2, 8) };
+        let svc = Service::start(test_state(), cfg).unwrap();
+        let mut c = Client::connect(&svc.addr()).unwrap();
+        // Server-minted ids are monotone `req-<n>` tokens.
+        let r = c.get("/healthz").unwrap();
+        let id = r.header("x-request-id").expect("id header").to_string();
+        assert!(id.starts_with("req-"), "id {id}");
+        let r2 = c.get("/healthz").unwrap();
+        assert_ne!(r2.header("x-request-id"), Some(id.as_str()));
+        // A sane client-supplied id is echoed verbatim.
+        let mut raw = TcpStream::connect(svc.addr()).unwrap();
+        raw.write_all(
+            b"GET /healthz HTTP/1.1\r\nX-Request-Id: trace-abc123\r\nConnection: close\r\n\r\n",
+        )
+        .unwrap();
+        let mut out = Vec::new();
+        raw.read_to_end(&mut out).unwrap();
+        let text = String::from_utf8_lossy(&out);
+        assert!(text.contains("X-Request-Id: trace-abc123"), "{text}");
+        // All three requests were retained (slow_us 0 keeps everything)
+        // with per-stage breakdowns.
+        let got = svc.shared.state.traces.snapshot();
+        assert_eq!(got.len(), 3);
+        assert_eq!(got[0].id, "trace-abc123"); // newest first
+        assert!(got.iter().all(|t| t.route == "/healthz" && t.status == 200));
+        assert!(got.iter().all(|t| t.total_us() > 0.0));
+        // Stage histograms saw every request across all six stages.
+        let m = svc.metrics();
+        for s in Stage::ALL {
+            assert_eq!(m.stage(s).count(), 3, "stage {}", s.name());
+        }
+        drop(c);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn slow_us_threshold_and_capacity_zero_disable_retention() {
+        // High threshold: /healthz traces (microseconds) never qualify.
+        let cfg = ServiceConfig { slow_us: 5e6, trace_capacity: 8, ..fast_cfg(1, 4) };
+        let svc = Service::start(test_state(), cfg).unwrap();
+        let mut c = Client::connect(&svc.addr()).unwrap();
+        assert_eq!(c.get("/healthz").unwrap().status, 200);
+        assert!(svc.shared.state.traces.snapshot().is_empty());
+        drop(c);
+        svc.shutdown();
+
+        // Capacity 0: retention fully off, the id echo stays.
+        let cfg = ServiceConfig { trace_capacity: 0, ..fast_cfg(1, 4) };
+        let svc = Service::start(test_state(), cfg).unwrap();
+        let mut c = Client::connect(&svc.addr()).unwrap();
+        let r = c.get("/healthz").unwrap();
+        assert!(r.header("x-request-id").is_some());
+        assert!(!svc.shared.state.traces.enabled());
+        assert!(svc.shared.state.traces.snapshot().is_empty());
+        drop(c);
+        svc.shutdown();
     }
 
     #[test]

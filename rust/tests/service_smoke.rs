@@ -1,10 +1,12 @@
-//! Service smoke test (DESIGN.md §9–§11) — the CI job step: boot the
+//! Service smoke test (DESIGN.md §9–§13) — the CI job step: boot the
 //! HTTP server on an ephemeral port, exercise /healthz, the /v1 shim,
 //! the full /v2 handle lifecycle (register device → register kernel →
 //! batch predict → advise) and the /v2/plan fleet planner with the
 //! in-crate client, check the structured error taxonomy (including the
 //! planner's 422 `infeasible`), force the bounded queue to shed a 429,
-//! and verify the graceful drain. No curl needed anywhere.
+//! verify the graceful drain, and walk the observability loop:
+//! X-Request-Id minting, POST /v2/observations → live `model_mape` in
+//! /metrics, and GET /debug/traces span dumps. No curl needed anywhere.
 
 use std::time::{Duration, Instant};
 
@@ -362,6 +364,77 @@ fn forced_backlog_sheds_429_with_retry_after() {
     assert_eq!(holder.get("/healthz").unwrap().status, 200);
 
     drop(holder);
+    svc.shutdown();
+}
+
+/// The observability loop over the wire (DESIGN.md §13): minted
+/// X-Request-Id headers, measured runtimes posted to /v2/observations
+/// surfacing as live `model_mape` gauges, and /debug/traces serving
+/// newest-first span breakdowns for every admitted request.
+#[test]
+fn observations_traces_and_request_ids_round_trip() {
+    let svc = Service::start(state(), cfg(2, 16)).expect("service starts");
+    let mut c = Client::connect(&svc.addr()).unwrap();
+    c.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+
+    // Every response carries a minted request id (client-supplied echo
+    // is covered at unit level in server.rs).
+    let r = c.get("/healthz").unwrap();
+    assert_eq!(r.status, 200);
+    let id = r.header("x-request-id").expect("minted request id");
+    assert!(id.starts_with("req-"), "{id}");
+
+    // Ingest two observations for the same (device, kernel): one
+    // perfectly calibrated, one measured 2x slower than predicted.
+    let want = Engine::native(HwParams::paper_defaults())
+        .predict_one(&counters(), 700.0, 700.0)
+        .unwrap();
+    let body = format!(
+        r#"{{"observations":[
+            {{"device":"dev-1","kernel":"VA","core_mhz":700,"mem_mhz":700,"measured_us":{m}}},
+            {{"device":"dev-1","kernel":"krn-1","core_mhz":700,"mem_mhz":700,"measured_us":{m2}}}]}}"#,
+        m = want.time_us,
+        m2 = 2.0 * want.time_us
+    );
+    let r = c.post("/v2/observations", &body).unwrap();
+    assert_eq!(r.status, 200, "{}", r.body);
+    let v = r.json().unwrap();
+    assert_eq!(v.get("count").and_then(Value::as_f64), Some(2.0));
+    let results = v.get("results").and_then(Value::as_array).unwrap();
+    assert_eq!(results[0].get("abs_pct_error").and_then(Value::as_f64), Some(0.0));
+    let second = results[1].get("abs_pct_error").and_then(Value::as_f64).unwrap();
+    assert!((second - 50.0).abs() < 1e-9, "{second}");
+
+    // /metrics now carries the rolling MAPE ((0 + 50) / 2) and the
+    // per-stage latency histograms the traced requests populated.
+    let m = c.get("/metrics").unwrap();
+    for needle in [
+        "model_mape{device=\"dev-1\",kernel=\"krn-1\"} 25.000",
+        "model_samples_total{device=\"dev-1\",kernel=\"krn-1\"} 2",
+        "service_stage_latency_us_bucket{stage=\"compute\"",
+        "service_latency_us_bucket{route=\"/v2/observations\"",
+    ] {
+        assert!(m.body.contains(needle), "missing `{needle}` in:\n{}", m.body);
+    }
+
+    // /debug/traces retains span breakdowns, newest first — the
+    // /metrics hit above is the most recent completed request.
+    let r = c.get("/debug/traces").unwrap();
+    assert_eq!(r.status, 200);
+    let v = r.json().unwrap();
+    assert!(v.get("count").and_then(Value::as_f64).unwrap() >= 3.0, "{}", r.body);
+    let traces = v.get("traces").and_then(Value::as_array).unwrap();
+    assert_eq!(traces[0].get("route").and_then(Value::as_str), Some("/metrics"));
+    for t in traces {
+        let stages = t.get("stages_us").expect("stage breakdown");
+        for key in ["accept", "parse", "queue", "compute", "render", "flush"] {
+            assert!(stages.get(key).and_then(Value::as_f64).unwrap() >= 0.0, "{key}");
+        }
+        assert!(t.get("total_us").and_then(Value::as_f64).unwrap() > 0.0);
+        assert!(t.get("id").and_then(Value::as_str).is_some());
+    }
+
+    drop(c);
     svc.shutdown();
 }
 
