@@ -124,6 +124,12 @@ fn main() {
     let solve = bench::bench("plan (warm engine cache)", 1, 10, || {
         std::hint::black_box(plan(&engine, &jobs, &cfg).expect("plannable"));
     });
+    // Same fleet with the telemetry clock reads and the provenance pass
+    // disabled: the observability tax on a solve must stay within 10%.
+    let off_cfg = PlannerConfig { telemetry: false, ..cfg.clone() };
+    let solve_off = bench::bench("plan (telemetry off)", 1, 10, || {
+        std::hint::black_box(plan(&engine, &jobs, &off_cfg).expect("plannable"));
+    });
 
     // ---- The gate ----
     let violations = planned.deadline_violations(&jobs);
@@ -149,6 +155,28 @@ fn main() {
         "engine cache: {} hits / {} misses ({} entries)",
         cache.hits, cache.misses, cache.entries
     );
+
+    // ---- Telemetry-overhead gate ----
+    // Spans + provenance must be effectively free: a telemetry-on solve
+    // may cost at most 1.10x the telemetry-off solve of the same fleet.
+    const TELEMETRY_RATIO_LIMIT: f64 = 1.10;
+    // Sub-millisecond solves are noise-dominated; gate on means with an
+    // absolute floor so a fast machine cannot fail on scheduler jitter.
+    let telemetry_ratio = solve.mean_ns / solve_off.mean_ns.max(1.0);
+    let overhead_ms = (solve.mean_ns - solve_off.mean_ns) / 1e6;
+    println!(
+        "telemetry on {:.2} ms vs off {:.2} ms ({telemetry_ratio:.3}x, {overhead_ms:+.3} ms)",
+        solve.mean_ns / 1e6,
+        solve_off.mean_ns / 1e6
+    );
+    assert!(
+        telemetry_ratio <= TELEMETRY_RATIO_LIMIT || overhead_ms <= 0.5,
+        "solver telemetry costs {telemetry_ratio:.3}x (limit {TELEMETRY_RATIO_LIMIT}x, \
+         overhead {overhead_ms:.3} ms)"
+    );
+    // Telemetry is passive: both solves place every job identically.
+    let off_plan = plan(&engine, &jobs, &off_cfg).expect("plannable");
+    assert_eq!(off_plan.total_energy_mj.to_bits(), planned.total_energy_mj.to_bits());
 
     // ---- Candidate-table throughput: scalar vs SoA ----
     // The identical K×D×P workload both ways: every synthetic kernel on
@@ -236,6 +264,8 @@ fn main() {
         ("solve_mean_ms", Value::num(solve.mean_ns / 1e6)),
         ("solve_p50_ms", Value::num(solve.p50_ns / 1e6)),
         ("solve_p99_ms", Value::num(solve.p99_ns / 1e6)),
+        ("solve_telemetry_off_mean_ms", Value::num(solve_off.mean_ns / 1e6)),
+        ("telemetry_ratio", Value::num(telemetry_ratio)),
         ("table_tuples", Value::num(tuples_per_pass as f64)),
         ("scalar_tuples_per_s", Value::num(scalar_tuples_per_s)),
         ("soa_tuples_per_s", Value::num(soa_tuples_per_s)),

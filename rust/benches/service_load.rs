@@ -15,17 +15,18 @@
 //! v1 baseline at p99 (plus a small absolute guard for scheduler
 //! noise on microsecond-scale percentiles) — handle resolution and the
 //! batch envelope are supposed to be bookkeeping, not work. A fourth
-//! phase boots two fresh servers — tracing on (span ring + request
-//! ids) vs. tracing off (`trace_capacity: 0`) — drives the identical
-//! keep-alive workload at both, and asserts the traced p99 stays
+//! phase boots three fresh servers — tracing off (`trace_capacity: 0`),
+//! tracing on (span ring + request ids), and tracing on with the JSONL
+//! event log (`--event-log`) — drives the identical keep-alive workload
+//! at each, and asserts both the traced p99 and the event-log p99 stay
 //! within 1.10× the untraced baseline: observability that taxes the
 //! hot path double-digit percent is observability nobody turns on
 //! (DESIGN.md §13). All percentile sets land in
 //! `BENCH_service_load.json` at the repo root (`latency_us` is the
 //! recorded v1 baseline, `v2_latency_us` the handle path,
 //! `wide_latency_us` the 96-connection phase, `traced_latency_us` /
-//! `untraced_latency_us` the overhead pair) so the trajectory is
-//! tracked across PRs.
+//! `untraced_latency_us` / `events_latency_us` the overhead trio) so
+//! the trajectory is tracked across PRs.
 
 use std::net::SocketAddr;
 use std::time::{Duration, Instant};
@@ -284,15 +285,19 @@ fn main() {
     println!("drained loaded server in {:.0} ms", drain.as_secs_f64() * 1e3);
     assert!(drain < Duration::from_secs(10), "drain took {drain:?}");
 
-    // Phase 4: tracing overhead. Two fresh servers, identical traffic:
-    // one with span capture + ring retention fully on, one with
-    // `trace_capacity: 0` (ring off; stage histograms and request-id
-    // minting stay on — that is the permanent cost of the feature,
-    // the gate prices the *optional* part).
+    // Phase 4: observability overhead. Three fresh servers, identical
+    // traffic: ring off (`trace_capacity: 0` — stage histograms and
+    // request-id minting stay on, that is the permanent cost of the
+    // feature), ring on, and ring on + the JSONL event log (one
+    // request_span record per request through the bounded channel).
     section(&format!(
-        "Tracing overhead: {TRACE_REQUESTS} requests x 2 servers (ring on vs. off) over {CONNECTIONS} connections"
+        "Tracing overhead: {TRACE_REQUESTS} requests x 3 servers (ring off / on / on+events) over {CONNECTIONS} connections"
     ));
-    let trace_phase = |trace_capacity: usize| {
+    let event_path = std::env::temp_dir()
+        .join(format!("gpufreq-service-load-events-{}.jsonl", std::process::id()));
+    let _ = std::fs::remove_file(&event_path);
+    let trace_phase = |trace_capacity: usize, event_log: Option<std::path::PathBuf>| {
+        let events_on = event_log.is_some();
         let svc = Service::start(
             state(),
             ServiceConfig {
@@ -300,6 +305,7 @@ fn main() {
                 queue_capacity: 128,
                 trace_capacity,
                 slow_us: 0.0,
+                event_log,
                 ..ServiceConfig::default()
             },
         )
@@ -330,6 +336,15 @@ fn main() {
         } else {
             assert!(count > 0.0, "traced server retained no traces");
         }
+        if events_on {
+            // Same anti-sleepwalk check for the event log: the gated
+            // server must actually be emitting.
+            let m = c.get("/metrics").expect("metrics");
+            assert!(
+                m.body.contains("service_event_log_enabled 1"),
+                "event-log server reports the sink disabled"
+            );
+        }
         drop(c);
         svc.shutdown();
         phase
@@ -338,13 +353,19 @@ fn main() {
         "v1/predict ring-off",
         CONNECTIONS,
         TRACE_REQUESTS,
-        trace_phase(0),
+        trace_phase(0, None),
     );
     let traced = summarize(
         "v1/predict ring-on",
         CONNECTIONS,
         TRACE_REQUESTS,
-        trace_phase(512),
+        trace_phase(512, None),
+    );
+    let events = summarize(
+        "v1/predict ring-on+events",
+        CONNECTIONS,
+        TRACE_REQUESTS,
+        trace_phase(512, Some(event_path.clone())),
     );
     let trace_ratio = traced.p99_us / untraced.p99_us;
     println!(
@@ -356,6 +377,23 @@ fn main() {
         traced.p99_us,
         untraced.p99_us
     );
+    // The event log rides the same budget: a bounded channel hand-off
+    // per request must stay inside the tracing gate.
+    let events_ratio = events.p99_us / untraced.p99_us;
+    println!(
+        "events/untraced p99 ratio: {events_ratio:.3} (limit {TRACE_RATIO_LIMIT} + {P99_SLACK_US} us slack)"
+    );
+    assert!(
+        events.p99_us <= TRACE_RATIO_LIMIT * untraced.p99_us + P99_SLACK_US,
+        "event-log p99 {:.1} us exceeds {TRACE_RATIO_LIMIT}x the untraced baseline {:.1} us",
+        events.p99_us,
+        untraced.p99_us
+    );
+    // The sink was live: the writer thread flushed real JSONL records.
+    let event_bytes = std::fs::metadata(&event_path).map(|m| m.len()).unwrap_or(0);
+    assert!(event_bytes > 0, "event log is empty after a {TRACE_REQUESTS}-request phase");
+    println!("event log: {event_bytes} bytes of JSONL");
+    let _ = std::fs::remove_file(&event_path);
 
     section("Admission control: forced backlog sheds 429");
     // 1 worker + 2-deep queue: a pinned connection and two idle queued
@@ -422,6 +460,8 @@ fn main() {
         ("traced_latency_us", latency_json(&traced)),
         ("traced_p99_over_untraced_p99", Value::num(trace_ratio)),
         ("trace_ratio_limit", Value::num(TRACE_RATIO_LIMIT)),
+        ("events_latency_us", latency_json(&events)),
+        ("events_p99_over_untraced_p99", Value::num(events_ratio)),
         ("shed_429", Value::num(shed_429 as f64)),
         ("drain_ms", Value::num(drain.as_secs_f64() * 1e3)),
     ]);

@@ -63,9 +63,11 @@ COMMANDS:
                           POST /v2/observations (live model-accuracy MAPE);
                           v1 (compat shim): POST /v1/predict · /v1/grid ·
                           /v1/advise; GET /healthz · /metrics ·
-                          /debug/traces (slow-trace ring, DESIGN.md
-                          §9–§13). Runs until stdin closes (EOF drains
-                          gracefully)
+                          /debug/traces (slow-trace ring) ·
+                          /debug/plans (plan provenance ring) ·
+                          /debug/drift (model drift states) —
+                          DESIGN.md §9–§13. Runs until stdin closes
+                          (EOF drains gracefully)
   stream-demo             Demo the streaming prediction path (always uses the
                           PJRT batching backend; --backend is ignored)
   help                    Show this message
@@ -96,6 +98,20 @@ OPTIONS:
   --trace-capacity <N>    serve: slow-trace ring size; 0 disables retention
                           entirely — stage histograms and X-Request-Id stay
                           on (default 256)
+  --explain               plan: print the solver telemetry (plan id, phase
+                          timings, search counters) and the per-job
+                          provenance — deadline slack, energy saved vs. the
+                          max-frequency point, and the runner-up frequency
+                          with the constraint that rejected it
+  --plan-ring <N>         serve: plan-provenance ring size for
+                          GET /debug/plans; 0 disables retention
+                          (default 64)
+  --event-log <PATH>      serve: append structured JSONL events
+                          (request_span · solve · observation ·
+                          drift_transition) to PATH; off by default. A
+                          bounded queue feeds a dedicated writer thread —
+                          overflow is dropped and counted in /metrics,
+                          never blocking a request
 ";
 
 /// Parsed command line.
@@ -116,6 +132,9 @@ pub struct Args {
     pub queue_depth: usize,
     pub slow_us: f64,
     pub trace_capacity: usize,
+    pub explain: bool,
+    pub plan_ring: usize,
+    pub event_log: Option<PathBuf>,
 }
 
 impl Default for Args {
@@ -136,6 +155,9 @@ impl Default for Args {
             queue_depth: 64,
             slow_us: 0.0,
             trace_capacity: crate::obs::DEFAULT_TRACE_CAPACITY,
+            explain: false,
+            plan_ring: crate::service::DEFAULT_PLAN_RING,
+            event_log: None,
         }
     }
 }
@@ -223,6 +245,18 @@ pub fn parse_args(argv: &[String]) -> Result<Args> {
                     .context("--trace-capacity needs a number")?
                     .parse()
                     .context("--trace-capacity must be an integer")?
+            }
+            "--explain" => args.explain = true,
+            "--plan-ring" => {
+                args.plan_ring = it
+                    .next()
+                    .context("--plan-ring needs a number")?
+                    .parse()
+                    .context("--plan-ring must be an integer")?
+            }
+            "--event-log" => {
+                args.event_log =
+                    Some(PathBuf::from(it.next().context("--event-log needs a path")?))
             }
             flag if flag.starts_with("--") => bail!("unknown flag {flag}"),
             pos => args.positional.push(pos.to_string()),
@@ -741,6 +775,58 @@ fn run_plan(args: &Args, cfg: &Config) -> Result<()> {
         naive.total_energy_mj,
         naive.deadline_violations(&jobs)
     );
+    if args.explain {
+        let r = &planned.report;
+        println!(
+            "SOLVE: {} · {:.0} us (build {:.0} · greedy {:.0} · repair {:.0} · swap {:.0})",
+            r.plan_id_str(),
+            r.total_us,
+            r.build_us,
+            r.greedy_us,
+            r.repair_us,
+            r.swap_us
+        );
+        println!(
+            "       {} candidates · {} slab calls · relocations {}/{} · swaps {}/{} (accepted/tried)",
+            r.candidates_evaluated,
+            r.slab_calls,
+            r.relocations_accepted,
+            r.relocations_tried,
+            r.swaps_accepted,
+            r.swaps_tried
+        );
+        let mut t = crate::report::Table::new(
+            "Plan provenance (negative d_mJ = energy saved vs. running flat-out)",
+            &["job", "slack_us", "d_mJ vs max", "runner-up", "ru time_us", "ru mJ", "rejected by"],
+        );
+        for e in &r.explains {
+            t.row(vec![
+                jobs[e.job].name.clone(),
+                match e.deadline_slack_us {
+                    Some(s) => format!("{s:.1}"),
+                    None => "-".to_string(),
+                },
+                format!("{:+.2}", e.energy_delta_vs_max_mj),
+                match e.runner_up {
+                    Some(u) => format!("{:.0}/{:.0} MHz", u.point.core_mhz, u.point.mem_mhz),
+                    None => "-".to_string(),
+                },
+                match e.runner_up {
+                    Some(u) => format!("{:.1}", u.time_us),
+                    None => "-".to_string(),
+                },
+                match e.runner_up {
+                    Some(u) => format!("{:.2}", u.energy_mj),
+                    None => "-".to_string(),
+                },
+                match e.runner_up {
+                    Some(u) => u.rejected_by.to_string(),
+                    None => "-".to_string(),
+                },
+            ]);
+        }
+        print_table(&t, args.csv);
+    }
     print_cache_line(&engine);
     Ok(())
 }
@@ -780,12 +866,14 @@ fn run_serve(args: &Args, cfg: &Config) -> Result<()> {
             queue_capacity: args.queue_depth,
             slow_us: args.slow_us,
             trace_capacity: args.trace_capacity,
+            plan_ring: args.plan_ring,
+            event_log: args.event_log.clone(),
             ..ServiceConfig::default()
         },
     )?;
     println!("gpufreq service listening on http://{}", service.addr());
     println!("  v2     : POST+GET /v2/devices · POST+GET /v2/kernels · POST /v2/predict (batch) · POST /v2/advise · POST /v2/plan · POST /v2/observations");
-    println!("  v1+ops : POST /v1/predict · POST /v1/grid · POST /v1/advise · GET /healthz · GET /metrics · GET /debug/traces");
+    println!("  v1+ops : POST /v1/predict · POST /v1/grid · POST /v1/advise · GET /healthz · GET /metrics · GET /debug/traces · GET /debug/plans · GET /debug/drift");
     if args.trace_capacity == 0 {
         println!("  traces : disabled (--trace-capacity 0)");
     } else {
@@ -793,6 +881,15 @@ fn run_serve(args: &Args, cfg: &Config) -> Result<()> {
             "  traces : ring of {} · retaining requests ≥ {:.0} µs (--slow-us)",
             args.trace_capacity, args.slow_us
         );
+    }
+    if args.plan_ring == 0 {
+        println!("  plans  : provenance disabled (--plan-ring 0)");
+    } else {
+        println!("  plans  : provenance ring of {} solves (--plan-ring)", args.plan_ring);
+    }
+    match &args.event_log {
+        Some(p) => println!("  events : JSONL -> {} (--event-log)", p.display()),
+        None => println!("  events : off (enable with --event-log PATH)"),
     }
     println!(
         "  config : {} kernels · backend {} · {} executors · admission credit {}+{}",
@@ -968,9 +1065,9 @@ mod tests {
             "validate", "report", "advise", "plan", "serve", "stream-demo",
             "dev-<n>", "krn-<n>", "/v2/predict", "/v2/devices", "/v2/kernels",
             "/v2/advise", "/v2/plan", "/v2/observations", "/v1/predict",
-            "/debug/traces", "--jobs", "--device-cap",
+            "/debug/traces", "/debug/plans", "/debug/drift", "--jobs", "--device-cap",
             "--objective", "--queue-depth", "--addr", "--backend", "--workers",
-            "--slow-us", "--trace-capacity",
+            "--slow-us", "--trace-capacity", "--explain", "--plan-ring", "--event-log",
         ];
         for needle in needles {
             assert!(USAGE.contains(needle), "USAGE is missing `{needle}`");
@@ -979,23 +1076,27 @@ mod tests {
 
     #[test]
     fn parses_plan_flags() {
-        let a = parse_args(&argv("plan --jobs 100 --device-cap 8 --objective edp")).unwrap();
+        let a =
+            parse_args(&argv("plan --jobs 100 --device-cap 8 --objective edp --explain")).unwrap();
         assert_eq!(a.command, "plan");
         assert_eq!(a.jobs, 100);
         assert_eq!(a.device_cap, 8);
         assert_eq!(a.objective, "edp");
+        assert!(a.explain);
         assert!(parse_args(&argv("plan --jobs lots")).is_err());
         assert!(parse_args(&argv("plan --device-cap some")).is_err());
-        // Defaults: a 24-job fleet, balanced caps.
+        // Defaults: a 24-job fleet, balanced caps, no provenance dump.
         let d = Args::default();
         assert_eq!(d.jobs, 24);
         assert_eq!(d.device_cap, 0);
+        assert!(!d.explain);
     }
 
     #[test]
     fn parses_serve_flags() {
         let a = parse_args(&argv(
-            "serve --addr 0.0.0.0:9000 --queue-depth 128 --slow-us 250.5 --trace-capacity 32",
+            "serve --addr 0.0.0.0:9000 --queue-depth 128 --slow-us 250.5 --trace-capacity 32 \
+             --plan-ring 16 --event-log /tmp/events.jsonl",
         ))
         .unwrap();
         assert_eq!(a.command, "serve");
@@ -1003,16 +1104,23 @@ mod tests {
         assert_eq!(a.queue_depth, 128);
         assert_eq!(a.slow_us, 250.5);
         assert_eq!(a.trace_capacity, 32);
+        assert_eq!(a.plan_ring, 16);
+        assert_eq!(a.event_log.as_deref(), Some(std::path::Path::new("/tmp/events.jsonl")));
         assert!(parse_args(&argv("serve --queue-depth lots")).is_err());
         assert!(parse_args(&argv("serve --slow-us soon")).is_err());
         assert!(parse_args(&argv("serve --slow-us -1")).is_err());
         assert!(parse_args(&argv("serve --slow-us inf")).is_err());
         assert!(parse_args(&argv("serve --trace-capacity lots")).is_err());
-        // Defaults are loopback + a 64-deep queue, tracing everything.
+        assert!(parse_args(&argv("serve --plan-ring lots")).is_err());
+        assert!(parse_args(&argv("serve --event-log")).is_err());
+        // Defaults are loopback + a 64-deep queue, tracing everything,
+        // a 64-solve provenance ring, no event log.
         let d = Args::default();
         assert_eq!(d.addr, "127.0.0.1:8077");
         assert_eq!(d.queue_depth, 64);
         assert_eq!(d.slow_us, 0.0);
         assert_eq!(d.trace_capacity, 256);
+        assert_eq!(d.plan_ring, 64);
+        assert!(d.event_log.is_none());
     }
 }

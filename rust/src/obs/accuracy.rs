@@ -11,7 +11,10 @@
 //! leaves budget; this layer only measures.
 
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
 use std::sync::Mutex;
+
+use crate::obs::drift::{DriftConfig, DriftState};
 
 /// Default rolling-window length per (device, kernel) series.
 pub const DEFAULT_ERROR_WINDOW: usize = 256;
@@ -31,10 +34,37 @@ pub struct AccuracySeries {
     pub kernel: String,
     /// Mean absolute percent error over the current window.
     pub mape_pct: f64,
+    /// EWMA of the absolute percent error (reacts faster than the
+    /// window mean; drives the drift state machine).
+    pub ewma_pct: f64,
+    /// Current drift classification with hysteresis applied.
+    pub state: DriftState,
     /// Samples currently in the window (≤ the configured window).
     pub window: usize,
     /// Total samples ever ingested for this series.
     pub samples: u64,
+}
+
+/// The outcome of folding one sample: the error it contributed, the
+/// updated EWMA, and the drift transition (if any) it caused.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Observation {
+    /// Absolute percent error of this sample.
+    pub err_pct: f64,
+    /// EWMA of abs-%-error after folding this sample in.
+    pub ewma_pct: f64,
+    /// Drift state before this sample.
+    pub prev_state: DriftState,
+    /// Drift state after this sample (== `prev_state` unless the
+    /// sample caused a transition).
+    pub state: DriftState,
+}
+
+impl Observation {
+    /// Whether this sample moved the drift state machine.
+    pub fn transitioned(&self) -> bool {
+        self.prev_state != self.state
+    }
 }
 
 #[derive(Debug)]
@@ -43,6 +73,8 @@ struct Series {
     kernel: String,
     errors: VecDeque<f64>,
     samples: u64,
+    ewma: Option<f64>,
+    state: DriftState,
 }
 
 /// Rolling per-(device, kernel) error windows. Ingest is mutex-guarded
@@ -52,7 +84,11 @@ struct Series {
 #[derive(Debug)]
 pub struct AccuracyTracker {
     window: usize,
+    drift: DriftConfig,
     series: Mutex<Vec<Series>>,
+    /// Samples dropped because the series table was at [`MAX_SERIES`]
+    /// and the (device, kernel) key was new.
+    dropped: AtomicU64,
 }
 
 impl Default for AccuracyTracker {
@@ -63,12 +99,27 @@ impl Default for AccuracyTracker {
 
 impl AccuracyTracker {
     pub fn new(window: usize) -> AccuracyTracker {
-        AccuracyTracker { window: window.max(1), series: Mutex::new(Vec::new()) }
+        AccuracyTracker::with_drift(window, DriftConfig::default())
+    }
+
+    pub fn with_drift(window: usize, drift: DriftConfig) -> AccuracyTracker {
+        AccuracyTracker {
+            window: window.max(1),
+            drift,
+            series: Mutex::new(Vec::new()),
+            dropped: AtomicU64::new(0),
+        }
     }
 
     /// The configured rolling-window length.
     pub fn window(&self) -> usize {
         self.window
+    }
+
+    /// Samples dropped at the [`MAX_SERIES`] bound (cumulative) — the
+    /// `model_samples_dropped_total` counter in `/metrics`.
+    pub fn dropped_total(&self) -> u64 {
+        self.dropped.load(Relaxed)
     }
 
     /// Fold one measured sample into the (device, kernel) series and
@@ -84,12 +135,27 @@ impl AccuracyTracker {
         predicted_us: f64,
         measured_us: f64,
     ) -> Option<f64> {
+        self.observe_detailed(device, kernel, predicted_us, measured_us).map(|o| o.err_pct)
+    }
+
+    /// [`observe`](AccuracyTracker::observe) with the full outcome:
+    /// the sample's error, the updated drift EWMA, and the drift
+    /// transition (if any) — the event log emits a `drift_transition`
+    /// record when `Observation::transitioned()` reports one.
+    pub fn observe_detailed(
+        &self,
+        device: &str,
+        kernel: &str,
+        predicted_us: f64,
+        measured_us: f64,
+    ) -> Option<Observation> {
         let err_pct = ((predicted_us - measured_us) / measured_us).abs() * 100.0;
         let mut g = self.series.lock().expect("accuracy series poisoned");
         let idx = match g.iter().position(|s| s.device == device && s.kernel == kernel) {
             Some(i) => i,
             None => {
                 if g.len() >= MAX_SERIES {
+                    self.dropped.fetch_add(1, Relaxed);
                     return None;
                 }
                 g.push(Series {
@@ -97,6 +163,8 @@ impl AccuracyTracker {
                     kernel: kernel.to_string(),
                     errors: VecDeque::with_capacity(self.window.min(64)),
                     samples: 0,
+                    ewma: None,
+                    state: DriftState::Ok,
                 });
                 g.len() - 1
             }
@@ -107,7 +175,11 @@ impl AccuracyTracker {
         }
         slot.errors.push_back(err_pct);
         slot.samples += 1;
-        Some(err_pct)
+        let ewma_pct = self.drift.fold(slot.ewma, err_pct);
+        slot.ewma = Some(ewma_pct);
+        let prev_state = slot.state;
+        slot.state = self.drift.step(prev_state, ewma_pct);
+        Some(Observation { err_pct, ewma_pct, prev_state, state: slot.state })
     }
 
     /// Every series, in first-observation order, with its current MAPE.
@@ -122,10 +194,23 @@ impl AccuracyTracker {
                 } else {
                     s.errors.iter().sum::<f64>() / s.errors.len() as f64
                 },
+                ewma_pct: s.ewma.unwrap_or(0.0),
+                state: s.state,
                 window: s.errors.len(),
                 samples: s.samples,
             })
             .collect()
+    }
+
+    /// [`snapshot`](AccuracyTracker::snapshot) sorted worst-first:
+    /// highest drift state, then highest EWMA — the `/debug/drift`
+    /// ordering (the series most in need of a refit leads).
+    pub fn drift_snapshot(&self) -> Vec<AccuracySeries> {
+        let mut snap = self.snapshot();
+        snap.sort_by(|a, b| {
+            b.state.cmp(&a.state).then(b.ewma_pct.total_cmp(&a.ewma_pct))
+        });
+        snap
     }
 
     /// Total samples ingested across every series.
@@ -182,5 +267,55 @@ mod tests {
         assert_eq!(t.observe("d", "k", 80.0, 100.0), Some(20.0));
         assert_eq!(t.observe("d", "k", 120.0, 100.0), Some(20.0));
         assert!((t.snapshot()[0].mape_pct - 20.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ewma_escalates_the_drift_state_and_reports_transitions() {
+        let t = AccuracyTracker::default();
+        // First sample seeds the EWMA directly: 30% lands in Warn.
+        let o = t.observe_detailed("d", "k", 130.0, 100.0).unwrap();
+        assert_eq!(o.err_pct, 30.0);
+        assert_eq!(o.ewma_pct, 30.0);
+        assert_eq!(o.prev_state, DriftState::Ok);
+        assert_eq!(o.state, DriftState::Critical);
+        assert!(o.transitioned());
+        // A perfect sample decays the EWMA but hysteresis holds state.
+        let o2 = t.observe_detailed("d", "k", 100.0, 100.0).unwrap();
+        assert!((o2.ewma_pct - 27.0).abs() < 1e-12);
+        assert_eq!(o2.state, DriftState::Critical);
+        assert!(!o2.transitioned());
+        let snap = t.snapshot();
+        assert_eq!(snap[0].state, DriftState::Critical);
+        assert!((snap[0].ewma_pct - 27.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn drift_snapshot_orders_worst_first() {
+        let t = AccuracyTracker::default();
+        t.observe("dev-1", "krn-1", 101.0, 100.0); // 1% → ok
+        t.observe("dev-1", "krn-2", 140.0, 100.0); // 40% → critical
+        t.observe("dev-2", "krn-1", 115.0, 100.0); // 15% → warn
+        let snap = t.drift_snapshot();
+        assert_eq!(snap[0].kernel, "krn-2");
+        assert_eq!(snap[0].state, DriftState::Critical);
+        assert_eq!(snap[1].device, "dev-2");
+        assert_eq!(snap[1].state, DriftState::Warn);
+        assert_eq!(snap[2].state, DriftState::Ok);
+    }
+
+    #[test]
+    fn samples_past_the_series_bound_are_counted_not_silent() {
+        let t = AccuracyTracker::default();
+        assert_eq!(t.dropped_total(), 0);
+        // Fill the table to the bound, then present a new key: the
+        // sample must be refused AND counted.
+        for i in 0..MAX_SERIES {
+            t.observe("dev", &format!("krn-{i}"), 100.0, 100.0);
+        }
+        assert_eq!(t.observe("dev", "krn-overflow", 100.0, 100.0), None);
+        assert_eq!(t.dropped_total(), 1);
+        // Existing series still ingest fine past the bound.
+        assert!(t.observe("dev", "krn-0", 100.0, 100.0).is_some());
+        assert_eq!(t.dropped_total(), 1);
     }
 }

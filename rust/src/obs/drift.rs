@@ -1,0 +1,161 @@
+//! Model-drift state machine (DESIGN.md §13): an EWMA of
+//! absolute-percent-error classified ok / warn / critical with
+//! hysteresis.
+//!
+//! The rolling MAPE window in [`crate::obs::accuracy`] answers "how
+//! accurate is the model right now"; this layer answers "has the model
+//! *left budget*" — the trigger the ROADMAP's calibration-refit loop
+//! consumes. The EWMA discounts old errors geometrically (a window
+//! mean reacts a full window late), and the de-escalation thresholds
+//! sit `hysteresis_pct` below the escalation thresholds so a series
+//! oscillating around a boundary does not flap between states.
+
+/// Drift severity for one (device, kernel) accuracy series.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum DriftState {
+    /// EWMA within budget.
+    Ok,
+    /// EWMA over the warn threshold — watch, recalibration advised.
+    Warn,
+    /// EWMA over the critical threshold — model output untrustworthy
+    /// for this series until refit.
+    Critical,
+}
+
+impl DriftState {
+    pub fn name(self) -> &'static str {
+        match self {
+            DriftState::Ok => "ok",
+            DriftState::Warn => "warn",
+            DriftState::Critical => "critical",
+        }
+    }
+
+    /// Numeric encoding for the `model_drift_state` gauge
+    /// (0 = ok, 1 = warn, 2 = critical).
+    pub fn gauge(self) -> u64 {
+        match self {
+            DriftState::Ok => 0,
+            DriftState::Warn => 1,
+            DriftState::Critical => 2,
+        }
+    }
+}
+
+/// Thresholds for the drift state machine. Defaults key off the
+/// paper's headline accuracy: the model validates at ≈3.5% mean error
+/// (Table VII), so a sustained 10% EWMA is drift worth flagging and
+/// 25% means the model is no longer describing this series.
+#[derive(Debug, Clone, Copy)]
+pub struct DriftConfig {
+    /// EWMA smoothing factor in (0, 1]: weight of the newest error.
+    pub alpha: f64,
+    /// Escalate Ok → Warn at this EWMA abs-%-error.
+    pub warn_pct: f64,
+    /// Escalate → Critical at this EWMA abs-%-error.
+    pub critical_pct: f64,
+    /// De-escalate only once the EWMA falls this far *below* the
+    /// threshold it crossed, so boundary noise cannot flap the state.
+    pub hysteresis_pct: f64,
+}
+
+impl Default for DriftConfig {
+    fn default() -> Self {
+        DriftConfig { alpha: 0.1, warn_pct: 10.0, critical_pct: 25.0, hysteresis_pct: 2.0 }
+    }
+}
+
+impl DriftConfig {
+    /// Fold one absolute-percent-error sample into the EWMA. The first
+    /// sample seeds the average directly.
+    pub fn fold(&self, ewma: Option<f64>, err_pct: f64) -> f64 {
+        match ewma {
+            None => err_pct,
+            Some(prev) => self.alpha * err_pct + (1.0 - self.alpha) * prev,
+        }
+    }
+
+    /// One transition of the hysteresis state machine: escalation uses
+    /// the raw thresholds, de-escalation requires clearing them by
+    /// `hysteresis_pct`.
+    pub fn step(&self, state: DriftState, ewma_pct: f64) -> DriftState {
+        match state {
+            DriftState::Ok => {
+                if ewma_pct >= self.critical_pct {
+                    DriftState::Critical
+                } else if ewma_pct >= self.warn_pct {
+                    DriftState::Warn
+                } else {
+                    DriftState::Ok
+                }
+            }
+            DriftState::Warn => {
+                if ewma_pct >= self.critical_pct {
+                    DriftState::Critical
+                } else if ewma_pct < self.warn_pct - self.hysteresis_pct {
+                    DriftState::Ok
+                } else {
+                    DriftState::Warn
+                }
+            }
+            DriftState::Critical => {
+                if ewma_pct < self.critical_pct - self.hysteresis_pct {
+                    // Re-classify against the remaining thresholds
+                    // rather than forcing a stop at Warn.
+                    if ewma_pct < self.warn_pct - self.hysteresis_pct {
+                        DriftState::Ok
+                    } else {
+                        DriftState::Warn
+                    }
+                } else {
+                    DriftState::Critical
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gauge_and_names_are_stable() {
+        assert_eq!(DriftState::Ok.gauge(), 0);
+        assert_eq!(DriftState::Warn.gauge(), 1);
+        assert_eq!(DriftState::Critical.gauge(), 2);
+        assert_eq!(DriftState::Warn.name(), "warn");
+    }
+
+    #[test]
+    fn ewma_seeds_then_discounts_geometrically() {
+        let cfg = DriftConfig::default();
+        let e0 = cfg.fold(None, 8.0);
+        assert_eq!(e0, 8.0);
+        let e1 = cfg.fold(Some(e0), 18.0);
+        assert!((e1 - (0.1 * 18.0 + 0.9 * 8.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn escalation_uses_raw_thresholds() {
+        let cfg = DriftConfig::default();
+        assert_eq!(cfg.step(DriftState::Ok, 9.9), DriftState::Ok);
+        assert_eq!(cfg.step(DriftState::Ok, 10.0), DriftState::Warn);
+        assert_eq!(cfg.step(DriftState::Ok, 25.0), DriftState::Critical);
+        assert_eq!(cfg.step(DriftState::Warn, 25.0), DriftState::Critical);
+    }
+
+    #[test]
+    fn deescalation_requires_clearing_the_hysteresis_band() {
+        let cfg = DriftConfig::default();
+        // Warn holds inside the band [8, 10), recovers below 8.
+        assert_eq!(cfg.step(DriftState::Warn, 9.0), DriftState::Warn);
+        assert_eq!(cfg.step(DriftState::Warn, 8.0), DriftState::Warn);
+        assert_eq!(cfg.step(DriftState::Warn, 7.9), DriftState::Ok);
+        // Critical holds inside [23, 25), drops to Warn below 23, and
+        // straight to Ok when fully recovered.
+        assert_eq!(cfg.step(DriftState::Critical, 24.0), DriftState::Critical);
+        assert_eq!(cfg.step(DriftState::Critical, 22.9), DriftState::Warn);
+        assert_eq!(cfg.step(DriftState::Critical, 1.0), DriftState::Ok);
+    }
+}

@@ -1,0 +1,160 @@
+//! Structured wide-event log (DESIGN.md §13): an opt-in JSONL sink
+//! behind a bounded channel and a dedicated writer thread.
+//!
+//! The serving and solver hot paths must never block on disk, so
+//! `emit` is a `try_send`: when the channel is full (or the writer has
+//! exited on an I/O error) the event is *dropped and counted* —
+//! `events_dropped_total` in `/metrics` makes the loss visible. Each
+//! event is one pre-rendered JSON line; this module deliberately takes
+//! opaque `String` lines rather than a JSON value type, keeping `obs`
+//! below `service` in the crate graph.
+
+use std::fs::{File, OpenOptions};
+use std::io::{BufWriter, Write};
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+/// Default bounded-channel depth between emitters and the writer.
+pub const DEFAULT_EVENT_QUEUE: usize = 1024;
+
+#[derive(Debug, Default)]
+struct Counters {
+    emitted: AtomicU64,
+    dropped: AtomicU64,
+}
+
+/// Handle to the event-log writer. Cloning is cheap (the channel
+/// sender and counters are shared); dropping the *last* handle closes
+/// the channel, which flushes and joins the writer thread.
+#[derive(Debug)]
+pub struct EventSink {
+    tx: Option<SyncSender<String>>,
+    counters: Arc<Counters>,
+    writer: Option<JoinHandle<()>>,
+}
+
+impl EventSink {
+    /// Open (append/create) `path` and start the writer thread.
+    pub fn to_path(path: &Path) -> std::io::Result<EventSink> {
+        let file = OpenOptions::new().create(true).append(true).open(path)?;
+        Ok(EventSink::start(file, DEFAULT_EVENT_QUEUE))
+    }
+
+    /// Start a sink writing to an already-open file with a queue of
+    /// `depth` pending events.
+    pub fn start(file: File, depth: usize) -> EventSink {
+        let (tx, rx) = sync_channel::<String>(depth.max(1));
+        let writer = std::thread::Builder::new()
+            .name("gpufreq-events".into())
+            .spawn(move || writer_loop(rx, file))
+            .expect("spawning the event-log writer");
+        EventSink { tx: Some(tx), counters: Arc::new(Counters::default()), writer: Some(writer) }
+    }
+
+    /// Queue one pre-rendered JSON line. Never blocks: a full queue or
+    /// a dead writer drops the event and bumps the drop counter.
+    pub fn emit(&self, line: String) {
+        let Some(tx) = &self.tx else {
+            self.counters.dropped.fetch_add(1, Relaxed);
+            return;
+        };
+        match tx.try_send(line) {
+            Ok(()) => {
+                self.counters.emitted.fetch_add(1, Relaxed);
+            }
+            Err(TrySendError::Full(_)) | Err(TrySendError::Disconnected(_)) => {
+                self.counters.dropped.fetch_add(1, Relaxed);
+            }
+        }
+    }
+
+    /// Events accepted onto the queue (cumulative).
+    pub fn emitted_total(&self) -> u64 {
+        self.counters.emitted.load(Relaxed)
+    }
+
+    /// Events dropped to backpressure or writer death (cumulative).
+    pub fn dropped_total(&self) -> u64 {
+        self.counters.dropped.load(Relaxed)
+    }
+}
+
+impl Drop for EventSink {
+    fn drop(&mut self) {
+        // Close the channel first so the writer's `recv` returns, then
+        // join it — a deterministic flush on shutdown.
+        self.tx.take();
+        if let Some(h) = self.writer.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Drain the channel into the file, batching what is already queued
+/// between flushes so a burst costs one syscall, not one per event.
+fn writer_loop(rx: Receiver<String>, file: File) {
+    let mut out = BufWriter::new(file);
+    while let Ok(line) = rx.recv() {
+        if writeln!(out, "{line}").is_err() {
+            return; // disk gone; emitters keep counting drops
+        }
+        // Opportunistically drain whatever queued behind this event.
+        while let Ok(more) = rx.try_recv() {
+            if writeln!(out, "{more}").is_err() {
+                return;
+            }
+        }
+        if out.flush().is_err() {
+            return;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn temp_path(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("gpufreq-events-{}-{name}.jsonl", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn events_land_in_the_file_one_line_each() {
+        let path = temp_path("basic");
+        let _ = std::fs::remove_file(&path);
+        {
+            let sink = EventSink::to_path(&path).unwrap();
+            sink.emit(r#"{"event":"a"}"#.to_string());
+            sink.emit(r#"{"event":"b"}"#.to_string());
+            assert_eq!(sink.emitted_total(), 2);
+            // Drop flushes and joins the writer.
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines, [r#"{"event":"a"}"#, r#"{"event":"b"}"#]);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn full_queue_drops_and_counts_instead_of_blocking() {
+        // A depth-1 queue under a 10k burst forces backpressure
+        // regardless of writer speed; every emit must be accounted
+        // as either accepted or dropped — never blocked or lost.
+        let path = temp_path("drops");
+        let _ = std::fs::remove_file(&path);
+        let file = File::create(&path).unwrap();
+        let sink = EventSink::start(file, 1);
+        for i in 0..10_000 {
+            sink.emit(format!(r#"{{"event":"spam","i":{i}}}"#));
+        }
+        // With a queue of 1 and a real writer racing, totals must
+        // account for every emit exactly once.
+        assert_eq!(sink.emitted_total() + sink.dropped_total(), 10_000);
+        let _ = std::fs::remove_file(&path);
+    }
+}

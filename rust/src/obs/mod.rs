@@ -20,12 +20,31 @@
 //!   `model_mape{device,kernel}` gauges in `/metrics` — the offline
 //!   benchmark number becomes a monitored production SLO.
 //!
+//! Three more members round out the observability layer:
+//!
+//! * [`ring`] — the wait-free fixed-capacity snapshot ring the trace
+//!   ring is built on, generalized ([`Ring<T>`]) so plan provenance
+//!   (`GET /debug/plans`) retains solve history the same way.
+//! * [`drift`] — an EWMA-of-error state machine (ok / warn /
+//!   critical, with hysteresis) layered on the accuracy tracker:
+//!   the `model_drift_state` gauge and `GET /debug/drift` that tell
+//!   the calibration loop *which* series needs a refit.
+//! * [`events`] — the opt-in `--event-log` JSONL sink: a bounded
+//!   channel into a dedicated writer thread that never blocks the
+//!   poll loop or the solver (overflow is dropped and counted).
+//!
 //! This module deliberately sits *below* `service` in the crate graph
 //! (it knows nothing about HTTP or routes), so the engine and future
 //! calibration passes can consume the same signals.
 
 pub mod accuracy;
+pub mod drift;
+pub mod events;
+pub mod ring;
 pub mod trace;
 
-pub use accuracy::{AccuracySeries, AccuracyTracker, DEFAULT_ERROR_WINDOW};
+pub use accuracy::{AccuracySeries, AccuracyTracker, Observation, DEFAULT_ERROR_WINDOW};
+pub use drift::{DriftConfig, DriftState};
+pub use events::{EventSink, DEFAULT_EVENT_QUEUE};
+pub use ring::Ring;
 pub use trace::{Stage, TraceRecord, TraceRing, DEFAULT_TRACE_CAPACITY};

@@ -1,0 +1,120 @@
+//! Generalized fixed-capacity snapshot ring (DESIGN.md §13).
+//!
+//! Factored out of the slow-trace ring so plan provenance (and any
+//! future retained-history surface) shares one wait-free retention
+//! idiom: writers claim a slot with a single `fetch_add` and then
+//! `try_lock` it — a reader (or a same-slot writer) holding the lock
+//! makes the writer *drop* the record instead of blocking, so the
+//! executor and solver hot paths never wait on observability.
+//! Capacity 0 disables retention entirely (`enabled()` is false).
+
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+use std::sync::Mutex;
+
+/// Fixed-capacity ring of the most recent `capacity` records.
+#[derive(Debug)]
+pub struct Ring<T> {
+    slots: Vec<Mutex<Option<T>>>,
+    /// Total slot claims; the next record lands in `head % capacity`.
+    head: AtomicU64,
+    /// Records dropped to slot contention.
+    dropped: AtomicU64,
+}
+
+impl<T: Clone> Ring<T> {
+    pub fn new(capacity: usize) -> Ring<T> {
+        Ring {
+            slots: (0..capacity).map(|_| Mutex::new(None)).collect(),
+            head: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    /// Whether records are retained at all (capacity > 0).
+    pub fn enabled(&self) -> bool {
+        !self.slots.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Total records retained (cumulative, including overwritten ones).
+    pub fn recorded_total(&self) -> u64 {
+        self.head.load(Relaxed)
+    }
+
+    /// Records dropped to slot contention (cumulative).
+    pub fn dropped_total(&self) -> u64 {
+        self.dropped.load(Relaxed)
+    }
+
+    /// Retain one record, overwriting the oldest once full.
+    pub fn record(&self, t: T) {
+        if !self.enabled() {
+            return;
+        }
+        let seq = self.head.fetch_add(1, Relaxed);
+        let slot = (seq % self.slots.len() as u64) as usize;
+        match self.slots[slot].try_lock() {
+            Ok(mut g) => *g = Some(t),
+            Err(_) => {
+                self.dropped.fetch_add(1, Relaxed);
+            }
+        }
+    }
+
+    /// The retained records, newest first. Slots a writer holds at the
+    /// moment of the snapshot are skipped, not waited on.
+    pub fn snapshot(&self) -> Vec<T> {
+        let cap = self.slots.len() as u64;
+        if cap == 0 {
+            return Vec::new();
+        }
+        let head = self.head.load(Relaxed);
+        let mut out = Vec::with_capacity(self.slots.len());
+        for i in 0..cap.min(head) {
+            let slot = ((head - 1 - i) % cap) as usize;
+            if let Ok(g) = self.slots[slot].try_lock() {
+                if let Some(t) = g.as_ref() {
+                    out.push(t.clone());
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_keeps_the_newest_n_newest_first() {
+        let ring: Ring<u32> = Ring::new(3);
+        for v in 1..=5 {
+            ring.record(v);
+        }
+        assert_eq!(ring.snapshot(), [5, 4, 3]);
+        assert_eq!(ring.recorded_total(), 5);
+        assert_eq!(ring.dropped_total(), 0);
+    }
+
+    #[test]
+    fn zero_capacity_ring_is_disabled() {
+        let ring: Ring<String> = Ring::new(0);
+        assert!(!ring.enabled());
+        ring.record("x".into());
+        assert!(ring.snapshot().is_empty());
+        assert_eq!(ring.recorded_total(), 0);
+    }
+
+    #[test]
+    fn partial_fill_returns_only_what_was_recorded() {
+        let ring: Ring<u32> = Ring::new(8);
+        ring.record(1);
+        ring.record(2);
+        assert_eq!(ring.snapshot(), [2, 1]);
+        assert_eq!(ring.capacity(), 8);
+    }
+}

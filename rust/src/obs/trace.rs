@@ -2,7 +2,8 @@
 //! ring (DESIGN.md §13).
 
 use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
-use std::sync::Mutex;
+
+use crate::obs::ring::Ring;
 
 /// Default ring capacity when `--trace-capacity` is not given.
 pub const DEFAULT_TRACE_CAPACITY: usize = 256;
@@ -90,21 +91,16 @@ impl TraceRecord {
     }
 }
 
-/// Fixed-capacity ring of recent slow traces. Writers claim a slot
-/// with one `fetch_add` and then `try_lock` it — a reader (or a
-/// same-slot writer) holding the lock makes the writer *drop* the
-/// trace instead of blocking, so the executor hot path never waits.
-/// `slow_us` is the retention threshold: traces whose server-side
-/// total is below it are not retained (0 retains everything).
-/// Capacity 0 disables retention entirely (`enabled()` is false) —
-/// the bench harness uses that as the untraced baseline.
+/// Fixed-capacity ring of recent slow traces: a [`Ring<TraceRecord>`]
+/// (the shared wait-free claim/`try_lock` retention idiom — see
+/// `obs::ring`) plus the trace-specific policy. `slow_us` is the
+/// retention threshold: traces whose server-side total is below it are
+/// not retained (0 retains everything). Capacity 0 disables retention
+/// entirely (`enabled()` is false) — the bench harness uses that as
+/// the untraced baseline.
 #[derive(Debug)]
 pub struct TraceRing {
-    slots: Vec<Mutex<Option<TraceRecord>>>,
-    /// Total slot claims; the next record lands in `head % capacity`.
-    head: AtomicU64,
-    /// Records dropped to slot contention.
-    dropped: AtomicU64,
+    ring: Ring<TraceRecord>,
     slow_us: f64,
     /// Source for server-generated request ids (`req-<n>`).
     next_id: AtomicU64,
@@ -113,9 +109,7 @@ pub struct TraceRing {
 impl TraceRing {
     pub fn new(capacity: usize, slow_us: f64) -> TraceRing {
         TraceRing {
-            slots: (0..capacity).map(|_| Mutex::new(None)).collect(),
-            head: AtomicU64::new(0),
-            dropped: AtomicU64::new(0),
+            ring: Ring::new(capacity),
             slow_us: if slow_us.is_finite() { slow_us.max(0.0) } else { 0.0 },
             next_id: AtomicU64::new(1),
         }
@@ -128,11 +122,11 @@ impl TraceRing {
 
     /// Whether traces are retained at all (capacity > 0).
     pub fn enabled(&self) -> bool {
-        !self.slots.is_empty()
+        self.ring.enabled()
     }
 
     pub fn capacity(&self) -> usize {
-        self.slots.len()
+        self.ring.capacity()
     }
 
     /// The retention threshold in microseconds (0 = keep everything).
@@ -148,47 +142,26 @@ impl TraceRing {
 
     /// Total traces retained (cumulative, including overwritten ones).
     pub fn recorded_total(&self) -> u64 {
-        self.head.load(Relaxed)
+        self.ring.recorded_total()
     }
 
     /// Traces dropped to slot contention (cumulative).
     pub fn dropped_total(&self) -> u64 {
-        self.dropped.load(Relaxed)
+        self.ring.dropped_total()
     }
 
     /// Retain one completed trace if it clears the slow threshold.
     pub fn record(&self, t: TraceRecord) {
-        if !self.enabled() || t.total_us() < self.slow_us {
+        if t.total_us() < self.slow_us {
             return;
         }
-        let seq = self.head.fetch_add(1, Relaxed);
-        let slot = (seq % self.slots.len() as u64) as usize;
-        match self.slots[slot].try_lock() {
-            Ok(mut g) => *g = Some(t),
-            Err(_) => {
-                self.dropped.fetch_add(1, Relaxed);
-            }
-        }
+        self.ring.record(t);
     }
 
     /// The retained traces, newest first. Slots a writer holds at the
     /// moment of the snapshot are skipped, not waited on.
     pub fn snapshot(&self) -> Vec<TraceRecord> {
-        let cap = self.slots.len() as u64;
-        if cap == 0 {
-            return Vec::new();
-        }
-        let head = self.head.load(Relaxed);
-        let mut out = Vec::with_capacity(self.slots.len());
-        for i in 0..cap.min(head) {
-            let slot = ((head - 1 - i) % cap) as usize;
-            if let Ok(g) = self.slots[slot].try_lock() {
-                if let Some(t) = g.as_ref() {
-                    out.push(t.clone());
-                }
-            }
-        }
-        out
+        self.ring.snapshot()
     }
 }
 

@@ -73,6 +73,101 @@ use std::fmt;
 
 use crate::registry::{DeviceId, FreqPoint, KernelId};
 
+/// Why the runner-up operating point lost to the chosen one.
+pub mod rejected_by {
+    /// The alternative scored better on the objective but misses the
+    /// job's deadline — the constraint, not the objective, decided.
+    pub const DEADLINE: &str = "deadline";
+    /// The alternative is feasible but scores worse on the objective.
+    pub const OBJECTIVE: &str = "objective";
+}
+
+/// The best losing operating point on the chosen device — the
+/// provenance record's "what would it have taken" half.
+#[derive(Debug, Clone, Copy)]
+pub struct RunnerUp {
+    /// The losing (core, mem) point.
+    pub point: FreqPoint,
+    /// Scaled job runtime at that point, µs.
+    pub time_us: f64,
+    /// Energy at that point, mJ.
+    pub energy_mj: f64,
+    /// Which constraint rejected it: [`rejected_by::DEADLINE`] when it
+    /// beat the chosen point on the objective but missed the job's
+    /// deadline, [`rejected_by::OBJECTIVE`] when it simply scored
+    /// worse.
+    pub rejected_by: &'static str,
+}
+
+/// Per-assignment explanation: why this job landed where it did.
+#[derive(Debug, Clone)]
+pub struct Explain {
+    /// Index into the job slice (matches `Assignment::job`).
+    pub job: usize,
+    /// `deadline − time_us` at the chosen point, µs; `None` for jobs
+    /// without a deadline.
+    pub deadline_slack_us: Option<f64>,
+    /// Energy at the chosen point minus energy at the same device's
+    /// max-frequency point, mJ (negative = the plan saves energy on
+    /// this job relative to running it flat-out where it is).
+    pub energy_delta_vs_max_mj: f64,
+    /// The best losing point on the chosen device, when the grid
+    /// offers more than one point.
+    pub runner_up: Option<RunnerUp>,
+}
+
+/// Solver telemetry for one solve: per-phase spans, work counters and
+/// (when [`PlannerConfig::telemetry`] is on) per-assignment
+/// provenance. Carried by every [`Plan`]; the `/v2/plan` route returns
+/// it under `"telemetry"`, `gpufreq plan --explain` prints it, and
+/// `/metrics` exports the phases as `planner_phase_us` histograms.
+#[derive(Debug, Clone, Default)]
+pub struct SolveReport {
+    /// Monotonic per-process solve id (`plan-<n>` on the wire) — the
+    /// correlation key shared by `/debug/plans` and the event log.
+    pub plan_id: u64,
+    /// Candidate-table build (slab predictions + argmin scans), µs.
+    pub build_us: f64,
+    /// Greedy placement (excluding repair scans), µs.
+    pub greedy_us: f64,
+    /// One-level relocation repair inside greedy, µs.
+    pub repair_us: f64,
+    /// Local search (relocation + swap passes), µs.
+    pub swap_us: f64,
+    /// Whole solve, entry to assembled plan, µs. Phase durations sum
+    /// to ≤ this (glue and provenance are unattributed).
+    pub total_us: f64,
+    /// Candidate-table entries evaluated: K distinct kernels × the
+    /// summed per-device grid sizes (D×P).
+    pub candidates_evaluated: u64,
+    /// SoA slab calls the engine issued for this solve (cache-served
+    /// repeats do not count — see `engine::ComputeCounters`).
+    pub slab_calls: u64,
+    /// Candidate relocations priced (repair scan + local search).
+    pub relocations_tried: u64,
+    /// Relocations actually applied.
+    pub relocations_accepted: u64,
+    /// Pairwise swaps priced in local search.
+    pub swaps_tried: u64,
+    /// Swaps actually applied.
+    pub swaps_accepted: u64,
+    /// Per-assignment provenance, in job order; empty when
+    /// [`PlannerConfig::telemetry`] is off.
+    pub explains: Vec<Explain>,
+}
+
+impl SolveReport {
+    /// Sum of the attributed phase durations, µs.
+    pub fn phases_us(&self) -> f64 {
+        self.build_us + self.greedy_us + self.repair_us + self.swap_us
+    }
+
+    /// The wire form of [`plan_id`](SolveReport::plan_id).
+    pub fn plan_id_str(&self) -> String {
+        format!("plan-{}", self.plan_id)
+    }
+}
+
 /// One schedulable unit of fleet work: a catalogued kernel executed
 /// `scale` times back-to-back, optionally under a latency budget.
 #[derive(Debug, Clone)]
@@ -161,6 +256,8 @@ pub struct Plan {
     /// Improvement steps the local-search phase applied (single-job
     /// relocations + pairwise device swaps).
     pub swaps_applied: usize,
+    /// Solver telemetry: phase spans, work counters, provenance.
+    pub report: SolveReport,
 }
 
 impl Plan {

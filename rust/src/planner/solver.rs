@@ -31,13 +31,29 @@
 //! [`Engine::predict_points`]: crate::engine::Engine::predict_points
 
 use std::collections::HashSet;
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+use std::time::Instant;
 
 use crate::dvfs::PowerModel;
 use crate::engine::Engine;
 use crate::registry::{DeviceId, DeviceRecord, FreqPoint, KernelId};
 use crate::util::fxhash::FxHashMap;
 
-use super::{Assignment, Job, Plan, PlanError, PlanObjective};
+use super::{rejected_by, Assignment, Explain, Job, Plan, PlanError, PlanObjective, RunnerUp, SolveReport};
+
+/// Source for process-wide monotonic plan ids (`plan-<n>`), minted
+/// once per solve regardless of the telemetry setting so provenance
+/// rings and event logs can always correlate.
+static NEXT_PLAN_ID: AtomicU64 = AtomicU64::new(1);
+
+fn next_plan_id() -> u64 {
+    NEXT_PLAN_ID.fetch_add(1, Relaxed)
+}
+
+/// Elapsed microseconds since `t`.
+fn us_since(t: Instant) -> f64 {
+    t.elapsed().as_secs_f64() * 1e6
+}
 
 /// Cost ceilings guarding the solve (checked arithmetically **before**
 /// any table is allocated — the `/v2/plan` route is an unauthenticated
@@ -78,6 +94,12 @@ pub struct PlannerConfig {
     /// Upper bound on swap-refinement passes. Each pass only applies
     /// strict improvements, so the loop usually converges earlier.
     pub max_swap_rounds: usize,
+    /// Collect phase timings and per-assignment provenance into the
+    /// plan's [`SolveReport`] (default on). Work *counters* are always
+    /// collected — they are integer adds; this flag gates the clock
+    /// reads and the provenance pass. Telemetry never perturbs the
+    /// solve: on or off, assignments are bit-identical.
+    pub telemetry: bool,
 }
 
 impl Default for PlannerConfig {
@@ -88,6 +110,7 @@ impl Default for PlannerConfig {
             device_cap: usize::MAX,
             pairs: None,
             max_swap_rounds: 8,
+            telemetry: true,
         }
     }
 }
@@ -178,7 +201,13 @@ impl Prepared {
     }
 }
 
-fn prepare(engine: &Engine, jobs: &[Job], cfg: &PlannerConfig) -> Result<Prepared, PlanError> {
+fn prepare(
+    engine: &Engine,
+    jobs: &[Job],
+    cfg: &PlannerConfig,
+    report: &mut SolveReport,
+) -> Result<Prepared, PlanError> {
+    let build_t = cfg.telemetry.then(Instant::now);
     let Some(registry) = engine.registry() else {
         return Err(PlanError::Invalid(
             "engine has no registry attached (Engine::with_handles)".to_string(),
@@ -317,6 +346,8 @@ fn prepare(engine: &Engine, jobs: &[Job], cfg: &PlannerConfig) -> Result<Prepare
     //
     // times[d][k][p]: single-invocation µs. Power depends only on the
     // device and point: power[d][p].
+    report.candidates_evaluated = (kernel_ids.len() as u64) * (total_points as u64);
+    let compute_before = engine.compute_stats();
     let mut times: Vec<Vec<Vec<f64>>> = Vec::with_capacity(devices.len());
     for (di, rec) in devices.iter().enumerate() {
         let mut per_kernel = Vec::with_capacity(kernel_ids.len());
@@ -328,6 +359,7 @@ fn prepare(engine: &Engine, jobs: &[Job], cfg: &PlannerConfig) -> Result<Prepare
         }
         times.push(per_kernel);
     }
+    report.slab_calls = engine.compute_stats().since(compute_before).slab_calls;
     let power: Vec<Vec<f64>> = devices
         .iter()
         .enumerate()
@@ -382,6 +414,9 @@ fn prepare(engine: &Engine, jobs: &[Job], cfg: &PlannerConfig) -> Result<Prepare
         fastest_us.push(fastest);
     }
 
+    if let Some(t) = build_t {
+        report.build_us = us_since(t);
+    }
     Ok(Prepared { devices, table, max_point_idx, best, fastest_us })
 }
 
@@ -392,6 +427,7 @@ fn assemble(
     dev_of: &[usize],
     objective: PlanObjective,
     swaps_applied: usize,
+    report: SolveReport,
 ) -> Plan {
     let mut assignments = Vec::with_capacity(dev_of.len());
     let (mut energy, mut edp, mut max_t) = (0.0f64, 0.0f64, 0.0f64);
@@ -417,7 +453,61 @@ fn assemble(
         total_edp: edp,
         max_time_us: max_t,
         swaps_applied,
+        report,
     }
+}
+
+/// Per-assignment provenance: deadline slack and energy delta at the
+/// chosen point, plus the best losing point on the same device and
+/// the constraint that rejected it. Strictly read-only over the
+/// prepared table — provenance cannot perturb the solve.
+fn explain(
+    prepared: &Prepared,
+    jobs: &[Job],
+    cfg: &PlannerConfig,
+    dev_of: &[usize],
+) -> Vec<Explain> {
+    let mut out = Vec::with_capacity(dev_of.len());
+    for (j, &d) in dev_of.iter().enumerate() {
+        let chosen = prepared.best[j][d].expect("placed jobs are feasible");
+        let at_max = prepared.at_max(jobs, j, d);
+        // Best alternative by objective over the same device's grid,
+        // feasible or not — a winner-but-for-the-deadline surfaces as
+        // `rejected_by: deadline`.
+        let mut runner: Option<Candidate> = None;
+        let mut runner_key = f64::INFINITY;
+        for pi in 0..prepared.table.grids[d].len() {
+            let c = prepared.table.eval(jobs, j, d, pi);
+            if c.point == chosen.point {
+                continue;
+            }
+            let key = c.key(cfg.objective);
+            if key < runner_key {
+                runner_key = key;
+                runner = Some(c);
+            }
+        }
+        let runner_up = runner.map(|c| RunnerUp {
+            point: c.point,
+            time_us: c.time_us,
+            energy_mj: c.energy_mj,
+            // `chosen` is the feasible argmin, so an alternative with
+            // a strictly better key can only have lost to the
+            // deadline; otherwise it lost on the objective.
+            rejected_by: if c.key(cfg.objective) < chosen.key(cfg.objective) {
+                rejected_by::DEADLINE
+            } else {
+                rejected_by::OBJECTIVE
+            },
+        });
+        out.push(Explain {
+            job: j,
+            deadline_slack_us: jobs[j].deadline_us.map(|dl| dl - chosen.time_us),
+            energy_delta_vs_max_mj: chosen.energy_mj - at_max.energy_mj,
+            runner_up,
+        });
+    }
+    out
 }
 
 /// Produce an energy-minimal (or EDP-minimal) assignment of `jobs` to
@@ -430,15 +520,8 @@ fn assemble(
 /// Deterministic: identical inputs produce identical plans (ties break
 /// toward lower device index, then lower point index).
 pub fn plan(engine: &Engine, jobs: &[Job], cfg: &PlannerConfig) -> Result<Plan, PlanError> {
-    let prepared = prepare(engine, jobs, cfg)?;
-    let (dev_of, swaps) = greedy_and_swap(&prepared, jobs, cfg)?;
-    Ok(assemble(
-        &prepared,
-        |j, d| prepared.best[j][d].expect("placed jobs are feasible"),
-        &dev_of,
-        cfg.objective,
-        swaps,
-    ))
+    let (planned, _) = solve(engine, jobs, cfg, false)?;
+    Ok(planned)
 }
 
 /// [`plan`] and [`max_frequency_baseline`] from **one** evaluation
@@ -453,18 +536,54 @@ pub fn plan_with_baseline(
     jobs: &[Job],
     cfg: &PlannerConfig,
 ) -> Result<(Plan, Option<Plan>), PlanError> {
-    let prepared = prepare(engine, jobs, cfg)?;
-    let (dev_of, swaps) = greedy_and_swap(&prepared, jobs, cfg)?;
+    solve(engine, jobs, cfg, true)
+}
+
+/// The one solve path behind [`plan`] and [`plan_with_baseline`]:
+/// prepare → greedy+swap → provenance, with one [`SolveReport`]
+/// threaded through the phases. Timers and the provenance pass are
+/// gated on [`PlannerConfig::telemetry`]; counters are always live.
+fn solve(
+    engine: &Engine,
+    jobs: &[Job],
+    cfg: &PlannerConfig,
+    with_baseline: bool,
+) -> Result<(Plan, Option<Plan>), PlanError> {
+    let total_t = cfg.telemetry.then(Instant::now);
+    let mut report = SolveReport { plan_id: next_plan_id(), ..SolveReport::default() };
+    let prepared = prepare(engine, jobs, cfg, &mut report)?;
+    let (dev_of, swaps) = greedy_and_swap(&prepared, jobs, cfg, &mut report)?;
+    if cfg.telemetry {
+        report.explains = explain(&prepared, jobs, cfg, &dev_of);
+    }
+    if let Some(t) = total_t {
+        report.total_us = us_since(t);
+    }
+    // The advisory baseline shares the solve's plan_id (it is the same
+    // evaluation pass) but carries no phase attribution of its own.
+    let baseline_report = SolveReport { plan_id: report.plan_id, ..SolveReport::default() };
     let planned = assemble(
         &prepared,
         |j, d| prepared.best[j][d].expect("placed jobs are feasible"),
         &dev_of,
         cfg.objective,
         swaps,
+        report,
     );
-    let baseline = baseline_assign(&prepared, jobs, cfg).ok().map(|b| {
-        assemble(&prepared, |j, d| prepared.at_max(jobs, j, d), &b, cfg.objective, 0)
-    });
+    let baseline = if with_baseline {
+        baseline_assign(&prepared, jobs, cfg).ok().map(|b| {
+            assemble(
+                &prepared,
+                |j, d| prepared.at_max(jobs, j, d),
+                &b,
+                cfg.objective,
+                0,
+                baseline_report,
+            )
+        })
+    } else {
+        None
+    };
     Ok((planned, baseline))
 }
 
@@ -474,9 +593,11 @@ fn greedy_and_swap(
     prepared: &Prepared,
     jobs: &[Job],
     cfg: &PlannerConfig,
+    report: &mut SolveReport,
 ) -> Result<(Vec<usize>, usize), PlanError> {
     let d_count = prepared.devices.len();
     let n = jobs.len();
+    let greedy_t = cfg.telemetry.then(Instant::now);
 
     // Greedy phase: tightest deadlines place first, so loose jobs
     // cannot squat on the only device a tight job fits.
@@ -519,6 +640,7 @@ fn greedy_and_swap(
         // unreachable deadline from exhausted capacity, and in the
         // latter case attempt a one-level repair: relocate one placed
         // job off a deadline-feasible device so `j` fits.
+        let repair_t = cfg.telemetry.then(Instant::now);
         let feasible_devs: Vec<usize> =
             (0..d_count).filter(|&d| prepared.best[j][d].is_some()).collect();
         if feasible_devs.is_empty() {
@@ -556,6 +678,7 @@ fn greedy_and_swap(
                         continue;
                     }
                     let Some(alt_i) = prepared.best[i][d2] else { continue };
+                    report.relocations_tried += 1;
                     let delta =
                         alt_i.key(cfg.objective) - cur_i.key(cfg.objective) + cost_j;
                     if delta < repair_delta {
@@ -565,8 +688,12 @@ fn greedy_and_swap(
                 }
             }
         }
+        if let Some(t) = repair_t {
+            report.repair_us += us_since(t);
+        }
         match repair {
             Some((i, d, d2)) => {
+                report.relocations_accepted += 1;
                 dev_of[i] = d2;
                 load[d] -= 1;
                 load[d2] += 1;
@@ -588,6 +715,11 @@ fn greedy_and_swap(
         }
     }
 
+    if let Some(t) = greedy_t {
+        // The greedy span excludes the repair scans timed above.
+        report.greedy_us = (us_since(t) - report.repair_us).max(0.0);
+    }
+
     // Local search: single-job relocations (which can change the load
     // vector greedy settled on, as long as the target device has spare
     // capacity) interleaved with pairwise device swaps (which preserve
@@ -595,6 +727,7 @@ fn greedy_and_swap(
     // the loop terminates; caps and feasibility are preserved by
     // construction (`best` is deadline-filtered, loads are rechecked
     // on moves and untouched by swaps).
+    let swap_t = cfg.telemetry.then(Instant::now);
     let mut steps = 0usize;
     for _ in 0..cfg.max_swap_rounds {
         let mut improved = false;
@@ -608,6 +741,7 @@ fn greedy_and_swap(
                     continue;
                 }
                 if let Some(c) = prepared.best[a][d] {
+                    report.relocations_tried += 1;
                     let key = c.key(cfg.objective);
                     if target_key - key > 1e-9 * cur.abs().max(1e-12) {
                         target_key = key;
@@ -616,6 +750,7 @@ fn greedy_and_swap(
                 }
             }
             if let Some(d) = target {
+                report.relocations_accepted += 1;
                 load[da] -= 1;
                 load[d] += 1;
                 dev_of[a] = d;
@@ -634,10 +769,12 @@ fn greedy_and_swap(
                 else {
                     continue;
                 };
+                report.swaps_tried += 1;
                 let cur = prepared.best[a][da].expect("placed").key(cfg.objective)
                     + prepared.best[b][db].expect("placed").key(cfg.objective);
                 let alt = a_on_db.key(cfg.objective) + b_on_da.key(cfg.objective);
                 if cur - alt > 1e-9 * cur.abs().max(1e-12) {
+                    report.swaps_accepted += 1;
                     dev_of[a] = db;
                     dev_of[b] = da;
                     steps += 1;
@@ -648,6 +785,9 @@ fn greedy_and_swap(
         if !improved {
             break;
         }
+    }
+    if let Some(t) = swap_t {
+        report.swap_us = us_since(t);
     }
 
     Ok((dev_of, steps))
@@ -664,9 +804,10 @@ pub fn max_frequency_baseline(
     jobs: &[Job],
     cfg: &PlannerConfig,
 ) -> Result<Plan, PlanError> {
-    let prepared = prepare(engine, jobs, cfg)?;
+    let mut report = SolveReport { plan_id: next_plan_id(), ..SolveReport::default() };
+    let prepared = prepare(engine, jobs, cfg, &mut report)?;
     let dev_of = baseline_assign(&prepared, jobs, cfg)?;
-    Ok(assemble(&prepared, |j, d| prepared.at_max(jobs, j, d), &dev_of, cfg.objective, 0))
+    Ok(assemble(&prepared, |j, d| prepared.at_max(jobs, j, d), &dev_of, cfg.objective, 0, report))
 }
 
 /// Round-robin placement under the cap (the baseline's device choice).
@@ -1073,6 +1214,89 @@ mod tests {
         }
         assert_eq!(a.total_energy_mj.to_bits(), b.total_energy_mj.to_bits());
         assert_eq!(a.swaps_applied, b.swaps_applied);
+    }
+
+    #[test]
+    fn solve_reports_carry_phases_counters_and_provenance() {
+        let (engine, _, kernels) = fixture();
+        let jobs = fleet(&kernels, 8);
+        let cfg = PlannerConfig { device_cap: 4, ..PlannerConfig::default() };
+        let p = plan(&engine, &jobs, &cfg).unwrap();
+        let r = &p.report;
+        assert!(r.plan_id >= 1);
+        // 2 distinct kernels × (2 devices × 8 grid points each).
+        assert_eq!(r.candidates_evaluated, 2 * 16);
+        // One slab call per (device, kernel) on a cold cache.
+        assert_eq!(r.slab_calls, 4);
+        assert!(r.total_us > 0.0);
+        assert!(r.phases_us() <= r.total_us * (1.0 + 1e-9) + 1e-6, "{r:?}");
+        assert!(r.relocations_accepted <= r.relocations_tried, "{r:?}");
+        assert!(r.swaps_accepted <= r.swaps_tried, "{r:?}");
+        assert_eq!(r.explains.len(), jobs.len());
+        for (j, e) in r.explains.iter().enumerate() {
+            assert_eq!(e.job, j);
+            assert!(e.deadline_slack_us.is_none(), "fleet() jobs carry no deadline");
+            // Chosen by energy argmin, so flat-out on the same device
+            // can never be cheaper.
+            assert!(e.energy_delta_vs_max_mj <= 1e-12, "{e:?}");
+            let ru = e.runner_up.expect("an 8-point grid always has a loser");
+            assert_eq!(ru.rejected_by, rejected_by::OBJECTIVE);
+        }
+        // A warm cache serves the table without new slab calls, and
+        // every solve mints a fresh id.
+        let p2 = plan(&engine, &jobs, &cfg).unwrap();
+        assert_eq!(p2.report.slab_calls, 0);
+        assert!(p2.report.plan_id > r.plan_id);
+    }
+
+    #[test]
+    fn deadline_squeezed_runner_up_is_rejected_by_the_deadline() {
+        let (engine, _, kernels) = fixture();
+        let fastest = max_frequency_baseline(
+            &engine,
+            &[Job::new("probe", kernels[0], 2.0)],
+            &PlannerConfig::default(),
+        )
+        .unwrap();
+        // A deadline just above the fastest runtime forces a near-max
+        // point; the energy-optimal point loses on the deadline.
+        let tight_dl = fastest.assignments[0].time_us * 1.01;
+        let jobs = [Job::new("tight", kernels[0], 2.0).with_deadline(tight_dl)];
+        let p = plan(&engine, &jobs, &PlannerConfig::default()).unwrap();
+        let e = &p.report.explains[0];
+        let slack = e.deadline_slack_us.expect("job has a deadline");
+        assert!(slack >= 0.0, "emitted plans meet deadlines, slack {slack}");
+        assert!((slack - (tight_dl - p.assignments[0].time_us)).abs() < 1e-9);
+        let ru = e.runner_up.expect("grid has 8 points");
+        assert_eq!(ru.rejected_by, rejected_by::DEADLINE);
+        assert!(ru.energy_mj < p.assignments[0].energy_mj, "the loser was cheaper");
+    }
+
+    #[test]
+    fn telemetry_off_skips_spans_and_provenance_but_not_the_plan() {
+        let (engine, _, kernels) = fixture();
+        let jobs = fleet(&kernels, 10);
+        let on_cfg = PlannerConfig { device_cap: 5, ..PlannerConfig::default() };
+        let off_cfg = PlannerConfig { telemetry: false, ..on_cfg.clone() };
+        let on = plan(&engine, &jobs, &on_cfg).unwrap();
+        let off = plan(&engine, &jobs, &off_cfg).unwrap();
+        // Bit-identical placements either way — telemetry is passive.
+        assert_eq!(on.assignments.len(), off.assignments.len());
+        for (x, y) in on.assignments.iter().zip(&off.assignments) {
+            assert_eq!(x.device, y.device);
+            assert_eq!(x.point, y.point);
+            assert_eq!(x.energy_mj.to_bits(), y.energy_mj.to_bits());
+        }
+        assert_eq!(on.total_energy_mj.to_bits(), off.total_energy_mj.to_bits());
+        // Off: no clocks, no provenance; counters still live.
+        assert_eq!(off.report.total_us, 0.0);
+        assert_eq!(off.report.phases_us(), 0.0);
+        assert!(off.report.explains.is_empty());
+        assert_eq!(off.report.candidates_evaluated, on.report.candidates_evaluated);
+        assert_eq!(off.report.swaps_tried, on.report.swaps_tried);
+        // On: provenance present.
+        assert_eq!(on.report.explains.len(), jobs.len());
+        assert!(on.report.total_us > 0.0);
     }
 
     #[test]

@@ -23,6 +23,7 @@ use std::time::Duration;
 
 use crate::engine::CacheStats;
 use crate::obs::{AccuracySeries, Stage};
+use crate::planner::SolveReport;
 
 /// Histogram bucket upper bounds, microseconds.
 const BUCKET_BOUNDS_US: [f64; 24] = [
@@ -137,11 +138,13 @@ pub enum Route {
     PlanV2,
     ObservationsV2,
     DebugTraces,
+    DebugPlans,
+    DebugDrift,
     Other,
 }
 
 impl Route {
-    pub const ALL: [Route; 13] = [
+    pub const ALL: [Route; 15] = [
         Route::Healthz,
         Route::Metrics,
         Route::Predict,
@@ -154,6 +157,8 @@ impl Route {
         Route::PlanV2,
         Route::ObservationsV2,
         Route::DebugTraces,
+        Route::DebugPlans,
+        Route::DebugDrift,
         Route::Other,
     ];
 
@@ -171,6 +176,8 @@ impl Route {
             "/v2/plan" => Route::PlanV2,
             "/v2/observations" => Route::ObservationsV2,
             "/debug/traces" => Route::DebugTraces,
+            "/debug/plans" => Route::DebugPlans,
+            "/debug/drift" => Route::DebugDrift,
             _ => Route::Other,
         }
     }
@@ -189,6 +196,8 @@ impl Route {
             Route::PlanV2 => "/v2/plan",
             Route::ObservationsV2 => "/v2/observations",
             Route::DebugTraces => "/debug/traces",
+            Route::DebugPlans => "/debug/plans",
+            Route::DebugDrift => "/debug/drift",
             Route::Other => "other",
         }
     }
@@ -207,7 +216,9 @@ impl Route {
             Route::PlanV2 => 9,
             Route::ObservationsV2 => 10,
             Route::DebugTraces => 11,
-            Route::Other => 12,
+            Route::DebugPlans => 12,
+            Route::DebugDrift => 13,
+            Route::Other => 14,
         }
     }
 }
@@ -220,6 +231,34 @@ pub struct RouteMetrics {
     pub client_errors: AtomicU64,
     pub server_errors: AtomicU64,
     pub latency: Histogram,
+}
+
+/// Solver-phase labels for the `planner_phase_us` histograms, in the
+/// order the phases run (`total` is the whole solve, explains
+/// included).
+pub const PLANNER_PHASES: [&str; 5] = ["build", "greedy", "repair", "swap", "total"];
+
+/// Solver telemetry aggregated across every `/v2/plan` solve
+/// (DESIGN.md §13): per-phase latency histograms plus the work
+/// counters a [`SolveReport`] carries.
+#[derive(Debug, Default)]
+pub struct PlannerMetrics {
+    /// One histogram per [`PLANNER_PHASES`] entry.
+    phases: [Histogram; PLANNER_PHASES.len()],
+    pub solves_total: AtomicU64,
+    pub candidates_total: AtomicU64,
+    pub slab_calls_total: AtomicU64,
+    pub relocations_tried_total: AtomicU64,
+    pub relocations_accepted_total: AtomicU64,
+    pub swaps_tried_total: AtomicU64,
+    pub swaps_accepted_total: AtomicU64,
+}
+
+impl PlannerMetrics {
+    /// The histogram for one phase label index (see [`PLANNER_PHASES`]).
+    pub fn phase(&self, i: usize) -> &Histogram {
+        &self.phases[i]
+    }
 }
 
 /// Everything `/metrics` exposes. Shared (`Arc`) between the poll
@@ -243,6 +282,8 @@ pub struct Metrics {
     /// Admission-credit component: up to `workers + queue_capacity`
     /// connections are live before new ones are shed with 429.
     pub queue_capacity: AtomicUsize,
+    /// Solver telemetry aggregated over `/v2/plan` (DESIGN.md §13).
+    pub planner: PlannerMetrics,
 }
 
 impl Metrics {
@@ -276,18 +317,52 @@ impl Metrics {
         self.routes.iter().map(|r| r.requests.load(Relaxed)).sum()
     }
 
+    /// Fold one solve's [`SolveReport`] into the planner aggregates.
+    /// Work counters always accumulate; the phase histograms only
+    /// record when the report carries spans (telemetry on), so a
+    /// telemetry-off solve never pollutes the latency series with
+    /// zeros.
+    pub fn record_solve(&self, report: &SolveReport) {
+        let p = &self.planner;
+        p.solves_total.fetch_add(1, Relaxed);
+        p.candidates_total.fetch_add(report.candidates_evaluated, Relaxed);
+        p.slab_calls_total.fetch_add(report.slab_calls, Relaxed);
+        p.relocations_tried_total.fetch_add(report.relocations_tried, Relaxed);
+        p.relocations_accepted_total.fetch_add(report.relocations_accepted, Relaxed);
+        p.swaps_tried_total.fetch_add(report.swaps_tried, Relaxed);
+        p.swaps_accepted_total.fetch_add(report.swaps_accepted, Relaxed);
+        if report.total_us > 0.0 {
+            let spans = [
+                report.build_us,
+                report.greedy_us,
+                report.repair_us,
+                report.swap_us,
+                report.total_us,
+            ];
+            for (h, us) in p.phases.iter().zip(spans) {
+                h.record(Duration::from_secs_f64(us.max(0.0) / 1e6));
+            }
+        }
+    }
+
     /// Render the text exposition (`GET /metrics`). Cache counters come
     /// from the engine — zeroed when the cache is disabled, so the
     /// lines are always present and scrapers never see a gap.
     /// `accuracy` is the live model-error snapshot from the
     /// [`crate::obs::AccuracyTracker`] (empty until the first
-    /// `POST /v2/observations`).
+    /// `POST /v2/observations`); `samples_dropped` is its count of
+    /// observations refused at the series-table bound; `events` is the
+    /// `(emitted, dropped)` pair from the optional `--event-log` sink
+    /// (`None` renders the series as disabled-with-zeros so scrapers
+    /// never see a gap).
     pub fn render(
         &self,
         cache: &CacheStats,
         uptime: Duration,
         backend: &str,
         accuracy: &[AccuracySeries],
+        samples_dropped: u64,
+        events: Option<(u64, u64)>,
     ) -> String {
         use std::fmt::Write as _;
         let mut out = String::with_capacity(16 * 1024);
@@ -352,13 +427,59 @@ impl Metrics {
                 self.stage(s),
             );
         }
+        // Solver telemetry (DESIGN.md §13) — always present, zeros
+        // until the first `/v2/plan` solve.
+        let p = &self.planner;
+        let _ = writeln!(out, "planner_solves_total {}", p.solves_total.load(Relaxed));
+        let _ = writeln!(
+            out,
+            "planner_candidates_evaluated_total {}",
+            p.candidates_total.load(Relaxed)
+        );
+        let _ = writeln!(out, "planner_slab_calls_total {}", p.slab_calls_total.load(Relaxed));
+        let _ = writeln!(
+            out,
+            "planner_relocations_tried_total {}",
+            p.relocations_tried_total.load(Relaxed)
+        );
+        let _ = writeln!(
+            out,
+            "planner_relocations_accepted_total {}",
+            p.relocations_accepted_total.load(Relaxed)
+        );
+        let _ = writeln!(out, "planner_swaps_tried_total {}", p.swaps_tried_total.load(Relaxed));
+        let _ = writeln!(
+            out,
+            "planner_swaps_accepted_total {}",
+            p.swaps_accepted_total.load(Relaxed)
+        );
+        for (i, phase) in PLANNER_PHASES.iter().enumerate() {
+            write_histogram(
+                &mut out,
+                "planner_phase_us",
+                &format!("phase=\"{phase}\""),
+                p.phase(i),
+            );
+        }
         // Live model accuracy, one series per observed (device, kernel).
         let _ = writeln!(out, "model_observation_series {}", accuracy.len());
+        let _ = writeln!(out, "model_samples_dropped_total {samples_dropped}");
         for a in accuracy {
             let labels = format!("device=\"{}\",kernel=\"{}\"", a.device, a.kernel);
             let _ = writeln!(out, "model_samples_total{{{labels}}} {}", a.samples);
             let _ = writeln!(out, "model_mape{{{labels}}} {:.3}", a.mape_pct);
+            let _ = writeln!(out, "model_error_ewma{{{labels}}} {:.3}", a.ewma_pct);
+            let _ = writeln!(out, "model_drift_state{{{labels}}} {}", a.state.gauge());
         }
+        // Structured event log (`--event-log`): zeros when disabled so
+        // the series are always scrapeable.
+        let (enabled, emitted, dropped) = match events {
+            Some((e, d)) => (1, e, d),
+            None => (0, 0, 0),
+        };
+        let _ = writeln!(out, "service_event_log_enabled {enabled}");
+        let _ = writeln!(out, "service_events_emitted_total {emitted}");
+        let _ = writeln!(out, "service_events_dropped_total {dropped}");
         out
     }
 }
@@ -470,6 +591,8 @@ mod tests {
         assert_eq!(Route::of_path("/v2/plan"), Route::PlanV2);
         assert_eq!(Route::of_path("/v2/observations"), Route::ObservationsV2);
         assert_eq!(Route::of_path("/debug/traces"), Route::DebugTraces);
+        assert_eq!(Route::of_path("/debug/plans"), Route::DebugPlans);
+        assert_eq!(Route::of_path("/debug/drift"), Route::DebugDrift);
         assert_eq!(Route::of_path("/nope"), Route::Other);
         for r in Route::ALL {
             assert_eq!(Route::of_path(r.name()), if r == Route::Other { Route::Other } else { r });
@@ -483,15 +606,39 @@ mod tests {
         m.record(Route::Predict, 400, Duration::from_micros(12));
         m.record(Route::Advise, 500, Duration::from_micros(15));
         m.record_stage(Stage::Compute, Duration::from_micros(8));
+        let report = SolveReport {
+            plan_id: 7,
+            build_us: 40.0,
+            greedy_us: 30.0,
+            repair_us: 5.0,
+            swap_us: 20.0,
+            total_us: 110.0,
+            candidates_evaluated: 32,
+            slab_calls: 4,
+            relocations_tried: 3,
+            relocations_accepted: 1,
+            swaps_tried: 6,
+            swaps_accepted: 2,
+            explains: Vec::new(),
+        };
+        m.record_solve(&report);
         let accuracy = [AccuracySeries {
             device: "dev-1".into(),
             kernel: "krn-1".into(),
             mape_pct: 3.5,
+            ewma_pct: 12.25,
+            state: crate::obs::DriftState::Warn,
             window: 2,
             samples: 2,
         }];
-        let text =
-            m.render(&CacheStats::default(), Duration::from_secs(2), "native-scalar", &accuracy);
+        let text = m.render(
+            &CacheStats::default(),
+            Duration::from_secs(2),
+            "native-scalar",
+            &accuracy,
+            3,
+            Some((9, 1)),
+        );
         for needle in [
             "service_uptime_seconds",
             "service_queue_depth 0",
@@ -515,10 +662,31 @@ mod tests {
             "service_stage_latency_us{stage=\"compute\",stat=\"p50\"}",
             "service_stage_latency_us_bucket{stage=\"compute\",le=\"10\"} 1",
             "service_stage_latency_us_count{stage=\"queue\"} 0",
+            // New debug routes emit zeros immediately too.
+            "service_requests_total{route=\"/debug/plans\"} 0",
+            "service_requests_total{route=\"/debug/drift\"} 0",
+            // Solver telemetry fed by /v2/plan solves.
+            "planner_solves_total 1",
+            "planner_candidates_evaluated_total 32",
+            "planner_slab_calls_total 4",
+            "planner_relocations_tried_total 3",
+            "planner_relocations_accepted_total 1",
+            "planner_swaps_tried_total 6",
+            "planner_swaps_accepted_total 2",
+            // 40 µs build span lands in the ≤ 50 µs bucket.
+            "planner_phase_us_bucket{phase=\"build\",le=\"50\"} 1",
+            "planner_phase_us_count{phase=\"total\"} 1",
             // Live model accuracy fed by POST /v2/observations.
             "model_observation_series 1",
+            "model_samples_dropped_total 3",
             "model_samples_total{device=\"dev-1\",kernel=\"krn-1\"} 2",
             "model_mape{device=\"dev-1\",kernel=\"krn-1\"} 3.500",
+            "model_error_ewma{device=\"dev-1\",kernel=\"krn-1\"} 12.250",
+            "model_drift_state{device=\"dev-1\",kernel=\"krn-1\"} 1",
+            // Structured event-log sink accounting.
+            "service_event_log_enabled 1",
+            "service_events_emitted_total 9",
+            "service_events_dropped_total 1",
         ] {
             assert!(text.contains(needle), "missing `{needle}` in:\n{text}");
         }
@@ -530,7 +698,14 @@ mod tests {
     fn infinite_quantile_gauges_render_as_inf() {
         let m = Metrics::default();
         m.record(Route::Healthz, 200, Duration::from_secs(120));
-        let text = m.render(&CacheStats::default(), Duration::from_secs(1), "native-scalar", &[]);
+        let text = m.render(
+            &CacheStats::default(),
+            Duration::from_secs(1),
+            "native-scalar",
+            &[],
+            0,
+            None,
+        );
         assert!(
             text.contains("service_latency_us{route=\"/healthz\",stat=\"p50\"} +Inf"),
             "overflow quantile must render +Inf:\n{text}"

@@ -16,7 +16,8 @@
 //!   │ server.rs   poll(2) readiness loop → exec pool   │
 //!   │             (429 + Retry-After past the credit)  │
 //!   │ http.rs     HTTP/1.1 parse / serialize           │
-//!   │ routes.rs   /healthz /metrics /debug/traces      │
+//!   │ routes.rs   /healthz /metrics /debug/{traces,    │
+//!   │             plans, drift}                        │
 //!   │             /v1/{predict, grid, advise}  (shim)  │
 //!   │             /v2/{devices, kernels, predict,      │
 //!   │             advise, plan, observations}          │
@@ -48,7 +49,12 @@
 //! `--slow-us` are retained in a lock-free ring behind
 //! `GET /debug/traces`. Measured runtimes posted to
 //! `POST /v2/observations` are scored against the model live and
-//! surface as `model_mape{device,kernel}` in `/metrics`.
+//! surface as `model_mape{device,kernel}` in `/metrics`, with an EWMA
+//! drift state machine behind `GET /debug/drift`. Every `/v2/plan`
+//! solve carries a `plan_id`, solver telemetry, and per-job
+//! explanations, retained in a provenance ring behind
+//! `GET /debug/plans`; `--event-log PATH` appends the whole story as
+//! correlated JSONL records (docs/OBSERVABILITY.md).
 
 pub mod client;
 pub mod http;
@@ -59,5 +65,5 @@ pub mod server;
 
 pub use client::{Client, ClientResponse};
 pub use metrics::{Histogram, Metrics, Route};
-pub use routes::{ServiceState, DEFAULT_DEVICE_NAME};
+pub use routes::{PlanRecord, ServiceState, DEFAULT_DEVICE_NAME, DEFAULT_PLAN_RING};
 pub use server::{Service, ServiceConfig};

@@ -16,6 +16,8 @@
 //! | `/v2/plan`       | POST     | `{jobs: [{kernel, scale?, deadline_us?, name?}], devices?, objective?, device_cap?, pairs?}` |
 //! | `/v2/observations` | POST   | `{observations: [{device, kernel, core_mhz, mem_mhz, measured_us\|measured_ms}]}` |
 //! | `/debug/traces`  | GET      | —                                           |
+//! | `/debug/plans`   | GET      | —                                           |
+//! | `/debug/drift`   | GET      | —                                           |
 //!
 //! **v2 is the handle-based protocol** (DESIGN.md §10): devices and
 //! kernels are registered once and addressed by stable `dev-<n>` /
@@ -41,8 +43,12 @@ use std::time::Instant;
 use crate::dvfs::{ConfigPoint, Objective, PowerModel, VfCurve};
 use crate::engine::{Engine, Estimate};
 use crate::model::{HwParams, KernelCounters};
-use crate::obs::{AccuracyTracker, Stage, TraceRecord, TraceRing, DEFAULT_TRACE_CAPACITY};
-use crate::planner::{self, Job, PlanError, PlanObjective, PlannerConfig};
+use crate::obs::{
+    AccuracyTracker, EventSink, Ring, Stage, TraceRecord, TraceRing, DEFAULT_TRACE_CAPACITY,
+};
+use crate::planner::{
+    self, Explain, Job, PlanError, PlanObjective, PlannerConfig, RunnerUp, SolveReport,
+};
 use crate::registry::{
     DeviceId, DeviceRecord, DeviceRegistry, FreqPoint, KernelCatalog, KernelId, RegisterError,
 };
@@ -53,6 +59,28 @@ use super::metrics::{Metrics, Route};
 
 /// Name the boot GPU is registered under in the device registry.
 pub const DEFAULT_DEVICE_NAME: &str = "default";
+
+/// Default capacity of the plan-provenance ring (`--plan-ring`).
+pub const DEFAULT_PLAN_RING: usize = 64;
+
+/// One retained solve: the provenance record `GET /debug/plans` dumps.
+/// Carries everything needed to answer "why did plan-N look like that"
+/// after the response is gone — the full [`SolveReport`] (spans,
+/// counters, per-job explains) plus the correlation keys.
+#[derive(Debug, Clone)]
+pub struct PlanRecord {
+    /// `X-Request-Id` of the request that ran the solve, when known.
+    pub request_id: Option<String>,
+    pub objective: &'static str,
+    /// Job names, indexed by the report's `Explain::job`.
+    pub jobs: Vec<String>,
+    pub total_energy_mj: f64,
+    pub max_time_us: f64,
+    /// Savings vs the max-frequency baseline (absent when the baseline
+    /// itself was infeasible).
+    pub energy_savings_pct: Option<f64>,
+    pub report: SolveReport,
+}
 
 /// Everything the handlers read: the shared engine (with its device
 /// registry and kernel catalog attached) and the default frequency
@@ -76,6 +104,12 @@ pub struct ServiceState {
     /// Rolling model-error windows fed by `POST /v2/observations` and
     /// surfaced as `model_mape{device,kernel}` in `/metrics`.
     pub accuracy: Arc<AccuracyTracker>,
+    /// Plan-provenance ring behind `GET /debug/plans` (`--plan-ring`;
+    /// `Service::start` resizes it from `ServiceConfig`).
+    pub plans: Arc<Ring<PlanRecord>>,
+    /// Structured event-log sink (`--event-log`); `None` when the log
+    /// is not enabled.
+    pub events: Option<Arc<EventSink>>,
 }
 
 impl ServiceState {
@@ -97,6 +131,8 @@ impl ServiceState {
             started: Instant::now(),
             traces: Arc::new(TraceRing::new(DEFAULT_TRACE_CAPACITY, 0.0)),
             accuracy: Arc::new(AccuracyTracker::default()),
+            plans: Arc::new(Ring::new(DEFAULT_PLAN_RING)),
+            events: None,
         }
     }
 
@@ -129,8 +165,21 @@ fn error_json(status: u16, code: &str, message: &str) -> HttpResponse {
 /// Dispatch one request. Handler panics become 500s — a worker thread
 /// must survive any single bad request.
 pub fn handle(state: &ServiceState, metrics: &Metrics, req: &HttpRequest) -> HttpResponse {
+    handle_traced(state, metrics, req, None)
+}
+
+/// [`handle`] with the request's `X-Request-Id` attached, so solve and
+/// observation events in the structured log carry the correlation key
+/// the matching `request_span` event has. The server loop calls this;
+/// `handle` (tests, embedders) passes no id.
+pub fn handle_traced(
+    state: &ServiceState,
+    metrics: &Metrics,
+    req: &HttpRequest,
+    request_id: Option<&str>,
+) -> HttpResponse {
     let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-        dispatch(state, metrics, req)
+        dispatch(state, metrics, req, request_id)
     }));
     match result {
         Ok(resp) => resp,
@@ -138,7 +187,12 @@ pub fn handle(state: &ServiceState, metrics: &Metrics, req: &HttpRequest) -> Htt
     }
 }
 
-fn dispatch(state: &ServiceState, metrics: &Metrics, req: &HttpRequest) -> HttpResponse {
+fn dispatch(
+    state: &ServiceState,
+    metrics: &Metrics,
+    req: &HttpRequest,
+    rid: Option<&str>,
+) -> HttpResponse {
     match (req.method.as_str(), Route::of_path(&req.path)) {
         ("GET", Route::Healthz) => healthz(state),
         ("GET", Route::Metrics) => metrics_route(state, metrics),
@@ -151,9 +205,11 @@ fn dispatch(state: &ServiceState, metrics: &Metrics, req: &HttpRequest) -> HttpR
         ("GET", Route::KernelsV2) => v2_list_kernels(state),
         ("POST", Route::PredictV2) => v2_predict(state, req),
         ("POST", Route::AdviseV2) => v2_advise(state, req),
-        ("POST", Route::PlanV2) => v2_plan(state, req),
-        ("POST", Route::ObservationsV2) => v2_observations(state, req),
+        ("POST", Route::PlanV2) => v2_plan(state, metrics, req, rid),
+        ("POST", Route::ObservationsV2) => v2_observations(state, req, rid),
         ("GET", Route::DebugTraces) => debug_traces(state),
+        ("GET", Route::DebugPlans) => debug_plans(state),
+        ("GET", Route::DebugDrift) => debug_drift(state),
         (_, Route::Other) => error_json(404, "unknown_route", "unknown route"),
         _ => error_json(405, "method_not_allowed", "method not allowed for this route"),
     }
@@ -179,6 +235,8 @@ fn metrics_route(state: &ServiceState, metrics: &Metrics) -> HttpResponse {
         state.started.elapsed(),
         state.engine.backend_name(),
         &state.accuracy.snapshot(),
+        state.accuracy.dropped_total(),
+        state.events.as_ref().map(|e| (e.emitted_total(), e.dropped_total())),
     );
     HttpResponse::text(200, text)
 }
@@ -190,7 +248,7 @@ fn metrics_route(state: &ServiceState, metrics: &Metrics) -> HttpResponse {
 ///
 /// Items are validated and resolved in full before any window is
 /// touched, so a malformed batch leaves the accuracy state untouched.
-fn v2_observations(state: &ServiceState, req: &HttpRequest) -> HttpResponse {
+fn v2_observations(state: &ServiceState, req: &HttpRequest, rid: Option<&str>) -> HttpResponse {
     let body = match parse_body(req) {
         Ok(v) => v,
         Err(resp) => return resp,
@@ -264,13 +322,44 @@ fn v2_observations(state: &ServiceState, req: &HttpRequest) -> HttpResponse {
             Ok(est) => est,
             Err(e) => return error_json(500, "internal", &format!("prediction failed: {e}")),
         };
-        let err_pct = state
-            .accuracy
-            .observe(&did.to_string(), &kid.to_string(), est.time_us, measured_us);
-        if err_pct.is_none() {
+        let obs = state.accuracy.observe_detailed(
+            &did.to_string(),
+            &kid.to_string(),
+            est.time_us,
+            measured_us,
+        );
+        if obs.is_none() {
             dropped += 1;
         }
         let fallback_pct = ((est.time_us - measured_us) / measured_us).abs() * 100.0;
+        if let Some(sink) = &state.events {
+            let mut ev = vec![("event", Value::str("observation"))];
+            if let Some(rid) = rid {
+                ev.push(("request_id", Value::str(rid)));
+            }
+            ev.push(("device", Value::str(did.to_string())));
+            ev.push(("kernel", Value::str(kid.to_string())));
+            ev.push(("predicted_us", Value::num(est.time_us)));
+            ev.push(("measured_us", Value::num(measured_us)));
+            ev.push((
+                "abs_pct_error",
+                Value::num(obs.map(|o| o.err_pct).unwrap_or(fallback_pct)),
+            ));
+            ev.push(("dropped", Value::Bool(obs.is_none())));
+            sink.emit(Value::obj(ev).render());
+            if let Some(o) = obs.filter(|o| o.transitioned()) {
+                let mut ev = vec![("event", Value::str("drift_transition"))];
+                if let Some(rid) = rid {
+                    ev.push(("request_id", Value::str(rid)));
+                }
+                ev.push(("device", Value::str(did.to_string())));
+                ev.push(("kernel", Value::str(kid.to_string())));
+                ev.push(("from", Value::str(o.prev_state.name())));
+                ev.push(("to", Value::str(o.state.name())));
+                ev.push(("ewma_pct", Value::num(o.ewma_pct)));
+                sink.emit(Value::obj(ev).render());
+            }
+        }
         results.push(Value::obj(vec![
             ("device", Value::str(did.to_string())),
             ("kernel", Value::str(kid.to_string())),
@@ -278,7 +367,7 @@ fn v2_observations(state: &ServiceState, req: &HttpRequest) -> HttpResponse {
             ("mem_mhz", Value::num(point.mem_mhz)),
             ("predicted_us", Value::num(est.time_us)),
             ("measured_us", Value::num(measured_us)),
-            ("abs_pct_error", Value::num(err_pct.unwrap_or(fallback_pct))),
+            ("abs_pct_error", Value::num(obs.map(|o| o.err_pct).unwrap_or(fallback_pct))),
         ]));
     }
 
@@ -329,6 +418,149 @@ fn trace_json(t: &TraceRecord) -> Value {
             ]),
         ),
         ("slab_calls", Value::num(t.slab_calls as f64)),
+    ])
+}
+
+/// `GET /debug/plans`: dump the retained solve provenance, newest
+/// first — plan ids, correlation keys, totals and the full telemetry
+/// block, so "why did plan-N place job 3 there" survives the response.
+fn debug_plans(state: &ServiceState) -> HttpResponse {
+    let records = state.plans.snapshot();
+    let items: Vec<Value> = records.iter().map(plan_record_json).collect();
+    let count = items.len();
+    let resp = Value::obj(vec![
+        ("plans", Value::arr(items)),
+        ("count", Value::num(count as f64)),
+        ("capacity", Value::num(state.plans.capacity() as f64)),
+        ("recorded_total", Value::num(state.plans.recorded_total() as f64)),
+        ("dropped_total", Value::num(state.plans.dropped_total() as f64)),
+    ]);
+    HttpResponse::json(200, resp.render_sized(256 + 1024 * count))
+}
+
+fn plan_record_json(p: &PlanRecord) -> Value {
+    Value::obj(vec![
+        ("plan_id", Value::str(p.report.plan_id_str())),
+        (
+            "request_id",
+            match &p.request_id {
+                Some(r) => Value::str(r.clone()),
+                None => Value::Null,
+            },
+        ),
+        ("objective", Value::str(p.objective)),
+        ("jobs", Value::num(p.jobs.len() as f64)),
+        ("total_energy_mj", Value::num(p.total_energy_mj)),
+        ("max_time_us", Value::num(p.max_time_us)),
+        (
+            "energy_savings_pct",
+            match p.energy_savings_pct {
+                Some(s) => Value::num(s),
+                None => Value::Null,
+            },
+        ),
+        ("telemetry", telemetry_json(&p.report, &p.jobs)),
+    ])
+}
+
+/// `GET /debug/drift`: every accuracy series worst-first (highest
+/// drift state, then highest EWMA) — the refit worklist for the
+/// calibration loop.
+fn debug_drift(state: &ServiceState) -> HttpResponse {
+    let series = state.accuracy.drift_snapshot();
+    let items: Vec<Value> = series
+        .iter()
+        .map(|s| {
+            Value::obj(vec![
+                ("device", Value::str(s.device.clone())),
+                ("kernel", Value::str(s.kernel.clone())),
+                ("state", Value::str(s.state.name())),
+                ("ewma_pct", Value::num(s.ewma_pct)),
+                ("mape_pct", Value::num(s.mape_pct)),
+                ("window", Value::num(s.window as f64)),
+                ("samples", Value::num(s.samples as f64)),
+            ])
+        })
+        .collect();
+    let count = items.len();
+    let resp = Value::obj(vec![
+        ("series", Value::arr(items)),
+        ("count", Value::num(count as f64)),
+        ("samples_dropped_total", Value::num(state.accuracy.dropped_total() as f64)),
+    ]);
+    HttpResponse::json(200, resp.render_sized(128 + 192 * count))
+}
+
+/// The `"telemetry"` block of a `/v2/plan` response (and of each
+/// `/debug/plans` record): the solve's phase spans, work counters and
+/// per-assignment provenance. `names` maps `Explain::job` to job
+/// names.
+fn telemetry_json(r: &SolveReport, names: &[String]) -> Value {
+    Value::obj(vec![
+        ("plan_id", Value::str(r.plan_id_str())),
+        (
+            "phase_us",
+            Value::obj(vec![
+                ("build", Value::num(r.build_us)),
+                ("greedy", Value::num(r.greedy_us)),
+                ("repair", Value::num(r.repair_us)),
+                ("swap", Value::num(r.swap_us)),
+                ("total", Value::num(r.total_us)),
+            ]),
+        ),
+        (
+            "counters",
+            Value::obj(vec![
+                ("candidates_evaluated", Value::num(r.candidates_evaluated as f64)),
+                ("slab_calls", Value::num(r.slab_calls as f64)),
+                ("relocations_tried", Value::num(r.relocations_tried as f64)),
+                ("relocations_accepted", Value::num(r.relocations_accepted as f64)),
+                ("swaps_tried", Value::num(r.swaps_tried as f64)),
+                ("swaps_accepted", Value::num(r.swaps_accepted as f64)),
+            ]),
+        ),
+        (
+            "explains",
+            Value::arr(r.explains.iter().map(|e| explain_json(e, names)).collect()),
+        ),
+    ])
+}
+
+fn explain_json(e: &Explain, names: &[String]) -> Value {
+    Value::obj(vec![
+        ("job", Value::num(e.job as f64)),
+        (
+            "name",
+            match names.get(e.job) {
+                Some(n) => Value::str(n.clone()),
+                None => Value::Null,
+            },
+        ),
+        (
+            "deadline_slack_us",
+            match e.deadline_slack_us {
+                Some(s) => Value::num(s),
+                None => Value::Null,
+            },
+        ),
+        ("energy_delta_vs_max_mj", Value::num(e.energy_delta_vs_max_mj)),
+        (
+            "runner_up",
+            match &e.runner_up {
+                Some(r) => runner_up_json(r),
+                None => Value::Null,
+            },
+        ),
+    ])
+}
+
+fn runner_up_json(r: &RunnerUp) -> Value {
+    Value::obj(vec![
+        ("core_mhz", Value::num(r.point.core_mhz)),
+        ("mem_mhz", Value::num(r.point.mem_mhz)),
+        ("time_us", Value::num(r.time_us)),
+        ("energy_mj", Value::num(r.energy_mj)),
+        ("rejected_by", Value::str(r.rejected_by)),
     ])
 }
 
@@ -1105,8 +1337,16 @@ fn plan_error(e: &PlanError) -> HttpResponse {
 /// (core, mem) operating points, minimizing total energy (or EDP)
 /// while meeting every per-job deadline. The response carries the
 /// max-frequency baseline for the same fleet so callers can see what
-/// the plan saves.
-fn v2_plan(state: &ServiceState, req: &HttpRequest) -> HttpResponse {
+/// the plan saves. Every response carries a fresh `plan_id` and the
+/// solve's `"telemetry"` block; the solve is retained in the
+/// provenance ring (`GET /debug/plans`) and folded into the
+/// `planner_*` series in `/metrics`.
+fn v2_plan(
+    state: &ServiceState,
+    metrics: &Metrics,
+    req: &HttpRequest,
+    rid: Option<&str>,
+) -> HttpResponse {
     let body = match parse_body(req) {
         Ok(v) => v,
         Err(resp) => return resp,
@@ -1263,6 +1503,34 @@ fn v2_plan(state: &ServiceState, req: &HttpRequest) -> HttpResponse {
         Err(e) => return plan_error(&e),
     };
 
+    metrics.record_solve(&planned.report);
+    let names: Vec<String> = jobs.iter().map(|j| j.name.clone()).collect();
+    let savings = baseline.as_ref().map(|b| planned.energy_savings_pct_vs(b));
+    state.plans.record(PlanRecord {
+        request_id: rid.map(str::to_string),
+        objective: planned.objective.name(),
+        jobs: names.clone(),
+        total_energy_mj: planned.total_energy_mj,
+        max_time_us: planned.max_time_us,
+        energy_savings_pct: savings,
+        report: planned.report.clone(),
+    });
+    if let Some(sink) = &state.events {
+        let mut ev = vec![
+            ("event", Value::str("solve")),
+            ("plan_id", Value::str(planned.report.plan_id_str())),
+        ];
+        if let Some(rid) = rid {
+            ev.push(("request_id", Value::str(rid)));
+        }
+        ev.push(("objective", Value::str(planned.objective.name())));
+        ev.push(("jobs", Value::num(names.len() as f64)));
+        ev.push(("total_energy_mj", Value::num(planned.total_energy_mj)));
+        ev.push(("max_time_us", Value::num(planned.max_time_us)));
+        ev.push(("solve_us", Value::num(planned.report.total_us)));
+        sink.emit(Value::obj(ev).render());
+    }
+
     let assignments: Vec<Value> = planned
         .assignments
         .iter()
@@ -1287,6 +1555,7 @@ fn v2_plan(state: &ServiceState, req: &HttpRequest) -> HttpResponse {
         })
         .collect();
     let mut fields = vec![
+        ("plan_id", Value::str(planned.report.plan_id_str())),
         ("objective", Value::str(planned.objective.name())),
         ("assignments", Value::arr(assignments)),
         ("count", Value::num(planned.assignments.len() as f64)),
@@ -1296,7 +1565,6 @@ fn v2_plan(state: &ServiceState, req: &HttpRequest) -> HttpResponse {
         ("swaps_applied", Value::num(planned.swaps_applied as f64)),
     ];
     if let Some(b) = baseline {
-        let savings = planned.energy_savings_pct_vs(&b);
         fields.push((
             "baseline",
             Value::obj(vec![
@@ -1308,12 +1576,17 @@ fn v2_plan(state: &ServiceState, req: &HttpRequest) -> HttpResponse {
                 ),
             ]),
         ));
-        fields.push(("energy_savings_pct", Value::num(savings)));
+        fields.push((
+            "energy_savings_pct",
+            Value::num(savings.expect("savings computed alongside the baseline")),
+        ));
     }
+    fields.push(("telemetry", telemetry_json(&planned.report, &names)));
     // ~240 bytes per assignment (ten named numeric/string fields) plus
-    // envelope and baseline block — pre-sized for fleet-sized plans.
+    // envelope, baseline block and telemetry (explains add ~150 bytes
+    // per job) — pre-sized for fleet-sized plans.
     let n_assigned = planned.assignments.len();
-    HttpResponse::json(200, Value::obj(fields).render_sized(300 + 240 * n_assigned))
+    HttpResponse::json(200, Value::obj(fields).render_sized(600 + 400 * n_assigned))
 }
 
 #[cfg(test)]
@@ -2131,5 +2404,156 @@ mod tests {
         // Traces are GET-only.
         let r = handle(&st, &m, &post("/debug/traces", ""));
         assert_eq!((r.status, code_of(&r).as_str()), (405, "method_not_allowed"));
+    }
+
+    #[test]
+    fn v2_plan_carries_plan_id_and_telemetry() {
+        let st = state();
+        let m = Metrics::default();
+        let body = r#"{"jobs":[{"kernel":"VA","name":"one"},{"kernel":"VA","scale":2}]}"#;
+        let r = handle(&st, &m, &post("/v2/plan", body));
+        assert_eq!(r.status, 200, "{}", r.body);
+        let v = Value::parse(&r.body).unwrap();
+        let plan_id = v.get("plan_id").and_then(Value::as_str).unwrap().to_string();
+        assert!(plan_id.starts_with("plan-"), "{plan_id}");
+        let t = v.get("telemetry").expect("telemetry block");
+        assert_eq!(t.get("plan_id").and_then(Value::as_str), Some(plan_id.as_str()));
+        // One kernel on one device over the 49-pair default grid.
+        let c = t.get("counters").unwrap();
+        assert_eq!(c.get("candidates_evaluated").and_then(Value::as_f64), Some(49.0));
+        assert_eq!(c.get("slab_calls").and_then(Value::as_f64), Some(1.0));
+        let phases = t.get("phase_us").unwrap();
+        let total = phases.get("total").and_then(Value::as_f64).unwrap();
+        assert!(total > 0.0);
+        for key in ["build", "greedy", "repair", "swap"] {
+            assert!(phases.get(key).and_then(Value::as_f64).unwrap() >= 0.0, "{key}");
+        }
+        let explains = t.get("explains").and_then(Value::as_array).unwrap();
+        assert_eq!(explains.len(), 2);
+        assert_eq!(explains[0].get("name").and_then(Value::as_str), Some("one"));
+        assert_eq!(explains[1].get("name").and_then(Value::as_str), Some("job-1"));
+        // The solve landed in the provenance ring and the /metrics
+        // planner series.
+        assert_eq!(st.plans.snapshot().len(), 1);
+        let mx = handle(&st, &m, &get("/metrics"));
+        assert!(mx.body.contains("planner_solves_total 1"), "{}", mx.body);
+        assert!(mx.body.contains("planner_candidates_evaluated_total 49"));
+        assert!(mx.body.contains("planner_phase_us_count{phase=\"total\"} 1"));
+    }
+
+    #[test]
+    fn debug_plans_round_trips_the_provenance_ring() {
+        let st = state();
+        let m = Metrics::default();
+        // No solves yet: an empty, well-formed dump.
+        let r = handle(&st, &m, &get("/debug/plans"));
+        assert_eq!(r.status, 200, "{}", r.body);
+        let v = Value::parse(&r.body).unwrap();
+        assert_eq!(v.get("count").and_then(Value::as_f64), Some(0.0));
+        assert_eq!(v.get("capacity").and_then(Value::as_f64), Some(DEFAULT_PLAN_RING as f64));
+
+        // Two solves; the dump is newest-first and carries correlation
+        // keys and full telemetry. The second request has a request id.
+        let body = r#"{"jobs":[{"kernel":"VA","name":"alpha"}]}"#;
+        assert_eq!(handle(&st, &m, &post("/v2/plan", body)).status, 200);
+        let r2 = handle_traced(&st, &m, &post("/v2/plan", body), Some("req-42"));
+        let plan2 =
+            Value::parse(&r2.body).unwrap().get("plan_id").and_then(Value::as_str).unwrap().to_string();
+        let r = handle(&st, &m, &get("/debug/plans"));
+        let v = Value::parse(&r.body).unwrap();
+        assert_eq!(v.get("count").and_then(Value::as_f64), Some(2.0));
+        let plans = v.get("plans").and_then(Value::as_array).unwrap();
+        assert_eq!(plans[0].get("plan_id").and_then(Value::as_str), Some(plan2.as_str()));
+        assert_eq!(plans[0].get("request_id").and_then(Value::as_str), Some("req-42"));
+        assert!(matches!(plans[1].get("request_id"), Some(Value::Null)));
+        assert_eq!(plans[0].get("jobs").and_then(Value::as_f64), Some(1.0));
+        let t = plans[0].get("telemetry").expect("telemetry retained");
+        let explains = t.get("explains").and_then(Value::as_array).unwrap();
+        assert_eq!(explains[0].get("name").and_then(Value::as_str), Some("alpha"));
+        // Plans are GET-only.
+        let r = handle(&st, &m, &post("/debug/plans", ""));
+        assert_eq!((r.status, code_of(&r).as_str()), (405, "method_not_allowed"));
+    }
+
+    #[test]
+    fn debug_drift_lists_series_worst_first() {
+        let st = state();
+        let m = Metrics::default();
+        let want = st.engine.predict_one(&counters(), 700.0, 700.0).unwrap();
+        // One calibrated series and one badly drifted series (50% err).
+        let ok_body = format!(
+            r#"{{"observations":[{{"device":"dev-1","kernel":"VA","core_mhz":700,"mem_mhz":700,"measured_us":{}}}]}}"#,
+            want.time_us
+        );
+        assert_eq!(handle(&st, &m, &post("/v2/observations", &ok_body)).status, 200);
+        st.register_kernel("drifty", counters());
+        let bad_body = format!(
+            r#"{{"observations":[{{"device":"dev-1","kernel":"drifty","core_mhz":700,"mem_mhz":700,"measured_us":{}}}]}}"#,
+            2.0 * want.time_us
+        );
+        assert_eq!(handle(&st, &m, &post("/v2/observations", &bad_body)).status, 200);
+        let r = handle(&st, &m, &get("/debug/drift"));
+        assert_eq!(r.status, 200, "{}", r.body);
+        let v = Value::parse(&r.body).unwrap();
+        assert_eq!(v.get("count").and_then(Value::as_f64), Some(2.0));
+        assert_eq!(v.get("samples_dropped_total").and_then(Value::as_f64), Some(0.0));
+        let series = v.get("series").and_then(Value::as_array).unwrap();
+        // Worst first: the 50%-error series leads in Critical.
+        assert_eq!(series[0].get("kernel").and_then(Value::as_str), Some("krn-2"));
+        assert_eq!(series[0].get("state").and_then(Value::as_str), Some("critical"));
+        assert_eq!(series[1].get("state").and_then(Value::as_str), Some("ok"));
+        assert!(series[0].get("ewma_pct").and_then(Value::as_f64).unwrap() > 25.0);
+        // ... and /metrics carries the matching gauges.
+        let mx = handle(&st, &m, &get("/metrics"));
+        assert!(mx.body.contains("model_drift_state{device=\"dev-1\",kernel=\"krn-2\"} 2"));
+        assert!(mx.body.contains("model_drift_state{device=\"dev-1\",kernel=\"krn-1\"} 0"));
+        assert!(mx.body.contains("model_samples_dropped_total 0"));
+        // Drift is GET-only.
+        let r = handle(&st, &m, &post("/debug/drift", ""));
+        assert_eq!((r.status, code_of(&r).as_str()), (405, "method_not_allowed"));
+    }
+
+    #[test]
+    fn event_log_captures_solves_observations_and_drift_transitions() {
+        let mut path = std::env::temp_dir();
+        path.push(format!("gpufreq-routes-events-{}.jsonl", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        {
+            let mut st = state();
+            st.events = Some(Arc::new(crate::obs::EventSink::to_path(&path).unwrap()));
+            let m = Metrics::default();
+            let r = handle_traced(
+                &st,
+                &m,
+                &post("/v2/plan", r#"{"jobs":[{"kernel":"VA"}]}"#),
+                Some("req-ev"),
+            );
+            assert_eq!(r.status, 200, "{}", r.body);
+            let want = st.engine.predict_one(&counters(), 700.0, 700.0).unwrap();
+            let body = format!(
+                r#"{{"observations":[{{"device":"dev-1","kernel":"VA","core_mhz":700,"mem_mhz":700,"measured_us":{}}}]}}"#,
+                2.0 * want.time_us
+            );
+            assert_eq!(handle_traced(&st, &m, &post("/v2/observations", &body), Some("req-ev")).status, 200);
+            // The event-log counters surface in /metrics.
+            let mx = handle(&st, &m, &get("/metrics"));
+            assert!(mx.body.contains("service_event_log_enabled 1"), "{}", mx.body);
+            assert!(mx.body.contains("service_events_emitted_total 3"), "{}", mx.body);
+            // Dropping the state drops the sink: flush + join.
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<Value> = text.lines().map(|l| Value::parse(l).unwrap()).collect();
+        assert_eq!(lines.len(), 3, "{text}");
+        assert_eq!(lines[0].get("event").and_then(Value::as_str), Some("solve"));
+        assert!(lines[0].get("plan_id").and_then(Value::as_str).unwrap().starts_with("plan-"));
+        assert_eq!(lines[0].get("request_id").and_then(Value::as_str), Some("req-ev"));
+        assert_eq!(lines[1].get("event").and_then(Value::as_str), Some("observation"));
+        assert!((lines[1].get("abs_pct_error").and_then(Value::as_f64).unwrap() - 50.0).abs() < 1e-9);
+        // A 50% seed EWMA escalates Ok → Critical on the first sample.
+        assert_eq!(lines[2].get("event").and_then(Value::as_str), Some("drift_transition"));
+        assert_eq!(lines[2].get("from").and_then(Value::as_str), Some("ok"));
+        assert_eq!(lines[2].get("to").and_then(Value::as_str), Some("critical"));
+        assert_eq!(lines[2].get("request_id").and_then(Value::as_str), Some("req-ev"));
+        let _ = std::fs::remove_file(&path);
     }
 }

@@ -53,7 +53,7 @@ use super::http::{self, HttpRequest, HttpResponse};
 use super::json::Value;
 use super::metrics::{Metrics, Route};
 use super::routes::{self, ServiceState};
-use crate::obs::{Stage, TraceRecord, TraceRing, DEFAULT_TRACE_CAPACITY};
+use crate::obs::{EventSink, Ring, Stage, TraceRecord, TraceRing, DEFAULT_TRACE_CAPACITY};
 use crate::util::fxhash::FxHashMap;
 
 /// Tunables for [`Service::start`].
@@ -87,6 +87,15 @@ pub struct ServiceConfig {
     /// (the bench harness's untraced baseline); `X-Request-Id` echo and
     /// the per-stage `/metrics` histograms stay on either way.
     pub trace_capacity: usize,
+    /// Capacity of the plan-provenance ring (`--plan-ring`): the last N
+    /// `/v2/plan` solves retained for `GET /debug/plans`, telemetry and
+    /// explanations included. 0 disables retention.
+    pub plan_ring: usize,
+    /// Opt-in structured event log (`--event-log PATH`): append JSONL
+    /// records (request_span / solve / observation / drift_transition)
+    /// to this file via a bounded channel and a dedicated writer thread.
+    /// `None` disables emission entirely.
+    pub event_log: Option<std::path::PathBuf>,
 }
 
 impl Default for ServiceConfig {
@@ -104,6 +113,8 @@ impl Default for ServiceConfig {
             write_timeout: Duration::from_secs(10),
             slow_us: 0.0,
             trace_capacity: DEFAULT_TRACE_CAPACITY,
+            plan_ring: routes::DEFAULT_PLAN_RING,
+            event_log: None,
         }
     }
 }
@@ -440,8 +451,15 @@ impl Service {
     pub fn start(mut state: ServiceState, cfg: ServiceConfig) -> Result<Service> {
         // The trace ring is sized by the server config, not the state
         // constructor: rebuild it here so `--trace-capacity 0` really
-        // disables retention and `--slow-us` takes effect.
+        // disables retention and `--slow-us` takes effect. Same for the
+        // plan-provenance ring and the opt-in event-log sink.
         state.traces = Arc::new(TraceRing::new(cfg.trace_capacity, cfg.slow_us));
+        state.plans = Arc::new(Ring::new(cfg.plan_ring));
+        if let Some(path) = &cfg.event_log {
+            let sink = EventSink::to_path(path)
+                .with_context(|| format!("opening event log {}", path.display()))?;
+            state.events = Some(Arc::new(sink));
+        }
         let listener =
             TcpListener::bind(&cfg.addr).with_context(|| format!("binding {}", cfg.addr))?;
         listener.set_nonblocking(true).context("listener nonblocking")?;
@@ -528,7 +546,8 @@ fn exec_loop(shared: Arc<Shared>) {
             (shared.state.engine.cache_stats(), shared.state.engine.compute_stats())
         });
         let compute_start = Instant::now();
-        let mut resp = routes::handle(&shared.state, &shared.metrics, &w.req);
+        let mut resp =
+            routes::handle_traced(&shared.state, &shared.metrics, &w.req, Some(&w.spans.id));
         let compute = compute_start.elapsed();
         shared.metrics.record(w.route, resp.status, w.submitted.elapsed());
         resp.close = resp.close || !w.keep_alive || shared.is_shutdown();
@@ -692,9 +711,6 @@ fn finish_trace(shared: &Shared, t: PendingTrace, render: Duration, flush: Durat
     m.record_stage(Stage::Compute, t.compute);
     m.record_stage(Stage::Render, render);
     m.record_stage(Stage::Flush, flush);
-    if !shared.state.traces.enabled() {
-        return;
-    }
     let us = |d: Duration| d.as_secs_f64() * 1e6;
     let mut stages_us = [0.0; Stage::COUNT];
     stages_us[Stage::Accept.index()] = us(t.accept);
@@ -703,6 +719,35 @@ fn finish_trace(shared: &Shared, t: PendingTrace, render: Duration, flush: Durat
     stages_us[Stage::Compute.index()] = us(t.compute);
     stages_us[Stage::Render.index()] = us(render);
     stages_us[Stage::Flush.index()] = us(flush);
+    // The event log sees every request regardless of trace retention:
+    // the ring answers "what was slow lately", the log is the durable
+    // correlation record (request_id joins it to solve/observation
+    // events emitted by the handlers).
+    if let Some(sink) = &shared.state.events {
+        let total: f64 = stages_us.iter().sum();
+        sink.emit(
+            Value::obj(vec![
+                ("event", Value::str("request_span")),
+                ("request_id", Value::str(t.id.clone())),
+                ("route", Value::str(t.route.name())),
+                ("status", Value::num(f64::from(t.status))),
+                ("total_us", Value::num(total)),
+                (
+                    "stages_us",
+                    Value::obj(
+                        Stage::ALL
+                            .iter()
+                            .map(|s| (s.name(), Value::num(stages_us[s.index()])))
+                            .collect(),
+                    ),
+                ),
+            ])
+            .render(),
+        );
+    }
+    if !shared.state.traces.enabled() {
+        return;
+    }
     shared.state.traces.record(TraceRecord {
         id: t.id,
         route: t.route.name(),
@@ -1181,6 +1226,46 @@ mod tests {
         assert!(svc.shared.state.traces.snapshot().is_empty());
         drop(c);
         svc.shutdown();
+    }
+
+    #[test]
+    fn event_log_and_plan_ring_are_wired_through_the_config() {
+        let mut path = std::env::temp_dir();
+        path.push(format!("gpufreq-server-events-{}.jsonl", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let cfg = ServiceConfig {
+            plan_ring: 2,
+            event_log: Some(path.clone()),
+            ..fast_cfg(1, 4)
+        };
+        let svc = Service::start(test_state(), cfg).unwrap();
+        assert_eq!(svc.shared.state.plans.capacity(), 2);
+        let mut c = Client::connect(&svc.addr()).unwrap();
+        assert_eq!(c.get("/healthz").unwrap().status, 200);
+        let r = c.post("/v2/plan", r#"{"jobs":[{"kernel":"VA"}]}"#).unwrap();
+        assert_eq!(r.status, 200, "{}", r.body);
+        let plan_rid = r.header("x-request-id").expect("id header").to_string();
+        assert_eq!(svc.shared.state.plans.snapshot().len(), 1);
+        drop(c);
+        svc.shutdown(); // drops the sink: flush + writer join
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<Value> = text.lines().map(|l| Value::parse(l).unwrap()).collect();
+        // One solve event plus a request_span per request, in emission
+        // order (the solve precedes its own span — it is emitted from
+        // the handler, the span at delivery).
+        let events: Vec<&str> =
+            lines.iter().map(|l| l.get("event").and_then(Value::as_str).unwrap()).collect();
+        assert_eq!(events, ["request_span", "solve", "request_span"], "{text}");
+        assert_eq!(lines[1].get("request_id").and_then(Value::as_str), Some(plan_rid.as_str()));
+        assert_eq!(lines[2].get("request_id").and_then(Value::as_str), Some(plan_rid.as_str()));
+        assert_eq!(lines[2].get("route").and_then(Value::as_str), Some("/v2/plan"));
+        assert_eq!(lines[2].get("status").and_then(Value::as_f64), Some(200.0));
+        assert!(lines[2].get("total_us").and_then(Value::as_f64).unwrap() > 0.0);
+        let stages = lines[2].get("stages_us").expect("stage breakdown");
+        for s in Stage::ALL {
+            assert!(stages.get(s.name()).and_then(Value::as_f64).is_some(), "{}", s.name());
+        }
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

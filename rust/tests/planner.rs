@@ -9,7 +9,7 @@ use std::sync::Arc;
 use gpufreq::dvfs::PowerModel;
 use gpufreq::engine::Engine;
 use gpufreq::model::{HwParams, KernelCounters};
-use gpufreq::planner::{max_frequency_baseline, plan, Job, PlanError, PlannerConfig};
+use gpufreq::planner::{device_grid, max_frequency_baseline, plan, Job, PlanError, PlannerConfig};
 use gpufreq::registry::{DeviceId, DeviceRegistry, KernelCatalog, KernelId};
 use gpufreq::util::prop::Rng;
 
@@ -183,4 +183,100 @@ fn plans_never_lose_to_the_max_frequency_baseline() {
         );
     }
     assert!(compared >= 10, "only {compared} comparable cases — generator drifted");
+}
+
+#[test]
+fn solve_reports_are_consistent_and_telemetry_is_passive() {
+    // Every feasible solve's SolveReport must be internally consistent
+    // — acceptance counters bounded by attempt counters, phase spans
+    // summing to no more than the total, and the candidate count equal
+    // to distinct-kernels × devices × grid-points — and running the
+    // identical problem with telemetry off must produce bit-identical
+    // assignments: provenance is an observation, never a perturbation.
+    let (engine, devices, kernels) = fixture();
+    // All three fixture devices share the gtx980 V/f curves, so each
+    // contributes the same 8-point frequency grid.
+    let grid_points = device_grid(&PowerModel::gtx980()).len();
+    let mut rng = Rng::new(0x7e1e5c0e);
+    let mut last_plan_id = 0u64;
+    for case in 0..25 {
+        let n = rng.u32(1, 20) as usize;
+        let jobs: Vec<Job> = (0..n)
+            .map(|i| {
+                let kid = kernels[rng.u32(0, kernels.len() as u32 - 1) as usize];
+                let job = Job::new(format!("c{case}-j{i}"), kid, rng.u32(1, 5) as f64);
+                // Generous-or-none deadlines keep every case feasible;
+                // infeasibility is another test's property.
+                if rng.chance(0.5) {
+                    job.with_deadline(rng.range(1e7, 1e9))
+                } else {
+                    job
+                }
+            })
+            .collect();
+        let cap = n.div_ceil(devices.len()) + rng.u32(0, 2) as usize;
+        let on_cfg = PlannerConfig { device_cap: cap, ..PlannerConfig::default() };
+        let off_cfg = PlannerConfig { telemetry: false, ..on_cfg.clone() };
+        let on = plan(&engine, &jobs, &on_cfg).expect("generous deadlines are feasible");
+        let off = plan(&engine, &jobs, &off_cfg).expect("same problem, same feasibility");
+
+        // Telemetry is passive: placements agree to the bit.
+        assert_eq!(on.assignments.len(), off.assignments.len());
+        for (a, b) in on.assignments.iter().zip(&off.assignments) {
+            assert_eq!(a.job, b.job, "case {case}");
+            assert_eq!(a.device, b.device, "case {case}");
+            assert_eq!(a.point.core_mhz.to_bits(), b.point.core_mhz.to_bits(), "case {case}");
+            assert_eq!(a.point.mem_mhz.to_bits(), b.point.mem_mhz.to_bits(), "case {case}");
+            assert_eq!(a.time_us.to_bits(), b.time_us.to_bits(), "case {case}");
+            assert_eq!(a.energy_mj.to_bits(), b.energy_mj.to_bits(), "case {case}");
+        }
+        assert_eq!(
+            on.total_energy_mj.to_bits(),
+            off.total_energy_mj.to_bits(),
+            "case {case}: totals must agree to the bit"
+        );
+
+        // Internal consistency of the telemetry-on report.
+        let r = &on.report;
+        let distinct = {
+            let mut ids: Vec<_> = jobs.iter().map(|j| j.kernel).collect();
+            ids.sort();
+            ids.dedup();
+            ids.len()
+        };
+        assert_eq!(
+            r.candidates_evaluated,
+            (distinct * devices.len() * grid_points) as u64,
+            "case {case}: candidates = distinct kernels x devices x grid points"
+        );
+        assert!(r.relocations_accepted <= r.relocations_tried, "case {case}: {r:?}");
+        assert!(r.swaps_accepted <= r.swaps_tried, "case {case}: {r:?}");
+        assert!(r.total_us > 0.0, "case {case}: telemetry-on solves are timed");
+        assert!(
+            r.phases_us() <= r.total_us * (1.0 + 1e-9) + 1e-6,
+            "case {case}: phase spans exceed the total: {r:?}"
+        );
+        assert_eq!(r.explains.len(), jobs.len(), "case {case}: one explanation per job");
+        for (j, e) in r.explains.iter().enumerate() {
+            assert_eq!(e.job, j, "case {case}");
+            assert_eq!(e.deadline_slack_us.is_some(), jobs[j].deadline_us.is_some());
+            if let Some(s) = e.deadline_slack_us {
+                assert!(s >= 0.0, "case {case}: emitted plans meet deadlines, slack {s}");
+            }
+        }
+        // The search itself is deterministic, so the work counters
+        // match whether or not the clock was read.
+        assert_eq!(r.candidates_evaluated, off.report.candidates_evaluated, "case {case}");
+        assert_eq!(r.relocations_tried, off.report.relocations_tried, "case {case}");
+        assert_eq!(r.relocations_accepted, off.report.relocations_accepted, "case {case}");
+        assert_eq!(r.swaps_tried, off.report.swaps_tried, "case {case}");
+        assert_eq!(r.swaps_accepted, off.report.swaps_accepted, "case {case}");
+        // Telemetry off: no spans, no provenance, but a fresh id.
+        assert_eq!(off.report.total_us, 0.0, "case {case}");
+        assert_eq!(off.report.phases_us(), 0.0, "case {case}");
+        assert!(off.report.explains.is_empty(), "case {case}");
+        assert!(r.plan_id > last_plan_id, "case {case}: ids are monotone");
+        assert!(off.report.plan_id > r.plan_id, "case {case}: every solve mints an id");
+        last_plan_id = off.report.plan_id;
+    }
 }

@@ -6,7 +6,9 @@
 //! planner's 422 `infeasible`), force the bounded queue to shed a 429,
 //! verify the graceful drain, and walk the observability loop:
 //! X-Request-Id minting, POST /v2/observations → live `model_mape` in
-//! /metrics, and GET /debug/traces span dumps. No curl needed anywhere.
+//! /metrics, GET /debug/traces span dumps, plan provenance behind
+//! GET /debug/plans, and drift states behind GET /debug/drift. No curl
+//! needed anywhere.
 
 use std::time::{Duration, Instant};
 
@@ -432,6 +434,88 @@ fn observations_traces_and_request_ids_round_trip() {
         }
         assert!(t.get("total_us").and_then(Value::as_f64).unwrap() > 0.0);
         assert!(t.get("id").and_then(Value::as_str).is_some());
+    }
+
+    drop(c);
+    svc.shutdown();
+}
+
+/// Plan provenance and drift telemetry over the wire: every `/v2/plan`
+/// answer carries a `plan_id` and the solver telemetry block, the solve
+/// is retained (with its request id) behind GET /debug/plans, and
+/// drifted observations surface worst-first behind GET /debug/drift.
+#[test]
+fn plan_provenance_and_drift_round_trip() {
+    let svc = Service::start(state(), cfg(2, 16)).expect("service starts");
+    let mut c = Client::connect(&svc.addr()).unwrap();
+    c.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+
+    // A solve with one named, deadline-tagged job and one anonymous one.
+    let body = r#"{"jobs":[
+        {"kernel":"VA","scale":2,"deadline_us":1e9,"name":"nightly"},
+        {"kernel":"VA"}]}"#;
+    let r = c.post("/v2/plan", body).unwrap();
+    assert_eq!(r.status, 200, "{}", r.body);
+    let rid = r.header("x-request-id").expect("minted request id").to_string();
+    let v = r.json().unwrap();
+    let plan_id = v.get("plan_id").and_then(Value::as_str).expect("plan_id").to_string();
+    assert!(plan_id.starts_with("plan-"), "{plan_id}");
+    let t = v.get("telemetry").expect("telemetry block");
+    assert_eq!(t.get("plan_id").and_then(Value::as_str), Some(plan_id.as_str()));
+    assert!(
+        t.get("phase_us").unwrap().get("total").and_then(Value::as_f64).unwrap() > 0.0,
+        "{}",
+        r.body
+    );
+    assert!(
+        t.get("counters").unwrap().get("candidates_evaluated").and_then(Value::as_f64).unwrap()
+            > 0.0
+    );
+    let explains = t.get("explains").and_then(Value::as_array).unwrap();
+    assert_eq!(explains.len(), 2, "{}", r.body);
+    assert_eq!(explains[0].get("name").and_then(Value::as_str), Some("nightly"));
+    assert!(explains[0].get("deadline_slack_us").and_then(Value::as_f64).unwrap() >= 0.0);
+
+    // The solve is retained behind /debug/plans, correlated by both ids.
+    let r = c.get("/debug/plans").unwrap();
+    assert_eq!(r.status, 200, "{}", r.body);
+    let v = r.json().unwrap();
+    assert_eq!(v.get("count").and_then(Value::as_f64), Some(1.0));
+    let plans = v.get("plans").and_then(Value::as_array).unwrap();
+    assert_eq!(plans[0].get("plan_id").and_then(Value::as_str), Some(plan_id.as_str()));
+    assert_eq!(plans[0].get("request_id").and_then(Value::as_str), Some(rid.as_str()));
+    assert_eq!(plans[0].get("jobs").and_then(Value::as_f64), Some(2.0));
+    assert!(plans[0].get("telemetry").is_some(), "{}", r.body);
+
+    // One calibrated and one badly drifted series → /debug/drift lists
+    // the critical one first.
+    let want = Engine::native(HwParams::paper_defaults())
+        .predict_one(&counters(), 700.0, 700.0)
+        .unwrap();
+    let obs = format!(
+        r#"{{"observations":[
+            {{"device":"dev-1","kernel":"VA","core_mhz":700,"mem_mhz":700,"measured_us":{m}}}]}}"#,
+        m = 2.0 * want.time_us
+    );
+    assert_eq!(c.post("/v2/observations", &obs).unwrap().status, 200);
+    let r = c.get("/debug/drift").unwrap();
+    assert_eq!(r.status, 200, "{}", r.body);
+    let v = r.json().unwrap();
+    assert_eq!(v.get("count").and_then(Value::as_f64), Some(1.0));
+    let series = v.get("series").and_then(Value::as_array).unwrap();
+    assert_eq!(series[0].get("kernel").and_then(Value::as_str), Some("krn-1"));
+    assert_eq!(series[0].get("state").and_then(Value::as_str), Some("critical"));
+    assert!(series[0].get("ewma_pct").and_then(Value::as_f64).unwrap() > 25.0);
+
+    // /metrics carries the planner and drift series the above produced.
+    let m = c.get("/metrics").unwrap();
+    for needle in [
+        "planner_solves_total 1",
+        "planner_phase_us_count{phase=\"total\"} 1",
+        "model_drift_state{device=\"dev-1\",kernel=\"krn-1\"} 2",
+        "model_samples_dropped_total 0",
+    ] {
+        assert!(m.body.contains(needle), "missing `{needle}` in:\n{}", m.body);
     }
 
     drop(c);
