@@ -1,0 +1,219 @@
+//! Streaming-scheduler bench + gate (DESIGN.md §14): drive a
+//! closed-loop arrival stream over both `configs/*.toml` GPUs on the
+//! virtual clock and measure what one job event costs. The scheduler's
+//! whole argument is that a single arrival should **not** pay the
+//! batch solver's K×D×P candidate table — repair prices at most one
+//! kernel slab (zero for a kernel already cached) — so the run records
+//! the candidate work of every individual submit and compares it
+//! against a full re-solve of the same live fleet.
+//!
+//! **Gate:** every single-job submit event must evaluate strictly
+//! fewer candidates than the full re-solve, and the steady-state
+//! events (all kernels cached) must evaluate zero. Totals and submit
+//! latencies land in `BENCH_scheduler.json` at the repo root.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use gpufreq::engine::Engine;
+use gpufreq::model::KernelCounters;
+use gpufreq::planner::{plan, Job, PlannerConfig};
+use gpufreq::registry::{DeviceRegistry, KernelCatalog, KernelId};
+use gpufreq::scheduler::{JobSpec, SchedulerConfig, SchedulerCore, SolveKind};
+use gpufreq::service::json::Value;
+use gpufreq::util::bench;
+
+const STREAM_EVENTS: usize = 400;
+const KERNELS: usize = 8;
+
+/// Synthetic kernel mix sweeping memory-boundedness and compute
+/// intensity (the planner bench's recipe), so placement is a real
+/// choice per event.
+fn counters(i: usize) -> KernelCounters {
+    KernelCounters {
+        l2_hr: (i % 10) as f64 / 10.0,
+        gld_trans: 4.0 + (i % 12) as f64,
+        avr_inst: 0.5 + 12.0 * (i % 5) as f64,
+        n_blocks: 256.0,
+        wpb: 8.0,
+        aw: 64.0,
+        n_sm: 16.0,
+        o_itrs: 8.0,
+        i_itrs: (i % 16) as f64,
+        uses_smem: i % 3 == 0,
+        smem_conflict: 1.0 + (i % 4) as f64,
+        gld_body: 4.0 + (i % 12) as f64,
+        gld_edge: (i % 8) as f64,
+        mem_ops: 1.0 + (i % 4) as f64,
+        l1_hr: 0.0,
+    }
+}
+
+fn main() {
+    bench::section("Scheduler stream: registry setup (per-device §IV probes)");
+    let configs = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("configs");
+    let registry = Arc::new(DeviceRegistry::new());
+    let primary = registry
+        .register_from_config(&configs.join("gtx980.toml"))
+        .expect("register gtx980");
+    registry
+        .register_from_config(&configs.join("gtx960.toml"))
+        .expect("register gtx960");
+    let records = registry.list();
+    println!("registered {} devices", records.len());
+    assert!(records.len() >= 2, "the stream needs every configs/*.toml device");
+
+    let catalog = Arc::new(KernelCatalog::new());
+    let kernel_ids: Vec<KernelId> = (0..KERNELS)
+        .map(|i| catalog.register(&format!("stream-{i}"), counters(i * 7 + 1)))
+        .collect();
+    let hw = registry.get(primary).expect("registered").hw;
+    let engine = Engine::native(hw)
+        .with_handles(Arc::clone(&registry), Arc::clone(&catalog), primary)
+        .expect("attach handles");
+
+    // Mean single-invocation runtime at max frequency per kernel, for
+    // arrival pacing and generous (closed-loop, queueing-aware)
+    // deadline budgets.
+    let max_point = |power: &gpufreq::dvfs::PowerModel| {
+        let core = power.core_curve.points.last().expect("non-empty curve").0;
+        let mem = power.mem_curve.points.last().expect("non-empty curve").0;
+        gpufreq::registry::FreqPoint::new(core, mem)
+    };
+    let mut worst_max_us = vec![0.0f64; kernel_ids.len()];
+    for (ki, &kid) in kernel_ids.iter().enumerate() {
+        for rec in &records {
+            let t = engine
+                .predict_handle(rec.id, kid, max_point(&rec.power))
+                .expect("predict at max frequency")
+                .time_us;
+            worst_max_us[ki] = worst_max_us[ki].max(t);
+        }
+    }
+    let mean_us = worst_max_us.iter().sum::<f64>() / worst_max_us.len() as f64;
+
+    let mut core = SchedulerCore::new(SchedulerConfig {
+        replan_interval_us: 50.0 * mean_us,
+        horizon_us: 1e6 * mean_us,
+        ..SchedulerConfig::default()
+    });
+
+    bench::section(&format!(
+        "Closed loop: {STREAM_EVENTS} arrivals x {} kernels x {} devices",
+        kernel_ids.len(),
+        records.len()
+    ));
+    // Closed loop on the virtual clock: the stream arrives at roughly
+    // the fleet's service rate (gap = the arriving job's own runtime
+    // share), so completions keep pace with arrivals and the live set
+    // stays in steady state instead of growing without bound.
+    let mut now = 0.0;
+    let mut submit_ns: Vec<f64> = Vec::with_capacity(STREAM_EVENTS);
+    let mut event_candidates: Vec<u64> = Vec::with_capacity(STREAM_EVENTS);
+    let mut peak_live = 0usize;
+    for i in 0..STREAM_EVENTS {
+        let ki = i % kernel_ids.len();
+        let scale = 1.0 + (i % 7) as f64;
+        now += scale * worst_max_us[ki] / records.len() as f64;
+        core.run_until(&engine, now);
+        let mut job = JobSpec::new(format!("job-{i}"), kernel_ids[ki], scale);
+        if i % 3 != 2 {
+            // Generous budget: queueing delay must not turn the
+            // steady-state stream into a miss parade.
+            job = job.with_deadline(8.0 * scale * worst_max_us[ki]);
+        }
+        let (cand_before, _) = core.table_counters();
+        let t0 = Instant::now();
+        core.submit(&engine, job).expect("meetable budget is admitted");
+        submit_ns.push(t0.elapsed().as_nanos() as f64);
+        let (cand_after, _) = core.table_counters();
+        event_candidates.push(cand_after - cand_before);
+        peak_live = peak_live.max(core.stats().active as usize);
+    }
+    // Drain: every admitted job reaches a terminal state.
+    core.run_until(&engine, now + 1e6 * mean_us);
+    let stats = core.stats();
+    let (transitions, solves) = core.drain_outbox();
+    let repairs = solves.iter().filter(|s| s.kind == SolveKind::Repair).count();
+    let fulls = solves.iter().filter(|s| s.kind == SolveKind::Full).count();
+    println!(
+        "admitted {} · done {} · missed {} · peak live {peak_live} · {} transitions · \
+         {repairs} repairs + {fulls} full solves",
+        stats.admitted, stats.completed, stats.missed,
+        transitions.len()
+    );
+    assert_eq!(stats.admitted, STREAM_EVENTS as u64, "every arrival is admissible");
+    assert_eq!(stats.active, 0, "the drain must terminate every job");
+
+    // ---- The full re-solve foil ----
+    // The same kernel mix as one batch: what the scheduler would pay
+    // per event without the incremental path. Its candidate table is
+    // K distinct kernels x the summed device grids.
+    let fleet: Vec<Job> = (0..kernel_ids.len())
+        .map(|i| Job::new(format!("batch-{i}"), kernel_ids[i], 1.0 + (i % 7) as f64))
+        .collect();
+    let full = plan(&engine, &fleet, &PlannerConfig::default()).expect("plannable fleet");
+    let full_candidates = full.report.candidates_evaluated;
+    println!("full re-solve candidate table: {full_candidates} entries");
+
+    // ---- The gate ----
+    // Per single-job event, repair prices at most ONE kernel slab —
+    // strictly less than the full table — and once every kernel is
+    // cached the steady-state events price zero.
+    let max_event = *event_candidates.iter().max().expect("non-empty stream");
+    let steady_max = *event_candidates[kernel_ids.len()..].iter().max().expect("stream > K");
+    assert!(
+        max_event < full_candidates,
+        "a single-job event evaluated {max_event} candidates, not strictly fewer than the \
+         full re-solve's {full_candidates}"
+    );
+    assert_eq!(
+        steady_max, 0,
+        "steady-state submits (all kernels cached) must price no new candidates"
+    );
+    let (total_candidates, total_slab_calls) = core.table_counters();
+    println!(
+        "per-event candidates: max {max_event} (first-sight) / {steady_max} (steady state) \
+         vs {full_candidates} full · lifetime {total_candidates} candidates, \
+         {total_slab_calls} slab calls"
+    );
+
+    let mut sorted = submit_ns.clone();
+    sorted.sort_by(f64::total_cmp);
+    let mean_ns = submit_ns.iter().sum::<f64>() / submit_ns.len() as f64;
+    let p50_ns = bench::percentile(&sorted, 0.50);
+    let p99_ns = bench::percentile(&sorted, 0.99);
+    println!(
+        "submit latency: mean {:.1} us · p50 {:.1} us · p99 {:.1} us",
+        mean_ns / 1e3,
+        p50_ns / 1e3,
+        p99_ns / 1e3
+    );
+
+    let out = Value::obj(vec![
+        ("bench", Value::str("scheduler_stream")),
+        ("events", Value::num(STREAM_EVENTS as f64)),
+        ("devices", Value::num(records.len() as f64)),
+        ("kernels", Value::num(kernel_ids.len() as f64)),
+        ("admitted", Value::num(stats.admitted as f64)),
+        ("completed", Value::num(stats.completed as f64)),
+        ("missed", Value::num(stats.missed as f64)),
+        ("peak_live", Value::num(peak_live as f64)),
+        ("repairs", Value::num(repairs as f64)),
+        ("full_solves", Value::num(fulls as f64)),
+        ("repair_fallbacks", Value::num(stats.repair_fallbacks as f64)),
+        ("per_event_candidates_max", Value::num(max_event as f64)),
+        ("per_event_candidates_steady", Value::num(steady_max as f64)),
+        ("full_solve_candidates", Value::num(full_candidates as f64)),
+        ("lifetime_candidates", Value::num(total_candidates as f64)),
+        ("lifetime_slab_calls", Value::num(total_slab_calls as f64)),
+        ("submit_mean_us", Value::num(mean_ns / 1e3)),
+        ("submit_p50_us", Value::num(p50_ns / 1e3)),
+        ("submit_p99_us", Value::num(p99_ns / 1e3)),
+    ]);
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("BENCH_scheduler.json");
+    std::fs::write(&path, out.render() + "\n").expect("write BENCH_scheduler.json");
+    println!("wrote {}", path.display());
+}

@@ -26,6 +26,7 @@ use crate::planner::{self, Job, PlanObjective, PlannerConfig};
 use crate::profiler;
 use crate::registry::{DeviceRegistry, KernelCatalog, KernelId};
 use crate::report::tables;
+use crate::scheduler::{Event, JobSpec, SchedulerConfig, SchedulerCore};
 use crate::service::{Service, ServiceConfig, ServiceState};
 use crate::sim::isa::Kernel;
 
@@ -56,10 +57,19 @@ COMMANDS:
                           synthesize a --jobs job fleet and print the
                           energy-minimal assignment vs. the run-at-max-
                           frequency baseline
+  jobs                    Streaming scheduler (DESIGN.md §14): replay a
+                          deterministic --jobs arrival trace on the virtual
+                          clock — admission control rejects provably-
+                          unmeetable deadlines at submit, arrivals place by
+                          incremental repair, epochs re-solve the rolling
+                          horizon — then print each job's lifecycle and the
+                          repair vs full-solve work split
   serve                   Run the standing HTTP prediction service:
                           v2 (handle protocol): POST/GET /v2/devices ·
                           POST/GET /v2/kernels · POST /v2/predict (batch) ·
                           POST /v2/advise · POST /v2/plan (fleet planner) ·
+                          POST+GET /v2/jobs · GET+DELETE /v2/jobs/{id}
+                          (streaming scheduler, DESIGN.md §14) ·
                           POST /v2/observations (live model-accuracy MAPE);
                           v1 (compat shim): POST /v1/predict · /v1/grid ·
                           /v1/advise; GET /healthz · /metrics ·
@@ -81,9 +91,9 @@ OPTIONS:
   --no-cache              Disable the engine's frequency-grid cache
   --csv                   Emit CSV instead of ASCII tables
   --objective <NAME>      advise: energy | edp | slack:<frac>;
-                          plan: energy | edp (default energy)
+                          plan/jobs: energy | edp (default energy)
   --workers <N>           sweep/validate/serve parallelism (default: # cpus)
-  --jobs <N>              plan: synthetic fleet size (default 24)
+  --jobs <N>              plan/jobs: synthetic fleet size (default 24)
   --device-cap <N>        plan: per-device concurrency cap (default 0 =
                           balanced, ceil(jobs / devices))
   --addr <HOST:PORT>      serve: bind address (default 127.0.0.1:8077; port 0
@@ -108,10 +118,16 @@ OPTIONS:
                           (default 64)
   --event-log <PATH>      serve: append structured JSONL events
                           (request_span · solve · observation ·
-                          drift_transition) to PATH; off by default. A
-                          bounded queue feeds a dedicated writer thread —
-                          overflow is dropped and counted in /metrics,
-                          never blocking a request
+                          drift_transition · job_transition) to PATH; off by
+                          default. A bounded queue feeds a dedicated writer
+                          thread — overflow is dropped and counted in
+                          /metrics, never blocking a request
+  --replan-interval <MS>  serve/jobs: streaming-scheduler re-plan epoch in
+                          milliseconds; between epochs arrivals are placed
+                          by incremental repair (default 1000)
+  --horizon <MS>          serve/jobs: rolling planning horizon in
+                          milliseconds — queued jobs whose deadline lies
+                          beyond it wait for a later epoch (default 30000)
 ";
 
 /// Parsed command line.
@@ -135,6 +151,8 @@ pub struct Args {
     pub explain: bool,
     pub plan_ring: usize,
     pub event_log: Option<PathBuf>,
+    pub replan_interval_ms: f64,
+    pub horizon_ms: f64,
 }
 
 impl Default for Args {
@@ -158,6 +176,8 @@ impl Default for Args {
             explain: false,
             plan_ring: crate::service::DEFAULT_PLAN_RING,
             event_log: None,
+            replan_interval_ms: 1_000.0,
+            horizon_ms: 30_000.0,
         }
     }
 }
@@ -257,6 +277,26 @@ pub fn parse_args(argv: &[String]) -> Result<Args> {
             "--event-log" => {
                 args.event_log =
                     Some(PathBuf::from(it.next().context("--event-log needs a path")?))
+            }
+            "--replan-interval" => {
+                args.replan_interval_ms = it
+                    .next()
+                    .context("--replan-interval needs a number of milliseconds")?
+                    .parse()
+                    .context("--replan-interval must be a number of milliseconds")?;
+                if !(args.replan_interval_ms.is_finite() && args.replan_interval_ms > 0.0) {
+                    bail!("--replan-interval must be finite and positive");
+                }
+            }
+            "--horizon" => {
+                args.horizon_ms = it
+                    .next()
+                    .context("--horizon needs a number of milliseconds")?
+                    .parse()
+                    .context("--horizon must be a number of milliseconds")?;
+                if !(args.horizon_ms.is_finite() && args.horizon_ms > 0.0) {
+                    bail!("--horizon must be finite and positive");
+                }
             }
             flag if flag.starts_with("--") => bail!("unknown flag {flag}"),
             pos => args.positional.push(pos.to_string()),
@@ -553,6 +593,9 @@ pub fn run(args: Args) -> Result<i32> {
         "plan" => {
             run_plan(&args, &cfg)?;
         }
+        "jobs" => {
+            run_jobs(&args, &cfg)?;
+        }
         "serve" => {
             run_serve(&args, &cfg)?;
         }
@@ -831,6 +874,169 @@ fn run_plan(args: &Args, cfg: &Config) -> Result<()> {
     Ok(())
 }
 
+/// `gpufreq jobs`: the streaming scheduler (DESIGN.md §14) replayed on
+/// the virtual clock. Registers every configs/*.toml device, profiles
+/// the selected kernels once, then drives a deterministic arrival
+/// trace through [`SchedulerCore`]: admission control rejects a
+/// scripted provably-unmeetable deadline at submit, arrivals place by
+/// incremental repair, re-plan epochs sweep the rolling horizon, and a
+/// mid-trace device bounce displaces and re-places work. Ends with the
+/// per-job lifecycle table and the repair vs full-solve work split.
+fn run_jobs(args: &Args, cfg: &Config) -> Result<()> {
+    let spec = cfg.gpu.clone();
+    let baseline = cfg.sweep.baseline();
+    let registry = Arc::new(DeviceRegistry::new());
+    for path in discover_configs(args)? {
+        registry
+            .register_from_config(&path)
+            .with_context(|| format!("registering {}", path.display()))?;
+    }
+    let records = registry.list();
+    let primary = records.first().expect("discover_configs is non-empty").clone();
+
+    let catalog = Arc::new(KernelCatalog::new());
+    let ks = selected_kernels(args, cfg)?;
+    // Same one-shot counter pass as `plan`: profile on scoped threads,
+    // register serially for deterministic handle numbering.
+    let mut profiled: Vec<Option<(KernelCounters, f64)>> = vec![None; ks.len()];
+    std::thread::scope(|scope| {
+        for (slot, k) in profiled.iter_mut().zip(&ks) {
+            let spec = &spec;
+            scope.spawn(move || {
+                let p = profiler::profile_at(spec, k, baseline);
+                *slot = Some((p.counters, p.baseline_time_us));
+            });
+        }
+    });
+    let kernels: Vec<(KernelId, f64)> = ks
+        .iter()
+        .zip(profiled)
+        .map(|(k, p)| {
+            let (counters, base_us) = p.expect("profiled");
+            (catalog.register(&k.name, counters), base_us)
+        })
+        .collect();
+
+    let engine =
+        build_engine(args, primary.hw)?.with_handles(Arc::clone(&registry), catalog, primary.id)?;
+
+    let n = args.jobs.max(1);
+    let device_cap = if args.device_cap == 0 {
+        n.div_ceil(records.len())
+    } else {
+        args.device_cap
+    };
+    let objective = match args.objective.as_str() {
+        "energy" => PlanObjective::Energy,
+        "edp" => PlanObjective::Edp,
+        other => bail!("jobs supports --objective energy | edp (got {other})"),
+    };
+    let mut core = SchedulerCore::new(SchedulerConfig {
+        replan_interval_us: args.replan_interval_ms * 1e3,
+        horizon_us: args.horizon_ms * 1e3,
+        planner: PlannerConfig { objective, device_cap, ..PlannerConfig::default() },
+        ..SchedulerConfig::default()
+    });
+
+    // Deterministic arrival trace: bursty inter-arrival gaps scaled by
+    // the mean baseline runtime, workload scale 1–5×, and two jobs in
+    // three carrying a meetable deadline (the `plan` recipe). Job n/2
+    // is scripted provably unmeetable so admission has something to
+    // reject, and the last device bounces down/up around the same
+    // burst so displacement and re-placement both show up.
+    const GAPS: [f64; 5] = [0.2, 1.1, 0.4, 1.9, 0.7];
+    let mean_us = kernels.iter().map(|&(_, b)| b).sum::<f64>() / kernels.len() as f64;
+    let bounce = records.last().expect("non-empty").id;
+    let mut now = 0.0;
+    let mut rejected = Vec::new();
+    for i in 0..n {
+        now += GAPS[i % GAPS.len()] * mean_us;
+        core.run_until(&engine, now);
+        if records.len() > 1 && i == n / 2 {
+            core.schedule(now, Event::DeviceDown(bounce));
+            core.schedule(now + 2.0 * mean_us, Event::DeviceUp(bounce));
+        }
+        let (kid, base_us) = kernels[i % kernels.len()];
+        let scale = (1 + i % 5) as f64;
+        let mut job = JobSpec::new(format!("{}-{i}", ks[i % ks.len()].name), kid, scale);
+        if i == n / 2 {
+            // No frequency finishes any kernel in a nanosecond.
+            job = job.with_deadline(1e-3);
+        } else if i % 3 != 0 {
+            let headroom = if i % 2 == 0 { 2.0 } else { 3.0 };
+            job = job.with_deadline(headroom * scale * base_us);
+        }
+        if let Err(e) = core.submit(&engine, job) {
+            rejected.push((format!("{}-{i}", ks[i % ks.len()].name), e.to_string()));
+        }
+    }
+    // Roll the clock far past every predicted completion so each
+    // admitted job reaches a terminal state.
+    core.run_until(&engine, now + 1e4 * mean_us * n as f64);
+
+    let mut t = crate::report::Table::new(
+        &format!(
+            "Streaming schedule: {n} arrivals over {} devices (cap {device_cap}/device, {})",
+            records.len(),
+            objective.name()
+        ),
+        &[
+            "job", "name", "kernel", "state", "device", "core MHz", "mem MHz", "predicted_us",
+            "deadline_us", "cause",
+        ],
+    );
+    for r in core.jobs() {
+        t.row(vec![
+            r.id_str(),
+            r.name.clone(),
+            r.kernel.to_string(),
+            r.state.name().to_string(),
+            match r.device {
+                Some(d) => d.to_string(),
+                None => "-".to_string(),
+            },
+            match r.point {
+                Some(p) => format!("{:.0}", p.core_mhz),
+                None => "-".to_string(),
+            },
+            match r.point {
+                Some(p) => format!("{:.0}", p.mem_mhz),
+                None => "-".to_string(),
+            },
+            match r.predicted_us {
+                Some(p) => format!("{p:.1}"),
+                None => "-".to_string(),
+            },
+            match r.deadline_at_us {
+                Some(d) => format!("{d:.1}"),
+                None => "-".to_string(),
+            },
+            r.cause.clone().unwrap_or_else(|| "-".to_string()),
+        ]);
+    }
+    print_table(&t, args.csv);
+
+    let s = core.stats();
+    println!(
+        "ADMIT: {} submitted · {} admitted · {} rejected at the door",
+        s.submitted, s.admitted, s.rejected
+    );
+    for (name, why) in &rejected {
+        println!("       {name}: {why}");
+    }
+    println!(
+        "RUN  : {} done · {} missed · {} cancelled ({} events processed)",
+        s.completed, s.missed, s.cancelled, s.events_processed
+    );
+    let (candidates, slab_calls) = core.table_counters();
+    println!(
+        "SOLVE: {} incremental repairs · {} full re-solves ({} fallbacks) · {} candidates · {} slab calls",
+        s.repairs, s.full_solves, s.repair_fallbacks, candidates, slab_calls
+    );
+    print_cache_line(&engine);
+    Ok(())
+}
+
 /// `gpufreq serve`: profile the selected kernels once at the baseline
 /// (the paper's one-shot counter pass), put the shared engine behind
 /// the HTTP service (DESIGN.md §9), and run until stdin reaches EOF —
@@ -868,11 +1074,13 @@ fn run_serve(args: &Args, cfg: &Config) -> Result<()> {
             trace_capacity: args.trace_capacity,
             plan_ring: args.plan_ring,
             event_log: args.event_log.clone(),
+            replan_interval: Duration::from_secs_f64(args.replan_interval_ms / 1e3),
+            horizon: Duration::from_secs_f64(args.horizon_ms / 1e3),
             ..ServiceConfig::default()
         },
     )?;
     println!("gpufreq service listening on http://{}", service.addr());
-    println!("  v2     : POST+GET /v2/devices · POST+GET /v2/kernels · POST /v2/predict (batch) · POST /v2/advise · POST /v2/plan · POST /v2/observations");
+    println!("  v2     : POST+GET /v2/devices · POST+GET /v2/kernels · POST /v2/predict (batch) · POST /v2/advise · POST /v2/plan · POST+GET /v2/jobs · GET+DELETE /v2/jobs/{{id}} · POST /v2/observations");
     println!("  v1+ops : POST /v1/predict · POST /v1/grid · POST /v1/advise · GET /healthz · GET /metrics · GET /debug/traces · GET /debug/plans · GET /debug/drift");
     if args.trace_capacity == 0 {
         println!("  traces : disabled (--trace-capacity 0)");
@@ -891,6 +1099,10 @@ fn run_serve(args: &Args, cfg: &Config) -> Result<()> {
         Some(p) => println!("  events : JSONL -> {} (--event-log)", p.display()),
         None => println!("  events : off (enable with --event-log PATH)"),
     }
+    println!(
+        "  sched  : re-plan every {:.0} ms over a {:.0} ms horizon (--replan-interval, --horizon)",
+        args.replan_interval_ms, args.horizon_ms
+    );
     println!(
         "  config : {} kernels · backend {} · {} executors · admission credit {}+{}",
         ks.len(),
@@ -1062,12 +1274,13 @@ mod tests {
         // flags the planner added.
         let needles = [
             "list-kernels", "microbench", "profile", "devices", "kernels", "sweep",
-            "validate", "report", "advise", "plan", "serve", "stream-demo",
+            "validate", "report", "advise", "plan", "jobs", "serve", "stream-demo",
             "dev-<n>", "krn-<n>", "/v2/predict", "/v2/devices", "/v2/kernels",
-            "/v2/advise", "/v2/plan", "/v2/observations", "/v1/predict",
+            "/v2/advise", "/v2/plan", "/v2/jobs", "/v2/observations", "/v1/predict",
             "/debug/traces", "/debug/plans", "/debug/drift", "--jobs", "--device-cap",
             "--objective", "--queue-depth", "--addr", "--backend", "--workers",
             "--slow-us", "--trace-capacity", "--explain", "--plan-ring", "--event-log",
+            "--replan-interval", "--horizon",
         ];
         for needle in needles {
             assert!(USAGE.contains(needle), "USAGE is missing `{needle}`");
@@ -1122,5 +1335,26 @@ mod tests {
         assert_eq!(d.trace_capacity, 256);
         assert_eq!(d.plan_ring, 64);
         assert!(d.event_log.is_none());
+    }
+
+    #[test]
+    fn parses_scheduler_flags() {
+        let a = parse_args(&argv("serve --replan-interval 250 --horizon 5000")).unwrap();
+        assert_eq!(a.replan_interval_ms, 250.0);
+        assert_eq!(a.horizon_ms, 5000.0);
+        let j = parse_args(&argv("jobs --jobs 12 --replan-interval 0.5")).unwrap();
+        assert_eq!(j.command, "jobs");
+        assert_eq!(j.jobs, 12);
+        assert_eq!(j.replan_interval_ms, 0.5);
+        // Epoch and horizon must be positive, finite milliseconds.
+        assert!(parse_args(&argv("serve --replan-interval soon")).is_err());
+        assert!(parse_args(&argv("serve --replan-interval 0")).is_err());
+        assert!(parse_args(&argv("serve --replan-interval -10")).is_err());
+        assert!(parse_args(&argv("serve --replan-interval inf")).is_err());
+        assert!(parse_args(&argv("serve --horizon nan")).is_err());
+        assert!(parse_args(&argv("serve --horizon 0")).is_err());
+        let d = Args::default();
+        assert_eq!(d.replan_interval_ms, 1_000.0);
+        assert_eq!(d.horizon_ms, 30_000.0);
     }
 }

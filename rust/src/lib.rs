@@ -22,6 +22,10 @@
 //! * [`planner`] — fleet-scale DVFS planning: assign a batch of
 //!   deadline-tagged jobs to devices and (core, mem) points,
 //!   minimizing total energy (greedy + relocation/swap local search)
+//! * [`scheduler`] — streaming job lifecycle on top of the planner:
+//!   event-driven rolling-horizon re-planning with incremental repair,
+//!   provable deadline admission control, and the `/v2/jobs` state
+//!   machine (Queued → Scheduled → Running → Done/Missed/Cancelled)
 //! * [`service`] — the standing HTTP prediction service (`gpufreq
 //!   serve`): std-only HTTP/1.1 worker pool with bounded-queue
 //!   admission control, DVFS-advisor routes and `/metrics`
@@ -42,6 +46,7 @@ pub mod profiler;
 pub mod registry;
 pub mod report;
 pub mod runtime;
+pub mod scheduler;
 pub mod service;
 pub mod sim;
 pub mod util;

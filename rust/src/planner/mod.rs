@@ -66,7 +66,8 @@
 pub mod solver;
 
 pub use solver::{
-    device_grid, max_frequency_baseline, plan, plan_with_baseline, PlannerConfig, MAX_JOBS,
+    device_grid, max_frequency_baseline, plan, plan_with_baseline, Placement, PlannerConfig,
+    RepairOutcome, ScheduleTable, MAX_JOBS,
 };
 
 use std::fmt;

@@ -369,21 +369,7 @@ fn prepare(
         .collect();
 
     // Max-frequency point per device: highest core, then highest mem.
-    let max_point_idx: Vec<usize> = grids
-        .iter()
-        .map(|grid| {
-            let mut best = 0usize;
-            for (i, p) in grid.iter().enumerate() {
-                let b = grid[best];
-                if p.core_mhz > b.core_mhz
-                    || (p.core_mhz == b.core_mhz && p.mem_mhz > b.mem_mhz)
-                {
-                    best = i;
-                }
-            }
-            best
-        })
-        .collect();
+    let max_point_idx: Vec<usize> = grids.iter().map(|g| max_point_of(g)).collect();
 
     let job_kernel: Vec<usize> = jobs.iter().map(|job| kernel_index[&job.kernel.0]).collect();
     let table = EvalTable { grids, times, power, job_kernel };
@@ -845,6 +831,490 @@ fn baseline_assign(
         dev_of.push(d);
     }
     Ok(dev_of)
+}
+
+/// Max-frequency index of one grid: highest core, then highest mem —
+/// the baseline's per-device point and the admission bound's anchor.
+fn max_point_of(grid: &[FreqPoint]) -> usize {
+    let mut best = 0usize;
+    for (i, p) in grid.iter().enumerate() {
+        let b = grid[best];
+        if p.core_mhz > b.core_mhz || (p.core_mhz == b.core_mhz && p.mem_mhz > b.mem_mhz) {
+            best = i;
+        }
+    }
+    best
+}
+
+/// One priced choice for a single job on a single device — the
+/// incremental counterpart of an [`Assignment`] (no job index: the
+/// caller knows which job it priced).
+#[derive(Debug, Clone, Copy)]
+pub struct Placement {
+    pub device: DeviceId,
+    /// The chosen (core, mem) operating point.
+    pub point: FreqPoint,
+    /// Scaled job runtime at `point`, µs.
+    pub time_us: f64,
+    /// Board power at `point`, W.
+    pub power_w: f64,
+    /// `power_w × time_us`, in mJ.
+    pub energy_mj: f64,
+    /// `energy_mj × time_us`.
+    pub edp: f64,
+}
+
+impl Placement {
+    /// The objective value placements are compared by.
+    pub fn key(&self, objective: PlanObjective) -> f64 {
+        match objective {
+            PlanObjective::Energy => self.energy_mj,
+            PlanObjective::Edp => self.edp,
+        }
+    }
+}
+
+/// What [`ScheduleTable::repair_insert`] did for one arriving job.
+#[derive(Debug, Clone)]
+pub struct RepairOutcome {
+    /// Where the new job landed.
+    pub placement: Placement,
+    /// `Some((i, new))` when a one-level relocation moved `movable[i]`
+    /// to `new` to make room for the arrival.
+    pub moved: Option<(usize, Placement)>,
+    /// Relative objective excess of the achieved insertion over the
+    /// cap-free optimum: 0 means the arrival took the unconstrained
+    /// argmin; large values mean caps forced an expensive detour and a
+    /// full re-solve is likely to recover energy (the scheduler's
+    /// fallback trigger).
+    pub degradation: f64,
+    /// Per-event solver telemetry: a fresh `plan_id`, the candidates
+    /// priced *for this event* (only newly-cached kernel slabs count —
+    /// repeat kernels cost zero), and the relocation scan counters.
+    pub report: SolveReport,
+}
+
+/// The streaming scheduler's retained half of the batch solver's
+/// `prepare` phase (DESIGN.md §14): device grids, power tables and
+/// max-frequency indices built once, per-kernel prediction rows priced
+/// lazily and **cached across events**. A single-job event then costs
+/// at most one kernel slab (`total_points` candidate evaluations, zero
+/// for a kernel seen before) instead of the batch solver's
+/// `K × total_points` — the strict-inequality the scheduler bench
+/// gates on. Placement decisions reuse the exact candidate economics
+/// of [`plan`]: deadline-feasible objective argmin per device, greedy
+/// insert into slack, one-level relocation repair when caps bind.
+pub struct ScheduleTable {
+    objective: PlanObjective,
+    device_cap: usize,
+    devices: Vec<DeviceRecord>,
+    /// Availability mask (DeviceUp/DeviceDown), parallel to `devices`.
+    available: Vec<bool>,
+    grids: Vec<Vec<FreqPoint>>,
+    /// `power[d][p]`: board watts at device `d`'s point `p`.
+    power: Vec<Vec<f64>>,
+    max_point_idx: Vec<usize>,
+    /// Summed per-device grid sizes (the cost of pricing one kernel).
+    total_points: usize,
+    /// `rows[kernel.0][d][p]`: cached single-invocation µs.
+    rows: FxHashMap<u64, Vec<Vec<f64>>>,
+    candidates_evaluated: u64,
+    slab_calls: u64,
+}
+
+impl ScheduleTable {
+    /// Build the device-side tables (grids, power, max points) for
+    /// every device `cfg` selects — no kernel is priced yet. Mirrors
+    /// the validation `prepare` performs on the device dimension.
+    pub fn new(engine: &Engine, cfg: &PlannerConfig) -> Result<ScheduleTable, PlanError> {
+        let Some(registry) = engine.registry() else {
+            return Err(PlanError::Invalid(
+                "engine has no registry attached (Engine::with_handles)".to_string(),
+            ));
+        };
+        let devices: Vec<DeviceRecord> = match &cfg.devices {
+            None => registry.list(),
+            Some(ids) => {
+                let mut seen: HashSet<DeviceId> = HashSet::with_capacity(ids.len());
+                let mut out = Vec::with_capacity(ids.len());
+                for &id in ids {
+                    if !seen.insert(id) {
+                        continue;
+                    }
+                    match registry.get(id) {
+                        Some(r) => out.push(r),
+                        None => return Err(PlanError::UnknownDevice { device: id }),
+                    }
+                }
+                out
+            }
+        };
+        if devices.is_empty() {
+            return Err(PlanError::Invalid("no devices to plan over".to_string()));
+        }
+        if let Some(pairs) = &cfg.pairs {
+            if pairs.is_empty() {
+                return Err(PlanError::Invalid("candidate pairs list is empty".to_string()));
+            }
+            for &(cf, mf) in pairs {
+                if !FreqPoint::new(cf, mf).is_valid() {
+                    return Err(PlanError::Invalid(format!(
+                        "candidate pair ({cf}, {mf}) MHz: frequencies must be positive \
+                         and finite"
+                    )));
+                }
+            }
+        }
+        let grids: Vec<Vec<FreqPoint>> = devices
+            .iter()
+            .map(|r| match &cfg.pairs {
+                Some(pairs) => pairs.iter().map(|&p| p.into()).collect(),
+                None => device_grid(&r.power),
+            })
+            .collect();
+        let total_points = grids.iter().fold(0usize, |a, g| a.saturating_add(g.len()));
+        if total_points > MAX_EVALUATIONS {
+            return Err(PlanError::Invalid(format!(
+                "schedule table is too large: {total_points} candidate points over {} \
+                 devices (limit {MAX_EVALUATIONS})",
+                devices.len()
+            )));
+        }
+        let power: Vec<Vec<f64>> = devices
+            .iter()
+            .enumerate()
+            .map(|(di, rec)| {
+                grids[di].iter().map(|p| rec.power.power_w(p.core_mhz, p.mem_mhz)).collect()
+            })
+            .collect();
+        let max_point_idx: Vec<usize> = grids.iter().map(|g| max_point_of(g)).collect();
+        let available = vec![true; devices.len()];
+        Ok(ScheduleTable {
+            objective: cfg.objective,
+            device_cap: cfg.device_cap,
+            devices,
+            available,
+            grids,
+            power,
+            max_point_idx,
+            total_points,
+            rows: FxHashMap::default(),
+            candidates_evaluated: 0,
+            slab_calls: 0,
+        })
+    }
+
+    pub fn objective(&self) -> PlanObjective {
+        self.objective
+    }
+
+    pub fn device_cap(&self) -> usize {
+        self.device_cap
+    }
+
+    /// Summed per-device grid sizes: the candidate cost of pricing one
+    /// kernel through the table (the batch solver pays `K ×` this).
+    pub fn total_points(&self) -> usize {
+        self.total_points
+    }
+
+    /// Every device in the table, in registration order.
+    pub fn device_ids(&self) -> Vec<DeviceId> {
+        self.devices.iter().map(|r| r.id).collect()
+    }
+
+    /// Devices currently marked up.
+    pub fn available_ids(&self) -> Vec<DeviceId> {
+        self.devices
+            .iter()
+            .zip(&self.available)
+            .filter_map(|(r, &up)| up.then_some(r.id))
+            .collect()
+    }
+
+    /// Flip a device's availability; `false` if the id is unknown.
+    pub fn set_available(&mut self, device: DeviceId, up: bool) -> bool {
+        match self.devices.iter().position(|r| r.id == device) {
+            Some(i) => {
+                self.available[i] = up;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Cumulative `(candidates_evaluated, slab_calls)` since
+    /// construction — callers diff around an event to attribute
+    /// per-event work (admission pricing plus repair).
+    pub fn counters(&self) -> (u64, u64) {
+        (self.candidates_evaluated, self.slab_calls)
+    }
+
+    /// Price `kernel` on every device (one slab call per device) and
+    /// cache the rows; a kernel seen before costs nothing. This is the
+    /// only place the table evaluates candidates.
+    pub fn ensure_kernel(&mut self, engine: &Engine, kernel: KernelId) -> Result<(), PlanError> {
+        if self.rows.contains_key(&kernel.0) {
+            return Ok(());
+        }
+        if engine.kernel_counters(kernel).is_err() {
+            return Err(PlanError::UnknownKernel { job: 0, name: String::new(), kernel });
+        }
+        let before = engine.compute_stats();
+        let mut rows = Vec::with_capacity(self.devices.len());
+        for (di, rec) in self.devices.iter().enumerate() {
+            let estimates = engine
+                .predict_points(rec.id, kernel, &self.grids[di])
+                .map_err(|e| PlanError::Engine(format!("{e:#}")))?;
+            rows.push(estimates.into_iter().map(|e| e.time_us).collect::<Vec<f64>>());
+        }
+        self.slab_calls += engine.compute_stats().since(before).slab_calls;
+        self.candidates_evaluated += self.total_points as u64;
+        self.rows.insert(kernel.0, rows);
+        Ok(())
+    }
+
+    /// Fastest achievable scaled runtime over every *available* device
+    /// and point, µs — the admission bound. A deadline below this is
+    /// provably unmeetable: runtime in this model depends only on the
+    /// (device, point), never on co-located load, so even max frequency
+    /// on the least-loaded device cannot beat it.
+    pub fn fastest_us(
+        &mut self,
+        engine: &Engine,
+        kernel: KernelId,
+        scale: f64,
+    ) -> Result<f64, PlanError> {
+        self.ensure_kernel(engine, kernel)?;
+        let rows = &self.rows[&kernel.0];
+        let mut fastest = f64::INFINITY;
+        for (di, row) in rows.iter().enumerate() {
+            if !self.available[di] {
+                continue;
+            }
+            for &t in row {
+                fastest = fastest.min(scale * t);
+            }
+        }
+        Ok(fastest)
+    }
+
+    fn price(&self, rows: &[Vec<f64>], scale: f64, di: usize, pi: usize) -> Placement {
+        let time_us = scale * rows[di][pi];
+        let power_w = self.power[di][pi];
+        let energy_mj = power_w * time_us * 1e-3;
+        Placement {
+            device: self.devices[di].id,
+            point: self.grids[di][pi],
+            time_us,
+            power_w,
+            energy_mj,
+            edp: energy_mj * time_us,
+        }
+    }
+
+    /// Deadline-feasible objective argmin for `job` on device `di`
+    /// (`None` when no point meets the deadline). The job's kernel must
+    /// already be ensured.
+    fn best_on(&self, job: &Job, di: usize) -> Option<Placement> {
+        let rows = self.rows.get(&job.kernel.0)?;
+        let mut chosen: Option<Placement> = None;
+        let mut chosen_key = f64::INFINITY;
+        for pi in 0..self.grids[di].len() {
+            let c = self.price(rows, job.scale, di, pi);
+            let feasible = match job.deadline_us {
+                Some(d) => c.time_us <= d,
+                None => true,
+            };
+            if feasible && c.key(self.objective) < chosen_key {
+                chosen_key = c.key(self.objective);
+                chosen = Some(c);
+            }
+        }
+        chosen
+    }
+
+    /// The job's max-frequency placement on device `di` (the baseline
+    /// point admission reasons about). Kernel must be ensured.
+    pub fn at_max(&self, kernel: KernelId, scale: f64, device: DeviceId) -> Option<Placement> {
+        let di = self.devices.iter().position(|r| r.id == device)?;
+        let rows = self.rows.get(&kernel.0)?;
+        Some(self.price(rows, scale, di, self.max_point_idx[di]))
+    }
+
+    /// The incremental-repair entry point: insert one arriving `job`
+    /// into an existing placement without re-solving the fleet.
+    ///
+    /// `movable` is the current placement of every job the scheduler
+    /// may relocate (typically Scheduled-but-not-Running jobs, with
+    /// deadlines already rebased to their *remaining* budget);
+    /// `pinned` lists the devices of unmovable (Running) jobs, which
+    /// count toward caps but never move. The search is the batch
+    /// solver's greedy step for a single job: cheapest feasible device
+    /// with slack, else a one-level relocation (move one `movable` job
+    /// elsewhere so the arrival fits), else a structured
+    /// [`PlanError::Infeasible`].
+    pub fn repair_insert(
+        &mut self,
+        engine: &Engine,
+        job: &Job,
+        movable: &[(Job, DeviceId)],
+        pinned: &[DeviceId],
+    ) -> Result<RepairOutcome, PlanError> {
+        let total_t = Instant::now();
+        let mut report = SolveReport { plan_id: next_plan_id(), ..SolveReport::default() };
+        if !(job.scale.is_finite() && job.scale > 0.0) {
+            return Err(PlanError::Invalid(format!(
+                "job `{}`: scale must be positive and finite, got {}",
+                job.name, job.scale
+            )));
+        }
+        if let Some(d) = job.deadline_us {
+            if !(d.is_finite() && d > 0.0) {
+                return Err(PlanError::Invalid(format!(
+                    "job `{}`: deadline_us must be positive and finite, got {d}",
+                    job.name
+                )));
+            }
+        }
+        let (c0, s0) = (self.candidates_evaluated, self.slab_calls);
+        let build_t = Instant::now();
+        self.ensure_kernel(engine, job.kernel).map_err(|e| match e {
+            PlanError::UnknownKernel { kernel, .. } => {
+                PlanError::UnknownKernel { job: 0, name: job.name.clone(), kernel }
+            }
+            other => other,
+        })?;
+        for (mj, _) in movable {
+            self.ensure_kernel(engine, mj.kernel)?;
+        }
+        report.build_us = us_since(build_t);
+        report.candidates_evaluated = self.candidates_evaluated - c0;
+        report.slab_calls = self.slab_calls - s0;
+
+        let d_count = self.devices.len();
+        let mut load = vec![0usize; d_count];
+        let index_of = |id: DeviceId| self.devices.iter().position(|r| r.id == id);
+        for (_, dev) in movable {
+            if let Some(di) = index_of(*dev) {
+                load[di] += 1;
+            }
+        }
+        for dev in pinned {
+            if let Some(di) = index_of(*dev) {
+                load[di] += 1;
+            }
+        }
+
+        // Direct insert: cheapest feasible available device with slack.
+        // Track the cap-free optimum alongside for the degradation
+        // measure, and the fastest runtime for the infeasibility
+        // diagnostic.
+        let mut capped: Option<(usize, Placement)> = None;
+        let mut capped_key = f64::INFINITY;
+        let mut free_key = f64::INFINITY;
+        let mut fastest = f64::INFINITY;
+        for di in 0..d_count {
+            if !self.available[di] {
+                continue;
+            }
+            let rows = &self.rows[&job.kernel.0];
+            for pi in 0..self.grids[di].len() {
+                fastest = fastest.min(job.scale * rows[di][pi]);
+            }
+            let Some(p) = self.best_on(job, di) else { continue };
+            let key = p.key(self.objective);
+            if key < free_key {
+                free_key = key;
+            }
+            if load[di] < self.device_cap && key < capped_key {
+                capped_key = key;
+                capped = Some((di, p));
+            }
+        }
+        let rel = |excess: f64, base: f64| (excess / base.abs().max(1e-12)).max(0.0);
+        if !free_key.is_finite() {
+            report.total_us = us_since(total_t);
+            return Err(PlanError::Infeasible {
+                job: 0,
+                name: job.name.clone(),
+                detail: match job.deadline_us {
+                    Some(dl) => format!(
+                        "deadline {dl} µs is unreachable on every available device: \
+                         fastest achievable runtime is {fastest:.3} µs"
+                    ),
+                    None => "no available device offers a valid operating point".to_string(),
+                },
+            });
+        }
+        if let Some((_, p)) = capped {
+            report.total_us = us_since(total_t);
+            let degradation = rel(p.key(self.objective) - free_key, free_key);
+            return Ok(RepairOutcome { placement: p, moved: None, degradation, report });
+        }
+
+        // Every feasible device is at its cap: one-level relocation —
+        // move one movable job to another device with slack so the
+        // arrival takes its place (the batch solver's greedy repair,
+        // restricted to a single event).
+        let repair_t = Instant::now();
+        let mut best: Option<(usize, usize, Placement, Placement)> = None;
+        let mut best_delta = f64::INFINITY;
+        let mut budget: usize = MAX_EVALUATIONS;
+        'search: for di in 0..d_count {
+            if !self.available[di] {
+                continue;
+            }
+            let Some(p_j) = self.best_on(job, di) else { continue };
+            let cost_j = p_j.key(self.objective);
+            for (i, (mj, mdev)) in movable.iter().enumerate() {
+                if index_of(*mdev) != Some(di) {
+                    continue;
+                }
+                if budget < d_count {
+                    break 'search;
+                }
+                budget -= d_count;
+                let Some(cur_i) = self.best_on(mj, di) else { continue };
+                for d2 in 0..d_count {
+                    if d2 == di || !self.available[d2] || load[d2] >= self.device_cap {
+                        continue;
+                    }
+                    let Some(alt_i) = self.best_on(mj, d2) else { continue };
+                    report.relocations_tried += 1;
+                    let delta = alt_i.key(self.objective) - cur_i.key(self.objective) + cost_j;
+                    if delta < best_delta {
+                        best_delta = delta;
+                        best = Some((i, di, p_j, alt_i));
+                    }
+                }
+            }
+        }
+        report.repair_us = us_since(repair_t);
+        report.total_us = us_since(total_t);
+        match best {
+            Some((i, _, p_j, alt_i)) => {
+                report.relocations_accepted = 1;
+                let degradation = rel(best_delta - free_key, free_key);
+                Ok(RepairOutcome {
+                    placement: p_j,
+                    moved: Some((i, alt_i)),
+                    degradation,
+                    report,
+                })
+            }
+            None => Err(PlanError::Infeasible {
+                job: 0,
+                name: job.name.clone(),
+                detail: format!(
+                    "every available device that can meet the job's constraints is at \
+                     its concurrency cap ({} jobs/device over {} devices)",
+                    self.device_cap,
+                    self.available.iter().filter(|&&up| up).count()
+                ),
+            }),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -1315,5 +1785,122 @@ mod tests {
         assert!(mem.point.core_mhz <= 600.0, "membound core {}", mem.point.core_mhz);
         assert!(comp.point.mem_mhz <= 600.0, "compbound mem {}", comp.point.mem_mhz);
         assert!(comp.point.core_mhz >= mem.point.core_mhz);
+    }
+
+    #[test]
+    fn schedule_table_prices_kernels_lazily_and_once() {
+        let (engine, _, kernels) = fixture();
+        let mut table = ScheduleTable::new(&engine, &PlannerConfig::default()).unwrap();
+        // 2 devices × 8 grid points each; nothing priced at build time.
+        assert_eq!(table.total_points(), 16);
+        assert_eq!(table.counters(), (0, 0));
+        let f = table.fastest_us(&engine, kernels[0], 2.0).unwrap();
+        assert!(f.is_finite() && f > 0.0);
+        let (cand, _) = table.counters();
+        assert_eq!(cand, 16, "pricing one kernel costs total_points candidates");
+        // The same kernel again is cache-served: zero new candidates.
+        let f2 = table.fastest_us(&engine, kernels[0], 2.0).unwrap();
+        assert_eq!(f2.to_bits(), f.to_bits());
+        assert_eq!(table.counters().0, 16);
+        // Scale is linear in the cached rows.
+        let f_half = table.fastest_us(&engine, kernels[0], 1.0).unwrap();
+        assert!((f - 2.0 * f_half).abs() <= 1e-9 * f.max(1.0));
+    }
+
+    #[test]
+    fn repair_insert_into_slack_matches_the_batch_solver_argmin() {
+        let (engine, _, kernels) = fixture();
+        let mut table = ScheduleTable::new(&engine, &PlannerConfig::default()).unwrap();
+        let job = Job::new("arrival", kernels[0], 3.0);
+        let out = table.repair_insert(&engine, &job, &[], &[]).unwrap();
+        assert!(out.moved.is_none());
+        assert_eq!(out.degradation, 0.0, "uncapped insert is the unconstrained argmin");
+        // The per-event work is one kernel slab, strictly below a
+        // 2-kernel batch solve over the same table.
+        assert_eq!(out.report.candidates_evaluated, 16);
+        let batch = plan(&engine, &[job.clone()], &PlannerConfig::default()).unwrap();
+        let a = &batch.assignments[0];
+        assert_eq!(out.placement.device, a.device);
+        assert_eq!(out.placement.point, a.point);
+        assert_eq!(out.placement.energy_mj.to_bits(), a.energy_mj.to_bits());
+        // Second arrival with the same kernel: zero new candidates.
+        let out2 = table.repair_insert(&engine, &job, &[], &[]).unwrap();
+        assert_eq!(out2.report.candidates_evaluated, 0);
+        assert!(out2.report.plan_id > out.report.plan_id, "each event mints a plan id");
+    }
+
+    #[test]
+    fn repair_insert_relocates_a_squatter_when_caps_bind() {
+        let (engine, _, kernels) = fixture();
+        let cfg = PlannerConfig { device_cap: 1, ..PlannerConfig::default() };
+        let mut table = ScheduleTable::new(&engine, &cfg).unwrap();
+        // Place a movable job at its argmin device.
+        let squatter = Job::new("squatter", kernels[0], 1.0);
+        let first = table.repair_insert(&engine, &squatter, &[], &[]).unwrap();
+        let movable = vec![(squatter.clone(), first.placement.device)];
+        // An arrival that only fits on the squatter's device: deadline
+        // just above its fastest runtime there — feasible on the faster
+        // device only, which forces the one-level relocation.
+        let mut fastest_on = f64::INFINITY;
+        let mut fastest_any = f64::INFINITY;
+        table.ensure_kernel(&engine, kernels[1]).unwrap();
+        for id in table.device_ids() {
+            let t = table.at_max(kernels[1], 1.0, id).unwrap().time_us;
+            fastest_any = fastest_any.min(t);
+            if id == first.placement.device {
+                fastest_on = fastest_on.min(t);
+            }
+        }
+        // Only meaningful when the squatter's device is also the fast
+        // one for the arrival; both fixtures' device A is faster, so
+        // this holds — assert it to keep the test honest.
+        assert!(fastest_on <= fastest_any * 1.0 + 1e-9);
+        let arrival =
+            Job::new("urgent", kernels[1], 1.0).with_deadline(fastest_on * 1.001);
+        let out = table.repair_insert(&engine, &arrival, &movable, &[]).unwrap();
+        assert_eq!(out.placement.device, first.placement.device, "takes the fast device");
+        let (idx, alt) = out.moved.expect("cap 1 forces a relocation");
+        assert_eq!(idx, 0);
+        assert_ne!(alt.device, first.placement.device, "squatter moved elsewhere");
+        assert_eq!(out.report.relocations_accepted, 1);
+        assert!(out.report.relocations_tried >= 1);
+    }
+
+    #[test]
+    fn repair_insert_rejections_are_structured() {
+        let (engine, devices, kernels) = fixture();
+        let cfg = PlannerConfig { device_cap: 1, ..PlannerConfig::default() };
+        let mut table = ScheduleTable::new(&engine, &cfg).unwrap();
+        // Unreachable deadline: provable rejection with the fastest
+        // runtime named (the admission-control path).
+        let doomed = Job::new("doomed", kernels[0], 1.0).with_deadline(1e-6);
+        match table.repair_insert(&engine, &doomed, &[], &[]) {
+            Err(PlanError::Infeasible { detail, .. }) => {
+                assert!(detail.contains("unreachable"), "{detail}");
+                assert!(detail.contains("fastest"), "{detail}");
+            }
+            other => panic!("expected Infeasible, got {other:?}"),
+        }
+        // Pinned (Running) jobs fill caps without being movable: with
+        // both devices pinned, a new arrival cannot be placed at all.
+        let pinned = vec![devices[0], devices[1]];
+        let job = Job::new("walk-in", kernels[0], 1.0);
+        match table.repair_insert(&engine, &job, &[], &pinned) {
+            Err(PlanError::Infeasible { detail, .. }) => {
+                assert!(detail.contains("concurrency cap"), "{detail}");
+            }
+            other => panic!("expected Infeasible, got {other:?}"),
+        }
+        // A downed device is excluded from placement and from
+        // fastest_us; downing everything is Invalid-free but
+        // infeasible.
+        assert!(table.set_available(devices[1], false));
+        let one_dev = table.fastest_us(&engine, kernels[0], 1.0).unwrap();
+        assert!(one_dev.is_finite());
+        assert!(table.set_available(devices[0], false));
+        let none = table.fastest_us(&engine, kernels[0], 1.0).unwrap();
+        assert!(none.is_infinite(), "no available device → no achievable runtime");
+        assert!(table.repair_insert(&engine, &job, &[], &[]).is_err());
+        assert!(!table.set_available(DeviceId(404), true), "unknown device handle");
     }
 }

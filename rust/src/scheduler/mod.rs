@@ -1,0 +1,1500 @@
+//! Streaming scheduler (DESIGN.md §14): an event-driven, rolling-horizon
+//! job lifecycle layered on [`planner`].
+//!
+//! PR 4's planner is one-shot — full batch in, full plan out. Real fleets
+//! are a *stream*: arrivals, early completions, progress reports that
+//! contradict the model, devices coming and going (Ilager et al. and the
+//! DSO optimizer in PAPERS.md both frame deadline-aware GPU frequency
+//! scaling as exactly this online problem). This module keeps a
+//! long-lived [`SchedulerCore`] whose state advances only through a
+//! monotone event queue:
+//!
+//! ```text
+//!   JobSubmitted ──► admission (provable deadline bound, 4096-job cap)
+//!        │               │ reject: structured PlanError::Infeasible
+//!        ▼               ▼
+//!   Queued ──► Scheduled ──► Running ──► Done
+//!     │  ▲        │  │          │
+//!     │  └────────┘  └──────────┤   (device down re-queues; epoch
+//!     ▼                         ▼    re-solve may displace)
+//!   Missed (deadline passed)  Missed (finished late)
+//!   Cancelled (operator DELETE, from any non-terminal state)
+//! ```
+//!
+//! Two planning paths share one [`ScheduleTable`]:
+//!
+//! * **Incremental repair** — a single arrival is inserted into the
+//!   existing placement via [`ScheduleTable::repair_insert`]: cheapest
+//!   feasible device with slack, else one one-level relocation. Cost is
+//!   at most one kernel slab (`total_points` candidates, zero for a
+//!   kernel seen before) instead of the batch solver's `K × total_points`
+//!   — the strict inequality `benches/scheduler_stream.rs` gates on.
+//! * **Full re-solve** — when repair's achieved objective exceeds the
+//!   cap-free optimum by more than [`SchedulerConfig::degrade_threshold`],
+//!   or when the rolling horizon ticks over (every
+//!   [`SchedulerConfig::replan_interval_us`]), the fleet of live
+//!   Queued/Scheduled jobs is re-planned with [`planner::plan`].
+//!
+//! Admission control is *provable*: runtime in this model depends only on
+//! the (device, point), never on co-located load, so
+//! [`ScheduleTable::fastest_us`] — the minimum over every available
+//! device and frequency — is a true lower bound. A deadline below it is
+//! rejected at submit with a structured [`PlanError::Infeasible`]
+//! (`infeasible_at_submit` on the wire); anything above it is admitted
+//! optimistically and either completes in time or is explicitly
+//! transitioned to `Missed` with a recorded cause.
+//!
+//! The core is clock-agnostic: unit and property tests drive
+//! [`SchedulerCore::run_until`] on a virtual clock; serve mode wraps the
+//! core in a [`SchedulerHandle`] whose `tick` advances it to wall-clock
+//! now (µs since server start). Every state change and every solve lands
+//! in an outbox ([`SchedulerCore::drain_outbox`]) the service layer
+//! drains into `job_transition` JSONL events, `/debug/plans` provenance
+//! and `scheduler_*` metrics.
+//!
+//! # Example
+//!
+//! ```
+//! use std::sync::Arc;
+//! use gpufreq::dvfs::PowerModel;
+//! use gpufreq::engine::Engine;
+//! use gpufreq::model::{HwParams, KernelCounters};
+//! use gpufreq::registry::{DeviceRegistry, KernelCatalog};
+//! use gpufreq::scheduler::{JobSpec, JobState, SchedulerConfig, SchedulerCore};
+//!
+//! let hw = HwParams::paper_defaults();
+//! let registry = Arc::new(DeviceRegistry::new());
+//! let gpu = registry.register("gtx980", hw, PowerModel::gtx980());
+//! let catalog = Arc::new(KernelCatalog::new());
+//! # let counters = KernelCounters {
+//! #     l2_hr: 0.1, gld_trans: 6.0, avr_inst: 1.5, n_blocks: 128.0,
+//! #     wpb: 8.0, aw: 64.0, n_sm: 16.0, o_itrs: 8.0, i_itrs: 0.0,
+//! #     uses_smem: false, smem_conflict: 1.0, gld_body: 6.0,
+//! #     gld_edge: 0.0, mem_ops: 2.0, l1_hr: 0.0,
+//! # };
+//! let kernel = catalog.register("VA", counters);
+//! let engine = Engine::native(hw).with_handles(registry, catalog, gpu).unwrap();
+//!
+//! let mut sched = SchedulerCore::new(SchedulerConfig::default());
+//! let id = sched.submit(&engine, JobSpec::new("stream-0", kernel, 2.0)).unwrap();
+//! sched.run_until(&engine, 5e6); // advance the virtual clock 5 s
+//! assert_eq!(sched.job(id).unwrap().state, JobState::Done);
+//! ```
+//!
+//! [`planner`]: crate::planner
+//! [`planner::plan`]: crate::planner::plan
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+use std::sync::{Mutex, MutexGuard, PoisonError};
+use std::time::Instant;
+
+use crate::engine::Engine;
+use crate::planner::{
+    plan, Job, PlanError, PlannerConfig, ScheduleTable, SolveReport, MAX_JOBS,
+};
+use crate::registry::{DeviceId, FreqPoint, KernelId};
+
+/// Where a job is in its lifecycle. Terminal states are never left.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobState {
+    /// Admitted but not placed (no device has feasible slack yet).
+    Queued,
+    /// Placed on a device at an operating point, waiting for a slot.
+    Scheduled,
+    /// Occupying a device slot; a predicted completion is queued.
+    Running,
+    /// Completed within its deadline (or had none).
+    Done,
+    /// Deadline passed — while queued, while waiting, or by finishing
+    /// late; `cause` on the record says which.
+    Missed,
+    /// Removed by an operator (`DELETE /v2/jobs/{id}`).
+    Cancelled,
+}
+
+impl JobState {
+    /// Stable wire name (`GET /v2/jobs` `state` field, JSONL events).
+    pub fn name(self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Scheduled => "scheduled",
+            JobState::Running => "running",
+            JobState::Done => "done",
+            JobState::Missed => "missed",
+            JobState::Cancelled => "cancelled",
+        }
+    }
+
+    /// Done, Missed and Cancelled are absorbing.
+    pub fn is_terminal(self) -> bool {
+        matches!(self, JobState::Done | JobState::Missed | JobState::Cancelled)
+    }
+}
+
+/// What a client submits: the planner's [`Job`] with the deadline
+/// expressed *relative to submission* (µs from now), since a streaming
+/// client cannot know the scheduler's clock.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    /// Operator-facing label; empty means "name it `job-<id>`".
+    pub name: String,
+    pub kernel: KernelId,
+    /// Workload scale (runtime = `scale ×` single-invocation prediction).
+    pub scale: f64,
+    /// Budget on the scaled runtime, µs **from submission time**.
+    pub deadline_us: Option<f64>,
+}
+
+impl JobSpec {
+    /// A deadline-free spec (pure energy participation).
+    pub fn new(name: impl Into<String>, kernel: KernelId, scale: f64) -> JobSpec {
+        JobSpec { name: name.into(), kernel, scale, deadline_us: None }
+    }
+
+    /// Attach a relative deadline (µs from submission).
+    pub fn with_deadline(mut self, deadline_us: f64) -> JobSpec {
+        self.deadline_us = Some(deadline_us);
+        self
+    }
+}
+
+/// One job's full lifecycle record — everything `GET /v2/jobs/{id}`
+/// serializes. All timestamps are scheduler-clock µs.
+#[derive(Debug, Clone)]
+pub struct JobRecord {
+    /// Monotonic per-scheduler id (`job-<n>` on the wire).
+    pub id: u64,
+    pub name: String,
+    pub kernel: KernelId,
+    pub scale: f64,
+    /// Absolute deadline instant (submission time + relative budget).
+    pub deadline_at_us: Option<f64>,
+    pub state: JobState,
+    pub submitted_at_us: f64,
+    /// Current placement, when Scheduled or Running.
+    pub device: Option<DeviceId>,
+    /// Chosen (core, mem) operating point, when placed.
+    pub point: Option<FreqPoint>,
+    /// Predicted scaled runtime at the chosen point, µs; refined by
+    /// `JobProgress` observations while Running.
+    pub predicted_us: Option<f64>,
+    pub started_at_us: Option<f64>,
+    /// Set on any terminal transition.
+    pub finished_at_us: Option<f64>,
+    /// Why the job is where it is (miss cause, cancellation, re-queue).
+    pub cause: Option<String>,
+    /// The solve (`plan-<n>`) that produced the current placement.
+    pub plan_id: Option<u64>,
+    /// Bumped on every placement/start/finish so stale predicted
+    /// completions in the event queue are recognized and dropped.
+    generation: u64,
+}
+
+impl JobRecord {
+    /// The wire form of [`id`](JobRecord::id).
+    pub fn id_str(&self) -> String {
+        format!("job-{}", self.id)
+    }
+}
+
+/// External events the scheduler reacts to. In serve mode these arrive
+/// through the `/v2/jobs` routes; on the virtual clock tests inject them
+/// with [`SchedulerCore::schedule`].
+#[derive(Debug, Clone)]
+pub enum Event {
+    JobSubmitted(JobSpec),
+    /// The client observed the job finish (possibly before the model's
+    /// prediction — the prediction is then discarded).
+    JobCompleted { job: u64 },
+    /// The client observed `fraction` of the job done; the scheduler
+    /// fuses the observed rate into a refreshed completion estimate
+    /// (the DSO argument: runtime signals beat static predictions).
+    JobProgress { job: u64, fraction: f64 },
+    DeviceUp(DeviceId),
+    DeviceDown(DeviceId),
+}
+
+/// Internal queue entry kinds: external events plus the scheduler's own
+/// timers (model-predicted completions and deadline checks).
+#[derive(Debug, Clone)]
+enum QueuedKind {
+    External(Event),
+    PredictedCompletion { job: u64, generation: u64 },
+    DeadlineCheck { job: u64 },
+}
+
+/// Heap entry: earliest `at_us` first, FIFO (`seq`) within a tie.
+#[derive(Debug)]
+struct QueuedEvent {
+    at_us: f64,
+    seq: u64,
+    kind: QueuedKind,
+}
+
+impl PartialEq for QueuedEvent {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+
+impl Eq for QueuedEvent {}
+
+impl PartialOrd for QueuedEvent {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for QueuedEvent {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reversed: BinaryHeap is a max-heap, we want the earliest time
+        // (then lowest sequence number) on top.
+        other.at_us.total_cmp(&self.at_us).then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// One recorded state change, drained by the service layer into
+/// `job_transition` JSONL events. `from: None` marks admission.
+#[derive(Debug, Clone)]
+pub struct TransitionRecord {
+    pub job: u64,
+    pub name: String,
+    pub from: Option<JobState>,
+    pub to: JobState,
+    pub at_us: f64,
+    /// The solve that caused the transition, when one did.
+    pub plan_id: Option<u64>,
+    pub cause: Option<String>,
+    /// X-Request-Id of the HTTP request that triggered the transition,
+    /// when one did (event-queue transitions have none).
+    pub request_id: Option<String>,
+}
+
+/// Which planning path produced a [`SolveOutcome`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SolveKind {
+    /// Single-event incremental repair ([`ScheduleTable::repair_insert`]).
+    Repair,
+    /// Fleet re-solve ([`planner::plan`](crate::planner::plan)).
+    Full,
+}
+
+impl SolveKind {
+    /// Stable wire name (JSONL `solve` events, `/debug/plans`).
+    pub fn name(self) -> &'static str {
+        match self {
+            SolveKind::Repair => "repair",
+            SolveKind::Full => "full",
+        }
+    }
+}
+
+/// One solve the scheduler ran, drained by the service layer into
+/// `/metrics` histograms and the `/debug/plans` provenance ring.
+#[derive(Debug, Clone)]
+pub struct SolveOutcome {
+    pub kind: SolveKind,
+    /// What forced the solve: `job_arrival`, `job_finished`,
+    /// `job_cancelled`, `deadline_miss`, `device_change`,
+    /// `repair_degraded` or `horizon_roll`.
+    pub trigger: &'static str,
+    pub at_us: f64,
+    /// Jobs (re)placed by this solve.
+    pub jobs: usize,
+    /// Names of the (re)placed jobs, indexed by the report's
+    /// `Explain::job` (the solve's provenance record needs them).
+    pub job_names: Vec<String>,
+    pub total_energy_mj: f64,
+    pub max_time_us: f64,
+    pub report: SolveReport,
+}
+
+/// Monotonic counters plus the `active` gauge, exported as
+/// `scheduler_*` series on `/metrics`.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SchedulerStats {
+    pub submitted: u64,
+    pub admitted: u64,
+    /// Rejected at admission (infeasible deadline or scheduler full).
+    pub rejected: u64,
+    pub completed: u64,
+    pub missed: u64,
+    pub cancelled: u64,
+    /// Jobs currently in a non-terminal state (gauge).
+    pub active: u64,
+    /// Incremental repairs applied.
+    pub repairs: u64,
+    /// Full fleet re-solves run.
+    pub full_solves: u64,
+    /// Repairs whose degradation exceeded the threshold and escalated
+    /// to a full re-solve.
+    pub repair_fallbacks: u64,
+    pub events_processed: u64,
+}
+
+/// Scheduler tuning. Non-finite or non-positive durations fall back to
+/// the defaults at construction — the core must never stall on a zero
+/// re-plan interval.
+#[derive(Debug, Clone)]
+pub struct SchedulerConfig {
+    /// Rolling-horizon epoch length, µs (default 1 s). Each epoch with
+    /// live Queued/Scheduled work triggers a full re-solve.
+    pub replan_interval_us: f64,
+    /// How far ahead an epoch re-solve looks, µs (default 30 s): queued
+    /// jobs with deadlines beyond `now + horizon` wait for a later epoch.
+    pub horizon_us: f64,
+    /// Relative objective excess (repair's achieved placement over the
+    /// cap-free optimum) beyond which repair escalates to a full
+    /// re-solve (default 0.25).
+    pub degrade_threshold: f64,
+    /// Objective, device subset, per-device concurrency cap and
+    /// candidate pairs, shared with the batch planner.
+    pub planner: PlannerConfig,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> SchedulerConfig {
+        SchedulerConfig {
+            replan_interval_us: 1e6,
+            horizon_us: 30e6,
+            degrade_threshold: 0.25,
+            planner: PlannerConfig::default(),
+        }
+    }
+}
+
+/// The clock-agnostic scheduler: an event queue, a job table, a cached
+/// [`ScheduleTable`] and an outbox of transitions/solves for the
+/// observability layer. Time only moves forward, and only through
+/// [`run_until`](SchedulerCore::run_until) (or the synchronous entry
+/// points [`submit`](SchedulerCore::submit) /
+/// [`cancel`](SchedulerCore::cancel), which act at the current instant).
+pub struct SchedulerCore {
+    cfg: SchedulerConfig,
+    now_us: f64,
+    queue: BinaryHeap<QueuedEvent>,
+    seq: u64,
+    jobs: Vec<JobRecord>,
+    next_job_id: u64,
+    /// Lazily built, rebuilt when the registry grows (dynamic `/v2/devices`
+    /// registrations) — an idle server never prices anything.
+    table: Option<ScheduleTable>,
+    table_devices: usize,
+    /// Devices currently marked down, survives table rebuilds.
+    down: Vec<DeviceId>,
+    next_epoch_at_us: f64,
+    transitions: Vec<TransitionRecord>,
+    solves: Vec<SolveOutcome>,
+    stats: SchedulerStats,
+    request_id: Option<String>,
+}
+
+impl SchedulerCore {
+    pub fn new(cfg: SchedulerConfig) -> SchedulerCore {
+        let mut cfg = cfg;
+        if !(cfg.replan_interval_us.is_finite() && cfg.replan_interval_us > 0.0) {
+            cfg.replan_interval_us = 1e6;
+        }
+        if !(cfg.horizon_us.is_finite() && cfg.horizon_us > 0.0) {
+            cfg.horizon_us = 30e6;
+        }
+        if !(cfg.degrade_threshold.is_finite() && cfg.degrade_threshold >= 0.0) {
+            cfg.degrade_threshold = 0.25;
+        }
+        let next_epoch_at_us = cfg.replan_interval_us;
+        SchedulerCore {
+            cfg,
+            now_us: 0.0,
+            queue: BinaryHeap::new(),
+            seq: 0,
+            jobs: Vec::new(),
+            next_job_id: 1,
+            table: None,
+            table_devices: 0,
+            down: Vec::new(),
+            next_epoch_at_us,
+            transitions: Vec::new(),
+            solves: Vec::new(),
+            stats: SchedulerStats::default(),
+            request_id: None,
+        }
+    }
+
+    /// Current scheduler-clock instant, µs.
+    pub fn now_us(&self) -> f64 {
+        self.now_us
+    }
+
+    pub fn config(&self) -> &SchedulerConfig {
+        &self.cfg
+    }
+
+    /// Tag subsequent synchronous mutations with an X-Request-Id so
+    /// their transitions correlate in the event log.
+    pub fn set_request_id(&mut self, id: Option<String>) {
+        self.request_id = id;
+    }
+
+    /// Every job record, in submission order.
+    pub fn jobs(&self) -> &[JobRecord] {
+        &self.jobs
+    }
+
+    pub fn job(&self, id: u64) -> Option<&JobRecord> {
+        self.jobs.iter().find(|j| j.id == id)
+    }
+
+    /// Counters with the `active` gauge filled in.
+    pub fn stats(&self) -> SchedulerStats {
+        let mut s = self.stats;
+        s.active = self.jobs.iter().filter(|j| !j.state.is_terminal()).count() as u64;
+        s
+    }
+
+    /// Cumulative `(candidates_evaluated, slab_calls)` of the
+    /// incremental table ((0, 0) before first use). Diff around a
+    /// submit to attribute per-event pricing work — admission plus
+    /// repair — which the bench gate compares against a full
+    /// re-solve's `K × total_points`.
+    pub fn table_counters(&self) -> (u64, u64) {
+        self.table.as_ref().map_or((0, 0), |t| t.counters())
+    }
+
+    /// Take the accumulated transitions and solves (oldest first). The
+    /// service layer turns these into JSONL events, metrics and plan
+    /// provenance; tests use them as the ground-truth trace.
+    pub fn drain_outbox(&mut self) -> (Vec<TransitionRecord>, Vec<SolveOutcome>) {
+        (std::mem::take(&mut self.transitions), std::mem::take(&mut self.solves))
+    }
+
+    /// Queue an external event at `at_us` (clamped to now; time never
+    /// rewinds). Virtual-clock entry point — serve mode calls
+    /// [`submit`](SchedulerCore::submit)/[`cancel`](SchedulerCore::cancel)
+    /// synchronously instead.
+    pub fn schedule(&mut self, at_us: f64, event: Event) {
+        let at = if at_us.is_finite() { at_us.max(self.now_us) } else { self.now_us };
+        self.push_internal(at, QueuedKind::External(event));
+    }
+
+    /// Admit (or reject) a job at the current instant.
+    ///
+    /// Admission is *provable*, not load-aware: the only submit-time
+    /// rejections are a deadline strictly below
+    /// [`ScheduleTable::fastest_us`] (infeasible even at max frequency
+    /// on an otherwise-idle device), a kernel the engine does not know,
+    /// malformed numbers, or a full scheduler ([`MAX_JOBS`] live jobs).
+    /// An admitted job that later cannot be placed in time is
+    /// explicitly transitioned to `Missed` with a recorded cause.
+    pub fn submit(&mut self, engine: &Engine, spec: JobSpec) -> Result<u64, PlanError> {
+        self.stats.submitted += 1;
+        if let Err(e) = self.admit(engine, &spec) {
+            self.stats.rejected += 1;
+            return Err(e);
+        }
+        self.stats.admitted += 1;
+        let id = self.next_job_id;
+        self.next_job_id += 1;
+        let name =
+            if spec.name.is_empty() { format!("job-{id}") } else { spec.name.clone() };
+        let deadline_at_us = spec.deadline_us.map(|d| self.now_us + d);
+        self.jobs.push(JobRecord {
+            id,
+            name: name.clone(),
+            kernel: spec.kernel,
+            scale: spec.scale,
+            deadline_at_us,
+            state: JobState::Queued,
+            submitted_at_us: self.now_us,
+            device: None,
+            point: None,
+            predicted_us: None,
+            started_at_us: None,
+            finished_at_us: None,
+            cause: None,
+            plan_id: None,
+            generation: 0,
+        });
+        self.transitions.push(TransitionRecord {
+            job: id,
+            name,
+            from: None,
+            to: JobState::Queued,
+            at_us: self.now_us,
+            plan_id: None,
+            cause: None,
+            request_id: self.request_id.clone(),
+        });
+        if let Some(at) = deadline_at_us {
+            self.push_internal(at, QueuedKind::DeadlineCheck { job: id });
+        }
+        let idx = self.jobs.len() - 1;
+        // Placement failures (caps, availability) leave the job Queued;
+        // they are not submit errors.
+        let _ = self.place_one(engine, idx, "job_arrival");
+        self.dispatch_all();
+        Ok(id)
+    }
+
+    /// Cancel a job at the current instant. `None` if the id is
+    /// unknown; cancelling an already-terminal job is a no-op that
+    /// returns the record unchanged.
+    pub fn cancel(&mut self, engine: &Engine, id: u64) -> Option<JobRecord> {
+        let idx = self.index_of(id)?;
+        if !self.jobs[idx].state.is_terminal() {
+            {
+                let r = &mut self.jobs[idx];
+                r.generation += 1;
+                r.finished_at_us = Some(self.now_us);
+            }
+            self.stats.cancelled += 1;
+            let plan_id = self.jobs[idx].plan_id;
+            let cause = Some("cancelled by request".to_string());
+            self.transition(idx, JobState::Cancelled, plan_id, cause);
+            self.try_place_queued(engine, "job_cancelled");
+        }
+        Some(self.jobs[idx].clone())
+    }
+
+    /// Advance the clock to `t_us`, processing every queued event and
+    /// every rolling-horizon epoch due on the way, in time order
+    /// (FIFO within ties). Idle stretches cost nothing: epochs with no
+    /// live work are skipped in O(1) and emit no solves or events.
+    pub fn run_until(&mut self, engine: &Engine, t_us: f64) {
+        if !t_us.is_finite() {
+            return;
+        }
+        loop {
+            let next_event = self.queue.peek().map(|e| e.at_us);
+            let event_due = matches!(next_event, Some(at) if at <= t_us);
+            let epoch_due = self.next_epoch_at_us <= t_us;
+            let event_first = matches!(next_event, Some(at) if at <= self.next_epoch_at_us);
+            if event_due && (!epoch_due || event_first) {
+                let ev = self.queue.pop().expect("peeked above");
+                if ev.at_us > self.now_us {
+                    self.now_us = ev.at_us;
+                }
+                self.process(engine, ev.kind);
+            } else if epoch_due {
+                if self.next_epoch_at_us > self.now_us {
+                    self.now_us = self.next_epoch_at_us;
+                }
+                if self.has_plannable() {
+                    self.full_resolve(engine, "horizon_roll");
+                }
+                let step = self.cfg.replan_interval_us;
+                self.next_epoch_at_us += step;
+                if self.queue.is_empty() && !self.has_plannable() && self.next_epoch_at_us <= t_us
+                {
+                    // Idle fast-forward: the skipped epochs would all be
+                    // no-ops, so jump past them in one step.
+                    let missed = ((t_us - self.next_epoch_at_us) / step).floor();
+                    if missed.is_finite() && missed > 0.0 {
+                        self.next_epoch_at_us += missed * step;
+                    }
+                }
+            } else {
+                break;
+            }
+        }
+        if t_us > self.now_us {
+            self.now_us = t_us;
+        }
+    }
+
+    // ---- admission ----------------------------------------------------
+
+    fn admit(&mut self, engine: &Engine, spec: &JobSpec) -> Result<(), PlanError> {
+        if !(spec.scale.is_finite() && spec.scale > 0.0) {
+            return Err(PlanError::Invalid(format!(
+                "job `{}`: scale must be positive and finite, got {}",
+                spec.name, spec.scale
+            )));
+        }
+        if let Some(d) = spec.deadline_us {
+            if !(d.is_finite() && d > 0.0) {
+                return Err(PlanError::Invalid(format!(
+                    "job `{}`: deadline_us must be positive and finite, got {d}",
+                    spec.name
+                )));
+            }
+        }
+        let live = self.jobs.iter().filter(|j| !j.state.is_terminal()).count();
+        if live >= MAX_JOBS {
+            return Err(PlanError::Invalid(format!(
+                "scheduler is at its live-job limit ({MAX_JOBS}); drain or cancel before \
+                 submitting more"
+            )));
+        }
+        let name = spec.name.clone();
+        let kernel = spec.kernel;
+        let scale = spec.scale;
+        let deadline = spec.deadline_us;
+        let table = self.table_mut(engine)?;
+        table.ensure_kernel(engine, kernel).map_err(|e| match e {
+            PlanError::UnknownKernel { kernel, .. } => {
+                PlanError::UnknownKernel { job: 0, name: name.clone(), kernel }
+            }
+            other => other,
+        })?;
+        if let Some(d) = deadline {
+            let fastest = table.fastest_us(engine, kernel, scale)?;
+            if fastest > d {
+                return Err(PlanError::Infeasible {
+                    job: 0,
+                    name,
+                    detail: format!(
+                        "deadline {d} µs is provably unmeetable: the fastest achievable \
+                         runtime over every available device and frequency — even at max \
+                         frequency on an otherwise-idle device — is {fastest:.3} µs"
+                    ),
+                });
+            }
+        }
+        Ok(())
+    }
+
+    // ---- planning -----------------------------------------------------
+
+    /// The planner's view of a record: deadline rebased to the budget
+    /// *remaining* at `now`.
+    fn planner_job(&self, r: &JobRecord, now: f64) -> Job {
+        let mut j = Job::new(r.name.clone(), r.kernel, r.scale);
+        if let Some(at) = r.deadline_at_us {
+            j = j.with_deadline(at - now);
+        }
+        j
+    }
+
+    /// Movable/pinned split for a repair around job `idx`: Scheduled
+    /// jobs with remaining budget may relocate; Running jobs (and the
+    /// rare Scheduled job whose deadline already passed but whose check
+    /// has not fired) only pin their device's capacity.
+    fn repair_context(&self, idx: usize) -> (Job, Vec<(Job, DeviceId)>, Vec<DeviceId>, Vec<usize>) {
+        let now = self.now_us;
+        let arrival = self.planner_job(&self.jobs[idx], now);
+        let mut movable = Vec::new();
+        let mut movable_idx = Vec::new();
+        let mut pinned = Vec::new();
+        for (i, j) in self.jobs.iter().enumerate() {
+            if i == idx {
+                continue;
+            }
+            match j.state {
+                JobState::Running => {
+                    if let Some(d) = j.device {
+                        pinned.push(d);
+                    }
+                }
+                JobState::Scheduled => {
+                    let doomed = matches!(j.deadline_at_us, Some(at) if at <= now);
+                    match (doomed, j.device) {
+                        (false, Some(d)) => {
+                            movable.push((self.planner_job(j, now), d));
+                            movable_idx.push(i);
+                        }
+                        (true, Some(d)) => pinned.push(d),
+                        _ => {}
+                    }
+                }
+                _ => {}
+            }
+        }
+        (arrival, movable, pinned, movable_idx)
+    }
+
+    /// Try to place one Queued job by incremental repair. Infeasible
+    /// placements leave the job Queued (deadline checks decide its
+    /// fate); a repair degraded beyond the threshold escalates to a
+    /// full re-solve.
+    fn place_one(
+        &mut self,
+        engine: &Engine,
+        idx: usize,
+        trigger: &'static str,
+    ) -> Result<(), PlanError> {
+        if self.jobs[idx].state != JobState::Queued {
+            return Ok(());
+        }
+        if matches!(self.jobs[idx].deadline_at_us, Some(at) if at <= self.now_us) {
+            return Ok(());
+        }
+        let (arrival, movable, pinned, movable_idx) = self.repair_context(idx);
+        let outcome = {
+            let table = self.table_mut(engine)?;
+            match table.repair_insert(engine, &arrival, &movable, &pinned) {
+                Ok(o) => o,
+                Err(PlanError::Infeasible { .. }) => return Ok(()),
+                Err(e) => return Err(e),
+            }
+        };
+        if outcome.degradation > self.cfg.degrade_threshold {
+            self.stats.repair_fallbacks += 1;
+            self.full_resolve(engine, "repair_degraded");
+            return Ok(());
+        }
+        let plan_id = outcome.report.plan_id;
+        if let Some((mi, moved)) = outcome.moved {
+            let r = &mut self.jobs[movable_idx[mi]];
+            r.device = Some(moved.device);
+            r.point = Some(moved.point);
+            r.predicted_us = Some(moved.time_us);
+            r.plan_id = Some(plan_id);
+        }
+        let p = outcome.placement;
+        {
+            let r = &mut self.jobs[idx];
+            r.device = Some(p.device);
+            r.point = Some(p.point);
+            r.predicted_us = Some(p.time_us);
+        }
+        self.transition(idx, JobState::Scheduled, Some(plan_id), None);
+        self.stats.repairs += 1;
+        let mut job_names = vec![self.jobs[idx].name.clone()];
+        if let Some((mi, _)) = outcome.moved {
+            job_names.push(self.jobs[movable_idx[mi]].name.clone());
+        }
+        self.solves.push(SolveOutcome {
+            kind: SolveKind::Repair,
+            trigger,
+            at_us: self.now_us,
+            jobs: 1 + usize::from(outcome.moved.is_some()),
+            job_names,
+            total_energy_mj: p.energy_mj + outcome.moved.map_or(0.0, |(_, m)| m.energy_mj),
+            max_time_us: p.time_us.max(outcome.moved.map_or(0.0, |(_, m)| m.time_us)),
+            report: outcome.report,
+        });
+        Ok(())
+    }
+
+    /// Full fleet re-solve over live Queued/Scheduled jobs inside the
+    /// horizon. Jobs the batch solver proves infeasible are dropped
+    /// from the solve one at a time (a Scheduled drop is demoted back
+    /// to Queued); the deadline checks decide what becomes of them.
+    fn full_resolve(&mut self, engine: &Engine, trigger: &'static str) {
+        let now = self.now_us;
+        let horizon = self.cfg.horizon_us;
+        let mut idxs: Vec<usize> = self
+            .jobs
+            .iter()
+            .enumerate()
+            .filter(|(_, j)| match (j.state, j.deadline_at_us) {
+                (JobState::Queued, None) | (JobState::Scheduled, None) => true,
+                (JobState::Queued, Some(at)) => at > now && at - now <= horizon,
+                (JobState::Scheduled, Some(at)) => at > now,
+                _ => false,
+            })
+            .map(|(i, _)| i)
+            .collect();
+        if idxs.is_empty() {
+            return;
+        }
+        let available = match self.table_mut(engine) {
+            Ok(t) => t.available_ids(),
+            Err(_) => return,
+        };
+        if available.is_empty() {
+            return;
+        }
+        let mut cfg = self.cfg.planner.clone();
+        cfg.devices = Some(available);
+        let solved = loop {
+            if idxs.is_empty() {
+                return;
+            }
+            let jobs: Vec<Job> =
+                idxs.iter().map(|&i| self.planner_job(&self.jobs[i], now)).collect();
+            match plan(engine, &jobs, &cfg) {
+                Ok(p) => break p,
+                Err(PlanError::Infeasible { job, .. }) => {
+                    let dropped = idxs.remove(job);
+                    if self.jobs[dropped].state == JobState::Scheduled {
+                        {
+                            let r = &mut self.jobs[dropped];
+                            r.device = None;
+                            r.point = None;
+                            r.predicted_us = None;
+                            r.generation += 1;
+                        }
+                        self.transition(
+                            dropped,
+                            JobState::Queued,
+                            None,
+                            Some("displaced at re-solve: no feasible placement".to_string()),
+                        );
+                    }
+                }
+                Err(_) => return,
+            }
+        };
+        let plan_id = solved.report.plan_id;
+        for a in &solved.assignments {
+            let i = idxs[a.job];
+            let was_queued = {
+                let r = &mut self.jobs[i];
+                let was = r.state == JobState::Queued;
+                r.device = Some(a.device);
+                r.point = Some(a.point);
+                r.predicted_us = Some(a.time_us);
+                r.plan_id = Some(plan_id);
+                was
+            };
+            if was_queued {
+                self.transition(i, JobState::Scheduled, Some(plan_id), None);
+            }
+        }
+        self.stats.full_solves += 1;
+        let job_names: Vec<String> =
+            idxs.iter().map(|&i| self.jobs[i].name.clone()).collect();
+        self.solves.push(SolveOutcome {
+            kind: SolveKind::Full,
+            trigger,
+            at_us: now,
+            jobs: solved.assignments.len(),
+            job_names,
+            total_energy_mj: solved.total_energy_mj,
+            max_time_us: solved.max_time_us,
+            report: solved.report,
+        });
+        self.dispatch_all();
+    }
+
+    // ---- execution ----------------------------------------------------
+
+    /// Start every Scheduled job whose device has a free slot (the
+    /// runtime analogue of the planner's per-device concurrency cap).
+    fn dispatch_all(&mut self) {
+        let cap = self.cfg.planner.device_cap;
+        loop {
+            let next = self.jobs.iter().position(|j| {
+                j.state == JobState::Scheduled
+                    && j.device
+                        .is_some_and(|d| !self.down.contains(&d) && self.running_load(d) < cap)
+            });
+            let Some(i) = next else { break };
+            self.start_job(i);
+        }
+    }
+
+    fn running_load(&self, device: DeviceId) -> usize {
+        self.jobs
+            .iter()
+            .filter(|j| j.state == JobState::Running && j.device == Some(device))
+            .count()
+    }
+
+    fn start_job(&mut self, idx: usize) {
+        let (job_id, at, generation, plan_id) = {
+            let r = &mut self.jobs[idx];
+            r.started_at_us = Some(self.now_us);
+            r.generation += 1;
+            (r.id, self.now_us + r.predicted_us.unwrap_or(0.0), r.generation, r.plan_id)
+        };
+        self.transition(idx, JobState::Running, plan_id, None);
+        self.push_internal(at, QueuedKind::PredictedCompletion { job: job_id, generation });
+    }
+
+    /// A Running job finished (model-predicted or client-observed):
+    /// judge it against its deadline, free the slot, pull in backlog.
+    fn finish_job(&mut self, engine: &Engine, idx: usize, observed: bool) {
+        let now = self.now_us;
+        let (late, plan_id) = {
+            let r = &mut self.jobs[idx];
+            r.finished_at_us = Some(now);
+            r.generation += 1;
+            let late = match r.deadline_at_us {
+                Some(at) if now > at => Some(now - at),
+                _ => None,
+            };
+            (late, r.plan_id)
+        };
+        match late {
+            None => {
+                self.stats.completed += 1;
+                let cause =
+                    observed.then(|| "completion reported before the predicted finish".to_string());
+                self.transition(idx, JobState::Done, plan_id, cause);
+            }
+            Some(l) => {
+                self.stats.missed += 1;
+                self.transition(
+                    idx,
+                    JobState::Missed,
+                    plan_id,
+                    Some(format!("completed {l:.3} µs after the deadline")),
+                );
+            }
+        }
+        self.try_place_queued(engine, "job_finished");
+    }
+
+    /// Fires at a job's absolute deadline: anything not yet Running is
+    /// now provably late. Running jobs are judged at completion instead.
+    fn deadline_check(&mut self, engine: &Engine, idx: usize) {
+        let cause = match self.jobs[idx].state {
+            JobState::Queued => "deadline passed while queued (never placed)",
+            JobState::Scheduled => "deadline passed while waiting for a device slot",
+            _ => return,
+        };
+        {
+            let r = &mut self.jobs[idx];
+            r.generation += 1;
+            r.finished_at_us = Some(self.now_us);
+        }
+        self.stats.missed += 1;
+        let plan_id = self.jobs[idx].plan_id;
+        self.transition(idx, JobState::Missed, plan_id, Some(cause.to_string()));
+        self.try_place_queued(engine, "deadline_miss");
+    }
+
+    /// Fuse an observed completion fraction into a refreshed estimate:
+    /// if `fraction` of the work took `elapsed`, the whole job takes
+    /// `elapsed / fraction` — re-queue the predicted completion.
+    fn observe_progress(&mut self, idx: usize, fraction: f64) {
+        if !(fraction.is_finite() && fraction > 0.0) {
+            return;
+        }
+        let now = self.now_us;
+        let queued = {
+            let r = &mut self.jobs[idx];
+            if r.state != JobState::Running {
+                return;
+            }
+            let started = r.started_at_us.unwrap_or(now);
+            let elapsed = now - started;
+            if elapsed <= 0.0 {
+                return; // no rate signal yet
+            }
+            let total = elapsed / fraction.min(1.0);
+            r.predicted_us = Some(total);
+            r.generation += 1;
+            (now + (total - elapsed).max(0.0), r.id, r.generation)
+        };
+        let (at, job, generation) = queued;
+        self.push_internal(at, QueuedKind::PredictedCompletion { job, generation });
+    }
+
+    /// Availability flip. Down re-queues every job placed on the device
+    /// (the state machine's documented back-edge) and re-plans them.
+    fn set_device(&mut self, engine: &Engine, device: DeviceId, up: bool) {
+        if up {
+            self.down.retain(|&d| d != device);
+        } else if !self.down.contains(&device) {
+            self.down.push(device);
+        }
+        if let Ok(table) = self.table_mut(engine) {
+            table.set_available(device, up);
+        }
+        if !up {
+            let displaced: Vec<usize> = self
+                .jobs
+                .iter()
+                .enumerate()
+                .filter(|(_, j)| {
+                    matches!(j.state, JobState::Scheduled | JobState::Running)
+                        && j.device == Some(device)
+                })
+                .map(|(i, _)| i)
+                .collect();
+            for i in displaced {
+                {
+                    let r = &mut self.jobs[i];
+                    r.device = None;
+                    r.point = None;
+                    r.predicted_us = None;
+                    r.started_at_us = None;
+                    r.generation += 1;
+                }
+                let cause = Some(format!("device {device} went down"));
+                self.transition(i, JobState::Queued, None, cause);
+            }
+        }
+        self.try_place_queued(engine, "device_change");
+    }
+
+    /// Re-try placement for every Queued job with budget left, then
+    /// start whatever now fits.
+    fn try_place_queued(&mut self, engine: &Engine, trigger: &'static str) {
+        let queued: Vec<usize> = self
+            .jobs
+            .iter()
+            .enumerate()
+            .filter(|(_, j)| j.state == JobState::Queued)
+            .map(|(i, _)| i)
+            .collect();
+        for i in queued {
+            if self.jobs[i].state != JobState::Queued {
+                continue; // an earlier repair's fallback re-solve placed it
+            }
+            let _ = self.place_one(engine, i, trigger);
+        }
+        self.dispatch_all();
+    }
+
+    // ---- plumbing -----------------------------------------------------
+
+    fn process(&mut self, engine: &Engine, kind: QueuedKind) {
+        self.stats.events_processed += 1;
+        match kind {
+            QueuedKind::External(ev) => match ev {
+                Event::JobSubmitted(spec) => {
+                    // Trace-driven rejections are counted, not fatal.
+                    let _ = self.submit(engine, spec);
+                }
+                Event::JobCompleted { job } => {
+                    if let Some(i) = self.index_of(job) {
+                        if self.jobs[i].state == JobState::Running {
+                            self.finish_job(engine, i, true);
+                        }
+                    }
+                }
+                Event::JobProgress { job, fraction } => {
+                    if let Some(i) = self.index_of(job) {
+                        self.observe_progress(i, fraction);
+                    }
+                }
+                Event::DeviceUp(d) => self.set_device(engine, d, true),
+                Event::DeviceDown(d) => self.set_device(engine, d, false),
+            },
+            QueuedKind::PredictedCompletion { job, generation } => {
+                if let Some(i) = self.index_of(job) {
+                    let r = &self.jobs[i];
+                    if r.state == JobState::Running && r.generation == generation {
+                        self.finish_job(engine, i, false);
+                    }
+                }
+            }
+            QueuedKind::DeadlineCheck { job } => {
+                if let Some(i) = self.index_of(job) {
+                    self.deadline_check(engine, i);
+                }
+            }
+        }
+    }
+
+    fn push_internal(&mut self, at_us: f64, kind: QueuedKind) {
+        self.seq += 1;
+        let at = if at_us.is_finite() { at_us.max(self.now_us) } else { self.now_us };
+        self.queue.push(QueuedEvent { at_us: at, seq: self.seq, kind });
+    }
+
+    fn index_of(&self, id: u64) -> Option<usize> {
+        self.jobs.iter().position(|j| j.id == id)
+    }
+
+    fn has_plannable(&self) -> bool {
+        self.jobs
+            .iter()
+            .any(|j| matches!(j.state, JobState::Queued | JobState::Scheduled))
+    }
+
+    fn transition(&mut self, idx: usize, to: JobState, plan: Option<u64>, cause: Option<String>) {
+        let rec = {
+            let r = &mut self.jobs[idx];
+            let from = Some(r.state);
+            r.state = to;
+            if plan.is_some() {
+                r.plan_id = plan;
+            }
+            if cause.is_some() {
+                r.cause.clone_from(&cause);
+            }
+            TransitionRecord {
+                job: r.id,
+                name: r.name.clone(),
+                from,
+                to,
+                at_us: self.now_us,
+                plan_id: r.plan_id,
+                cause,
+                request_id: self.request_id.clone(),
+            }
+        };
+        self.transitions.push(rec);
+    }
+
+    fn table_mut(&mut self, engine: &Engine) -> Result<&mut ScheduleTable, PlanError> {
+        let reg_len = match engine.registry() {
+            Some(r) => r.list().len(),
+            None => 0,
+        };
+        let rebuild = match &self.table {
+            None => true,
+            Some(_) => self.cfg.planner.devices.is_none() && reg_len != self.table_devices,
+        };
+        if rebuild {
+            let mut t = ScheduleTable::new(engine, &self.cfg.planner)?;
+            for &d in &self.down {
+                t.set_available(d, false);
+            }
+            self.table_devices = reg_len;
+            self.table = Some(t);
+        }
+        Ok(self.table.as_mut().expect("table was just built"))
+    }
+}
+
+/// Wall-clock wrapper for serve mode: the core behind a mutex plus a
+/// fixed epoch so every HTTP worker and the `svc-sched` ticker share
+/// one monotone µs clock.
+pub struct SchedulerHandle {
+    core: Mutex<SchedulerCore>,
+    epoch: Instant,
+}
+
+impl SchedulerHandle {
+    pub fn new(cfg: SchedulerConfig) -> SchedulerHandle {
+        SchedulerHandle { core: Mutex::new(SchedulerCore::new(cfg)), epoch: Instant::now() }
+    }
+
+    /// µs since the handle was created — the serve-mode scheduler clock.
+    pub fn now_us(&self) -> f64 {
+        self.epoch.elapsed().as_secs_f64() * 1e6
+    }
+
+    /// Lock the core (poisoning is ignored: the core's state is kept
+    /// consistent by value, a panicked writer cannot half-apply it).
+    pub fn lock(&self) -> MutexGuard<'_, SchedulerCore> {
+        self.core.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// Advance the core to wall-clock now (the ticker thread's body).
+    pub fn tick(&self, engine: &Engine) {
+        let now = self.now_us();
+        self.lock().run_until(engine, now);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::Arc;
+
+    use super::*;
+    use crate::dvfs::PowerModel;
+    use crate::model::{HwParams, KernelCounters};
+    use crate::registry::{DeviceRegistry, KernelCatalog};
+
+    fn counters_membound() -> KernelCounters {
+        KernelCounters {
+            l2_hr: 0.0,
+            gld_trans: 12.0,
+            avr_inst: 0.4,
+            n_blocks: 256.0,
+            wpb: 8.0,
+            aw: 64.0,
+            n_sm: 16.0,
+            o_itrs: 8.0,
+            i_itrs: 0.0,
+            uses_smem: false,
+            smem_conflict: 1.0,
+            gld_body: 12.0,
+            gld_edge: 0.0,
+            mem_ops: 3.0,
+            l1_hr: 0.0,
+        }
+    }
+
+    fn counters_compbound() -> KernelCounters {
+        KernelCounters { avr_inst: 100.0, l2_hr: 0.9, gld_trans: 2.0, ..counters_membound() }
+    }
+
+    /// The planner fixture: two devices (the second with slower DRAM
+    /// and a cheaper power model) and two kernels, 8 grid points per
+    /// device (16 total).
+    fn fixture() -> (Engine, Vec<DeviceId>, Vec<KernelId>) {
+        let hw = HwParams::paper_defaults();
+        let registry = Arc::new(DeviceRegistry::new());
+        let a = registry.register("gpu-a", hw, PowerModel::gtx980());
+        let mut hw_b = hw;
+        hw_b.dm_del += 1.0;
+        let mut power_b = PowerModel::gtx980();
+        power_b.static_w = 14.0;
+        power_b.core_coeff = 0.05;
+        let b = registry.register("gpu-b", hw_b, power_b);
+        let catalog = Arc::new(KernelCatalog::new());
+        let mem = catalog.register("membound", counters_membound());
+        let comp = catalog.register("compbound", counters_compbound());
+        let engine = Engine::native(hw).with_handles(registry, catalog, a).unwrap();
+        (engine, vec![a, b], vec![mem, comp])
+    }
+
+    /// A config with epochs pushed out of every test's time range, so
+    /// outcomes are decided by events alone (deterministic traces).
+    fn no_epoch() -> SchedulerConfig {
+        SchedulerConfig { replan_interval_us: 1e12, ..SchedulerConfig::default() }
+    }
+
+    #[test]
+    fn events_fire_in_time_order_then_fifo_within_a_tie() {
+        let (engine, _, kernels) = fixture();
+        let mut s = SchedulerCore::new(no_epoch());
+        s.schedule(300.0, Event::JobSubmitted(JobSpec::new("c", kernels[0], 1.0)));
+        s.schedule(100.0, Event::JobSubmitted(JobSpec::new("a", kernels[0], 1.0)));
+        s.schedule(200.0, Event::JobSubmitted(JobSpec::new("b", kernels[0], 1.0)));
+        s.schedule(500.0, Event::JobSubmitted(JobSpec::new("d", kernels[0], 1.0)));
+        s.schedule(500.0, Event::JobSubmitted(JobSpec::new("e", kernels[0], 1.0)));
+        s.run_until(&engine, 1000.0);
+        let names: Vec<&str> = s.jobs().iter().map(|j| j.name.as_str()).collect();
+        assert_eq!(names, vec!["a", "b", "c", "d", "e"], "time order, FIFO within the tie");
+        assert_eq!(s.jobs()[0].submitted_at_us, 100.0);
+        assert_eq!(s.jobs()[2].submitted_at_us, 300.0);
+        assert!(s.stats().events_processed >= 5);
+        assert_eq!(s.now_us(), 1000.0);
+    }
+
+    #[test]
+    fn lifecycle_reaches_done_with_a_full_transition_trace() {
+        let (engine, _, kernels) = fixture();
+        let mut s = SchedulerCore::new(SchedulerConfig::default());
+        let id =
+            s.submit(&engine, JobSpec::new("steady", kernels[0], 2.0).with_deadline(1e8)).unwrap();
+        let (transitions, solves) = s.drain_outbox();
+        let states: Vec<(Option<JobState>, JobState)> =
+            transitions.iter().map(|t| (t.from, t.to)).collect();
+        assert_eq!(
+            states,
+            vec![
+                (None, JobState::Queued),
+                (Some(JobState::Queued), JobState::Scheduled),
+                (Some(JobState::Scheduled), JobState::Running),
+            ]
+        );
+        assert!(transitions[1].plan_id.is_some(), "placement carries solve provenance");
+        assert_eq!(solves.len(), 1);
+        assert_eq!(solves[0].kind, SolveKind::Repair);
+        assert_eq!(solves[0].trigger, "job_arrival");
+        let r = s.job(id).unwrap();
+        assert!(r.device.is_some() && r.point.is_some() && r.predicted_us.is_some());
+        assert_eq!(r.id_str(), format!("job-{id}"));
+        s.run_until(&engine, 9e5);
+        let r = s.job(id).unwrap();
+        assert_eq!(r.state, JobState::Done);
+        assert!(r.finished_at_us.unwrap() <= 1e8);
+        let st = s.stats();
+        assert_eq!((st.submitted, st.admitted, st.completed, st.active), (1, 1, 1, 0));
+        assert_eq!(st.repairs, 1);
+        let (transitions, _) = s.drain_outbox();
+        assert_eq!(transitions.len(), 1);
+        assert_eq!(transitions[0].to, JobState::Done);
+    }
+
+    #[test]
+    fn admission_rejects_only_with_proof() {
+        let (engine, _, kernels) = fixture();
+        let mut s = SchedulerCore::new(no_epoch());
+        let err = s
+            .submit(&engine, JobSpec::new("tight", kernels[0], 1.0).with_deadline(1e-6))
+            .unwrap_err();
+        match err {
+            PlanError::Infeasible { name, detail, .. } => {
+                assert_eq!(name, "tight");
+                assert!(detail.contains("provably unmeetable"), "{detail}");
+            }
+            other => panic!("want Infeasible, got {other}"),
+        }
+        assert!(matches!(
+            s.submit(&engine, JobSpec::new("ghost", KernelId(999), 1.0)),
+            Err(PlanError::UnknownKernel { .. })
+        ));
+        assert!(matches!(
+            s.submit(&engine, JobSpec::new("nan", kernels[0], f64::NAN)),
+            Err(PlanError::Invalid(_))
+        ));
+        assert!(matches!(
+            s.submit(&engine, JobSpec::new("neg", kernels[0], 1.0).with_deadline(-5.0)),
+            Err(PlanError::Invalid(_))
+        ));
+        let st = s.stats();
+        assert_eq!((st.submitted, st.rejected, st.admitted), (4, 4, 0));
+        assert!(s.jobs().is_empty(), "rejected jobs leave no record");
+        // A meetable deadline is admitted: admission is a proof about
+        // physics, not a guess about load.
+        let id =
+            s.submit(&engine, JobSpec::new("ok", kernels[0], 1.0).with_deadline(1e9)).unwrap();
+        assert_eq!(s.job(id).unwrap().state, JobState::Running);
+    }
+
+    #[test]
+    fn capacity_backlog_drains_as_jobs_finish() {
+        let (engine, devices, kernels) = fixture();
+        let cfg = SchedulerConfig {
+            replan_interval_us: 1e12,
+            planner: PlannerConfig {
+                device_cap: 1,
+                devices: Some(vec![devices[0]]),
+                ..PlannerConfig::default()
+            },
+            ..SchedulerConfig::default()
+        };
+        let mut s = SchedulerCore::new(cfg);
+        let a = s.submit(&engine, JobSpec::new("first", kernels[0], 3.0)).unwrap();
+        let b = s.submit(&engine, JobSpec::new("second", kernels[0], 2.0)).unwrap();
+        assert_eq!(s.job(a).unwrap().state, JobState::Running);
+        assert_eq!(s.job(b).unwrap().state, JobState::Queued, "cap-bound arrival waits");
+        s.run_until(&engine, 1e9);
+        assert_eq!(s.job(a).unwrap().state, JobState::Done);
+        assert_eq!(s.job(b).unwrap().state, JobState::Done);
+        let first_done = s.job(a).unwrap().finished_at_us.unwrap();
+        let second_start = s.job(b).unwrap().started_at_us.unwrap();
+        assert!(second_start >= first_done, "the slot frees before the backlog starts");
+        assert_eq!(s.stats().completed, 2);
+    }
+
+    #[test]
+    fn deadline_miss_while_queued_is_explicit() {
+        let (engine, devices, kernels) = fixture();
+        let cfg = SchedulerConfig {
+            replan_interval_us: 1e12,
+            planner: PlannerConfig {
+                device_cap: 1,
+                devices: Some(vec![devices[0]]),
+                ..PlannerConfig::default()
+            },
+            ..SchedulerConfig::default()
+        };
+        let mut s = SchedulerCore::new(cfg);
+        let hog = s.submit(&engine, JobSpec::new("hog", kernels[0], 1e9)).unwrap();
+        let late =
+            s.submit(&engine, JobSpec::new("late", kernels[0], 1.0).with_deadline(1e5)).unwrap();
+        assert_eq!(s.job(late).unwrap().state, JobState::Queued);
+        s.run_until(&engine, 2e5);
+        assert_eq!(s.job(hog).unwrap().state, JobState::Running);
+        let r = s.job(late).unwrap();
+        assert_eq!(r.state, JobState::Missed);
+        assert_eq!(r.finished_at_us, Some(1e5));
+        assert!(r.cause.as_deref().is_some_and(|c| c.contains("while queued")), "{:?}", r.cause);
+        assert_eq!(s.stats().missed, 1);
+    }
+
+    #[test]
+    fn device_down_requeues_and_replans_elsewhere() {
+        let (engine, devices, kernels) = fixture();
+        let mut s = SchedulerCore::new(no_epoch());
+        let id = s.submit(&engine, JobSpec::new("mover", kernels[0], 1e6)).unwrap();
+        let first = s.job(id).unwrap().device.unwrap();
+        assert_eq!(s.job(id).unwrap().state, JobState::Running);
+        s.schedule(10.0, Event::DeviceDown(first));
+        s.run_until(&engine, 20.0);
+        let r = s.job(id).unwrap();
+        assert_eq!(r.state, JobState::Running, "re-planned onto the surviving device");
+        let second = r.device.unwrap();
+        assert_ne!(second, first);
+        assert!(devices.contains(&second));
+        let (transitions, _) = s.drain_outbox();
+        assert!(
+            transitions.iter().any(|t| {
+                t.from == Some(JobState::Running)
+                    && t.to == JobState::Queued
+                    && t.cause.as_deref().is_some_and(|c| c.contains("went down"))
+            }),
+            "displacement is a recorded back-edge"
+        );
+        let p = s.job(id).unwrap().predicted_us.unwrap();
+        s.run_until(&engine, 20.0 + 2.0 * p);
+        assert_eq!(s.job(id).unwrap().state, JobState::Done);
+    }
+
+    #[test]
+    fn progress_observation_reschedules_the_predicted_completion() {
+        let (engine, _, kernels) = fixture();
+        let mut s = SchedulerCore::new(no_epoch());
+        let id = s.submit(&engine, JobSpec::new("slowpoke", kernels[0], 8.0)).unwrap();
+        let p = s.job(id).unwrap().predicted_us.unwrap();
+        assert!(p > 0.0);
+        // Halfway through the predicted runtime only 1% is done: the
+        // observed rate implies a 50x longer job.
+        s.schedule(0.5 * p, Event::JobProgress { job: id, fraction: 0.01 });
+        s.run_until(&engine, 2.0 * p);
+        let r = s.job(id).unwrap();
+        assert_eq!(r.state, JobState::Running, "stale model completion must be dropped");
+        let total = r.predicted_us.unwrap();
+        assert!((total - 50.0 * p).abs() <= 1e-6 * total, "{total} vs {}", 50.0 * p);
+        s.run_until(&engine, 60.0 * p);
+        assert_eq!(s.job(id).unwrap().state, JobState::Done);
+    }
+
+    #[test]
+    fn observed_completion_beats_the_model_prediction() {
+        let (engine, _, kernels) = fixture();
+        let mut s = SchedulerCore::new(no_epoch());
+        let id = s.submit(&engine, JobSpec::new("early", kernels[1], 1e6)).unwrap();
+        let predicted = s.job(id).unwrap().predicted_us.unwrap();
+        s.schedule(5.0, Event::JobCompleted { job: id });
+        s.run_until(&engine, 10.0);
+        let r = s.job(id).unwrap();
+        assert_eq!(r.state, JobState::Done);
+        assert_eq!(r.finished_at_us, Some(5.0));
+        assert!(r.cause.as_deref().is_some_and(|c| c.contains("reported")), "{:?}", r.cause);
+        // The model's now-stale completion event must not double-count.
+        s.run_until(&engine, 2.0 * predicted);
+        assert_eq!(s.stats().completed, 1);
+    }
+
+    #[test]
+    fn cancel_frees_the_slot_and_terminal_cancel_is_a_no_op() {
+        let (engine, devices, kernels) = fixture();
+        let cfg = SchedulerConfig {
+            replan_interval_us: 1e12,
+            planner: PlannerConfig {
+                device_cap: 1,
+                devices: Some(vec![devices[0]]),
+                ..PlannerConfig::default()
+            },
+            ..SchedulerConfig::default()
+        };
+        let mut s = SchedulerCore::new(cfg);
+        let a = s.submit(&engine, JobSpec::new("doomed", kernels[0], 1e9)).unwrap();
+        let b = s.submit(&engine, JobSpec::new("waiting", kernels[0], 1.0)).unwrap();
+        assert_eq!(s.job(b).unwrap().state, JobState::Queued);
+        assert!(s.cancel(&engine, 424242).is_none(), "unknown id");
+        let rec = s.cancel(&engine, a).unwrap();
+        assert_eq!(rec.state, JobState::Cancelled);
+        assert_eq!(s.job(b).unwrap().state, JobState::Running, "cancel freed the slot");
+        let again = s.cancel(&engine, a).unwrap();
+        assert_eq!(again.state, JobState::Cancelled);
+        assert_eq!(s.stats().cancelled, 1, "terminal cancel does not re-count");
+    }
+
+    #[test]
+    fn repair_does_strictly_less_candidate_work_than_a_full_resolve() {
+        let (engine, _, kernels) = fixture();
+        let cfg = SchedulerConfig {
+            replan_interval_us: 100.0,
+            planner: PlannerConfig { device_cap: 1, ..PlannerConfig::default() },
+            ..SchedulerConfig::default()
+        };
+        let mut s = SchedulerCore::new(cfg);
+        // a/b fill both devices (cap 1); c/d queue behind them. Repeat
+        // kernels are cache hits: zero candidates for c and d.
+        let arrivals = [
+            ("a", kernels[0], 1e6),
+            ("b", kernels[1], 1e6),
+            ("c", kernels[0], 1.0),
+            ("d", kernels[1], 1.0),
+        ];
+        let mut event_work = Vec::new();
+        for (name, k, scale) in arrivals {
+            let before = s.table_counters().0;
+            s.submit(&engine, JobSpec::new(name, k, scale)).unwrap();
+            event_work.push(s.table_counters().0 - before);
+        }
+        assert_eq!(event_work, vec![16, 16, 0, 0], "one kernel slab max per event");
+        // Crossing the epoch re-solves the queued pair in full: two
+        // distinct kernels over the 16-point table.
+        s.run_until(&engine, 150.0);
+        let (_, solves) = s.drain_outbox();
+        let full = solves.iter().find(|o| o.kind == SolveKind::Full).expect("epoch full solve");
+        assert_eq!(full.trigger, "horizon_roll");
+        assert_eq!(full.report.candidates_evaluated, 32, "K=2 kernels x 16 grid points");
+        for &w in &event_work {
+            assert!(
+                w < full.report.candidates_evaluated,
+                "per-event repair work ({w}) must be strictly below a full re-solve ({})",
+                full.report.candidates_evaluated
+            );
+        }
+        let st = s.stats();
+        assert_eq!(st.full_solves, 1);
+        assert!(st.repairs >= 2);
+    }
+}

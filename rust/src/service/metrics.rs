@@ -24,6 +24,7 @@ use std::time::Duration;
 use crate::engine::CacheStats;
 use crate::obs::{AccuracySeries, Stage};
 use crate::planner::SolveReport;
+use crate::scheduler::SchedulerStats;
 
 /// Histogram bucket upper bounds, microseconds.
 const BUCKET_BOUNDS_US: [f64; 24] = [
@@ -136,6 +137,10 @@ pub enum Route {
     PredictV2,
     AdviseV2,
     PlanV2,
+    /// `POST /v2/jobs` (submit) and `GET /v2/jobs` (list).
+    JobsV2,
+    /// `GET`/`DELETE /v2/jobs/{id}` — one metered route for every id.
+    JobV2,
     ObservationsV2,
     DebugTraces,
     DebugPlans,
@@ -144,7 +149,7 @@ pub enum Route {
 }
 
 impl Route {
-    pub const ALL: [Route; 15] = [
+    pub const ALL: [Route; 17] = [
         Route::Healthz,
         Route::Metrics,
         Route::Predict,
@@ -155,6 +160,8 @@ impl Route {
         Route::PredictV2,
         Route::AdviseV2,
         Route::PlanV2,
+        Route::JobsV2,
+        Route::JobV2,
         Route::ObservationsV2,
         Route::DebugTraces,
         Route::DebugPlans,
@@ -174,10 +181,12 @@ impl Route {
             "/v2/predict" => Route::PredictV2,
             "/v2/advise" => Route::AdviseV2,
             "/v2/plan" => Route::PlanV2,
+            "/v2/jobs" => Route::JobsV2,
             "/v2/observations" => Route::ObservationsV2,
             "/debug/traces" => Route::DebugTraces,
             "/debug/plans" => Route::DebugPlans,
             "/debug/drift" => Route::DebugDrift,
+            p if p.starts_with("/v2/jobs/") => Route::JobV2,
             _ => Route::Other,
         }
     }
@@ -194,6 +203,8 @@ impl Route {
             Route::PredictV2 => "/v2/predict",
             Route::AdviseV2 => "/v2/advise",
             Route::PlanV2 => "/v2/plan",
+            Route::JobsV2 => "/v2/jobs",
+            Route::JobV2 => "/v2/jobs/{id}",
             Route::ObservationsV2 => "/v2/observations",
             Route::DebugTraces => "/debug/traces",
             Route::DebugPlans => "/debug/plans",
@@ -214,11 +225,13 @@ impl Route {
             Route::PredictV2 => 7,
             Route::AdviseV2 => 8,
             Route::PlanV2 => 9,
-            Route::ObservationsV2 => 10,
-            Route::DebugTraces => 11,
-            Route::DebugPlans => 12,
-            Route::DebugDrift => 13,
-            Route::Other => 14,
+            Route::JobsV2 => 10,
+            Route::JobV2 => 11,
+            Route::ObservationsV2 => 12,
+            Route::DebugTraces => 13,
+            Route::DebugPlans => 14,
+            Route::DebugDrift => 15,
+            Route::Other => 16,
         }
     }
 }
@@ -354,7 +367,10 @@ impl Metrics {
     /// observations refused at the series-table bound; `events` is the
     /// `(emitted, dropped)` pair from the optional `--event-log` sink
     /// (`None` renders the series as disabled-with-zeros so scrapers
-    /// never see a gap).
+    /// never see a gap); `scheduler` is the streaming scheduler's
+    /// counter snapshot ([`SchedulerCore::stats`]).
+    ///
+    /// [`SchedulerCore::stats`]: crate::scheduler::SchedulerCore::stats
     pub fn render(
         &self,
         cache: &CacheStats,
@@ -363,6 +379,7 @@ impl Metrics {
         accuracy: &[AccuracySeries],
         samples_dropped: u64,
         events: Option<(u64, u64)>,
+        scheduler: &SchedulerStats,
     ) -> String {
         use std::fmt::Write as _;
         let mut out = String::with_capacity(16 * 1024);
@@ -480,6 +497,20 @@ impl Metrics {
         let _ = writeln!(out, "service_event_log_enabled {enabled}");
         let _ = writeln!(out, "service_events_emitted_total {emitted}");
         let _ = writeln!(out, "service_events_dropped_total {dropped}");
+        // Streaming scheduler lifecycle counters — always present,
+        // zeros until the first `POST /v2/jobs`.
+        let s = scheduler;
+        let _ = writeln!(out, "scheduler_jobs_submitted_total {}", s.submitted);
+        let _ = writeln!(out, "scheduler_jobs_admitted_total {}", s.admitted);
+        let _ = writeln!(out, "scheduler_jobs_rejected_total {}", s.rejected);
+        let _ = writeln!(out, "scheduler_jobs_completed_total {}", s.completed);
+        let _ = writeln!(out, "scheduler_jobs_missed_total {}", s.missed);
+        let _ = writeln!(out, "scheduler_jobs_cancelled_total {}", s.cancelled);
+        let _ = writeln!(out, "scheduler_jobs_active {}", s.active);
+        let _ = writeln!(out, "scheduler_repairs_total {}", s.repairs);
+        let _ = writeln!(out, "scheduler_full_solves_total {}", s.full_solves);
+        let _ = writeln!(out, "scheduler_repair_fallbacks_total {}", s.repair_fallbacks);
+        let _ = writeln!(out, "scheduler_events_processed_total {}", s.events_processed);
         out
     }
 }
@@ -589,6 +620,9 @@ mod tests {
         assert_eq!(Route::of_path("/v2/predict"), Route::PredictV2);
         assert_eq!(Route::of_path("/v2/devices"), Route::DevicesV2);
         assert_eq!(Route::of_path("/v2/plan"), Route::PlanV2);
+        assert_eq!(Route::of_path("/v2/jobs"), Route::JobsV2);
+        assert_eq!(Route::of_path("/v2/jobs/job-12"), Route::JobV2);
+        assert_eq!(Route::of_path("/v2/jobs/anything/else"), Route::JobV2);
         assert_eq!(Route::of_path("/v2/observations"), Route::ObservationsV2);
         assert_eq!(Route::of_path("/debug/traces"), Route::DebugTraces);
         assert_eq!(Route::of_path("/debug/plans"), Route::DebugPlans);
@@ -631,6 +665,19 @@ mod tests {
             window: 2,
             samples: 2,
         }];
+        let sched = SchedulerStats {
+            submitted: 5,
+            admitted: 4,
+            rejected: 1,
+            completed: 2,
+            missed: 1,
+            cancelled: 1,
+            active: 0,
+            repairs: 3,
+            full_solves: 2,
+            repair_fallbacks: 1,
+            events_processed: 11,
+        };
         let text = m.render(
             &CacheStats::default(),
             Duration::from_secs(2),
@@ -638,6 +685,7 @@ mod tests {
             &accuracy,
             3,
             Some((9, 1)),
+            &sched,
         );
         for needle in [
             "service_uptime_seconds",
@@ -687,6 +735,21 @@ mod tests {
             "service_event_log_enabled 1",
             "service_events_emitted_total 9",
             "service_events_dropped_total 1",
+            // The /v2/jobs lifecycle routes are metered like any other.
+            "service_requests_total{route=\"/v2/jobs\"} 0",
+            "service_requests_total{route=\"/v2/jobs/{id}\"} 0",
+            // Streaming scheduler lifecycle counters.
+            "scheduler_jobs_submitted_total 5",
+            "scheduler_jobs_admitted_total 4",
+            "scheduler_jobs_rejected_total 1",
+            "scheduler_jobs_completed_total 2",
+            "scheduler_jobs_missed_total 1",
+            "scheduler_jobs_cancelled_total 1",
+            "scheduler_jobs_active 0",
+            "scheduler_repairs_total 3",
+            "scheduler_full_solves_total 2",
+            "scheduler_repair_fallbacks_total 1",
+            "scheduler_events_processed_total 11",
         ] {
             assert!(text.contains(needle), "missing `{needle}` in:\n{text}");
         }
@@ -705,6 +768,7 @@ mod tests {
             &[],
             0,
             None,
+            &SchedulerStats::default(),
         );
         assert!(
             text.contains("service_latency_us{route=\"/healthz\",stat=\"p50\"} +Inf"),

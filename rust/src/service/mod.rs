@@ -20,7 +20,7 @@
 //!   │             plans, drift}                        │
 //!   │             /v1/{predict, grid, advise}  (shim)  │
 //!   │             /v2/{devices, kernels, predict,      │
-//!   │             advise, plan, observations}          │
+//!   │             advise, plan, jobs, observations}    │
 //!   │ json.rs     hand-rolled JSON both directions     │
 //!   │ metrics.rs  counters + latency histograms        │
 //!   └────────────────────────┬─────────────────────────┘
@@ -29,6 +29,7 @@
 //!            KernelCatalog}          (DESIGN.md §8, §10)
 //!              dvfs::{PowerModel, advise}  (§VII)
 //!              planner::plan  (fleet DVFS, §11)
+//!              scheduler::SchedulerCore  (streaming jobs, §14)
 //!              obs::{TraceRing, AccuracyTracker}  (§13)
 //! ```
 //!
@@ -55,6 +56,15 @@
 //! explanations, retained in a provenance ring behind
 //! `GET /debug/plans`; `--event-log PATH` appends the whole story as
 //! correlated JSONL records (docs/OBSERVABILITY.md).
+//!
+//! `POST /v2/jobs` turns the one-shot planner into a streaming
+//! scheduler (DESIGN.md §14): jobs are admitted with a provable
+//! deadline check (422 `infeasible_at_submit` otherwise), placed by
+//! incremental repair, re-planned each `--replan-interval` over a
+//! rolling `--horizon`, and observable as a
+//! Queued → Scheduled → Running → Done/Missed/Cancelled state machine
+//! via `GET /v2/jobs/{id}`, `scheduler_*` metrics and `job_transition`
+//! log events.
 
 pub mod client;
 pub mod http;

@@ -14,6 +14,8 @@
 //! | `/v2/predict`    | POST     | `{requests: [{device, kernel, core_mhz, mem_mhz}]}` (batch-first) |
 //! | `/v2/advise`     | POST     | `{device, kernel, objective?, deadline_us?, pairs?, include_points?}` |
 //! | `/v2/plan`       | POST     | `{jobs: [{kernel, scale?, deadline_us?, name?}], devices?, objective?, device_cap?, pairs?}` |
+//! | `/v2/jobs`       | POST/GET | `{kernel, scale?, deadline_us?, name?}` / —  |
+//! | `/v2/jobs/{id}`  | GET/DELETE | —                                         |
 //! | `/v2/observations` | POST   | `{observations: [{device, kernel, core_mhz, mem_mhz, measured_us\|measured_ms}]}` |
 //! | `/debug/traces`  | GET      | —                                           |
 //! | `/debug/plans`   | GET      | —                                           |
@@ -32,10 +34,11 @@
 //!
 //! Every error body is structured JSON `{error, code}` with a stable
 //! machine-readable `code`: `bad_json`, `bad_request`,
-//! `unknown_kernel`, `unknown_device`, `unknown_route`,
+//! `unknown_kernel`, `unknown_device`, `unknown_route`, `unknown_job`,
 //! `method_not_allowed`, `registry_full`, `infeasible` (422, from the
-//! fleet planner), `internal` (plus `overloaded` and `bad_http` from
-//! the server loop).
+//! fleet planner), `infeasible_at_submit` (422, from the streaming
+//! scheduler's admission control), `internal` (plus `overloaded` and
+//! `bad_http` from the server loop).
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -52,6 +55,7 @@ use crate::planner::{
 use crate::registry::{
     DeviceId, DeviceRecord, DeviceRegistry, FreqPoint, KernelCatalog, KernelId, RegisterError,
 };
+use crate::scheduler::{JobRecord, JobSpec, SchedulerConfig, SchedulerHandle};
 
 use super::http::{HttpRequest, HttpResponse};
 use super::json::Value;
@@ -110,6 +114,10 @@ pub struct ServiceState {
     /// Structured event-log sink (`--event-log`); `None` when the log
     /// is not enabled.
     pub events: Option<Arc<EventSink>>,
+    /// Streaming job scheduler behind `/v2/jobs` (DESIGN.md §14).
+    /// `Service::start` rebuilds it from `ServiceConfig`
+    /// (`--replan-interval`, `--horizon`) before serving.
+    pub scheduler: Arc<SchedulerHandle>,
 }
 
 impl ServiceState {
@@ -133,6 +141,7 @@ impl ServiceState {
             accuracy: Arc::new(AccuracyTracker::default()),
             plans: Arc::new(Ring::new(DEFAULT_PLAN_RING)),
             events: None,
+            scheduler: Arc::new(SchedulerHandle::new(SchedulerConfig::default())),
         }
     }
 
@@ -206,6 +215,10 @@ fn dispatch(
         ("POST", Route::PredictV2) => v2_predict(state, req),
         ("POST", Route::AdviseV2) => v2_advise(state, req),
         ("POST", Route::PlanV2) => v2_plan(state, metrics, req, rid),
+        ("POST", Route::JobsV2) => v2_submit_job(state, metrics, req, rid),
+        ("GET", Route::JobsV2) => v2_list_jobs(state, metrics),
+        ("GET", Route::JobV2) => v2_get_job(state, metrics, req),
+        ("DELETE", Route::JobV2) => v2_cancel_job(state, metrics, req, rid),
         ("POST", Route::ObservationsV2) => v2_observations(state, req, rid),
         ("GET", Route::DebugTraces) => debug_traces(state),
         ("GET", Route::DebugPlans) => debug_plans(state),
@@ -230,6 +243,7 @@ fn healthz(state: &ServiceState) -> HttpResponse {
 }
 
 fn metrics_route(state: &ServiceState, metrics: &Metrics) -> HttpResponse {
+    let scheduler = state.scheduler.lock().stats();
     let text = metrics.render(
         &state.engine.cache_stats(),
         state.started.elapsed(),
@@ -237,6 +251,7 @@ fn metrics_route(state: &ServiceState, metrics: &Metrics) -> HttpResponse {
         &state.accuracy.snapshot(),
         state.accuracy.dropped_total(),
         state.events.as_ref().map(|e| (e.emitted_total(), e.dropped_total())),
+        &scheduler,
     );
     HttpResponse::text(200, text)
 }
@@ -1589,6 +1604,270 @@ fn v2_plan(
     HttpResponse::json(200, Value::obj(fields).render_sized(600 + 400 * n_assigned))
 }
 
+/// Parse the job handle out of a `/v2/jobs/{id}` path. Accepts the
+/// canonical `job-<n>` handle and the bare numeric id.
+fn parse_job_id(path: &str) -> Option<u64> {
+    let rest = path.strip_prefix("/v2/jobs/")?;
+    let rest = rest.strip_prefix("job-").unwrap_or(rest);
+    if rest.is_empty() || !rest.bytes().all(|b| b.is_ascii_digit()) {
+        return None;
+    }
+    rest.parse().ok()
+}
+
+/// One job rendered for the wire: identity, lifecycle state, placement
+/// (once scheduled), predicted/observed timing, and the terminal cause
+/// for `missed`/`cancelled`/displaced jobs.
+fn job_json(r: &JobRecord) -> Value {
+    let mut fields = vec![
+        ("id", Value::str(r.id_str())),
+        ("name", Value::str(r.name.clone())),
+        ("kernel", Value::str(r.kernel.to_string())),
+        ("scale", Value::num(r.scale)),
+        ("state", Value::str(r.state.name())),
+        ("submitted_at_us", Value::num(r.submitted_at_us)),
+    ];
+    if let Some(d) = r.deadline_at_us {
+        fields.push(("deadline_at_us", Value::num(d)));
+    }
+    if let Some(d) = r.device {
+        fields.push(("device", Value::str(d.to_string())));
+    }
+    if let Some(p) = r.point {
+        fields.push(("core_mhz", Value::num(p.core_mhz)));
+        fields.push(("mem_mhz", Value::num(p.mem_mhz)));
+    }
+    if let Some(t) = r.predicted_us {
+        fields.push(("predicted_us", Value::num(t)));
+    }
+    if let Some(t) = r.started_at_us {
+        fields.push(("started_at_us", Value::num(t)));
+    }
+    if let Some(t) = r.finished_at_us {
+        fields.push(("finished_at_us", Value::num(t)));
+    }
+    if let Some(p) = r.plan_id {
+        fields.push(("plan_id", Value::str(format!("plan-{p}"))));
+    }
+    if let Some(c) = &r.cause {
+        fields.push(("cause", Value::str(c.clone())));
+    }
+    Value::obj(fields)
+}
+
+/// Drain the scheduler's outbox into the observability surfaces
+/// (DESIGN.md §14): every epoch solve feeds the `planner_*` metrics
+/// and the plan-provenance ring exactly like a `/v2/plan` solve, and
+/// every job state change becomes a `job_transition` event in the
+/// structured log, correlated by `X-Request-Id` where one applies.
+/// The server's scheduler ticker calls this too, so transitions that
+/// happen between requests still reach the log.
+pub(super) fn drain_scheduler(state: &ServiceState, metrics: &Metrics, rid: Option<&str>) {
+    let (transitions, solves, objective) = {
+        let mut core = state.scheduler.lock();
+        let (t, s) = core.drain_outbox();
+        (t, s, core.config().planner.objective.name())
+    };
+    for s in &solves {
+        metrics.record_solve(&s.report);
+        state.plans.record(PlanRecord {
+            request_id: rid.map(str::to_string),
+            objective,
+            jobs: s.job_names.clone(),
+            total_energy_mj: s.total_energy_mj,
+            max_time_us: s.max_time_us,
+            energy_savings_pct: None,
+            report: s.report.clone(),
+        });
+    }
+    let Some(sink) = &state.events else { return };
+    for s in &solves {
+        let mut ev = vec![
+            ("event", Value::str("solve")),
+            ("plan_id", Value::str(s.report.plan_id_str())),
+        ];
+        if let Some(rid) = rid {
+            ev.push(("request_id", Value::str(rid)));
+        }
+        ev.push(("kind", Value::str(s.kind.name())));
+        ev.push(("trigger", Value::str(s.trigger)));
+        ev.push(("objective", Value::str(objective)));
+        ev.push(("jobs", Value::num(s.jobs as f64)));
+        ev.push(("total_energy_mj", Value::num(s.total_energy_mj)));
+        ev.push(("max_time_us", Value::num(s.max_time_us)));
+        ev.push(("solve_us", Value::num(s.report.total_us)));
+        sink.emit(Value::obj(ev).render());
+    }
+    for t in &transitions {
+        let mut ev = vec![
+            ("event", Value::str("job_transition")),
+            ("job", Value::str(format!("job-{}", t.job))),
+            ("name", Value::str(t.name.clone())),
+        ];
+        if let Some(f) = t.from {
+            ev.push(("from", Value::str(f.name())));
+        }
+        ev.push(("to", Value::str(t.to.name())));
+        ev.push(("at_us", Value::num(t.at_us)));
+        if let Some(p) = t.plan_id {
+            ev.push(("plan_id", Value::str(format!("plan-{p}"))));
+        }
+        if let Some(c) = &t.cause {
+            ev.push(("cause", Value::str(c.clone())));
+        }
+        if let Some(r) = &t.request_id {
+            ev.push(("request_id", Value::str(r.clone())));
+        }
+        sink.emit(Value::obj(ev).render());
+    }
+}
+
+/// `POST /v2/jobs` — submit one streaming job to the scheduler
+/// (DESIGN.md §14). Malformed fields are parse-layer 400s that never
+/// reach the solver; a provably unmeetable deadline is a 422
+/// `infeasible_at_submit` carrying the admission proof in `error`; an
+/// admitted job returns `202 Accepted` with its initial record (the
+/// dispatcher may already have it `running`).
+fn v2_submit_job(
+    state: &ServiceState,
+    metrics: &Metrics,
+    req: &HttpRequest,
+    rid: Option<&str>,
+) -> HttpResponse {
+    let body = match parse_body(req) {
+        Ok(v) => v,
+        Err(resp) => return resp,
+    };
+    let Some(kernel) = body.get("kernel").and_then(Value::as_str) else {
+        return error_json(400, "bad_request", "body needs `kernel` (krn-<n> handle or name)");
+    };
+    let Some(kid) = state.catalog.resolve_id(kernel) else {
+        return error_json(404, "unknown_kernel", &format!("unknown kernel `{kernel}`"));
+    };
+    let scale = match body.get("scale") {
+        None => 1.0,
+        Some(v) => match v.as_f64() {
+            Some(s) if s.is_finite() && s > 0.0 => s,
+            _ => return error_json(400, "bad_request", "`scale` must be a positive finite number"),
+        },
+    };
+    let name = body
+        .get("name")
+        .and_then(Value::as_str)
+        .map(str::to_string)
+        .unwrap_or_default();
+    let mut spec = JobSpec::new(name, kid, scale);
+    match body.get("deadline_us") {
+        None => {}
+        Some(v) => match v.as_f64() {
+            Some(d) if d.is_finite() && d > 0.0 => spec = spec.with_deadline(d),
+            _ => {
+                return error_json(
+                    400,
+                    "bad_request",
+                    "`deadline_us` must be a positive finite number",
+                )
+            }
+        },
+    }
+
+    let now = state.scheduler.now_us();
+    let submitted = {
+        let mut core = state.scheduler.lock();
+        core.run_until(&state.engine, now);
+        core.set_request_id(rid.map(str::to_string));
+        let out = core.submit(&state.engine, spec);
+        core.set_request_id(None);
+        out
+    };
+    drain_scheduler(state, metrics, rid);
+    let id = match submitted {
+        Ok(id) => id,
+        Err(e @ PlanError::Infeasible { .. }) => {
+            return error_json(422, "infeasible_at_submit", &e.to_string());
+        }
+        Err(e) => return plan_error(&e),
+    };
+    let core = state.scheduler.lock();
+    let rec = core.job(id).expect("record exists for a just-admitted job");
+    HttpResponse::json(202, job_json(rec).render_sized(600))
+}
+
+/// `GET /v2/jobs` — the full retained job table plus the scheduler's
+/// lifecycle counters. Ticks the virtual clock first so states reflect
+/// wall-clock progress at the moment of the poll.
+fn v2_list_jobs(state: &ServiceState, metrics: &Metrics) -> HttpResponse {
+    state.scheduler.tick(&state.engine);
+    drain_scheduler(state, metrics, None);
+    let core = state.scheduler.lock();
+    let jobs: Vec<Value> = core.jobs().iter().map(job_json).collect();
+    let s = core.stats();
+    drop(core);
+    let n = jobs.len();
+    let body = Value::obj(vec![
+        ("count", Value::num(n as f64)),
+        ("jobs", Value::arr(jobs)),
+        (
+            "stats",
+            Value::obj(vec![
+                ("submitted", Value::num(s.submitted as f64)),
+                ("admitted", Value::num(s.admitted as f64)),
+                ("rejected", Value::num(s.rejected as f64)),
+                ("completed", Value::num(s.completed as f64)),
+                ("missed", Value::num(s.missed as f64)),
+                ("cancelled", Value::num(s.cancelled as f64)),
+                ("active", Value::num(s.active as f64)),
+                ("repairs", Value::num(s.repairs as f64)),
+                ("full_solves", Value::num(s.full_solves as f64)),
+            ]),
+        ),
+    ]);
+    HttpResponse::json(200, body.render_sized(400 + 400 * n))
+}
+
+/// `GET /v2/jobs/{id}` — poll one job by handle (`job-<n>` or bare
+/// numeric id). Unknown or unparsable handles are 404 `unknown_job`.
+fn v2_get_job(state: &ServiceState, metrics: &Metrics, req: &HttpRequest) -> HttpResponse {
+    state.scheduler.tick(&state.engine);
+    drain_scheduler(state, metrics, None);
+    let Some(id) = parse_job_id(&req.path) else {
+        return error_json(404, "unknown_job", &format!("no job at `{}`", req.path));
+    };
+    let core = state.scheduler.lock();
+    match core.job(id) {
+        Some(r) => HttpResponse::json(200, job_json(r).render_sized(600)),
+        None => error_json(404, "unknown_job", &format!("no such job `job-{id}`")),
+    }
+}
+
+/// `DELETE /v2/jobs/{id}` — cancel a job. Cancelling a terminal job is
+/// a no-op that returns the record unchanged; an unknown handle is a
+/// 404 `unknown_job`.
+fn v2_cancel_job(
+    state: &ServiceState,
+    metrics: &Metrics,
+    req: &HttpRequest,
+    rid: Option<&str>,
+) -> HttpResponse {
+    let Some(id) = parse_job_id(&req.path) else {
+        return error_json(404, "unknown_job", &format!("no job at `{}`", req.path));
+    };
+    let now = state.scheduler.now_us();
+    let cancelled = {
+        let mut core = state.scheduler.lock();
+        core.run_until(&state.engine, now);
+        core.set_request_id(rid.map(str::to_string));
+        let out = core.cancel(&state.engine, id);
+        core.set_request_id(None);
+        out
+    };
+    drain_scheduler(state, metrics, rid);
+    match cancelled {
+        Some(r) => HttpResponse::json(200, job_json(&r).render_sized(600)),
+        None => error_json(404, "unknown_job", &format!("no such job `job-{id}`")),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1639,6 +1918,16 @@ mod tests {
     fn get(path: &str) -> HttpRequest {
         HttpRequest {
             method: "GET".to_string(),
+            path: path.to_string(),
+            query: None,
+            headers: Vec::new(),
+            body: Vec::new(),
+        }
+    }
+
+    fn delete(path: &str) -> HttpRequest {
+        HttpRequest {
+            method: "DELETE".to_string(),
             path: path.to_string(),
             query: None,
             headers: Vec::new(),
@@ -2554,6 +2843,170 @@ mod tests {
         assert_eq!(lines[2].get("from").and_then(Value::as_str), Some("ok"));
         assert_eq!(lines[2].get("to").and_then(Value::as_str), Some("critical"));
         assert_eq!(lines[2].get("request_id").and_then(Value::as_str), Some("req-ev"));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn jobs_lifecycle_over_http_submit_poll_cancel() {
+        let st = state();
+        let m = Metrics::default();
+        // A huge scale keeps the job running across the assertions
+        // (predicted completion is far in wall-clock terms), making
+        // every state below deterministic.
+        let r = handle(
+            &st,
+            &m,
+            &post("/v2/jobs", r#"{"kernel":"VA","name":"steady","scale":1e9}"#),
+        );
+        assert_eq!(r.status, 202, "{}", r.body);
+        let v = Value::parse(&r.body).unwrap();
+        let id = v.get("id").and_then(Value::as_str).unwrap().to_string();
+        assert!(id.starts_with("job-"), "{id}");
+        // submit() dispatches before returning: one idle device means
+        // the job is already running, with a concrete placement.
+        assert_eq!(v.get("state").and_then(Value::as_str), Some("running"));
+        assert!(v.get("device").and_then(Value::as_str).is_some(), "{}", r.body);
+        assert!(v.get("core_mhz").and_then(Value::as_f64).is_some());
+
+        // Poll by canonical handle and by bare id.
+        let g = handle(&st, &m, &get(&format!("/v2/jobs/{id}")));
+        assert_eq!(g.status, 200, "{}", g.body);
+        let v = Value::parse(&g.body).unwrap();
+        assert_eq!(v.get("id").and_then(Value::as_str), Some(id.as_str()));
+        let bare = id.trim_start_matches("job-");
+        assert_eq!(handle(&st, &m, &get(&format!("/v2/jobs/{bare}"))).status, 200);
+
+        // The list surface carries the table and the counters.
+        let l = handle(&st, &m, &get("/v2/jobs"));
+        let v = Value::parse(&l.body).unwrap();
+        assert_eq!(v.get("count").and_then(Value::as_f64), Some(1.0));
+        let stats = v.get("stats").unwrap();
+        assert_eq!(stats.get("admitted").and_then(Value::as_f64), Some(1.0));
+        assert_eq!(stats.get("active").and_then(Value::as_f64), Some(1.0));
+
+        // Cancel is terminal; cancelling again is a 200 no-op.
+        let d = handle(&st, &m, &delete(&format!("/v2/jobs/{id}")));
+        assert_eq!(d.status, 200, "{}", d.body);
+        let v = Value::parse(&d.body).unwrap();
+        assert_eq!(v.get("state").and_then(Value::as_str), Some("cancelled"));
+        let d2 = handle(&st, &m, &delete(&format!("/v2/jobs/{id}")));
+        assert_eq!(d2.status, 200);
+        let v = Value::parse(&d2.body).unwrap();
+        assert_eq!(v.get("state").and_then(Value::as_str), Some("cancelled"));
+
+        // The scheduler gauges surface in /metrics.
+        let mx = handle(&st, &m, &get("/metrics"));
+        assert!(mx.body.contains("scheduler_jobs_admitted_total 1"), "{}", mx.body);
+        assert!(mx.body.contains("scheduler_jobs_cancelled_total 1"), "{}", mx.body);
+    }
+
+    #[test]
+    fn job_submit_validation_rejects_before_the_solver() {
+        let st = state();
+        let m = Metrics::default();
+        for (body, code) in [
+            (r#"{"scale":1.0}"#, "bad_request"),
+            (r#"{"kernel":"NOPE"}"#, "unknown_kernel"),
+            (r#"{"kernel":"VA","scale":0}"#, "bad_request"),
+            (r#"{"kernel":"VA","scale":-1}"#, "bad_request"),
+            (r#"{"kernel":"VA","scale":"big"}"#, "bad_request"),
+            (r#"{"kernel":"VA","deadline_us":0}"#, "bad_request"),
+            (r#"{"kernel":"VA","deadline_us":-5}"#, "bad_request"),
+            (r#"{"kernel":"VA","deadline_us":1e999}"#, "bad_request"),
+        ] {
+            let resp = handle(&st, &m, &post("/v2/jobs", body));
+            assert_eq!(code_of(&resp), code, "{body} -> {}", resp.body);
+        }
+        // None of those reached admission: the job table stays empty.
+        let l = handle(&st, &m, &get("/v2/jobs"));
+        let v = Value::parse(&l.body).unwrap();
+        assert_eq!(v.get("count").and_then(Value::as_f64), Some(0.0));
+        assert_eq!(
+            v.get("stats").unwrap().get("submitted").and_then(Value::as_f64),
+            Some(0.0)
+        );
+    }
+
+    #[test]
+    fn provably_unmeetable_deadline_is_a_422_at_submit() {
+        let st = state();
+        let m = Metrics::default();
+        let r = handle(&st, &m, &post("/v2/jobs", r#"{"kernel":"VA","deadline_us":1e-6}"#));
+        assert_eq!(r.status, 422, "{}", r.body);
+        assert_eq!(code_of(&r), "infeasible_at_submit");
+        let v = Value::parse(&r.body).unwrap();
+        assert!(
+            v.get("error").and_then(Value::as_str).unwrap().contains("provably unmeetable"),
+            "{}",
+            r.body
+        );
+        // The rejection is counted but leaves no job record behind.
+        let l = handle(&st, &m, &get("/v2/jobs"));
+        let v = Value::parse(&l.body).unwrap();
+        assert_eq!(v.get("count").and_then(Value::as_f64), Some(0.0));
+        assert_eq!(
+            v.get("stats").unwrap().get("rejected").and_then(Value::as_f64),
+            Some(1.0)
+        );
+    }
+
+    #[test]
+    fn unknown_job_handles_are_404s() {
+        let st = state();
+        let m = Metrics::default();
+        for req in [
+            get("/v2/jobs/job-7"),
+            get("/v2/jobs/banana"),
+            get("/v2/jobs/7/extra"),
+            delete("/v2/jobs/7"),
+        ] {
+            let resp = handle(&st, &m, &req);
+            assert_eq!(resp.status, 404, "{} -> {}", req.path, resp.body);
+            assert_eq!(code_of(&resp), "unknown_job");
+        }
+    }
+
+    #[test]
+    fn job_transitions_reach_the_event_log() {
+        let mut path = std::env::temp_dir();
+        path.push(format!("gpufreq-routes-jobs-events-{}.jsonl", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        {
+            let mut st = state();
+            st.events = Some(Arc::new(crate::obs::EventSink::to_path(&path).unwrap()));
+            let m = Metrics::default();
+            let r = handle_traced(
+                &st,
+                &m,
+                &post("/v2/jobs", r#"{"kernel":"VA","name":"traced","scale":1e9}"#),
+                Some("req-job"),
+            );
+            assert_eq!(r.status, 202, "{}", r.body);
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<Value> = text.lines().map(|l| Value::parse(l).unwrap()).collect();
+        // One repair solve plus the queued -> scheduled -> running
+        // transition trail, all correlated with the request id.
+        let solves: Vec<&Value> = lines
+            .iter()
+            .filter(|l| l.get("event").and_then(Value::as_str) == Some("solve"))
+            .collect();
+        assert_eq!(solves.len(), 1, "{text}");
+        assert_eq!(solves[0].get("kind").and_then(Value::as_str), Some("repair"));
+        assert_eq!(solves[0].get("trigger").and_then(Value::as_str), Some("job_arrival"));
+        let trans: Vec<&Value> = lines
+            .iter()
+            .filter(|l| l.get("event").and_then(Value::as_str) == Some("job_transition"))
+            .collect();
+        let states: Vec<&str> =
+            trans.iter().map(|t| t.get("to").and_then(Value::as_str).unwrap()).collect();
+        assert_eq!(states, ["queued", "scheduled", "running"], "{text}");
+        assert!(trans[0].get("from").is_none(), "admission has no prior state: {text}");
+        assert_eq!(trans[1].get("from").and_then(Value::as_str), Some("queued"));
+        for t in &trans {
+            assert_eq!(t.get("job").and_then(Value::as_str), Some("job-1"));
+            assert_eq!(t.get("request_id").and_then(Value::as_str), Some("req-job"));
+        }
         let _ = std::fs::remove_file(&path);
     }
 }

@@ -54,6 +54,7 @@ use super::json::Value;
 use super::metrics::{Metrics, Route};
 use super::routes::{self, ServiceState};
 use crate::obs::{EventSink, Ring, Stage, TraceRecord, TraceRing, DEFAULT_TRACE_CAPACITY};
+use crate::scheduler::{SchedulerConfig, SchedulerHandle};
 use crate::util::fxhash::FxHashMap;
 
 /// Tunables for [`Service::start`].
@@ -92,10 +93,17 @@ pub struct ServiceConfig {
     /// explanations included. 0 disables retention.
     pub plan_ring: usize,
     /// Opt-in structured event log (`--event-log PATH`): append JSONL
-    /// records (request_span / solve / observation / drift_transition)
-    /// to this file via a bounded channel and a dedicated writer thread.
-    /// `None` disables emission entirely.
+    /// records (request_span / solve / observation / drift_transition /
+    /// job_transition) to this file via a bounded channel and a
+    /// dedicated writer thread. `None` disables emission entirely.
     pub event_log: Option<std::path::PathBuf>,
+    /// Streaming-scheduler re-plan epoch (`--replan-interval`): how
+    /// often the rolling horizon re-solves the live job set in full.
+    /// Between epochs, arrivals are placed by incremental repair.
+    pub replan_interval: Duration,
+    /// Streaming-scheduler planning horizon (`--horizon`): queued jobs
+    /// whose deadline lies beyond it are left to a later epoch.
+    pub horizon: Duration,
 }
 
 impl Default for ServiceConfig {
@@ -115,6 +123,8 @@ impl Default for ServiceConfig {
             trace_capacity: DEFAULT_TRACE_CAPACITY,
             plan_ring: routes::DEFAULT_PLAN_RING,
             event_log: None,
+            replan_interval: Duration::from_secs(1),
+            horizon: Duration::from_secs(30),
         }
     }
 }
@@ -443,6 +453,7 @@ pub struct Service {
     addr: SocketAddr,
     shared: Arc<Shared>,
     poll: Option<JoinHandle<()>>,
+    sched: Option<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
 }
 
@@ -460,6 +471,11 @@ impl Service {
                 .with_context(|| format!("opening event log {}", path.display()))?;
             state.events = Some(Arc::new(sink));
         }
+        state.scheduler = Arc::new(SchedulerHandle::new(SchedulerConfig {
+            replan_interval_us: cfg.replan_interval.as_secs_f64() * 1e6,
+            horizon_us: cfg.horizon.as_secs_f64() * 1e6,
+            ..SchedulerConfig::default()
+        }));
         let listener =
             TcpListener::bind(&cfg.addr).with_context(|| format!("binding {}", cfg.addr))?;
         listener.set_nonblocking(true).context("listener nonblocking")?;
@@ -492,7 +508,18 @@ impl Service {
                 .spawn(move || poll_loop(sh, listener, wake_rx))
                 .context("spawning service poll loop")?
         };
-        Ok(Service { addr, shared, poll: Some(poll), workers })
+        // The scheduler ticker advances the streaming job lifecycle
+        // between requests (predicted completions, deadline checks,
+        // re-plan epochs) and drains the outbox into metrics and the
+        // event log. An idle scheduler ticks in O(1) and emits nothing.
+        let sched = {
+            let sh = Arc::clone(&shared);
+            std::thread::Builder::new()
+                .name("svc-sched".to_string())
+                .spawn(move || sched_loop(sh))
+                .context("spawning scheduler ticker")?
+        };
+        Ok(Service { addr, shared, poll: Some(poll), sched: Some(sched), workers })
     }
 
     /// The bound address (resolves port 0).
@@ -522,6 +549,9 @@ impl Service {
         }
         self.shared.exec.close();
         for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+        if let Some(h) = self.sched.take() {
             let _ = h.join();
         }
     }
@@ -578,6 +608,19 @@ fn exec_loop(shared: Arc<Shared>) {
         let resp = resp.with_header("X-Request-Id", w.spans.id);
         shared.done.lock().expect("done list poisoned").push(Done { conn: w.conn, resp, trace });
         shared.waker.wake();
+    }
+}
+
+/// Scheduler ticker thread: advance the streaming job lifecycle at the
+/// poll cadence and surface whatever happened (transitions, epoch
+/// solves) through the same drain path the `/v2/jobs` handlers use —
+/// so a job that completes between polls still reaches the event log
+/// with its `job_transition` trail.
+fn sched_loop(shared: Arc<Shared>) {
+    while !shared.is_shutdown() {
+        shared.state.scheduler.tick(&shared.state.engine);
+        routes::drain_scheduler(&shared.state, &shared.metrics, None);
+        std::thread::sleep(shared.cfg.poll_interval);
     }
 }
 
@@ -1265,6 +1308,40 @@ mod tests {
         for s in Stage::ALL {
             assert!(stages.get(s.name()).and_then(Value::as_f64).is_some(), "{}", s.name());
         }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn scheduler_ticker_completes_jobs_between_requests() {
+        let mut path = std::env::temp_dir();
+        path.push(format!("gpufreq-server-sched-{}.jsonl", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let cfg = ServiceConfig { event_log: Some(path.clone()), ..fast_cfg(1, 4) };
+        let svc = Service::start(test_state(), cfg).unwrap();
+        let mut c = Client::connect(&svc.addr()).unwrap();
+        let r = c.post("/v2/jobs", r#"{"kernel":"VA","name":"quick","scale":0.001}"#).unwrap();
+        assert_eq!(r.status, 202, "{}", r.body);
+        // The predicted completion is microseconds away; the ticker
+        // thread observes it between requests.
+        std::thread::sleep(Duration::from_millis(300));
+        let r = c.get("/v2/jobs/job-1").unwrap();
+        assert_eq!(r.status, 200);
+        let v = r.json().unwrap();
+        assert_eq!(v.get("state").and_then(Value::as_str), Some("done"), "{}", r.body);
+        drop(c);
+        svc.shutdown();
+        let text = std::fs::read_to_string(&path).unwrap();
+        // The completion transition reached the log, drained outside
+        // any request (so it carries no request id).
+        let done = text
+            .lines()
+            .map(|l| Value::parse(l).unwrap())
+            .find(|l| {
+                l.get("event").and_then(Value::as_str) == Some("job_transition")
+                    && l.get("to").and_then(Value::as_str) == Some("done")
+            })
+            .unwrap_or_else(|| panic!("no done transition in {text}"));
+        assert!(done.get("request_id").is_none(), "{text}");
         let _ = std::fs::remove_file(&path);
     }
 

@@ -1,0 +1,246 @@
+//! Streaming-scheduler property tests (DESIGN.md §14) on the virtual
+//! clock: over randomized arrival/completion traces — mixed kernels,
+//! scales, deadline tightness (including impossible ones), progress
+//! reports, early completions, cancellations and device bounces —
+//!
+//! * every admitted job ends in exactly one terminal state, and a job
+//!   that carried a deadline either finished inside it (`Done`) or is
+//!   explicitly `Missed` with a recorded cause;
+//! * admission and the incremental repair path never disagree with the
+//!   full solver: a job repair admits is one the solver can place, and
+//!   a job admission rejects is one the solver proves infeasible too;
+//! * the drained transition log replays to the same terminal states
+//!   the records show, and the stats counters reconcile exactly.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use gpufreq::dvfs::PowerModel;
+use gpufreq::engine::Engine;
+use gpufreq::model::{HwParams, KernelCounters};
+use gpufreq::planner::{plan, Job, PlanError, PlannerConfig};
+use gpufreq::registry::{DeviceId, DeviceRegistry, KernelCatalog, KernelId};
+use gpufreq::scheduler::{Event, JobSpec, JobState, SchedulerConfig, SchedulerCore};
+use gpufreq::util::prop::Rng;
+
+fn counters(i: usize) -> KernelCounters {
+    KernelCounters {
+        l2_hr: (i % 10) as f64 / 10.0,
+        gld_trans: 4.0 + (i % 12) as f64,
+        avr_inst: 0.5 + 10.0 * (i % 4) as f64,
+        n_blocks: 128.0,
+        wpb: 8.0,
+        aw: 64.0,
+        n_sm: 16.0,
+        o_itrs: 8.0,
+        i_itrs: 0.0,
+        uses_smem: false,
+        smem_conflict: 1.0,
+        gld_body: 4.0 + (i % 12) as f64,
+        gld_edge: 0.0,
+        mem_ops: 1.0 + (i % 3) as f64,
+        l1_hr: 0.0,
+    }
+}
+
+/// Three devices with distinct hardware and power calibrations, same
+/// recipe as the planner's property fixture.
+fn fixture() -> (Engine, Vec<DeviceId>, Vec<KernelId>) {
+    let hw = HwParams::paper_defaults();
+    let registry = Arc::new(DeviceRegistry::new());
+    let a = registry.register("stream-a", hw, PowerModel::gtx980());
+    let mut hw_b = hw;
+    hw_b.dm_del += 1.5;
+    let mut power_b = PowerModel::gtx980();
+    power_b.static_w = 15.0;
+    let b = registry.register("stream-b", hw_b, power_b);
+    let mut hw_c = hw;
+    hw_c.l2_lat += 40.0;
+    let mut power_c = PowerModel::gtx980();
+    power_c.core_coeff = 0.05;
+    power_c.mem_coeff = 0.025;
+    let c = registry.register("stream-c", hw_c, power_c);
+    let catalog = Arc::new(KernelCatalog::new());
+    let kernels: Vec<KernelId> =
+        (0..5).map(|i| catalog.register(&format!("k{i}"), counters(i * 3 + 1))).collect();
+    let engine = Engine::native(hw).with_handles(registry, catalog, a).unwrap();
+    (engine, vec![a, b, c], kernels)
+}
+
+fn single_job_config(core: &SchedulerCore) -> PlannerConfig {
+    PlannerConfig { telemetry: false, ..core.config().planner.clone() }
+}
+
+#[test]
+fn random_traces_reach_consistent_terminal_states() {
+    let (engine, devices, kernels) = fixture();
+    let mut rng = Rng::new(0x5c4ed);
+    for case in 0..25 {
+        let mut core = SchedulerCore::new(SchedulerConfig {
+            replan_interval_us: 5e4,
+            horizon_us: 1e7,
+            ..SchedulerConfig::default()
+        });
+        let mut now = 0.0;
+        let n = rng.u32(3, 14) as usize;
+        for i in 0..n {
+            now += rng.range(10.0, 2e4);
+            core.run_until(&engine, now);
+            // One designated device occasionally drops and comes back:
+            // running work on it is displaced, re-placed or missed —
+            // never stuck. Only `devices[2]` bounces, so the other two
+            // are always up and admission stays comparable to a solver
+            // probe over `{devices[0], devices[1]}`.
+            if rng.chance(0.15) {
+                core.schedule(now, Event::DeviceDown(devices[2]));
+                core.schedule(now + rng.range(10.0, 5e4), Event::DeviceUp(devices[2]));
+            }
+            // Runtime signals on whatever is currently running: a
+            // progress observation (refreshes the completion estimate)
+            // or an early client-observed completion.
+            let running: Vec<u64> = core
+                .jobs()
+                .iter()
+                .filter(|r| r.state == JobState::Running)
+                .map(|r| r.id)
+                .collect();
+            if let Some(&job) = running.first() {
+                if rng.chance(0.3) {
+                    core.schedule(now, Event::JobProgress { job, fraction: rng.range(0.1, 0.9) });
+                } else if rng.chance(0.2) {
+                    core.schedule(now, Event::JobCompleted { job });
+                }
+            }
+            let kid = kernels[rng.u32(0, kernels.len() as u32 - 1) as usize];
+            let scale = rng.u32(1, 5) as f64;
+            let mut spec = JobSpec::new(format!("c{case}-j{i}"), kid, scale);
+            let budget = match rng.u32(0, 3) {
+                0 => None,                               // unconstrained
+                1 => Some(rng.range(1e6, 1e8)),          // generous
+                2 => Some(scale * rng.range(50.0, 5e4)), // sometimes binding
+                _ => Some(rng.range(1e-3, 5.0)),         // mostly impossible
+            };
+            if let Some(b) = budget {
+                spec = spec.with_deadline(b);
+            }
+            match core.submit(&engine, spec) {
+                Ok(id) => {
+                    // Repair (or the queue) took the job — the full
+                    // solver, given strictly more freedom (the job
+                    // alone, full budget), must agree it is placeable.
+                    let mut probe = Job::new(format!("c{case}-j{i}"), kid, scale);
+                    if let Some(b) = budget {
+                        probe = probe.with_deadline(b);
+                    }
+                    let solo = plan(&engine, &[probe], &single_job_config(&core));
+                    assert!(
+                        solo.is_ok(),
+                        "case {case}: admitted job is solver-infeasible: {:?}",
+                        solo.err()
+                    );
+                    if rng.chance(0.1) {
+                        let rec = core.cancel(&engine, id).expect("known id");
+                        assert!(rec.state.is_terminal(), "case {case}: cancel -> {:?}", rec.state);
+                    }
+                }
+                Err(PlanError::Infeasible { .. }) => {
+                    // Admission only rejects what the full solver also
+                    // proves unmeetable for the job on its own. The
+                    // probe plans over the two always-up devices — a
+                    // subset of whatever admission saw, so a rejection
+                    // must reproduce there.
+                    let b = budget.expect("only deadlined jobs are rejected as infeasible");
+                    let probe = Job::new(format!("c{case}-j{i}"), kid, scale).with_deadline(b);
+                    let cfg = PlannerConfig {
+                        devices: Some(vec![devices[0], devices[1]]),
+                        ..single_job_config(&core)
+                    };
+                    assert!(
+                        plan(&engine, &[probe], &cfg).is_err(),
+                        "case {case}: admission rejected a solver-feasible deadline {b}"
+                    );
+                }
+                Err(e) => panic!("case {case}: unexpected submit error {e}"),
+            }
+        }
+        // Roll far past every deadline and predicted completion: all
+        // work must reach a terminal state (no zombie jobs).
+        core.run_until(&engine, now + 1e9);
+
+        let s = core.stats();
+        assert_eq!(s.submitted, s.admitted + s.rejected, "case {case}: submit split");
+        assert_eq!(
+            s.admitted,
+            s.completed + s.missed + s.cancelled,
+            "case {case}: terminal split"
+        );
+        assert_eq!(s.active, 0, "case {case}: active jobs after drain");
+        assert_eq!(s.admitted as usize, core.jobs().len(), "case {case}: record count");
+
+        for r in core.jobs() {
+            assert!(
+                r.finished_at_us.is_some(),
+                "case {case}: job {} terminal without a finish instant",
+                r.id
+            );
+            match r.state {
+                JobState::Done => {
+                    if let Some(d) = r.deadline_at_us {
+                        let f = r.finished_at_us.unwrap();
+                        assert!(
+                            f <= d + 1e-6,
+                            "case {case}: job {} Done at {f} past its deadline {d}",
+                            r.id
+                        );
+                    }
+                }
+                JobState::Missed => {
+                    assert!(
+                        r.deadline_at_us.is_some(),
+                        "case {case}: job {} Missed without a deadline",
+                        r.id
+                    );
+                    assert!(
+                        r.cause.as_ref().is_some_and(|c| !c.is_empty()),
+                        "case {case}: job {} Missed without a recorded cause",
+                        r.id
+                    );
+                }
+                JobState::Cancelled => {}
+                other => panic!("case {case}: job {} left non-terminal ({other:?})", r.id),
+            }
+        }
+
+        // The transition log must replay to the records' final states:
+        // admission first (from: None), monotone timestamps per job,
+        // terminal states never left.
+        let (transitions, solves) = core.drain_outbox();
+        let mut last: HashMap<u64, (JobState, f64)> = HashMap::new();
+        for t in &transitions {
+            match last.get(&t.job) {
+                None => assert!(
+                    t.from.is_none() && t.to == JobState::Queued,
+                    "case {case}: job {} did not start at admission/Queued",
+                    t.job
+                ),
+                Some(&(prev, at)) => {
+                    assert_eq!(t.from, Some(prev), "case {case}: job {} gap in log", t.job);
+                    assert!(t.at_us >= at, "case {case}: job {} time went backwards", t.job);
+                    assert!(
+                        !prev.is_terminal(),
+                        "case {case}: job {} left terminal state {prev:?}",
+                        t.job
+                    );
+                }
+            }
+            last.insert(t.job, (t.to, t.at_us));
+        }
+        for r in core.jobs() {
+            let (state, _) = last[&r.id];
+            assert_eq!(state, r.state, "case {case}: log vs record for job {}", r.id);
+        }
+        for s in &solves {
+            assert_eq!(s.jobs, s.job_names.len(), "case {case}: solve job count vs names");
+        }
+    }
+}

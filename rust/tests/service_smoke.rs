@@ -7,8 +7,9 @@
 //! verify the graceful drain, and walk the observability loop:
 //! X-Request-Id minting, POST /v2/observations → live `model_mape` in
 //! /metrics, GET /debug/traces span dumps, plan provenance behind
-//! GET /debug/plans, and drift states behind GET /debug/drift. No curl
-//! needed anywhere.
+//! GET /debug/plans, drift states behind GET /debug/drift, and the
+//! `/v2/jobs` streaming-scheduler lifecycle (submit → poll → cancel,
+//! 422 `infeasible_at_submit` admission). No curl needed anywhere.
 
 use std::time::{Duration, Instant};
 
@@ -514,6 +515,118 @@ fn plan_provenance_and_drift_round_trip() {
         "planner_phase_us_count{phase=\"total\"} 1",
         "model_drift_state{device=\"dev-1\",kernel=\"krn-1\"} 2",
         "model_samples_dropped_total 0",
+    ] {
+        assert!(m.body.contains(needle), "missing `{needle}` in:\n{}", m.body);
+    }
+
+    drop(c);
+    svc.shutdown();
+}
+
+/// The streaming scheduler end-to-end over the wire (DESIGN.md §14):
+/// HTTP submit → 202 with a job handle, state transitions observed
+/// through GET polls while the server's own ticker advances the
+/// lifecycle, DELETE cancels, a provably-unmeetable deadline is a
+/// structured 422 at submit, and the listing + /metrics reconcile.
+#[test]
+fn v2_jobs_streaming_lifecycle_round_trip() {
+    let svc = Service::start(
+        state(),
+        ServiceConfig {
+            replan_interval: Duration::from_millis(50),
+            horizon: Duration::from_secs(30),
+            ..cfg(2, 16)
+        },
+    )
+    .expect("service starts");
+    let mut c = Client::connect(&svc.addr()).unwrap();
+    c.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+
+    // Submit a tiny job under a generous budget: accepted (202) with a
+    // handle and already inside the state machine.
+    let r = c
+        .post("/v2/jobs", r#"{"kernel":"VA","scale":0.001,"name":"etl","deadline_us":1e9}"#)
+        .unwrap();
+    assert_eq!(r.status, 202, "{}", r.body);
+    let v = r.json().unwrap();
+    let id = v.get("id").and_then(Value::as_str).unwrap().to_string();
+    assert!(id.starts_with("job-"), "{id}");
+    let s0 = v.get("state").and_then(Value::as_str).unwrap().to_string();
+    assert!(["queued", "scheduled", "running"].contains(&s0.as_str()), "{s0}");
+
+    // Poll the handle until the server's ticker completes it.
+    let poll_deadline = Instant::now() + Duration::from_secs(20);
+    loop {
+        let r = c.get(&format!("/v2/jobs/{id}")).unwrap();
+        assert_eq!(r.status, 200, "{}", r.body);
+        let v = r.json().unwrap();
+        let s = v.get("state").and_then(Value::as_str).unwrap().to_string();
+        if s == "done" {
+            assert!(
+                v.get("finished_at_us").and_then(Value::as_f64).is_some(),
+                "done without a finish instant: {}",
+                r.body
+            );
+            break;
+        }
+        assert!(
+            ["queued", "scheduled", "running"].contains(&s.as_str()),
+            "unexpected state `{s}`: {}",
+            r.body
+        );
+        assert!(Instant::now() < poll_deadline, "job stuck in `{s}`: {}", r.body);
+        std::thread::sleep(Duration::from_millis(20));
+    }
+
+    // A huge job pins Running long enough to cancel over the wire.
+    let r = c.post("/v2/jobs", r#"{"kernel":"VA","scale":1e9,"name":"hog"}"#).unwrap();
+    assert_eq!(r.status, 202, "{}", r.body);
+    let hog = r.json().unwrap().get("id").and_then(Value::as_str).unwrap().to_string();
+    let r = c.request("DELETE", &format!("/v2/jobs/{hog}"), None).unwrap();
+    assert_eq!(r.status, 200, "{}", r.body);
+    assert_eq!(
+        r.json().unwrap().get("state").and_then(Value::as_str),
+        Some("cancelled"),
+        "{}",
+        r.body
+    );
+
+    // Admission control: a provably-unmeetable deadline never reaches
+    // the fleet — structured 422 at submit.
+    let r = c
+        .post("/v2/jobs", r#"{"kernel":"VA","scale":5,"deadline_us":1e-6,"name":"doomed"}"#)
+        .unwrap();
+    assert_eq!(r.status, 422, "{}", r.body);
+    assert_eq!(code_of(&r), "infeasible_at_submit");
+    assert!(r.body.contains("provably unmeetable"), "{}", r.body);
+
+    // The listing reconciles: two admitted (done + cancelled), the
+    // doomed one rejected without a record.
+    let r = c.get("/v2/jobs").unwrap();
+    assert_eq!(r.status, 200, "{}", r.body);
+    let v = r.json().unwrap();
+    assert_eq!(v.get("count").and_then(Value::as_f64), Some(2.0), "{}", r.body);
+    let stats = v.get("stats").expect("stats block");
+    assert_eq!(stats.get("submitted").and_then(Value::as_f64), Some(3.0));
+    assert_eq!(stats.get("admitted").and_then(Value::as_f64), Some(2.0));
+    assert_eq!(stats.get("rejected").and_then(Value::as_f64), Some(1.0));
+    assert_eq!(stats.get("completed").and_then(Value::as_f64), Some(1.0));
+    assert_eq!(stats.get("cancelled").and_then(Value::as_f64), Some(1.0));
+
+    // Unknown handles are structured 404s.
+    let r = c.get("/v2/jobs/job-99").unwrap();
+    assert_eq!(r.status, 404, "{}", r.body);
+    assert_eq!(code_of(&r), "unknown_job");
+
+    // /metrics exports the scheduler series.
+    let m = c.get("/metrics").unwrap();
+    for needle in [
+        "scheduler_jobs_submitted_total 3",
+        "scheduler_jobs_admitted_total 2",
+        "scheduler_jobs_rejected_total 1",
+        "scheduler_jobs_completed_total 1",
+        "scheduler_jobs_cancelled_total 1",
+        "scheduler_jobs_active 0",
     ] {
         assert!(m.body.contains(needle), "missing `{needle}` in:\n{}", m.body);
     }

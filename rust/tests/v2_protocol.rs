@@ -7,6 +7,10 @@
 //! The first `render` is the canonical form (Rust's shortest-roundtrip
 //! f64 formatting), so byte-identity of the second render proves the
 //! parser loses nothing the renderer can express.
+//!
+//! The file also pins the parse layer's deadline validation: malformed
+//! `deadline_us` values on `/v2/plan` and `/v2/jobs` are structured
+//! 400s before any solver or scheduler work happens.
 
 use gpufreq::service::json::Value;
 use gpufreq::util::prop::{forall, Rng};
@@ -182,6 +186,53 @@ fn advise_response(r: &mut Rng) -> Value {
     obj(fields)
 }
 
+/// `POST /v2/jobs` request (the streaming scheduler's submit shape).
+fn jobs_request(r: &mut Rng) -> Value {
+    let mut fields = vec![("kernel".to_string(), Value::str(format!("krn-{}", r.u32(1, 9))))];
+    if r.chance(0.7) {
+        fields.push(("scale".to_string(), Value::num(finite_f64(r))));
+    }
+    if r.chance(0.6) {
+        fields.push(("deadline_us".to_string(), Value::num(finite_f64(r))));
+    }
+    if r.chance(0.7) {
+        fields.push((key(r, "name"), Value::str(wire_string(r))));
+    }
+    obj(fields)
+}
+
+/// `GET /v2/jobs/{id}` response (one job record on the wire).
+fn job_response(r: &mut Rng) -> Value {
+    let id = r.u32(1, 99);
+    let mut fields = vec![
+        ("id".to_string(), Value::str(format!("job-{id}"))),
+        ("name".to_string(), Value::str(wire_string(r))),
+        ("kernel".to_string(), Value::str(format!("krn-{}", r.u32(1, 9)))),
+        ("scale".to_string(), Value::num(finite_f64(r))),
+        (
+            "state".to_string(),
+            Value::str(
+                ["queued", "scheduled", "running", "done", "missed", "cancelled"]
+                    [r.u32(0, 5) as usize],
+            ),
+        ),
+        ("submitted_at_us".to_string(), Value::num(finite_f64(r))),
+    ];
+    for opt in ["deadline_at_us", "predicted_us", "started_at_us", "finished_at_us"] {
+        if r.chance(0.5) {
+            fields.push((opt.to_string(), Value::num(finite_f64(r))));
+        }
+    }
+    if r.chance(0.5) {
+        fields.push(("device".to_string(), Value::str(format!("dev-{}", r.u32(1, 9)))));
+        fields.push(("plan_id".to_string(), Value::str(format!("plan-{}", r.u32(1, 999)))));
+    }
+    if r.chance(0.3) {
+        fields.push(("cause".to_string(), Value::str(wire_string(r))));
+    }
+    obj(fields)
+}
+
 /// Devices/kernels list responses.
 fn list_response(r: &mut Rng) -> Value {
     let n = r.u32(0, 4);
@@ -238,6 +289,86 @@ fn advise_responses_round_trip_byte_identically() {
 #[test]
 fn list_responses_round_trip_byte_identically() {
     forall(0xA1, 200, list_response, round_trips);
+}
+
+#[test]
+fn jobs_requests_and_responses_round_trip_byte_identically() {
+    forall(0x10B, 300, jobs_request, round_trips);
+    forall(0x10C, 300, job_response, round_trips);
+}
+
+/// Parse-layer deadline validation: a malformed `deadline_us` on
+/// `POST /v2/plan` or `POST /v2/jobs` is a structured 400 **before**
+/// the solver or the scheduler sees the request — zero/negative
+/// values, strings, arrays, and `null` (the wire form of a non-finite
+/// float, per `non_finite_floats_never_reach_the_wire`) all refuse
+/// identically, and nothing is admitted.
+#[test]
+fn bad_deadlines_are_rejected_at_the_parse_layer() {
+    use gpufreq::dvfs::PowerModel;
+    use gpufreq::engine::Engine;
+    use gpufreq::microbench;
+    use gpufreq::model::{HwParams, KernelCounters};
+    use gpufreq::service::{Client, Service, ServiceConfig, ServiceState};
+
+    let hw = HwParams::paper_defaults();
+    let mut state =
+        ServiceState::new(Engine::native(hw), PowerModel::gtx980(), microbench::standard_grid());
+    state.register_kernel(
+        "VA",
+        KernelCounters {
+            l2_hr: 0.1,
+            gld_trans: 6.0,
+            avr_inst: 1.5,
+            n_blocks: 128.0,
+            wpb: 8.0,
+            aw: 64.0,
+            n_sm: 16.0,
+            o_itrs: 8.0,
+            i_itrs: 0.0,
+            uses_smem: false,
+            smem_conflict: 1.0,
+            gld_body: 6.0,
+            gld_edge: 0.0,
+            mem_ops: 2.0,
+            l1_hr: 0.0,
+        },
+    );
+    let svc = Service::start(state, ServiceConfig::default()).expect("service starts");
+    let mut c = Client::connect(&svc.addr()).unwrap();
+    c.set_read_timeout(Some(std::time::Duration::from_secs(30))).unwrap();
+
+    for bad in ["0", "-1", "-2.5e8", "null", "\"soon\"", "[1e6]", "{}"] {
+        for path in ["/v2/plan", "/v2/jobs"] {
+            let body = if path == "/v2/plan" {
+                format!(r#"{{"jobs":[{{"kernel":"VA","deadline_us":{bad}}}]}}"#)
+            } else {
+                format!(r#"{{"kernel":"VA","deadline_us":{bad}}}"#)
+            };
+            let r = c.post(path, &body).unwrap();
+            assert_eq!(r.status, 400, "{path} deadline_us={bad}: {}", r.body);
+            let v = r.json().unwrap();
+            assert_eq!(
+                v.get("code").and_then(Value::as_str),
+                Some("bad_request"),
+                "{path} deadline_us={bad}: {}",
+                r.body
+            );
+            assert!(r.body.contains("deadline_us"), "{path} deadline_us={bad}: {}", r.body);
+        }
+    }
+    // Nothing reached the scheduler or the solver.
+    let r = c.get("/v2/jobs").unwrap();
+    assert_eq!(r.status, 200, "{}", r.body);
+    let v = r.json().unwrap();
+    assert_eq!(v.get("count").and_then(Value::as_f64), Some(0.0), "{}", r.body);
+    let stats = v.get("stats").expect("stats block");
+    assert_eq!(stats.get("submitted").and_then(Value::as_f64), Some(0.0));
+    let m = c.get("/metrics").unwrap();
+    assert!(m.body.contains("scheduler_jobs_submitted_total 0"), "{}", m.body);
+
+    drop(c);
+    svc.shutdown();
 }
 
 #[test]
