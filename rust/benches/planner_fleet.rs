@@ -247,6 +247,48 @@ fn main() {
          ({soa_tuples_per_s:.0} vs {scalar_tuples_per_s:.0} tuples/s)"
     );
 
+    // ---- Power-model phase: v2 (leakage-aware) vs leakage-free ----
+    // The same fleet planned twice: once on the devices as configured
+    // (voltage tables + exponential leakage, DESIGN.md §15) and once on
+    // copies with the voltage-dependent excess zeroed. The delta is the
+    // energy the v2 term adds to the bill, and the per-assignment split
+    // says how much of the v2 plan is leakage.
+    bench::section("Power model: v2 (leakage-aware) vs leakage-free plan");
+    let lean_registry = Arc::new(DeviceRegistry::new());
+    let mut lean_primary = None;
+    for rec in &records {
+        let id = lean_registry.register(&rec.name, rec.hw, rec.power.without_leakage());
+        if rec.id == primary {
+            lean_primary = Some(id);
+        }
+    }
+    let lean_primary = lean_primary.expect("primary device re-registered");
+    let lean_engine = Engine::native(hw)
+        .with_handles(Arc::clone(&lean_registry), Arc::clone(&catalog), lean_primary)
+        .expect("attach handles");
+    let lean = plan(&lean_engine, &jobs, &cfg).expect("leakage-free fleet is plannable");
+    assert_eq!(lean.deadline_violations(&jobs), 0, "same runtimes, same deadlines");
+    let v2_leakage_mj: f64 = planned
+        .assignments
+        .iter()
+        .map(|a| a.power_leakage_w * a.time_us * 1e-3)
+        .sum();
+    let v2_dynamic_mj: f64 = planned
+        .assignments
+        .iter()
+        .map(|a| a.power_dynamic_w * a.time_us * 1e-3)
+        .sum();
+    let v1_v2_delta_mj = planned.total_energy_mj - lean.total_energy_mj;
+    println!(
+        "v2 {:.1} mJ ({v2_dynamic_mj:.1} dynamic + {v2_leakage_mj:.1} leakage) vs \
+         leakage-free {:.1} mJ ({v1_v2_delta_mj:+.1} mJ)",
+        planned.total_energy_mj, lean.total_energy_mj
+    );
+    assert!(
+        planned.total_energy_mj >= lean.total_energy_mj,
+        "zeroing the leakage term must never raise the optimal fleet energy"
+    );
+
     let out = Value::obj(vec![
         ("bench", Value::str("planner_fleet")),
         ("jobs", Value::num(jobs.len() as f64)),
@@ -270,6 +312,11 @@ fn main() {
         ("scalar_tuples_per_s", Value::num(scalar_tuples_per_s)),
         ("soa_tuples_per_s", Value::num(soa_tuples_per_s)),
         ("soa_speedup", Value::num(soa_speedup)),
+        ("power_v2_energy_mj", Value::num(planned.total_energy_mj)),
+        ("power_v2_dynamic_mj", Value::num(v2_dynamic_mj)),
+        ("power_v2_leakage_mj", Value::num(v2_leakage_mj)),
+        ("power_leakage_free_energy_mj", Value::num(lean.total_energy_mj)),
+        ("power_v1_v2_delta_mj", Value::num(v1_v2_delta_mj)),
     ]);
     let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
         .join("..")

@@ -49,7 +49,7 @@ COMMANDS:
   sweep                   Simulate kernels over the frequency grid (ground truth)
   validate                Full Fig. 13/14 validation: simulate + predict + MAPE
   report <ARTIFACT>       Regenerate a paper artifact: table1 table2 table3
-                          table6 fig2 fig5 fig12 fig13 fig14 ablation
+                          table6 fig2 fig5 fig12 fig13 fig14 ablation power
   advise <KERNEL>         DVFS energy advisor for one kernel (paper §VII
                           application), resolved through the device registry
   plan                    Fleet DVFS planner (DESIGN.md §11): register every
@@ -572,7 +572,10 @@ pub fn run(args: Args) -> Result<i32> {
             );
             let mut t = crate::report::Table::new(
                 &title,
-                &["core MHz", "mem MHz", "time_us", "power W", "energy mJ", "EDP"],
+                &[
+                    "core MHz", "mem MHz", "time_us", "power W", "dyn W", "leak W",
+                    "energy mJ", "EDP",
+                ],
             );
             for cp in &points {
                 t.row(vec![
@@ -580,14 +583,22 @@ pub fn run(args: Args) -> Result<i32> {
                     format!("{:.0}", cp.mem_mhz),
                     format!("{:.1}", cp.time_us),
                     format!("{:.1}", cp.power_w),
+                    format!("{:.1}", cp.power_dynamic_w),
+                    format!("{:.1}", cp.power_leakage_w),
                     format!("{:.2}", cp.energy_mj),
                     format!("{:.1}", cp.edp),
                 ]);
             }
             print_table(&t, args.csv);
             println!(
-                "BEST: {:.0}/{:.0} MHz  time {:.1} us  power {:.1} W  energy {:.2} mJ",
-                best.core_mhz, best.mem_mhz, best.time_us, best.power_w, best.energy_mj
+                "BEST: {:.0}/{:.0} MHz  time {:.1} us  power {:.1} W ({:.1} dyn + {:.1} leak)  energy {:.2} mJ",
+                best.core_mhz,
+                best.mem_mhz,
+                best.time_us,
+                best.power_w,
+                best.power_dynamic_w,
+                best.power_leakage_w,
+                best.energy_mj
             );
         }
         "plan" => {
@@ -784,7 +795,7 @@ fn run_plan(args: &Args, cfg: &Config) -> Result<()> {
         ),
         &[
             "job", "kernel", "device", "core MHz", "mem MHz", "time_us", "deadline_us",
-            "power W", "energy mJ",
+            "power W", "dyn W", "leak W", "energy mJ",
         ],
     );
     for a in &planned.assignments {
@@ -801,6 +812,8 @@ fn run_plan(args: &Args, cfg: &Config) -> Result<()> {
                 None => "-".to_string(),
             },
             format!("{:.1}", a.power_w),
+            format!("{:.1}", a.power_dynamic_w),
+            format!("{:.1}", a.power_leakage_w),
             format!("{:.2}", a.energy_mj),
         ]);
     }
@@ -1185,6 +1198,28 @@ fn run_report(what: &str, args: &Args, cfg: &Config) -> Result<()> {
             let ex = microbench::extract(&spec, baseline);
             let rows = tables::run_ablation(&spec, &ks, ex.hw, standard_baselines(ex.hw), &pairs);
             print_table(&tables::ablation(&rows), args.csv);
+        }
+        "power" => {
+            // Where the watts go at each sweep point under the
+            // configured device's v2 model (DESIGN.md §15).
+            let p = &cfg.power;
+            let mut t = crate::report::Table::new(
+                "Power split: P = dyn(core) + dyn(mem) + static + leak(Vcore)",
+                &["core MHz", "mem MHz", "Vcore", "Vmem", "dyn W", "leak W", "total W"],
+            );
+            for &(cf, mf) in &pairs {
+                let s = p.split_w(cf, mf);
+                t.row(vec![
+                    format!("{cf:.0}"),
+                    format!("{mf:.0}"),
+                    format!("{:.4}", p.core_curve.volts(cf)),
+                    format!("{:.4}", p.mem_curve.volts(mf)),
+                    format!("{:.2}", s.dynamic_w),
+                    format!("{:.2}", s.leakage_w),
+                    format!("{:.2}", s.total_w),
+                ]);
+            }
+            print_table(&t, args.csv);
         }
         other => bail!("unknown report `{other}` (see `gpufreq help`)"),
     }

@@ -10,7 +10,7 @@ pub mod toml;
 
 use std::path::Path;
 
-use crate::dvfs::{PowerModel, VfCurve};
+use crate::dvfs::{DynamicParams, LeakageParams, PowerModel, VfCurve};
 use crate::sim::{Clocks, GpuSpec};
 use toml::Document;
 
@@ -70,7 +70,7 @@ impl SweepConfig {
 }
 
 /// Complete runtime configuration.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct Config {
     pub gpu: GpuSpec,
     pub sweep: SweepConfig,
@@ -144,24 +144,200 @@ fn vf_curve_from_str(text: &str, key: &str) -> Result<VfCurve, toml::ParseError>
     VfCurve::try_from_points(points).map_err(|m| bad(format!("{key}: {m}")))
 }
 
-/// Build a `PowerModel` from a document's `[power]` section, with the
-/// GTX 980 calibration for anything unspecified. V/f curves are
-/// strings of `mhz:volts` points: `core_vf = "400:0.85, 1000:1.2125"`.
+/// The complete key vocabulary of the `[power]` family of sections;
+/// anything else under `power.` is a typo and rejected outright.
+const POWER_KEYS: &[&str] = &[
+    "power.core_vf",
+    "power.mem_vf",
+    // Legacy flat spelling of the dynamic coefficients + static floor.
+    "power.core_coeff",
+    "power.mem_coeff",
+    "power.static_w",
+    // Power v2 sections (DESIGN.md §15).
+    "power.dynamic.core_coeff",
+    "power.dynamic.mem_coeff",
+    "power.leakage.static_w",
+    "power.leakage.leak_w",
+    "power.leakage.v_ref",
+    "power.leakage.v_slope",
+];
+
+/// Build a `PowerModel` from a document's `[power]`, `[power.dynamic]`
+/// and `[power.leakage]` sections, with the GTX 980 calibration for
+/// anything unspecified. V/f curves are strings of `mhz:volts` points:
+/// `core_vf = "400:0.85, 1000:1.2125"`. The legacy flat keys
+/// (`power.core_coeff` etc.) remain accepted but conflict with their
+/// v2 spellings; present-but-mistyped or out-of-range values are hard
+/// errors, never silent defaults.
 pub fn power_from_doc(doc: &Document) -> Result<PowerModel, toml::ParseError> {
+    let bad = |message: String| toml::ParseError { line: 0, message };
+    for key in doc.section_keys("power") {
+        if !POWER_KEYS.contains(&key) {
+            return Err(bad(format!("unknown power key `{key}`")));
+        }
+    }
+    let number = |key: &str, default: f64| -> Result<f64, toml::ParseError> {
+        match doc.get(key) {
+            None => Ok(default),
+            Some(v) => match v.as_f64() {
+                Some(x) if x.is_finite() => Ok(x),
+                Some(x) => Err(bad(format!("{key}: must be finite, got {x}"))),
+                None => Err(bad(format!("{key}: expected a number"))),
+            },
+        }
+    };
+    let nonneg = |key: &str, default: f64| -> Result<f64, toml::ParseError> {
+        let x = number(key, default)?;
+        if x < 0.0 {
+            return Err(bad(format!("{key}: must be >= 0, got {x}")));
+        }
+        Ok(x)
+    };
+    let positive = |key: &str, default: f64| -> Result<f64, toml::ParseError> {
+        let x = number(key, default)?;
+        if x <= 0.0 {
+            return Err(bad(format!("{key}: must be > 0, got {x}")));
+        }
+        Ok(x)
+    };
+    // A legacy flat key and its v2 spelling are the same knob — naming
+    // both is ambiguous, not an override chain.
+    let aliased = |legacy: &str, v2: &str| -> Result<&'static str, toml::ParseError> {
+        match (doc.get(legacy).is_some(), doc.get(v2).is_some()) {
+            (true, true) => Err(bad(format!("`{legacy}` conflicts with `{v2}`: set one"))),
+            (true, false) => Ok("legacy"),
+            _ => Ok("v2"),
+        }
+    };
+    let pick = |legacy: &str, v2: &str, default: f64| -> Result<f64, toml::ParseError> {
+        match aliased(legacy, v2)? {
+            "legacy" => nonneg(legacy, default),
+            _ => nonneg(v2, default),
+        }
+    };
     let d = PowerModel::gtx980();
     let curve = |key: &str, default: VfCurve| -> Result<VfCurve, toml::ParseError> {
-        match doc.get(key).and_then(|v| v.as_str()) {
-            Some(text) => vf_curve_from_str(text, key),
+        match doc.get(key) {
             None => Ok(default),
+            Some(v) => match v.as_str() {
+                Some(text) => vf_curve_from_str(text, key),
+                None => Err(bad(format!("{key}: expected a string of mhz:volts points"))),
+            },
         }
     };
     Ok(PowerModel {
         core_curve: curve("power.core_vf", d.core_curve)?,
         mem_curve: curve("power.mem_vf", d.mem_curve)?,
-        core_coeff: doc.f64_or("power.core_coeff", d.core_coeff),
-        mem_coeff: doc.f64_or("power.mem_coeff", d.mem_coeff),
-        static_w: doc.f64_or("power.static_w", d.static_w),
+        dynamic: DynamicParams {
+            core_coeff: pick(
+                "power.core_coeff",
+                "power.dynamic.core_coeff",
+                d.dynamic.core_coeff,
+            )?,
+            mem_coeff: pick("power.mem_coeff", "power.dynamic.mem_coeff", d.dynamic.mem_coeff)?,
+        },
+        leakage: LeakageParams {
+            static_w: pick("power.static_w", "power.leakage.static_w", d.leakage.static_w)?,
+            leak_w: nonneg("power.leakage.leak_w", d.leakage.leak_w)?,
+            v_ref: positive("power.leakage.v_ref", d.leakage.v_ref)?,
+            v_slope: positive("power.leakage.v_slope", d.leakage.v_slope)?,
+        },
     })
+}
+
+/// Format an `f64` so `to_text` → `parse` round-trips exactly: Rust's
+/// shortest-representation `Display` re-parses to the same bits (whole
+/// floats print as integers, which `as_f64` widens back losslessly).
+fn fmt_f64(x: f64) -> String {
+    format!("{x}")
+}
+
+fn fmt_curve(curve: &VfCurve) -> String {
+    curve
+        .points
+        .iter()
+        .map(|&(f, v)| format!("{}:{}", fmt_f64(f), fmt_f64(v)))
+        .collect::<Vec<_>>()
+        .join(", ")
+}
+
+/// Serialize a `Config` back to TOML text. `from_text(&to_text(c))`
+/// reconstructs a `Config` equal to `c` — the round-trip the
+/// `tests/config_roundtrip.rs` suite pins for every shipped config.
+pub fn to_text(c: &Config) -> String {
+    let mut out = String::new();
+    let mut push = |line: String| {
+        out.push_str(&line);
+        out.push('\n');
+    };
+    if let Some(name) = &c.device_name {
+        push("[device]".into());
+        push(format!("name = \"{name}\""));
+        push(String::new());
+    }
+    push("[gpu]".into());
+    let g = &c.gpu;
+    push(format!("n_sm = {}", g.n_sm));
+    push(format!("max_warps_per_sm = {}", g.max_warps_per_sm));
+    push(format!("max_blocks_per_sm = {}", g.max_blocks_per_sm));
+    push(format!("smem_per_sm = {}", g.smem_per_sm));
+    push(format!("regs_per_sm = {}", g.regs_per_sm));
+    push(format!("l2_bytes = {}", g.l2_bytes));
+    push(format!("l2_ways = {}", g.l2_ways));
+    push(format!("line_bytes = {}", g.line_bytes));
+    push(format!("l2_hit_core_cycles = {}", fmt_f64(g.l2_hit_core_cycles)));
+    push(format!("l2_ii_core_cycles = {}", fmt_f64(g.l2_ii_core_cycles)));
+    push(format!("dm_path_core_cycles = {}", fmt_f64(g.dm_path_core_cycles)));
+    push(format!("dm_access_mem_cycles = {}", fmt_f64(g.dm_access_mem_cycles)));
+    push(format!("dm_burst_mem_cycles = {}", fmt_f64(g.dm_burst_mem_cycles)));
+    push(format!("mc_overhead_mem_cycles = {}", fmt_f64(g.mc_overhead_mem_cycles)));
+    push(format!("dram_banks = {}", g.dram_banks));
+    push(format!("dram_row_lines = {}", g.dram_row_lines));
+    push(format!(
+        "dram_row_miss_lat_mem_cycles = {}",
+        fmt_f64(g.dram_row_miss_lat_mem_cycles)
+    ));
+    push(format!(
+        "dram_row_miss_occ_mem_cycles = {}",
+        fmt_f64(g.dram_row_miss_occ_mem_cycles)
+    ));
+    push(format!("l1_bytes = {}", g.l1_bytes));
+    push(format!("l1_ways = {}", g.l1_ways));
+    push(format!("l1_hit_core_cycles = {}", fmt_f64(g.l1_hit_core_cycles)));
+    push(format!("smem_core_cycles = {}", fmt_f64(g.smem_core_cycles)));
+    push(format!("inst_core_cycles = {}", fmt_f64(g.inst_core_cycles)));
+    push(format!("block_launch_core_cycles = {}", fmt_f64(g.block_launch_core_cycles)));
+    push(String::new());
+    push("[sweep]".into());
+    let s = &c.sweep;
+    push(format!("core_min_mhz = {}", fmt_f64(s.core_min_mhz)));
+    push(format!("core_max_mhz = {}", fmt_f64(s.core_max_mhz)));
+    push(format!("mem_min_mhz = {}", fmt_f64(s.mem_min_mhz)));
+    push(format!("mem_max_mhz = {}", fmt_f64(s.mem_max_mhz)));
+    push(format!("stride_mhz = {}", fmt_f64(s.stride_mhz)));
+    push(format!("baseline_core_mhz = {}", fmt_f64(s.baseline_core_mhz)));
+    push(format!("baseline_mem_mhz = {}", fmt_f64(s.baseline_mem_mhz)));
+    push(String::new());
+    if !c.kernels.is_empty() {
+        push("[kernels]".into());
+        push(format!("names = \"{}\"", c.kernels.join(", ")));
+        push(String::new());
+    }
+    let p = &c.power;
+    push("[power]".into());
+    push(format!("core_vf = \"{}\"", fmt_curve(&p.core_curve)));
+    push(format!("mem_vf = \"{}\"", fmt_curve(&p.mem_curve)));
+    push(String::new());
+    push("[power.dynamic]".into());
+    push(format!("core_coeff = {}", fmt_f64(p.dynamic.core_coeff)));
+    push(format!("mem_coeff = {}", fmt_f64(p.dynamic.mem_coeff)));
+    push(String::new());
+    push("[power.leakage]".into());
+    push(format!("static_w = {}", fmt_f64(p.leakage.static_w)));
+    push(format!("leak_w = {}", fmt_f64(p.leakage.leak_w)));
+    push(format!("v_ref = {}", fmt_f64(p.leakage.v_ref)));
+    push(format!("v_slope = {}", fmt_f64(p.leakage.v_slope)));
+    out
 }
 
 /// Build a `SweepConfig` from a document's `[sweep]` section.
@@ -268,16 +444,87 @@ core_vf = "400:0.9, 800:1.1"
         )
         .unwrap();
         assert_eq!(c.device_name.as_deref(), Some("lab-rig"));
-        assert_eq!(c.power.core_coeff, 0.05);
-        assert_eq!(c.power.static_w, 30.0);
+        assert_eq!(c.power.dynamic.core_coeff, 0.05);
+        assert_eq!(c.power.leakage.static_w, 30.0);
         // Unspecified power fields keep the GTX 980 calibration.
-        assert_eq!(c.power.mem_coeff, PowerModel::gtx980().mem_coeff);
+        assert_eq!(c.power.dynamic.mem_coeff, PowerModel::gtx980().dynamic.mem_coeff);
+        assert_eq!(c.power.leakage.leak_w, PowerModel::gtx980().leakage.leak_w);
         assert_eq!(c.power.core_curve.points, vec![(400.0, 0.9), (800.0, 1.1)]);
         assert_eq!(c.power.mem_curve.points, PowerModel::gtx980().mem_curve.points);
         // Defaults when both sections are absent.
         let d = from_text("").unwrap();
         assert_eq!(d.device_name, None);
-        assert_eq!(d.power.core_coeff, PowerModel::gtx980().core_coeff);
+        assert_eq!(d.power, PowerModel::gtx980());
+    }
+
+    #[test]
+    fn v2_power_sections_parse() {
+        let c = from_text(
+            r#"
+[power]
+core_vf = "400:0.85, 1000:1.2125"
+[power.dynamic]
+core_coeff = 0.065
+mem_coeff = 0.021
+[power.leakage]
+static_w = 9.5
+leak_w = 12.0
+v_ref = 1.05
+v_slope = 0.75
+"#,
+        )
+        .unwrap();
+        assert_eq!(c.power.dynamic, DynamicParams { core_coeff: 0.065, mem_coeff: 0.021 });
+        assert_eq!(
+            c.power.leakage,
+            LeakageParams { static_w: 9.5, leak_w: 12.0, v_ref: 1.05, v_slope: 0.75 }
+        );
+    }
+
+    #[test]
+    fn legacy_and_v2_power_keys_conflict() {
+        let e = from_text(
+            "[power]\ncore_coeff = 0.05\n[power.dynamic]\ncore_coeff = 0.06\n",
+        )
+        .unwrap_err();
+        assert!(e.message.contains("conflicts"), "{e}");
+        let e = from_text(
+            "[power]\nstatic_w = 20.0\n[power.leakage]\nstatic_w = 8.0\n",
+        )
+        .unwrap_err();
+        assert!(e.message.contains("conflicts"), "{e}");
+    }
+
+    #[test]
+    fn unknown_and_mistyped_power_keys_are_errors() {
+        assert!(from_text("[power]\ncore_coef = 0.05\n").is_err(), "typo'd key");
+        assert!(from_text("[power.leakage]\nleak_w = \"lots\"\n").is_err(), "string leak_w");
+        assert!(from_text("[power]\ncore_vf = 400\n").is_err(), "numeric curve");
+        assert!(from_text("[power.leakage]\nv_slope = 0\n").is_err(), "zero slope");
+        assert!(from_text("[power.dynamic]\nmem_coeff = -0.1\n").is_err(), "negative coeff");
+    }
+
+    #[test]
+    fn config_round_trips_through_to_text() {
+        let mut c = from_text(
+            r#"
+[device]
+name = "rig"
+[gpu]
+n_sm = 10
+[kernels]
+names = "VA, MMS"
+[power.leakage]
+leak_w = 9.25
+"#,
+        )
+        .unwrap();
+        c.sweep.stride_mhz = 150.0;
+        let again = from_text(&to_text(&c)).unwrap();
+        assert_eq!(c, again);
+        // And the default config round-trips too.
+        let d = Config::default();
+        assert_eq!(d, from_text(&to_text(&d)).unwrap());
     }
 
     #[test]
@@ -304,5 +551,7 @@ mem_vf = "  ""#,
         assert_eq!(c.gpu.n_sm, 16);
         assert_eq!(c.gpu.l2_bytes, 2 * 1024 * 1024);
         assert_eq!(c.sweep.pairs().len(), 49);
+        // The checked-in [power] sections ARE the built-in calibration.
+        assert_eq!(c.power, PowerModel::gtx980());
     }
 }

@@ -2,8 +2,22 @@
 //! (§I and §VII future work: "a real-time voltage and frequency
 //! controller based on energy conservation strategies").
 //!
-//! Power follows the paper's Eq. (1), `P_dynamic = a·C·V²·f`, applied
-//! per clock domain with a voltage/frequency table, plus static power.
+//! Power v2 (DESIGN.md §15) is voltage-explicit:
+//!
+//! ```text
+//! P(cf, mf) = P_dyn(cf, V_core(cf)) + P_dyn(mf, V_mem(mf)) + P_leak(V_core(cf))
+//! P_dyn(f, V) = a·C·V²·f                      (Eq. 1, per clock domain)
+//! P_leak(V)   = static_w + leak_w·(V/V_ref)·10^((V − V_ref)/V_slope)
+//! ```
+//!
+//! The dynamic term is the paper's Eq. (1) applied per domain with a
+//! voltage/frequency table; the leakage term follows the lumos-style
+//! subthreshold model (exponential in supply voltage, normalised so
+//! the excess equals `leak_w` at `V_ref`). With flat voltage tables
+//! and `leak_w = 0`, v2 degrades **bit-identically** to the old
+//! frequency-only v1 model — a guarantee the `tests/power_model.rs`
+//! property suite pins.
+//!
 //! Energy = P(cf, mf) × T(cf, mf), with T from any `Predictor`.
 //!
 //! This module advises **one kernel on one device**. For batch
@@ -18,8 +32,54 @@ use crate::baselines::Predictor;
 use crate::engine::Engine;
 use crate::model::KernelCounters;
 
+/// Structured rejection from [`VfCurve::try_from_points`]: every
+/// construction path (TOML `[power]` sections, the `/v2` wire) funnels
+/// through the same gate, so the variants here *are* the user-facing
+/// validation vocabulary.
+#[derive(Debug, Clone, PartialEq)]
+pub enum VfCurveError {
+    /// No points at all.
+    Empty,
+    /// A frequency or voltage is NaN or infinite.
+    NonFinite { index: usize, mhz: f64, volts: f64 },
+    /// A frequency or voltage is zero or negative.
+    NonPositive { index: usize, mhz: f64, volts: f64 },
+    /// The same frequency appears twice in a row.
+    DuplicateFrequency { index: usize, mhz: f64 },
+    /// Frequencies go backwards.
+    NonAscendingFrequency { index: usize, prev_mhz: f64, mhz: f64 },
+}
+
+impl std::fmt::Display for VfCurveError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            VfCurveError::Empty => {
+                write!(f, "curve needs at least one (mhz, volts) point")
+            }
+            VfCurveError::NonFinite { index, mhz, volts } => {
+                write!(f, "point {index} ({mhz}:{volts}) must be finite")
+            }
+            VfCurveError::NonPositive { index, mhz, volts } => {
+                write!(f, "point {index} ({mhz}:{volts}) must be positive")
+            }
+            VfCurveError::DuplicateFrequency { index, mhz } => {
+                write!(f, "duplicate frequency {mhz} MHz at point {index}")
+            }
+            VfCurveError::NonAscendingFrequency { index, prev_mhz, mhz } => {
+                write!(
+                    f,
+                    "frequencies must be strictly ascending: point {index} \
+                     ({mhz} MHz) after {prev_mhz} MHz"
+                )
+            }
+        }
+    }
+}
+
+impl std::error::Error for VfCurveError {}
+
 /// Voltage-frequency curve: linear interpolation over (MHz, V) points.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct VfCurve {
     /// Sorted (frequency MHz, volts) points.
     pub points: Vec<(f64, f64)>,
@@ -30,34 +90,54 @@ impl VfCurve {
     /// construction path (TOML `[power]` sections, the `/v2` wire):
     /// at least one point, positive finite values, strictly ascending
     /// frequencies.
-    pub fn try_from_points(points: Vec<(f64, f64)>) -> Result<VfCurve, String> {
+    pub fn try_from_points(points: Vec<(f64, f64)>) -> Result<VfCurve, VfCurveError> {
         if points.is_empty() {
-            return Err("curve needs at least one (mhz, volts) point".to_string());
+            return Err(VfCurveError::Empty);
         }
         let mut prev = f64::NEG_INFINITY;
-        for &(f, v) in &points {
-            if !(f.is_finite() && v.is_finite() && f > 0.0 && v > 0.0) {
-                return Err(format!("point {f}:{v} must be positive and finite"));
+        for (index, &(mhz, volts)) in points.iter().enumerate() {
+            if !(mhz.is_finite() && volts.is_finite()) {
+                return Err(VfCurveError::NonFinite { index, mhz, volts });
             }
-            if f <= prev {
-                return Err(format!("frequencies must be strictly ascending at {f}"));
+            if mhz <= 0.0 || volts <= 0.0 {
+                return Err(VfCurveError::NonPositive { index, mhz, volts });
             }
-            prev = f;
+            if mhz == prev {
+                return Err(VfCurveError::DuplicateFrequency { index, mhz });
+            }
+            if mhz < prev {
+                return Err(VfCurveError::NonAscendingFrequency {
+                    index,
+                    prev_mhz: prev,
+                    mhz,
+                });
+            }
+            prev = mhz;
         }
         Ok(VfCurve { points })
     }
 
     /// A Maxwell-like curve: 0.85 V at 400 MHz up to 1.2125 V at
-    /// 1000 MHz (matching published GTX 980 V/f steps in shape).
+    /// 1000 MHz (matching published GTX 980 V/f steps in shape). The
+    /// 100 MHz step table is the full DVFS ladder the planner's
+    /// device grid enumerates.
     pub fn maxwell_core() -> Self {
         VfCurve {
-            points: vec![(400.0, 0.85), (600.0, 0.95), (800.0, 1.075), (1000.0, 1.2125)],
+            points: vec![
+                (400.0, 0.85),
+                (500.0, 0.9),
+                (600.0, 0.95),
+                (700.0, 1.0125),
+                (800.0, 1.075),
+                (900.0, 1.14375),
+                (1000.0, 1.2125),
+            ],
         }
     }
 
     /// GDDR5 voltage barely scales: flat-ish curve.
     pub fn gddr5_mem() -> Self {
-        VfCurve { points: vec![(400.0, 1.35), (1000.0, 1.5)] }
+        VfCurve { points: vec![(400.0, 1.35), (700.0, 1.425), (1000.0, 1.5)] }
     }
 
     /// Voltage at `f_mhz` (clamped linear interpolation).
@@ -74,19 +154,91 @@ impl VfCurve {
         }
         pts.last().unwrap().1
     }
+
+    /// True when every point carries the same voltage — the regime in
+    /// which the v2 model's voltage terms reduce to constants.
+    pub fn is_flat(&self) -> bool {
+        let v0 = self.points[0].1;
+        self.points.iter().all(|&(_, v)| v == v0)
+    }
 }
 
-/// Eq. (1)-style power model with two frequency domains.
-#[derive(Debug, Clone)]
+/// Per-domain dynamic-power coefficients (`[power.dynamic]`): the
+/// effective `a·C` in Eq. (1), in W / (MHz·V²).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DynamicParams {
+    /// Core-domain coefficient.
+    pub core_coeff: f64,
+    /// Memory-domain coefficient.
+    pub mem_coeff: f64,
+}
+
+/// Voltage-dependent leakage (`[power.leakage]`), lumos-style:
+/// `P_leak(V) = static_w + leak_w·(V/v_ref)·10^((V − v_ref)/v_slope)`.
+///
+/// `static_w` is the voltage-independent floor (fans, VRM losses, the
+/// memory rail's leakage — the mem domain's supply barely scales, so
+/// its leakage is folded in here). The excess term is driven by the
+/// **core** supply voltage and equals `leak_w` exactly at `v_ref`.
+/// `leak_w = 0` switches the excess off entirely, recovering the v1
+/// frequency-only model bit-for-bit.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LeakageParams {
+    /// Voltage-independent static power, W.
+    pub static_w: f64,
+    /// Leakage at the reference voltage, W. Zero disables the term.
+    pub leak_w: f64,
+    /// Reference voltage, V.
+    pub v_ref: f64,
+    /// Exponential slope: decades of leakage per `v_slope` volts.
+    pub v_slope: f64,
+}
+
+impl LeakageParams {
+    /// Voltage-independent leakage: the excess term off.
+    pub fn flat(static_w: f64) -> Self {
+        LeakageParams { static_w, leak_w: 0.0, v_ref: 1.0, v_slope: 0.8 }
+    }
+
+    /// The voltage-dependent excess above `static_w`, W. Exactly 0.0
+    /// when `leak_w` is zero (the v1-equivalence guard: `x + 0.0`
+    /// preserves `x` bit-for-bit for the positive totals we sum).
+    pub fn excess_w(&self, volts: f64) -> f64 {
+        if self.leak_w == 0.0 {
+            return 0.0;
+        }
+        self.leak_w * (volts / self.v_ref) * 10f64.powf((volts - self.v_ref) / self.v_slope)
+    }
+
+    /// Total leakage at a supply voltage, W.
+    pub fn total_w(&self, volts: f64) -> f64 {
+        self.static_w + self.excess_w(volts)
+    }
+}
+
+/// One evaluated power split: `total_w = dynamic_w + leakage_w` up to
+/// summation order (the total is computed in v1's exact add order so
+/// the flat/zero-leakage regime stays bit-identical).
+#[derive(Debug, Clone, Copy)]
+pub struct PowerSplit {
+    /// Both domains' `a·C·V²·f`, W.
+    pub dynamic_w: f64,
+    /// Static floor plus voltage-dependent excess, W.
+    pub leakage_w: f64,
+    /// Board power, W.
+    pub total_w: f64,
+}
+
+/// Eq. (1)-style power model with two frequency domains plus
+/// voltage-dependent leakage (power v2, DESIGN.md §15).
+#[derive(Debug, Clone, PartialEq)]
 pub struct PowerModel {
     pub core_curve: VfCurve,
     pub mem_curve: VfCurve,
-    /// Effective a·C coefficient for the core domain, W / (MHz·V²).
-    pub core_coeff: f64,
-    /// Effective a·C coefficient for the memory domain, W / (MHz·V²).
-    pub mem_coeff: f64,
-    /// Static/leakage power, W.
-    pub static_w: f64,
+    /// Per-domain dynamic coefficients.
+    pub dynamic: DynamicParams,
+    /// Static + voltage-dependent leakage parameters.
+    pub leakage: LeakageParams,
 }
 
 /// The GTX 980 calibration is the crate-wide default (matching
@@ -99,22 +251,47 @@ impl Default for PowerModel {
 
 impl PowerModel {
     /// Calibrated so the default GTX 980 lands near its 165 W TDP at
-    /// 1000/1000 and ~60 W at 400/400.
+    /// 1000/1000 (185.6 W board power) and ~50 W at 400/400, with the
+    /// leakage excess worth ~31 W at peak core voltage.
     pub fn gtx980() -> Self {
         PowerModel {
             core_curve: VfCurve::maxwell_core(),
             mem_curve: VfCurve::gddr5_mem(),
-            core_coeff: 0.072,
-            mem_coeff: 0.018,
-            static_w: 22.0,
+            dynamic: DynamicParams { core_coeff: 0.072, mem_coeff: 0.018 },
+            leakage: LeakageParams { static_w: 8.0, leak_w: 14.0, v_ref: 1.0, v_slope: 0.8 },
+        }
+    }
+
+    /// Board power split at a frequency pair. The total is summed in
+    /// the v1 order (`static + core + mem`, then `+ excess`) so that
+    /// flat curves with `leak_w = 0` reproduce v1 bit-identically.
+    pub fn split_w(&self, core_mhz: f64, mem_mhz: f64) -> PowerSplit {
+        let vc = self.core_curve.volts(core_mhz);
+        let vm = self.mem_curve.volts(mem_mhz);
+        let dyn_core = self.dynamic.core_coeff * core_mhz * vc * vc;
+        let dyn_mem = self.dynamic.mem_coeff * mem_mhz * vm * vm;
+        let excess = self.leakage.excess_w(vc);
+        PowerSplit {
+            dynamic_w: dyn_core + dyn_mem,
+            leakage_w: self.leakage.static_w + excess,
+            total_w: self.leakage.static_w + dyn_core + dyn_mem + excess,
         }
     }
 
     /// Board power at a frequency pair, watts.
     pub fn power_w(&self, core_mhz: f64, mem_mhz: f64) -> f64 {
-        let vc = self.core_curve.volts(core_mhz);
-        let vm = self.mem_curve.volts(mem_mhz);
-        self.static_w + self.core_coeff * core_mhz * vc * vc + self.mem_coeff * mem_mhz * vm * vm
+        self.split_w(core_mhz, mem_mhz).total_w
+    }
+
+    /// The same model with the voltage-dependent leakage excess
+    /// switched off (`leak_w = 0`); `static_w` and both dynamic terms
+    /// are untouched. This is the v1-vs-v2 foil the planner bench and
+    /// the energy-invariant property tests compare against.
+    pub fn without_leakage(&self) -> PowerModel {
+        PowerModel {
+            leakage: LeakageParams { leak_w: 0.0, ..self.leakage },
+            ..self.clone()
+        }
     }
 }
 
@@ -125,6 +302,10 @@ pub struct ConfigPoint {
     pub mem_mhz: f64,
     pub time_us: f64,
     pub power_w: f64,
+    /// Dynamic share of `power_w` (both domains' a·C·V²·f), W.
+    pub power_dynamic_w: f64,
+    /// Leakage share of `power_w` (static floor + V-dependent excess), W.
+    pub power_leakage_w: f64,
     /// Energy in millijoules.
     pub energy_mj: f64,
     /// Energy-delay product (mJ·µs).
@@ -156,13 +337,15 @@ fn advise_points(
         .iter()
         .zip(times_us)
         .map(|(&(cf, mf), &time_us)| {
-            let power_w = power.power_w(cf, mf);
-            let energy_mj = power_w * time_us * 1e-3; // W·µs = µJ; /1e3 = mJ
+            let split = power.split_w(cf, mf);
+            let energy_mj = split.total_w * time_us * 1e-3; // W·µs = µJ; /1e3 = mJ
             ConfigPoint {
                 core_mhz: cf,
                 mem_mhz: mf,
                 time_us,
-                power_w,
+                power_w: split.total_w,
+                power_dynamic_w: split.dynamic_w,
+                power_leakage_w: split.leakage_w,
                 energy_mj,
                 edp: energy_mj * time_us,
             }
@@ -275,7 +458,7 @@ mod tests {
         assert_eq!(c.volts(300.0), 0.85);
         assert_eq!(c.volts(1200.0), 1.2125);
         let v = c.volts(500.0);
-        assert!(v > 0.85 && v < 0.95);
+        assert!(v >= 0.85 && v < 0.95);
         assert!((c.volts(600.0) - 0.95).abs() < 1e-12);
     }
 
@@ -305,10 +488,104 @@ mod tests {
     }
 
     #[test]
+    fn try_from_points_pins_every_error_path() {
+        // Happy path.
+        let ok = VfCurve::try_from_points(vec![(400.0, 0.85), (600.0, 0.95)]).unwrap();
+        assert_eq!(ok.points.len(), 2);
+        // Single point is valid (a flat one-step table).
+        VfCurve::try_from_points(vec![(500.0, 1.0)]).unwrap();
+
+        // Empty.
+        let e = VfCurve::try_from_points(vec![]).unwrap_err();
+        assert_eq!(e, VfCurveError::Empty);
+        assert_eq!(e.to_string(), "curve needs at least one (mhz, volts) point");
+
+        // Non-finite frequency and voltage, at the right index.
+        let e = VfCurve::try_from_points(vec![(400.0, 0.85), (f64::NAN, 1.0)]).unwrap_err();
+        assert!(matches!(e, VfCurveError::NonFinite { index: 1, .. }), "{e:?}");
+        let e =
+            VfCurve::try_from_points(vec![(400.0, f64::INFINITY)]).unwrap_err();
+        assert!(matches!(e, VfCurveError::NonFinite { index: 0, .. }), "{e:?}");
+        assert_eq!(e.to_string(), "point 0 (400:inf) must be finite");
+
+        // Zero / negative values.
+        let e = VfCurve::try_from_points(vec![(0.0, 0.85)]).unwrap_err();
+        assert_eq!(e, VfCurveError::NonPositive { index: 0, mhz: 0.0, volts: 0.85 });
+        let e = VfCurve::try_from_points(vec![(400.0, -0.85)]).unwrap_err();
+        assert_eq!(e, VfCurveError::NonPositive { index: 0, mhz: 400.0, volts: -0.85 });
+        assert_eq!(e.to_string(), "point 0 (400:-0.85) must be positive");
+
+        // Exact duplicate frequency — distinct from merely descending.
+        let e = VfCurve::try_from_points(vec![(400.0, 0.85), (400.0, 0.9)]).unwrap_err();
+        assert_eq!(e, VfCurveError::DuplicateFrequency { index: 1, mhz: 400.0 });
+        assert_eq!(e.to_string(), "duplicate frequency 400 MHz at point 1");
+
+        // Backwards frequency.
+        let e = VfCurve::try_from_points(vec![(600.0, 0.95), (400.0, 0.85)]).unwrap_err();
+        assert_eq!(
+            e,
+            VfCurveError::NonAscendingFrequency { index: 1, prev_mhz: 600.0, mhz: 400.0 }
+        );
+        assert_eq!(
+            e.to_string(),
+            "frequencies must be strictly ascending: point 1 (400 MHz) after 600 MHz"
+        );
+    }
+
+    #[test]
+    fn leakage_excess_is_zero_off_and_anchored_at_vref() {
+        let leak = LeakageParams { static_w: 8.0, leak_w: 14.0, v_ref: 1.0, v_slope: 0.8 };
+        // Anchor: excess equals leak_w exactly at v_ref.
+        assert!((leak.excess_w(1.0) - 14.0).abs() < 1e-12);
+        assert_eq!(leak.total_w(1.0), 8.0 + leak.excess_w(1.0));
+        // Off switch: exact 0.0, not merely small.
+        let off = LeakageParams { leak_w: 0.0, ..leak };
+        assert_eq!(off.excess_w(1.2125).to_bits(), 0.0f64.to_bits());
+        assert_eq!(LeakageParams::flat(22.0).total_w(5.0), 22.0);
+        // Monotone nondecreasing in V.
+        let mut prev = 0.0;
+        let mut v = 0.05;
+        while v <= 1.5 {
+            let e = leak.excess_w(v);
+            assert!(e >= prev, "leakage fell at {v} V: {e} < {prev}");
+            prev = e;
+            v += 0.05;
+        }
+    }
+
+    #[test]
+    fn split_components_sum_to_total() {
+        let p = PowerModel::gtx980();
+        for &(cf, mf) in &[(400.0, 400.0), (700.0, 1000.0), (1000.0, 600.0)] {
+            let s = p.split_w(cf, mf);
+            assert!(
+                (s.dynamic_w + s.leakage_w - s.total_w).abs() <= 1e-12 * s.total_w,
+                "split does not sum at {cf}/{mf}"
+            );
+            assert_eq!(s.total_w.to_bits(), p.power_w(cf, mf).to_bits());
+            assert!(s.dynamic_w > 0.0 && s.leakage_w > 0.0);
+        }
+    }
+
+    #[test]
+    fn without_leakage_drops_only_the_excess() {
+        let p = PowerModel::gtx980();
+        let v1 = p.without_leakage();
+        assert_eq!(v1.leakage.leak_w, 0.0);
+        assert_eq!(v1.leakage.static_w, p.leakage.static_w);
+        assert_eq!(v1.dynamic, p.dynamic);
+        let (s2, s1) = (p.split_w(900.0, 800.0), v1.split_w(900.0, 800.0));
+        assert_eq!(s1.dynamic_w.to_bits(), s2.dynamic_w.to_bits());
+        assert!(s1.leakage_w < s2.leakage_w);
+        assert!(s1.total_w < s2.total_w);
+    }
+
+    #[test]
     fn energy_is_power_times_time_at_every_point() {
         // Every ConfigPoint must satisfy E = P × T (Eq. 1 applied to
         // the advisor's mJ bookkeeping: W·µs = µJ, /1e3 = mJ) and
-        // EDP = E × T, for every objective.
+        // EDP = E × T, for every objective — and carry the power
+        // split that sums back to power_w.
         let model = PaperModel { hw: HwParams::paper_defaults() };
         let power = PowerModel::gtx980();
         for objective in
@@ -319,6 +596,9 @@ mod tests {
             assert_eq!(points.len(), 49);
             for p in &points {
                 assert_eq!(p.power_w.to_bits(), power.power_w(p.core_mhz, p.mem_mhz).to_bits());
+                let split = power.split_w(p.core_mhz, p.mem_mhz);
+                assert_eq!(p.power_dynamic_w.to_bits(), split.dynamic_w.to_bits());
+                assert_eq!(p.power_leakage_w.to_bits(), split.leakage_w.to_bits());
                 let want_mj = p.power_w * p.time_us * 1e-3;
                 assert!(
                     (p.energy_mj - want_mj).abs() <= 1e-12 * want_mj.abs().max(1.0),

@@ -1,6 +1,13 @@
 //! Least-squares fit of the paper's Eq. (4) from micro-benchmark
 //! samples, with R² — the Rust twin of `model.fit_dm_lat` in the AOT
-//! path (cross-checked by an integration test).
+//! path (cross-checked by an integration test) — plus the power v2
+//! sweep fitter (DESIGN.md §15): given the device's V/f curves and
+//! the leakage shape constants, board power is *linear* in
+//! (static_w, leak_w, core_coeff, mem_coeff), so the same normal-
+//! equations machinery recovers all four from a (frequency point,
+//! measured watts) sweep.
+
+use crate::dvfs::{DynamicParams, LeakageParams, PowerModel, VfCurve};
 
 /// Result of fitting `lat = a * ratio + b`.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -35,6 +42,135 @@ pub fn fit_line(xs: &[f64], ys: &[f64]) -> LineFit {
     let ss_tot: f64 = ys.iter().map(|y| (y - ym) * (y - ym)).sum();
     let r_squared = if ss_tot == 0.0 { 1.0 } else { 1.0 - ss_res / ss_tot };
     LineFit { slope, intercept, r_squared }
+}
+
+/// Multi-regressor ordinary least squares: minimise ‖X·β − y‖² via
+/// the normal equations (XᵀX·β = Xᵀy), solved by Gauss–Jordan
+/// elimination with partial pivoting. `columns` are the regressor
+/// columns of X, each `ys.len()` long. Returns `(β, R²)`; `Err` when
+/// the normal matrix is singular (collinear regressors).
+pub fn fit_least_squares(columns: &[Vec<f64>], ys: &[f64]) -> Result<(Vec<f64>, f64), String> {
+    let k = columns.len();
+    let n = ys.len();
+    assert!(k >= 1, "need at least one regressor");
+    assert!(columns.iter().all(|c| c.len() == n), "column length mismatch");
+    assert!(n >= k, "need at least as many samples as regressors");
+    let dot = |a: &[f64], b: &[f64]| a.iter().zip(b).map(|(x, y)| x * y).sum::<f64>();
+    // Augmented normal system [XᵀX | Xᵀy].
+    let mut a = vec![vec![0.0; k + 1]; k];
+    for i in 0..k {
+        for j in 0..k {
+            a[i][j] = dot(&columns[i], &columns[j]);
+        }
+        a[i][k] = dot(&columns[i], ys);
+    }
+    let scale = a
+        .iter()
+        .flat_map(|row| row[..k].iter())
+        .fold(0.0f64, |m, v| m.max(v.abs()))
+        .max(1.0);
+    for col in 0..k {
+        let pivot_row = (col..k)
+            .max_by(|&r, &s| a[r][col].abs().total_cmp(&a[s][col].abs()))
+            .unwrap();
+        if a[pivot_row][col].abs() <= 1e-12 * scale {
+            return Err(format!(
+                "normal equations singular at regressor {col} (collinear columns)"
+            ));
+        }
+        a.swap(col, pivot_row);
+        for r in 0..k {
+            if r == col {
+                continue;
+            }
+            let f = a[r][col] / a[col][col];
+            for c in col..=k {
+                a[r][c] -= f * a[col][c];
+            }
+        }
+    }
+    let beta: Vec<f64> = (0..k).map(|i| a[i][k] / a[i][i]).collect();
+    let ym = ys.iter().sum::<f64>() / n as f64;
+    let (mut ss_res, mut ss_tot) = (0.0, 0.0);
+    for (row, y) in ys.iter().enumerate() {
+        let yhat: f64 = beta.iter().zip(columns).map(|(b, c)| b * c[row]).sum();
+        ss_res += (y - yhat) * (y - yhat);
+        ss_tot += (y - ym) * (y - ym);
+    }
+    let r_squared = if ss_tot == 0.0 { 1.0 } else { 1.0 - ss_res / ss_tot };
+    Ok((beta, r_squared))
+}
+
+/// A fitted v2 power model plus its goodness of fit (R² of the
+/// *returned* model against the sweep — after any clamping).
+#[derive(Debug, Clone)]
+pub struct PowerFit {
+    pub model: PowerModel,
+    pub r_squared: f64,
+}
+
+/// Fit the v2 power split from `((core_mhz, mem_mhz), measured_w)`
+/// sweep samples, given the device's V/f curves and the leakage shape
+/// constants. The regressors are `[1, g(V_core), cf·V_core²,
+/// mf·V_mem²]` with `g(v) = (v/v_ref)·10^((v − v_ref)/v_slope)`, so
+/// the fit is a single linear solve. When the core curve is flat,
+/// `g(V_core)` is constant — collinear with the intercept — and the
+/// fit falls back to the frequency-only v1 form with `leak_w = 0`.
+/// Negative fitted parameters (possible under noise) clamp to zero so
+/// the returned model stays physical.
+pub fn fit_power_model(
+    core_curve: &VfCurve,
+    mem_curve: &VfCurve,
+    samples: &[((f64, f64), f64)],
+    v_ref: f64,
+    v_slope: f64,
+) -> Result<PowerFit, String> {
+    if samples.len() < 4 {
+        return Err(format!("need at least 4 sweep samples, got {}", samples.len()));
+    }
+    if !(v_ref > 0.0 && v_ref.is_finite() && v_slope > 0.0 && v_slope.is_finite()) {
+        return Err(format!("leakage shape v_ref={v_ref} v_slope={v_slope} must be positive"));
+    }
+    let shape = LeakageParams { static_w: 0.0, leak_w: 1.0, v_ref, v_slope };
+    let n = samples.len();
+    let (ones, mut leak, mut core, mut mem) =
+        (vec![1.0; n], Vec::with_capacity(n), Vec::with_capacity(n), Vec::with_capacity(n));
+    let mut ys = Vec::with_capacity(n);
+    for &((cf, mf), watts) in samples {
+        let vc = core_curve.volts(cf);
+        let vm = mem_curve.volts(mf);
+        leak.push(shape.excess_w(vc));
+        core.push(cf * vc * vc);
+        mem.push(mf * vm * vm);
+        ys.push(watts);
+    }
+    let nonneg = |x: f64| if x < 0.0 { 0.0 } else { x };
+    let (static_w, leak_w, core_coeff, mem_coeff) =
+        match fit_least_squares(&[ones.clone(), leak, core.clone(), mem.clone()], &ys) {
+            Ok((beta, _)) => (nonneg(beta[0]), nonneg(beta[1]), nonneg(beta[2]), nonneg(beta[3])),
+            Err(_) => {
+                // Flat core curve: leakage indistinguishable from the
+                // static floor — fold it in and report leak_w = 0.
+                let (beta, _) = fit_least_squares(&[ones, core, mem], &ys)?;
+                (nonneg(beta[0]), 0.0, nonneg(beta[1]), nonneg(beta[2]))
+            }
+        };
+    let model = PowerModel {
+        core_curve: core_curve.clone(),
+        mem_curve: mem_curve.clone(),
+        dynamic: DynamicParams { core_coeff, mem_coeff },
+        leakage: LeakageParams { static_w, leak_w, v_ref, v_slope },
+    };
+    // R² of the model actually returned (clamping included).
+    let ym = ys.iter().sum::<f64>() / n as f64;
+    let (mut ss_res, mut ss_tot) = (0.0, 0.0);
+    for &((cf, mf), watts) in samples {
+        let e = watts - model.power_w(cf, mf);
+        ss_res += e * e;
+        ss_tot += (watts - ym) * (watts - ym);
+    }
+    let r_squared = if ss_tot == 0.0 { 1.0 } else { 1.0 - ss_res / ss_tot };
+    Ok(PowerFit { model, r_squared })
 }
 
 #[cfg(test)]
@@ -75,5 +211,97 @@ mod tests {
     #[should_panic]
     fn rejects_zero_variance() {
         fit_line(&[1.0, 1.0], &[2.0, 3.0]);
+    }
+
+    #[test]
+    fn least_squares_matches_fit_line_on_two_columns() {
+        // [1, x] regression must agree with the dedicated line fitter.
+        let xs: Vec<f64> = (1..30).map(|i| 0.3 + i as f64 * 0.07).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 31.5 * x - 4.25).collect();
+        let line = fit_line(&xs, &ys);
+        let (beta, r2) =
+            fit_least_squares(&[vec![1.0; xs.len()], xs.clone()], &ys).unwrap();
+        assert!((beta[0] - line.intercept).abs() < 1e-9);
+        assert!((beta[1] - line.slope).abs() < 1e-9);
+        assert!((r2 - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn least_squares_rejects_collinear_columns() {
+        let xs: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        let doubled: Vec<f64> = xs.iter().map(|x| 2.0 * x).collect();
+        let ys = vec![1.0; 10];
+        let err = fit_least_squares(&[xs, doubled], &ys).unwrap_err();
+        assert!(err.contains("singular"), "{err}");
+    }
+
+    #[test]
+    fn power_fit_recovers_planted_params_exactly_from_clean_sweep() {
+        let truth = PowerModel::gtx980();
+        let mut samples = Vec::new();
+        let mut c = 400.0;
+        while c <= 1000.0 {
+            let mut m = 400.0;
+            while m <= 1000.0 {
+                samples.push(((c, m), truth.power_w(c, m)));
+                m += 100.0;
+            }
+            c += 100.0;
+        }
+        let fit = fit_power_model(
+            &truth.core_curve,
+            &truth.mem_curve,
+            &samples,
+            truth.leakage.v_ref,
+            truth.leakage.v_slope,
+        )
+        .unwrap();
+        let (got, want) = (&fit.model, &truth);
+        assert!((got.leakage.static_w - want.leakage.static_w).abs() < 1e-6);
+        assert!((got.leakage.leak_w - want.leakage.leak_w).abs() < 1e-6);
+        assert!((got.dynamic.core_coeff - want.dynamic.core_coeff).abs() < 1e-9);
+        assert!((got.dynamic.mem_coeff - want.dynamic.mem_coeff).abs() < 1e-9);
+        assert!(fit.r_squared > 1.0 - 1e-12);
+    }
+
+    #[test]
+    fn power_fit_flat_core_curve_falls_back_to_v1_form() {
+        // A flat core curve makes g(V_core) constant — collinear with
+        // the intercept — so the fitter must drop the leakage column
+        // and still nail the sweep.
+        let flat_core = VfCurve::try_from_points(vec![(400.0, 1.0), (1000.0, 1.0)]).unwrap();
+        let flat_mem = VfCurve::try_from_points(vec![(400.0, 1.35), (1000.0, 1.35)]).unwrap();
+        let truth = PowerModel {
+            core_curve: flat_core.clone(),
+            mem_curve: flat_mem.clone(),
+            dynamic: DynamicParams { core_coeff: 0.06, mem_coeff: 0.02 },
+            leakage: LeakageParams::flat(25.0),
+        };
+        let samples: Vec<((f64, f64), f64)> = [
+            (400.0, 400.0),
+            (400.0, 1000.0),
+            (600.0, 700.0),
+            (800.0, 500.0),
+            (1000.0, 1000.0),
+            (1000.0, 400.0),
+        ]
+        .iter()
+        .map(|&(c, m)| ((c, m), truth.power_w(c, m)))
+        .collect();
+        let fit = fit_power_model(&flat_core, &flat_mem, &samples, 1.0, 0.8).unwrap();
+        assert_eq!(fit.model.leakage.leak_w, 0.0);
+        assert!((fit.model.leakage.static_w - 25.0).abs() < 1e-6);
+        assert!((fit.model.dynamic.core_coeff - 0.06).abs() < 1e-9);
+        assert!((fit.model.dynamic.mem_coeff - 0.02).abs() < 1e-9);
+    }
+
+    #[test]
+    fn power_fit_rejects_tiny_or_misshapen_input() {
+        let m = PowerModel::gtx980();
+        let s = vec![((400.0, 400.0), 50.0); 3];
+        assert!(fit_power_model(&m.core_curve, &m.mem_curve, &s, 1.0, 0.8).is_err());
+        let s4 = vec![((400.0, 400.0), 50.0); 4];
+        assert!(fit_power_model(&m.core_curve, &m.mem_curve, &s4, -1.0, 0.8).is_err());
+        assert!(fit_power_model(&m.core_curve, &m.mem_curve, &s4, 1.0, f64::NAN).is_err());
     }
 }

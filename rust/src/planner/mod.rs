@@ -233,6 +233,10 @@ pub struct Assignment {
     pub time_us: f64,
     /// Board power at `point` (the device's own Eq. (1) model), W.
     pub power_w: f64,
+    /// Dynamic share of `power_w` (both domains' a·C·V²·f), W.
+    pub power_dynamic_w: f64,
+    /// Leakage share of `power_w` (static floor + V-dependent excess), W.
+    pub power_leakage_w: f64,
     /// `power_w × time_us`, in mJ.
     pub energy_mj: f64,
     /// `energy_mj × time_us`.

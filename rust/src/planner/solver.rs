@@ -136,6 +136,8 @@ struct Candidate {
     point: FreqPoint,
     time_us: f64,
     power_w: f64,
+    power_dynamic_w: f64,
+    power_leakage_w: f64,
     energy_mj: f64,
     edp: f64,
 }
@@ -157,8 +159,10 @@ struct EvalTable {
     /// `times[d][k][p]`: single-invocation µs (k indexes the distinct
     /// kernels; see `job_kernel`).
     times: Vec<Vec<Vec<f64>>>,
-    /// `power[d][p]`: board watts at that device's point `p`.
-    power: Vec<Vec<f64>>,
+    /// `power[d][p]`: board watts at that device's point `p`, split
+    /// into the v2 dynamic/leakage components (DESIGN.md §15).
+    /// `total_w` is what every energy figure is priced from.
+    power: Vec<Vec<crate::dvfs::PowerSplit>>,
     /// Distinct-kernel table index per job.
     job_kernel: Vec<usize>,
 }
@@ -166,12 +170,14 @@ struct EvalTable {
 impl EvalTable {
     fn eval(&self, jobs: &[Job], j: usize, di: usize, pi: usize) -> Candidate {
         let time_us = jobs[j].scale * self.times[di][self.job_kernel[j]][pi];
-        let power_w = self.power[di][pi];
-        let energy_mj = power_w * time_us * 1e-3; // W·µs = µJ; /1e3 = mJ
+        let split = self.power[di][pi];
+        let energy_mj = split.total_w * time_us * 1e-3; // W·µs = µJ; /1e3 = mJ
         Candidate {
             point: self.grids[di][pi],
             time_us,
-            power_w,
+            power_w: split.total_w,
+            power_dynamic_w: split.dynamic_w,
+            power_leakage_w: split.leakage_w,
             energy_mj,
             edp: energy_mj * time_us,
         }
@@ -360,11 +366,11 @@ fn prepare(
         times.push(per_kernel);
     }
     report.slab_calls = engine.compute_stats().since(compute_before).slab_calls;
-    let power: Vec<Vec<f64>> = devices
+    let power: Vec<Vec<crate::dvfs::PowerSplit>> = devices
         .iter()
         .enumerate()
         .map(|(di, rec)| {
-            grids[di].iter().map(|p| rec.power.power_w(p.core_mhz, p.mem_mhz)).collect()
+            grids[di].iter().map(|p| rec.power.split_w(p.core_mhz, p.mem_mhz)).collect()
         })
         .collect();
 
@@ -428,6 +434,8 @@ fn assemble(
             point: c.point,
             time_us: c.time_us,
             power_w: c.power_w,
+            power_dynamic_w: c.power_dynamic_w,
+            power_leakage_w: c.power_leakage_w,
             energy_mj: c.energy_mj,
             edp: c.edp,
         });
@@ -858,6 +866,10 @@ pub struct Placement {
     pub time_us: f64,
     /// Board power at `point`, W.
     pub power_w: f64,
+    /// Dynamic share of `power_w` (both domains' a·C·V²·f), W.
+    pub power_dynamic_w: f64,
+    /// Leakage share of `power_w` (static floor + V-dependent excess), W.
+    pub power_leakage_w: f64,
     /// `power_w × time_us`, in mJ.
     pub energy_mj: f64,
     /// `energy_mj × time_us`.
@@ -911,8 +923,9 @@ pub struct ScheduleTable {
     /// Availability mask (DeviceUp/DeviceDown), parallel to `devices`.
     available: Vec<bool>,
     grids: Vec<Vec<FreqPoint>>,
-    /// `power[d][p]`: board watts at device `d`'s point `p`.
-    power: Vec<Vec<f64>>,
+    /// `power[d][p]`: board watts at device `d`'s point `p`, split
+    /// into the v2 dynamic/leakage components.
+    power: Vec<Vec<crate::dvfs::PowerSplit>>,
     max_point_idx: Vec<usize>,
     /// Summed per-device grid sizes (the cost of pricing one kernel).
     total_points: usize,
@@ -980,11 +993,11 @@ impl ScheduleTable {
                 devices.len()
             )));
         }
-        let power: Vec<Vec<f64>> = devices
+        let power: Vec<Vec<crate::dvfs::PowerSplit>> = devices
             .iter()
             .enumerate()
             .map(|(di, rec)| {
-                grids[di].iter().map(|p| rec.power.power_w(p.core_mhz, p.mem_mhz)).collect()
+                grids[di].iter().map(|p| rec.power.split_w(p.core_mhz, p.mem_mhz)).collect()
             })
             .collect();
         let max_point_idx: Vec<usize> = grids.iter().map(|g| max_point_of(g)).collect();
@@ -1101,13 +1114,15 @@ impl ScheduleTable {
 
     fn price(&self, rows: &[Vec<f64>], scale: f64, di: usize, pi: usize) -> Placement {
         let time_us = scale * rows[di][pi];
-        let power_w = self.power[di][pi];
-        let energy_mj = power_w * time_us * 1e-3;
+        let split = self.power[di][pi];
+        let energy_mj = split.total_w * time_us * 1e-3;
         Placement {
             device: self.devices[di].id,
             point: self.grids[di][pi],
             time_us,
-            power_w,
+            power_w: split.total_w,
+            power_dynamic_w: split.dynamic_w,
+            power_leakage_w: split.leakage_w,
             energy_mj,
             edp: energy_mj * time_us,
         }
@@ -1358,8 +1373,8 @@ mod tests {
         let mut hw_b = hw;
         hw_b.dm_del += 1.0;
         let mut power_b = PowerModel::gtx980();
-        power_b.static_w = 14.0;
-        power_b.core_coeff = 0.05;
+        power_b.leakage.static_w = 14.0;
+        power_b.dynamic.core_coeff = 0.05;
         let b = registry.register("gpu-b", hw_b, power_b);
         let catalog = Arc::new(KernelCatalog::new());
         let mem = catalog.register("membound", counters_membound());
@@ -1378,9 +1393,11 @@ mod tests {
 
     #[test]
     fn device_grid_is_the_curve_cross_product() {
-        let g = device_grid(&PowerModel::gtx980());
-        // maxwell_core has 4 breakpoints, gddr5_mem has 2.
-        assert_eq!(g.len(), 8);
+        let p = PowerModel::gtx980();
+        let g = device_grid(&p);
+        assert_eq!(g.len(), p.core_curve.points.len() * p.mem_curve.points.len());
+        // The full v2 ladder: 7 core × 3 mem breakpoints.
+        assert_eq!(g.len(), 21);
         assert!(g.contains(&FreqPoint::new(400.0, 400.0)));
         assert!(g.contains(&FreqPoint::new(1000.0, 1000.0)));
         assert!(g.iter().all(FreqPoint::is_valid));
@@ -1405,6 +1422,9 @@ mod tests {
                 rec.power.power_w(a.point.core_mhz, a.point.mem_mhz).to_bits(),
                 "power must come from the device's own model"
             );
+            let split = rec.power.split_w(a.point.core_mhz, a.point.mem_mhz);
+            assert_eq!(a.power_dynamic_w.to_bits(), split.dynamic_w.to_bits());
+            assert_eq!(a.power_leakage_w.to_bits(), split.leakage_w.to_bits());
             let want_mj = a.power_w * a.time_us * 1e-3;
             assert!(
                 (a.energy_mj - want_mj).abs() <= 1e-12 * want_mj.abs().max(1.0),
@@ -1694,8 +1714,9 @@ mod tests {
         let p = plan(&engine, &jobs, &cfg).unwrap();
         let r = &p.report;
         assert!(r.plan_id >= 1);
-        // 2 distinct kernels × (2 devices × 8 grid points each).
-        assert_eq!(r.candidates_evaluated, 2 * 16);
+        // 2 distinct kernels × (2 devices × the 21-point v2 grid each).
+        let per_kernel = 2 * device_grid(&PowerModel::gtx980()).len() as u64;
+        assert_eq!(r.candidates_evaluated, 2 * per_kernel);
         // One slab call per (device, kernel) on a cold cache.
         assert_eq!(r.slab_calls, 4);
         assert!(r.total_us > 0.0);
@@ -1709,7 +1730,7 @@ mod tests {
             // Chosen by energy argmin, so flat-out on the same device
             // can never be cheaper.
             assert!(e.energy_delta_vs_max_mj <= 1e-12, "{e:?}");
-            let ru = e.runner_up.expect("an 8-point grid always has a loser");
+            let ru = e.runner_up.expect("a 21-point grid always has a loser");
             assert_eq!(ru.rejected_by, rejected_by::OBJECTIVE);
         }
         // A warm cache serves the table without new slab calls, and
@@ -1737,7 +1758,7 @@ mod tests {
         let slack = e.deadline_slack_us.expect("job has a deadline");
         assert!(slack >= 0.0, "emitted plans meet deadlines, slack {slack}");
         assert!((slack - (tight_dl - p.assignments[0].time_us)).abs() < 1e-9);
-        let ru = e.runner_up.expect("grid has 8 points");
+        let ru = e.runner_up.expect("grid has 21 points");
         assert_eq!(ru.rejected_by, rejected_by::DEADLINE);
         assert!(ru.energy_mj < p.assignments[0].energy_mj, "the loser was cheaper");
     }
@@ -1791,17 +1812,18 @@ mod tests {
     fn schedule_table_prices_kernels_lazily_and_once() {
         let (engine, _, kernels) = fixture();
         let mut table = ScheduleTable::new(&engine, &PlannerConfig::default()).unwrap();
-        // 2 devices × 8 grid points each; nothing priced at build time.
-        assert_eq!(table.total_points(), 16);
+        // 2 devices × the 21-point grid each; nothing priced at build.
+        let pts = (2 * device_grid(&PowerModel::gtx980()).len()) as u64;
+        assert_eq!(table.total_points() as u64, pts);
         assert_eq!(table.counters(), (0, 0));
         let f = table.fastest_us(&engine, kernels[0], 2.0).unwrap();
         assert!(f.is_finite() && f > 0.0);
         let (cand, _) = table.counters();
-        assert_eq!(cand, 16, "pricing one kernel costs total_points candidates");
+        assert_eq!(cand, pts, "pricing one kernel costs total_points candidates");
         // The same kernel again is cache-served: zero new candidates.
         let f2 = table.fastest_us(&engine, kernels[0], 2.0).unwrap();
         assert_eq!(f2.to_bits(), f.to_bits());
-        assert_eq!(table.counters().0, 16);
+        assert_eq!(table.counters().0, pts);
         // Scale is linear in the cached rows.
         let f_half = table.fastest_us(&engine, kernels[0], 1.0).unwrap();
         assert!((f - 2.0 * f_half).abs() <= 1e-9 * f.max(1.0));
@@ -1817,7 +1839,8 @@ mod tests {
         assert_eq!(out.degradation, 0.0, "uncapped insert is the unconstrained argmin");
         // The per-event work is one kernel slab, strictly below a
         // 2-kernel batch solve over the same table.
-        assert_eq!(out.report.candidates_evaluated, 16);
+        let pts = (2 * device_grid(&PowerModel::gtx980()).len()) as u64;
+        assert_eq!(out.report.candidates_evaluated, pts);
         let batch = plan(&engine, &[job.clone()], &PlannerConfig::default()).unwrap();
         let a = &batch.assignments[0];
         assert_eq!(out.placement.device, a.device);

@@ -179,6 +179,12 @@ pub struct JobRecord {
     /// Predicted scaled runtime at the chosen point, µs; refined by
     /// `JobProgress` observations while Running.
     pub predicted_us: Option<f64>,
+    /// Board power at the chosen point, W, when placed.
+    pub power_w: Option<f64>,
+    /// Dynamic share of `power_w` (DESIGN.md §15), when placed.
+    pub power_dynamic_w: Option<f64>,
+    /// Leakage share of `power_w` (static + V-dependent), when placed.
+    pub power_leakage_w: Option<f64>,
     pub started_at_us: Option<f64>,
     /// Set on any terminal transition.
     pub finished_at_us: Option<f64>,
@@ -509,6 +515,9 @@ impl SchedulerCore {
             device: None,
             point: None,
             predicted_us: None,
+            power_w: None,
+            power_dynamic_w: None,
+            power_leakage_w: None,
             started_at_us: None,
             finished_at_us: None,
             cause: None,
@@ -739,6 +748,9 @@ impl SchedulerCore {
             r.device = Some(moved.device);
             r.point = Some(moved.point);
             r.predicted_us = Some(moved.time_us);
+            r.power_w = Some(moved.power_w);
+            r.power_dynamic_w = Some(moved.power_dynamic_w);
+            r.power_leakage_w = Some(moved.power_leakage_w);
             r.plan_id = Some(plan_id);
         }
         let p = outcome.placement;
@@ -747,6 +759,9 @@ impl SchedulerCore {
             r.device = Some(p.device);
             r.point = Some(p.point);
             r.predicted_us = Some(p.time_us);
+            r.power_w = Some(p.power_w);
+            r.power_dynamic_w = Some(p.power_dynamic_w);
+            r.power_leakage_w = Some(p.power_leakage_w);
         }
         self.transition(idx, JobState::Scheduled, Some(plan_id), None);
         self.stats.repairs += 1;
@@ -814,6 +829,9 @@ impl SchedulerCore {
                             r.device = None;
                             r.point = None;
                             r.predicted_us = None;
+                            r.power_w = None;
+                            r.power_dynamic_w = None;
+                            r.power_leakage_w = None;
                             r.generation += 1;
                         }
                         self.transition(
@@ -836,6 +854,9 @@ impl SchedulerCore {
                 r.device = Some(a.device);
                 r.point = Some(a.point);
                 r.predicted_us = Some(a.time_us);
+                r.power_w = Some(a.power_w);
+                r.power_dynamic_w = Some(a.power_dynamic_w);
+                r.power_leakage_w = Some(a.power_leakage_w);
                 r.plan_id = Some(plan_id);
                 was
             };
@@ -1002,6 +1023,9 @@ impl SchedulerCore {
                     r.device = None;
                     r.point = None;
                     r.predicted_us = None;
+                    r.power_w = None;
+                    r.power_dynamic_w = None;
+                    r.power_leakage_w = None;
                     r.started_at_us = None;
                     r.generation += 1;
                 }
@@ -1199,8 +1223,8 @@ mod tests {
     }
 
     /// The planner fixture: two devices (the second with slower DRAM
-    /// and a cheaper power model) and two kernels, 8 grid points per
-    /// device (16 total).
+    /// and a cheaper power model) and two kernels, 21 grid points per
+    /// device (42 total).
     fn fixture() -> (Engine, Vec<DeviceId>, Vec<KernelId>) {
         let hw = HwParams::paper_defaults();
         let registry = Arc::new(DeviceRegistry::new());
@@ -1208,8 +1232,8 @@ mod tests {
         let mut hw_b = hw;
         hw_b.dm_del += 1.0;
         let mut power_b = PowerModel::gtx980();
-        power_b.static_w = 14.0;
-        power_b.core_coeff = 0.05;
+        power_b.leakage.static_w = 14.0;
+        power_b.dynamic.core_coeff = 0.05;
         let b = registry.register("gpu-b", hw_b, power_b);
         let catalog = Arc::new(KernelCatalog::new());
         let mem = catalog.register("membound", counters_membound());
@@ -1265,6 +1289,12 @@ mod tests {
         assert_eq!(solves[0].trigger, "job_arrival");
         let r = s.job(id).unwrap();
         assert!(r.device.is_some() && r.point.is_some() && r.predicted_us.is_some());
+        let (total, dynamic, leakage) =
+            (r.power_w.unwrap(), r.power_dynamic_w.unwrap(), r.power_leakage_w.unwrap());
+        assert!(
+            (dynamic + leakage - total).abs() < 1e-9 * total,
+            "placement carries the power split: {dynamic} + {leakage} != {total}"
+        );
         assert_eq!(r.id_str(), format!("job-{id}"));
         s.run_until(&engine, 9e5);
         let r = s.job(id).unwrap();
@@ -1478,14 +1508,15 @@ mod tests {
             s.submit(&engine, JobSpec::new(name, k, scale)).unwrap();
             event_work.push(s.table_counters().0 - before);
         }
-        assert_eq!(event_work, vec![16, 16, 0, 0], "one kernel slab max per event");
+        let pts = (2 * crate::planner::device_grid(&PowerModel::gtx980()).len()) as u64;
+        assert_eq!(event_work, vec![pts, pts, 0, 0], "one kernel slab max per event");
         // Crossing the epoch re-solves the queued pair in full: two
-        // distinct kernels over the 16-point table.
+        // distinct kernels over the two-device table.
         s.run_until(&engine, 150.0);
         let (_, solves) = s.drain_outbox();
         let full = solves.iter().find(|o| o.kind == SolveKind::Full).expect("epoch full solve");
         assert_eq!(full.trigger, "horizon_roll");
-        assert_eq!(full.report.candidates_evaluated, 32, "K=2 kernels x 16 grid points");
+        assert_eq!(full.report.candidates_evaluated, 2 * pts, "K=2 kernels x {pts} grid points");
         for &w in &event_work {
             assert!(
                 w < full.report.candidates_evaluated,

@@ -43,7 +43,7 @@
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::dvfs::{ConfigPoint, Objective, PowerModel, VfCurve};
+use crate::dvfs::{ConfigPoint, DynamicParams, LeakageParams, Objective, PowerModel, VfCurve};
 use crate::engine::{Engine, Estimate};
 use crate::model::{HwParams, KernelCounters};
 use crate::obs::{
@@ -778,6 +778,15 @@ fn power_from_json(v: &Value, defaults: &PowerModel) -> Result<PowerModel, Strin
             },
         }
     };
+    let positive = |key: &str, default: f64| -> Result<f64, String> {
+        match v.get(key) {
+            None => Ok(default),
+            Some(x) => match x.as_f64() {
+                Some(f) if f.is_finite() && f > 0.0 => Ok(f),
+                _ => Err(format!("power.{key} must be a positive finite number")),
+            },
+        }
+    };
     Ok(PowerModel {
         core_curve: match v.get("core_vf") {
             None => d.core_curve,
@@ -787,9 +796,16 @@ fn power_from_json(v: &Value, defaults: &PowerModel) -> Result<PowerModel, Strin
             None => d.mem_curve,
             Some(c) => vf_from_json(c, "mem_vf")?,
         },
-        core_coeff: coeff("core_coeff", d.core_coeff)?,
-        mem_coeff: coeff("mem_coeff", d.mem_coeff)?,
-        static_w: coeff("static_w", d.static_w)?,
+        dynamic: DynamicParams {
+            core_coeff: coeff("core_coeff", d.dynamic.core_coeff)?,
+            mem_coeff: coeff("mem_coeff", d.dynamic.mem_coeff)?,
+        },
+        leakage: LeakageParams {
+            static_w: coeff("static_w", d.leakage.static_w)?,
+            leak_w: coeff("leak_w", d.leakage.leak_w)?,
+            v_ref: positive("leak_v_ref", d.leakage.v_ref)?,
+            v_slope: positive("leak_v_slope", d.leakage.v_slope)?,
+        },
     })
 }
 
@@ -854,6 +870,8 @@ fn config_point_json(p: &ConfigPoint) -> Value {
         ("mem_mhz", Value::num(p.mem_mhz)),
         ("time_us", Value::num(p.time_us)),
         ("power_w", Value::num(p.power_w)),
+        ("power_dynamic_w", Value::num(p.power_dynamic_w)),
+        ("power_leakage_w", Value::num(p.power_leakage_w)),
         ("energy_mj", Value::num(p.energy_mj)),
         ("edp", Value::num(p.edp)),
     ])
@@ -1560,6 +1578,8 @@ fn v2_plan(
                 ("mem_mhz", Value::num(a.point.mem_mhz)),
                 ("time_us", Value::num(a.time_us)),
                 ("power_w", Value::num(a.power_w)),
+                ("power_dynamic_w", Value::num(a.power_dynamic_w)),
+                ("power_leakage_w", Value::num(a.power_leakage_w)),
                 ("energy_mj", Value::num(a.energy_mj)),
                 ("edp", Value::num(a.edp)),
             ];
@@ -1639,6 +1659,15 @@ fn job_json(r: &JobRecord) -> Value {
     }
     if let Some(t) = r.predicted_us {
         fields.push(("predicted_us", Value::num(t)));
+    }
+    if let Some(w) = r.power_w {
+        fields.push(("power_w", Value::num(w)));
+    }
+    if let Some(w) = r.power_dynamic_w {
+        fields.push(("power_dynamic_w", Value::num(w)));
+    }
+    if let Some(w) = r.power_leakage_w {
+        fields.push(("power_leakage_w", Value::num(w)));
     }
     if let Some(t) = r.started_at_us {
         fields.push(("started_at_us", Value::num(t)));
@@ -2190,7 +2219,7 @@ mod tests {
             Some(HwParams::paper_defaults().dm_lat_b)
         );
         let rec = st.registry.resolve("gtx960").unwrap();
-        assert_eq!(rec.power.static_w, 18.0);
+        assert_eq!(rec.power.leakage.static_w, 18.0);
         assert_eq!(rec.power.core_curve.points, vec![(400.0, 0.8), (1000.0, 1.15)]);
         assert_eq!(st.registry.len(), 2);
     }
@@ -2367,7 +2396,7 @@ mod tests {
         // the GTX 980 calibration — same contract as partial `hw`.
         let hw = HwParams::paper_defaults();
         let mut boot_power = PowerModel::gtx980();
-        boot_power.static_w = 77.0;
+        boot_power.leakage.static_w = 77.0;
         let st = ServiceState::new(
             Engine::native(hw),
             boot_power,
@@ -2376,7 +2405,7 @@ mod tests {
         let m = Metrics::default();
         let r = handle(&st, &m, &post("/v2/devices", r#"{"name":"plain"}"#));
         assert_eq!(r.status, 200, "{}", r.body);
-        assert_eq!(st.registry.resolve("plain").unwrap().power.static_w, 77.0);
+        assert_eq!(st.registry.resolve("plain").unwrap().power.leakage.static_w, 77.0);
         let r = handle(
             &st,
             &m,
@@ -2384,8 +2413,12 @@ mod tests {
         );
         assert_eq!(r.status, 200, "{}", r.body);
         let rec = st.registry.resolve("partial").unwrap();
-        assert_eq!(rec.power.core_coeff, 0.05);
-        assert_eq!(rec.power.static_w, 77.0, "unspecified power fields inherit boot model");
+        assert_eq!(rec.power.dynamic.core_coeff, 0.05);
+        assert_eq!(
+            rec.power.leakage.static_w,
+            77.0,
+            "unspecified power fields inherit boot model"
+        );
         // Negative hardware parameters are rejected outright.
         let r = handle(
             &st,

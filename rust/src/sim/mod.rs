@@ -66,7 +66,7 @@ impl Clocks {
 
 /// Hardware description of the simulated GPU (Table V of the paper plus
 /// the timing constants the micro-benchmarks of §IV extract).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct GpuSpec {
     /// Number of streaming multiprocessors (GTX 980: 16).
     pub n_sm: u32,

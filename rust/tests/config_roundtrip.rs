@@ -1,0 +1,167 @@
+//! Config serializer round-trip and `[power.*]` rejection suite.
+//!
+//! Two halves:
+//!
+//! * both shipped `configs/*.toml` files survive a full
+//!   parse → `to_text` → re-parse cycle with `Config` equality — the
+//!   serializer is the inverse of the parser on real calibrations, so
+//!   `gpufreq devices` snapshots and hand-edited files never drift;
+//! * every malformed `[power]` / `[power.dynamic]` / `[power.leakage]`
+//!   shape is rejected with its exact, documented error message —
+//!   mistyped calibrations are hard errors, never silent defaults.
+
+use std::path::Path;
+
+use gpufreq::config::{from_text, load, to_text};
+use gpufreq::dvfs::PowerModel;
+
+fn config_path(name: &str) -> std::path::PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("configs").join(name)
+}
+
+#[test]
+fn shipped_configs_round_trip_through_to_text() {
+    for name in ["gtx980.toml", "gtx960.toml"] {
+        let cfg = load(&config_path(name)).unwrap_or_else(|e| panic!("loading {name}: {e}"));
+        let text = to_text(&cfg);
+        let again = from_text(&text)
+            .unwrap_or_else(|e| panic!("re-parsing serialized {name}: {e}"));
+        assert_eq!(again, cfg, "{name}: to_text -> from_text changed the config");
+        // And the cycle is a fixed point: serializing the re-parsed
+        // config reproduces the same text, byte for byte.
+        assert_eq!(to_text(&again), text, "{name}: second serialization differs");
+    }
+}
+
+#[test]
+fn gtx980_config_carries_the_builtin_calibration() {
+    let cfg = load(&config_path("gtx980.toml")).unwrap();
+    assert_eq!(cfg.power, PowerModel::gtx980());
+}
+
+#[test]
+fn gtx960_power_differs_from_gtx980() {
+    // The second shipped calibration must be a real second data point,
+    // not a copy — otherwise the round-trip test above proves less.
+    let a = load(&config_path("gtx980.toml")).unwrap();
+    let b = load(&config_path("gtx960.toml")).unwrap();
+    assert_ne!(a.power, b.power, "shipped calibrations should differ");
+}
+
+/// Assert that `snippet` fails to parse with exactly `want` as the
+/// error message (the `line 0` prefix is the power layer's synthetic
+/// line; `message` carries the real diagnosis).
+fn rejects(snippet: &str, want: &str) {
+    match from_text(snippet) {
+        Ok(_) => panic!("accepted malformed config:\n{snippet}"),
+        Err(e) => assert_eq!(
+            e.message, want,
+            "wrong error for:\n{snippet}\n  got:  {}\n  want: {want}",
+            e.message
+        ),
+    }
+}
+
+#[test]
+fn unknown_power_keys_are_rejected() {
+    rejects("[power]\nwattage = 9\n", "unknown power key `power.wattage`");
+    rejects("[power.dynamic]\ngain = 1\n", "unknown power key `power.dynamic.gain`");
+    rejects("[power.leakage]\nalpha = 2\n", "unknown power key `power.leakage.alpha`");
+}
+
+#[test]
+fn legacy_and_v2_spellings_conflict() {
+    rejects(
+        "[power]\ncore_coeff = 0.05\n[power.dynamic]\ncore_coeff = 0.06\n",
+        "`power.core_coeff` conflicts with `power.dynamic.core_coeff`: set one",
+    );
+    rejects(
+        "[power]\nmem_coeff = 0.01\n[power.dynamic]\nmem_coeff = 0.02\n",
+        "`power.mem_coeff` conflicts with `power.dynamic.mem_coeff`: set one",
+    );
+    rejects(
+        "[power]\nstatic_w = 8\n[power.leakage]\nstatic_w = 9\n",
+        "`power.static_w` conflicts with `power.leakage.static_w`: set one",
+    );
+}
+
+#[test]
+fn mistyped_numbers_are_rejected() {
+    rejects("[power]\nstatic_w = \"big\"\n", "power.static_w: expected a number");
+    rejects("[power.leakage]\nv_slope = true\n", "power.leakage.v_slope: expected a number");
+    rejects("[power.leakage]\nv_ref = inf\n", "power.leakage.v_ref: must be finite, got inf");
+}
+
+#[test]
+fn out_of_range_numbers_are_rejected() {
+    rejects("[power]\nstatic_w = -3\n", "power.static_w: must be >= 0, got -3");
+    rejects(
+        "[power.dynamic]\ncore_coeff = -0.25\n",
+        "power.dynamic.core_coeff: must be >= 0, got -0.25",
+    );
+    rejects("[power.leakage]\nleak_w = -1\n", "power.leakage.leak_w: must be >= 0, got -1");
+    rejects("[power.leakage]\nv_ref = 0\n", "power.leakage.v_ref: must be > 0, got 0");
+    rejects(
+        "[power.leakage]\nv_slope = -0.5\n",
+        "power.leakage.v_slope: must be > 0, got -0.5",
+    );
+}
+
+#[test]
+fn malformed_curve_strings_are_rejected() {
+    rejects(
+        "[power]\ncore_vf = 400\n",
+        "power.core_vf: expected a string of mhz:volts points",
+    );
+    rejects(
+        "[power]\ncore_vf = \"400-0.9\"\n",
+        "power.core_vf: expected `mhz:volts`, got `400-0.9`",
+    );
+    rejects("[power]\ncore_vf = \"x:0.9\"\n", "power.core_vf: bad frequency `x`");
+    rejects(
+        "[power]\nmem_vf = \"400:0.9 0.95\"\n",
+        "power.mem_vf: bad voltage `0.9 0.95`",
+    );
+    rejects(
+        "[power]\ncore_vf = \" , \"\n",
+        "power.core_vf: curve needs at least one (mhz, volts) point",
+    );
+}
+
+#[test]
+fn curve_validation_errors_surface_through_the_key() {
+    // The shared `VfCurve::try_from_points` diagnoses flow through
+    // prefixed with the offending key.
+    rejects(
+        "[power]\ncore_vf = \"inf:1\"\n",
+        "power.core_vf: point 0 (inf:1) must be finite",
+    );
+    rejects(
+        "[power]\ncore_vf = \"400:-0.85\"\n",
+        "power.core_vf: point 0 (400:-0.85) must be positive",
+    );
+    rejects(
+        "[power]\nmem_vf = \"400:0.85, 400:0.9\"\n",
+        "power.mem_vf: duplicate frequency 400 MHz at point 1",
+    );
+    rejects(
+        "[power]\ncore_vf = \"600:0.95, 400:0.85\"\n",
+        "power.core_vf: frequencies must be strictly ascending: point 1 (400 MHz) after 600 MHz",
+    );
+}
+
+#[test]
+fn partial_power_sections_inherit_gtx980_defaults() {
+    // A config naming only one knob keeps the builtin calibration for
+    // everything else — sparse overrides are the common on-disk shape.
+    let cfg = from_text("[power.leakage]\nleak_w = 21.5\n").unwrap();
+    let d = PowerModel::gtx980();
+    assert_eq!(cfg.power.leakage.leak_w, 21.5);
+    assert_eq!(cfg.power.leakage.static_w, d.leakage.static_w);
+    assert_eq!(cfg.power.dynamic, d.dynamic);
+    assert_eq!(cfg.power.core_curve, d.core_curve);
+    // And the sparse form still round-trips (to_text emits the full
+    // resolved model, which re-parses to the same Config).
+    let again = from_text(&to_text(&cfg)).unwrap();
+    assert_eq!(again, cfg);
+}

@@ -1,0 +1,228 @@
+//! Property suite for the v2 power model (DESIGN.md §15): the energy
+//! landscape the advisor, planner, and scheduler all price from.
+//! Randomized over curves, coefficients, and frequencies:
+//!
+//! 1. the voltage-dependent leakage excess is monotone nondecreasing
+//!    in supply voltage;
+//! 2. total board power is monotone nondecreasing in frequency on
+//!    flat voltage tables (and on monotone V/f tables);
+//! 3. with flat tables and `leak_w = 0`, v2 reproduces the retired
+//!    frequency-only v1 formula **bit-for-bit** — the compatibility
+//!    guarantee every pre-§15 calibration relies on;
+//! 4. the sweep fitter recovers planted parameters to well within 2%.
+
+use gpufreq::dvfs::{DynamicParams, LeakageParams, PowerModel, VfCurve};
+use gpufreq::model::fit::fit_power_model;
+use gpufreq::util::prop::Rng;
+
+fn random_leakage(r: &mut Rng) -> LeakageParams {
+    LeakageParams {
+        static_w: r.range(0.0, 40.0),
+        leak_w: r.range(0.0, 30.0),
+        v_ref: r.range(0.7, 1.2),
+        v_slope: r.range(0.3, 1.5),
+    }
+}
+
+/// A valid random curve: strictly ascending frequencies, voltages
+/// constant when `flat`, otherwise nondecreasing.
+fn random_curve(r: &mut Rng, flat: bool) -> VfCurve {
+    let n = r.u32(1, 6) as usize;
+    let mut f = r.range(200.0, 500.0);
+    let mut v = r.range(0.7, 0.9);
+    let mut pts = Vec::with_capacity(n);
+    for _ in 0..n {
+        pts.push((f, v));
+        f += r.range(50.0, 200.0);
+        if !flat {
+            v += r.range(0.0, 0.15);
+        }
+    }
+    VfCurve::try_from_points(pts).expect("generator emits valid curves")
+}
+
+fn random_dynamic(r: &mut Rng) -> DynamicParams {
+    DynamicParams { core_coeff: r.range(0.0, 0.1), mem_coeff: r.range(0.0, 0.05) }
+}
+
+#[test]
+fn leakage_excess_is_monotone_nondecreasing_in_voltage() {
+    let mut r = Rng::new(0x11ab);
+    for case in 0..200 {
+        let leak = random_leakage(&mut r);
+        let mut v = 0.0;
+        let mut prev = leak.excess_w(v);
+        assert!(prev >= 0.0, "case {case}: negative excess at 0 V");
+        for _ in 0..40 {
+            v += r.range(0.01, 0.08);
+            let e = leak.excess_w(v);
+            assert!(
+                e >= prev,
+                "case {case}: leakage excess fell at {v} V: {e} < {prev} ({leak:?})"
+            );
+            prev = e;
+        }
+        // And the anchor: excess == leak_w exactly at v_ref.
+        let at_ref = leak.excess_w(leak.v_ref);
+        assert!(
+            (at_ref - leak.leak_w).abs() <= 1e-12 * leak.leak_w.max(1.0),
+            "case {case}: excess at v_ref is {at_ref}, want {}",
+            leak.leak_w
+        );
+    }
+}
+
+#[test]
+fn total_power_is_monotone_in_frequency_at_fixed_voltage() {
+    // On flat tables the voltage terms are constants, so power is
+    // affine-increasing in each frequency; the same holds for any
+    // monotone V/f table since every term is then nondecreasing in f.
+    let mut r = Rng::new(0x22f0);
+    for case in 0..150 {
+        let flat = case % 2 == 0;
+        let model = PowerModel {
+            core_curve: random_curve(&mut r, flat),
+            mem_curve: random_curve(&mut r, flat),
+            dynamic: random_dynamic(&mut r),
+            leakage: random_leakage(&mut r),
+        };
+        let fixed = r.range(100.0, 1500.0);
+        let mut f = 50.0;
+        let (mut prev_core, mut prev_mem) =
+            (model.power_w(f, fixed), model.power_w(fixed, f));
+        for _ in 0..30 {
+            f += r.range(10.0, 80.0);
+            let p_core = model.power_w(f, fixed);
+            let p_mem = model.power_w(fixed, f);
+            assert!(
+                p_core >= prev_core,
+                "case {case}: power fell raising core to {f} MHz: {p_core} < {prev_core}"
+            );
+            assert!(
+                p_mem >= prev_mem,
+                "case {case}: power fell raising mem to {f} MHz: {p_mem} < {prev_mem}"
+            );
+            prev_core = p_core;
+            prev_mem = p_mem;
+        }
+    }
+}
+
+#[test]
+fn flat_tables_and_zero_leakage_reproduce_v1_bit_for_bit() {
+    // The retired v1 model was frequency-only: per-domain voltage
+    // constants folded into Eq. (1), one static floor, no excess. With
+    // flat tables and leak_w = 0, v2 must return the SAME BITS — not
+    // merely close — so pre-§15 calibrations price identically.
+    let mut r = Rng::new(0x33cc);
+    for case in 0..500 {
+        let model = PowerModel {
+            core_curve: random_curve(&mut r, true),
+            mem_curve: random_curve(&mut r, true),
+            dynamic: random_dynamic(&mut r),
+            leakage: LeakageParams::flat(r.range(0.0, 40.0)),
+        };
+        assert!(model.core_curve.is_flat() && model.mem_curve.is_flat());
+        for _ in 0..4 {
+            let cf = r.range(100.0, 1500.0);
+            let mf = r.range(100.0, 1500.0);
+            let vc = model.core_curve.volts(cf);
+            let vm = model.mem_curve.volts(mf);
+            // The v1 formula, transcribed literally (same add order).
+            let v1 = model.leakage.static_w
+                + model.dynamic.core_coeff * cf * vc * vc
+                + model.dynamic.mem_coeff * mf * vm * vm;
+            let s = model.split_w(cf, mf);
+            assert_eq!(
+                s.total_w.to_bits(),
+                v1.to_bits(),
+                "case {case}: v2 diverges from v1 at {cf}/{mf}: {} vs {v1}",
+                s.total_w
+            );
+            assert_eq!(
+                s.leakage_w.to_bits(),
+                model.leakage.static_w.to_bits(),
+                "case {case}: zero-leak_w leakage share must be the static floor alone"
+            );
+            assert_eq!(
+                s.total_w.to_bits(),
+                model.power_w(cf, mf).to_bits(),
+                "case {case}: split_w and power_w disagree"
+            );
+        }
+    }
+}
+
+#[test]
+fn sweep_fit_recovers_planted_parameters_within_two_percent() {
+    let mut r = Rng::new(0x44d1);
+    for case in 0..100 {
+        // A voltage-scaled core curve with guaranteed spread (so the
+        // leakage regressor is not collinear with the intercept) and a
+        // gently-scaling memory curve.
+        let mut pts = Vec::new();
+        let (mut f, mut v) = (r.range(300.0, 400.0), r.range(0.7, 0.8));
+        for _ in 0..r.u32(3, 6) {
+            pts.push((f, v));
+            f += r.range(100.0, 150.0);
+            v += r.range(0.05, 0.12);
+        }
+        let core_curve = VfCurve::try_from_points(pts).unwrap();
+        let mem_curve =
+            VfCurve::try_from_points(vec![(400.0, 1.3), (1000.0, r.range(1.35, 1.6))]).unwrap();
+        let truth = PowerModel {
+            core_curve,
+            mem_curve,
+            dynamic: DynamicParams {
+                core_coeff: r.range(0.01, 0.1),
+                mem_coeff: r.range(0.005, 0.05),
+            },
+            leakage: LeakageParams {
+                static_w: r.range(2.0, 30.0),
+                leak_w: r.range(2.0, 25.0),
+                v_ref: 1.0,
+                v_slope: r.range(0.5, 1.2),
+            },
+        };
+        // A noiseless synthetic sweep across both domains.
+        let mut samples = Vec::new();
+        for i in 0..12 {
+            for j in 0..5 {
+                let cf = 300.0 + 100.0 * i as f64;
+                let mf = 300.0 + 200.0 * j as f64;
+                samples.push(((cf, mf), truth.power_w(cf, mf)));
+            }
+        }
+        let fit = fit_power_model(
+            &truth.core_curve,
+            &truth.mem_curve,
+            &samples,
+            truth.leakage.v_ref,
+            truth.leakage.v_slope,
+        )
+        .expect("well-posed synthetic sweep");
+        let close = |name: &str, got: f64, want: f64| {
+            assert!(
+                (got - want).abs() <= 0.02 * want.abs().max(1e-9),
+                "case {case}: {name} off by more than 2%: fitted {got}, planted {want}"
+            );
+        };
+        close("core_coeff", fit.model.dynamic.core_coeff, truth.dynamic.core_coeff);
+        close("mem_coeff", fit.model.dynamic.mem_coeff, truth.dynamic.mem_coeff);
+        close("static_w", fit.model.leakage.static_w, truth.leakage.static_w);
+        close("leak_w", fit.model.leakage.leak_w, truth.leakage.leak_w);
+        assert!(
+            fit.r_squared > 0.999,
+            "case {case}: noiseless fit should be near-perfect, R² = {}",
+            fit.r_squared
+        );
+        // The fitted model reprices the sweep itself.
+        for &((cf, mf), watts) in &samples {
+            let p = fit.model.power_w(cf, mf);
+            assert!(
+                (p - watts).abs() <= 1e-6 * watts.max(1.0),
+                "case {case}: fitted model mispredicts its own sweep at {cf}/{mf}"
+            );
+        }
+    }
+}

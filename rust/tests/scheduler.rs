@@ -52,13 +52,13 @@ fn fixture() -> (Engine, Vec<DeviceId>, Vec<KernelId>) {
     let mut hw_b = hw;
     hw_b.dm_del += 1.5;
     let mut power_b = PowerModel::gtx980();
-    power_b.static_w = 15.0;
+    power_b.leakage.static_w = 15.0;
     let b = registry.register("stream-b", hw_b, power_b);
     let mut hw_c = hw;
     hw_c.l2_lat += 40.0;
     let mut power_c = PowerModel::gtx980();
-    power_c.core_coeff = 0.05;
-    power_c.mem_coeff = 0.025;
+    power_c.dynamic.core_coeff = 0.05;
+    power_c.dynamic.mem_coeff = 0.025;
     let c = registry.register("stream-c", hw_c, power_c);
     let catalog = Arc::new(KernelCatalog::new());
     let kernels: Vec<KernelId> =

@@ -96,7 +96,10 @@ fn healthz_predict_advise_and_metrics_round_trip() {
     let v = r.json().unwrap();
     assert_eq!(v.get("feasible").and_then(Value::as_bool), Some(true));
     let best = v.get("best").expect("best config present");
-    for key in ["core_mhz", "mem_mhz", "time_us", "power_w", "energy_mj"] {
+    for key in
+        ["core_mhz", "mem_mhz", "time_us", "power_w", "power_dynamic_w", "power_leakage_w",
+         "energy_mj"]
+    {
         assert!(best.get(key).and_then(Value::as_f64).unwrap() > 0.0, "{key}");
     }
 
@@ -232,6 +235,10 @@ fn v2_plan_round_trip_and_infeasibility() {
         let p = a.get("power_w").and_then(Value::as_f64).unwrap();
         let e = a.get("energy_mj").and_then(Value::as_f64).unwrap();
         assert!((e - p * t * 1e-3).abs() <= 1e-9 * e.max(1.0));
+        // The v2 split is reported and sums back to the total.
+        let dw = a.get("power_dynamic_w").and_then(Value::as_f64).unwrap();
+        let lw = a.get("power_leakage_w").and_then(Value::as_f64).unwrap();
+        assert!((dw + lw - p).abs() <= 1e-9 * p, "{dw} + {lw} != {p}");
         let dev = a.get("device").and_then(Value::as_str).unwrap();
         assert!(dev == "dev-1" || dev == "dev-2", "{dev}");
     }

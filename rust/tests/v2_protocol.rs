@@ -97,6 +97,9 @@ fn device_request(r: &mut Rng) -> Value {
                 ("core_coeff".to_string(), Value::num(finite_f64(r))),
                 ("mem_coeff".to_string(), Value::num(finite_f64(r))),
                 ("static_w".to_string(), Value::num(finite_f64(r))),
+                ("leak_w".to_string(), Value::num(finite_f64(r))),
+                ("leak_v_ref".to_string(), Value::num(finite_f64(r))),
+                ("leak_v_slope".to_string(), Value::num(finite_f64(r))),
                 ("core_vf".to_string(), vf_value(r)),
                 ("mem_vf".to_string(), vf_value(r)),
             ]),
@@ -159,10 +162,13 @@ fn predict_response(r: &mut Rng) -> Value {
 }
 
 fn config_point_value(r: &mut Rng) -> Value {
-    obj(["core_mhz", "mem_mhz", "time_us", "power_w", "energy_mj", "edp"]
-        .iter()
-        .map(|f| (f.to_string(), Value::num(finite_f64(r))))
-        .collect())
+    obj([
+        "core_mhz", "mem_mhz", "time_us", "power_w", "power_dynamic_w", "power_leakage_w",
+        "energy_mj", "edp",
+    ]
+    .iter()
+    .map(|f| (f.to_string(), Value::num(finite_f64(r))))
+    .collect())
 }
 
 /// `POST /v2/advise` response.
